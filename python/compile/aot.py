@@ -1,0 +1,298 @@
+"""AOT compile path: lower every L2 entry point to HLO text + manifest.
+
+Runs ONCE (`make artifacts`); python never executes at request time.  The
+interchange format is HLO **text**, not a serialized HloModuleProto: jax ≥0.5
+emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is recorded in artifacts/manifest.json with its flat argument
+/output order (pytree paths), shapes, dtypes, model config and PEFT metadata,
+so the rust runtime can marshal buffers without any python at runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+_DTYPE = {"float32": "f32", "int32": "s32", "float64": "f64", "int64": "s64",
+          "bfloat16": "bf16", "bool": "pred"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def _flat_sig(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [
+        {
+            "name": _path_str(path),
+            "shape": list(leaf.shape),
+            "dtype": _DTYPE[str(leaf.dtype)],
+        }
+        for path, leaf in flat
+    ]
+
+
+def _trainable_count(sig_args) -> int:
+    return sum(
+        int(jnp.prod(jnp.asarray(a["shape"])) if a["shape"] else 1)
+        for a in sig_args
+        if a["name"].startswith("trainable.")
+    )
+
+
+def lower_train(cfg: M.ModelConfig, method: str, *, k: int = 1, lora_r: int = 8,
+                impl: str = "jnp"):
+    step, example_args = M.make_train_step(cfg, method, k=k, lora_r=lora_r, impl=impl)
+    params, trainable, m, v, aux, batch, lr, t = example_args()
+    args = {"params": params, "trainable": trainable, "m": m, "v": v,
+            "aux": aux, "batch": batch, "lr": lr, "t": t}
+
+    def entry(a):
+        return step(a["params"], a["trainable"], a["m"], a["v"], a["aux"],
+                    a["batch"], a["lr"], a["t"])
+
+    lowered = jax.jit(entry).lower(args)
+    out_shape = jax.eval_shape(entry, args)
+    return lowered, _flat_sig(args), _flat_sig(out_shape)
+
+
+def lower_pretrain(cfg: M.ModelConfig):
+    step, example_args = M.make_train_step(cfg, "pretrain")
+    params, m, v, lr, t = example_args()
+    args = {"params": params, "m": m, "v": v,
+            "batch": {
+                "tokens": jnp.zeros((cfg.batch, cfg.seq), jnp.int32),
+                "targets": jnp.zeros((cfg.batch, cfg.seq), jnp.int32),
+                "loss_mask": jnp.ones((cfg.batch, cfg.seq), jnp.float32),
+                "pad_mask": jnp.ones((cfg.batch, cfg.seq), jnp.float32),
+            },
+            "lr": lr, "t": t}
+
+    def entry(a):
+        return step(a["params"], a["m"], a["v"], a["batch"], a["lr"], a["t"])
+
+    lowered = jax.jit(entry).lower(args)
+    out_shape = jax.eval_shape(entry, args)
+    return lowered, _flat_sig(args), _flat_sig(out_shape)
+
+
+def lower_gradprobe(cfg: M.ModelConfig):
+    """Warm-up gradient probe (Figure 7 'Gradient' selection): dense
+    ∂L/∂W per projection for one LM batch, evaluated at the pretrained
+    weights (delta = 0). Output: one [d_out, d_in] tensor per projection."""
+
+    def probe(a):
+        params, batch = a["params"], a["batch"]
+        zero = {n: jnp.zeros(sh, jnp.float32) for n, sh in cfg.proj_shapes().items()}
+
+        def loss_fn(delta):
+            adapt = M.make_adapt("full", delta, {})
+            return M.lm_loss(cfg, params, adapt, batch["tokens"], batch["targets"],
+                             batch["loss_mask"], batch["pad_mask"])
+
+        return jax.grad(loss_fn)(zero)
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    args = {"params": params,
+            "batch": {
+                "tokens": jnp.zeros((cfg.batch, cfg.seq), jnp.int32),
+                "targets": jnp.zeros((cfg.batch, cfg.seq), jnp.int32),
+                "loss_mask": jnp.ones((cfg.batch, cfg.seq), jnp.float32),
+                "pad_mask": jnp.ones((cfg.batch, cfg.seq), jnp.float32),
+            }}
+    lowered = jax.jit(probe).lower(args)
+    out_shape = jax.eval_shape(probe, args)
+    return lowered, _flat_sig(args), _flat_sig(out_shape)
+
+
+def lower_eval(cfg: M.ModelConfig):
+    fn, example_args = M.make_eval_fn(cfg)
+    ex = example_args()
+    if cfg.n_classes:  # encoder: no last_pos (would be DCE'd, desyncing the manifest)
+        params, biases, tokens, pad_mask = ex
+        args = {"params": params, "biases": biases, "tokens": tokens, "pad_mask": pad_mask}
+
+        def entry(a):
+            return fn(a["params"], a["biases"], a["tokens"], a["pad_mask"])
+    else:
+        params, biases, tokens, pad_mask, last_pos = ex
+        args = {"params": params, "biases": biases, "tokens": tokens,
+                "pad_mask": pad_mask, "last_pos": last_pos}
+
+        def entry(a):
+            return fn(a["params"], a["biases"], a["tokens"], a["pad_mask"], a["last_pos"])
+
+    lowered = jax.jit(entry).lower(args)
+    out_shape = jax.eval_shape(entry, args)
+    return lowered, _flat_sig(args), _flat_sig(out_shape)
+
+
+# ---------------------------------------------------------------------------
+# Artifact set
+# ---------------------------------------------------------------------------
+
+
+def artifact_plan(set_name: str):
+    """(name, size, entry, method, k, impl) for every artifact.
+
+    `quick` is the subset the fast test loop uses; `default` is what the
+    experiment harness needs; `full` adds the scale-extrapolation config.
+    """
+    plan = []
+
+    def add(size, method, k=0, impl="jnp"):
+        if method in ("eval", "pretrain", "gradprobe"):
+            name = f"{size}_{method}"
+        elif method in ("neuroada",):
+            name = f"{size}_{method}_k{k}" + ("_pallas" if impl == "pallas" else "")
+        else:
+            name = f"{size}_{method}"
+        plan.append((name, size, method, k, impl))
+
+    # quick: enough for rust integration tests
+    add("nano", "pretrain")
+    add("nano", "gradprobe")
+    add("nano", "neuroada", k=1)
+    add("nano", "neuroada", k=2)
+    add("nano", "neuroada", k=4)
+    add("nano", "neuroada", k=8)
+    add("nano", "neuroada", k=1, impl="pallas")  # pallas-in-graph proof
+    add("nano", "masked")
+    add("nano", "full")
+    add("nano", "lora")
+    add("nano", "bitfit")
+    add("nano", "eval")
+    if set_name == "quick":
+        return plan
+    add("micro", "pretrain")
+    add("small", "pretrain")
+    add("base", "pretrain")
+    add("enc-micro", "pretrain")
+
+    # budget sweeps (Fig 4/6/7) live on micro
+    for k in (1, 2, 4, 8, 16):
+        add("micro", "neuroada", k=k)
+    add("micro", "masked")
+    add("micro", "full")
+    add("micro", "lora")
+    add("micro", "bitfit")
+    add("micro", "eval")
+
+    # headline tables (T2/T3) on small; fig5 needs masked/full at every size
+    add("small", "neuroada", k=1)
+    add("small", "neuroada", k=16)
+    add("small", "masked")
+    add("small", "full")
+    add("small", "lora")
+    add("small", "bitfit")
+    add("small", "eval")
+
+    add("base", "neuroada", k=1)
+    add("base", "neuroada", k=16)
+    add("base", "masked")
+    add("base", "full")
+    add("base", "lora")
+    add("base", "eval")
+
+    # GLUE-like suite on the encoder
+    add("enc-micro", "neuroada", k=1)
+    add("enc-micro", "neuroada", k=16)
+    add("enc-micro", "masked")
+    add("enc-micro", "full")
+    add("enc-micro", "lora")
+    add("enc-micro", "bitfit")
+    add("enc-micro", "eval")
+
+    if set_name == "full":
+        add("large", "neuroada", k=1)
+        add("large", "eval")
+    return plan
+
+
+def build(out_dir: str, set_name: str, only: str | None = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "set": set_name, "artifacts": {}}
+    man_path = os.path.join(out_dir, "manifest.json")
+    if only and os.path.exists(man_path):
+        # --only is an incremental re-lower: merge into the existing manifest.
+        with open(man_path) as f:
+            manifest = json.load(f)
+    for name, size, method, k, impl in artifact_plan(set_name):
+        if only and only not in name:
+            continue
+        cfg = M.SIZES[size]
+        if method == "eval":
+            lowered, sig_in, sig_out = lower_eval(cfg)
+            meta = {"entry": "eval"}
+        elif method == "pretrain":
+            lowered, sig_in, sig_out = lower_pretrain(cfg)
+            meta = {"entry": "pretrain"}
+        elif method == "gradprobe":
+            lowered, sig_in, sig_out = lower_gradprobe(cfg)
+            meta = {"entry": "gradprobe"}
+        else:
+            lowered, sig_in, sig_out = lower_train(cfg, method, k=k, impl=impl)
+            meta = {"entry": "train", "method": method, "k": k, "impl": impl,
+                    "trainable_params": _trainable_count(sig_in)}
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "size": size,
+            "model": {
+                "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+                "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "seq": cfg.seq,
+                "batch": cfg.batch, "causal": cfg.causal, "n_classes": cfg.n_classes,
+                "backbone_params": cfg.n_backbone_params(),
+            },
+            "args": sig_in,
+            "outputs": sig_out,
+            **meta,
+        }
+        print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB, {len(sig_in)} args)", flush=True)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {out_dir}/manifest.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--set", default="default", choices=["quick", "default", "full"])
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    a = ap.parse_args()
+    build(a.out, a.set, a.only)
+
+
+if __name__ == "__main__":
+    main()

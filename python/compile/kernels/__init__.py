@@ -1,0 +1,2 @@
+# L1: Pallas kernels for the NeuroAda sparse-delta hot path + oracles.
+from . import neuroada, ref, topk  # noqa: F401

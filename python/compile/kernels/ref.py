@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the NeuroAda kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package is
+pytest-compared against the function of the same name here (see
+python/tests/).  They are deliberately written in the most naive/dense way
+possible — materialize the full delta matrix, full gradients — so that any
+sparsity bookkeeping bug in the kernels shows up as a numeric mismatch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scatter_delta_dense(w_shape, idx, theta):
+    """Materialize the dense delta matrix Δ ∈ R^{d_out×d_in}.
+
+    Δ[i, idx[i, j]] += theta[i, j]   (duplicate indices accumulate, matching
+    the kernel's sum-over-j semantics).
+    """
+    d_out, d_in = w_shape
+    rows = jnp.arange(d_out)[:, None]  # broadcast against [d_out, k]
+    return jnp.zeros((d_out, d_in), dtype=theta.dtype).at[rows, idx].add(theta)
+
+
+def sparse_delta_matmul(x, w, idx, theta):
+    """Oracle for the NeuroAda forward: y = x Wᵀ + x Δᵀ.
+
+    x: [B, d_in], w: [d_out, d_in], idx: [d_out, k] int32, theta: [d_out, k].
+    Returns y: [B, d_out].
+    """
+    delta = scatter_delta_dense(w.shape, idx, theta)
+    return x @ w.T + x @ delta.T
+
+
+def sparse_delta_grads(x, w, idx, theta, g):
+    """Oracle for the NeuroAda backward.
+
+    g: [B, d_out] upstream cotangent.
+    Returns (dx [B, d_in], dtheta [d_out, k]) — the only two gradients the
+    method ever needs (w is frozen, idx is integer metadata).
+    """
+    delta = scatter_delta_dense(w.shape, idx, theta)
+    dx = g @ (w + delta)
+    # dtheta[i, j] = Σ_b g[b, i] · x[b, idx[i, j]]
+    dtheta = jnp.einsum("bi,bij->ij", g, x[:, idx])
+    return dx, dtheta.astype(theta.dtype)
+
+
+def topk_rows(w, k):
+    """Oracle for neuron-wise top-k |w| selection.
+
+    Returns idx [d_out, k] int32: per row, the indices of the k
+    largest-magnitude entries, ordered by descending |w| with ties broken by
+    the lower index (jax.lax.top_k semantics, which we adopt as the spec).
+    """
+    _, idx = jax.lax.top_k(jnp.abs(w), k)
+    return idx.astype(jnp.int32)
+
+
+def merge(w, idx, theta):
+    """Oracle for the one-shot merge: W ← W + Δ (Algorithm 1, phase 3)."""
+    return w + scatter_delta_dense(w.shape, idx, theta).astype(w.dtype)

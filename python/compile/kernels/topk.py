@@ -1,0 +1,91 @@
+"""Layer-1 Pallas kernel: neuron-wise top-k |w| selection (Eq. 2).
+
+Phase 1 of Algorithm 1 — run ONCE, offline, before fine-tuning.  For each
+neuron (row of W) the k largest-magnitude input connections are identified;
+those coordinates receive the zero-initialized bypass parameters Θ.
+
+Spec (shared with ref.topk_rows and the rust `peft::selection` module):
+indices come out ordered by descending |w|, ties broken by the LOWER index.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_R = 256
+
+
+def _ceil_to(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _topk_kernel(w_ref, idx_ref, val_ref):
+    w = w_ref[...]
+    vals, idx = jax.lax.top_k(jnp.abs(w), idx_ref.shape[-1])
+    idx_ref[...] = idx.astype(jnp.int32)
+    val_ref[...] = vals.astype(val_ref.dtype)
+
+
+def topk_rows_pallas(w, k: int, *, block_r: int = DEFAULT_BLOCK_R):
+    """Per-row top-k of |w|.
+
+    Returns (idx [d_out, k] int32, vals [d_out, k] — the |w| magnitudes, which
+    the coordinator logs for selection diagnostics).
+    """
+    d_out, d_in = w.shape
+    br = min(block_r, d_out)
+    rp = _ceil_to(d_out, br)
+    wp = jnp.pad(w, ((0, rp - d_out), (0, 0))) if rp != d_out else w
+
+    idx, vals = pl.pallas_call(
+        _topk_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((rp, k), jnp.int32),
+            jax.ShapeDtypeStruct((rp, k), w.dtype),
+        ),
+        grid=(rp // br,),
+        in_specs=[pl.BlockSpec((br, d_in), lambda j: (j, 0))],
+        out_specs=(
+            pl.BlockSpec((br, k), lambda j: (j, 0)),
+            pl.BlockSpec((br, k), lambda j: (j, 0)),
+        ),
+        interpret=True,
+    )(wp)
+    return idx[:d_out], vals[:d_out]
+
+
+def select(w, k: int, strategy: str = "magnitude", *, key=None, grads=None):
+    """Selection strategies compared in Figure 7.
+
+    magnitude — top-k |w| (the NeuroAda default: task-agnostic, no warm-up)
+    gradient  — top-k |∂L/∂w| from a warm-up gradient (requires `grads`)
+    reverse   — bottom-k |w|
+    random    — uniform k distinct coordinates per row (requires `key`)
+    """
+    if strategy == "magnitude":
+        idx, _ = topk_rows_pallas(w, k)
+        return idx
+    if strategy == "gradient":
+        if grads is None:
+            raise ValueError("gradient strategy needs a warm-up gradient")
+        idx, _ = topk_rows_pallas(grads, k)
+        return idx
+    if strategy == "reverse":
+        # bottom-k |w|: top-k of the negated magnitudes (cannot reuse the
+        # kernel directly — it takes |·| internally, which would cancel).
+        _, idx = jax.lax.top_k(-jnp.abs(w), k)
+        return idx.astype(jnp.int32)
+    if strategy == "random":
+        if key is None:
+            raise ValueError("random strategy needs a PRNG key")
+        d_out, d_in = w.shape
+        # Distinct per row: rank k random uniforms over d_in.
+        u = jax.random.uniform(key, (d_out, d_in))
+        _, idx = jax.lax.top_k(u, k)
+        return idx.astype(jnp.int32)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+__all__ = ["topk_rows_pallas", "select", "DEFAULT_BLOCK_R"]

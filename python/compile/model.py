@@ -1,0 +1,498 @@
+"""Layer-2: the JAX compute graphs that get AOT-lowered to HLO.
+
+A small LLaMA-style transformer (decoder LM for the reasoning suites and the
+in-repo synthetic pretraining; encoder + classifier head for the GLUE-like
+suite) with FIVE fine-tuning step variants, each a single fused
+fwd + bwd + AdamW HLO graph:
+
+  neuroada — the paper's method: per projection a compact (idx [d_out,k],
+             θ [d_out,k]) bypass; grads/optimizer state exist ONLY at the
+             selected coordinates (Eq. 4/6).  A slot_mask input supports the
+             Fig. 6 neuron-fraction ablation and sub-k budgets without
+             re-lowering.
+  masked   — the Figure-2 baseline: dense per-projection delta with a binary
+             mask multiplied into the gradient.  Full-size gradients and
+             AdamW moments, by design (that is the memory cost the paper
+             measures against).
+  lora     — low-rank A/B per projection (B zero-init), scale α/r.
+  bitfit   — trainable bias per projection.
+  full     — dense delta per projection, no mask (full fine-tuning of the
+             linear sublayers; also the in-repo pretraining step).
+
+The backbone weights are always *inputs* to the graph and are never updated;
+L3 (rust) owns them as device-resident buffers.  The LR schedule lives in L3
+too — each step takes the scalar lr for that step, so one artifact serves any
+schedule in Tables 5–7.
+
+Python never runs at request time: `aot.py` lowers everything here once to
+artifacts/*.hlo.txt.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.neuroada import neuroada_linear
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq: int
+    batch: int
+    causal: bool = True
+    n_classes: int = 0  # >0 → encoder classifier head
+    dtype: Any = jnp.float32
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def proj_shapes(self) -> Dict[str, Tuple[int, int]]:
+        """Every PEFT-adapted linear weight, name → (d_out, d_in).
+
+        Rows are neurons (paper §3.1); these six projections per block are
+        exactly the set NeuroAda adapts (embeddings / norms stay frozen).
+        """
+        d, f = self.d_model, self.d_ff
+        shapes: Dict[str, Tuple[int, int]] = {}
+        for l in range(self.n_layers):
+            shapes[f"l{l}.wq"] = (d, d)
+            shapes[f"l{l}.wk"] = (d, d)
+            shapes[f"l{l}.wv"] = (d, d)
+            shapes[f"l{l}.wo"] = (d, d)
+            shapes[f"l{l}.w1"] = (f, d)
+            shapes[f"l{l}.w2"] = (d, f)
+        return shapes
+
+    def n_backbone_params(self) -> int:
+        n = self.vocab * self.d_model  # tied embedding
+        n += sum(o * i for o, i in self.proj_shapes().values())
+        n += (2 * self.n_layers + 1) * self.d_model  # rmsnorm scales
+        if self.n_classes:
+            n += self.n_classes * self.d_model
+        return n
+
+
+SIZES: Dict[str, ModelConfig] = {
+    "nano": ModelConfig("nano", vocab=256, d_model=64, n_layers=2, n_heads=4, d_ff=256, seq=32, batch=16),
+    "micro": ModelConfig("micro", vocab=512, d_model=128, n_layers=4, n_heads=4, d_ff=512, seq=48, batch=8),
+    "small": ModelConfig("small", vocab=1024, d_model=256, n_layers=6, n_heads=8, d_ff=1024, seq=64, batch=8),
+    "base": ModelConfig("base", vocab=2048, d_model=512, n_layers=8, n_heads=8, d_ff=2048, seq=64, batch=4),
+    # `large` exists as a config preset for scale extrapolation (DESIGN.md §3);
+    # lowering it is supported but not part of the default artifact set.
+    "large": ModelConfig("large", vocab=4096, d_model=768, n_layers=12, n_heads=12, d_ff=3072, seq=64, batch=2),
+    # Encoder (RoBERTa-analog) for the GLUE-like suite: bidirectional + head.
+    "enc-micro": ModelConfig(
+        "enc-micro", vocab=512, d_model=128, n_layers=4, n_heads=4, d_ff=512, seq=48, batch=16,
+        causal=False, n_classes=5,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Backbone
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    """Random init — used by python tests and by L3 (re-implemented in rust
+    with the same shapes; values don't need to match, pretraining does the
+    work)."""
+    params: Dict[str, jnp.ndarray] = {}
+    keys = jax.random.split(key, 2 + 6 * cfg.n_layers)
+    it = iter(keys)
+    params["embed"] = jax.random.normal(next(it), (cfg.vocab, cfg.d_model), cfg.dtype) * 0.02
+    for name, (o, i) in cfg.proj_shapes().items():
+        params[name] = jax.random.normal(next(it), (o, i), cfg.dtype) * (1.0 / math.sqrt(i))
+    for l in range(cfg.n_layers):
+        params[f"l{l}.ln1"] = jnp.ones((cfg.d_model,), cfg.dtype)
+        params[f"l{l}.ln2"] = jnp.ones((cfg.d_model,), cfg.dtype)
+    params["ln_f"] = jnp.ones((cfg.d_model,), cfg.dtype)
+    if cfg.n_classes:
+        params["head"] = jnp.zeros((cfg.n_classes, cfg.d_model), cfg.dtype)
+    return params
+
+
+def _rmsnorm(x, scale):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * scale
+
+
+def _positional(seq: int, d: int, dtype):
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _attention(q, k, v, cfg: ModelConfig, pad_mask):
+    b, t, d = q.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = q.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+    neg = jnp.asarray(-1e9, scores.dtype)
+    if cfg.causal:
+        causal = jnp.tril(jnp.ones((t, t), bool))
+        scores = jnp.where(causal[None, None], scores, neg)
+    scores = jnp.where(pad_mask[:, None, None, :] > 0, scores, neg)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    return out.transpose(0, 2, 1, 3).reshape(b, t, d)
+
+
+def forward(cfg: ModelConfig, params, adapt, tokens, pad_mask):
+    """Backbone forward.  `adapt(name, x, w)` wraps every PEFT'd projection —
+    each method plugs in its own adapted linear there."""
+    x = params["embed"][tokens] + _positional(cfg.seq, cfg.d_model, cfg.dtype)[None]
+    for l in range(cfg.n_layers):
+        h = _rmsnorm(x, params[f"l{l}.ln1"])
+        q = adapt(f"l{l}.wq", h, params[f"l{l}.wq"])
+        k = adapt(f"l{l}.wk", h, params[f"l{l}.wk"])
+        v = adapt(f"l{l}.wv", h, params[f"l{l}.wv"])
+        a = _attention(q, k, v, cfg, pad_mask)
+        x = x + adapt(f"l{l}.wo", a, params[f"l{l}.wo"])
+        h = _rmsnorm(x, params[f"l{l}.ln2"])
+        m = adapt(f"l{l}.w1", h, params[f"l{l}.w1"])
+        m = jax.nn.silu(m)
+        x = x + adapt(f"l{l}.w2", m, params[f"l{l}.w2"])
+    return _rmsnorm(x, params["ln_f"])
+
+
+def lm_logits(cfg: ModelConfig, params, adapt, tokens, pad_mask):
+    h = forward(cfg, params, adapt, tokens, pad_mask)
+    return h @ params["embed"].T  # tied head
+
+
+def cls_logits(cfg: ModelConfig, params, adapt, head_delta, tokens, pad_mask):
+    h = forward(cfg, params, adapt, tokens, pad_mask)
+    denom = jnp.maximum(pad_mask.sum(-1, keepdims=True), 1.0)
+    pooled = (h * pad_mask[..., None]).sum(1) / denom
+    return pooled @ (params["head"] + head_delta).T
+
+
+# ---------------------------------------------------------------------------
+# PEFT method adapters
+# ---------------------------------------------------------------------------
+#
+# Each method defines:
+#   trainable_spec(cfg, k) -> {name: (shape, dtype)} — what L3 must allocate
+#   adapt fn given the trainable pytree
+#   grad_transform(grads, aux) — e.g. the masked method multiplies the mask in
+
+
+def neuroada_spec(cfg: ModelConfig, k: int):
+    t = {}
+    for name, (o, _i) in cfg.proj_shapes().items():
+        t[name] = ((o, k), jnp.float32)
+    return t
+
+
+def dense_spec(cfg: ModelConfig):
+    return {name: (shape, jnp.float32) for name, shape in cfg.proj_shapes().items()}
+
+
+def lora_spec(cfg: ModelConfig, r: int):
+    t = {}
+    for name, (o, i) in cfg.proj_shapes().items():
+        t[name + ".A"] = ((r, i), jnp.float32)
+        t[name + ".B"] = ((o, r), jnp.float32)
+    return t
+
+
+def bitfit_spec(cfg: ModelConfig):
+    return {name: ((shape[0],), jnp.float32) for name, shape in cfg.proj_shapes().items()}
+
+
+def make_adapt(method: str, trainable, aux, impl: str = "jnp", lora_alpha: float = 16.0):
+    """Build the `adapt(name, x, w)` closure for a method.
+
+    aux: method-specific frozen inputs — neuroada: {"idx": {...}},
+    masked: {"mask": {...}} (dense 0/1), others: {}.
+    """
+    if method == "neuroada":
+        idx = aux["idx"]
+
+        def adapt(name, x, w):
+            return neuroada_linear(x, w, idx[name], trainable[name], impl=impl)
+
+    elif method in ("masked", "full"):
+
+        def adapt(name, x, w):
+            return x @ (jax.lax.stop_gradient(w) + trainable[name]).T
+
+    elif method == "lora":
+        r = next(iter(trainable.values())).shape[0]
+        scale = lora_alpha / r
+
+        def adapt(name, x, w):
+            y = x @ jax.lax.stop_gradient(w).T
+            a, bmat = trainable[name + ".A"], trainable[name + ".B"]
+            return y + (x @ a.T) @ bmat.T * scale
+
+    elif method == "bitfit":
+
+        def adapt(name, x, w):
+            return x @ jax.lax.stop_gradient(w).T + trainable[name]
+
+    elif method == "frozen":
+
+        def adapt(name, x, w):
+            return x @ w.T
+
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    return adapt
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg, params, adapt, tokens, targets, loss_mask, pad_mask):
+    logits = lm_logits(cfg, params, adapt, tokens, pad_mask)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(loss_mask.sum(), 1.0)
+    return (nll * loss_mask).sum() / denom
+
+
+def cls_loss(cfg, params, adapt, head_delta, tokens, labels, pad_mask):
+    logits = cls_logits(cfg, params, adapt, head_delta, tokens, pad_mask)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# AdamW (in-graph). weight_decay = 0 throughout, per Tables 5–7.
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def adamw_update(params, grads, m, v, lr, t):
+    """One AdamW step over an arbitrary pytree.  For NeuroAda the tree leaves
+    are the compact [d_out, k] θ tensors, so the two moment tensors shrink by
+    d_in/k exactly as Eq. (6) claims — the lowered HLO provably allocates no
+    dense-shaped state (asserted in tests)."""
+
+    def upd(p, g, mm, vv):
+        mm2 = ADAM_B1 * mm + (1 - ADAM_B1) * g
+        vv2 = ADAM_B2 * vv + (1 - ADAM_B2) * g * g
+        mhat = mm2 / (1 - ADAM_B1**t)
+        vhat = vv2 / (1 - ADAM_B2**t)
+        return p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS), mm2, vv2
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    flat_g = tree.flatten_up_to(grads)
+    flat_m = tree.flatten_up_to(m)
+    flat_v = tree.flatten_up_to(v)
+    out = [upd(p, g, mm, vv) for p, g, mm, vv in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tree.unflatten([o[0] for o in out])
+    new_m = tree.unflatten([o[1] for o in out])
+    new_v = tree.unflatten([o[2] for o in out])
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Train / eval steps (the AOT entry points)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, method: str, *, k: int = 1, lora_r: int = 8,
+                    impl: str = "jnp"):
+    """Returns (step_fn, example_args_builder).
+
+    Decoder signature:
+      step(params, trainable, m, v, aux, tokens, targets, loss_mask, pad_mask,
+           lr, t) -> {"trainable", "m", "v", "loss"}
+    Encoder adds head_delta (+ its moments) and labels replace targets.
+    """
+
+    is_enc = cfg.n_classes > 0
+
+    if method == "pretrain":
+        # True full-parameter pretraining (embeddings, norms, projections):
+        # builds the converged backbone that all PEFT methods then adapt.
+        def pstep(params, m, v, batch, lr, t):
+            lr = lr.astype(jnp.float32)
+            t = t.astype(jnp.float32)
+
+            def loss_fn(p):
+                adapt = make_adapt("frozen", None, {})
+                return lm_loss(cfg, p, adapt, batch["tokens"], batch["targets"],
+                               batch["loss_mask"], batch["pad_mask"])
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            new_p, new_m, new_v = adamw_update(params, grads, m, v, lr, t)
+            return {"params": new_p, "m": new_m, "v": new_v, "loss": loss}
+
+        def pexample(key=None):
+            params = init_params(cfg, key if key is not None else jax.random.PRNGKey(0))
+            zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+            b, s = cfg.batch, cfg.seq
+            batch = {
+                "tokens": jnp.zeros((b, s), jnp.int32),
+                "targets": jnp.zeros((b, s), jnp.int32),
+                "loss_mask": jnp.ones((b, s), jnp.float32),
+                "pad_mask": jnp.ones((b, s), jnp.float32),
+            }
+            return (params, zeros, zeros, jnp.asarray(1e-3, jnp.float32),
+                    jnp.asarray(1.0, jnp.float32))
+
+        return pstep, pexample
+
+    def step(params, trainable, m, v, aux, batch, lr, t):
+        lr = lr.astype(jnp.float32)
+        t = t.astype(jnp.float32)
+
+        if is_enc:
+            tokens, labels, pad_mask = batch["tokens"], batch["labels"], batch["pad_mask"]
+
+            def loss_fn(tr):
+                adapt = make_adapt(method, tr["body"], aux, impl=impl)
+                return cls_loss(cfg, params, adapt, tr["head"], tokens, labels, pad_mask)
+
+        else:
+            tokens, targets = batch["tokens"], batch["targets"]
+            loss_mask, pad_mask = batch["loss_mask"], batch["pad_mask"]
+
+            def loss_fn(tr):
+                adapt = make_adapt(method, tr["body"], aux, impl=impl)
+                return lm_loss(cfg, params, adapt, tokens, targets, loss_mask, pad_mask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(trainable)
+
+        if method == "neuroada":
+            # slot_mask: 1 → slot participates, 0 → frozen (Fig. 6 row
+            # fractions / sub-k budgets without re-lowering the graph).
+            grads = {
+                "body": {n: g * aux["slot_mask"][n] for n, g in grads["body"].items()},
+                **({"head": grads["head"]} if is_enc else {}),
+            }
+        elif method == "masked":
+            grads = {
+                "body": {n: g * aux["mask"][n] for n, g in grads["body"].items()},
+                **({"head": grads["head"]} if is_enc else {}),
+            }
+
+        new_tr, new_m, new_v = adamw_update(trainable, grads, m, v, lr, t)
+        return {"trainable": new_tr, "m": new_m, "v": new_v, "loss": loss}
+
+    def example_args(key=None):
+        key = key if key is not None else jax.random.PRNGKey(0)
+        params = init_params(cfg, key)
+        if method == "neuroada":
+            spec = neuroada_spec(cfg, k)
+        elif method in ("masked", "full"):
+            spec = dense_spec(cfg)
+        elif method == "lora":
+            spec = lora_spec(cfg, lora_r)
+        elif method == "bitfit":
+            spec = bitfit_spec(cfg)
+        else:
+            raise ValueError(method)
+        body = {n: jnp.zeros(s, d) for n, (s, d) in spec.items()}
+        trainable = {"body": body}
+        if is_enc:
+            trainable["head"] = jnp.zeros((cfg.n_classes, cfg.d_model), jnp.float32)
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, trainable)
+        aux: Dict[str, Any] = {}
+        if method == "neuroada":
+            aux["idx"] = {
+                n: jnp.zeros((sh[0], k), jnp.int32) for n, sh in cfg.proj_shapes().items()
+            }
+            aux["slot_mask"] = {n: jnp.ones((sh[0], k), jnp.float32) for n, sh in cfg.proj_shapes().items()}
+        elif method == "masked":
+            aux["mask"] = {n: jnp.ones(sh, jnp.float32) for n, sh in cfg.proj_shapes().items()}
+        b, s = cfg.batch, cfg.seq
+        if is_enc:
+            batch = {
+                "tokens": jnp.zeros((b, s), jnp.int32),
+                "labels": jnp.zeros((b,), jnp.int32),
+                "pad_mask": jnp.ones((b, s), jnp.float32),
+            }
+        else:
+            batch = {
+                "tokens": jnp.zeros((b, s), jnp.int32),
+                "targets": jnp.zeros((b, s), jnp.int32),
+                "loss_mask": jnp.ones((b, s), jnp.float32),
+                "pad_mask": jnp.ones((b, s), jnp.float32),
+            }
+        lr = jnp.asarray(1e-3, jnp.float32)
+        t = jnp.asarray(1.0, jnp.float32)
+        return (params, trainable, zeros, zeros, aux, batch, lr, t)
+
+    return step, example_args
+
+
+def make_eval_fn(cfg: ModelConfig):
+    """Eval entry: decoder → last-position LM logits [B, V] (multiple-choice
+    scoring + greedy decode); encoder → class logits.
+
+    Takes per-projection `biases` so ALL methods evaluate through one
+    artifact: NeuroAda/masked/full/LoRA merge their deltas into the weights
+    (Algorithm 1 Phase 3) and pass zero biases; BitFit — whose biases cannot
+    merge into a bias-free backbone — passes them here."""
+
+    is_enc = cfg.n_classes > 0
+
+    def biased_adapt(biases):
+        def adapt(name, x, w):
+            return x @ w.T + biases[name]
+
+        return adapt
+
+    if is_enc:
+        # No last_pos arg: XLA drops unused entry parameters during
+        # stablehlo→XlaComputation conversion, which would desync the
+        # manifest signature from the HLO (caught by test_aot.py).
+        def eval_fn(params, biases, tokens, pad_mask):
+            adapt = biased_adapt(biases)
+            return cls_logits(cfg, params, adapt, jnp.zeros_like(params["head"]), tokens, pad_mask)
+
+    else:
+
+        def eval_fn(params, biases, tokens, pad_mask, last_pos=None):
+            adapt = biased_adapt(biases)
+            logits = lm_logits(cfg, params, adapt, tokens, pad_mask)
+            return jnp.take_along_axis(logits, last_pos[:, None, None], axis=1)[:, 0]
+
+    def example_args(key=None):
+        params = init_params(cfg, key if key is not None else jax.random.PRNGKey(0))
+        biases = {n: jnp.zeros((sh[0],), jnp.float32) for n, sh in cfg.proj_shapes().items()}
+        base = (
+            params,
+            biases,
+            jnp.zeros((cfg.batch, cfg.seq), jnp.int32),
+            jnp.ones((cfg.batch, cfg.seq), jnp.float32),
+        )
+        if is_enc:
+            return base
+        return base + (jnp.zeros((cfg.batch,), jnp.int32),)
+
+    return eval_fn, example_args
+
+
+__all__ = [
+    "ModelConfig", "SIZES", "init_params", "forward", "lm_logits", "cls_logits",
+    "make_adapt", "lm_loss", "cls_loss", "adamw_update", "make_train_step",
+    "make_eval_fn", "neuroada_spec", "dense_spec", "lora_spec", "bitfit_spec",
+]

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests are run from the python/ directory (see Makefile); make that robust
+# when pytest is invoked from the repo root too.
+_HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _HERE not in sys.path:
+    sys.path.insert(0, _HERE)

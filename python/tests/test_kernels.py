@@ -1,0 +1,141 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in kernels/ref.py.
+
+Hypothesis sweeps shapes/k/batch (and dtypes) — the system prompt's core
+correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import neuroada as na
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _mk(seed, b, d_in, d_out, k, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (b, d_in), dtype)
+    w = jax.random.normal(k2, (d_out, d_in), dtype)
+    idx = ref.topk_rows(w, k)
+    th = jax.random.normal(k3, (d_out, k), dtype) * 0.1
+    return x, w, idx, th
+
+
+shape_st = st.tuples(
+    st.integers(1, 9),    # batch
+    st.integers(2, 40),   # d_in
+    st.integers(1, 40),   # d_out
+)
+
+
+@given(shape_st, st.integers(1, 4), st.integers(0, 10_000))
+def test_fwd_pallas_matches_ref(shape, k, seed):
+    b, d_in, d_out = shape
+    k = min(k, d_in)
+    x, w, idx, th = _mk(seed, b, d_in, d_out, k)
+    got = na.sparse_delta_matmul_pallas(x, w, idx, th)
+    want = ref.sparse_delta_matmul(x, w, idx, th)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@given(shape_st, st.integers(1, 4), st.integers(0, 10_000))
+def test_fwd_jnp_matches_ref(shape, k, seed):
+    b, d_in, d_out = shape
+    k = min(k, d_in)
+    x, w, idx, th = _mk(seed, b, d_in, d_out, k)
+    got = na.sparse_delta_matmul_jnp(x, w, idx, th)
+    want = ref.sparse_delta_matmul(x, w, idx, th)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@given(shape_st, st.integers(1, 4), st.integers(0, 10_000))
+def test_bwd_pallas_matches_ref(shape, k, seed):
+    b, d_in, d_out = shape
+    k = min(k, d_in)
+    x, w, idx, th = _mk(seed, b, d_in, d_out, k)
+    g = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, d_out), jnp.float32)
+    dx_want, dth_want = ref.sparse_delta_grads(x, w, idx, th, g)
+    dx = na.sparse_delta_dx_pallas(g, w, idx, th)
+    dth = na.sparse_delta_dtheta_pallas(x, idx, g)
+    np.testing.assert_allclose(dx, dx_want, rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(dth, dth_want, rtol=3e-5, atol=3e-5)
+
+
+def test_blocked_grid_padding():
+    """Shapes that do NOT divide the block sizes exercise the pad/slice path
+    and multi-step grids."""
+    x, w, idx, th = _mk(0, 130, 50, 300, 2)
+    got = na.sparse_delta_matmul_pallas(x, w, idx, th, block_b=32, block_r=64)
+    want = ref.sparse_delta_matmul(x, w, idx, th)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    g = jax.random.normal(jax.random.PRNGKey(9), (130, 300), jnp.float32)
+    dx = na.sparse_delta_dx_pallas(g, w, idx, th, block_b=32, block_r=64)
+    dth = na.sparse_delta_dtheta_pallas(x, idx, g, block_r=64)
+    dx_want, dth_want = ref.sparse_delta_grads(x, w, idx, th, g)
+    np.testing.assert_allclose(dx, dx_want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(dth, dth_want, rtol=1e-4, atol=1e-4)
+
+
+def test_custom_vjp_matches_autodiff_of_oracle():
+    x, w, idx, th = _mk(3, 6, 20, 15, 2)
+
+    def f_pallas(xx, tt):
+        return (na._neuroada_linear_pallas(xx, w, idx, tt) ** 2).sum()
+
+    def f_ref(xx, tt):
+        return (ref.sparse_delta_matmul(xx, w, idx, tt) ** 2).sum()
+
+    gx_p, gt_p = jax.grad(f_pallas, argnums=(0, 1))(x, th)
+    gx_r, gt_r = jax.grad(f_ref, argnums=(0, 1))(x, th)
+    np.testing.assert_allclose(gx_p, gx_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gt_p, gt_r, rtol=1e-4, atol=1e-4)
+
+
+def test_duplicate_indices_accumulate():
+    """Spec: duplicate idx entries sum their θ contributions (scatter-add)."""
+    x = jnp.ones((2, 4), jnp.float32)
+    w = jnp.zeros((3, 4), jnp.float32)
+    idx = jnp.array([[1, 1], [0, 2], [3, 3]], jnp.int32)
+    th = jnp.array([[1.0, 2.0], [3.0, 4.0], [5.0, -5.0]], jnp.float32)
+    want = ref.sparse_delta_matmul(x, w, idx, th)
+    got = na.sparse_delta_matmul_pallas(x, w, idx, th)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+    np.testing.assert_allclose(got[:, 0], 3.0)  # 1+2
+    np.testing.assert_allclose(got[:, 2], 0.0)  # 5-5
+
+
+def test_leading_dims_flattened():
+    """neuroada_linear accepts [..., d_in] activations (B, T, d)."""
+    x, w, idx, th = _mk(5, 6, 16, 12, 2)
+    x3 = x.reshape(2, 3, 16)
+    y = na.neuroada_linear(x3, w, idx, th, impl="jnp")
+    assert y.shape == (2, 3, 12)
+    np.testing.assert_allclose(
+        y.reshape(6, 12), ref.sparse_delta_matmul(x, w, idx, th), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_zero_theta_is_identity():
+    """θ=0 (the init) must reproduce the frozen forward exactly — NeuroAda
+    starts finetuning from the pretrained model's behaviour."""
+    x, w, idx, _ = _mk(7, 4, 24, 18, 3)
+    th0 = jnp.zeros((18, 3), jnp.float32)
+    for impl in ("jnp", "pallas"):
+        y = na.neuroada_linear(x, w, idx, th0, impl=impl)
+        np.testing.assert_allclose(y, x @ w.T, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    x, w, idx, th = _mk(11, 4, 12, 10, 2, dtype)
+    got = na.sparse_delta_matmul_pallas(x, w, idx, th)
+    want = ref.sparse_delta_matmul(x, w, idx, th)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )

@@ -1,0 +1,113 @@
+//! Hot-path microbenchmarks (harness = false; uses the in-repo bench
+//! harness since criterion is unavailable offline).
+//!
+//!   selection      Phase-1 top-k at LLaMA-projection scale (O(d_in)/row)
+//!   delta          pack / merge / serialize of the compact store
+//!   train_step     per-method step latency through the real artifacts
+//!   eval_batch     serving-path batch latency
+//!
+//! Run: `cargo bench --bench hot_paths` (set NEUROADA_BENCH=full for longer
+//! measurement budgets).
+
+use neuroada::bench::Bench;
+use neuroada::config::presets;
+use neuroada::data::{lm_batch, tasks};
+use neuroada::model::init::init_params;
+use neuroada::peft::selection::select_topk;
+use neuroada::peft::{DeltaStore, MethodKind, Strategy};
+use neuroada::runtime::{Engine, Manifest, Value};
+use neuroada::train::build_session;
+use neuroada::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("NEUROADA_BENCH").as_deref() == Ok("full");
+    let b = if full { Bench::default() } else { Bench::quick() };
+    println!("== hot_paths ({} mode) ==", if full { "full" } else { "quick" });
+
+    // --- selection at scale (pure rust, no PJRT) -------------------------
+    let mut rng = Rng::new(1);
+    for (d, k) in [(1024usize, 1usize), (4096, 1), (4096, 20)] {
+        let w = neuroada::tensor::Tensor::randn(&[d, d], 1.0, &mut rng);
+        let r = b.run(&format!("selection/top{k} d={d}"), || {
+            let s = select_topk(&w, k);
+            std::hint::black_box(s.idx.data.len());
+        });
+        println!("{}  ({:.1} Mrow/s)", r.render(), d as f64 / r.summary.mean / 1e6);
+    }
+
+    // --- delta store ------------------------------------------------------
+    let w = neuroada::tensor::Tensor::randn(&[4096, 4096], 1.0, &mut rng);
+    let sel = select_topk(&w, 1);
+    let vals: Vec<f32> = (0..4096).map(|_| rng.normal()).collect();
+    let store = DeltaStore::from_f32(sel.clone(), &vals);
+    let r = b.run("delta/pack d=4096 k=1", || {
+        std::hint::black_box(DeltaStore::from_f32(sel.clone(), &vals).storage_bytes());
+    });
+    println!("{}", r.render());
+    let mut wm = w.clone();
+    let r = b.run("delta/merge d=4096 k=1", || {
+        store.merge_into(&mut wm);
+    });
+    println!("{}", r.render());
+    let r = b.run("delta/serialize d=4096 k=1", || {
+        std::hint::black_box(store.to_bytes().len());
+    });
+    println!("{}", r.render());
+
+    // --- train-step latency through the artifacts ------------------------
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT benches)");
+        return Ok(());
+    };
+    let engine = Engine::shared();
+    let cfg = presets::model("nano").unwrap();
+    let params = init_params(&cfg, &mut rng);
+    let task = tasks::by_name("cs-boolq").unwrap();
+    for (method, name) in [
+        (MethodKind::NeuroAda { k: 1 }, "nano_neuroada_k1"),
+        (MethodKind::NeuroAda { k: 1 }, "nano_neuroada_k1_pallas"),
+        (MethodKind::Masked { k: 1 }, "nano_masked"),
+        (MethodKind::Lora { r: 8 }, "nano_lora"),
+        (MethodKind::Full, "nano_full"),
+    ] {
+        let meta = manifest.get(name)?;
+        let mut setup = build_session(&engine, meta, &params, method, Strategy::Magnitude, 1.0, None, &mut rng)?;
+        let mut seed = 0u64;
+        let r = b.run(&format!("train_step/{name}"), || {
+            seed += 1;
+            let mut trng = Rng::new(seed);
+            let examples: Vec<_> = (0..cfg.batch)
+                .map(|_| (task.gen)(&mut trng, cfg.vocab, cfg.seq - 2))
+                .collect();
+            let lb = lm_batch(&examples, cfg.seq);
+            let batch = vec![
+                ("batch.tokens".to_string(), Value::I32 { shape: vec![cfg.batch, cfg.seq], data: lb.tokens }),
+                ("batch.targets".to_string(), Value::I32 { shape: vec![cfg.batch, cfg.seq], data: lb.targets }),
+                ("batch.loss_mask".to_string(), Value::F32 { shape: vec![cfg.batch, cfg.seq], data: lb.loss_mask }),
+                ("batch.pad_mask".to_string(), Value::F32 { shape: vec![cfg.batch, cfg.seq], data: lb.pad_mask }),
+            ];
+            setup.session.step(&engine, &batch, 1e-3).unwrap();
+        });
+        println!("{}  ({:.1} samples/s)", r.render(), cfg.batch as f64 / r.summary.mean);
+        engine.evict(name);
+    }
+
+    // --- eval/serving batch ------------------------------------------------
+    let meta = manifest.get("nano_eval")?;
+    let mut store = params.clone();
+    for (name, d_out, _) in cfg.proj_shapes() {
+        store.insert_f32(format!("biases.{name}"), &[d_out], vec![0.0; d_out]);
+    }
+    let examples = neuroada::data::example_stream(&task, neuroada::data::Split::Test, 5, cfg.vocab, cfg.seq - 2, cfg.batch);
+    let eb = neuroada::data::eval_batch(&examples, cfg.seq);
+    store.insert("tokens", Value::I32 { shape: vec![cfg.batch, cfg.seq], data: eb.tokens });
+    store.insert("pad_mask", Value::F32 { shape: vec![cfg.batch, cfg.seq], data: eb.pad_mask });
+    store.insert("last_pos", Value::I32 { shape: vec![cfg.batch], data: eb.last_pos });
+    let r = b.run("eval_batch/nano", || {
+        std::hint::black_box(
+            neuroada::runtime::state::run_once(&engine, meta, &store).unwrap().len(),
+        );
+    });
+    println!("{}  ({:.0} req/s)", r.render(), cfg.batch as f64 / r.summary.mean);
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Measurement harness for `cargo bench` targets (criterion is unavailable
+//! offline; this provides the warmup/iterate/summarize loop the bench
+//! binaries use, with deterministic iteration counts and robust statistics).
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Seconds per iteration.
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn per_iter_ms(&self) -> f64 {
+        self.summary.mean * 1e3
+    }
+
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.summary.mean
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "{:40} {:>10.3} ms/iter  p50 {:>9.3}  p95 {:>9.3}  (n={})",
+            self.name,
+            self.summary.mean * 1e3,
+            self.summary.p50 * 1e3,
+            self.summary.p95 * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Bench configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop once this much wall time is spent measuring.
+    pub budget_secs: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Bench {
+        Bench { warmup_iters: 2, min_iters: 5, max_iters: 200, budget_secs: 3.0 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench { warmup_iters: 1, min_iters: 3, max_iters: 30, budget_secs: 1.0 }
+    }
+
+    /// Measure `f` (called once per iteration).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.min_iters
+            || (times.len() < self.max_iters && start.elapsed().as_secs_f64() < self.budget_secs)
+        {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: times.len(),
+            summary: Summary::of(&times),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench { warmup_iters: 1, min_iters: 3, max_iters: 5, budget_secs: 0.05 };
+        let mut n = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..10_000 {
+                n = n.wrapping_add(i);
+            }
+        });
+        assert!(r.iters >= 3);
+        assert!(r.summary.mean > 0.0);
+        assert!(r.render().contains("spin"));
+    }
+}

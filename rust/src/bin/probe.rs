@@ -1,0 +1,45 @@
+// Recipe calibration: pretrain length/LR vs zero-shot + finetuned accuracy.
+use anyhow::Result;
+use neuroada::config::presets;
+use neuroada::data::tasks;
+use neuroada::eval::{eval_decoder, merged_params};
+use neuroada::model::init::init_params;
+use neuroada::peft::{MethodKind, Strategy};
+use neuroada::runtime::{Engine, Manifest, ValueStore};
+use neuroada::train::{build_session, finetune_steps, pretrain, setup::extract_deltas, Schedule};
+use neuroada::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let engine = Engine::cpu()?;
+    let cfg = presets::model("nano").unwrap();
+    let mut rng = Rng::new(42);
+    let init = init_params(&cfg, &mut rng);
+    let steps = 8000;
+    let pre = pretrain(&engine, manifest.get("nano_pretrain")?, init, steps,
+        Schedule::linear(6e-3, 0.03, steps), 42, None, false)?;
+    println!("pretrain {} steps: -> {:.3}", steps, pre.losses.last().unwrap());
+
+    let mut zb = ValueStore::new();
+    for (name, d_out, _) in cfg.proj_shapes() { zb.insert_f32(format!("biases.{name}"), &[d_out], vec![0.0; d_out]); }
+
+    for tname in ["ar-addsub", "cs-obqa", "cs-boolq"] {
+        let task = tasks::by_name(tname).unwrap();
+        let acc0 = eval_decoder(&engine, &manifest, "nano", &pre.params, &zb, &task, 128, 7)?;
+        println!("{tname}: zero-shot={acc0:.3}");
+    }
+    // finetune neuroada k4 longer
+    for tname in ["cs-boolq", "ar-addsub"] {
+        let task = tasks::by_name(tname).unwrap();
+        let meta = manifest.get("nano_neuroada_k4")?;
+        let mut rng2 = Rng::new(1);
+        let mut setup = build_session(&engine, meta, &pre.params, MethodKind::NeuroAda{k:4}, Strategy::Magnitude, 1.0, None, &mut rng2)?;
+        let fsteps = 1500;
+        let ft = finetune_steps(&engine, &mut setup.session, &task, fsteps, Schedule::linear(8e-3, 0.06, fsteps), 1, None)?;
+        let deltas = extract_deltas(&setup.session, &setup.selections)?;
+        let (merged, b2) = merged_params(&setup.session, MethodKind::NeuroAda{k:4}, &deltas)?;
+        let acc1 = eval_decoder(&engine, &manifest, "nano", &merged, &b2, &task, 128, 7)?;
+        println!("{tname}: neuroada-k4 loss {:.2}->{:.2} acc={acc1:.3}", ft.losses[0], ft.losses.last().unwrap());
+    }
+    Ok(())
+}

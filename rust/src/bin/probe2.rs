@@ -1,0 +1,64 @@
+// Perf probe: L3 step-loop — literal-upload-everything (naive) vs
+// device-resident frozen buffers (optimized). Also HLO graph stats.
+use anyhow::Result;
+use neuroada::config::presets;
+use neuroada::data::{lm_batch, tasks};
+use neuroada::model::init::init_params;
+use neuroada::peft::{MethodKind, Strategy};
+use neuroada::runtime::{Engine, Manifest, Value};
+use neuroada::train::build_session;
+use neuroada::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let engine = Engine::shared();
+    let size = std::env::args().nth(1).unwrap_or_else(|| "small".into());
+    let cfg = presets::model(&size).unwrap();
+    let mut rng = Rng::new(1);
+    let params = init_params(&cfg, &mut rng);
+    let task = tasks::by_name("cs-boolq").unwrap();
+    let art = format!("{size}_neuroada_k1");
+    let meta = manifest.get(&art)?;
+    let mut setup = build_session(&engine, meta, &params, MethodKind::NeuroAda{k:1}, Strategy::Magnitude, 1.0, None, &mut rng)?;
+
+    let mk_batch = |seed: u64| {
+        let mut trng = Rng::new(seed);
+        let ex: Vec<_> = (0..cfg.batch).map(|_| (task.gen)(&mut trng, cfg.vocab, cfg.seq-2)).collect();
+        let b = lm_batch(&ex, cfg.seq);
+        vec![
+            ("batch.tokens".to_string(), Value::I32{shape: vec![cfg.batch,cfg.seq], data: b.tokens}),
+            ("batch.targets".to_string(), Value::I32{shape: vec![cfg.batch,cfg.seq], data: b.targets}),
+            ("batch.loss_mask".to_string(), Value::F32{shape: vec![cfg.batch,cfg.seq], data: b.loss_mask}),
+            ("batch.pad_mask".to_string(), Value::F32{shape: vec![cfg.batch,cfg.seq], data: b.pad_mask}),
+        ]
+    };
+
+    // optimized path (resident buffers)
+    let n = 30;
+    for t in 0..3 { setup.session.step(&engine, &mk_batch(t), 1e-4)?; } // warm
+    let t0 = std::time::Instant::now();
+    for t in 0..n { setup.session.step(&engine, &mk_batch(100+t), 1e-4)?; }
+    let fast = t0.elapsed().as_secs_f64() / n as f64;
+
+    // naive path: execute() with ALL args as literals each step
+    let exe = engine.executable(meta)?;
+    let mut store = setup.session.store.clone();
+    store.insert("lr", Value::scalar_f32(1e-4));
+    store.insert("t", Value::scalar_f32(1.0));
+    for (k2, v) in mk_batch(0) { store.insert(k2, v); }
+    let lits = store.literals_for(&meta.args)?;
+    let _ = exe.execute::<xla::Literal>(&lits)?; // warm
+    let t0 = std::time::Instant::now();
+    for t in 0..n {
+        for (k2, v) in mk_batch(200+t) { store.insert(k2, v); }
+        let lits = store.literals_for(&meta.args)?;
+        let out = exe.execute::<xla::Literal>(&lits)?;
+        let lit = out[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        store.absorb_outputs(parts, &meta.outputs)?;
+    }
+    let slow = t0.elapsed().as_secs_f64() / n as f64;
+    println!("{size} neuroada_k1 step: naive {:.1} ms  resident {:.1} ms  speedup {:.2}x",
+        slow*1e3, fast*1e3, slow/fast);
+    Ok(())
+}

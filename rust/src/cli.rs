@@ -1,0 +1,140 @@
+//! Command-line interface (hand-rolled: clap is unavailable offline).
+//!
+//! Subcommands:
+//!   repro <id>     regenerate a paper table/figure (table1, fig4..fig7,
+//!                  table2, table3, table4, sweeps, all)
+//!   pretrain       build + cache a backbone checkpoint
+//!   train          one fine-tuning run (method × task), merge + eval
+//!   eval           zero-shot eval of a cached backbone on a task
+//!   audit          memory audit: analytic (Eq. 5/6) vs measured bytes
+//!   tasks          list the 23 synthetic tasks
+//!
+//! Flags use `--key value` (or `--flag` for booleans).
+
+use std::collections::BTreeMap;
+
+/// Parsed argv: subcommand, positional args, `--key value` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+/// Parse argv (excluding argv[0]).
+pub fn parse_args(argv: &[String]) -> Result<Args, String> {
+    let mut a = Args::default();
+    let mut it = argv.iter().peekable();
+    if let Some(first) = it.peek() {
+        if !first.starts_with("--") {
+            a.subcommand = it.next().unwrap().clone();
+        }
+    }
+    while let Some(arg) = it.next() {
+        if let Some(key) = arg.strip_prefix("--") {
+            if key.is_empty() {
+                return Err("bad flag '--'".into());
+            }
+            // boolean flag if next token is absent or another flag
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    a.options.insert(key.to_string(), it.next().unwrap().clone());
+                }
+                _ => {
+                    a.options.insert(key.to_string(), "true".to_string());
+                }
+            }
+        } else {
+            a.positional.push(arg.clone());
+        }
+    }
+    Ok(a)
+}
+
+impl Args {
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{key}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn opt_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{key}: expected number, got {v:?}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.opt(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+pub const USAGE: &str = "\
+neuroada — NeuroAda reproduction (rust coordinator over AOT JAX/Pallas artifacts)
+
+USAGE: neuroada <subcommand> [--flags]
+
+SUBCOMMANDS
+  repro <id>        regenerate paper results: table1 | fig4 | fig5 | fig6 |
+                    fig7 | table2 | table3 | table4 | sweeps | all
+  pretrain          build + cache a backbone (--size nano --steps 16000)
+  train             one run: --size nano --task cs-boolq --method neuroada
+                    [--k 1] [--rank 8] [--strategy magnitude] [--fraction 1.0]
+                    [--steps 1500] [--lr 8e-3] [--config cfg.toml]
+  eval              zero-shot eval: --size nano --task cs-boolq [--n 200]
+  audit             memory audit table: [--size nano] [--k 1]
+  tasks             list the 23 synthetic tasks
+
+COMMON FLAGS
+  --artifacts DIR   artifact directory (default: artifacts)
+  --out DIR         run output directory (default: runs)
+  --smoke           tiny budgets (CI smoke test)
+  --pretrain-steps N --steps N --eval-n N --seed N --lr X
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        parse_args(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = args(&["repro", "fig4", "--size", "nano", "--smoke", "--steps", "50"]);
+        assert_eq!(a.subcommand, "repro");
+        assert_eq!(a.positional, vec!["fig4"]);
+        assert_eq!(a.opt("size"), Some("nano"));
+        assert!(a.flag("smoke"));
+        assert_eq!(a.opt_usize("steps").unwrap(), Some(50));
+    }
+
+    #[test]
+    fn boolean_flag_at_end() {
+        let a = args(&["train", "--smoke"]);
+        assert!(a.flag("smoke"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = args(&["train", "--steps", "abc"]);
+        assert!(a.opt_usize("steps").is_err());
+    }
+}

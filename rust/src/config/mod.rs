@@ -1,0 +1,307 @@
+//! Config system: a TOML-subset parser plus the typed experiment configs
+//! every CLI subcommand and experiment driver consumes.
+//!
+//! Supported TOML subset: `[section]` and `[section.sub]` headers, `key =
+//! value` with string / int / float / bool / flat arrays, `#` comments.
+//! That covers every config this project ships (configs/*.toml); the parser
+//! rejects anything outside the subset loudly rather than mis-reading it.
+
+pub mod presets;
+pub mod toml;
+
+use crate::peft::MethodKind;
+use std::collections::BTreeMap;
+
+pub use toml::{parse_toml, TomlValue};
+
+/// Model architecture — must mirror python `compile/model.py::SIZES` (the
+/// manifest carries the authoritative copy per artifact; `runtime` verifies
+/// agreement at load).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub causal: bool,
+    pub n_classes: usize,
+}
+
+impl ModelCfg {
+    /// Every adapted projection, name → (d_out, d_in); mirrors
+    /// `ModelConfig.proj_shapes` in model.py (order matters: it is the
+    /// manifest's alphabetical flattening domain).
+    pub fn proj_shapes(&self) -> Vec<(String, usize, usize)> {
+        let mut v = Vec::new();
+        for l in 0..self.n_layers {
+            v.push((format!("l{l}.wq"), self.d_model, self.d_model));
+            v.push((format!("l{l}.wk"), self.d_model, self.d_model));
+            v.push((format!("l{l}.wv"), self.d_model, self.d_model));
+            v.push((format!("l{l}.wo"), self.d_model, self.d_model));
+            v.push((format!("l{l}.w1"), self.d_ff, self.d_model));
+            v.push((format!("l{l}.w2"), self.d_model, self.d_ff));
+        }
+        v
+    }
+
+    pub fn backbone_params(&self) -> u64 {
+        let mut n = (self.vocab * self.d_model) as u64;
+        n += self
+            .proj_shapes()
+            .iter()
+            .map(|(_, o, i)| (o * i) as u64)
+            .sum::<u64>();
+        n += ((2 * self.n_layers + 1) * self.d_model) as u64;
+        if self.n_classes > 0 {
+            n += (self.n_classes * self.d_model) as u64;
+        }
+        n
+    }
+
+    pub fn projections(&self) -> Vec<crate::peft::memory::Projection> {
+        self.proj_shapes()
+            .iter()
+            .map(|&(_, o, i)| crate::peft::memory::Projection { d_out: o as u64, d_in: i as u64 })
+            .collect()
+    }
+}
+
+/// LR schedule shapes from the paper's search spaces (Tables 5–7): linear
+/// decay with a warmup ratio.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainCfg {
+    pub lr: f64,
+    pub warmup_ratio: f64,
+    pub steps: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    /// Epochs metadata for paper-parity reporting (steps = epochs × batches).
+    pub epochs: usize,
+}
+
+impl Default for TrainCfg {
+    fn default() -> TrainCfg {
+        TrainCfg { lr: 3e-3, warmup_ratio: 0.06, steps: 300, seed: 42, log_every: 25, epochs: 3 }
+    }
+}
+
+/// PEFT method selection for a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PeftCfg {
+    pub method: MethodKind,
+    pub strategy: crate::peft::Strategy,
+    /// Fraction of neurons allowed to adapt (Figure 6); 1.0 = all.
+    pub neuron_fraction: f64,
+}
+
+impl Default for PeftCfg {
+    fn default() -> PeftCfg {
+        PeftCfg {
+            method: MethodKind::NeuroAda { k: 1 },
+            strategy: crate::peft::Strategy::Magnitude,
+            neuron_fraction: 1.0,
+        }
+    }
+}
+
+/// A full experiment config (one fine-tuning run).
+#[derive(Debug, Clone)]
+pub struct RunCfg {
+    pub size: String,
+    pub task: String,
+    pub train: TrainCfg,
+    pub peft: PeftCfg,
+    pub artifacts_dir: String,
+    pub out_dir: String,
+}
+
+impl Default for RunCfg {
+    fn default() -> RunCfg {
+        RunCfg {
+            size: "nano".into(),
+            task: "cs-boolq".into(),
+            train: TrainCfg::default(),
+            peft: PeftCfg::default(),
+            artifacts_dir: "artifacts".into(),
+            out_dir: "runs".into(),
+        }
+    }
+}
+
+/// Errors from config parsing/validation.
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+impl std::error::Error for ConfigError {}
+
+fn err(msg: impl Into<String>) -> ConfigError {
+    ConfigError(msg.into())
+}
+
+impl RunCfg {
+    /// Build from parsed TOML sections, starting from defaults.
+    pub fn from_toml(doc: &BTreeMap<String, BTreeMap<String, TomlValue>>) -> Result<RunCfg, ConfigError> {
+        let mut cfg = RunCfg::default();
+        for (section, kv) in doc {
+            match section.as_str() {
+                "run" | "" => {
+                    for (k, v) in kv {
+                        match k.as_str() {
+                            "size" => cfg.size = v.as_str().ok_or_else(|| err("run.size: string"))?.into(),
+                            "task" => cfg.task = v.as_str().ok_or_else(|| err("run.task: string"))?.into(),
+                            "artifacts_dir" => cfg.artifacts_dir = v.as_str().ok_or_else(|| err("string"))?.into(),
+                            "out_dir" => cfg.out_dir = v.as_str().ok_or_else(|| err("string"))?.into(),
+                            _ => return Err(err(format!("unknown key run.{k}"))),
+                        }
+                    }
+                }
+                "train" => {
+                    for (k, v) in kv {
+                        match k.as_str() {
+                            "lr" => cfg.train.lr = v.as_f64().ok_or_else(|| err("train.lr: number"))?,
+                            "warmup_ratio" => cfg.train.warmup_ratio = v.as_f64().ok_or_else(|| err("number"))?,
+                            "steps" => cfg.train.steps = v.as_usize().ok_or_else(|| err("int"))?,
+                            "seed" => cfg.train.seed = v.as_usize().ok_or_else(|| err("int"))? as u64,
+                            "log_every" => cfg.train.log_every = v.as_usize().ok_or_else(|| err("int"))?,
+                            "epochs" => cfg.train.epochs = v.as_usize().ok_or_else(|| err("int"))?,
+                            _ => return Err(err(format!("unknown key train.{k}"))),
+                        }
+                    }
+                }
+                "peft" => {
+                    let mut method = "neuroada".to_string();
+                    let mut k = 1usize;
+                    let mut r = 8usize;
+                    for (key, v) in kv {
+                        match key.as_str() {
+                            "method" => method = v.as_str().ok_or_else(|| err("peft.method: string"))?.into(),
+                            "k" => k = v.as_usize().ok_or_else(|| err("int"))?,
+                            "rank" => r = v.as_usize().ok_or_else(|| err("int"))?,
+                            "strategy" => {
+                                cfg.peft.strategy = crate::peft::Strategy::parse(
+                                    v.as_str().ok_or_else(|| err("string"))?,
+                                )
+                                .ok_or_else(|| err("unknown strategy"))?
+                            }
+                            "neuron_fraction" => {
+                                cfg.peft.neuron_fraction =
+                                    v.as_f64().ok_or_else(|| err("number"))?
+                            }
+                            _ => return Err(err(format!("unknown key peft.{key}"))),
+                        }
+                    }
+                    cfg.peft.method = match method.as_str() {
+                        "neuroada" => MethodKind::NeuroAda { k },
+                        "masked" => MethodKind::Masked { k },
+                        "lora" => MethodKind::Lora { r },
+                        "bitfit" => MethodKind::BitFit,
+                        "full" => MethodKind::Full,
+                        other => return Err(err(format!("unknown method {other}"))),
+                    };
+                }
+                other => return Err(err(format!("unknown section [{other}]"))),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<RunCfg, ConfigError> {
+        let text = std::fs::read_to_string(path).map_err(|e| err(format!("{path}: {e}")))?;
+        let doc = parse_toml(&text).map_err(|e| err(format!("{path}: {e}")))?;
+        RunCfg::from_toml(&doc)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if presets::model(&self.size).is_none() {
+            return Err(err(format!("unknown model size {:?}", self.size)));
+        }
+        if !(0.0..=1.0).contains(&self.peft.neuron_fraction) {
+            return Err(err("peft.neuron_fraction must be in [0, 1]"));
+        }
+        if self.train.lr <= 0.0 || self.train.lr > 1.0 {
+            return Err(err(format!("train.lr {} out of range", self.train.lr)));
+        }
+        if self.train.steps == 0 {
+            return Err(err("train.steps must be > 0"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = r#"
+# fine-tune nano on the boolq-like task
+[run]
+size = "nano"
+task = "cs-boolq"
+
+[train]
+lr = 0.003
+steps = 120
+seed = 7
+
+[peft]
+method = "neuroada"
+k = 4
+strategy = "magnitude"
+neuron_fraction = 0.5
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let doc = parse_toml(EXAMPLE).unwrap();
+        let cfg = RunCfg::from_toml(&doc).unwrap();
+        assert_eq!(cfg.size, "nano");
+        assert_eq!(cfg.train.lr, 0.003);
+        assert_eq!(cfg.train.steps, 120);
+        assert_eq!(cfg.peft.method, MethodKind::NeuroAda { k: 4 });
+        assert_eq!(cfg.peft.neuron_fraction, 0.5);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        let doc = parse_toml("[train]\nlearning_rate = 0.1\n").unwrap();
+        assert!(RunCfg::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        for bad in [
+            "[run]\nsize = \"gigantic\"\n",
+            "[train]\nlr = -1.0\n",
+            "[peft]\nneuron_fraction = 1.5\n",
+            "[peft]\nmethod = \"adapters\"\n",
+        ] {
+            let doc = parse_toml(bad).unwrap();
+            assert!(RunCfg::from_toml(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn defaults_are_valid() {
+        RunCfg::default().validate().unwrap();
+    }
+
+    #[test]
+    fn proj_shapes_match_python() {
+        let m = presets::model("nano").unwrap();
+        let shapes = m.proj_shapes();
+        assert_eq!(shapes.len(), 12);
+        assert_eq!(shapes[0], ("l0.wq".into(), 64, 64));
+        assert_eq!(shapes[4], ("l0.w1".into(), 256, 64));
+        assert_eq!(m.backbone_params(), 115_008);
+    }
+}

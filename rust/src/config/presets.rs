@@ -1,0 +1,69 @@
+//! Model-size presets. These MUST mirror `python/compile/model.py::SIZES` —
+//! the artifact manifest carries the authoritative copy and
+//! `runtime::artifacts` asserts agreement when loading, so drift fails fast.
+
+use super::ModelCfg;
+
+/// Look up a preset by name.
+pub fn model(name: &str) -> Option<ModelCfg> {
+    let m = |name: &str, vocab, d_model, n_layers, n_heads, d_ff, seq, batch, causal, n_classes| ModelCfg {
+        name: name.to_string(),
+        vocab,
+        d_model,
+        n_layers,
+        n_heads,
+        d_ff,
+        seq,
+        batch,
+        causal,
+        n_classes,
+    };
+    Some(match name {
+        "nano" => m("nano", 256, 64, 2, 4, 256, 32, 16, true, 0),
+        "micro" => m("micro", 512, 128, 4, 4, 512, 48, 8, true, 0),
+        "small" => m("small", 1024, 256, 6, 8, 1024, 64, 8, true, 0),
+        "base" => m("base", 2048, 512, 8, 8, 2048, 64, 4, true, 0),
+        "large" => m("large", 4096, 768, 12, 12, 3072, 64, 2, true, 0),
+        "enc-micro" => m("enc-micro", 512, 128, 4, 4, 512, 48, 16, false, 5),
+        _ => return None,
+    })
+}
+
+/// The sizes Figure 5 sweeps (its x-axis: RoBERTa-base → LLaMA3-8B analog).
+pub fn fig5_sizes() -> Vec<&'static str> {
+    vec!["nano", "micro", "small", "base"]
+}
+
+/// All decoder sizes with artifacts in the default set.
+pub fn decoder_sizes() -> Vec<&'static str> {
+    vec!["nano", "micro", "small", "base"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_exist() {
+        for s in ["nano", "micro", "small", "base", "large", "enc-micro"] {
+            let m = model(s).unwrap();
+            assert_eq!(m.name, s);
+            assert_eq!(m.d_model % m.n_heads, 0);
+        }
+        assert!(model("huge").is_none());
+    }
+
+    #[test]
+    fn encoder_flags() {
+        let e = model("enc-micro").unwrap();
+        assert!(!e.causal);
+        assert_eq!(e.n_classes, 5);
+    }
+
+    #[test]
+    fn backbone_counts_are_increasing() {
+        let sizes = ["nano", "micro", "small", "base", "large"];
+        let counts: Vec<u64> = sizes.iter().map(|s| model(s).unwrap().backbone_params()).collect();
+        assert!(counts.windows(2).all(|w| w[0] < w[1]), "{counts:?}");
+    }
+}

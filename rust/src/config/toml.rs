@@ -1,0 +1,215 @@
+//! TOML-subset parser (see module docs in `config`): sections, scalar values,
+//! flat arrays, comments. Deliberately strict — anything outside the subset
+//! is an error, never a silent misread.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a document into section → key → value. Keys before any `[section]`
+/// land in the "" section.
+pub fn parse_toml(
+    src: &str,
+) -> Result<BTreeMap<String, BTreeMap<String, TomlValue>>, String> {
+    let mut doc: BTreeMap<String, BTreeMap<String, TomlValue>> = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                .trim();
+            if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || "._-".contains(c)) {
+                return Err(format!("line {}: bad section name {name:?}", lineno + 1));
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() || !key.chars().all(|c| c.is_alphanumeric() || "_-".contains(c)) {
+            return Err(format!("line {}: bad key {key:?}", lineno + 1));
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        doc.entry(section.clone())
+            .or_default()
+            .insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote (escapes unsupported in subset)".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items: Result<Vec<TomlValue>, String> = split_top_level(inner)
+            .into_iter()
+            .map(|p| parse_value(p.trim()))
+            .collect();
+        return Ok(TomlValue::Array(items?));
+    }
+    // numbers: int if no '.', 'e', 'E'
+    let is_float = s.contains('.') || s.contains('e') || s.contains('E');
+    if is_float {
+        s.parse::<f64>()
+            .map(TomlValue::Float)
+            .map_err(|_| format!("bad float {s:?}"))
+    } else {
+        s.parse::<i64>()
+            .map(TomlValue::Int)
+            .map_err(|_| format!("bad value {s:?}"))
+    }
+}
+
+/// Split an array body on commas (strings may contain commas).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_and_scalars() {
+        let doc = parse_toml(
+            "top = 1\n[a]\nx = \"hi\" # comment\ny = 2.5\nz = true\n[a.b]\nw = -3\n",
+        )
+        .unwrap();
+        assert_eq!(doc[""]["top"], TomlValue::Int(1));
+        assert_eq!(doc["a"]["x"], TomlValue::Str("hi".into()));
+        assert_eq!(doc["a"]["y"], TomlValue::Float(2.5));
+        assert_eq!(doc["a"]["z"], TomlValue::Bool(true));
+        assert_eq!(doc["a.b"]["w"], TomlValue::Int(-3));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = parse_toml("[s]\nlrs = [0.001, 0.003, 0.01]\nnames = [\"a\", \"b,c\"]\n").unwrap();
+        let lrs = doc["s"]["lrs"].as_array().unwrap();
+        assert_eq!(lrs.len(), 3);
+        assert_eq!(lrs[1].as_f64(), Some(0.003));
+        let names = doc["s"]["names"].as_array().unwrap();
+        assert_eq!(names[1].as_str(), Some("b,c"));
+    }
+
+    #[test]
+    fn comments_in_strings_kept() {
+        let doc = parse_toml("[s]\nx = \"a#b\"\n").unwrap();
+        assert_eq!(doc["s"]["x"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        assert!(parse_toml("[unclosed\n").is_err());
+        assert!(parse_toml("[s]\nnovalue\n").is_err());
+        assert!(parse_toml("[s]\nx = \n").is_err());
+        assert!(parse_toml("[s]\nx = 1.2.3\n").is_err());
+        assert!(parse_toml("[s]\nbad key = 1\n").is_err());
+    }
+
+    #[test]
+    fn scientific_notation() {
+        let doc = parse_toml("[t]\nlr = 3e-3\n").unwrap();
+        assert_eq!(doc["t"]["lr"].as_f64(), Some(3e-3));
+    }
+}

@@ -1,0 +1,212 @@
+//! Shared experiment machinery: the [`Coordinator`] (engine + manifest +
+//! cached backbones) and the fine-tune→merge→eval pipeline every driver
+//! composes.
+
+use crate::config::presets;
+use crate::data::tasks::{Suite, Task};
+use crate::eval::{eval_decoder, eval_encoder, merged_params};
+use crate::model::init::init_params;
+use crate::peft::{MethodKind, Strategy};
+use crate::runtime::{Engine, Manifest, ValueStore};
+use crate::train::{
+    build_session, checkpoint, finetune_steps, loop_::finetune_steps_cls, pretrain,
+    setup::extract_deltas, Schedule,
+};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+
+/// Global run options (reduced-config knobs; EXPERIMENTS.md records the
+/// values used for the recorded run).
+#[derive(Debug, Clone)]
+pub struct RunOpts {
+    /// Pretraining steps per size (cached; only paid once).
+    pub pretrain_steps: usize,
+    /// Fine-tuning steps per run.
+    pub finetune_steps: usize,
+    /// Test examples per task eval.
+    pub eval_examples: usize,
+    /// Base seed for the whole experiment.
+    pub seed: u64,
+    /// Where checkpoints/logs go.
+    pub out_dir: PathBuf,
+    /// Fine-tuning LR (the Tables 5–7 sweep refines this; drivers use the
+    /// sweep winner).
+    pub lr: f64,
+    pub warmup_ratio: f64,
+}
+
+impl Default for RunOpts {
+    fn default() -> RunOpts {
+        RunOpts {
+            pretrain_steps: 16_000,
+            finetune_steps: 1_500,
+            eval_examples: 200,
+            seed: 42,
+            out_dir: PathBuf::from("runs"),
+            lr: 8e-3,
+            warmup_ratio: 0.06,
+        }
+    }
+}
+
+impl RunOpts {
+    /// Tiny configuration for smoke tests / CI.
+    pub fn smoke() -> RunOpts {
+        RunOpts {
+            pretrain_steps: 300,
+            finetune_steps: 60,
+            eval_examples: 32,
+            ..Default::default()
+        }
+    }
+}
+
+pub struct Coordinator {
+    pub engine: Engine,
+    pub manifest: Manifest,
+    pub opts: RunOpts,
+}
+
+/// One fine-tune→merge→eval result.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub task: String,
+    pub method: MethodKind,
+    pub metric: f64,
+    pub zero_shot: f64,
+    pub final_loss: f32,
+    pub train_secs: f64,
+    pub samples_per_sec: f64,
+    pub trainable_params: usize,
+    pub params_percent: f64,
+}
+
+impl Coordinator {
+    pub fn new(artifacts_dir: &str, opts: RunOpts) -> Result<Coordinator> {
+        Ok(Coordinator {
+            engine: Engine::shared(),
+            manifest: Manifest::load(artifacts_dir)?,
+            opts,
+        })
+    }
+
+    /// Pretrained backbone for a size — loads the cached checkpoint under
+    /// `runs/backbones/<size>-s<steps>` or pretrains and caches it.
+    pub fn backbone(&self, size: &str) -> Result<ValueStore> {
+        let steps = self.opts.pretrain_steps;
+        let dir = self
+            .opts
+            .out_dir
+            .join("backbones")
+            .join(format!("{size}-s{steps}-seed{}", self.opts.seed));
+        if dir.join("meta.json").exists() {
+            return checkpoint::load_params(&dir);
+        }
+        let cfg = presets::model(size).ok_or_else(|| anyhow!("unknown size {size}"))?;
+        let is_enc = cfg.n_classes > 0;
+        eprintln!("[coordinator] pretraining {size} backbone ({steps} steps)...");
+        let mut rng = Rng::new(self.opts.seed);
+        let init = init_params(&cfg, &mut rng);
+        let meta = self.manifest.get(&format!("{size}_pretrain"))?;
+        let out = pretrain(
+            &self.engine,
+            meta,
+            init,
+            steps,
+            Schedule::linear(6e-3, 0.03, steps),
+            self.opts.seed,
+            None,
+            is_enc, // encoder pretrains MLM-style
+        )?;
+        eprintln!(
+            "[coordinator] {size}: pretrain loss {:.3} -> {:.3} ({:.0} steps/s)",
+            out.losses.first().copied().unwrap_or(f32::NAN),
+            out.losses.last().copied().unwrap_or(f32::NAN),
+            steps as f64 / out.secs
+        );
+        checkpoint::save_params(&dir, &out.params, &format!("{size} backbone"))?;
+        Ok(out.params)
+    }
+
+    /// Zero biases for a size (eval artifact input).
+    pub fn zero_biases(&self, size: &str) -> ValueStore {
+        let cfg = presets::model(size).unwrap();
+        let mut b = ValueStore::new();
+        for (name, d_out, _) in cfg.proj_shapes() {
+            b.insert_f32(format!("biases.{name}"), &[d_out], vec![0.0; d_out]);
+        }
+        b
+    }
+
+    /// The full pipeline for one (size, method, task): select → fine-tune →
+    /// merge → eval on the held-out test stream.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_one(
+        &self,
+        size: &str,
+        backbone: &ValueStore,
+        method: MethodKind,
+        strategy: Strategy,
+        neuron_fraction: f64,
+        task: &Task,
+        steps_override: Option<usize>,
+        lr_override: Option<f64>,
+    ) -> Result<RunResult> {
+        let cfg = presets::model(size).unwrap();
+        let is_enc = task.suite == Suite::Glue;
+        let artifact = format!("{size}_{}", method.artifact_fragment());
+        let meta = self.manifest.get(&artifact)?;
+        let mut rng = Rng::new(self.opts.seed ^ ((task.id as u64) << 4));
+        let mut setup = build_session(
+            &self.engine,
+            meta,
+            backbone,
+            method,
+            strategy,
+            neuron_fraction,
+            None,
+            &mut rng,
+        )?;
+        let steps = steps_override.unwrap_or(self.opts.finetune_steps);
+        let lr = lr_override.unwrap_or(self.opts.lr);
+        let sched = Schedule::linear(lr, self.opts.warmup_ratio, steps);
+        let seed = self.opts.seed ^ 0xF00D ^ task.id as u64;
+        let ft = if is_enc {
+            finetune_steps_cls(&self.engine, &mut setup.session, task, steps, sched, seed)?
+        } else {
+            finetune_steps(&self.engine, &mut setup.session, task, steps, sched, seed, None)?
+        };
+        let deltas = if matches!(method, MethodKind::NeuroAda { .. }) {
+            extract_deltas(&setup.session, &setup.selections)?
+        } else {
+            vec![]
+        };
+        let (merged, biases) = merged_params(&setup.session, method, &deltas)?;
+        let zero_b = self.zero_biases(size);
+        let n = self.opts.eval_examples;
+        let (z, m) = if is_enc {
+            (
+                eval_encoder(&self.engine, &self.manifest, size, backbone, &zero_b, task, n, self.opts.seed)?,
+                eval_encoder(&self.engine, &self.manifest, size, &merged, &biases, task, n, self.opts.seed)?,
+            )
+        } else {
+            (
+                eval_decoder(&self.engine, &self.manifest, size, backbone, &zero_b, task, n, self.opts.seed)?,
+                eval_decoder(&self.engine, &self.manifest, size, &merged, &biases, task, n, self.opts.seed)?,
+            )
+        };
+        let m_obj = crate::peft::Method::new(method, cfg.projections(), cfg.backbone_params());
+        Ok(RunResult {
+            task: task.name.to_string(),
+            method,
+            metric: m,
+            zero_shot: z,
+            final_loss: *ft.losses.last().unwrap_or(&f32::NAN),
+            train_secs: ft.secs,
+            samples_per_sec: ft.samples_per_sec,
+            trainable_params: m_obj.trainable_params() as usize,
+            params_percent: m_obj.params_percent(),
+        })
+    }
+}

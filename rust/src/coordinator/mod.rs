@@ -1,0 +1,13 @@
+//! Experiment coordinator: a worker pool plus one driver per paper
+//! table/figure (DESIGN.md §5 maps each to its driver).
+//!
+//! The coordinator owns the experiment lifecycle: backbone caching (pretrain
+//! once per model size, reuse everywhere), fine-tune → merge → eval runs,
+//! and rendering the paper-shaped tables. `cargo bench --bench paper_tables`
+//! and the `neuroada repro` CLI subcommand both land here.
+
+pub mod common;
+pub mod experiments;
+pub mod pool;
+
+

@@ -1,0 +1,95 @@
+//! Minimal worker pool (std threads + channels; tokio unavailable offline).
+//!
+//! Jobs are boxed closures returning a boxed result; `scatter` preserves
+//! input order in the output. On this 1-core testbed the default pool size
+//! is 1 (PJRT executions are already multi-threaded internally and the
+//! experiments are compute-bound), but sweeps on bigger hosts scale out.
+
+use std::sync::mpsc;
+use std::thread;
+
+type Job = Box<dyn FnOnce() -> Box<dyn std::any::Any + Send> + Send>;
+
+pub struct Pool {
+    workers: usize,
+}
+
+impl Pool {
+    pub fn new(workers: usize) -> Pool {
+        Pool { workers: workers.max(1) }
+    }
+
+    /// Sized to the machine (minus one coordinating core).
+    pub fn default_size() -> usize {
+        thread::available_parallelism()
+            .map(|n| n.get().saturating_sub(1).max(1))
+            .unwrap_or(1)
+    }
+
+    /// Run all jobs, preserving order of results.
+    pub fn scatter<T: Send + 'static>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() -> T + Send>>,
+    ) -> Vec<T> {
+        if self.workers == 1 || jobs.len() <= 1 {
+            return jobs.into_iter().map(|j| j()).collect();
+        }
+        let n = jobs.len();
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        let jobs: Vec<(usize, Job)> = jobs
+            .into_iter()
+            .enumerate()
+            .map(|(i, j)| {
+                let job: Job = Box::new(move || Box::new(j()) as Box<dyn std::any::Any + Send>);
+                (i, job)
+            })
+            .collect();
+        let queue = std::sync::Arc::new(std::sync::Mutex::new(jobs));
+        let mut handles = Vec::new();
+        for _ in 0..self.workers.min(n) {
+            let queue = queue.clone();
+            let tx = tx.clone();
+            handles.push(thread::spawn(move || loop {
+                let next = queue.lock().unwrap().pop();
+                let Some((i, job)) = next else { break };
+                let out = job();
+                let out = *out.downcast::<T>().expect("job result type");
+                if tx.send((i, out)).is_err() {
+                    break;
+                }
+            }));
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            slots[i] = Some(v);
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        slots.into_iter().map(|s| s.expect("missing job result")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scatter_preserves_order() {
+        let pool = Pool::new(4);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..16usize)
+            .map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>)
+            .collect();
+        let out = pool.scatter(jobs);
+        assert_eq!(out, (0..16usize).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_is_sequential() {
+        let pool = Pool::new(1);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..4usize).map(|i| Box::new(move || i) as _).collect();
+        assert_eq!(pool.scatter(jobs), vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,270 @@
+//! Synthetic pretraining corpus: a Zipf–Markov "language" with planted
+//! structure the downstream tasks later query.
+//!
+//! Properties the pretrained backbone must acquire (so that the fine-tuning
+//! comparison is meaningful, DESIGN.md §3):
+//!  * token-frequency skew (Zipf) — realistic embedding norms, which is what
+//!    magnitude selection keys on;
+//!  * short-range syntax (order-1 Markov over word categories) — gives the
+//!    cola-like grammaticality task a ground truth;
+//!  * knowledge pairs `w → partner(w)` occasionally stated as "w QRY p" —
+//!    the obqa-like task asks for the partner at fine-tuning time;
+//!  * numeracy statements `a + b = c` (mod 10) — arithmetic tasks build on
+//!    digit embeddings that already mean something.
+
+use super::tokenizer as tk;
+use crate::util::rng::Rng;
+
+/// Corpus generator with a cached Zipf CDF.
+pub struct Corpus {
+    vocab: usize,
+    cdf: Vec<f64>,
+}
+
+/// Deterministic knowledge partner for a word id (an involution so the
+/// relation is symmetric and easily learnable).
+pub fn partner(w: usize, n_words: usize) -> usize {
+    // pair 2i ↔ 2i+1; the last odd word (if any) pairs with itself
+    let p = if w % 2 == 0 { w + 1 } else { w - 1 };
+    if p >= n_words {
+        w
+    } else {
+        p
+    }
+}
+
+/// Markov grammar over word categories: category c must be followed by
+/// (c + 1) % 4 or (c + 2) % 4. The cola-like task flags violations.
+pub fn grammatical_next(cat: usize, coin: bool) -> usize {
+    if coin {
+        (cat + 1) % 4
+    } else {
+        (cat + 2) % 4
+    }
+}
+
+impl Corpus {
+    pub fn new(vocab: usize) -> Corpus {
+        let n = tk::n_words(vocab);
+        let s = 1.1; // Zipf exponent
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for i in 1..=n {
+            acc += 1.0 / (i as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in cdf.iter_mut() {
+            *v /= total;
+        }
+        Corpus { vocab, cdf }
+    }
+
+    /// Zipf-sample a word id (O(log n)).
+    pub fn sample_word(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+
+    /// One pretraining sequence of exactly `len` tokens.
+    pub fn sequence(&self, rng: &mut Rng, len: usize) -> Vec<i32> {
+        let n_words = tk::n_words(self.vocab);
+        let mut out = Vec::with_capacity(len);
+        out.push(tk::BOS);
+        let mut cat = rng.below(4);
+        while out.len() < len {
+            match rng.below(10) {
+                // 15%: knowledge statement  w QRY partner(w)
+                0 | 9 if rng.f64() < 0.75 => {
+                    let w = self.sample_word(rng);
+                    out.push(tk::word(w, self.vocab));
+                    out.push(tk::QRY);
+                    out.push(tk::word(partner(w, n_words), self.vocab));
+                }
+                // 10%: option-token statement  w SEP OPT_{category(w)} —
+                // gives the multiple-choice answer tokens meaningful
+                // embeddings (they never occur otherwise; downstream tasks
+                // answer with them).
+                2 | 7 => {
+                    let w = self.sample_word(rng);
+                    let wt = tk::word(w, self.vocab);
+                    out.push(wt);
+                    out.push(tk::SEP);
+                    out.push(tk::opt(tk::word_category(wt)));
+                }
+                // 20%: arithmetic fact  a OP b = c   (mod 10)
+                1 | 4 => {
+                    let a = rng.below(10);
+                    let b = rng.below(10);
+                    let (op, c) = match rng.below(3) {
+                        0 => (tk::PLUS, (a + b) % 10),
+                        1 => (tk::MINUS, (10 + a - b) % 10),
+                        _ => (tk::TIMES, (a * b) % 10),
+                    };
+                    out.extend_from_slice(&[tk::digit(a), op, tk::digit(b), tk::EQ, tk::digit(c)]);
+                }
+                // 80%: grammatical word following the category Markov chain
+                _ => {
+                    cat = grammatical_next(cat, rng.f64() < 0.5);
+                    // rejection-sample a word in the target category
+                    let mut w = self.sample_word(rng);
+                    while tk::word_category(tk::word(w, self.vocab)) != cat {
+                        w = self.sample_word(rng);
+                    }
+                    out.push(tk::word(w, self.vocab));
+                }
+            }
+        }
+        out.truncate(len);
+        out
+    }
+
+    /// A pretraining LM batch: [b, seq] tokens with next-token targets over
+    /// every position. Deterministic continuations (the answer after EQ /
+    /// QRY / SEP) are upweighted ×4 in the loss mask — without this, the
+    /// Zipf-word cross-entropy (irreducible) dominates the gradient and the
+    /// planted structure is never learned at nano/micro scale.
+    pub fn lm_batch(&self, rng: &mut Rng, b: usize, seq: usize) -> super::LmBatch {
+        let mut tokens = Vec::with_capacity(b * seq);
+        let mut targets = Vec::with_capacity(b * seq);
+        let mut loss_mask = Vec::with_capacity(b * seq);
+        for _ in 0..b {
+            let s = self.sequence(rng, seq + 1);
+            tokens.extend_from_slice(&s[..seq]);
+            targets.extend_from_slice(&s[1..seq + 1]);
+            for t in 0..seq {
+                let w = if s[t] == tk::EQ || s[t] == tk::QRY || s[t] == tk::SEP {
+                    4.0
+                } else {
+                    1.0
+                };
+                loss_mask.push(w);
+            }
+        }
+        super::LmBatch {
+            tokens,
+            targets,
+            loss_mask,
+            pad_mask: vec![1.0; b * seq],
+            b,
+            seq,
+        }
+    }
+
+    /// An MLM batch for encoder pretraining: 15% of word positions replaced
+    /// by MASK; loss only on masked positions (targets hold the original).
+    pub fn mlm_batch(&self, rng: &mut Rng, b: usize, seq: usize) -> super::LmBatch {
+        let mut lm = self.lm_batch(rng, b, seq);
+        let mut loss_mask = vec![0.0f32; b * seq];
+        let mut targets = vec![tk::PAD; b * seq];
+        for i in 0..b * seq {
+            targets[i] = lm.tokens[i];
+            if lm.tokens[i] >= tk::WORD_BASE && rng.f64() < 0.15 {
+                lm.tokens[i] = tk::MASK;
+                loss_mask[i] = 1.0;
+            }
+        }
+        lm.targets = targets;
+        lm.loss_mask = loss_mask;
+        lm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequence_has_planted_structure() {
+        let c = Corpus::new(256);
+        let mut rng = Rng::new(0);
+        let mut has_qry = false;
+        let mut has_eq = false;
+        for _ in 0..20 {
+            let s = c.sequence(&mut rng, 64);
+            assert_eq!(s.len(), 64);
+            has_qry |= s.contains(&tk::QRY);
+            has_eq |= s.contains(&tk::EQ);
+        }
+        assert!(has_qry && has_eq);
+    }
+
+    #[test]
+    fn arithmetic_facts_are_correct() {
+        let c = Corpus::new(256);
+        let mut rng = Rng::new(1);
+        let mut checked = 0;
+        for _ in 0..50 {
+            let s = c.sequence(&mut rng, 64);
+            for w in s.windows(5) {
+                if let (Some(a), Some(b), Some(r)) =
+                    (tk::as_digit(w[0]), tk::as_digit(w[2]), tk::as_digit(w[4]))
+                {
+                    if w[3] == tk::EQ {
+                        let want = match w[1] {
+                            x if x == tk::PLUS => (a + b) % 10,
+                            x if x == tk::MINUS => (10 + a - b) % 10,
+                            x if x == tk::TIMES => (a * b) % 10,
+                            _ => continue,
+                        };
+                        assert_eq!(r, want, "{w:?}");
+                        checked += 1;
+                    }
+                }
+            }
+        }
+        assert!(checked > 5, "no arithmetic facts sampled");
+    }
+
+    #[test]
+    fn zipf_skew() {
+        let c = Corpus::new(256);
+        let mut rng = Rng::new(2);
+        let mut count0 = 0;
+        let mut count_tail = 0;
+        for _ in 0..5000 {
+            let w = c.sample_word(&mut rng);
+            if w == 0 {
+                count0 += 1;
+            }
+            if w > 100 {
+                count_tail += 1;
+            }
+        }
+        assert!(count0 > 200, "head word undersampled: {count0}");
+        assert!(count_tail > 50, "tail never sampled: {count_tail}");
+    }
+
+    #[test]
+    fn partner_is_involution() {
+        for w in 0..50 {
+            assert_eq!(partner(partner(w, 50), 50), w);
+        }
+    }
+
+    #[test]
+    fn mlm_masks_words_only() {
+        let c = Corpus::new(256);
+        let mut rng = Rng::new(3);
+        let b = c.mlm_batch(&mut rng, 4, 32);
+        let n_masked = b.loss_mask.iter().filter(|&&m| m == 1.0).count();
+        assert!(n_masked > 0);
+        for i in 0..b.tokens.len() {
+            if b.loss_mask[i] == 1.0 {
+                assert_eq!(b.tokens[i], tk::MASK);
+                assert!(b.targets[i] >= tk::WORD_BASE);
+            }
+        }
+    }
+
+    #[test]
+    fn batches_are_shaped() {
+        let c = Corpus::new(256);
+        let mut rng = Rng::new(4);
+        let b = c.lm_batch(&mut rng, 3, 16);
+        assert_eq!(b.tokens.len(), 48);
+        assert_eq!(b.targets.len(), 48);
+        // next-token alignment
+        assert_eq!(b.tokens[1], b.targets[0]);
+    }
+}

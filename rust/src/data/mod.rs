@@ -1,0 +1,206 @@
+//! Synthetic data substrate.
+//!
+//! The paper fine-tunes on COMMONSENSE170K (8 tasks), MATH10K (7 tasks) and
+//! GLUE (8 tasks). Those datasets are external; per DESIGN.md §3 we build the
+//! closest synthetic equivalents that exercise the same code paths: each task
+//! is a *rule over token sequences* that (a) is never seen during the
+//! synthetic pretraining, so fine-tuning is necessary, and (b) has tunable
+//! circuit complexity, so the budget sweeps (Figures 4/6/7) have room to
+//! differentiate.
+//!
+//! * [`tokenizer`] — fixed vocab layout (special / option / digit / word).
+//! * [`corpus`]    — Zipf–Markov pretraining "language" with planted
+//!   knowledge pairs (the obqa-like task queries them later).
+//! * [`tasks`]     — the 23 downstream generators + registry.
+
+pub mod corpus;
+pub mod tasks;
+pub mod tokenizer;
+
+use crate::util::rng::Rng;
+
+/// Data split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+}
+
+impl Split {
+    /// Seed offset keeping splits disjoint under a shared task seed.
+    pub fn salt(self) -> u64 {
+        match self {
+            Split::Train => 0x11,
+            Split::Val => 0x22,
+            Split::Test => 0x33,
+        }
+    }
+}
+
+/// One task example. For decoder (LM) tasks the model must emit `answer_tok`
+/// right after `prompt`; for encoder tasks `label` is the class (and `score`
+/// the raw regression target for Pearson on the stsb-like task).
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub prompt: Vec<i32>,
+    pub answer_tok: i32,
+    /// Index of the correct option in `options` (multiple choice) or the
+    /// class id (classification).
+    pub label: usize,
+    /// Candidate answer tokens for multiple-choice scoring.
+    pub options: Vec<i32>,
+    /// Raw regression score (stsb-like task only).
+    pub score: f32,
+}
+
+/// A batch shaped for the decoder train-step artifacts.
+#[derive(Debug, Clone)]
+pub struct LmBatch {
+    pub tokens: Vec<i32>,    // [b, seq]
+    pub targets: Vec<i32>,   // [b, seq]
+    pub loss_mask: Vec<f32>, // [b, seq] — 1 only where the answer is predicted
+    pub pad_mask: Vec<f32>,  // [b, seq]
+    pub b: usize,
+    pub seq: usize,
+}
+
+/// A batch shaped for the encoder train-step artifacts.
+#[derive(Debug, Clone)]
+pub struct ClsBatch {
+    pub tokens: Vec<i32>,   // [b, seq]
+    pub labels: Vec<i32>,   // [b]
+    pub pad_mask: Vec<f32>, // [b, seq]
+    pub b: usize,
+    pub seq: usize,
+}
+
+/// An eval batch for the decoder eval artifact (answer withheld).
+#[derive(Debug, Clone)]
+pub struct EvalBatch {
+    pub tokens: Vec<i32>,   // [b, seq]
+    pub pad_mask: Vec<f32>, // [b, seq]
+    pub last_pos: Vec<i32>, // [b] — index of the final prompt token
+    pub examples: Vec<Example>,
+    pub b: usize,
+    pub seq: usize,
+}
+
+/// Build an LM fine-tuning batch: prompt + answer token, loss only on the
+/// answer prediction (the Hu et al. protocol the paper follows).
+pub fn lm_batch(examples: &[Example], seq: usize) -> LmBatch {
+    let b = examples.len();
+    let mut tokens = vec![tokenizer::PAD; b * seq];
+    let mut targets = vec![tokenizer::PAD; b * seq];
+    let mut loss_mask = vec![0.0f32; b * seq];
+    let mut pad_mask = vec![0.0f32; b * seq];
+    for (i, ex) in examples.iter().enumerate() {
+        let plen = ex.prompt.len().min(seq - 1);
+        let row = &mut tokens[i * seq..(i + 1) * seq];
+        row[..plen].copy_from_slice(&ex.prompt[..plen]);
+        row[plen] = ex.answer_tok;
+        for t in 0..=plen {
+            pad_mask[i * seq + t] = 1.0;
+        }
+        // next-token targets: target[t] = token[t+1]
+        for t in 0..plen {
+            targets[i * seq + t] = row[t + 1];
+        }
+        loss_mask[i * seq + plen - 1] = 1.0; // predict the answer
+    }
+    LmBatch { tokens, targets, loss_mask, pad_mask, b, seq }
+}
+
+/// Build an eval batch (prompt only).
+pub fn eval_batch(examples: &[Example], seq: usize) -> EvalBatch {
+    let b = examples.len();
+    let mut tokens = vec![tokenizer::PAD; b * seq];
+    let mut pad_mask = vec![0.0f32; b * seq];
+    let mut last_pos = vec![0i32; b];
+    for (i, ex) in examples.iter().enumerate() {
+        let plen = ex.prompt.len().min(seq);
+        tokens[i * seq..i * seq + plen].copy_from_slice(&ex.prompt[..plen]);
+        for t in 0..plen {
+            pad_mask[i * seq + t] = 1.0;
+        }
+        last_pos[i] = (plen - 1) as i32;
+    }
+    EvalBatch { tokens, pad_mask, last_pos, examples: examples.to_vec(), b, seq }
+}
+
+/// Build an encoder classification batch.
+pub fn cls_batch(examples: &[Example], seq: usize) -> ClsBatch {
+    let b = examples.len();
+    let mut tokens = vec![tokenizer::PAD; b * seq];
+    let mut pad_mask = vec![0.0f32; b * seq];
+    let mut labels = vec![0i32; b];
+    for (i, ex) in examples.iter().enumerate() {
+        let plen = ex.prompt.len().min(seq);
+        tokens[i * seq..i * seq + plen].copy_from_slice(&ex.prompt[..plen]);
+        for t in 0..plen {
+            pad_mask[i * seq + t] = 1.0;
+        }
+        labels[i] = ex.label as i32;
+    }
+    ClsBatch { tokens, labels, pad_mask, b, seq }
+}
+
+/// Deterministic example stream for a (task, split, seed) triple.
+pub fn example_stream(
+    task: &tasks::Task,
+    split: Split,
+    seed: u64,
+    vocab: usize,
+    max_prompt: usize,
+    n: usize,
+) -> Vec<Example> {
+    let mut rng = Rng::new(seed ^ split.salt() ^ ((task.id as u64) << 8));
+    (0..n).map(|_| (task.gen)(&mut rng, vocab, max_prompt)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ex(prompt: Vec<i32>, answer: i32) -> Example {
+        Example { prompt, answer_tok: answer, label: 0, options: vec![answer], score: 0.0 }
+    }
+
+    #[test]
+    fn lm_batch_layout() {
+        let b = lm_batch(&[ex(vec![10, 11, 12], 42)], 8);
+        assert_eq!(&b.tokens[..5], &[10, 11, 12, 42, 0]);
+        assert_eq!(&b.targets[..3], &[11, 12, 42]);
+        assert_eq!(b.loss_mask[2], 1.0); // answer predicted at position 2
+        assert_eq!(b.loss_mask.iter().sum::<f32>(), 1.0);
+        assert_eq!(b.pad_mask[..4], [1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(b.pad_mask[4], 0.0);
+    }
+
+    #[test]
+    fn eval_batch_layout() {
+        let e = eval_batch(&[ex(vec![10, 11, 12], 42)], 8);
+        assert_eq!(e.last_pos[0], 2);
+        assert_eq!(&e.tokens[..4], &[10, 11, 12, 0]); // answer withheld
+    }
+
+    #[test]
+    fn long_prompts_truncate() {
+        let p: Vec<i32> = (0..20).collect();
+        let b = lm_batch(&[ex(p, 9)], 8);
+        assert_eq!(b.tokens[7], 9); // answer at the last slot
+        assert_eq!(b.loss_mask[6], 1.0);
+    }
+
+    #[test]
+    fn splits_are_disjoint_streams() {
+        let reg = tasks::registry();
+        let t = &reg[0];
+        let a = example_stream(t, Split::Train, 1, 256, 24, 5);
+        let b = example_stream(t, Split::Test, 1, 256, 24, 5);
+        assert_ne!(
+            a.iter().map(|e| e.prompt.clone()).collect::<Vec<_>>(),
+            b.iter().map(|e| e.prompt.clone()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,712 @@
+//! The 23 downstream task generators (8 commonsense-like, 7 arithmetic-like,
+//! 8 GLUE-like), mirroring the paper's evaluation suites (Appendix A).
+//!
+//! Each task is a deterministic rule over token sequences. Rules are chosen
+//! so that (a) the pretraining corpus never states them — fine-tuning is
+//! necessary; (b) they lean on structure pretraining *did* plant (word
+//! categories, knowledge pairs, digit arithmetic) — fine-tuning is feasible
+//! at tiny parameter budgets; and (c) difficulty varies across the suite, so
+//! aggregate tables have spread, like the paper's.
+//!
+//! Decoder tasks answer with a single token (option letter or digit) right
+//! after a QRY marker — the multiple-choice protocol of Hu et al. (2023)
+//! that the paper follows, collapsed to one decode step (DESIGN.md §3
+//! documents this CoT→single-token substitution).
+
+use super::corpus::{grammatical_next, partner};
+use super::tokenizer as tk;
+use super::Example;
+use crate::util::rng::Rng;
+
+/// Task family (mirrors the paper's three suites).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Suite {
+    Commonsense,
+    Arithmetic,
+    Glue,
+}
+
+/// Evaluation metric (Table 4 uses MCC for cola and Pearson for stsb).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    Accuracy,
+    Matthews,
+    Pearson,
+}
+
+/// A registered task.
+pub struct Task {
+    pub id: usize,
+    pub name: &'static str,
+    pub suite: Suite,
+    pub metric: Metric,
+    /// Number of classes (encoder tasks) or options (decoder MC tasks).
+    pub n_classes: usize,
+    /// Generator: (rng, vocab, max_prompt_len) → Example.
+    pub gen: fn(&mut Rng, usize, usize) -> Example,
+}
+
+fn mc(prompt: Vec<i32>, correct: usize, n_opt: usize) -> Example {
+    Example {
+        prompt,
+        answer_tok: tk::opt(correct),
+        label: correct,
+        options: (0..n_opt).map(tk::opt).collect(),
+        score: 0.0,
+    }
+}
+
+fn digit_answer(prompt: Vec<i32>, d: usize) -> Example {
+    Example {
+        prompt,
+        answer_tok: tk::digit(d),
+        label: d,
+        options: (0..10).map(tk::digit).collect(),
+        score: 0.0,
+    }
+}
+
+fn rand_words(rng: &mut Rng, vocab: usize, n: usize) -> Vec<i32> {
+    (0..n).map(|_| tk::word(rng.below(tk::n_words(vocab)), vocab)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Commonsense-like suite (8 tasks)
+// ---------------------------------------------------------------------------
+
+/// cs-boolq: yes/no — does the probe word occur in the passage?
+fn gen_boolq(rng: &mut Rng, vocab: usize, max_len: usize) -> Example {
+    let n = (max_len - 4).min(14);
+    let passage = rand_words(rng, vocab, n);
+    let present = rng.f64() < 0.5;
+    let probe = if present {
+        passage[rng.below(n)]
+    } else {
+        // a word not in the passage
+        loop {
+            let w = tk::word(rng.below(tk::n_words(vocab)), vocab);
+            if !passage.contains(&w) {
+                break w;
+            }
+        }
+    };
+    let mut p = vec![tk::BOS];
+    p.extend(&passage);
+    p.extend([tk::SEP, probe, tk::QRY]);
+    mc(p, if present { 1 } else { 0 }, 2)
+}
+
+/// cs-piqa: which of two candidate words belongs to the passage's dominant
+/// category? ("physical plausibility" → category affinity)
+fn gen_piqa(rng: &mut Rng, vocab: usize, max_len: usize) -> Example {
+    let n = (max_len - 5).min(12);
+    let dom = rng.below(4);
+    let mut passage = Vec::with_capacity(n);
+    for i in 0..n {
+        // 70% dominant category, 30% noise
+        let cat = if rng.f64() < 0.7 { dom } else { rng.below(4) };
+        let w = word_in_category(rng, vocab, cat);
+        passage.push(w);
+        let _ = i;
+    }
+    let good = word_in_category(rng, vocab, dom);
+    let bad_cat = (dom + 1 + rng.below(3)) % 4;
+    let bad = word_in_category(rng, vocab, bad_cat);
+    let correct = rng.below(2);
+    let (o0, o1) = if correct == 0 { (good, bad) } else { (bad, good) };
+    let mut p = vec![tk::BOS];
+    p.extend(&passage);
+    p.extend([tk::SEP, o0, o1, tk::QRY]);
+    mc(p, correct, 2)
+}
+
+fn word_in_category(rng: &mut Rng, vocab: usize, cat: usize) -> i32 {
+    let n = tk::n_words(vocab);
+    loop {
+        let w = tk::word(rng.below(n), vocab);
+        if tk::word_category(w) == cat {
+            return w;
+        }
+    }
+}
+
+/// cs-siqa: 3-way social-relation analog — given markers X..Y, is X's
+/// category before, same, or after Y's in the cyclic grammar order?
+fn gen_siqa(rng: &mut Rng, vocab: usize, max_len: usize) -> Example {
+    let filler = rand_words(rng, vocab, (max_len - 6).min(8));
+    let x = tk::word(rng.below(tk::n_words(vocab)), vocab);
+    let y = tk::word(rng.below(tk::n_words(vocab)), vocab);
+    let (cx, cy) = (tk::word_category(x), tk::word_category(y));
+    let label = if cx == cy {
+        0
+    } else if (cx + 1) % 4 == cy || (cx + 2) % 4 == cy {
+        1 // grammatical successor
+    } else {
+        2
+    };
+    let mut p = vec![tk::BOS, x];
+    p.extend(&filler);
+    p.extend([y, tk::QRY]);
+    mc(p, label, 3)
+}
+
+/// cs-hellaswag: which option continues the grammatical category chain?
+fn gen_hellaswag(rng: &mut Rng, vocab: usize, max_len: usize) -> Example {
+    let n = (max_len - 6).min(10);
+    let mut cat = rng.below(4);
+    let mut passage = Vec::with_capacity(n);
+    for _ in 0..n {
+        cat = grammatical_next(cat, rng.f64() < 0.5);
+        passage.push(word_in_category(rng, vocab, cat));
+    }
+    let good_cat = grammatical_next(cat, rng.f64() < 0.5);
+    // a category that is NOT a grammatical successor: cat or cat+3
+    let bad_cat = if rng.f64() < 0.5 { cat } else { (cat + 3) % 4 };
+    let good = word_in_category(rng, vocab, good_cat);
+    let bad = word_in_category(rng, vocab, bad_cat);
+    let correct = rng.below(2);
+    let (o0, o1) = if correct == 0 { (good, bad) } else { (bad, good) };
+    let mut p = vec![tk::BOS];
+    p.extend(&passage);
+    p.extend([tk::SEP, o0, o1, tk::QRY]);
+    mc(p, correct, 2)
+}
+
+/// cs-winogrande: which of two candidates appeared EARLIER in the passage?
+/// (pronoun-resolution analog: recover positional binding)
+fn gen_winogrande(rng: &mut Rng, vocab: usize, max_len: usize) -> Example {
+    let n = (max_len - 5).min(12);
+    let mut passage = rand_words(rng, vocab, n);
+    // plant two distinct candidates at random distinct positions
+    let nw = tk::n_words(vocab);
+    let a = tk::word(rng.below(nw), vocab);
+    let b = loop {
+        let w = tk::word(rng.below(nw), vocab);
+        if w != a {
+            break w;
+        }
+    };
+    let pos = rng.sample_distinct(n, 2);
+    let (pa, pb) = (pos[0].min(pos[1]), pos[0].max(pos[1]));
+    passage[pa] = a;
+    passage[pb] = b;
+    // remove accidental duplicates of a/b elsewhere
+    for (i, w) in passage.iter_mut().enumerate() {
+        if (*w == a && i != pa) || (*w == b && i != pb) {
+            *w = tk::word(rng.below(nw), vocab);
+        }
+    }
+    let correct = rng.below(2); // which option slot holds the earlier word
+    let (o0, o1) = if correct == 0 { (a, b) } else { (b, a) };
+    let mut p = vec![tk::BOS];
+    p.extend(&passage);
+    p.extend([tk::SEP, o0, o1, tk::QRY]);
+    mc(p, correct, 2)
+}
+
+/// cs-arce (easy): 1-hop knowledge — partner(w) among 3 options.
+fn gen_arce(rng: &mut Rng, vocab: usize, max_len: usize) -> Example {
+    let nw = tk::n_words(vocab);
+    let w = rng.below(nw);
+    let good = tk::word(partner(w, nw), vocab);
+    let mut opts = vec![good];
+    while opts.len() < 3 {
+        let d = tk::word(rng.below(nw), vocab);
+        if !opts.contains(&d) && d != tk::word(w, vocab) {
+            opts.push(d);
+        }
+    }
+    rng.shuffle(&mut opts);
+    let correct = opts.iter().position(|&o| o == good).unwrap();
+    let filler = rand_words(rng, vocab, (max_len - 8).min(6));
+    let mut p = vec![tk::BOS];
+    p.extend(&filler);
+    p.extend([tk::SEP, tk::word(w, vocab), tk::QRY]);
+    p.extend(&opts);
+    p.push(tk::QRY);
+    mc(p, correct, 3)
+}
+
+/// cs-arcc (challenge): 2-hop — partner(partner(w) shifted by one category).
+fn gen_arcc(rng: &mut Rng, vocab: usize, max_len: usize) -> Example {
+    let nw = tk::n_words(vocab);
+    let w = rng.below(nw);
+    let hop1 = partner(w, nw);
+    let hop2 = partner((hop1 + 4) % nw, nw); // composed, unseen relation
+    let good = tk::word(hop2, vocab);
+    let mut opts = vec![good];
+    while opts.len() < 3 {
+        let d = tk::word(rng.below(nw), vocab);
+        if !opts.contains(&d) {
+            opts.push(d);
+        }
+    }
+    rng.shuffle(&mut opts);
+    let correct = opts.iter().position(|&o| o == good).unwrap();
+    let filler = rand_words(rng, vocab, (max_len - 8).min(6));
+    let mut p = vec![tk::BOS];
+    p.extend(&filler);
+    p.extend([tk::SEP, tk::word(w, vocab), tk::QRY]);
+    p.extend(&opts);
+    p.push(tk::QRY);
+    mc(p, correct, 3)
+}
+
+/// cs-obqa: direct knowledge probe — "w QRY ?" with 4 options (the relation
+/// pretraining planted, now evaluated zero-context).
+fn gen_obqa(rng: &mut Rng, vocab: usize, _max_len: usize) -> Example {
+    let nw = tk::n_words(vocab);
+    let w = rng.below(nw);
+    let good = tk::word(partner(w, nw), vocab);
+    let mut opts = vec![good];
+    while opts.len() < 4 {
+        let d = tk::word(rng.below(nw), vocab);
+        if !opts.contains(&d) && d != tk::word(w, vocab) {
+            opts.push(d);
+        }
+    }
+    rng.shuffle(&mut opts);
+    let correct = opts.iter().position(|&o| o == good).unwrap();
+    let mut p = vec![tk::BOS, tk::word(w, vocab), tk::QRY];
+    p.extend(&opts);
+    p.push(tk::QRY);
+    mc(p, correct, 4)
+}
+
+// ---------------------------------------------------------------------------
+// Arithmetic-like suite (7 tasks) — single-digit answers (CoT collapsed)
+// ---------------------------------------------------------------------------
+
+/// ar-addsub: a ± b (mod 10).
+fn gen_addsub(rng: &mut Rng, _vocab: usize, _max_len: usize) -> Example {
+    let (a, b) = (rng.below(10), rng.below(10));
+    let plus = rng.f64() < 0.5;
+    let ans = if plus { (a + b) % 10 } else { (10 + a - b) % 10 };
+    let op = if plus { tk::PLUS } else { tk::MINUS };
+    digit_answer(vec![tk::BOS, tk::digit(a), op, tk::digit(b), tk::EQ], ans)
+}
+
+/// ar-multiarith: (a + b) × c mod 10 — two chained ops.
+fn gen_multiarith(rng: &mut Rng, _vocab: usize, _max_len: usize) -> Example {
+    let (a, b, c) = (rng.below(10), rng.below(10), rng.below(10));
+    let ans = ((a + b) * c) % 10;
+    digit_answer(
+        vec![tk::BOS, tk::digit(a), tk::PLUS, tk::digit(b), tk::TIMES, tk::digit(c), tk::EQ],
+        ans,
+    )
+}
+
+/// ar-gsm8k: multi-step word problem analog — digits embedded in a word
+/// context; answer = sum of ALL digits present, mod 10.
+fn gen_gsm8k(rng: &mut Rng, vocab: usize, max_len: usize) -> Example {
+    let n_digits = 2 + rng.below(3);
+    let n_words_ = (max_len.saturating_sub(n_digits + 3)).min(8);
+    let mut p = vec![tk::BOS];
+    let mut sum = 0;
+    let mut slots: Vec<bool> = (0..n_digits + n_words_).map(|i| i < n_digits).collect();
+    rng.shuffle(&mut slots);
+    for is_digit in slots {
+        if is_digit {
+            let d = rng.below(10);
+            sum += d;
+            p.push(tk::digit(d));
+        } else {
+            p.push(tk::word(rng.below(tk::n_words(vocab)), vocab));
+        }
+    }
+    p.extend([tk::EQ]);
+    digit_answer(p, sum % 10)
+}
+
+/// ar-aqua: multiple-choice arithmetic — a + b among 5 option *letters*.
+fn gen_aqua(rng: &mut Rng, _vocab: usize, _max_len: usize) -> Example {
+    let (a, b) = (rng.below(10), rng.below(10));
+    let ans = (a + b) % 10;
+    let mut cands = vec![ans];
+    while cands.len() < 5 {
+        let d = rng.below(10);
+        if !cands.contains(&d) {
+            cands.push(d);
+        }
+    }
+    rng.shuffle(&mut cands);
+    let correct = cands.iter().position(|&d| d == ans).unwrap();
+    let mut p = vec![tk::BOS, tk::digit(a), tk::PLUS, tk::digit(b), tk::SEP];
+    for &c in &cands {
+        p.push(tk::digit(c));
+    }
+    p.push(tk::QRY);
+    mc(p, correct, 5)
+}
+
+/// ar-singleeq: solve  a + x = b  for x (mod 10).
+fn gen_singleeq(rng: &mut Rng, _vocab: usize, _max_len: usize) -> Example {
+    let (a, x) = (rng.below(10), rng.below(10));
+    let b = (a + x) % 10;
+    digit_answer(
+        vec![tk::BOS, tk::digit(a), tk::PLUS, tk::UNK_X, tk::EQ, tk::digit(b), tk::QRY],
+        x,
+    )
+}
+
+/// ar-svamp: addsub with adversarially permuted surface order — the operand
+/// roles are marked by position *after* a SEP, not by reading order.
+fn gen_svamp(rng: &mut Rng, vocab: usize, _max_len: usize) -> Example {
+    let (a, b) = (rng.below(10), rng.below(10));
+    let ans = (10 + a - b) % 10;
+    // distractor digit + shuffled presentation; true operands restated after SEP
+    let noise = rng.below(10);
+    let mut lead = vec![tk::digit(b), tk::digit(noise), tk::digit(a)];
+    rng.shuffle(&mut lead);
+    let mut p = vec![tk::BOS];
+    p.extend(&lead);
+    let w = tk::word(rng.below(tk::n_words(vocab)), vocab);
+    p.extend([w, tk::SEP, tk::digit(a), tk::MINUS, tk::digit(b), tk::EQ]);
+    digit_answer(p, ans)
+}
+
+/// ar-mawps: mixed single-op problems (+, −, ×) with one distractor digit.
+fn gen_mawps(rng: &mut Rng, _vocab: usize, _max_len: usize) -> Example {
+    let (a, b, noise) = (rng.below(10), rng.below(10), rng.below(10));
+    let (op, ans) = match rng.below(3) {
+        0 => (tk::PLUS, (a + b) % 10),
+        1 => (tk::MINUS, (10 + a - b) % 10),
+        _ => (tk::TIMES, (a * b) % 10),
+    };
+    digit_answer(
+        vec![tk::BOS, tk::digit(noise), tk::SEP, tk::digit(a), op, tk::digit(b), tk::EQ],
+        ans,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// GLUE-like suite (8 tasks) — encoder classification
+// ---------------------------------------------------------------------------
+
+fn two_segments(rng: &mut Rng, vocab: usize, n1: usize, n2: usize) -> (Vec<i32>, Vec<i32>) {
+    (rand_words(rng, vocab, n1), rand_words(rng, vocab, n2))
+}
+
+fn join_segments(s1: &[i32], s2: &[i32]) -> Vec<i32> {
+    let mut p = vec![tk::BOS];
+    p.extend(s1);
+    p.push(tk::SEP);
+    p.extend(s2);
+    p
+}
+
+fn cls(prompt: Vec<i32>, label: usize) -> Example {
+    Example { prompt, answer_tok: tk::opt(label), label, options: vec![], score: 0.0 }
+}
+
+/// glue-mnli: 3-class set relation — s2 ⊆ s1 (entail), disjoint
+/// (contradict), partial overlap (neutral).
+fn gen_mnli(rng: &mut Rng, vocab: usize, max_len: usize) -> Example {
+    let n1 = ((max_len - 3) * 2 / 3).min(12);
+    let n2 = ((max_len - 3) / 3).min(6).max(2);
+    let s1 = rand_words(rng, vocab, n1);
+    let label = rng.below(3);
+    let s2: Vec<i32> = match label {
+        0 => (0..n2).map(|_| s1[rng.below(n1)]).collect(), // subset → entail
+        1 => {
+            // half overlap → neutral
+            (0..n2)
+                .map(|i| {
+                    if i % 2 == 0 {
+                        s1[rng.below(n1)]
+                    } else {
+                        fresh_word(rng, vocab, &s1)
+                    }
+                })
+                .collect()
+        }
+        _ => (0..n2).map(|_| fresh_word(rng, vocab, &s1)).collect(), // disjoint
+    };
+    cls(join_segments(&s1, &s2), label)
+}
+
+fn fresh_word(rng: &mut Rng, vocab: usize, avoid: &[i32]) -> i32 {
+    loop {
+        let w = tk::word(rng.below(tk::n_words(vocab)), vocab);
+        if !avoid.contains(&w) {
+            return w;
+        }
+    }
+}
+
+/// glue-sst2: sentiment analog — majority word category in {0,1} wins.
+fn gen_sst2(rng: &mut Rng, vocab: usize, max_len: usize) -> Example {
+    let n = (max_len - 1).min(14) | 1; // odd → no ties
+    let pos = rng.below(n + 1);
+    let mut toks = Vec::with_capacity(n);
+    for i in 0..n {
+        let cat = if i < pos { 0 } else { 1 };
+        toks.push(word_in_category(rng, vocab, cat));
+    }
+    rng.shuffle(&mut toks);
+    let label = usize::from(pos * 2 < n); // majority category 1 → label 1
+    let mut p = vec![tk::BOS];
+    p.extend(&toks);
+    cls(p, label)
+}
+
+/// glue-mrpc: paraphrase — is s2 a permutation of s1?
+fn gen_mrpc(rng: &mut Rng, vocab: usize, max_len: usize) -> Example {
+    let n = ((max_len - 3) / 2).min(8).max(3);
+    let s1 = rand_words(rng, vocab, n);
+    let label = rng.below(2);
+    let mut s2 = s1.clone();
+    if label == 1 {
+        rng.shuffle(&mut s2); // permutation → paraphrase
+    } else {
+        let i = rng.below(n);
+        s2[i] = fresh_word(rng, vocab, &s1); // one substitution → not
+        rng.shuffle(&mut s2);
+    }
+    cls(join_segments(&s1, &s2), label)
+}
+
+/// glue-cola: grammaticality — does the sequence follow the category
+/// grammar planted in pretraining? (metric: Matthews corr)
+fn gen_cola(rng: &mut Rng, vocab: usize, max_len: usize) -> Example {
+    let n = (max_len - 1).min(12).max(4);
+    let grammatical = rng.f64() < 0.5;
+    let mut cat = rng.below(4);
+    let mut toks = vec![word_in_category(rng, vocab, cat)];
+    let viol_at = 1 + rng.below(n - 1);
+    for i in 1..n {
+        cat = if grammatical || i != viol_at {
+            grammatical_next(cat, rng.f64() < 0.5)
+        } else {
+            (cat + 3) % 4 // ungrammatical transition
+        };
+        toks.push(word_in_category(rng, vocab, cat));
+    }
+    let mut p = vec![tk::BOS];
+    p.extend(&toks);
+    cls(p, usize::from(grammatical))
+}
+
+/// glue-qnli: does s2 contain the answer to s1's knowledge query?
+fn gen_qnli(rng: &mut Rng, vocab: usize, max_len: usize) -> Example {
+    let nw = tk::n_words(vocab);
+    let w = rng.below(nw);
+    let ans = tk::word(partner(w, nw), vocab);
+    let n2 = (max_len - 5).min(8).max(3);
+    let mut s2 = rand_words(rng, vocab, n2);
+    let label = rng.below(2);
+    if label == 1 {
+        s2[rng.below(n2)] = ans;
+    } else {
+        for t in s2.iter_mut() {
+            if *t == ans {
+                *t = fresh_word(rng, vocab, &[ans]);
+            }
+        }
+    }
+    let s1 = vec![tk::word(w, vocab), tk::QRY];
+    cls(join_segments(&s1, &s2), label)
+}
+
+/// glue-qqp: duplicate questions — same multiset of words?
+fn gen_qqp(rng: &mut Rng, vocab: usize, max_len: usize) -> Example {
+    gen_mrpc(rng, vocab, max_len) // same rule family, independent stream
+}
+
+/// glue-rte: entailment — is s2 a subset of s1?
+fn gen_rte(rng: &mut Rng, vocab: usize, max_len: usize) -> Example {
+    let n1 = ((max_len - 3) * 2 / 3).min(10).max(4);
+    let n2 = 3;
+    let (s1, _) = two_segments(rng, vocab, n1, 0);
+    let label = rng.below(2);
+    let s2: Vec<i32> = if label == 1 {
+        (0..n2).map(|_| s1[rng.below(n1)]).collect()
+    } else {
+        let mut v: Vec<i32> = (0..n2 - 1).map(|_| s1[rng.below(n1)]).collect();
+        v.push(fresh_word(rng, vocab, &s1));
+        v
+    };
+    cls(join_segments(&s1, &s2), label)
+}
+
+/// glue-stsb: similarity regression — label = Jaccard-overlap bin (0..5),
+/// score kept for Pearson.
+fn gen_stsb(rng: &mut Rng, vocab: usize, max_len: usize) -> Example {
+    let n = ((max_len - 3) / 2).min(8).max(4);
+    let s1 = rand_words(rng, vocab, n);
+    let n_shared = rng.below(n + 1);
+    let mut s2: Vec<i32> = s1[..n_shared].to_vec();
+    while s2.len() < n {
+        s2.push(fresh_word(rng, vocab, &s1));
+    }
+    rng.shuffle(&mut s2);
+    let sim = n_shared as f32 / n as f32;
+    let bin = ((sim * 4.999) as usize).min(4);
+    let mut e = cls(join_segments(&s1, &s2), bin);
+    e.score = sim;
+    e
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// All 23 tasks, id-stable (ids feed the split seeding).
+pub fn registry() -> Vec<Task> {
+    use Metric::*;
+    use Suite::*;
+    let mut v = Vec::new();
+    let mut add = |name: &'static str, suite, metric, n_classes, gen: fn(&mut Rng, usize, usize) -> Example| {
+        let id = v.len();
+        v.push(Task { id, name, suite, metric, n_classes, gen });
+    };
+    // commonsense (Table 2 columns)
+    add("cs-boolq", Commonsense, Accuracy, 2, gen_boolq);
+    add("cs-piqa", Commonsense, Accuracy, 2, gen_piqa);
+    add("cs-siqa", Commonsense, Accuracy, 3, gen_siqa);
+    add("cs-hellaswag", Commonsense, Accuracy, 2, gen_hellaswag);
+    add("cs-winogrande", Commonsense, Accuracy, 2, gen_winogrande);
+    add("cs-arce", Commonsense, Accuracy, 3, gen_arce);
+    add("cs-arcc", Commonsense, Accuracy, 3, gen_arcc);
+    add("cs-obqa", Commonsense, Accuracy, 4, gen_obqa);
+    // arithmetic (Table 3 columns)
+    add("ar-multiarith", Arithmetic, Accuracy, 10, gen_multiarith);
+    add("ar-gsm8k", Arithmetic, Accuracy, 10, gen_gsm8k);
+    add("ar-addsub", Arithmetic, Accuracy, 10, gen_addsub);
+    add("ar-aqua", Arithmetic, Accuracy, 5, gen_aqua);
+    add("ar-singleeq", Arithmetic, Accuracy, 10, gen_singleeq);
+    add("ar-svamp", Arithmetic, Accuracy, 10, gen_svamp);
+    add("ar-mawps", Arithmetic, Accuracy, 10, gen_mawps);
+    // GLUE (Table 4 columns)
+    add("glue-mnli", Glue, Accuracy, 3, gen_mnli);
+    add("glue-sst2", Glue, Accuracy, 2, gen_sst2);
+    add("glue-mrpc", Glue, Accuracy, 2, gen_mrpc);
+    add("glue-cola", Glue, Matthews, 2, gen_cola);
+    add("glue-qnli", Glue, Accuracy, 2, gen_qnli);
+    add("glue-qqp", Glue, Accuracy, 2, gen_qqp);
+    add("glue-rte", Glue, Accuracy, 2, gen_rte);
+    add("glue-stsb", Glue, Pearson, 5, gen_stsb);
+    v
+}
+
+/// Look up a task by name.
+pub fn by_name(name: &str) -> Option<Task> {
+    registry().into_iter().find(|t| t.name == name)
+}
+
+/// Tasks of one suite.
+pub fn suite(s: Suite) -> Vec<Task> {
+    registry().into_iter().filter(|t| t.suite == s).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_23() {
+        let r = registry();
+        assert_eq!(r.len(), 23);
+        assert_eq!(suite(Suite::Commonsense).len(), 8);
+        assert_eq!(suite(Suite::Arithmetic).len(), 7);
+        assert_eq!(suite(Suite::Glue).len(), 8);
+        // ids are positional
+        for (i, t) in r.iter().enumerate() {
+            assert_eq!(t.id, i);
+        }
+    }
+
+    #[test]
+    fn all_generators_produce_valid_examples() {
+        let vocab = 256;
+        let max_len = 28;
+        for t in registry() {
+            let mut rng = Rng::new(7);
+            for _ in 0..50 {
+                let e = (t.gen)(&mut rng, vocab, max_len);
+                assert!(!e.prompt.is_empty(), "{}", t.name);
+                assert!(e.prompt.len() <= max_len, "{} len {}", t.name, e.prompt.len());
+                assert!(e.prompt.iter().all(|&x| x >= 0 && (x as usize) < vocab), "{}", t.name);
+                assert!(e.label < t.n_classes.max(10), "{}", t.name);
+                if t.suite != Suite::Glue {
+                    assert!(e.answer_tok > 0 && (e.answer_tok as usize) < vocab);
+                    assert!(!e.options.is_empty(), "{}", t.name);
+                    assert_eq!(e.options[e.label], e.answer_tok, "{}", t.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn labels_are_balanced_enough() {
+        // no generator may degenerate to a constant label (would make
+        // "accuracy" meaningless); check majority class ≤ 75%.
+        let vocab = 512;
+        for t in registry() {
+            let mut rng = Rng::new(13);
+            let mut counts = std::collections::HashMap::new();
+            let n = 400;
+            for _ in 0..n {
+                let e = (t.gen)(&mut rng, vocab, 28);
+                *counts.entry(e.label).or_insert(0usize) += 1;
+            }
+            let max = counts.values().max().unwrap();
+            assert!(
+                *max <= n * 3 / 4,
+                "{}: majority label {}/{n} {counts:?}",
+                t.name,
+                max
+            );
+        }
+    }
+
+    #[test]
+    fn rules_are_deterministic_given_prompt() {
+        // same rng seed → same examples (reproducibility of every table)
+        for t in registry() {
+            let mut r1 = Rng::new(3);
+            let mut r2 = Rng::new(3);
+            for _ in 0..10 {
+                let a = (t.gen)(&mut r1, 256, 24);
+                let b = (t.gen)(&mut r2, 256, 24);
+                assert_eq!(a.prompt, b.prompt, "{}", t.name);
+                assert_eq!(a.label, b.label, "{}", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn boolq_rule_holds() {
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let e = gen_boolq(&mut rng, 256, 24);
+            // prompt = BOS passage SEP probe QRY
+            let sep = e.prompt.iter().position(|&t| t == tk::SEP).unwrap();
+            let probe = e.prompt[sep + 1];
+            let present = e.prompt[1..sep].contains(&probe);
+            assert_eq!(e.label, usize::from(present));
+        }
+    }
+
+    #[test]
+    fn stsb_score_matches_bin() {
+        let mut rng = Rng::new(6);
+        for _ in 0..100 {
+            let e = gen_stsb(&mut rng, 256, 24);
+            assert!((0.0..=1.0).contains(&e.score));
+            assert_eq!(e.label, ((e.score * 4.999) as usize).min(4));
+        }
+    }
+
+    #[test]
+    fn addsub_is_correct() {
+        let mut rng = Rng::new(8);
+        for _ in 0..100 {
+            let e = gen_addsub(&mut rng, 256, 24);
+            let a = tk::as_digit(e.prompt[1]).unwrap();
+            let b = tk::as_digit(e.prompt[3]).unwrap();
+            let want = if e.prompt[2] == tk::PLUS { (a + b) % 10 } else { (10 + a - b) % 10 };
+            assert_eq!(e.label, want);
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Fixed synthetic-vocab layout, shared by pretraining and every task.
+//!
+//! The layout is independent of vocab size (vocab ≥ 64 required), so the same
+//! task generators serve every model preset:
+//!
+//! | range       | meaning                                   |
+//! |-------------|-------------------------------------------|
+//! | 0..4        | PAD, BOS, SEP, MASK                       |
+//! | 4..9        | option tokens A..E (multiple choice)      |
+//! | 10..20      | digits 0..9                               |
+//! | 20..26      | operators: + − × = ? QRY                  |
+//! | 26..32      | reserved                                  |
+//! | 32..vocab   | word tokens (Zipf-distributed in corpus)  |
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const MASK: i32 = 3;
+
+pub const OPT_BASE: i32 = 4; // OPT_A..OPT_E = 4..9
+pub const N_OPTIONS: usize = 5;
+
+pub const DIGIT_BASE: i32 = 10; // digit d → token 10+d
+
+pub const PLUS: i32 = 20;
+pub const MINUS: i32 = 21;
+pub const TIMES: i32 = 22;
+pub const EQ: i32 = 23;
+pub const UNK_X: i32 = 24; // the unknown in single-equation tasks
+pub const QRY: i32 = 25; // query marker
+
+pub const WORD_BASE: i32 = 32;
+
+/// Option token for choice index i (A=0).
+pub fn opt(i: usize) -> i32 {
+    assert!(i < N_OPTIONS);
+    OPT_BASE + i as i32
+}
+
+/// Digit token.
+pub fn digit(d: usize) -> i32 {
+    assert!(d < 10);
+    DIGIT_BASE + d as i32
+}
+
+/// Inverse of [`digit`]; None if not a digit token.
+pub fn as_digit(tok: i32) -> Option<usize> {
+    if (DIGIT_BASE..DIGIT_BASE + 10).contains(&tok) {
+        Some((tok - DIGIT_BASE) as usize)
+    } else {
+        None
+    }
+}
+
+/// Number of word tokens for a vocab size.
+pub fn n_words(vocab: usize) -> usize {
+    assert!(vocab >= 64, "vocab {vocab} too small for the layout");
+    vocab - WORD_BASE as usize
+}
+
+/// Word token for word id w (w < n_words).
+pub fn word(w: usize, vocab: usize) -> i32 {
+    debug_assert!(w < n_words(vocab));
+    WORD_BASE + w as i32
+}
+
+/// Word "category": words are striped into 4 semantic categories; several
+/// tasks (piqa-like, sst2-like) key on them.
+pub fn word_category(tok: i32) -> usize {
+    debug_assert!(tok >= WORD_BASE);
+    ((tok - WORD_BASE) % 4) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_disjoint() {
+        assert!(PAD < BOS && BOS < SEP && SEP < MASK);
+        assert!(MASK < OPT_BASE);
+        assert!(opt(N_OPTIONS - 1) < DIGIT_BASE);
+        assert!(digit(9) < PLUS);
+        assert!(QRY < WORD_BASE);
+    }
+
+    #[test]
+    fn digit_roundtrip() {
+        for d in 0..10 {
+            assert_eq!(as_digit(digit(d)), Some(d));
+        }
+        assert_eq!(as_digit(PLUS), None);
+        assert_eq!(as_digit(WORD_BASE), None);
+    }
+
+    #[test]
+    fn word_ids() {
+        assert_eq!(n_words(256), 224);
+        assert_eq!(word(0, 256), 32);
+        assert_eq!(word_category(word(5, 256)), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tiny_vocab_rejected() {
+        n_words(32);
+    }
+}

@@ -1,0 +1,251 @@
+//! Evaluation harness: merge → eval artifact → task metric.
+//!
+//! Every method is evaluated through the SAME eval artifact per model size:
+//! NeuroAda / masked / full / LoRA merge their trained state into the weights
+//! first (NeuroAda's Algorithm 1 Phase 3 — asserted against the delta
+//! forward by tests), BitFit passes its biases through the artifact's bias
+//! inputs. Metrics follow Table 4's conventions: accuracy everywhere, MCC
+//! for the cola-like task, Pearson for the stsb-like task.
+
+use crate::data::{self, tasks::{Metric, Task}, Split};
+use crate::peft::{DeltaStore, MethodKind};
+use crate::runtime::{state::run_once, Engine, Manifest, TrainSession, Value, ValueStore};
+use crate::tensor::{ops, Tensor};
+use crate::util::stats::{matthews, pearson};
+use anyhow::{bail, Result};
+
+/// Merge a finished session's trained state into a fresh `params.*` store
+/// and collect biases (zero except BitFit).
+pub fn merged_params(
+    session: &TrainSession,
+    method: MethodKind,
+    deltas: &[(String, DeltaStore)],
+) -> Result<(ValueStore, ValueStore)> {
+    let cfg = &session.meta.model;
+    let mut params = ValueStore::new();
+    for a in &session.meta.args {
+        if a.name.starts_with("params.") {
+            params.insert(a.name.clone(), session.store.get(&a.name)?.clone());
+        }
+    }
+    let mut biases = ValueStore::new();
+    for (name, d_out, _d_in) in cfg.proj_shapes() {
+        biases.insert_f32(format!("biases.{name}"), &[d_out], vec![0.0; d_out]);
+    }
+
+    match method {
+        MethodKind::NeuroAda { .. } => {
+            crate::model::merge_deltas(&mut params, deltas)?;
+        }
+        MethodKind::Masked { .. } | MethodKind::Full => {
+            for (name, d_out, d_in) in cfg.proj_shapes() {
+                let delta = session
+                    .store
+                    .get(&format!("trainable.body.{name}"))?
+                    .as_f32()?
+                    .to_vec();
+                add_into(&mut params, &name, &[d_out, d_in], &delta)?;
+            }
+        }
+        MethodKind::Lora { .. } => {
+            for (name, d_out, d_in) in cfg.proj_shapes() {
+                let a = session.store.get(&format!("trainable.body.{name}.A"))?;
+                let b = session.store.get(&format!("trainable.body.{name}.B"))?;
+                let r = a.shape()[0];
+                let scale = 16.0 / r as f32; // α/r, baked to α=16 in the graph
+                let at = Tensor::from_vec(&[r, d_in], a.as_f32()?.to_vec());
+                let bt = Tensor::from_vec(&[d_out, r], b.as_f32()?.to_vec());
+                // delta = scale · B·A  →  [d_out, d_in]
+                let mut ab = Tensor::zeros(&[d_out, d_in]);
+                for i in 0..d_out {
+                    for rr in 0..r {
+                        let bv = bt.at2(i, rr) * scale;
+                        if bv == 0.0 {
+                            continue;
+                        }
+                        let arow = at.row(rr);
+                        let orow = ab.row_mut(i);
+                        for j in 0..d_in {
+                            orow[j] += bv * arow[j];
+                        }
+                    }
+                }
+                add_into(&mut params, &name, &[d_out, d_in], &ab.data)?;
+            }
+        }
+        MethodKind::BitFit => {
+            for (name, _d_out, _) in cfg.proj_shapes() {
+                let b = session.store.get(&format!("trainable.body.{name}"))?.clone();
+                biases.insert(format!("biases.{name}"), b);
+            }
+        }
+    }
+
+    // encoder classifier head is trained by every method: merge it
+    if cfg.n_classes > 0 && session.store.contains("trainable.head") {
+        let hd = session.store.get("trainable.head")?.as_f32()?.to_vec();
+        add_into(&mut params, "head", &[cfg.n_classes, cfg.d_model], &hd)?;
+    }
+    Ok((params, biases))
+}
+
+fn add_into(params: &mut ValueStore, name: &str, shape: &[usize], delta: &[f32]) -> Result<()> {
+    let key = format!("params.{name}");
+    let cur = params.get(&key)?.as_f32()?.to_vec();
+    if cur.len() != delta.len() {
+        bail!("{key}: merge size mismatch");
+    }
+    let data: Vec<f32> = cur.iter().zip(delta).map(|(a, b)| a + b).collect();
+    params.insert(key, Value::F32 { shape: shape.to_vec(), data });
+    Ok(())
+}
+
+/// Evaluate a decoder (LM) task: accuracy of multiple-choice answers via
+/// last-position logits from the `<size>_eval` artifact.
+pub fn eval_decoder(
+    engine: &Engine,
+    manifest: &Manifest,
+    size: &str,
+    params: &ValueStore,
+    biases: &ValueStore,
+    task: &Task,
+    n: usize,
+    seed: u64,
+) -> Result<f64> {
+    let meta = manifest.get(&format!("{size}_eval"))?;
+    let cfg = &meta.model;
+    let examples = data::example_stream(task, Split::Test, seed, cfg.vocab, cfg.seq - 2, n);
+    let mut correct = 0usize;
+    let mut store = params.clone();
+    for a in biases.names() {
+        store.insert(a.clone(), biases.get(a)?.clone());
+    }
+    for chunk in examples.chunks(cfg.batch) {
+        // pad the final chunk to batch size by repeating the last example
+        let mut padded: Vec<_> = chunk.to_vec();
+        while padded.len() < cfg.batch {
+            padded.push(chunk[chunk.len() - 1].clone());
+        }
+        let eb = data::eval_batch(&padded, cfg.seq);
+        store.insert("tokens", Value::I32 { shape: vec![cfg.batch, cfg.seq], data: eb.tokens });
+        store.insert("pad_mask", Value::F32 { shape: vec![cfg.batch, cfg.seq], data: eb.pad_mask });
+        store.insert("last_pos", Value::I32 { shape: vec![cfg.batch], data: eb.last_pos });
+        let out = run_once(engine, meta, &store)?;
+        let spec = &meta.outputs[0];
+        let logits = out.get(&spec.name)?.as_f32()?;
+        for (i, ex) in chunk.iter().enumerate() {
+            let row = &logits[i * cfg.vocab..(i + 1) * cfg.vocab];
+            let pick = ex
+                .options
+                .iter()
+                .enumerate()
+                .max_by(|a, b| {
+                    row[*a.1 as usize].partial_cmp(&row[*b.1 as usize]).unwrap()
+                })
+                .map(|(j, _)| j)
+                .unwrap();
+            if pick == ex.label {
+                correct += 1;
+            }
+        }
+    }
+    Ok(correct as f64 / examples.len() as f64)
+}
+
+/// Evaluate an encoder (classification) task; returns the task's metric.
+pub fn eval_encoder(
+    engine: &Engine,
+    manifest: &Manifest,
+    size: &str,
+    params: &ValueStore,
+    biases: &ValueStore,
+    task: &Task,
+    n: usize,
+    seed: u64,
+) -> Result<f64> {
+    let meta = manifest.get(&format!("{size}_eval"))?;
+    let cfg = &meta.model;
+    let examples = data::example_stream(task, Split::Test, seed, cfg.vocab, cfg.seq, n);
+    let mut store = params.clone();
+    for a in biases.names() {
+        store.insert(a.clone(), biases.get(a)?.clone());
+    }
+    let mut preds: Vec<usize> = Vec::with_capacity(examples.len());
+    for chunk in examples.chunks(cfg.batch) {
+        let mut padded: Vec<_> = chunk.to_vec();
+        while padded.len() < cfg.batch {
+            padded.push(chunk[chunk.len() - 1].clone());
+        }
+        let cb = data::cls_batch(&padded, cfg.seq);
+        store.insert("tokens", Value::I32 { shape: vec![cfg.batch, cfg.seq], data: cb.tokens });
+        store.insert("pad_mask", Value::F32 { shape: vec![cfg.batch, cfg.seq], data: cb.pad_mask });
+        let out = run_once(engine, meta, &store)?;
+        let logits = out.get(&meta.outputs[0].name)?.as_f32()?;
+        for i in 0..chunk.len() {
+            preds.push(ops::argmax(&logits[i * cfg.n_classes..(i + 1) * cfg.n_classes]));
+        }
+    }
+    Ok(score(task, &examples, &preds))
+}
+
+/// Apply the task's metric to predictions.
+pub fn score(task: &Task, examples: &[data::Example], preds: &[usize]) -> f64 {
+    match task.metric {
+        Metric::Accuracy => {
+            let ok = preds.iter().zip(examples).filter(|(p, e)| **p == e.label).count();
+            ok as f64 / examples.len() as f64
+        }
+        Metric::Matthews => {
+            let p: Vec<bool> = preds.iter().map(|&x| x == 1).collect();
+            let t: Vec<bool> = examples.iter().map(|e| e.label == 1).collect();
+            matthews(&p, &t)
+        }
+        Metric::Pearson => {
+            // predicted bin center vs the raw similarity score
+            let p: Vec<f64> = preds.iter().map(|&b| (b as f64 + 0.5) / 5.0).collect();
+            let t: Vec<f64> = examples.iter().map(|e| e.score as f64).collect();
+            pearson(&p, &t)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks;
+
+    #[test]
+    fn score_accuracy_and_mcc() {
+        let task_acc = tasks::by_name("cs-boolq").unwrap();
+        let exs: Vec<data::Example> = (0..4)
+            .map(|i| data::Example {
+                prompt: vec![1],
+                answer_tok: 4,
+                label: i % 2,
+                options: vec![4, 5],
+                score: 0.0,
+            })
+            .collect();
+        assert_eq!(score(&task_acc, &exs, &[0, 1, 0, 1]), 1.0);
+        assert_eq!(score(&task_acc, &exs, &[1, 0, 1, 0]), 0.0);
+        let task_mcc = tasks::by_name("glue-cola").unwrap();
+        assert!((score(&task_mcc, &exs, &[0, 1, 0, 1]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn score_pearson_uses_raw_scores() {
+        let task = tasks::by_name("glue-stsb").unwrap();
+        let exs: Vec<data::Example> = [0.1f32, 0.4, 0.6, 0.9]
+            .iter()
+            .map(|&s| data::Example {
+                prompt: vec![1],
+                answer_tok: 4,
+                label: ((s * 4.999) as usize).min(4),
+                options: vec![],
+                score: s,
+            })
+            .collect();
+        let perfect: Vec<usize> = exs.iter().map(|e| e.label).collect();
+        assert!(score(&task, &exs, &perfect) > 0.9);
+    }
+}

@@ -1,0 +1,45 @@
+//! # NeuroAda — neuron-wise sparse parameter-efficient fine-tuning
+//!
+//! Rust coordinator (Layer 3) for the NeuroAda reproduction: a fine-tuning
+//! framework in which the compute graphs (transformer fwd/bwd + in-graph
+//! AdamW, Layer 2) and the sparse-delta kernels (Layer 1, Pallas) are
+//! AOT-compiled by `python/compile/` into `artifacts/*.hlo.txt`, and this
+//! crate loads and drives them through the PJRT C API (`xla` crate). Python
+//! never runs on the training/serving path.
+//!
+//! Module map (see DESIGN.md for the per-experiment index):
+//!
+//! * [`util`]        — JSON codec, RNG, stats, table rendering (offline env:
+//!                     no serde/clap/criterion, so these are first-class).
+//! * [`config`]      — TOML-subset config system + presets.
+//! * [`tensor`]      — dense f32/bf16 host tensor substrate.
+//! * [`peft`]        — the paper's contribution: top-k selection, compact
+//!                     delta store, sparse AdamW accounting, memory model,
+//!                     baselines (masked / LoRA / BitFit / full).
+//! * [`model`]       — pure-rust reference transformer (parity + fast eval).
+//! * [`runtime`]     — PJRT artifact registry + device-resident train state.
+//! * [`data`]        — synthetic corpus + the 23 downstream task generators.
+//! * [`train`]       — trainer loop, LR schedules, metrics, checkpoints.
+//! * [`eval`]        — accuracy / MCC / Pearson / multiple-choice harness.
+//! * [`sweep`]       — hyperparameter grid search (Tables 5–7).
+//! * [`coordinator`] — thread-pool job runner + experiment drivers (repro).
+//! * [`bench`]       — measurement harness used by `cargo bench` targets.
+//! * [`testing`]     — property-based testing mini-framework.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod peft;
+pub mod runtime;
+pub mod sweep;
+pub mod tensor;
+pub mod testing;
+pub mod train;
+pub mod util;
+
+/// Crate version reported by the CLI and stamped into checkpoints.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

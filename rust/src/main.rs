@@ -1,0 +1,256 @@
+//! `neuroada` — leader entrypoint.
+//!
+//! Loads AOT artifacts (built once by `make artifacts`; python never runs
+//! here) and drives pretraining, fine-tuning and the paper-reproduction
+//! experiment suite. See `neuroada --help`.
+
+use anyhow::{anyhow, bail, Result};
+use neuroada::cli::{parse_args, Args, USAGE};
+use neuroada::config::presets;
+use neuroada::coordinator::common::{Coordinator, RunOpts};
+use neuroada::coordinator::experiments as exp;
+use neuroada::data::tasks;
+use neuroada::peft::memory::DtypeModel;
+use neuroada::peft::{Method, MethodKind, Strategy};
+use neuroada::util::fmt_bytes;
+use neuroada::util::table::Table;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = parse_args(argv).map_err(|e| anyhow!(e))?;
+    if args.subcommand.is_empty() || args.flag("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    match args.subcommand.as_str() {
+        "repro" => cmd_repro(&args),
+        "pretrain" => cmd_pretrain(&args),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "audit" => cmd_audit(&args),
+        "tasks" => cmd_tasks(),
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn opts_from(args: &Args) -> Result<RunOpts> {
+    let mut o = if args.flag("smoke") { RunOpts::smoke() } else { RunOpts::default() };
+    if let Some(n) = args.opt_usize("pretrain-steps").map_err(|e| anyhow!(e))? {
+        o.pretrain_steps = n;
+    }
+    if let Some(n) = args.opt_usize("steps").map_err(|e| anyhow!(e))? {
+        o.finetune_steps = n;
+    }
+    if let Some(n) = args.opt_usize("eval-n").map_err(|e| anyhow!(e))? {
+        o.eval_examples = n;
+    }
+    if let Some(n) = args.opt_usize("seed").map_err(|e| anyhow!(e))? {
+        o.seed = n as u64;
+    }
+    if let Some(lr) = args.opt_f64("lr").map_err(|e| anyhow!(e))? {
+        o.lr = lr;
+    }
+    o.out_dir = args.opt_or("out", "runs").into();
+    Ok(o)
+}
+
+fn coordinator(args: &Args) -> Result<Coordinator> {
+    Coordinator::new(&args.opt_or("artifacts", "artifacts"), opts_from(args)?)
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let c = coordinator(args)?;
+    let size = args.opt_or("size", "nano");
+    let enc_size = args.opt_or("enc-size", "enc-micro");
+    let fig5_steps = args.opt_usize("fig5-steps").map_err(|e| anyhow!(e))?.unwrap_or(30);
+
+    let run = |c: &Coordinator, id: &str| -> Result<()> {
+        let (table, blob) = match id {
+            "table1" => exp::table1(),
+            "fig4" => exp::fig4(c, &size)?,
+            "fig5" => exp::fig5(c, fig5_steps)?,
+            "fig6" => exp::fig6(c, &size)?,
+            "fig7" => exp::fig7(c, &size)?,
+            "table2" => exp::suite_table(
+                c, &size, tasks::Suite::Commonsense,
+                &format!("Table 2 — commonsense suite ({size})"),
+            )?,
+            "table3" => exp::suite_table(
+                c, &size, tasks::Suite::Arithmetic,
+                &format!("Table 3 — arithmetic suite ({size})"),
+            )?,
+            "table4" => exp::suite_table(
+                c, &enc_size, tasks::Suite::Glue,
+                &format!("Table 4 — GLUE-like suite ({enc_size})"),
+            )?,
+            "sweeps" => exp::sweeps(c, &size)?,
+            other => bail!("unknown experiment {other:?}"),
+        };
+        table.print();
+        let path = exp::write_result(c, id, &blob)?;
+        eprintln!("[repro] wrote {path:?}");
+        Ok(())
+    };
+
+    if id == "all" {
+        for id in ["table1", "fig5", "fig4", "fig6", "fig7", "table2", "table3", "table4", "sweeps"] {
+            run(&c, id)?;
+        }
+        Ok(())
+    } else {
+        run(&c, id)
+    }
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let c = coordinator(args)?;
+    let size = args.opt_or("size", "nano");
+    let params = c.backbone(&size)?;
+    println!(
+        "backbone {size}: {} tensors, {} cached under {:?}",
+        params.len(),
+        fmt_bytes(params.total_bytes()),
+        c.opts.out_dir.join("backbones")
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    // config file (TOML) provides defaults; flags override
+    let mut size = args.opt_or("size", "nano");
+    let mut task_name = args.opt_or("task", "cs-boolq");
+    let mut method_name = args.opt_or("method", "neuroada");
+    let mut k = args.opt_usize("k").map_err(|e| anyhow!(e))?.unwrap_or(1);
+    let mut rank = args.opt_usize("rank").map_err(|e| anyhow!(e))?.unwrap_or(8);
+    let mut fraction = args.opt_f64("fraction").map_err(|e| anyhow!(e))?.unwrap_or(1.0);
+    let mut strategy = Strategy::parse(&args.opt_or("strategy", "magnitude"))
+        .ok_or_else(|| anyhow!("bad --strategy"))?;
+    if let Some(path) = args.opt("config") {
+        let cfg = neuroada::config::RunCfg::load(path)?;
+        size = cfg.size;
+        task_name = cfg.task;
+        strategy = cfg.peft.strategy;
+        fraction = cfg.peft.neuron_fraction;
+        match cfg.peft.method {
+            MethodKind::NeuroAda { k: kk } => {
+                method_name = "neuroada".into();
+                k = kk;
+            }
+            MethodKind::Masked { k: kk } => {
+                method_name = "masked".into();
+                k = kk;
+            }
+            MethodKind::Lora { r } => {
+                method_name = "lora".into();
+                rank = r;
+            }
+            MethodKind::BitFit => method_name = "bitfit".into(),
+            MethodKind::Full => method_name = "full".into(),
+        }
+    }
+    let method = match method_name.as_str() {
+        "neuroada" => MethodKind::NeuroAda { k },
+        "masked" => MethodKind::Masked { k },
+        "lora" => MethodKind::Lora { r: rank },
+        "bitfit" => MethodKind::BitFit,
+        "full" => MethodKind::Full,
+        other => bail!("unknown method {other:?}"),
+    };
+    let c = coordinator(args)?;
+    let task = tasks::by_name(&task_name).ok_or_else(|| anyhow!("unknown task {task_name:?}"))?;
+    let backbone = c.backbone(&size)?;
+    let r = c.run_one(&size, &backbone, method, strategy, fraction, &task, None, None)?;
+    println!(
+        "{} on {task_name} ({size}): {} = {:.3} (zero-shot {:.3}), {:.4}% params ({}), \
+         final loss {:.3}, {:.1} samples/s",
+        method.name(),
+        match task.metric {
+            tasks::Metric::Accuracy => "accuracy",
+            tasks::Metric::Matthews => "mcc",
+            tasks::Metric::Pearson => "pearson",
+        },
+        r.metric,
+        r.zero_shot,
+        r.params_percent,
+        r.trainable_params,
+        r.final_loss,
+        r.samples_per_sec,
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let c = coordinator(args)?;
+    let size = args.opt_or("size", "nano");
+    let task_name = args.opt_or("task", "cs-boolq");
+    let task = tasks::by_name(&task_name).ok_or_else(|| anyhow!("unknown task {task_name:?}"))?;
+    let n = args.opt_usize("n").map_err(|e| anyhow!(e))?.unwrap_or(200);
+    let backbone = c.backbone(&size)?;
+    let zb = c.zero_biases(&size);
+    let v = if task.suite == tasks::Suite::Glue {
+        neuroada::eval::eval_encoder(&c.engine, &c.manifest, &size, &backbone, &zb, &task, n, c.opts.seed)?
+    } else {
+        neuroada::eval::eval_decoder(&c.engine, &c.manifest, &size, &backbone, &zb, &task, n, c.opts.seed)?
+    };
+    println!("zero-shot {task_name} on {size}: {v:.3} (n={n})");
+    Ok(())
+}
+
+fn cmd_audit(args: &Args) -> Result<()> {
+    let size = args.opt_or("size", "nano");
+    let k = args.opt_usize("k").map_err(|e| anyhow!(e))?.unwrap_or(1);
+    let cfg = presets::model(&size).ok_or_else(|| anyhow!("unknown size"))?;
+    let mut t = Table::new(&format!("Training-memory audit — {size}, k={k} (analytic, Eq. 5/6)"))
+        .header(&["Method", "Params %", "Trainable", "Grads", "AdamW state", "Metadata", "Overhead total"]);
+    for m in [
+        MethodKind::NeuroAda { k },
+        MethodKind::Masked { k },
+        MethodKind::Lora { r: 8 },
+        MethodKind::BitFit,
+        MethodKind::Full,
+    ] {
+        let method = Method::new(m, cfg.projections(), cfg.backbone_params());
+        let mem = method.memory(DtypeModel::BF16);
+        t.row(vec![
+            m.name(),
+            format!("{:.4}", method.params_percent()),
+            fmt_bytes(mem.trainable_params),
+            fmt_bytes(mem.grads),
+            fmt_bytes(mem.optimizer),
+            fmt_bytes(mem.metadata),
+            fmt_bytes(mem.adaptation_overhead()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_tasks() -> Result<()> {
+    let mut t = Table::new("Synthetic task suite (23 tasks — DESIGN.md §3)")
+        .header(&["Task", "Suite", "Metric", "Classes"]);
+    for task in tasks::registry() {
+        t.row(vec![
+            task.name.to_string(),
+            format!("{:?}", task.suite),
+            format!("{:?}", task.metric),
+            task.n_classes.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

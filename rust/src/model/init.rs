@@ -1,0 +1,87 @@
+//! Parameter initialization for pretraining-from-scratch.
+//!
+//! Same shapes and scales as `model.py::init_params` (embed N(0, 0.02²),
+//! projections N(0, 1/d_in), norms 1, encoder head 0); values come from this
+//! crate's seeded [`Rng`], so whole experiments are reproducible without any
+//! python involvement.
+
+use crate::config::ModelCfg;
+use crate::runtime::{Value, ValueStore};
+use crate::util::rng::Rng;
+
+/// Initialize a full `params.*` store for a model config.
+pub fn init_params(cfg: &ModelCfg, rng: &mut Rng) -> ValueStore {
+    let mut st = ValueStore::new();
+    let d = cfg.d_model;
+
+    let mut embed = vec![0.0f32; cfg.vocab * d];
+    rng.fill_normal(&mut embed, 0.02);
+    st.insert_f32("params.embed", &[cfg.vocab, d], embed);
+
+    for (name, d_out, d_in) in cfg.proj_shapes() {
+        let mut w = vec![0.0f32; d_out * d_in];
+        rng.fill_normal(&mut w, 1.0 / (d_in as f32).sqrt());
+        st.insert_f32(format!("params.{name}"), &[d_out, d_in], w);
+    }
+    for l in 0..cfg.n_layers {
+        st.insert_f32(format!("params.l{l}.ln1"), &[d], vec![1.0; d]);
+        st.insert_f32(format!("params.l{l}.ln2"), &[d], vec![1.0; d]);
+    }
+    st.insert_f32("params.ln_f", &[d], vec![1.0; d]);
+    if cfg.n_classes > 0 {
+        st.insert_f32("params.head", &[cfg.n_classes, d], vec![0.0; cfg.n_classes * d]);
+    }
+    st
+}
+
+/// Zero-initialized values for a set of arg specs (trainable/m/v state).
+pub fn zeros_for(specs: impl Iterator<Item = crate::runtime::ArgSpec>) -> Vec<(String, Value)> {
+    specs
+        .map(|s| {
+            let v = Value::zeros_like(&s);
+            (s.name, v)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn covers_all_param_names() {
+        let cfg = presets::model("nano").unwrap();
+        let mut rng = Rng::new(0);
+        let st = init_params(&cfg, &mut rng);
+        // 1 embed + 12 projections + 4 norms + ln_f = 18
+        assert_eq!(st.len(), 18);
+        assert!(st.contains("params.l1.w2"));
+        let enc = presets::model("enc-micro").unwrap();
+        let st = init_params(&enc, &mut Rng::new(0));
+        assert!(st.contains("params.head"));
+    }
+
+    #[test]
+    fn scales_are_sane() {
+        let cfg = presets::model("nano").unwrap();
+        let st = init_params(&cfg, &mut Rng::new(5));
+        let e = st.get("params.embed").unwrap().as_f32().unwrap();
+        let var = e.iter().map(|x| x * x).sum::<f32>() / e.len() as f32;
+        assert!((var.sqrt() - 0.02).abs() < 0.002, "{}", var.sqrt());
+        let w = st.get("params.l0.wq").unwrap().as_f32().unwrap();
+        let var = w.iter().map(|x| x * x).sum::<f32>() / w.len() as f32;
+        assert!((var.sqrt() - 0.125).abs() < 0.01, "{}", var.sqrt()); // 1/√64
+    }
+
+    #[test]
+    fn seeded_reproducible() {
+        let cfg = presets::model("nano").unwrap();
+        let a = init_params(&cfg, &mut Rng::new(9));
+        let b = init_params(&cfg, &mut Rng::new(9));
+        assert_eq!(
+            a.get("params.l0.wq").unwrap().as_f32().unwrap(),
+            b.get("params.l0.wq").unwrap().as_f32().unwrap()
+        );
+    }
+}

@@ -1,0 +1,306 @@
+//! Pure-rust reference transformer.
+//!
+//! Mirrors `python/compile/model.py` op-for-op (RMSNorm → attention with
+//! causal+pad masking → residual → RMSNorm → SiLU MLP → residual; sinusoidal
+//! additive positions; tied LM head). Used for:
+//!
+//!  * **parity tests** — the same parameters through this forward and through
+//!    the AOT HLO eval artifact must agree to float tolerance (the strongest
+//!    cross-layer integration signal we have);
+//!  * **fast host-side eval** of merged models (no PJRT dependency);
+//!  * **parameter initialization** for pretraining-from-scratch.
+
+pub mod init;
+
+use crate::config::ModelCfg;
+use crate::runtime::{Value, ValueStore};
+use crate::tensor::{ops, Tensor};
+use anyhow::Result;
+
+/// Borrowed view of the named parameters for one forward pass.
+pub struct RefModel<'a> {
+    pub cfg: &'a ModelCfg,
+    pub params: &'a ValueStore,
+}
+
+impl<'a> RefModel<'a> {
+    pub fn new(cfg: &'a ModelCfg, params: &'a ValueStore) -> RefModel<'a> {
+        RefModel { cfg, params }
+    }
+
+    fn p(&self, name: &str) -> Result<&[f32]> {
+        self.params.get(&format!("params.{name}"))?.as_f32()
+    }
+
+    fn p2(&self, name: &str, d_out: usize, d_in: usize) -> Result<Tensor> {
+        Ok(Tensor::from_vec(&[d_out, d_in], self.p(name)?.to_vec()))
+    }
+
+    /// Full forward: tokens [b, t] (+pad mask) → hidden states [b·t, d].
+    pub fn hidden(&self, tokens: &[i32], pad_mask: &[f32], b: usize) -> Result<Tensor> {
+        let cfg = self.cfg;
+        let (t, d) = (cfg.seq, cfg.d_model);
+        assert_eq!(tokens.len(), b * t);
+        let embed = self.p("embed")?;
+        let pos = ops::positional(t, d);
+
+        // x [b·t, d]
+        let mut x = Tensor::zeros(&[b * t, d]);
+        for i in 0..b * t {
+            let tok = tokens[i] as usize;
+            let row = &embed[tok * d..(tok + 1) * d];
+            let pr = pos.row(i % t);
+            let xr = x.row_mut(i);
+            for j in 0..d {
+                xr[j] = row[j] + pr[j];
+            }
+        }
+
+        let mut h = Tensor::zeros(&[b * t, d]);
+        for l in 0..cfg.n_layers {
+            // attention block
+            for i in 0..b * t {
+                ops::rmsnorm(x.row(i), self.p(&format!("l{l}.ln1"))?, h.row_mut(i));
+            }
+            let wq = self.p2(&format!("l{l}.wq"), d, d)?;
+            let wk = self.p2(&format!("l{l}.wk"), d, d)?;
+            let wv = self.p2(&format!("l{l}.wv"), d, d)?;
+            let wo = self.p2(&format!("l{l}.wo"), d, d)?;
+            let q = ops::matmul_nt(&h, &wq);
+            let k = ops::matmul_nt(&h, &wk);
+            let v = ops::matmul_nt(&h, &wv);
+            let att = self.attention(&q, &k, &v, pad_mask, b)?;
+            let o = ops::matmul_nt(&att, &wo);
+            x.add_assign(&o);
+
+            // mlp block
+            for i in 0..b * t {
+                ops::rmsnorm(x.row(i), self.p(&format!("l{l}.ln2"))?, h.row_mut(i));
+            }
+            let w1 = self.p2(&format!("l{l}.w1"), cfg.d_ff, d)?;
+            let w2 = self.p2(&format!("l{l}.w2"), d, cfg.d_ff)?;
+            let mut m = ops::matmul_nt(&h, &w1);
+            for vv in m.data.iter_mut() {
+                *vv = ops::silu(*vv);
+            }
+            let mm = ops::matmul_nt(&m, &w2);
+            x.add_assign(&mm);
+        }
+
+        let mut out = Tensor::zeros(&[b * t, d]);
+        for i in 0..b * t {
+            ops::rmsnorm(x.row(i), self.p("ln_f")?, out.row_mut(i));
+        }
+        Ok(out)
+    }
+
+    fn attention(
+        &self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        pad_mask: &[f32],
+        b: usize,
+    ) -> Result<Tensor> {
+        let cfg = self.cfg;
+        let (t, d) = (cfg.seq, cfg.d_model);
+        let (nh, hd) = (cfg.n_heads, cfg.d_model / cfg.n_heads);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut out = Tensor::zeros(&[b * t, d]);
+        let mut scores = Tensor::zeros(&[t, t]);
+        for bi in 0..b {
+            for h in 0..nh {
+                // scores[qi, ki]
+                for qi in 0..t {
+                    let qrow = &q.row(bi * t + qi)[h * hd..(h + 1) * hd];
+                    for ki in 0..t {
+                        let masked = (cfg.causal && ki > qi) || pad_mask[bi * t + ki] == 0.0;
+                        let s = if masked {
+                            -1e9
+                        } else {
+                            let krow = &k.row(bi * t + ki)[h * hd..(h + 1) * hd];
+                            qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale
+                        };
+                        scores.set2(qi, ki, s);
+                    }
+                }
+                ops::softmax_rows(&mut scores);
+                for qi in 0..t {
+                    let orow = &mut out.row_mut(bi * t + qi)[h * hd..(h + 1) * hd];
+                    for ki in 0..t {
+                        let w = scores.at2(qi, ki);
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let vrow = &v.row(bi * t + ki)[h * hd..(h + 1) * hd];
+                        for j in 0..hd {
+                            orow[j] += w * vrow[j];
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// LM logits at one position per batch row (the eval artifact's output):
+    /// logits[b] = h[b, last_pos[b]] · embedᵀ  → [b, vocab].
+    pub fn lm_logits_at(
+        &self,
+        tokens: &[i32],
+        pad_mask: &[f32],
+        last_pos: &[i32],
+        b: usize,
+    ) -> Result<Tensor> {
+        let cfg = self.cfg;
+        let h = self.hidden(tokens, pad_mask, b)?;
+        let embed = Tensor::from_vec(&[cfg.vocab, cfg.d_model], self.p("embed")?.to_vec());
+        let mut sel = Tensor::zeros(&[b, cfg.d_model]);
+        for bi in 0..b {
+            let pos = last_pos[bi] as usize;
+            sel.row_mut(bi).copy_from_slice(h.row(bi * cfg.seq + pos));
+        }
+        Ok(ops::matmul_nt(&sel, &embed))
+    }
+
+    /// Encoder class logits: mean-pool masked positions → head.
+    pub fn cls_logits(&self, tokens: &[i32], pad_mask: &[f32], b: usize) -> Result<Tensor> {
+        let cfg = self.cfg;
+        let h = self.hidden(tokens, pad_mask, b)?;
+        let head = Tensor::from_vec(
+            &[cfg.n_classes, cfg.d_model],
+            self.p("head")?.to_vec(),
+        );
+        let mut pooled = Tensor::zeros(&[b, cfg.d_model]);
+        for bi in 0..b {
+            let mut n = 0.0f32;
+            for t in 0..cfg.seq {
+                if pad_mask[bi * cfg.seq + t] > 0.0 {
+                    n += 1.0;
+                    let hr = h.row(bi * cfg.seq + t);
+                    let pr = pooled.row_mut(bi);
+                    for j in 0..cfg.d_model {
+                        pr[j] += hr[j];
+                    }
+                }
+            }
+            let n = n.max(1.0);
+            for vv in pooled.row_mut(bi) {
+                *vv /= n;
+            }
+        }
+        Ok(ops::matmul_nt(&pooled, &head))
+    }
+}
+
+/// Merge NeuroAda deltas into a `params.*` store in place (the serving path:
+/// Algorithm 1 Phase 3 applied to a whole model).
+pub fn merge_deltas(
+    params: &mut ValueStore,
+    deltas: &[(String, crate::peft::DeltaStore)],
+) -> Result<()> {
+    for (name, d) in deltas {
+        let key = format!("params.{name}");
+        let v = params.get(&key)?.clone();
+        let (shape, data) = match v {
+            Value::F32 { shape, data } => (shape, data),
+            _ => anyhow::bail!("{key} not f32"),
+        };
+        let mut t = Tensor::from_vec(&shape, data);
+        d.merge_into(&mut t);
+        params.insert(key, Value::F32 { shape: t.shape.clone(), data: t.data });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::init::init_params;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let cfg = presets::model("nano").unwrap();
+        let mut rng = Rng::new(1);
+        let params = init_params(&cfg, &mut rng);
+        let m = RefModel::new(&cfg, &params);
+        let b = 2;
+        let tokens: Vec<i32> = (0..b * cfg.seq).map(|i| (i % 50) as i32 + 4).collect();
+        let pad = vec![1.0f32; b * cfg.seq];
+        let last = vec![(cfg.seq - 1) as i32; b];
+        let l1 = m.lm_logits_at(&tokens, &pad, &last, b).unwrap();
+        let l2 = m.lm_logits_at(&tokens, &pad, &last, b).unwrap();
+        assert_eq!(l1.shape, vec![b, cfg.vocab]);
+        assert_eq!(l1, l2);
+    }
+
+    #[test]
+    fn causal_masking_blocks_future() {
+        // changing a future token must not change logits at an earlier pos
+        let cfg = presets::model("nano").unwrap();
+        let mut rng = Rng::new(2);
+        let params = init_params(&cfg, &mut rng);
+        let m = RefModel::new(&cfg, &params);
+        let mut tokens: Vec<i32> = (0..cfg.seq as i32).map(|i| 4 + (i % 40)).collect();
+        let pad = vec![1.0f32; cfg.seq];
+        let last = vec![5i32];
+        let a = m.lm_logits_at(&tokens, &pad, &last, 1).unwrap();
+        tokens[20] = 99; // future relative to pos 5
+        let b = m.lm_logits_at(&tokens, &pad, &last, 1).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-6);
+        // ...but changing a PAST token must
+        tokens[2] = 77;
+        let c = m.lm_logits_at(&tokens, &pad, &last, 1).unwrap();
+        assert!(a.max_abs_diff(&c) > 1e-6);
+    }
+
+    #[test]
+    fn pad_positions_are_inert() {
+        let cfg = presets::model("nano").unwrap();
+        let mut rng = Rng::new(3);
+        let params = init_params(&cfg, &mut rng);
+        let m = RefModel::new(&cfg, &params);
+        let mut tokens: Vec<i32> = vec![4; cfg.seq];
+        let mut pad = vec![1.0f32; cfg.seq];
+        for t in 10..cfg.seq {
+            pad[t] = 0.0;
+        }
+        let last = vec![9i32];
+        let a = m.lm_logits_at(&tokens, &pad, &last, 1).unwrap();
+        for t in 10..cfg.seq {
+            tokens[t] = 200; // padded garbage
+        }
+        let b = m.lm_logits_at(&tokens, &pad, &last, 1).unwrap();
+        // pads can't attend in: only the embedding of visible slots matters
+        assert!(a.max_abs_diff(&b) < 1e-5, "{}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn merge_changes_forward() {
+        use crate::peft::{selection::select_topk, DeltaStore};
+        let cfg = presets::model("nano").unwrap();
+        let mut rng = Rng::new(4);
+        let mut params = init_params(&cfg, &mut rng);
+        let tokens: Vec<i32> = (0..cfg.seq as i32).map(|i| 4 + (i % 30)).collect();
+        let pad = vec![1.0f32; cfg.seq];
+        let last = vec![(cfg.seq - 1) as i32];
+        let before = {
+            let m = RefModel::new(&cfg, &params);
+            m.lm_logits_at(&tokens, &pad, &last, 1).unwrap()
+        };
+        // non-zero delta on l0.wq
+        let w = params.get("params.l0.wq").unwrap().as_f32().unwrap().to_vec();
+        let wt = Tensor::from_vec(&[64, 64], w);
+        let sel = select_topk(&wt, 2);
+        let vals: Vec<f32> = (0..64 * 2).map(|i| 0.05 * ((i % 7) as f32 - 3.0)).collect();
+        let d = DeltaStore::from_f32(sel, &vals);
+        merge_deltas(&mut params, &[("l0.wq".to_string(), d)]).unwrap();
+        let after = {
+            let m = RefModel::new(&cfg, &params);
+            m.lm_logits_at(&tokens, &pad, &last, 1).unwrap()
+        };
+        assert!(before.max_abs_diff(&after) > 1e-5);
+    }
+}

@@ -1,0 +1,234 @@
+//! Analytic training-memory model (Table 1, Eq. 5/6, Figure 5).
+//!
+//! The paper's memory numbers are arithmetic over parameter counts and
+//! dtypes; this module makes that arithmetic executable and auditable.
+//! `runtime::state` cross-checks it against the bytes actually resident in
+//! PJRT buffers (invariant 6 in DESIGN.md §6).
+//!
+//! Dtype conventions follow the paper's setup (§3.3, torch.bfloat16 runs):
+//! weights/activations BF16 (2 B), gradients BF16, AdamW moments FP32 (4 B).
+//! The CPU artifacts compute in f32; [`DtypeModel::F32`] models those, so the
+//! measured-vs-analytic comparison stays exact on this substrate while the
+//! BF16 model reproduces the paper's absolute numbers.
+
+use crate::util::{fmt_bytes, fmt_ratio};
+
+/// Byte widths for each training-state class.
+#[derive(Debug, Clone, Copy)]
+pub struct DtypeModel {
+    pub param: u64,
+    pub grad: u64,
+    pub moment: u64,
+}
+
+impl DtypeModel {
+    /// The paper's setting: BF16 params/grads, FP32 moments.
+    pub const BF16: DtypeModel = DtypeModel { param: 2, grad: 2, moment: 4 };
+    /// This repo's CPU artifacts: f32 everywhere.
+    pub const F32: DtypeModel = DtypeModel { param: 4, grad: 4, moment: 4 };
+}
+
+/// One adapted projection matrix.
+#[derive(Debug, Clone, Copy)]
+pub struct Projection {
+    pub d_out: u64,
+    pub d_in: u64,
+}
+
+/// Training-memory breakdown for one method over a set of projections.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MemoryBreakdown {
+    /// Frozen backbone parameters (all methods pay this once).
+    pub frozen_params: u64,
+    /// Trainable parameters (θ / dense delta / A,B / biases).
+    pub trainable_params: u64,
+    /// Gradient storage at peak (what autodiff must materialize for the
+    /// *trainable* leaves; the masked method pays dense here).
+    pub grads: u64,
+    /// AdamW moment state (Eq. 5/6).
+    pub optimizer: u64,
+    /// Selection metadata: NeuroAda's indices, or the mask-based method's
+    /// dense byte mask (PyTorch BoolTensor = 1 B/weight; the 1-bit floor is
+    /// reported separately in Table 1).
+    pub metadata: u64,
+}
+
+impl MemoryBreakdown {
+    pub fn total(&self) -> u64 {
+        self.frozen_params + self.trainable_params + self.grads + self.optimizer + self.metadata
+    }
+
+    /// Total excluding the frozen backbone — the part that differs between
+    /// methods (Figure 5's gap).
+    pub fn adaptation_overhead(&self) -> u64 {
+        self.total() - self.frozen_params
+    }
+}
+
+/// Method-specific analytic model.
+pub fn neuroada_memory(projs: &[Projection], k: u64, backbone_params: u64, dt: DtypeModel) -> MemoryBreakdown {
+    let rows: u64 = projs.iter().map(|p| p.d_out).sum();
+    let theta = rows * k;
+    let idx_bytes = 2; // u16 indices (d_in ≤ 65536 for every config here)
+    MemoryBreakdown {
+        frozen_params: backbone_params * dt.param,
+        trainable_params: theta * dt.param,
+        grads: theta * dt.grad,
+        optimizer: 2 * theta * dt.moment, // Eq. (6)
+        metadata: theta * idx_bytes,
+    }
+}
+
+pub fn masked_memory(projs: &[Projection], backbone_params: u64, dt: DtypeModel) -> MemoryBreakdown {
+    let dense: u64 = projs.iter().map(|p| p.d_out * p.d_in).sum();
+    MemoryBreakdown {
+        frozen_params: backbone_params * dt.param,
+        // the mask-based method updates (a copy of) the dense weights
+        trainable_params: dense * dt.param,
+        grads: dense * dt.grad, // full gradients (Figure 2)
+        optimizer: 2 * dense * dt.moment, // Eq. (5)
+        metadata: dense, // BoolTensor mask: 1 byte per weight
+    }
+}
+
+pub fn full_ft_memory(projs: &[Projection], backbone_params: u64, dt: DtypeModel) -> MemoryBreakdown {
+    let dense: u64 = projs.iter().map(|p| p.d_out * p.d_in).sum();
+    MemoryBreakdown {
+        frozen_params: backbone_params * dt.param,
+        trainable_params: dense * dt.param,
+        grads: dense * dt.grad,
+        optimizer: 2 * dense * dt.moment,
+        metadata: 0,
+    }
+}
+
+pub fn lora_memory(projs: &[Projection], r: u64, backbone_params: u64, dt: DtypeModel) -> MemoryBreakdown {
+    let ab: u64 = projs.iter().map(|p| r * (p.d_out + p.d_in)).sum();
+    MemoryBreakdown {
+        frozen_params: backbone_params * dt.param,
+        trainable_params: ab * dt.param,
+        grads: ab * dt.grad,
+        optimizer: 2 * ab * dt.moment,
+        metadata: 0,
+    }
+}
+
+pub fn bitfit_memory(projs: &[Projection], backbone_params: u64, dt: DtypeModel) -> MemoryBreakdown {
+    let b: u64 = projs.iter().map(|p| p.d_out).sum();
+    MemoryBreakdown {
+        frozen_params: backbone_params * dt.param,
+        trainable_params: b * dt.param,
+        grads: b * dt.grad,
+        optimizer: 2 * b * dt.moment,
+        metadata: 0,
+    }
+}
+
+/// Table 1 row: per-projection storage of the sparsity pattern itself —
+/// dense 1-bit mask vs NeuroAda's (BF16 value + u16 index) per neuron.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub model: String,
+    pub d_model: u64,
+    pub mask_bytes: u64,
+    pub neuroada_bytes: u64,
+}
+
+impl Table1Row {
+    pub fn new(model: &str, d_model: u64, k: u64) -> Table1Row {
+        Table1Row {
+            model: model.to_string(),
+            d_model,
+            mask_bytes: d_model * d_model / 8, // 1 bit per weight
+            neuroada_bytes: d_model * k * 4,   // 2 B value + 2 B index
+        }
+    }
+
+    pub fn saving_ratio(&self) -> f64 {
+        self.mask_bytes as f64 / self.neuroada_bytes as f64
+    }
+
+    pub fn render_cells(&self) -> Vec<String> {
+        vec![
+            self.model.clone(),
+            self.d_model.to_string(),
+            fmt_bytes(self.mask_bytes),
+            fmt_bytes(self.neuroada_bytes),
+            fmt_ratio(self.saving_ratio()),
+        ]
+    }
+}
+
+/// The paper's Table 1 (k = 1).
+pub fn table1() -> Vec<Table1Row> {
+    vec![
+        Table1Row::new("LLaMA-1 7B", 4096, 1),
+        Table1Row::new("LLaMA-2 7B", 4096, 1),
+        Table1Row::new("LLaMA-1 13B", 5120, 1),
+        Table1Row::new("LLaMA-2 13B", 5120, 1),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn llama13b_proj() -> Vec<Projection> {
+        vec![Projection { d_out: 5120, d_in: 5120 }]
+    }
+
+    #[test]
+    fn table1_ratios_match_paper() {
+        let rows = table1();
+        // paper: ≈125× for d=4096, ≈156× for d=5120 (MB arithmetic); exact
+        // binary arithmetic gives 128× and 160×. Assert the paper's ">100×"
+        // headline and the relative ordering.
+        assert!((rows[0].saving_ratio() - 128.0).abs() < 1e-9);
+        assert!((rows[2].saving_ratio() - 160.0).abs() < 1e-9);
+        assert!(rows.iter().all(|r| r.saving_ratio() > 100.0));
+        // paper's MB figures: 2.00 MB and 3.13 MB masks
+        assert_eq!(rows[0].mask_bytes, 2 * 1024 * 1024);
+        assert!((rows[2].mask_bytes as f64 / (1024.0 * 1024.0) - 3.125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn neuroada_vs_masked_gap() {
+        let projs = llama13b_proj();
+        let na = neuroada_memory(&projs, 1, 0, DtypeModel::BF16);
+        let mk = masked_memory(&projs, 0, DtypeModel::BF16);
+        // Eq. 5/6: optimizer state ratio is exactly d_in/k
+        assert_eq!(mk.optimizer / na.optimizer, 5120);
+        // and the total adaptation overhead collapses by >1000×
+        assert!(mk.adaptation_overhead() as f64 / na.adaptation_overhead() as f64 > 1000.0);
+    }
+
+    #[test]
+    fn full_equals_masked_sans_mask() {
+        let projs = llama13b_proj();
+        let f = full_ft_memory(&projs, 0, DtypeModel::BF16);
+        let m = masked_memory(&projs, 0, DtypeModel::BF16);
+        assert_eq!(f.grads, m.grads);
+        assert_eq!(f.optimizer, m.optimizer);
+        assert!(m.total() > f.total()); // mask storage on top
+    }
+
+    #[test]
+    fn lora_between_neuroada_and_full() {
+        let projs = llama13b_proj();
+        let na = neuroada_memory(&projs, 1, 0, DtypeModel::BF16);
+        let lo = lora_memory(&projs, 8, 0, DtypeModel::BF16);
+        let fu = full_ft_memory(&projs, 0, DtypeModel::BF16);
+        assert!(na.adaptation_overhead() < lo.adaptation_overhead());
+        assert!(lo.adaptation_overhead() < fu.adaptation_overhead());
+    }
+
+    #[test]
+    fn frozen_backbone_is_common() {
+        let projs = llama13b_proj();
+        let bb = 13_000_000_000u64;
+        let na = neuroada_memory(&projs, 1, bb, DtypeModel::BF16);
+        let mk = masked_memory(&projs, bb, DtypeModel::BF16);
+        assert_eq!(na.frozen_params, mk.frozen_params);
+        assert_eq!(na.frozen_params, 26_000_000_000);
+    }
+}

@@ -1,0 +1,150 @@
+//! PEFT method descriptors: what each method trains, how many parameters
+//! that is, and which artifact family runs it. The Tables 2–4 "Params (%)"
+//! column comes straight from here.
+
+use crate::peft::memory::{self, DtypeModel, MemoryBreakdown, Projection};
+
+/// The methods compared throughout the evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MethodKind {
+    /// The paper's method, with the per-neuron budget k.
+    NeuroAda { k: usize },
+    /// Mask-based sparse tuning (the Figure-2 / SMT-analog baseline); same
+    /// support as NeuroAda but dense grads + dense optimizer state.
+    Masked { k: usize },
+    /// LoRA with rank r (B zero-init, scale α/r = 2).
+    Lora { r: usize },
+    /// BitFit: per-projection bias vectors.
+    BitFit,
+    /// Full fine-tuning of the adapted projections.
+    Full,
+}
+
+/// A method bound to a model's projection set.
+#[derive(Debug, Clone)]
+pub struct Method {
+    pub kind: MethodKind,
+    pub projections: Vec<Projection>,
+    pub backbone_params: u64,
+}
+
+impl MethodKind {
+    pub fn name(&self) -> String {
+        match self {
+            MethodKind::NeuroAda { k } => format!("NeuroAda(top-{k})"),
+            MethodKind::Masked { k } => format!("Masked(top-{k})"),
+            MethodKind::Lora { r } => format!("LoRA(r={r})"),
+            MethodKind::BitFit => "BitFit".to_string(),
+            MethodKind::Full => "Full-FT".to_string(),
+        }
+    }
+
+    /// Artifact name fragment (matches aot.py's naming).
+    pub fn artifact_fragment(&self) -> String {
+        match self {
+            MethodKind::NeuroAda { k } => format!("neuroada_k{k}"),
+            MethodKind::Masked { .. } => "masked".to_string(),
+            MethodKind::Lora { .. } => "lora".to_string(),
+            MethodKind::BitFit => "bitfit".to_string(),
+            MethodKind::Full => "full".to_string(),
+        }
+    }
+}
+
+impl Method {
+    pub fn new(kind: MethodKind, projections: Vec<Projection>, backbone_params: u64) -> Method {
+        Method { kind, projections, backbone_params }
+    }
+
+    /// Trainable parameter count (the Tables 2–4 numerator).
+    pub fn trainable_params(&self) -> u64 {
+        match self.kind {
+            MethodKind::NeuroAda { k } | MethodKind::Masked { k } => {
+                self.projections.iter().map(|p| p.d_out * k as u64).sum()
+            }
+            MethodKind::Lora { r } => self
+                .projections
+                .iter()
+                .map(|p| r as u64 * (p.d_out + p.d_in))
+                .sum(),
+            MethodKind::BitFit => self.projections.iter().map(|p| p.d_out).sum(),
+            MethodKind::Full => self.projections.iter().map(|p| p.d_out * p.d_in).sum(),
+        }
+    }
+
+    /// Params % of the backbone (the paper's accounting denominator).
+    pub fn params_percent(&self) -> f64 {
+        100.0 * self.trainable_params() as f64 / self.backbone_params as f64
+    }
+
+    /// Analytic training-memory breakdown (Figure 5's model).
+    pub fn memory(&self, dt: DtypeModel) -> MemoryBreakdown {
+        match self.kind {
+            MethodKind::NeuroAda { k } => {
+                memory::neuroada_memory(&self.projections, k as u64, self.backbone_params, dt)
+            }
+            MethodKind::Masked { .. } => {
+                memory::masked_memory(&self.projections, self.backbone_params, dt)
+            }
+            MethodKind::Lora { r } => {
+                memory::lora_memory(&self.projections, r as u64, self.backbone_params, dt)
+            }
+            MethodKind::BitFit => memory::bitfit_memory(&self.projections, self.backbone_params, dt),
+            MethodKind::Full => memory::full_ft_memory(&self.projections, self.backbone_params, dt),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn projs() -> Vec<Projection> {
+        // nano model: 2 layers × (4 attn [64×64] + w1 [256×64] + w2 [64×256])
+        let mut v = Vec::new();
+        for _ in 0..2 {
+            for _ in 0..4 {
+                v.push(Projection { d_out: 64, d_in: 64 });
+            }
+            v.push(Projection { d_out: 256, d_in: 64 });
+            v.push(Projection { d_out: 64, d_in: 256 });
+        }
+        v
+    }
+
+    #[test]
+    fn neuroada_counts_match_manifest() {
+        // aot.py writes trainable_params = Σ d_out · k = 1152·k for nano
+        let m = Method::new(MethodKind::NeuroAda { k: 1 }, projs(), 115_008);
+        assert_eq!(m.trainable_params(), 1152);
+        let m4 = Method::new(MethodKind::NeuroAda { k: 4 }, projs(), 115_008);
+        assert_eq!(m4.trainable_params(), 4608);
+    }
+
+    #[test]
+    fn masked_same_count_as_neuroada() {
+        // identical support → identical trainable count; only memory differs
+        let na = Method::new(MethodKind::NeuroAda { k: 2 }, projs(), 115_008);
+        let mk = Method::new(MethodKind::Masked { k: 2 }, projs(), 115_008);
+        assert_eq!(na.trainable_params(), mk.trainable_params());
+        let dt = DtypeModel::F32;
+        assert!(mk.memory(dt).adaptation_overhead() > 10 * na.memory(dt).adaptation_overhead());
+    }
+
+    #[test]
+    fn params_percent_ordering() {
+        let bb = 115_008;
+        let pcts: Vec<f64> = [
+            MethodKind::NeuroAda { k: 1 },
+            MethodKind::BitFit,
+            MethodKind::Lora { r: 8 },
+            MethodKind::Full,
+        ]
+        .into_iter()
+        .map(|k| Method::new(k, projs(), bb).params_percent())
+        .collect();
+        assert!(pcts[0] < pcts[2]); // neuroada k1 < lora r8
+        assert!(pcts[2] < pcts[3]); // lora < full
+        assert!((pcts[3] - 100.0 * 98304.0 / 115008.0).abs() < 1e-9);
+    }
+}

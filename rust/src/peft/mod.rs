@@ -1,0 +1,24 @@
+//! The paper's contribution, as a library: neuron-wise sparse adaptation.
+//!
+//! * [`selection`] — Phase 1 of Algorithm 1: per-neuron top-k input-connection
+//!   selection (Magnitude default + the Fig. 7 alternatives), plus the Fig. 6
+//!   neuron-fraction machinery.
+//! * [`delta`]     — the compact bypass store: k (index, bf16 value) pairs per
+//!   neuron; pack/unpack to HLO inputs; the one-shot merge (Phase 3).
+//! * [`optimizer`] — reference sparse AdamW (bit-matches the in-graph AdamW;
+//!   used by equivalence tests) + state-size accounting (Eq. 5/6).
+//! * [`memory`]    — the analytic training-memory model behind Table 1 and
+//!   Figure 5, cross-checked against measured PJRT buffer bytes.
+//! * [`method`]    — method descriptors (NeuroAda / masked / LoRA / BitFit /
+//!   full) with trainable-parameter accounting for the Tables 2–4 "Params %"
+//!   column.
+
+pub mod delta;
+pub mod memory;
+pub mod method;
+pub mod optimizer;
+pub mod selection;
+
+pub use delta::DeltaStore;
+pub use method::{Method, MethodKind};
+pub use selection::{select_topk, RowSelection, Strategy};

@@ -1,0 +1,143 @@
+//! Reference sparse AdamW + optimizer-state accounting (Eq. 5/6).
+//!
+//! The production update runs inside the AOT HLO graph (model.py
+//! `adamw_update`); this host-side implementation exists to (a) verify the
+//! graph bit-for-bit in integration tests, and (b) make the Eq. 5/6 memory
+//! arithmetic executable rather than prose.
+
+/// AdamW hyperparameters. `weight_decay` is 0 throughout the paper's search
+/// spaces (Tables 5–7) but kept configurable.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamW {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamW {
+    fn default() -> AdamW {
+        AdamW { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+}
+
+/// Moment buffers for a flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: u32,
+}
+
+impl AdamState {
+    pub fn new(n: usize) -> AdamState {
+        AdamState { m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    /// FP32 moment bytes actually held (the measurable version of Eq. 6).
+    pub fn state_bytes(&self) -> u64 {
+        (self.m.len() + self.v.len()) as u64 * 4
+    }
+}
+
+impl AdamW {
+    /// One AdamW step over `params` with `grads`, matching the in-graph
+    /// update exactly (same order of operations, f32 throughout).
+    pub fn step(&self, params: &mut [f32], grads: &[f32], st: &mut AdamState) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), st.m.len());
+        st.t += 1;
+        let t = st.t as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        for i in 0..params.len() {
+            let g = grads[i];
+            st.m[i] = self.beta1 * st.m[i] + (1.0 - self.beta1) * g;
+            st.v[i] = self.beta2 * st.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = st.m[i] / bc1;
+            let vhat = st.v[i] / bc2;
+            let mut p = params[i];
+            p -= self.lr * mhat / (vhat.sqrt() + self.eps);
+            if self.weight_decay > 0.0 {
+                p -= self.lr * self.weight_decay * params[i];
+            }
+            params[i] = p;
+        }
+    }
+}
+
+/// Eq. (5): dense/masked AdamW state bytes for a [d_out, d_in] projection —
+/// two FP32 moments per weight, whether or not the mask zeroes its update.
+pub fn masked_state_bytes(d_out: usize, d_in: usize) -> u64 {
+    2 * (d_out as u64) * (d_in as u64) * 4
+}
+
+/// Eq. (6): NeuroAda AdamW state bytes — two FP32 moments for only the k
+/// selected coordinates per neuron.
+pub fn neuroada_state_bytes(d_out: usize, k: usize) -> u64 {
+    2 * (d_out as u64) * (k as u64) * 4
+}
+
+/// The d_in/k reduction factor the paper quotes (5120× for LLaMA-2 13B, k=1).
+pub fn state_reduction(d_in: usize, k: usize) -> f64 {
+    d_in as f64 / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_is_signed_lr() {
+        // With bias correction, step 1 moves each param by ≈ lr·sign(g).
+        let opt = AdamW { lr: 0.01, ..Default::default() };
+        let mut p = vec![0.0f32, 0.0];
+        let g = vec![3.0f32, -0.5];
+        let mut st = AdamState::new(2);
+        opt.step(&mut p, &g, &mut st);
+        assert!((p[0] + 0.01).abs() < 1e-6, "{p:?}");
+        assert!((p[1] - 0.01).abs() < 1e-6, "{p:?}");
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize (p-3)²
+        let opt = AdamW { lr: 0.1, ..Default::default() };
+        let mut p = vec![0.0f32];
+        let mut st = AdamState::new(1);
+        for _ in 0..500 {
+            let g = vec![2.0 * (p[0] - 3.0)];
+            opt.step(&mut p, &g, &mut st);
+        }
+        assert!((p[0] - 3.0).abs() < 0.05, "{p:?}");
+    }
+
+    #[test]
+    fn weight_decay_pulls_to_zero() {
+        let opt = AdamW { lr: 0.1, weight_decay: 0.5, ..Default::default() };
+        let mut p = vec![1.0f32];
+        let mut st = AdamState::new(1);
+        for _ in 0..200 {
+            opt.step(&mut p, &[0.0], &mut st);
+        }
+        assert!(p[0].abs() < 0.05, "{p:?}");
+    }
+
+    #[test]
+    fn eq5_eq6_paper_numbers() {
+        // LLaMA-2 13B projection, d=5120, k=1: reduction 5120× (paper §3.3).
+        assert_eq!(state_reduction(5120, 1), 5120.0);
+        let dense = masked_state_bytes(5120, 5120);
+        let sparse = neuroada_state_bytes(5120, 1);
+        assert_eq!(dense / sparse, 5120);
+        assert_eq!(dense, 2 * 5120 * 5120 * 4);
+        assert_eq!(sparse, 2 * 5120 * 4);
+    }
+
+    #[test]
+    fn state_bytes_measured_matches_eq6() {
+        let st = AdamState::new(5120); // d_out=5120, k=1
+        assert_eq!(st.state_bytes(), neuroada_state_bytes(5120, 1));
+    }
+}

@@ -1,0 +1,271 @@
+//! Phase 1 of Algorithm 1: offline, task-agnostic top-k selection.
+//!
+//! For each neuron — each row `w` of a weight matrix [d_out, d_in] — pick the
+//! indices of its k largest-magnitude input connections (Eq. 2):
+//! `I(w) = arg top-k |w_j|`.
+//!
+//! Spec (shared with python kernels/topk.py and pinned by golden tests):
+//! indices ordered by descending |w|, ties broken by the LOWER index.
+//!
+//! The Figure-7 alternatives (gradient / reverse / random) and the Figure-6
+//! neuron-fraction row subsets live here too.
+
+use crate::tensor::{ITensor, Tensor};
+use crate::util::rng::Rng;
+
+/// Selection strategy (Figure 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Highest |w| (the NeuroAda default — task-agnostic, no warm-up).
+    Magnitude,
+    /// Highest |∂L/∂w| from a warm-up gradient (task-dependent).
+    Gradient,
+    /// Lowest |w| (the adversarial control).
+    Reverse,
+    /// Uniformly random distinct coordinates per row.
+    Random,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Option<Strategy> {
+        Some(match s {
+            "magnitude" => Strategy::Magnitude,
+            "gradient" => Strategy::Gradient,
+            "reverse" => Strategy::Reverse,
+            "random" => Strategy::Random,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Magnitude => "magnitude",
+            Strategy::Gradient => "gradient",
+            Strategy::Reverse => "reverse",
+            Strategy::Random => "random",
+        }
+    }
+}
+
+/// Selected support for one weight matrix: [d_out, k] indices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowSelection {
+    pub d_out: usize,
+    pub d_in: usize,
+    pub k: usize,
+    /// [d_out, k] selected input-connection indices.
+    pub idx: ITensor,
+}
+
+impl RowSelection {
+    /// Validate the structural invariants (used by proptests).
+    pub fn check(&self) -> Result<(), String> {
+        if self.idx.shape != vec![self.d_out, self.k] {
+            return Err(format!("idx shape {:?}", self.idx.shape));
+        }
+        for i in 0..self.d_out {
+            let row = self.idx.row(i);
+            let mut seen = std::collections::HashSet::new();
+            for &j in row {
+                if j < 0 || j as usize >= self.d_in {
+                    return Err(format!("row {i}: index {j} out of range"));
+                }
+                if !seen.insert(j) {
+                    return Err(format!("row {i}: duplicate index {j}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-row top-k selection via partial selection + sort — O(d_in + k log k)
+/// per row (quickselect), not O(d_in log d_in).
+///
+/// `score` gives each coordinate's priority (higher = selected first); the
+/// tie-break is the lower index, matching `jax.lax.top_k`.
+fn topk_row_by<F: Fn(usize) -> f32>(d_in: usize, k: usize, score: F) -> Vec<i32> {
+    debug_assert!(k <= d_in);
+    // (score, index): order by score desc, then index asc.
+    let cmp = |a: &(f32, usize), b: &(f32, usize)| {
+        b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1))
+    };
+    let mut items: Vec<(f32, usize)> = (0..d_in).map(|j| (score(j), j)).collect();
+    if k < d_in {
+        items.select_nth_unstable_by(k - 1, cmp);
+        items.truncate(k);
+    }
+    items.sort_by(cmp);
+    items.into_iter().map(|(_, j)| j as i32).collect()
+}
+
+/// Magnitude top-k over a weight matrix (Eq. 2). Every row gets exactly k
+/// slots — the paper's "every neuron participates" guarantee.
+pub fn select_topk(w: &Tensor, k: usize) -> RowSelection {
+    assert_eq!(w.rank(), 2);
+    let (d_out, d_in) = (w.shape[0], w.shape[1]);
+    assert!(k >= 1 && k <= d_in, "k={k} d_in={d_in}");
+    let mut idx = ITensor::zeros(&[d_out, k]);
+    for i in 0..d_out {
+        let row = w.row(i);
+        let sel = topk_row_by(d_in, k, |j| row[j].abs());
+        idx.data[i * k..(i + 1) * k].copy_from_slice(&sel);
+    }
+    RowSelection { d_out, d_in, k, idx }
+}
+
+/// Strategy dispatch (Figure 7). `grads` is required for `Gradient`.
+pub fn select(
+    w: &Tensor,
+    k: usize,
+    strategy: Strategy,
+    grads: Option<&Tensor>,
+    rng: &mut Rng,
+) -> RowSelection {
+    let (d_out, d_in) = (w.shape[0], w.shape[1]);
+    match strategy {
+        Strategy::Magnitude => select_topk(w, k),
+        Strategy::Gradient => {
+            let g = grads.expect("gradient strategy needs a warm-up gradient");
+            assert_eq!(g.shape, w.shape);
+            select_topk(g, k)
+        }
+        Strategy::Reverse => {
+            let mut idx = ITensor::zeros(&[d_out, k]);
+            for i in 0..d_out {
+                let row = w.row(i);
+                let sel = topk_row_by(d_in, k, |j| -row[j].abs());
+                idx.data[i * k..(i + 1) * k].copy_from_slice(&sel);
+            }
+            RowSelection { d_out, d_in, k, idx }
+        }
+        Strategy::Random => {
+            let mut idx = ITensor::zeros(&[d_out, k]);
+            for i in 0..d_out {
+                let mut sel = rng.sample_distinct(d_in, k);
+                sel.sort_unstable();
+                for (j, s) in sel.into_iter().enumerate() {
+                    idx.set2(i, j, s as i32);
+                }
+            }
+            RowSelection { d_out, d_in, k, idx }
+        }
+    }
+}
+
+/// Figure-6 machinery: slot mask enabling only a fraction of neurons (rows).
+///
+/// Returns a [d_out, k] 0/1 mask with ⌈fraction·d_out⌉ rows enabled, chosen
+/// deterministically from `rng`. The HLO train step multiplies this into the
+/// θ gradient, so disabled neurons never move — without re-lowering.
+pub fn row_fraction_mask(d_out: usize, k: usize, fraction: f64, rng: &mut Rng) -> Tensor {
+    assert!((0.0..=1.0).contains(&fraction));
+    let n_on = ((fraction * d_out as f64).ceil() as usize).min(d_out);
+    let on = rng.sample_distinct(d_out, n_on);
+    let mut m = Tensor::zeros(&[d_out, k]);
+    for i in on {
+        for j in 0..k {
+            m.set2(i, j, 1.0);
+        }
+    }
+    m
+}
+
+/// Trainable-parameter count for a selection (the Tables 2–4 "Params"
+/// numerator): k per neuron, every neuron.
+pub fn trainable_params(selections: &[&RowSelection]) -> usize {
+    selections.iter().map(|s| s.d_out * s.k).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w_from(rows: &[&[f32]]) -> Tensor {
+        let d_in = rows[0].len();
+        let mut data = Vec::new();
+        for r in rows {
+            data.extend_from_slice(r);
+        }
+        Tensor::from_vec(&[rows.len(), d_in], data)
+    }
+
+    #[test]
+    fn magnitude_picks_largest() {
+        let w = w_from(&[&[0.1, -5.0, 2.0, 0.0], &[1.0, 1.0, -1.0, 3.0]]);
+        let s = select_topk(&w, 2);
+        assert_eq!(s.idx.row(0), &[1, 2]);
+        assert_eq!(s.idx.row(1), &[3, 0]); // tie among |1|,|1|,|-1| → lowest index
+        s.check().unwrap();
+    }
+
+    #[test]
+    fn tie_break_lower_index() {
+        let w = w_from(&[&[2.0, -2.0, 2.0, 1.0]]);
+        let s = select_topk(&w, 3);
+        assert_eq!(s.idx.row(0), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn descending_order_within_row() {
+        let w = w_from(&[&[1.0, 4.0, -3.0, 2.0, 0.5]]);
+        let s = select_topk(&w, 3);
+        assert_eq!(s.idx.row(0), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn k_equals_d_in_selects_all() {
+        let w = w_from(&[&[3.0, -1.0, 2.0]]);
+        let s = select_topk(&w, 3);
+        assert_eq!(s.idx.row(0), &[0, 2, 1]);
+        s.check().unwrap();
+    }
+
+    #[test]
+    fn reverse_picks_smallest() {
+        let w = w_from(&[&[0.1, -5.0, 2.0, 0.01]]);
+        let mut rng = Rng::new(0);
+        let s = select(&w, 2, Strategy::Reverse, None, &mut rng);
+        assert_eq!(s.idx.row(0), &[3, 0]);
+    }
+
+    #[test]
+    fn gradient_uses_grads() {
+        let w = w_from(&[&[9.0, 9.0, 9.0]]);
+        let g = w_from(&[&[0.0, 7.0, -1.0]]);
+        let mut rng = Rng::new(0);
+        let s = select(&w, 1, Strategy::Gradient, Some(&g), &mut rng);
+        assert_eq!(s.idx.row(0), &[1]);
+    }
+
+    #[test]
+    fn random_valid_and_seeded() {
+        let w = Tensor::zeros(&[10, 20]);
+        let mut r1 = Rng::new(4);
+        let mut r2 = Rng::new(4);
+        let a = select(&w, 3, Strategy::Random, None, &mut r1);
+        let b = select(&w, 3, Strategy::Random, None, &mut r2);
+        assert_eq!(a.idx, b.idx);
+        a.check().unwrap();
+    }
+
+    #[test]
+    fn row_fraction_mask_counts() {
+        let mut rng = Rng::new(1);
+        let m = row_fraction_mask(10, 2, 0.3, &mut rng);
+        let on_rows = (0..10).filter(|&i| m.at2(i, 0) == 1.0).count();
+        assert_eq!(on_rows, 3);
+        for i in 0..10 {
+            assert_eq!(m.at2(i, 0), m.at2(i, 1)); // whole rows on/off
+        }
+    }
+
+    #[test]
+    fn param_accounting() {
+        let w1 = Tensor::zeros(&[8, 4]);
+        let w2 = Tensor::zeros(&[6, 4]);
+        let s1 = select_topk(&w1, 2);
+        let s2 = select_topk(&w2, 2);
+        assert_eq!(trainable_params(&[&s1, &s2]), 28);
+    }
+}

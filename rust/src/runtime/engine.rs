@@ -1,0 +1,106 @@
+//! PJRT engine: one CPU client + a cache of compiled executables.
+//!
+//! Compilation (HLO text → PJRT executable) costs seconds per artifact, so
+//! the engine caches by artifact name; every experiment driver shares one
+//! engine. `xla::PjRtClient` is internally ref-counted, cloning is cheap.
+
+use super::manifest::ArtifactMeta;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use xla::{PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Cloning shares the underlying PJRT client and executable cache.
+#[derive(Clone)]
+pub struct Engine {
+    client: PjRtClient,
+    cache: Arc<Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine { client, cache: Arc::new(Mutex::new(HashMap::new())) })
+    }
+
+    /// Thread-shared engine. `PjRtClient` is `Rc`-backed (thread-bound), and
+    /// the TFRT CPU client segfaults when clients are *destroyed*
+    /// concurrently across threads (observed under the multi-threaded test
+    /// runner). Each thread therefore gets one engine whose client is never
+    /// dropped (`ManuallyDrop`); clones share it within the thread.
+    pub fn shared() -> Engine {
+        thread_local! {
+            static SHARED: std::mem::ManuallyDrop<Engine> =
+                std::mem::ManuallyDrop::new(Engine::cpu().expect("PJRT CPU client"));
+        }
+        SHARED.with(|e| (**e).clone())
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn executable(&self, meta: &ArtifactMeta) -> Result<Arc<PjRtLoadedExecutable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&meta.name) {
+                return Ok(exe.clone());
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {:?}", meta.file))?,
+        )
+        .map_err(|e| anyhow!("parse {:?}: {e:?}", meta.file))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", meta.name))
+            .context("xla compile")?;
+        let exe = Arc::new(exe);
+        let dt = t0.elapsed().as_secs_f64();
+        if dt > 1.0 {
+            eprintln!("[engine] compiled {} in {dt:.1}s", meta.name);
+        }
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(meta.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Evict an executable (memory hygiene for sweeps over many artifacts).
+    pub fn evict(&self, name: &str) {
+        self.cache.lock().unwrap().remove(name);
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    #[test]
+    fn compile_and_cache() {
+        let Ok(m) = Manifest::load("artifacts") else { return };
+        let engine = Engine::shared();
+        let meta = m.get("nano_eval").unwrap();
+        let _e1 = engine.executable(meta).unwrap();
+        let _e2 = engine.executable(meta).unwrap();
+        assert_eq!(engine.cached_count(), 1);
+        engine.evict("nano_eval");
+        assert_eq!(engine.cached_count(), 0);
+    }
+}

@@ -1,0 +1,234 @@
+//! artifacts/manifest.json loader.
+//!
+//! The manifest is written by python/compile/aot.py and is the single source
+//! of truth for each artifact's flat argument/output order (jax pytree
+//! flattening of `{"aux","batch","lr","m","params","t","trainable","v"}`),
+//! shapes, dtypes and model config. Rust never guesses a signature.
+
+use crate::config::ModelCfg;
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One flat argument or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgSpec {
+    /// Pytree path, e.g. "trainable.body.l0.wq" or "batch.tokens".
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" | "s32" (the only dtypes the artifact set uses).
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Metadata for one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    /// "train" | "pretrain" | "eval".
+    pub entry: String,
+    /// PEFT method ("neuroada", "masked", ...) for train artifacts.
+    pub method: Option<String>,
+    pub k: usize,
+    pub trainable_params: usize,
+    pub model: ModelCfg,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+impl ArtifactMeta {
+    /// Position of the arg with this exact name.
+    pub fn arg_index(&self, name: &str) -> Option<usize> {
+        self.args.iter().position(|a| a.name == name)
+    }
+
+    /// Args whose name starts with `prefix.`.
+    pub fn args_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a ArgSpec> {
+        self.args
+            .iter()
+            .filter(move |a| a.name.starts_with(prefix) && a.name[prefix.len()..].starts_with('.'))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub set: String,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+fn parse_specs(j: &Json) -> Result<Vec<ArgSpec>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("specs not an array"))?;
+    arr.iter()
+        .map(|a| {
+            Ok(ArgSpec {
+                name: a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("spec missing name"))?
+                    .to_string(),
+                shape: a
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("spec missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<_>>>()?,
+                dtype: a
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("spec missing dtype"))?
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+fn parse_model(name: &str, j: &Json) -> Result<ModelCfg> {
+    let g = |k: &str| -> Result<usize> {
+        j.get(k)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("model.{k} missing"))
+    };
+    Ok(ModelCfg {
+        name: name.to_string(),
+        vocab: g("vocab")?,
+        d_model: g("d_model")?,
+        n_layers: g("n_layers")?,
+        n_heads: g("n_heads")?,
+        d_ff: g("d_ff")?,
+        seq: g("seq")?,
+        batch: g("batch")?,
+        causal: j.get("causal").and_then(Json::as_bool).unwrap_or(true),
+        n_classes: j.get("n_classes").and_then(Json::as_usize).unwrap_or(0),
+    })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let set = j
+            .get("set")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, meta) in arts {
+            let size = meta
+                .get("size")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing size"))?;
+            let model = parse_model(
+                size,
+                meta.get("model").ok_or_else(|| anyhow!("{name}: missing model"))?,
+            )?;
+            // cross-check against the rust presets — drift must fail loudly
+            if let Some(preset) = crate::config::presets::model(size) {
+                if preset != model {
+                    bail!("{name}: manifest model config diverges from rust preset for {size}");
+                }
+            }
+            let am = ArtifactMeta {
+                name: name.clone(),
+                file: dir.join(
+                    meta.get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: missing file"))?,
+                ),
+                entry: meta
+                    .get("entry")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{name}: missing entry"))?
+                    .to_string(),
+                method: meta.get("method").and_then(Json::as_str).map(String::from),
+                k: meta.get("k").and_then(Json::as_usize).unwrap_or(0),
+                trainable_params: meta
+                    .get("trainable_params")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0),
+                model,
+                args: parse_specs(meta.get("args").ok_or_else(|| anyhow!("{name}: args"))?)?,
+                outputs: parse_specs(
+                    meta.get("outputs").ok_or_else(|| anyhow!("{name}: outputs"))?,
+                )?,
+            };
+            if !am.file.exists() {
+                bail!("{name}: artifact file {:?} missing", am.file);
+            }
+            artifacts.insert(name.clone(), am);
+        }
+        Ok(Manifest { dir, set, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().take(8).collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// The train artifact for (size, method-fragment), e.g. ("nano",
+    /// "neuroada_k1") → "nano_neuroada_k1".
+    pub fn train_artifact(&self, size: &str, fragment: &str) -> Result<&ArtifactMeta> {
+        self.get(&format!("{size}_{fragment}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> Option<PathBuf> {
+        let d = PathBuf::from("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.artifacts.len() >= 6, "{}", m.artifacts.len());
+        let a = m.get("nano_neuroada_k1").unwrap();
+        assert_eq!(a.entry, "train");
+        assert_eq!(a.k, 1);
+        assert_eq!(a.model.vocab, 256);
+        // flat order is sorted by pytree path — aux first, v last
+        assert!(a.args.first().unwrap().name.starts_with("aux."));
+        assert!(a.args.last().unwrap().name.starts_with("v."));
+        // outputs carry loss + new state
+        assert!(a.outputs.iter().any(|o| o.name == "loss"));
+        assert!(a.outputs.iter().any(|o| o.name.starts_with("trainable.")));
+    }
+
+    #[test]
+    fn arg_lookup_helpers() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        let a = m.get("nano_neuroada_k1").unwrap();
+        assert!(a.arg_index("lr").is_some());
+        assert!(a.arg_index("nope").is_none());
+        let n_params = a.args_under("params").count();
+        assert_eq!(n_params, 18); // embed + 12 projs + 4 ln + ln_f
+        let n_idx = a.args_under("aux.idx").count();
+        assert_eq!(n_idx, 12);
+    }
+}

@@ -1,0 +1,23 @@
+//! PJRT runtime: load the AOT HLO artifacts and drive them from rust.
+//!
+//! The interchange format is HLO **text** (see python/compile/aot.py and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`/`execute_b`. Python never runs here.
+//!
+//! * [`manifest`] — parse artifacts/manifest.json: per-artifact flat arg /
+//!   output signatures (pytree paths), model config, PEFT metadata.
+//! * [`engine`]   — PJRT CPU client + compiled-executable cache.
+//! * [`values`]   — named host value store (f32/i32 + shape) marshalled
+//!   to/from Literals in manifest order.
+//! * [`state`]    — a training session: frozen params resident as device
+//!   buffers, compact state fed per step, outputs routed back by name.
+
+pub mod engine;
+pub mod manifest;
+pub mod state;
+pub mod values;
+
+pub use engine::Engine;
+pub use manifest::{ArgSpec, ArtifactMeta, Manifest};
+pub use state::TrainSession;
+pub use values::{Value, ValueStore};

@@ -1,0 +1,221 @@
+//! A training session: the device-side state machine for one artifact.
+//!
+//! Frozen inputs (backbone `params.*`, selection `aux.*`) are uploaded to
+//! device buffers ONCE and stay resident; per step only the mutable state
+//! (`trainable/m/v` — compact for NeuroAda), the batch, and the two scalars
+//! cross the host boundary. Outputs come back as one tuple literal
+//! (return_tuple=True lowering), are routed back into the store by name, and
+//! feed the next step.
+//!
+//! The same machinery drives `train`, `pretrain` (state = whole params) and
+//! `eval` (stateless) artifacts.
+
+use super::engine::Engine;
+use super::manifest::ArtifactMeta;
+use super::values::{Value, ValueStore};
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+use xla::{PjRtBuffer, PjRtLoadedExecutable};
+
+/// Which arg classes stay resident on device.
+fn is_frozen(name: &str, entry: &str) -> bool {
+    match entry {
+        // pretrain updates params, so only aux-free batch/scalars move
+        "pretrain" => false,
+        _ => name.starts_with("params.") || name.starts_with("aux."),
+    }
+}
+
+pub struct TrainSession {
+    pub meta: ArtifactMeta,
+    exe: Arc<PjRtLoadedExecutable>,
+    engine_platform: String,
+    /// Host-side values for every argument name.
+    pub store: ValueStore,
+    /// arg position → resident device buffer (frozen args only).
+    resident: Vec<Option<PjRtBuffer>>,
+    /// Steps taken (feeds the `t` scalar: AdamW bias correction).
+    pub step_count: usize,
+    pub last_loss: f32,
+}
+
+impl TrainSession {
+    /// Create a session. `store` must already hold every frozen + state arg
+    /// (anything except `batch.*`, `lr`, `t`, which `step` supplies).
+    pub fn new(engine: &Engine, meta: &ArtifactMeta, store: ValueStore) -> Result<TrainSession> {
+        for a in &meta.args {
+            let transient =
+                a.name.starts_with("batch.") || a.name == "lr" || a.name == "t";
+            if !transient && !store.contains(&a.name) {
+                bail!("session for {}: store missing arg {:?}", meta.name, a.name);
+            }
+        }
+        let exe = engine.executable(meta)?;
+        let mut sess = TrainSession {
+            meta: meta.clone(),
+            exe,
+            engine_platform: engine.platform(),
+            store,
+            resident: Vec::new(),
+            step_count: 0,
+            last_loss: f32::NAN,
+        };
+        sess.upload_frozen(engine)?;
+        Ok(sess)
+    }
+
+    /// Upload frozen args as resident device buffers.
+    fn upload_frozen(&mut self, engine: &Engine) -> Result<()> {
+        self.resident = Vec::with_capacity(self.meta.args.len());
+        for a in &self.meta.args {
+            if is_frozen(&a.name, &self.meta.entry) {
+                let lit = self.store.get(&a.name)?.to_literal()?;
+                let buf = engine
+                    .client()
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(|e| anyhow!("upload {}: {e:?}", a.name))?;
+                // BufferFromHostLiteral copies asynchronously and the
+                // wrapper exposes no ready-future; force completion NOW so
+                // `lit` may be dropped (to_literal_sync blocks on the
+                // buffer's definition event). Without this, dropping the
+                // session while a transfer is in flight is a use-after-free
+                // (flaky SIGSEGV under the test runner).
+                buf.to_literal_sync()
+                    .map_err(|e| anyhow!("sync upload {}: {e:?}", a.name))?;
+                self.resident.push(Some(buf));
+            } else {
+                self.resident.push(None);
+            }
+        }
+        Ok(())
+    }
+
+    /// Bytes resident on device for frozen args (measured memory audit).
+    pub fn frozen_bytes(&self) -> u64 {
+        self.meta
+            .args
+            .iter()
+            .zip(&self.resident)
+            .filter(|(_, b)| b.is_some())
+            .map(|(a, _)| (a.numel() * 4) as u64)
+            .sum()
+    }
+
+    /// Bytes of mutable state crossing the host boundary each step
+    /// (trainable + moments — the Figure 5 differentiator).
+    pub fn state_bytes(&self) -> u64 {
+        let mut b = self.store.bytes_under("m.") + self.store.bytes_under("v.");
+        b += match self.meta.entry.as_str() {
+            "pretrain" => self.store.bytes_under("params."),
+            _ => self.store.bytes_under("trainable."),
+        };
+        b
+    }
+
+    /// One optimization step. `batch` supplies the `batch.*` values; `lr` is
+    /// this step's learning rate (schedule lives in `train::lr`).
+    /// Returns the loss.
+    pub fn step(&mut self, engine: &Engine, batch: &[(String, Value)], lr: f32) -> Result<f32> {
+        for (name, v) in batch {
+            self.store.insert(name.clone(), v.clone());
+        }
+        self.step_count += 1;
+        self.store.insert("lr", Value::scalar_f32(lr));
+        self.store
+            .insert("t", Value::scalar_f32(self.step_count as f32));
+
+        // Build the argument buffers in two passes (fresh buffers first so
+        // no reference outlives a Vec reallocation): resident where frozen,
+        // freshly uploaded otherwise.
+        enum Slot {
+            Res(usize),
+            Fresh(usize),
+        }
+        let mut fresh: Vec<PjRtBuffer> = Vec::new();
+        // literals alive until after the output fetch below — the upload is
+        // asynchronous (see resident_literals).
+        let mut fresh_literals: Vec<xla::Literal> = Vec::new();
+        let mut slots: Vec<Slot> = Vec::with_capacity(self.meta.args.len());
+        for (i, a) in self.meta.args.iter().enumerate() {
+            if self.resident[i].is_some() {
+                slots.push(Slot::Res(i));
+            } else {
+                let v = self.store.get(&a.name)?;
+                if v.shape() != a.shape.as_slice() || v.dtype() != a.dtype {
+                    bail!(
+                        "{}: arg {} is {:?}/{} want {:?}/{}",
+                        self.meta.name, a.name, v.shape(), v.dtype(), a.shape, a.dtype
+                    );
+                }
+                let lit = v.to_literal()?;
+                let buf = engine
+                    .client()
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(|e| anyhow!("upload {}: {e:?}", a.name))?;
+                slots.push(Slot::Fresh(fresh.len()));
+                fresh.push(buf);
+                fresh_literals.push(lit);
+            }
+        }
+        let order: Vec<&PjRtBuffer> = slots
+            .iter()
+            .map(|s| match s {
+                Slot::Res(i) => self.resident[*i].as_ref().unwrap(),
+                Slot::Fresh(i) => &fresh[*i],
+            })
+            .collect();
+
+        let out = self
+            .exe
+            .execute_b(&order)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.meta.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch outputs: {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple outputs: {e:?}"))?;
+        let specs = self.meta.outputs.clone();
+        self.store.absorb_outputs(parts, &specs)?;
+        drop(fresh_literals);
+        let loss = self.store.get("loss")?.as_f32()?[0];
+        self.last_loss = loss;
+        Ok(loss)
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.engine_platform
+    }
+}
+
+/// Run a stateless artifact (eval): all args from `store`, returns outputs.
+pub fn run_once(engine: &Engine, meta: &ArtifactMeta, store: &ValueStore) -> Result<ValueStore> {
+    let exe = engine.executable(meta)?;
+    let lits = store.literals_for(&meta.args)?;
+    let out = exe
+        .execute::<xla::Literal>(&lits)
+        .map_err(|e| anyhow!("execute {}: {e:?}", meta.name))?;
+    let lit = out[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetch: {e:?}"))?;
+    let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+    let mut os = ValueStore::new();
+    os.absorb_outputs(parts, &meta.outputs)?;
+    Ok(os)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    /// Missing state args must fail at construction, not at step time.
+    #[test]
+    fn construction_validates_store() {
+        let Ok(m) = Manifest::load("artifacts") else { return };
+        let engine = Engine::shared();
+        let meta = m.get("nano_neuroada_k1").unwrap();
+        let err = TrainSession::new(&engine, meta, ValueStore::new());
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,261 @@
+//! Named host value store + Literal marshalling.
+//!
+//! Everything the HLO graphs consume or produce is a named tensor (pytree
+//! path). The store maps those names to host values and converts to/from
+//! `xla::Literal` in the exact order the manifest dictates.
+
+use super::manifest::ArgSpec;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use xla::{ElementType, Literal};
+
+/// A host tensor value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros_like(spec: &ArgSpec) -> Value {
+        match spec.dtype.as_str() {
+            "s32" => Value::I32 { shape: spec.shape.clone(), data: vec![0; spec.numel()] },
+            _ => Value::F32 { shape: spec.shape.clone(), data: vec![0.0; spec.numel()] },
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32 { shape, .. } | Value::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            Value::F32 { data, .. } => data.len(),
+            Value::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Value::F32 { .. } => "f32",
+            Value::I32 { .. } => "s32",
+        }
+    }
+
+    /// Bytes at native width (memory audit).
+    pub fn bytes(&self) -> u64 {
+        (self.numel() * 4) as u64
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            _ => bail!("value is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32 { data, .. } => Ok(data),
+            _ => bail!("value is f32, expected i32"),
+        }
+    }
+
+    /// Convert to an xla Literal (untyped-byte path, any rank).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let (ty, dims, bytes): (ElementType, Vec<usize>, Vec<u8>) = match self {
+            Value::F32 { shape, data } => (
+                ElementType::F32,
+                shape.clone(),
+                data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            ),
+            Value::I32 { shape, data } => (
+                ElementType::S32,
+                shape.clone(),
+                data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            ),
+        };
+        Literal::create_from_shape_and_untyped_data(ty, &dims, &bytes)
+            .map_err(|e| anyhow!("literal create: {e:?}"))
+    }
+
+    /// Convert from a Literal, checking against the expected spec.
+    pub fn from_literal(lit: &Literal, spec: &ArgSpec) -> Result<Value> {
+        match spec.dtype.as_str() {
+            "s32" => {
+                let data = lit.to_vec::<i32>().map_err(|e| anyhow!("{}: {e:?}", spec.name))?;
+                if data.len() != spec.numel() {
+                    bail!("{}: got {} elems, want {}", spec.name, data.len(), spec.numel());
+                }
+                Ok(Value::I32 { shape: spec.shape.clone(), data })
+            }
+            "f32" => {
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("{}: {e:?}", spec.name))?;
+                if data.len() != spec.numel() {
+                    bail!("{}: got {} elems, want {}", spec.name, data.len(), spec.numel());
+                }
+                Ok(Value::F32 { shape: spec.shape.clone(), data })
+            }
+            other => bail!("{}: unsupported dtype {other}", spec.name),
+        }
+    }
+}
+
+/// Name → value map with marshalling in manifest order.
+#[derive(Debug, Default, Clone)]
+pub struct ValueStore {
+    map: BTreeMap<String, Value>,
+}
+
+impl ValueStore {
+    pub fn new() -> ValueStore {
+        ValueStore::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, v: Value) {
+        self.map.insert(name.into(), v);
+    }
+
+    pub fn insert_f32(&mut self, name: impl Into<String>, shape: &[usize], data: Vec<f32>) {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        self.insert(name, Value::F32 { shape: shape.to_vec(), data });
+    }
+
+    pub fn insert_i32(&mut self, name: impl Into<String>, shape: &[usize], data: Vec<i32>) {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        self.insert(name, Value::I32 { shape: shape.to_vec(), data });
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Value> {
+        self.map
+            .get(name)
+            .ok_or_else(|| anyhow!("value store: missing {name:?}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Value> {
+        self.map.get_mut(name)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Total bytes held (for the measured side of the memory audit).
+    pub fn total_bytes(&self) -> u64 {
+        self.map.values().map(Value::bytes).sum()
+    }
+
+    /// Bytes under a name prefix (e.g. "m." + "v." = optimizer state).
+    pub fn bytes_under(&self, prefix: &str) -> u64 {
+        self.map
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(_, v)| v.bytes())
+            .sum()
+    }
+
+    /// Marshal the args of `specs` into Literals, in order, validating
+    /// shape/dtype against the manifest.
+    pub fn literals_for(&self, specs: &[ArgSpec]) -> Result<Vec<Literal>> {
+        specs
+            .iter()
+            .map(|s| {
+                let v = self.get(&s.name)?;
+                if v.shape() != s.shape.as_slice() {
+                    bail!("{}: shape {:?} != manifest {:?}", s.name, v.shape(), s.shape);
+                }
+                if v.dtype() != s.dtype {
+                    bail!("{}: dtype {} != manifest {}", s.name, v.dtype(), s.dtype);
+                }
+                v.to_literal()
+            })
+            .collect()
+    }
+
+    /// Write back output literals (decomposed tuple) by name.
+    pub fn absorb_outputs(&mut self, lits: Vec<Literal>, specs: &[ArgSpec]) -> Result<()> {
+        if lits.len() != specs.len() {
+            bail!("got {} outputs, manifest says {}", lits.len(), specs.len());
+        }
+        for (lit, spec) in lits.iter().zip(specs) {
+            let v = Value::from_literal(lit, spec)?;
+            self.map.insert(spec.name.clone(), v);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize], dtype: &str) -> ArgSpec {
+        ArgSpec { name: name.into(), shape: shape.to_vec(), dtype: dtype.into() }
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let v = Value::F32 { shape: vec![2, 3], data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0] };
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit, &spec("x", &[2, 3], "f32")).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_and_scalar() {
+        let v = Value::I32 { shape: vec![4], data: vec![1, -2, 3, 7] };
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit, &spec("t", &[4], "s32")).unwrap();
+        assert_eq!(v, back);
+        let s = Value::scalar_f32(2.5);
+        let lit = s.to_literal().unwrap();
+        let back = Value::from_literal(&lit, &spec("lr", &[], "f32")).unwrap();
+        assert_eq!(back.as_f32().unwrap(), &[2.5]);
+    }
+
+    #[test]
+    fn store_validates_specs() {
+        let mut st = ValueStore::new();
+        st.insert_f32("a", &[2], vec![1.0, 2.0]);
+        // wrong shape
+        let bad = st.literals_for(&[spec("a", &[3], "f32")]);
+        assert!(bad.is_err());
+        // wrong dtype
+        let bad = st.literals_for(&[spec("a", &[2], "s32")]);
+        assert!(bad.is_err());
+        // missing name
+        let bad = st.literals_for(&[spec("b", &[2], "f32")]);
+        assert!(bad.is_err());
+        // ok
+        let ok = st.literals_for(&[spec("a", &[2], "f32")]);
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let mut st = ValueStore::new();
+        st.insert_f32("m.x", &[4], vec![0.0; 4]);
+        st.insert_f32("v.x", &[4], vec![0.0; 4]);
+        st.insert_f32("params.w", &[10], vec![0.0; 10]);
+        assert_eq!(st.bytes_under("m."), 16);
+        assert_eq!(st.total_bytes(), 72);
+    }
+}

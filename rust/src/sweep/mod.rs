@@ -1,0 +1,109 @@
+//! Generic hyperparameter grid search.
+//!
+//! Backing machinery for the Tables 5–7 reproduction (the task-specific
+//! drivers live in `coordinator::experiments::sweeps`); exposed as a library
+//! so downstream users can sweep their own spaces over any objective.
+
+use crate::coordinator::pool::Pool;
+
+/// One grid axis: name + candidate values.
+#[derive(Debug, Clone)]
+pub struct Axis {
+    pub name: String,
+    pub values: Vec<f64>,
+}
+
+impl Axis {
+    pub fn new(name: &str, values: &[f64]) -> Axis {
+        Axis { name: name.to_string(), values: values.to_vec() }
+    }
+}
+
+/// A point in the grid: (axis name, value) pairs, axis order preserved.
+pub type Point = Vec<(String, f64)>;
+
+/// Full cartesian product of the axes.
+pub fn grid(axes: &[Axis]) -> Vec<Point> {
+    let mut points: Vec<Point> = vec![vec![]];
+    for ax in axes {
+        let mut next = Vec::with_capacity(points.len() * ax.values.len());
+        for p in &points {
+            for &v in &ax.values {
+                let mut q = p.clone();
+                q.push((ax.name.clone(), v));
+                next.push(q);
+            }
+        }
+        points = next;
+    }
+    points
+}
+
+/// Result of one evaluated point.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub point: Point,
+    pub score: f64,
+}
+
+/// Evaluate `objective` over the whole grid (optionally in parallel) and
+/// return results sorted best-first. The objective must be deterministic
+/// given the point (seeding is the caller's job).
+pub fn search<F>(axes: &[Axis], workers: usize, objective: F) -> Vec<SweepResult>
+where
+    F: Fn(&Point) -> f64 + Send + Sync + 'static,
+{
+    let points = grid(axes);
+    let obj = std::sync::Arc::new(objective);
+    let pool = Pool::new(workers);
+    let jobs: Vec<Box<dyn FnOnce() -> SweepResult + Send>> = points
+        .into_iter()
+        .map(|p| {
+            let obj = obj.clone();
+            Box::new(move || {
+                let score = obj(&p);
+                SweepResult { point: p, score }
+            }) as Box<dyn FnOnce() -> SweepResult + Send>
+        })
+        .collect();
+    let mut results = pool.scatter(jobs);
+    results.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    results
+}
+
+/// Render a point compactly ("lr=3e-3 k=1").
+pub fn point_str(p: &Point) -> String {
+    p.iter()
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_cartesian() {
+        let axes = [Axis::new("a", &[1.0, 2.0]), Axis::new("b", &[10.0, 20.0, 30.0])];
+        let g = grid(&axes);
+        assert_eq!(g.len(), 6);
+        assert_eq!(g[0], vec![("a".to_string(), 1.0), ("b".to_string(), 10.0)]);
+        assert_eq!(g[5], vec![("a".to_string(), 2.0), ("b".to_string(), 30.0)]);
+    }
+
+    #[test]
+    fn search_finds_max() {
+        let axes = [Axis::new("x", &[-2.0, -1.0, 0.5, 1.0, 3.0])];
+        // objective: -(x-0.5)² — max at x=0.5
+        let res = search(&axes, 2, |p| -(p[0].1 - 0.5) * (p[0].1 - 0.5));
+        assert_eq!(res[0].point[0].1, 0.5);
+        assert!(res[0].score >= res.last().unwrap().score);
+    }
+
+    #[test]
+    fn point_rendering() {
+        let p: Point = vec![("lr".into(), 0.003), ("k".into(), 1.0)];
+        assert_eq!(point_str(&p), "lr=0.003 k=1");
+    }
+}

@@ -1,0 +1,88 @@
+//! bfloat16 codec.
+//!
+//! The paper stores deltas in BF16 (§3.3 "all delta parameters are stored
+//! directly in BF16 and no FP32 master weights are needed"). On the CPU-PJRT
+//! substrate we *compute* in f32 (DESIGN.md §3), but the delta store and the
+//! memory model use real BF16 packing so the byte accounting in Table 1 /
+//! Eq. 5–6 is exact, and checkpoints are half the size.
+
+/// Round-to-nearest-even f32 → bf16.
+pub fn to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // quiet NaN, preserving sign
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round_bit = 0x0000_8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x0000_7fff + lsb);
+    let _ = round_bit;
+    (rounded >> 16) as u16
+}
+
+/// bf16 → f32 (exact).
+pub fn to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Pack a f32 slice to bf16.
+pub fn pack(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| to_bf16(x)).collect()
+}
+
+/// Unpack bf16 to f32.
+pub fn unpack(hs: &[u16]) -> Vec<f32> {
+    hs.iter().map(|&h| to_f32(h)).collect()
+}
+
+/// Max relative quantization error of bf16 (2^-8 mantissa step).
+pub const BF16_EPS: f32 = 1.0 / 256.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 1024.0] {
+            assert_eq!(to_f32(to_bf16(v)), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn rounding_error_bounded() {
+        let mut x = 0.001f32;
+        while x < 100.0 {
+            let r = to_f32(to_bf16(x));
+            assert!(((r - x) / x).abs() <= BF16_EPS, "{x} -> {r}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-9 is exactly between bf16(1.0) and the next value; RNE
+        // must round to the even mantissa (1.0).
+        let x = 1.0f32 + 1.0 / 512.0;
+        assert_eq!(to_f32(to_bf16(x)), 1.0);
+        // 1.0 + 3·2^-9 rounds up to 1.0 + 2^-7... the next-next repr.
+        let y = 1.0f32 + 3.0 / 512.0;
+        assert_eq!(to_f32(to_bf16(y)), 1.0 + 1.0 / 128.0);
+    }
+
+    #[test]
+    fn specials() {
+        assert!(to_f32(to_bf16(f32::NAN)).is_nan());
+        assert_eq!(to_f32(to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(to_f32(to_bf16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn pack_unpack() {
+        let xs = [0.1f32, -2.7, 3.14159, 1e-3];
+        let back = unpack(&pack(&xs));
+        for (a, b) in xs.iter().zip(&back) {
+            assert!(((a - b) / a).abs() <= BF16_EPS);
+        }
+    }
+}

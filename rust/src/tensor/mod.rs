@@ -1,0 +1,201 @@
+//! Dense host-side tensor substrate (f32 primary, bf16 codec for the memory
+//! model and checkpoint compaction).
+//!
+//! This is NOT a deep-learning framework: the heavy compute runs inside the
+//! AOT HLO artifacts on PJRT. The host tensor exists for everything around
+//! that — parameter initialization, selection, data generation, the pure-rust
+//! reference transformer used in parity tests, and metric computation.
+
+pub mod bf16;
+pub mod ops;
+
+use crate::util::rng::Rng;
+
+/// Row-major dense f32 tensor with up to 4 dims.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![1.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// N(0, std²) init.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Size of dim `d`.
+    pub fn dim(&self, d: usize) -> usize {
+        self.shape[d]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D accessors (the common case: weight matrices [d_out, d_in]).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Row slice of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.rank(), 2);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert_eq!(self.rank(), 2);
+        let w = self.shape[1];
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    /// Element-wise in-place ops.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// L2 norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Bytes if stored at the given dtype width (memory model helper).
+    pub fn bytes(&self, dtype_bytes: usize) -> u64 {
+        (self.numel() * dtype_bytes) as u64
+    }
+}
+
+/// Integer tensor (token ids, selection indices).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ITensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl ITensor {
+    pub fn zeros(shape: &[usize]) -> ITensor {
+        let n: usize = shape.iter().product();
+        ITensor { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> ITensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        ITensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> i32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: i32) {
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[i32] {
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_access() {
+        let mut t = Tensor::zeros(&[3, 4]);
+        t.set2(1, 2, 5.0);
+        assert_eq!(t.at2(1, 2), 5.0);
+        assert_eq!(t.row(1), &[0.0, 0.0, 5.0, 0.0]);
+        assert_eq!(t.numel(), 12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_validates() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn randn_is_seeded() {
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        let a = Tensor::randn(&[8, 8], 0.5, &mut r1);
+        let b = Tensor::randn(&[8, 8], 0.5, &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn elementwise() {
+        let mut a = Tensor::filled(&[2, 2], 1.0);
+        let b = Tensor::filled(&[2, 2], 2.0);
+        a.add_assign(&b);
+        assert_eq!(a.data, vec![3.0; 4]);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![1.5; 4]);
+        assert!(a.max_abs_diff(&b) == 0.5);
+    }
+}

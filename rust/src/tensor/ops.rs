@@ -1,0 +1,198 @@
+//! Host-side numeric ops over [`Tensor`].
+//!
+//! Used by the reference transformer (parity tests vs the HLO artifacts),
+//! selection, and evaluation. The hot training path does NOT run through
+//! here — that's the AOT HLO on PJRT.
+
+use super::Tensor;
+
+/// C = A·Bᵀ with A [m, k], B [n, k] → C [m, n].
+///
+/// The `b` operand is row-major [n, k], matching how weight matrices are
+/// stored ([d_out, d_in]) so every row is a neuron and access is sequential.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (n, k2) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "inner dims: {:?} vs {:?}", a.shape, b.shape);
+    let mut c = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let ar = a.row(i);
+        let cr = c.row_mut(i);
+        for j in 0..n {
+            let br = b.row(j);
+            let mut acc = 0.0f32;
+            // 4-wide manual unroll; the autovectorizer does the rest.
+            let mut t = 0;
+            while t + 4 <= k {
+                acc += ar[t] * br[t]
+                    + ar[t + 1] * br[t + 1]
+                    + ar[t + 2] * br[t + 2]
+                    + ar[t + 3] * br[t + 3];
+                t += 4;
+            }
+            while t < k {
+                acc += ar[t] * br[t];
+                t += 1;
+            }
+            cr[j] = acc;
+        }
+    }
+    c
+}
+
+/// C = A·B with A [m, k], B [k, n].
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape[1], b.shape[0]);
+    let (m, k, n) = (a.shape[0], a.shape[1], b.shape[1]);
+    let mut c = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for t in 0..k {
+            let av = a.data[i * k + t];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[t * n..(t + 1) * n];
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Row-wise softmax over the last dim of a 2-D tensor, in place.
+pub fn softmax_rows(x: &mut Tensor) {
+    assert_eq!(x.rank(), 2);
+    let (m, n) = (x.shape[0], x.shape[1]);
+    for i in 0..m {
+        let row = &mut x.data[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// RMSNorm over the last dim: x * rsqrt(mean(x²)+eps) * scale.
+pub fn rmsnorm(x: &[f32], scale: &[f32], out: &mut [f32]) {
+    let d = scale.len();
+    debug_assert_eq!(x.len(), d);
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / d as f32;
+    let r = 1.0 / (ms + 1e-6).sqrt();
+    for i in 0..d {
+        out[i] = x[i] * r * scale[i];
+    }
+}
+
+/// SiLU activation.
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// log-softmax of a row, returning the log-prob of `target`.
+pub fn log_softmax_pick(row: &[f32], target: usize) -> f32 {
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = mx + row.iter().map(|v| (v - mx).exp()).sum::<f32>().ln();
+    row[target] - lse
+}
+
+/// argmax of a slice (first max wins).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut bi = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            bi = i;
+        }
+    }
+    bi
+}
+
+/// Sinusoidal positional encoding matching python model._positional:
+/// concat(sin(ang), cos(ang)) with ang[p, i] = p / 10000^(2i/d).
+pub fn positional(seq: usize, d: usize) -> Tensor {
+    let mut t = Tensor::zeros(&[seq, d]);
+    let half = d / 2;
+    for p in 0..seq {
+        for i in 0..half {
+            let ang = p as f64 / (10000f64).powf(2.0 * i as f64 / d as f64);
+            t.set2(p, i, ang.sin() as f32);
+            t.set2(p, half + i, ang.cos() as f32);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_nt_small() {
+        // A = [[1,2],[3,4]], B = [[1,0],[0,1],[1,1]] (rows are B's "neurons")
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let c = matmul_nt(&a, &b);
+        assert_eq!(c.data, vec![1.0, 2.0, 3.0, 3.0, 4.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_agrees_with_nt() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(2);
+        let a = Tensor::randn(&[5, 7], 1.0, &mut r);
+        let b = Tensor::randn(&[4, 7], 1.0, &mut r);
+        // A·Bᵀ via matmul on transposed copy
+        let mut bt = Tensor::zeros(&[7, 4]);
+        for i in 0..4 {
+            for j in 0..7 {
+                bt.set2(j, i, b.at2(i, j));
+            }
+        }
+        let c1 = matmul_nt(&a, &b);
+        let c2 = matmul(&a, &bt);
+        assert!(c1.max_abs_diff(&c2) < 1e-5);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut x = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        softmax_rows(&mut x);
+        for i in 0..2 {
+            let s: f32 = x.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(x.at2(0, 2) > x.at2(0, 1));
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = [3.0f32, 4.0];
+        let scale = [1.0f32, 1.0];
+        let mut out = [0.0f32; 2];
+        rmsnorm(&x, &scale, &mut out);
+        let ms = (9.0 + 16.0) / 2.0;
+        assert!((out[0] - 3.0 / (ms as f32).sqrt()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn log_softmax_sums() {
+        let row = [1.0f32, 2.0, 3.0];
+        let total: f32 = (0..3).map(|t| log_softmax_pick(&row, t).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn argmax_first_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+    }
+}

@@ -1,0 +1,115 @@
+//! Property-based testing mini-framework (proptest is unavailable offline).
+//!
+//! `prop_check` runs a property over N seeded random cases; on failure it
+//! re-runs a bounded shrink loop that retries with smaller size hints and
+//! reports the smallest failing seed/size. Generators are plain closures
+//! over [`Rng`] + a size hint, which keeps them composable without macro
+//! machinery.
+
+use crate::util::rng::Rng;
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub struct PropFailure {
+    pub seed: u64,
+    pub size: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for PropFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed (seed={}, size={}): {} — rerun with Rng::new({})",
+            self.seed, self.size, self.message, self.seed
+        )
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub max_size: usize,
+    pub base_seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> PropConfig {
+        PropConfig { cases: 64, max_size: 40, base_seed: 0xA11CE }
+    }
+}
+
+/// Run `prop(rng, size)` for `cases` seeded cases with growing size.
+/// `prop` returns Err(message) to fail. On failure, shrinks the size hint
+/// to find the smallest size that still fails with that seed.
+pub fn prop_check<F>(cfg: PropConfig, mut prop: F) -> Result<(), PropFailure>
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(case as u64 * 0x9E3779B9);
+        // sizes ramp 1..max so small counterexamples appear first anyway
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // shrink: smallest failing size for this seed
+            let mut best = (size, msg);
+            let mut lo = 1usize;
+            while lo < best.0 {
+                let mut rng = Rng::new(seed);
+                match prop(&mut rng, lo) {
+                    Err(m) => {
+                        best = (lo, m);
+                        break;
+                    }
+                    Ok(()) => lo += (best.0 - lo).div_ceil(2).max(1),
+                }
+            }
+            return Err(PropFailure { seed, size: best.0, message: best.1 });
+        }
+    }
+    Ok(())
+}
+
+/// Assert-style helper for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        prop_check(PropConfig::default(), |rng, size| {
+            let v: Vec<u64> = (0..size).map(|_| rng.next_u64()).collect();
+            if v.len() == size {
+                Ok(())
+            } else {
+                Err("len".into())
+            }
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn reports_failure_with_seed() {
+        let r = prop_check(PropConfig { cases: 16, max_size: 30, base_seed: 7 }, |_rng, size| {
+            if size < 10 {
+                Ok(())
+            } else {
+                Err(format!("size {size} too big"))
+            }
+        });
+        let f = r.unwrap_err();
+        assert!(f.size >= 10);
+        assert!(f.message.contains("too big"));
+    }
+}

@@ -1,0 +1,142 @@
+//! Checkpoints: params and NeuroAda deltas on disk.
+//!
+//! Layout: `<dir>/meta.json` + `<dir>/params.bin` (+ `<dir>/deltas/<proj>.bin`
+//! in the compact DeltaStore format — BF16 values + indices, the paper's
+//! storage dtype, so a k=1 delta checkpoint of a 13B-analog model is ~4 bytes
+//! per neuron).
+
+use crate::peft::DeltaStore;
+use crate::runtime::{Value, ValueStore};
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::fs;
+use std::path::Path;
+
+/// Save a `params.*` store.
+pub fn save_params(dir: impl AsRef<Path>, params: &ValueStore, label: &str) -> Result<()> {
+    let dir = dir.as_ref();
+    fs::create_dir_all(dir)?;
+    let mut meta = Json::obj();
+    meta.set("format", "neuroada-params-v1").set("label", label);
+    let mut entries = Vec::new();
+    let mut blob: Vec<u8> = Vec::new();
+    for name in params.names() {
+        let v = params.get(name)?;
+        let data = v.as_f32()?;
+        let mut e = Json::obj();
+        e.set("name", name.as_str())
+            .set("offset", blob.len() as u64)
+            .set("len", data.len() as u64)
+            .set("shape", v.shape().to_vec());
+        entries.push(e);
+        for x in data {
+            blob.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    meta.set("tensors", Json::Arr(entries));
+    fs::write(dir.join("meta.json"), meta.dump_pretty())?;
+    fs::write(dir.join("params.bin"), blob)?;
+    Ok(())
+}
+
+/// Load a `params.*` store.
+pub fn load_params(dir: impl AsRef<Path>) -> Result<ValueStore> {
+    let dir = dir.as_ref();
+    let meta = parse(&fs::read_to_string(dir.join("meta.json")).context("meta.json")?)
+        .map_err(|e| anyhow!("meta.json: {e}"))?;
+    if meta.get("format").and_then(Json::as_str) != Some("neuroada-params-v1") {
+        bail!("unknown checkpoint format");
+    }
+    let blob = fs::read(dir.join("params.bin"))?;
+    let mut st = ValueStore::new();
+    for e in meta.get("tensors").and_then(Json::as_arr).unwrap_or(&[]) {
+        let name = e.get("name").and_then(Json::as_str).ok_or_else(|| anyhow!("bad tensor"))?;
+        let off = e.get("offset").and_then(Json::as_usize).unwrap() * 1;
+        let len = e.get("len").and_then(Json::as_usize).unwrap();
+        let shape: Vec<usize> = e
+            .get("shape")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|d| d.as_usize().unwrap())
+            .collect();
+        if off + len * 4 > blob.len() {
+            bail!("{name}: blob overrun");
+        }
+        let data: Vec<f32> = (0..len)
+            .map(|i| f32::from_le_bytes(blob[off + i * 4..off + i * 4 + 4].try_into().unwrap()))
+            .collect();
+        st.insert(name, Value::F32 { shape, data });
+    }
+    Ok(st)
+}
+
+/// Save trained deltas (compact format).
+pub fn save_deltas(dir: impl AsRef<Path>, deltas: &[(String, DeltaStore)]) -> Result<()> {
+    let dir = dir.as_ref().join("deltas");
+    fs::create_dir_all(&dir)?;
+    for (name, d) in deltas {
+        fs::write(dir.join(format!("{name}.bin")), d.to_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load deltas back.
+pub fn load_deltas(dir: impl AsRef<Path>) -> Result<Vec<(String, DeltaStore)>> {
+    let dir = dir.as_ref().join("deltas");
+    let mut out = Vec::new();
+    let mut entries: Vec<_> = fs::read_dir(&dir)
+        .with_context(|| format!("{dir:?}"))?
+        .filter_map(|e| e.ok())
+        .collect();
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let fname = e.file_name().to_string_lossy().to_string();
+        let Some(name) = fname.strip_suffix(".bin") else { continue };
+        let d = DeltaStore::from_bytes(&fs::read(e.path())?)
+            .map_err(|err| anyhow!("{fname}: {err}"))?;
+        out.push((name.to_string(), d));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::init::init_params;
+    use crate::peft::selection::select_topk;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn params_roundtrip() {
+        let cfg = presets::model("nano").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(0));
+        let dir = std::env::temp_dir().join(format!("neuroada-ckpt-{}", std::process::id()));
+        save_params(&dir, &params, "test").unwrap();
+        let back = load_params(&dir).unwrap();
+        assert_eq!(back.len(), params.len());
+        assert_eq!(
+            back.get("params.l0.wq").unwrap().as_f32().unwrap(),
+            params.get("params.l0.wq").unwrap().as_f32().unwrap()
+        );
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn deltas_roundtrip() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[8, 6], 1.0, &mut rng);
+        let sel = select_topk(&w, 2);
+        let vals: Vec<f32> = (0..16).map(|i| i as f32 * 0.25).collect();
+        let d = DeltaStore::from_f32(sel, &vals);
+        let dir = std::env::temp_dir().join(format!("neuroada-dckpt-{}", std::process::id()));
+        save_deltas(&dir, &[("l0.wq".into(), d.clone())]).unwrap();
+        let back = load_deltas(&dir).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].0, "l0.wq");
+        assert_eq!(back[0].1.theta_f32(), d.theta_f32());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,156 @@
+//! The step loops: synthetic pretraining and task fine-tuning.
+
+use super::lr::Schedule;
+use super::metrics::RunLog;
+use crate::data::{corpus::Corpus, lm_batch, tasks::Task, Split};
+use crate::runtime::{ArtifactMeta, Engine, TrainSession, Value, ValueStore};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Result of a pretraining run.
+pub struct PretrainOutcome {
+    pub params: ValueStore,
+    pub losses: Vec<f32>,
+    pub secs: f64,
+}
+
+/// Pretrain from scratch on the synthetic corpus using the `<size>_pretrain`
+/// artifact (true full-parameter training: embeddings, norms, projections).
+pub fn pretrain(
+    engine: &Engine,
+    meta: &ArtifactMeta,
+    init: ValueStore,
+    steps: usize,
+    sched: Schedule,
+    seed: u64,
+    log: Option<&mut RunLog>,
+    mlm: bool,
+) -> Result<PretrainOutcome> {
+    let cfg = meta.model.clone();
+    let corpus = Corpus::new(cfg.vocab);
+    let mut rng = Rng::new(seed);
+    let mut store = init;
+    // optimizer state zeros
+    for a in &meta.args {
+        if a.name.starts_with("m.") || a.name.starts_with("v.") {
+            store.insert(a.name.clone(), Value::zeros_like(a));
+        }
+    }
+    let mut session = TrainSession::new(engine, meta, store)?;
+    let mut losses = Vec::with_capacity(steps);
+    let t0 = std::time::Instant::now();
+    let mut log = log;
+    for t in 1..=steps {
+        let b = if mlm {
+            corpus.mlm_batch(&mut rng, cfg.batch, cfg.seq)
+        } else {
+            corpus.lm_batch(&mut rng, cfg.batch, cfg.seq)
+        };
+        let batch = vec![
+            ("batch.tokens".to_string(), Value::I32 { shape: vec![cfg.batch, cfg.seq], data: b.tokens }),
+            ("batch.targets".to_string(), Value::I32 { shape: vec![cfg.batch, cfg.seq], data: b.targets }),
+            ("batch.loss_mask".to_string(), Value::F32 { shape: vec![cfg.batch, cfg.seq], data: b.loss_mask }),
+            ("batch.pad_mask".to_string(), Value::F32 { shape: vec![cfg.batch, cfg.seq], data: b.pad_mask }),
+        ];
+        let loss = session.step(engine, &batch, sched.at(t) as f32)?;
+        losses.push(loss);
+        if let Some(l) = log.as_deref_mut() {
+            l.log_step("pretrain", t, loss, sched.at(t));
+        }
+    }
+    // pretrained params are the session's params.* outputs
+    let mut params = ValueStore::new();
+    for a in &meta.outputs {
+        if a.name.starts_with("params.") {
+            params.insert(a.name.clone(), session.store.get(&a.name)?.clone());
+        }
+    }
+    Ok(PretrainOutcome { params, losses, secs: t0.elapsed().as_secs_f64() })
+}
+
+/// Result of a fine-tuning run.
+pub struct FinetuneOutcome {
+    pub losses: Vec<f32>,
+    pub secs: f64,
+    pub samples_per_sec: f64,
+}
+
+/// Drive `steps` fine-tuning steps of an already-built session on a task's
+/// training stream (decoder LM protocol).
+pub fn finetune_steps(
+    engine: &Engine,
+    session: &mut TrainSession,
+    task: &Task,
+    steps: usize,
+    sched: Schedule,
+    seed: u64,
+    log: Option<&mut RunLog>,
+) -> Result<FinetuneOutcome> {
+    let cfg = session.meta.model.clone();
+    let mut rng = Rng::new(seed ^ 0xF1);
+    let mut losses = Vec::with_capacity(steps);
+    let t0 = std::time::Instant::now();
+    let mut log = log;
+    for t in 1..=steps {
+        let examples: Vec<_> = (0..cfg.batch)
+            .map(|_| (task.gen)(&mut rng, cfg.vocab, cfg.seq - 2))
+            .collect();
+        let b = lm_batch(&examples, cfg.seq);
+        let batch = vec![
+            ("batch.tokens".to_string(), Value::I32 { shape: vec![cfg.batch, cfg.seq], data: b.tokens }),
+            ("batch.targets".to_string(), Value::I32 { shape: vec![cfg.batch, cfg.seq], data: b.targets }),
+            ("batch.loss_mask".to_string(), Value::F32 { shape: vec![cfg.batch, cfg.seq], data: b.loss_mask }),
+            ("batch.pad_mask".to_string(), Value::F32 { shape: vec![cfg.batch, cfg.seq], data: b.pad_mask }),
+        ];
+        let loss = session.step(engine, &batch, sched.at(t) as f32)?;
+        losses.push(loss);
+        if let Some(l) = log.as_deref_mut() {
+            l.log_step(task.name, t, loss, sched.at(t));
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    Ok(FinetuneOutcome {
+        losses,
+        secs,
+        samples_per_sec: (steps * cfg.batch) as f64 / secs.max(1e-9),
+    })
+}
+
+/// Encoder variant: classification batches.
+pub fn finetune_steps_cls(
+    engine: &Engine,
+    session: &mut TrainSession,
+    task: &Task,
+    steps: usize,
+    sched: Schedule,
+    seed: u64,
+) -> Result<FinetuneOutcome> {
+    let cfg = session.meta.model.clone();
+    let mut rng = Rng::new(seed ^ 0xC1);
+    let mut losses = Vec::with_capacity(steps);
+    let t0 = std::time::Instant::now();
+    for t in 1..=steps {
+        let examples: Vec<_> = (0..cfg.batch)
+            .map(|_| (task.gen)(&mut rng, cfg.vocab, cfg.seq))
+            .collect();
+        let b = crate::data::cls_batch(&examples, cfg.seq);
+        let batch = vec![
+            ("batch.tokens".to_string(), Value::I32 { shape: vec![cfg.batch, cfg.seq], data: b.tokens }),
+            ("batch.labels".to_string(), Value::I32 { shape: vec![cfg.batch], data: b.labels }),
+            ("batch.pad_mask".to_string(), Value::F32 { shape: vec![cfg.batch, cfg.seq], data: b.pad_mask }),
+        ];
+        let loss = session.step(engine, &batch, sched.at(t) as f32)?;
+        losses.push(loss);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    Ok(FinetuneOutcome {
+        losses,
+        secs,
+        samples_per_sec: (steps * cfg.batch) as f64 / secs.max(1e-9),
+    })
+}
+
+/// Hold-out split consistency: the task's Val/Test streams (used by eval).
+pub fn holdout(task: &Task, split: Split, seed: u64, vocab: usize, max_prompt: usize, n: usize) -> Vec<crate::data::Example> {
+    crate::data::example_stream(task, split, seed, vocab, max_prompt, n)
+}

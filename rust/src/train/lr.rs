@@ -1,0 +1,73 @@
+//! Learning-rate schedules.
+//!
+//! The paper's search spaces (Tables 5–7) use AdamW + a Linear scheduler
+//! with warmup ratio ∈ {0, 0.06, 0.10}. The schedule lives in L3 — every
+//! train-step artifact takes the scalar `lr` for that step, so one artifact
+//! serves any schedule.
+
+/// A schedule maps step (1-based) → learning rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    Constant { lr: f64 },
+    /// Linear warmup over `warmup_ratio × total` steps, then linear decay
+    /// to 0 at `total` (HuggingFace "linear" — the paper's setting).
+    LinearWarmup { lr: f64, warmup_ratio: f64, total: usize },
+}
+
+impl Schedule {
+    pub fn linear(lr: f64, warmup_ratio: f64, total: usize) -> Schedule {
+        Schedule::LinearWarmup { lr, warmup_ratio, total }
+    }
+
+    /// LR for 1-based step `t`.
+    pub fn at(&self, t: usize) -> f64 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::LinearWarmup { lr, warmup_ratio, total } => {
+                let warm = (warmup_ratio * total as f64).round().max(0.0) as usize;
+                if warm > 0 && t <= warm {
+                    lr * t as f64 / warm as f64
+                } else if total > warm {
+                    let rem = (total - t.min(total)) as f64 / (total - warm) as f64;
+                    lr * rem.max(0.0)
+                } else {
+                    lr
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_then_decay() {
+        let s = Schedule::linear(1.0, 0.1, 100);
+        assert!((s.at(1) - 0.1).abs() < 1e-12);
+        assert!((s.at(10) - 1.0).abs() < 1e-12); // peak at end of warmup
+        assert!(s.at(50) < 1.0 && s.at(50) > 0.0);
+        assert!(s.at(100) < 1e-12); // decays to 0
+        // monotone decay after warmup
+        let mut prev = s.at(10);
+        for t in 11..=100 {
+            let v = s.at(t);
+            assert!(v <= prev + 1e-12);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn zero_warmup_starts_high() {
+        let s = Schedule::linear(0.5, 0.0, 10);
+        assert!(s.at(1) > 0.4);
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant { lr: 3e-3 };
+        assert_eq!(s.at(1), 3e-3);
+        assert_eq!(s.at(1_000_000), 3e-3);
+    }
+}

@@ -1,0 +1,89 @@
+//! JSONL run logs: one line per event, machine-parsable, append-only.
+//! EXPERIMENTS.md points at these files for every recorded run.
+
+use crate::util::json::Json;
+use crate::util::now_secs;
+use anyhow::{Context, Result};
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+pub struct RunLog {
+    path: PathBuf,
+    file: File,
+}
+
+impl RunLog {
+    /// Create (or append to) `<dir>/<name>.jsonl`.
+    pub fn create(dir: impl AsRef<Path>, name: &str) -> Result<RunLog> {
+        let dir = dir.as_ref();
+        fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+        let path = dir.join(format!("{name}.jsonl"));
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("open {path:?}"))?;
+        Ok(RunLog { path, file })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn emit(&mut self, mut obj: Json) {
+        obj.set("ts", now_secs());
+        let _ = writeln!(self.file, "{}", obj.dump());
+    }
+
+    pub fn log_step(&mut self, phase: &str, step: usize, loss: f32, lr: f64) {
+        let mut o = Json::obj();
+        o.set("event", "step")
+            .set("phase", phase)
+            .set("step", step)
+            .set("loss", loss as f64)
+            .set("lr", lr);
+        self.emit(o);
+    }
+
+    pub fn log_eval(&mut self, task: &str, metric: &str, value: f64, n: usize) {
+        let mut o = Json::obj();
+        o.set("event", "eval")
+            .set("task", task)
+            .set("metric", metric)
+            .set("value", value)
+            .set("n", n);
+        self.emit(o);
+    }
+
+    pub fn log_kv(&mut self, event: &str, kv: &[(&str, Json)]) {
+        let mut o = Json::obj();
+        o.set("event", event);
+        for (k, v) in kv {
+            o.set(k, v.clone());
+        }
+        self.emit(o);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn writes_parsable_jsonl() {
+        let dir = std::env::temp_dir().join(format!("neuroada-log-{}", std::process::id()));
+        let mut log = RunLog::create(&dir, "test").unwrap();
+        log.log_step("pretrain", 1, 5.5, 1e-3);
+        log.log_eval("cs-boolq", "accuracy", 0.75, 100);
+        drop(log);
+        let text = std::fs::read_to_string(dir.join("test.jsonl")).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let j = parse(lines[0]).unwrap();
+        assert_eq!(j.get("event").unwrap().as_str(), Some("step"));
+        assert_eq!(j.get("loss").unwrap().as_f64(), Some(5.5));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

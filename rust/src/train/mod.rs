@@ -1,0 +1,18 @@
+//! Trainer: pretraining + fine-tuning loops over the AOT artifacts.
+//!
+//! * [`lr`]         — LR schedules (linear decay + warmup, Tables 5–7).
+//! * [`setup`]      — builds a [`TrainSession`] for any PEFT method: runs
+//!   Phase-1 selection, initializes trainable/optimizer state, packs masks.
+//! * [`loop_`]      — the step loops with loss logging.
+//! * [`metrics`]    — JSONL run logs.
+//! * [`checkpoint`] — params + delta persistence.
+
+pub mod checkpoint;
+pub mod loop_;
+pub mod lr;
+pub mod metrics;
+pub mod setup;
+
+pub use loop_::{finetune_steps, pretrain, FinetuneOutcome, PretrainOutcome};
+pub use lr::Schedule;
+pub use setup::build_session;

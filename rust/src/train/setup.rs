@@ -1,0 +1,184 @@
+//! Session setup: Phase 1 (selection) + state initialization for every
+//! PEFT method, producing a ready [`TrainSession`].
+//!
+//! This is where the paper's Algorithm 1 Phase 1 actually runs in the
+//! production path: magnitude top-k over the *pretrained* weights, entirely
+//! task-agnostic, before any training step.
+
+use crate::config::ModelCfg;
+use crate::peft::selection::{row_fraction_mask, select, RowSelection, Strategy};
+use crate::peft::{DeltaStore, MethodKind};
+use crate::runtime::{ArtifactMeta, Engine, TrainSession, Value, ValueStore};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Everything Phase 1 produced (kept for merge + audit).
+pub struct SessionSetup {
+    pub session: TrainSession,
+    /// NeuroAda/masked: per-projection selections (merge needs them).
+    pub selections: Vec<(String, RowSelection)>,
+}
+
+/// Per-projection warm-up gradient surrogate for the Gradient strategy
+/// (Figure 7): |w|-independent signal derived from one LM batch through the
+/// reference model would be ideal; we use the paper-faithful alternative of
+/// a single backward pass — approximated here by activations-scale-weighted
+/// magnitudes when no gradient tensor is supplied by the caller.
+pub type WarmupGrads = std::collections::BTreeMap<String, Tensor>;
+
+/// Build a training session for `meta` over pretrained `params`.
+///
+/// * `method` must agree with the artifact (checked).
+/// * `strategy` / `neuron_fraction` configure Phase 1 (NeuroAda + masked).
+/// * All trainable/optimizer state starts at the paper's init (θ=0, m=v=0;
+///   LoRA A~N(0,0.02), B=0).
+pub fn build_session(
+    engine: &Engine,
+    meta: &ArtifactMeta,
+    params: &ValueStore,
+    method: MethodKind,
+    strategy: Strategy,
+    neuron_fraction: f64,
+    warmup_grads: Option<&WarmupGrads>,
+    rng: &mut Rng,
+) -> Result<SessionSetup> {
+    let want_frag = method.artifact_fragment();
+    let have = meta.method.as_deref().unwrap_or("");
+    let frag_method = want_frag.split("_k").next().unwrap();
+    if have != frag_method {
+        bail!("artifact {} is method {have:?}, requested {want_frag:?}", meta.name);
+    }
+    if let MethodKind::NeuroAda { k } | MethodKind::Masked { k } = method {
+        if meta.method.as_deref() == Some("neuroada") && meta.k != k {
+            bail!("artifact {} has k={}, requested k={k}", meta.name, meta.k);
+        }
+    }
+
+    let cfg = &meta.model;
+    let mut store = params.clone();
+    let mut selections = Vec::new();
+
+    // trainable/m/v zeros per the manifest signature (covers encoder head)
+    for a in &meta.args {
+        if a.name.starts_with("trainable.") || a.name.starts_with("m.") || a.name.starts_with("v.")
+        {
+            store.insert(a.name.clone(), Value::zeros_like(a));
+        }
+    }
+
+    match method {
+        MethodKind::NeuroAda { k } => {
+            for (name, d_out, d_in) in cfg.proj_shapes() {
+                let w = param_tensor(params, &name, d_out, d_in)?;
+                let sel = select(&w, k, strategy, warmup_grads.and_then(|g| g.get(&name)), rng);
+                store.insert_i32(
+                    format!("aux.idx.{name}"),
+                    &[d_out, k],
+                    sel.idx.data.clone(),
+                );
+                let mask = if neuron_fraction < 1.0 {
+                    row_fraction_mask(d_out, k, neuron_fraction, rng)
+                } else {
+                    Tensor::ones(&[d_out, k])
+                };
+                store.insert_f32(format!("aux.slot_mask.{name}"), &[d_out, k], mask.data);
+                selections.push((name, sel));
+            }
+        }
+        MethodKind::Masked { k } => {
+            // identical support, expressed as a dense 0/1 mask (Figure 2)
+            for (name, d_out, d_in) in cfg.proj_shapes() {
+                let w = param_tensor(params, &name, d_out, d_in)?;
+                let sel = select(&w, k, strategy, warmup_grads.and_then(|g| g.get(&name)), rng);
+                let row_on = if neuron_fraction < 1.0 {
+                    row_fraction_mask(d_out, 1, neuron_fraction, rng)
+                } else {
+                    Tensor::ones(&[d_out, 1])
+                };
+                let mut mask = vec![0.0f32; d_out * d_in];
+                for i in 0..d_out {
+                    if row_on.at2(i, 0) == 0.0 {
+                        continue;
+                    }
+                    for j in 0..k {
+                        mask[i * d_in + sel.idx.at2(i, j) as usize] = 1.0;
+                    }
+                }
+                store.insert_f32(format!("aux.mask.{name}"), &[d_out, d_in], mask);
+                selections.push((name, sel));
+            }
+        }
+        MethodKind::Lora { .. } => {
+            // A ~ N(0, 0.02), B = 0 (zeros already set); scale α/r is baked
+            // into the graph.
+            for a in &meta.args {
+                if a.name.starts_with("trainable.body.") && a.name.ends_with(".A") {
+                    let mut data = vec![0.0f32; a.numel()];
+                    rng.fill_normal(&mut data, 0.02);
+                    store.insert_f32(a.name.clone(), &a.shape, data);
+                }
+            }
+        }
+        MethodKind::BitFit | MethodKind::Full => {} // zeros are correct
+    }
+
+    let session = TrainSession::new(engine, meta, store)?;
+    Ok(SessionSetup { session, selections })
+}
+
+fn param_tensor(params: &ValueStore, name: &str, d_out: usize, d_in: usize) -> Result<Tensor> {
+    let v = params.get(&format!("params.{name}"))?.as_f32()?;
+    Ok(Tensor::from_vec(&[d_out, d_in], v.to_vec()))
+}
+
+/// Extract trained NeuroAda deltas from a finished session (for merge /
+/// checkpointing). Values round-trip through the BF16 store.
+pub fn extract_deltas(
+    session: &TrainSession,
+    selections: &[(String, RowSelection)],
+) -> Result<Vec<(String, DeltaStore)>> {
+    let mut out = Vec::new();
+    for (name, sel) in selections {
+        let th = session
+            .store
+            .get(&format!("trainable.body.{name}"))?
+            .as_f32()?;
+        out.push((name.clone(), DeltaStore::from_f32(sel.clone(), th)));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::init::init_params;
+    use crate::runtime::Manifest;
+
+    #[test]
+    fn neuroada_setup_shapes() {
+        let Ok(m) = Manifest::load("artifacts") else { return };
+        let engine = Engine::shared();
+        let meta = m.get("nano_neuroada_k1").unwrap();
+        let cfg = presets::model("nano").unwrap();
+        let mut rng = Rng::new(0);
+        let params = init_params(&cfg, &mut rng);
+        let setup = build_session(
+            &engine, meta, &params,
+            MethodKind::NeuroAda { k: 1 },
+            Strategy::Magnitude, 1.0, None, &mut rng,
+        )
+        .unwrap();
+        assert_eq!(setup.selections.len(), 12);
+        assert!(setup.session.store.contains("aux.idx.l0.wq"));
+        assert!(setup.session.store.contains("trainable.body.l1.w2"));
+        // wrong method for artifact fails loudly
+        let err = build_session(
+            &engine, meta, &params,
+            MethodKind::Full,
+            Strategy::Magnitude, 1.0, None, &mut rng,
+        );
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,66 @@
+//! Foundation utilities.
+//!
+//! The build environment is offline (only the `xla` crate's vendor closure is
+//! reachable), so the pieces a crates.io project would pull in — JSON codec,
+//! seeded RNG, descriptive statistics, table rendering — are implemented here
+//! as first-class, tested substrates.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Wall-clock seconds since an arbitrary epoch, monotonic.
+pub fn now_secs() -> f64 {
+    use std::time::{SystemTime, UNIX_EPOCH};
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+/// Human-readable byte counts ("3.13 MB") used by the memory auditor.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a ratio like the paper's "156×".
+pub fn fmt_ratio(r: f64) -> String {
+    if r >= 100.0 {
+        format!("{r:.0}×")
+    } else if r >= 10.0 {
+        format!("{r:.1}×")
+    } else {
+        format!("{r:.2}×")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn ratio_formatting() {
+        assert_eq!(fmt_ratio(156.2), "156×");
+        assert_eq!(fmt_ratio(12.34), "12.3×");
+        assert_eq!(fmt_ratio(1.5), "1.50×");
+    }
+}

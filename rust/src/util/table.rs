@@ -1,0 +1,137 @@
+//! Plain-text table rendering for the paper-reproduction reports.
+//!
+//! Every bench target prints its table/figure through this module so the
+//! `cargo bench --bench paper_tables` output visually matches the structure
+//! of the paper's Tables 1–4 and the figure series.
+
+/// A column-aligned text table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    hlines: Vec<usize>, // row indices after which to draw a separator
+}
+
+impl Table {
+    pub fn new(title: &str) -> Table {
+        Table { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Table {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        self.rows.push(cells);
+        self
+    }
+
+    /// Draw a horizontal separator after the most recent row (used between
+    /// model groups, mirroring the paper's table layout).
+    pub fn hline(&mut self) -> &mut Self {
+        self.hlines.push(self.rows.len());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self
+            .header
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("\n== {} ==\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        if !self.header.is_empty() {
+            out.push_str(&render_row(&self.header, &widths));
+            out.push('\n');
+            out.push_str(&sep);
+            out.push('\n');
+        }
+        for (i, row) in self.rows.iter().enumerate() {
+            out.push_str(&render_row(row, &widths));
+            out.push('\n');
+            if self.hlines.contains(&(i + 1)) && i + 1 != self.rows.len() {
+                out.push_str(&sep);
+                out.push('\n');
+            }
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+fn render_row(cells: &[String], widths: &[usize]) -> String {
+    let mut s = String::from("|");
+    for (i, w) in widths.iter().enumerate() {
+        let c = cells.get(i).map(String::as_str).unwrap_or("");
+        let pad = w - c.chars().count();
+        s.push(' ');
+        s.push_str(c);
+        s.push_str(&" ".repeat(pad + 1));
+        s.push('|');
+    }
+    s
+}
+
+/// Convenience cell formatters.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", 100.0 * x)
+}
+
+pub fn pct3(x: f64) -> String {
+    format!("{:.3}%", 100.0 * x)
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo").header(&["method", "acc"]);
+        t.row(vec!["NeuroAda".into(), "82.7".into()]);
+        t.row(vec!["LoRA".into(), "74.7".into()]);
+        let s = t.render();
+        assert!(s.contains("| method   | acc  |") || s.contains("| method   | acc "));
+        let lines: Vec<&str> = s.lines().filter(|l| l.starts_with('|')).collect();
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "{s}");
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(pct(0.827), "82.7");
+        assert_eq!(pct3(0.00016), "0.016%");
+    }
+}

@@ -1,0 +1,212 @@
+//! Property-based tests over the paper's invariants (DESIGN.md §6),
+//! using the in-repo `testing::prop` mini-framework.
+
+use neuroada::peft::optimizer::{AdamState, AdamW};
+use neuroada::peft::selection::{select, select_topk, Strategy};
+use neuroada::peft::DeltaStore;
+use neuroada::tensor::Tensor;
+use neuroada::testing::{prop_check, PropConfig};
+use neuroada::util::rng::Rng;
+
+fn cfgd() -> PropConfig {
+    PropConfig { cases: 48, max_size: 24, base_seed: 0xBEEF }
+}
+
+/// Invariant 1: magnitude selection picks exactly the k largest |w| per row,
+/// all rows covered, indices distinct & in range, descending order.
+#[test]
+fn prop_selection_is_topk() {
+    prop_check(cfgd(), |rng, size| {
+        let d_out = 1 + rng.below(size.max(1));
+        let d_in = 2 + rng.below(size.max(1) + 2);
+        let k = 1 + rng.below(d_in.min(5));
+        let w = Tensor::randn(&[d_out, d_in], 1.0, rng);
+        let sel = select_topk(&w, k);
+        sel.check().map_err(|e| e.to_string())?;
+        for i in 0..d_out {
+            let row = w.row(i);
+            let picked = sel.idx.row(i);
+            let min_picked = picked.iter().map(|&j| row[j as usize].abs()).fold(f32::MAX, f32::min);
+            for (j, v) in row.iter().enumerate() {
+                if !picked.contains(&(j as i32)) && v.abs() > min_picked + 1e-9 {
+                    return Err(format!("row {i}: missed larger |w| at {j}"));
+                }
+            }
+            // descending
+            let mags: Vec<f32> = picked.iter().map(|&j| row[j as usize].abs()).collect();
+            if mags.windows(2).any(|m| m[0] < m[1] - 1e-9) {
+                return Err(format!("row {i}: not descending"));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// All four strategies produce structurally valid selections.
+#[test]
+fn prop_all_strategies_valid() {
+    prop_check(cfgd(), |rng, size| {
+        let d_out = 1 + rng.below(size.max(1));
+        let d_in = 2 + rng.below(size.max(1) + 2);
+        let k = 1 + rng.below(d_in.min(4));
+        let w = Tensor::randn(&[d_out, d_in], 1.0, rng);
+        let g = Tensor::randn(&[d_out, d_in], 1.0, rng);
+        for s in [Strategy::Magnitude, Strategy::Gradient, Strategy::Reverse, Strategy::Random] {
+            let sel = select(&w, k, s, Some(&g), rng);
+            sel.check().map_err(|e| format!("{s:?}: {e}"))?;
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Invariant 2a: DeltaStore serialization round-trips exactly.
+#[test]
+fn prop_delta_roundtrip() {
+    prop_check(cfgd(), |rng, size| {
+        let d_out = 1 + rng.below(size.max(1));
+        let d_in = 2 + rng.below(size.max(1) + 2);
+        let k = 1 + rng.below(d_in.min(4));
+        let w = Tensor::randn(&[d_out, d_in], 1.0, rng);
+        let sel = select_topk(&w, k);
+        let vals: Vec<f32> = (0..d_out * k).map(|_| rng.normal()).collect();
+        let d = DeltaStore::from_f32(sel, &vals);
+        let d2 = DeltaStore::from_bytes(&d.to_bytes()).map_err(|e| e)?;
+        if d.theta_f32() != d2.theta_f32() || d.sel != d2.sel {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Invariant 2b: merge(W, Δ) == W + dense(Δ), for any selection/values.
+#[test]
+fn prop_merge_equals_dense_add() {
+    prop_check(cfgd(), |rng, size| {
+        let d_out = 1 + rng.below(size.max(1));
+        let d_in = 2 + rng.below(size.max(1) + 2);
+        let k = 1 + rng.below(d_in.min(4));
+        let mut w = Tensor::randn(&[d_out, d_in], 1.0, rng);
+        let sel = select_topk(&w, k);
+        let vals: Vec<f32> = (0..d_out * k).map(|_| rng.normal() * 0.1).collect();
+        let d = DeltaStore::from_f32(sel, &vals);
+        let mut expect = w.clone();
+        expect.add_assign(&d.to_dense());
+        d.merge_into(&mut w);
+        if w.max_abs_diff(&expect) > 1e-6 {
+            return Err(format!("merge err {}", w.max_abs_diff(&expect)));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Invariant 4: sparse AdamW over the support == dense AdamW restricted to
+/// the support (moments never leak across coordinates).
+#[test]
+fn prop_sparse_adamw_equals_dense_restriction() {
+    prop_check(cfgd(), |rng, size| {
+        let n_dense = 4 + rng.below(size.max(1) + 4);
+        let n_sparse = 1 + rng.below(n_dense.min(6));
+        let support = rng.sample_distinct(n_dense, n_sparse);
+        let opt = AdamW { lr: 0.01, ..Default::default() };
+
+        let mut dense_p = vec![0.0f32; n_dense];
+        let mut dense_st = AdamState::new(n_dense);
+        let mut sparse_p = vec![0.0f32; n_sparse];
+        let mut sparse_st = AdamState::new(n_sparse);
+        for _ in 0..5 {
+            let g: Vec<f32> = (0..n_dense).map(|_| rng.normal()).collect();
+            // dense: gradient masked to the support (mask-based method)
+            let gm: Vec<f32> = (0..n_dense)
+                .map(|i| if support.contains(&i) { g[i] } else { 0.0 })
+                .collect();
+            opt.step(&mut dense_p, &gm, &mut dense_st);
+            // sparse: only the support coords exist (NeuroAda)
+            let gs: Vec<f32> = support.iter().map(|&i| g[i]).collect();
+            opt.step(&mut sparse_p, &gs, &mut sparse_st);
+        }
+        for (si, &di) in support.iter().enumerate() {
+            if (sparse_p[si] - dense_p[di]).abs() > 1e-6 {
+                return Err(format!("coord {di}: {} vs {}", sparse_p[si], dense_p[di]));
+            }
+        }
+        // off-support must never move under the masked method
+        for i in 0..n_dense {
+            if !support.contains(&i) && dense_p[i] != 0.0 {
+                return Err(format!("off-support coord {i} moved"));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Zero-θ bypass is an exact no-op on the forward (NeuroAda's init).
+#[test]
+fn prop_zero_delta_identity() {
+    prop_check(cfgd(), |rng, size| {
+        let d_out = 1 + rng.below(size.max(1));
+        let d_in = 2 + rng.below(size.max(1) + 2);
+        let k = 1 + rng.below(d_in.min(4));
+        let mut w = Tensor::randn(&[d_out, d_in], 1.0, rng);
+        let orig = w.clone();
+        let sel = select_topk(&w, k);
+        DeltaStore::zeros(sel).merge_into(&mut w);
+        if w != orig {
+            return Err("zero delta changed weights".into());
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Row-fraction masks enable exactly ⌈f·d_out⌉ whole rows.
+#[test]
+fn prop_row_fraction_mask() {
+    prop_check(cfgd(), |rng, size| {
+        let d_out = 1 + rng.below(size.max(1) + 2);
+        let k = 1 + rng.below(3);
+        let f = rng.f64();
+        let m = neuroada::peft::selection::row_fraction_mask(d_out, k, f, rng);
+        let want = ((f * d_out as f64).ceil() as usize).min(d_out);
+        let mut on = 0;
+        for i in 0..d_out {
+            let row: Vec<f32> = (0..k).map(|j| m.at2(i, j)).collect();
+            let all_on = row.iter().all(|&x| x == 1.0);
+            let all_off = row.iter().all(|&x| x == 0.0);
+            if !all_on && !all_off {
+                return Err(format!("row {i} partially enabled"));
+            }
+            if all_on {
+                on += 1;
+            }
+        }
+        if on != want {
+            return Err(format!("{on} rows on, want {want}"));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// bf16 quantization error of the delta store is bounded by BF16_EPS.
+#[test]
+fn prop_bf16_bounded_error() {
+    prop_check(cfgd(), |rng, size| {
+        let n = 1 + rng.below(size.max(1) + 4);
+        let w = Tensor::randn(&[n, 4], 1.0, rng);
+        let sel = select_topk(&w, 2);
+        let vals: Vec<f32> = (0..n * 2).map(|_| rng.normal()).collect();
+        let d = DeltaStore::from_f32(sel, &vals);
+        for (a, b) in vals.iter().zip(d.theta_f32()) {
+            if a.abs() > 1e-20 && ((a - b) / a).abs() > neuroada::tensor::bf16::BF16_EPS {
+                return Err(format!("{a} -> {b}"));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
