@@ -1,76 +1,113 @@
-//! Serving path: load a trained delta checkpoint, merge it into the
-//! backbone (Algorithm 1 Phase 3 — zero inference overhead), and serve
-//! batched multiple-choice requests through the eval artifact, reporting
-//! latency and throughput.
+//! Serving path, now on the `serve` subsystem: register trained NeuroAda
+//! delta checkpoints as named adapters on one frozen backbone, then serve a
+//! batched multiple-choice request stream through the production scheduler
+//! (continuous micro-batching, merged-LRU + sparse-bypass paths), reporting
+//! accuracy, latency percentiles and throughput.
 //!
-//! Run after `finetune_e2e` has produced a checkpoint:
+//! The example and `neuroada serve` share one code path — `serve::Server` —
+//! so what this demonstrates is exactly what production runs.
+//!
+//! Run after `finetune_e2e` has produced a checkpoint (falls back to a
+//! synthetic adapter otherwise):
 //!   `cargo run --release --example merge_and_serve -- [size]`
 
+use neuroada::bench::serve_bench::synth_adapter;
 use neuroada::config::presets;
-use neuroada::coordinator::common::{Coordinator, RunOpts};
-use neuroada::data::{eval_batch, tasks, Split};
-use neuroada::runtime::{state::run_once, Value};
+use neuroada::coordinator::common::RunOpts;
+use neuroada::data::{tasks, Split};
+use neuroada::serve::{
+    backend_from_manifest, load_or_init_backbone, AdapterRegistry, RegistryCfg, Request,
+    ServeCfg, Server,
+};
 use neuroada::train::checkpoint;
-use neuroada::util::stats::Summary;
+use neuroada::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let size = std::env::args().nth(1).unwrap_or_else(|| "nano".into());
-    let c = Coordinator::new("artifacts", RunOpts::default())?;
-    let cfg = presets::model(&size).unwrap();
+    let cfg = presets::model(&size).ok_or_else(|| anyhow::anyhow!("unknown size {size:?}"))?;
+    let opts = RunOpts::default();
+    let backbone = load_or_init_backbone(&opts, &cfg)?;
 
-    // backbone + trained deltas (falls back to zero deltas if no checkpoint)
-    let mut params = c.backbone(&size)?;
-    let ckpt = c.opts.out_dir.join("e2e").join(format!("{size}-deltas"));
+    // adapters: the finetune_e2e checkpoint, plus a synthetic second tenant
+    // to show two adapters sharing the resident backbone
+    let registry = AdapterRegistry::new(
+        cfg.clone(),
+        backbone.clone(),
+        RegistryCfg { merged_capacity: 1, promote_after: 2 },
+    );
+    let ckpt = opts.out_dir.join("e2e").join(format!("{size}-deltas"));
     match checkpoint::load_deltas(&ckpt) {
         Ok(deltas) => {
             let bytes: u64 = deltas.iter().map(|(_, d)| d.storage_bytes()).sum();
-            neuroada::model::merge_deltas(&mut params, &deltas)?;
-            println!("merged {} deltas ({}) from {ckpt:?}", deltas.len(), neuroada::util::fmt_bytes(bytes));
+            registry.register("e2e", deltas)?;
+            println!("registered adapter \"e2e\" ({}) from {ckpt:?}", neuroada::util::fmt_bytes(bytes));
         }
-        Err(_) => println!("no checkpoint at {ckpt:?} — serving the raw backbone (run finetune_e2e first)"),
+        Err(_) => {
+            registry.register("e2e", synth_adapter(&cfg, &backbone, 1, 0xE2E)?)?;
+            println!("no checkpoint at {ckpt:?} — registered a synthetic \"e2e\" adapter");
+        }
     }
+    registry.register("tenant-b", synth_adapter(&cfg, &backbone, 1, 0xB)?)?;
 
-    // serve batched requests
+    // backend: HLO eval artifact when available, else pure-rust forward
+    let backend = backend_from_manifest("artifacts", &size);
+
+    let srv = Server::start(registry, ServeCfg { max_batch: cfg.batch, ..Default::default() }, backend)?;
+
+    // serve the held-out stream of the boolq-like task, submitted in bursts
+    // so continuous micro-batching has same-adapter requests to coalesce
     let task = tasks::by_name("cs-boolq").unwrap();
-    let meta = c.manifest.get(&format!("{size}_eval"))?;
-    let mut store = params.clone();
-    for (name, d_out, _) in cfg.proj_shapes() {
-        store.insert_f32(format!("biases.{name}"), &[d_out], vec![0.0; d_out]);
-    }
-    let n_batches = 24;
-    let mut lat = Vec::new();
+    let n_req = 24 * cfg.batch;
+    let examples = neuroada::data::example_stream(&task, Split::Test, 1000, cfg.vocab, cfg.seq - 2, n_req);
+    let mut rng = Rng::new(1000);
     let mut correct = 0usize;
     let mut total = 0usize;
-    for i in 0..n_batches {
-        let examples = neuroada::data::example_stream(&task, Split::Test, 1000 + i, cfg.vocab, cfg.seq - 2, cfg.batch);
-        let eb = eval_batch(&examples, cfg.seq);
-        let t0 = std::time::Instant::now();
-        store.insert("tokens", Value::I32 { shape: vec![cfg.batch, cfg.seq], data: eb.tokens });
-        store.insert("pad_mask", Value::F32 { shape: vec![cfg.batch, cfg.seq], data: eb.pad_mask });
-        store.insert("last_pos", Value::I32 { shape: vec![cfg.batch], data: eb.last_pos });
-        let out = run_once(&c.engine, meta, &store)?;
-        lat.push(t0.elapsed().as_secs_f64());
-        let logits = out.get(&meta.outputs[0].name)?.as_f32()?;
-        for (j, ex) in examples.iter().enumerate() {
-            let row = &logits[j * cfg.vocab..(j + 1) * cfg.vocab];
-            let pick = ex.options.iter().enumerate()
-                .max_by(|a, b| row[*a.1 as usize].partial_cmp(&row[*b.1 as usize]).unwrap())
-                .map(|(x, _)| x).unwrap();
-            if pick == ex.label {
-                correct += 1;
+    for chunk in examples.chunks(cfg.batch) {
+        let submitted: Vec<_> = chunk
+            .iter()
+            .map(|ex| {
+                // 1-in-8 requests hit the second tenant: same backbone, other deltas
+                let adapter = if rng.below(8) == 0 { "tenant-b" } else { "e2e" };
+                let ticket = srv.submit(Request {
+                    adapter: adapter.into(),
+                    prompt: ex.prompt.clone(),
+                    options: ex.options.clone(),
+                });
+                (adapter, ticket)
+            })
+            .collect();
+        for ((adapter, ticket), ex) in submitted.into_iter().zip(chunk) {
+            let resp = ticket
+                .map_err(|e| anyhow::anyhow!("submit: {e}"))?
+                .wait()
+                .map_err(|e| anyhow::anyhow!("serve: {e}"))?;
+            if adapter == "e2e" {
+                total += 1;
+                if resp.pick == ex.label {
+                    correct += 1;
+                }
             }
-            total += 1;
         }
     }
-    let s = Summary::of(&lat);
+    let report = srv.shutdown();
+    let (p50, p95) = report
+        .latency
+        .as_ref()
+        .map(|s| (s.p50 * 1e3, s.p95 * 1e3))
+        .unwrap_or((f64::NAN, f64::NAN));
     println!(
-        "served {n_batches} batches × {}: accuracy {:.3}, p50 {:.1} ms, p95 {:.1} ms, {:.0} req/s",
-        cfg.batch,
-        correct as f64 / total as f64,
-        s.p50 * 1e3,
-        s.p95 * 1e3,
-        cfg.batch as f64 / s.mean,
+        "served {} requests: e2e accuracy {:.3}, p50 {p50:.1} ms, p95 {p95:.1} ms, {:.0} req/s, mean batch {:.2}",
+        report.served,
+        correct as f64 / total.max(1) as f64,
+        report.req_per_sec,
+        report.mean_batch,
     );
-    println!("(merged model = plain dense network: the serving path has no NeuroAda machinery at all)");
+    for (name, c) in &report.adapters {
+        println!(
+            "  {name}: {} served, {} merged hits / {} bypass hits",
+            c.served, c.merged_hits, c.bypass_hits
+        );
+    }
+    println!("(one frozen backbone, N adapters: hot ones merged+cached, cold ones served via the sparse bypass)");
     Ok(())
 }

@@ -155,6 +155,24 @@ def lower_eval(cfg: M.ModelConfig):
     return lowered, _flat_sig(args), _flat_sig(out_shape)
 
 
+def lower_eval_bypass(cfg: M.ModelConfig, k: int):
+    """Serving-bypass eval (decoder): extra scatter inputs `delta.idx.*` /
+    `delta.theta.*` apply the NeuroAda deltas in-graph, unmerged — the HLO
+    path of rust's `serve` registry bypass."""
+    fn, example_args = M.make_eval_bypass_fn(cfg, k)
+    params, idx, theta, tokens, pad_mask, last_pos = example_args()
+    args = {"params": params, "delta": {"idx": idx, "theta": theta},
+            "tokens": tokens, "pad_mask": pad_mask, "last_pos": last_pos}
+
+    def entry(a):
+        return fn(a["params"], a["delta"]["idx"], a["delta"]["theta"],
+                  a["tokens"], a["pad_mask"], a["last_pos"])
+
+    lowered = jax.jit(entry).lower(args)
+    out_shape = jax.eval_shape(entry, args)
+    return lowered, _flat_sig(args), _flat_sig(out_shape)
+
+
 # ---------------------------------------------------------------------------
 # Artifact set
 # ---------------------------------------------------------------------------
@@ -169,7 +187,7 @@ def artifact_plan(set_name: str):
     plan = []
 
     def add(size, method, k=0, impl="jnp"):
-        if method in ("eval", "pretrain", "gradprobe"):
+        if method in ("eval", "pretrain", "gradprobe", "eval_bypass"):
             name = f"{size}_{method}"
         elif method in ("neuroada",):
             name = f"{size}_{method}_k{k}" + ("_pallas" if impl == "pallas" else "")
@@ -190,6 +208,7 @@ def artifact_plan(set_name: str):
     add("nano", "lora")
     add("nano", "bitfit")
     add("nano", "eval")
+    add("nano", "eval_bypass", k=1)  # serving: unmerged scatter-input eval
     if set_name == "quick":
         return plan
     add("micro", "pretrain")
@@ -205,6 +224,7 @@ def artifact_plan(set_name: str):
     add("micro", "lora")
     add("micro", "bitfit")
     add("micro", "eval")
+    add("micro", "eval_bypass", k=1)  # serving: unmerged scatter-input eval
 
     # headline tables (T2/T3) on small; fig5 needs masked/full at every size
     add("small", "neuroada", k=1)
@@ -252,6 +272,9 @@ def build(out_dir: str, set_name: str, only: str | None = None) -> None:
         if method == "eval":
             lowered, sig_in, sig_out = lower_eval(cfg)
             meta = {"entry": "eval"}
+        elif method == "eval_bypass":
+            lowered, sig_in, sig_out = lower_eval_bypass(cfg, k)
+            meta = {"entry": "eval_bypass", "k": k}
         elif method == "pretrain":
             lowered, sig_in, sig_out = lower_pretrain(cfg)
             meta = {"entry": "pretrain"}

@@ -491,8 +491,45 @@ def make_eval_fn(cfg: ModelConfig):
     return eval_fn, example_args
 
 
+def make_eval_bypass_fn(cfg: ModelConfig, k: int):
+    """Serving-bypass eval entry (decoder only): last-position LM logits with
+    the NeuroAda deltas applied *in-graph* through an extra scatter input —
+    per projection an (idx [d_out, k], θ [d_out, k]) pair — instead of being
+    pre-merged into the weights.
+
+    This is the HLO twin of rust's `serve` unmerged path: one resident
+    backbone plus per-request compact deltas serves any number of adapters;
+    all-zero θ reproduces the frozen backbone exactly, so unregistered
+    projections cost nothing but the gather."""
+    if cfg.n_classes:
+        raise ValueError("eval_bypass is decoder-only")
+
+    def eval_fn(params, idx, theta, tokens, pad_mask, last_pos):
+        def adapt(name, x, w):
+            return neuroada_linear(x, w, idx[name], theta[name], impl="jnp")
+
+        logits = lm_logits(cfg, params, adapt, tokens, pad_mask)
+        return jnp.take_along_axis(logits, last_pos[:, None, None], axis=1)[:, 0]
+
+    def example_args(key=None):
+        params = init_params(cfg, key if key is not None else jax.random.PRNGKey(0))
+        idx = {n: jnp.zeros((sh[0], k), jnp.int32) for n, sh in cfg.proj_shapes().items()}
+        theta = {n: jnp.zeros((sh[0], k), jnp.float32) for n, sh in cfg.proj_shapes().items()}
+        return (
+            params,
+            idx,
+            theta,
+            jnp.zeros((cfg.batch, cfg.seq), jnp.int32),
+            jnp.ones((cfg.batch, cfg.seq), jnp.float32),
+            jnp.zeros((cfg.batch,), jnp.int32),
+        )
+
+    return eval_fn, example_args
+
+
 __all__ = [
     "ModelConfig", "SIZES", "init_params", "forward", "lm_logits", "cls_logits",
     "make_adapt", "lm_loss", "cls_loss", "adamw_update", "make_train_step",
-    "make_eval_fn", "neuroada_spec", "dense_spec", "lora_spec", "bitfit_spec",
+    "make_eval_fn", "make_eval_bypass_fn", "neuroada_spec", "dense_spec",
+    "lora_spec", "bitfit_spec",
 ]

@@ -1,0 +1,31 @@
+//! Serving benchmark binary (harness = false; in-repo bench harness).
+//!
+//!   forward/merged   one micro-batch through a merged backbone
+//!   forward/bypass   same batch through the unmerged sparse bypass
+//!   registry/merge   adapter promotion (merge + cache) cost
+//!   e2e/merged       scheduler throughput, all adapters promoted
+//!   e2e/bypass       scheduler throughput, merging disabled
+//!
+//! Run: `cargo bench --bench serve_bench` (NEUROADA_BENCH=full for longer
+//! budgets; NEUROADA_SERVE_SIZE / _ADAPTERS / _REQUESTS to scale).
+
+use neuroada::bench::serve_bench;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("NEUROADA_BENCH").as_deref() == Ok("full");
+    let size = std::env::var("NEUROADA_SERVE_SIZE").unwrap_or_else(|_| "nano".into());
+    let adapters: usize = std::env::var("NEUROADA_SERVE_ADAPTERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let requests: usize = std::env::var("NEUROADA_SERVE_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if full { 512 } else { 128 });
+    println!("== serve_bench ({} mode, size={size}, {adapters} adapters) ==",
+        if full { "full" } else { "quick" });
+    let report = serve_bench::run(&size, adapters, requests, !full)?;
+    print!("{}", report.render());
+    println!("(merged = dense backbone copy per hot adapter; bypass = one frozen backbone + sparse Δ per request)");
+    Ok(())
+}

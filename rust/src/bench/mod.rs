@@ -2,6 +2,8 @@
 //! offline; this provides the warmup/iterate/summarize loop the bench
 //! binaries use, with deterministic iteration counts and robust statistics).
 
+pub mod serve_bench;
+
 use crate::util::stats::Summary;
 use std::time::Instant;
 

@@ -1,0 +1,234 @@
+//! Serving-path benchmark (criterion-free): merged-vs-bypass forward
+//! latency, promotion (merge) cost, and end-to-end scheduler throughput
+//! with continuous micro-batching. Drives the same code the `neuroada
+//! serve` subcommand runs; numbers from here are the serving-perf baseline
+//! recorded in PR descriptions.
+
+use super::{Bench, BenchResult};
+use crate::config::{presets, ModelCfg};
+use crate::coordinator::pool::Pool;
+use crate::data::eval_batch;
+use crate::model::init::init_params;
+use crate::peft::{selection::select_topk, DeltaStore};
+use crate::runtime::ValueStore;
+use crate::serve::scheduler::host_logits;
+use crate::serve::{
+    AdapterRegistry, Backend, MetricsReport, RegistryCfg, Request, ServeCfg, Server,
+};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+/// One full serving-bench run.
+pub struct ServeBenchReport {
+    pub results: Vec<BenchResult>,
+    /// End-to-end scheduler run with every adapter promoted (merged path).
+    pub e2e_merged: MetricsReport,
+    /// Same load with merging disabled (pure bypass path).
+    pub e2e_bypass: MetricsReport,
+}
+
+impl ServeBenchReport {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.results {
+            out.push_str(&r.render());
+            out.push('\n');
+        }
+        for (name, m) in [("merged", &self.e2e_merged), ("bypass", &self.e2e_bypass)] {
+            let (p50, p95) = m
+                .latency
+                .as_ref()
+                .map(|s| (s.p50 * 1e3, s.p95 * 1e3))
+                .unwrap_or((f64::NAN, f64::NAN));
+            out.push_str(&format!(
+                "e2e/{name:<34} p50 {p50:>8.2} ms  p95 {p95:>8.2} ms  {:.0} req/s  \
+                 mean batch {:.2}\n",
+                m.req_per_sec, m.mean_batch,
+            ));
+        }
+        out
+    }
+}
+
+/// Synthesize a full-coverage adapter (one k-sparse delta per projection),
+/// deterministically from `seed`.
+pub fn synth_adapter(
+    cfg: &ModelCfg,
+    backbone: &ValueStore,
+    k: usize,
+    seed: u64,
+) -> Result<Vec<(String, DeltaStore)>> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for (name, d_out, d_in) in cfg.proj_shapes() {
+        let w = backbone.get(&format!("params.{name}"))?.as_f32()?.to_vec();
+        let wt = Tensor::from_vec(&[d_out, d_in], w);
+        let sel = select_topk(&wt, k);
+        let vals: Vec<f32> = (0..d_out * k).map(|_| rng.normal() * 0.05).collect();
+        out.push((name, DeltaStore::from_f32(sel, &vals)));
+    }
+    Ok(out)
+}
+
+/// Synthesize `n` distinct adapters, scattered across the worker pool.
+pub fn synth_adapters(
+    cfg: &ModelCfg,
+    backbone: &ValueStore,
+    n: usize,
+    k: usize,
+    seed: u64,
+) -> Result<Vec<(String, Vec<(String, DeltaStore)>)>> {
+    let pool = Pool::new(Pool::default_size());
+    let jobs: Vec<Box<dyn FnOnce() -> Result<(String, Vec<(String, DeltaStore)>)> + Send>> = (0
+        ..n)
+        .map(|i| {
+            let cfg = cfg.clone();
+            let backbone = backbone.clone();
+            let job: Box<dyn FnOnce() -> Result<(String, Vec<(String, DeltaStore)>)> + Send> =
+                Box::new(move || {
+                    let deltas = synth_adapter(&cfg, &backbone, k, seed ^ ((i as u64 + 1) << 8))?;
+                    Ok((format!("adapter-{i}"), deltas))
+                });
+            job
+        })
+        .collect();
+    pool.scatter(jobs).into_iter().collect()
+}
+
+fn gen_requests(cfg: &ModelCfg, adapters: &[String], n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let plen = 6 + rng.below(cfg.seq / 2);
+            Request {
+                adapter: adapters[i % adapters.len()].clone(),
+                prompt: (0..plen).map(|_| 4 + rng.below(cfg.vocab - 4) as i32).collect(),
+                options: vec![4, 5],
+            }
+        })
+        .collect()
+}
+
+fn e2e(
+    cfg: &ModelCfg,
+    backbone: &ValueStore,
+    adapters: &[(String, Vec<(String, DeltaStore)>)],
+    rcfg: RegistryCfg,
+    requests: Vec<Request>,
+    clients: usize,
+) -> Result<MetricsReport> {
+    let reg = AdapterRegistry::new(cfg.clone(), backbone.clone(), rcfg);
+    for (name, deltas) in adapters {
+        reg.register(name, deltas.clone())?;
+    }
+    let scfg = ServeCfg {
+        max_batch: cfg.batch,
+        max_queue: requests.len().max(1),
+        max_delay: std::time::Duration::from_millis(5),
+        workers: Pool::default_size(),
+    };
+    let srv = Server::start(reg, scfg, Backend::Host)?;
+    let (_served, rejected) = srv.drive_clients(requests, clients);
+    anyhow::ensure!(rejected == 0, "e2e bench rejected {rejected} requests");
+    Ok(srv.shutdown())
+}
+
+/// Run the full serving bench.
+pub fn run(size: &str, n_adapters: usize, n_requests: usize, quick: bool) -> Result<ServeBenchReport> {
+    let cfg = presets::model(size).ok_or_else(|| anyhow!("unknown size {size:?}"))?;
+    anyhow::ensure!(cfg.n_classes == 0, "serve bench needs a decoder size");
+    let b = if quick { Bench::quick() } else { Bench::default() };
+    let mut rng = Rng::new(7);
+    let backbone = init_params(&cfg, &mut rng);
+    let adapters = synth_adapters(&cfg, &backbone, n_adapters.max(2), 1, 77)?;
+    let names: Vec<String> = adapters.iter().map(|(n, _)| n.clone()).collect();
+
+    // --- single-batch forward: merged vs bypass --------------------------
+    let reg = AdapterRegistry::new(
+        cfg.clone(),
+        backbone.clone(),
+        RegistryCfg { merged_capacity: 1, promote_after: 1 },
+    );
+    for (name, deltas) in &adapters {
+        reg.register(name, deltas.clone())?;
+    }
+    let reqs = gen_requests(&cfg, &names[..1], cfg.batch, 5);
+    let examples: Vec<crate::data::Example> = reqs
+        .iter()
+        .map(|r| crate::data::Example {
+            prompt: r.prompt.clone(),
+            answer_tok: 0,
+            label: 0,
+            options: r.options.clone(),
+            score: 0.0,
+        })
+        .collect();
+    let eb = eval_batch(&examples, cfg.seq);
+    let n = reqs.len();
+    let mut results = Vec::new();
+
+    let merged = reg.merge_now(&names[0])?;
+    results.push(b.run(&format!("forward/merged {size} b={n}"), || {
+        std::hint::black_box(
+            host_logits(&cfg, &merged, &eb.tokens, &eb.pad_mask, &eb.last_pos, n).unwrap().numel(),
+        );
+    }));
+    let bypass = reg.bypass(&names[0])?;
+    results.push(b.run(&format!("forward/bypass {size} b={n}"), || {
+        std::hint::black_box(
+            host_logits(&cfg, &bypass, &eb.tokens, &eb.pad_mask, &eb.last_pos, n).unwrap().numel(),
+        );
+    }));
+
+    // --- promotion (merge) cost ------------------------------------------
+    results.push(b.run(&format!("registry/merge {size}"), || {
+        reg.demote(&names[0]);
+        std::hint::black_box(reg.merge_now(&names[0]).is_ok());
+    }));
+
+    // --- end-to-end scheduler: merged vs bypass --------------------------
+    let n_req = if quick { n_requests.min(64) } else { n_requests };
+    let clients = 4;
+    let requests = gen_requests(&cfg, &names, n_req, 11);
+    let e2e_merged = e2e(
+        &cfg,
+        &backbone,
+        &adapters,
+        RegistryCfg { merged_capacity: adapters.len(), promote_after: 1 },
+        requests.clone(),
+        clients,
+    )?;
+    let e2e_bypass = e2e(
+        &cfg,
+        &backbone,
+        &adapters,
+        RegistryCfg { merged_capacity: 0, promote_after: 1 },
+        requests,
+        clients,
+    )?;
+    Ok(ServeBenchReport { results, e2e_merged, e2e_bypass })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_bench_runs() {
+        let r = run("nano", 2, 16, true).unwrap();
+        assert_eq!(r.results.len(), 3);
+        assert_eq!(r.e2e_merged.served, 16);
+        assert_eq!(r.e2e_bypass.served, 16);
+        // path accounting: promotion happened in the merged run (a batch
+        // racing an in-flight merge may still ride the bypass, so merged
+        // hits are the deterministic signal); capacity 0 never merges
+        for c in r.e2e_merged.adapters.values() {
+            assert!(c.merged_hits > 0, "expected promotion: {c:?}");
+        }
+        for c in r.e2e_bypass.adapters.values() {
+            assert_eq!(c.merged_hits, 0);
+        }
+        assert!(r.render().contains("e2e/merged"));
+    }
+}

@@ -6,6 +6,7 @@
 //!   pretrain       build + cache a backbone checkpoint
 //!   train          one fine-tuning run (method × task), merge + eval
 //!   eval           zero-shot eval of a cached backbone on a task
+//!   serve          multi-adapter serving engine (registry + micro-batching)
 //!   audit          memory audit: analytic (Eq. 5/6) vs measured bytes
 //!   tasks          list the 23 synthetic tasks
 //!
@@ -98,6 +99,10 @@ SUBCOMMANDS
                     [--k 1] [--rank 8] [--strategy magnitude] [--fraction 1.0]
                     [--steps 1500] [--lr 8e-3] [--config cfg.toml]
   eval              zero-shot eval: --size nano --task cs-boolq [--n 200]
+  serve             multi-adapter serving: --size nano [--adapters 4]
+                    [--ckpt-dir DIR] [--requests 256] [--clients 4]
+                    [--workers N] [--queue 256] [--max-batch B]
+                    [--wait-ms 10] [--capacity 2] [--promote 3] [--host]
   audit             memory audit table: [--size nano] [--k 1]
   tasks             list the 23 synthetic tasks
 

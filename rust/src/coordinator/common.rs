@@ -60,6 +60,15 @@ impl RunOpts {
             ..Default::default()
         }
     }
+
+    /// Cache directory of the pretrained backbone for `size` under these
+    /// options — the single source of the layout, shared by the trainer,
+    /// `neuroada serve`, and the serving example.
+    pub fn backbone_dir(&self, size: &str) -> PathBuf {
+        self.out_dir
+            .join("backbones")
+            .join(format!("{size}-s{}-seed{}", self.pretrain_steps, self.seed))
+    }
 }
 
 pub struct Coordinator {
@@ -95,11 +104,7 @@ impl Coordinator {
     /// `runs/backbones/<size>-s<steps>` or pretrains and caches it.
     pub fn backbone(&self, size: &str) -> Result<ValueStore> {
         let steps = self.opts.pretrain_steps;
-        let dir = self
-            .opts
-            .out_dir
-            .join("backbones")
-            .join(format!("{size}-s{steps}-seed{}", self.opts.seed));
+        let dir = self.opts.backbone_dir(size);
         if dir.join("meta.json").exists() {
             return checkpoint::load_params(&dir);
         }

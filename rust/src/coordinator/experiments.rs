@@ -406,10 +406,9 @@ fn sweep_cell(
         let logits = out.get(&emeta.outputs[0].name)?.as_f32()?;
         for (i, ex) in chunk.iter().enumerate() {
             let row = &logits[i * cfg.vocab..(i + 1) * cfg.vocab];
-            let pick = ex.options.iter().enumerate()
-                .max_by(|a, b| row[*a.1 as usize].partial_cmp(&row[*b.1 as usize]).unwrap())
-                .map(|(j, _)| j).unwrap();
-            if pick == ex.label {
+            // NaN-safe: all-NaN rows (diverged run) score as incorrect
+            let pick = crate::util::nan_safe_argmax(ex.options.iter().map(|&o| row[o as usize]));
+            if pick == Some(ex.label) {
                 correct += 1;
             }
         }

@@ -11,6 +11,7 @@ use crate::data::{self, tasks::{Metric, Task}, Split};
 use crate::peft::{DeltaStore, MethodKind};
 use crate::runtime::{state::run_once, Engine, Manifest, TrainSession, Value, ValueStore};
 use crate::tensor::{ops, Tensor};
+use crate::util::nan_safe_argmax;
 use crate::util::stats::{matthews, pearson};
 use anyhow::{bail, Result};
 
@@ -135,16 +136,10 @@ pub fn eval_decoder(
         let logits = out.get(&spec.name)?.as_f32()?;
         for (i, ex) in chunk.iter().enumerate() {
             let row = &logits[i * cfg.vocab..(i + 1) * cfg.vocab];
-            let pick = ex
-                .options
-                .iter()
-                .enumerate()
-                .max_by(|a, b| {
-                    row[*a.1 as usize].partial_cmp(&row[*b.1 as usize]).unwrap()
-                })
-                .map(|(j, _)| j)
-                .unwrap();
-            if pick == ex.label {
+            // NaN-safe: a NaN logit (diverged run) must never win — or
+            // panic; an all-NaN row scores as incorrect, not as option 0
+            let pick = nan_safe_argmax(ex.options.iter().map(|&o| row[o as usize]));
+            if pick == Some(ex.label) {
                 correct += 1;
             }
         }

@@ -21,6 +21,9 @@
 //! * [`data`]        — synthetic corpus + the 23 downstream task generators.
 //! * [`train`]       — trainer loop, LR schedules, metrics, checkpoints.
 //! * [`eval`]        — accuracy / MCC / Pearson / multiple-choice harness.
+//! * [`serve`]       — multi-adapter serving engine: adapter registry with
+//!                     merged-LRU + sparse-bypass paths, continuous
+//!                     micro-batching scheduler, serving metrics.
 //! * [`sweep`]       — hyperparameter grid search (Tables 5–7).
 //! * [`coordinator`] — thread-pool job runner + experiment drivers (repro).
 //! * [`bench`]       — measurement harness used by `cargo bench` targets.
@@ -35,6 +38,7 @@ pub mod eval;
 pub mod model;
 pub mod peft;
 pub mod runtime;
+pub mod serve;
 pub mod sweep;
 pub mod tensor;
 pub mod testing;

@@ -37,6 +37,7 @@ fn run(argv: &[String]) -> Result<()> {
         "pretrain" => cmd_pretrain(&args),
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
         "audit" => cmd_audit(&args),
         "tasks" => cmd_tasks(),
         other => bail!("unknown subcommand {other:?}\n{USAGE}"),
@@ -208,6 +209,145 @@ fn cmd_eval(args: &Args) -> Result<()> {
         neuroada::eval::eval_decoder(&c.engine, &c.manifest, &size, &backbone, &zb, &task, n, c.opts.seed)?
     };
     println!("zero-shot {task_name} on {size}: {v:.3} (n={n})");
+    Ok(())
+}
+
+/// `neuroada serve`: stand up the multi-adapter serving engine, drive a
+/// synthetic request stream through it, and report serving metrics.
+///
+/// Adapters come from `--ckpt-dir` (every subdirectory holding a
+/// `deltas/` checkpoint becomes one adapter, named after the subdir) or are
+/// synthesized (`--adapters N`, distinct seeded deltas — the multi-tenant
+/// shape without needing N training runs). The backbone is the cached
+/// pretrained checkpoint when one exists for this size/seed, else seeded
+/// random init. The HLO eval artifacts are used when present (unless
+/// `--host`); the pure-rust forward otherwise.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use neuroada::bench::serve_bench::synth_adapters;
+    use neuroada::coordinator::pool::Pool;
+    use neuroada::data::tasks;
+    use neuroada::serve::{
+        backend_from_manifest, load_or_init_backbone, AdapterRegistry, Backend, RegistryCfg,
+        Request, ServeCfg, Server,
+    };
+    use neuroada::util::rng::Rng;
+    use std::time::Duration;
+
+    let size = args.opt_or("size", "nano");
+    let cfg = presets::model(&size).ok_or_else(|| anyhow!("unknown size {size:?}"))?;
+    if cfg.n_classes > 0 {
+        bail!("serve supports decoder sizes only (got encoder {size:?})");
+    }
+    let opts = opts_from(args)?;
+    let seed = opts.seed;
+    let backbone = load_or_init_backbone(&opts, &cfg)?;
+
+    let rcfg = RegistryCfg {
+        merged_capacity: args.opt_usize("capacity").map_err(|e| anyhow!(e))?.unwrap_or(2),
+        promote_after: args.opt_usize("promote").map_err(|e| anyhow!(e))?.unwrap_or(3) as u64,
+    };
+    let registry = AdapterRegistry::new(cfg.clone(), backbone.clone(), rcfg);
+
+    // adapters: checkpoint directory or synthetic fleet
+    if let Some(dir) = args.opt("ckpt-dir") {
+        let mut entries: Vec<_> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().join("deltas").is_dir())
+            .collect();
+        entries.sort_by_key(|e| e.file_name());
+        for e in &entries {
+            let name = e.file_name().to_string_lossy().to_string();
+            registry.register_dir(&name, e.path())?;
+            eprintln!("[serve] registered adapter {name:?} from {:?}", e.path());
+        }
+        if registry.is_empty() {
+            bail!("no delta checkpoints under {dir:?} (want <dir>/<name>/deltas/*.bin)");
+        }
+    } else {
+        let n = args.opt_usize("adapters").map_err(|e| anyhow!(e))?.unwrap_or(4).max(2);
+        eprintln!("[serve] synthesizing {n} adapters (k=1, seeded)");
+        for (name, deltas) in synth_adapters(&cfg, &backbone, n, 1, seed ^ 0xADAF)? {
+            registry.register(&name, deltas)?;
+        }
+    }
+    let names = registry.names();
+    let delta_bytes: u64 = names
+        .iter()
+        .filter_map(|n| registry.info(n))
+        .map(|i| i.delta_bytes)
+        .sum();
+    println!(
+        "serving {} adapters ({} of deltas) on one {size} backbone ({})",
+        names.len(),
+        fmt_bytes(delta_bytes),
+        fmt_bytes(backbone.total_bytes()),
+    );
+
+    // backend: HLO artifacts when available, else pure-rust forward
+    let backend = if args.flag("host") {
+        Backend::Host
+    } else {
+        backend_from_manifest(&args.opt_or("artifacts", "artifacts"), &size)
+    };
+    match &backend {
+        Backend::Host => eprintln!("[serve] backend: pure-rust forward"),
+        Backend::Hlo { bypass, .. } => eprintln!(
+            "[serve] backend: HLO eval artifact (bypass artifact: {})",
+            if bypass.is_some() { "present" } else { "absent, host fallback" }
+        ),
+    }
+
+    let scfg = ServeCfg {
+        max_batch: args.opt_usize("max-batch").map_err(|e| anyhow!(e))?.unwrap_or(cfg.batch),
+        max_queue: args.opt_usize("queue").map_err(|e| anyhow!(e))?.unwrap_or(256),
+        max_delay: Duration::from_millis(
+            args.opt_usize("wait-ms").map_err(|e| anyhow!(e))?.unwrap_or(10) as u64,
+        ),
+        workers: args
+            .opt_usize("workers")
+            .map_err(|e| anyhow!(e))?
+            .unwrap_or_else(Pool::default_size),
+    };
+    let srv = Server::start(registry, scfg, backend)?;
+
+    // synthetic traffic: task-shaped prompts, Zipf-popular adapters (so the
+    // LRU + promotion machinery sees realistic skew)
+    let n_req = args.opt_usize("requests").map_err(|e| anyhow!(e))?.unwrap_or(256);
+    let clients = args.opt_usize("clients").map_err(|e| anyhow!(e))?.unwrap_or(4).max(1);
+    let task = tasks::by_name("cs-boolq").unwrap();
+    let mut rng = Rng::new(seed ^ 0x5E21);
+    let requests: Vec<Request> = (0..n_req)
+        .map(|_| {
+            let ex = (task.gen)(&mut rng, cfg.vocab, cfg.seq - 2);
+            Request {
+                adapter: names[rng.zipf(names.len(), 1.1)].clone(),
+                prompt: ex.prompt,
+                options: ex.options,
+            }
+        })
+        .collect();
+    let (ok, rejected) = srv.drive_clients(requests, clients);
+
+    let mut adapter_table =
+        Table::new("Adapter registry").header(&["Adapter", "Deltas", "Requests", "Merges", "Resident"]);
+    for name in srv.registry().names() {
+        if let Some(i) = srv.registry().info(&name) {
+            adapter_table.row(vec![
+                name,
+                fmt_bytes(i.delta_bytes),
+                i.requests.to_string(),
+                i.merges.to_string(),
+                if i.merged_resident { "merged".into() } else { "bypass".into() },
+            ]);
+        }
+    }
+    adapter_table.print();
+    let report = srv.shutdown();
+    println!("{}", report.render());
+    println!(
+        "served {ok}/{n_req} requests ({rejected} rejected) across {} adapters from one resident backbone",
+        names.len()
+    );
     Ok(())
 }
 

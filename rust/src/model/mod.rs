@@ -13,23 +13,81 @@
 pub mod init;
 
 use crate::config::ModelCfg;
+use crate::peft::delta::ScatterView;
+use crate::peft::DeltaStore;
 use crate::runtime::{Value, ValueStore};
 use crate::tensor::{ops, Tensor};
 use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Named sparse deltas applied *during* the forward — the serving bypass
+/// path: `y = x Wᵀ + x Δᵀ` per adapted projection, with Δ read zero-copy
+/// from the compact store. One frozen backbone in memory can serve any
+/// number of adapters this way, at O(d_out·k) extra work per token instead
+/// of a dense merged weight copy per adapter.
+#[derive(Debug, Default, Clone)]
+pub struct DeltaOverlay<'a> {
+    views: BTreeMap<&'a str, ScatterView<'a>>,
+}
+
+impl<'a> DeltaOverlay<'a> {
+    /// Borrow the deltas of one adapter (projection name → compact store).
+    pub fn new(deltas: &'a [(String, DeltaStore)]) -> DeltaOverlay<'a> {
+        let views = deltas
+            .iter()
+            .map(|(name, d)| (name.as_str(), d.scatter_view()))
+            .collect();
+        DeltaOverlay { views }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ScatterView<'a>> {
+        self.views.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.views.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.views.is_empty()
+    }
+}
 
 /// Borrowed view of the named parameters for one forward pass.
 pub struct RefModel<'a> {
     pub cfg: &'a ModelCfg,
     pub params: &'a ValueStore,
+    /// Sparse per-projection bypass deltas (serving's unmerged path); `None`
+    /// for the plain dense forward.
+    pub overlay: Option<&'a DeltaOverlay<'a>>,
 }
 
 impl<'a> RefModel<'a> {
     pub fn new(cfg: &'a ModelCfg, params: &'a ValueStore) -> RefModel<'a> {
-        RefModel { cfg, params }
+        RefModel { cfg, params, overlay: None }
+    }
+
+    /// Forward with the unmerged bypass applied on top of a frozen backbone.
+    pub fn with_overlay(
+        cfg: &'a ModelCfg,
+        params: &'a ValueStore,
+        overlay: &'a DeltaOverlay<'a>,
+    ) -> RefModel<'a> {
+        RefModel { cfg, params, overlay: Some(overlay) }
     }
 
     fn p(&self, name: &str) -> Result<&[f32]> {
         self.params.get(&format!("params.{name}"))?.as_f32()
+    }
+
+    /// One adapted projection: dense `h Wᵀ` plus the sparse bypass term when
+    /// an overlay delta exists for `name`.
+    fn proj(&self, h: &Tensor, name: &str, w: &Tensor) -> Tensor {
+        let mut y = ops::matmul_nt(h, w);
+        if let Some(view) = self.overlay.and_then(|o| o.get(name)) {
+            view.accum_matmul_nt(h, &mut y);
+        }
+        y
     }
 
     fn p2(&self, name: &str, d_out: usize, d_in: usize) -> Result<Tensor> {
@@ -66,11 +124,11 @@ impl<'a> RefModel<'a> {
             let wk = self.p2(&format!("l{l}.wk"), d, d)?;
             let wv = self.p2(&format!("l{l}.wv"), d, d)?;
             let wo = self.p2(&format!("l{l}.wo"), d, d)?;
-            let q = ops::matmul_nt(&h, &wq);
-            let k = ops::matmul_nt(&h, &wk);
-            let v = ops::matmul_nt(&h, &wv);
+            let q = self.proj(&h, &format!("l{l}.wq"), &wq);
+            let k = self.proj(&h, &format!("l{l}.wk"), &wk);
+            let v = self.proj(&h, &format!("l{l}.wv"), &wv);
             let att = self.attention(&q, &k, &v, pad_mask, b)?;
-            let o = ops::matmul_nt(&att, &wo);
+            let o = self.proj(&att, &format!("l{l}.wo"), &wo);
             x.add_assign(&o);
 
             // mlp block
@@ -79,11 +137,11 @@ impl<'a> RefModel<'a> {
             }
             let w1 = self.p2(&format!("l{l}.w1"), cfg.d_ff, d)?;
             let w2 = self.p2(&format!("l{l}.w2"), d, cfg.d_ff)?;
-            let mut m = ops::matmul_nt(&h, &w1);
+            let mut m = self.proj(&h, &format!("l{l}.w1"), &w1);
             for vv in m.data.iter_mut() {
                 *vv = ops::silu(*vv);
             }
-            let mm = ops::matmul_nt(&m, &w2);
+            let mm = self.proj(&m, &format!("l{l}.w2"), &w2);
             x.add_assign(&mm);
         }
 
@@ -302,5 +360,40 @@ mod tests {
             m.lm_logits_at(&tokens, &pad, &last, 1).unwrap()
         };
         assert!(before.max_abs_diff(&after) > 1e-5);
+    }
+
+    #[test]
+    fn bypass_overlay_matches_merged_dense() {
+        use crate::peft::{selection::select_topk, DeltaStore};
+        let cfg = presets::model("nano").unwrap();
+        let mut rng = Rng::new(5);
+        let backbone = init_params(&cfg, &mut rng);
+        // one delta per adapted projection (the full serving shape)
+        let mut deltas: Vec<(String, DeltaStore)> = Vec::new();
+        for (name, d_out, d_in) in cfg.proj_shapes() {
+            let w = backbone.get(&format!("params.{name}")).unwrap().as_f32().unwrap().to_vec();
+            let wt = Tensor::from_vec(&[d_out, d_in], w);
+            let sel = select_topk(&wt, 2);
+            let vals: Vec<f32> = (0..d_out * 2).map(|_| rng.normal() * 0.05).collect();
+            deltas.push((name, DeltaStore::from_f32(sel, &vals)));
+        }
+        let tokens: Vec<i32> = (0..cfg.seq as i32).map(|i| 4 + (i % 30)).collect();
+        let pad = vec![1.0f32; cfg.seq];
+        let last = vec![(cfg.seq - 1) as i32];
+
+        let merged_logits = {
+            let mut merged = backbone.clone();
+            merge_deltas(&mut merged, &deltas).unwrap();
+            RefModel::new(&cfg, &merged).lm_logits_at(&tokens, &pad, &last, 1).unwrap()
+        };
+        let overlay = DeltaOverlay::new(&deltas);
+        let bypass_logits = RefModel::with_overlay(&cfg, &backbone, &overlay)
+            .lm_logits_at(&tokens, &pad, &last, 1)
+            .unwrap();
+        let diff = merged_logits.max_abs_diff(&bypass_logits);
+        assert!(diff <= 1e-5, "bypass vs merged logit diff {diff}");
+        // and the bypass actually changed the output vs the raw backbone
+        let raw = RefModel::new(&cfg, &backbone).lm_logits_at(&tokens, &pad, &last, 1).unwrap();
+        assert!(raw.max_abs_diff(&bypass_logits) > 1e-5);
     }
 }

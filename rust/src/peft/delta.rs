@@ -20,6 +20,9 @@ pub struct DeltaStore {
 }
 
 impl DeltaStore {
+    /// Checkpoint magic ("NEUA" little-endian) at header offset 12.
+    pub const MAGIC: u32 = 0x4E45_5541;
+
     /// Zero-initialized deltas (the NeuroAda init: training starts from the
     /// pretrained model's exact behaviour).
     pub fn zeros(sel: RowSelection) -> DeltaStore {
@@ -85,6 +88,13 @@ impl DeltaStore {
         }
     }
 
+    /// Zero-copy scatter view over the (index, value) pairs — the serving
+    /// bypass path borrows this instead of materializing a dense Δ or a
+    /// merged weight copy per adapter.
+    pub fn scatter_view(&self) -> ScatterView<'_> {
+        ScatterView { sel: &self.sel, values: &self.values }
+    }
+
     /// Materialize the dense Δ (test/debug only — the training path never
     /// does this; that's the point of the paper).
     pub fn to_dense(&self) -> Tensor {
@@ -101,8 +111,7 @@ impl DeltaStore {
     /// Serialize to bytes (checkpoint format): header + idx (i32 LE) + bf16.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(16 + self.values.len() * 6);
-        const MAGIC: u32 = 0x4E45_5541; // "NEUA"
-        for v in [self.sel.d_out as u32, self.sel.d_in as u32, self.sel.k as u32, MAGIC] {
+        for v in [self.sel.d_out as u32, self.sel.d_in as u32, self.sel.k as u32, Self::MAGIC] {
             out.extend_from_slice(&v.to_le_bytes());
         }
         for &i in &self.sel.idx.data {
@@ -114,14 +123,30 @@ impl DeltaStore {
         out
     }
 
-    /// Parse the checkpoint format back.
+    /// Parse the checkpoint format back, validating the header: the "NEUA"
+    /// magic at offset 12, non-degenerate dimensions, and k ≤ d_in.
     pub fn from_bytes(b: &[u8]) -> Result<DeltaStore, String> {
         if b.len() < 16 {
-            return Err("short delta blob".into());
+            return Err(format!("short delta blob: {} bytes < 16-byte header", b.len()));
         }
-        let rd = |o: usize| u32::from_le_bytes(b[o..o + 4].try_into().unwrap()) as usize;
-        let (d_out, d_in, k) = (rd(0), rd(4), rd(8));
-        let n = d_out * k;
+        let rd = |o: usize| u32::from_le_bytes(b[o..o + 4].try_into().unwrap());
+        let (d_out, d_in, k) = (rd(0) as usize, rd(4) as usize, rd(8) as usize);
+        let magic = rd(12);
+        if magic != Self::MAGIC {
+            return Err(format!(
+                "bad delta magic {magic:#010x} (want \"NEUA\" = {:#010x})",
+                Self::MAGIC
+            ));
+        }
+        if d_out == 0 || d_in == 0 || k == 0 {
+            return Err(format!("degenerate delta header: d_out={d_out} d_in={d_in} k={k}"));
+        }
+        if k > d_in {
+            return Err(format!("delta header k={k} > d_in={d_in}"));
+        }
+        let n = d_out
+            .checked_mul(k)
+            .ok_or_else(|| format!("delta header overflow: d_out={d_out} k={k}"))?;
         let need = 16 + n * 4 + n * 2;
         if b.len() != need {
             return Err(format!("delta blob len {} != {need}", b.len()));
@@ -140,10 +165,66 @@ impl DeltaStore {
     }
 }
 
+/// Borrowed scatter view of a [`DeltaStore`]: no copies, no dense Δ.
+///
+/// The serving bypass path (`W x + Δ_sparse x`) runs through this so one
+/// resident backbone can serve many adapters; only `d_out × k` multiply-adds
+/// per input row are added on top of the dense matmul.
+#[derive(Debug, Clone, Copy)]
+pub struct ScatterView<'a> {
+    sel: &'a RowSelection,
+    values: &'a [u16],
+}
+
+impl ScatterView<'_> {
+    pub fn d_out(&self) -> usize {
+        self.sel.d_out
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.sel.d_in
+    }
+
+    pub fn k(&self) -> usize {
+        self.sel.k
+    }
+
+    /// The (column, θ) pairs of output neuron `i`, decoded lazily.
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let k = self.sel.k;
+        (0..k).map(move |j| {
+            (self.sel.idx.at2(i, j) as usize, bf16::to_f32(self.values[i * k + j]))
+        })
+    }
+
+    /// out[r, i] += Σ_j θ[i, j] · x[r, idx[i, j]] — the sparse half of
+    /// `x (W + Δ)ᵀ`, accumulated into a dense `x Wᵀ` result. Matches
+    /// `ops::matmul_nt` operand conventions (x [n, d_in] → out [n, d_out]).
+    pub fn accum_matmul_nt(&self, x: &Tensor, out: &mut Tensor) {
+        let (d_out, k) = (self.sel.d_out, self.sel.k);
+        assert_eq!(x.rank(), 2);
+        assert_eq!(x.shape[1], self.sel.d_in, "x inner dim vs delta d_in");
+        assert_eq!(out.shape, vec![x.shape[0], d_out], "out shape vs delta d_out");
+        for r in 0..x.shape[0] {
+            let xr = x.row(r);
+            let or = out.row_mut(r);
+            for i in 0..d_out {
+                let mut acc = 0.0f32;
+                for j in 0..k {
+                    let col = self.sel.idx.at2(i, j) as usize;
+                    acc += bf16::to_f32(self.values[i * k + j]) * xr[col];
+                }
+                or[i] += acc;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::peft::selection::select_topk;
+    use crate::tensor::ops;
     use crate::util::rng::Rng;
 
     fn setup(d_out: usize, d_in: usize, k: usize, seed: u64) -> (Tensor, DeltaStore) {
@@ -214,5 +295,59 @@ mod tests {
         b.truncate(b.len() - 1);
         assert!(DeltaStore::from_bytes(&b).is_err());
         assert!(DeltaStore::from_bytes(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn from_bytes_rejects_bad_magic() {
+        let (_, d) = setup(4, 4, 1, 6);
+        let mut b = d.to_bytes();
+        b[12] ^= 0xFF; // corrupt the "NEUA" magic at offset 12
+        let err = DeltaStore::from_bytes(&b).unwrap_err();
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn from_bytes_rejects_degenerate_headers() {
+        let (_, d) = setup(4, 4, 2, 7);
+        let good = d.to_bytes();
+        // zero out each of d_out / d_in / k in turn
+        for field in 0..3 {
+            let mut b = good.clone();
+            b[field * 4..field * 4 + 4].copy_from_slice(&0u32.to_le_bytes());
+            let err = DeltaStore::from_bytes(&b).unwrap_err();
+            assert!(err.contains("degenerate"), "field {field}: {err}");
+        }
+        // k > d_in
+        let mut b = good;
+        b[8..12].copy_from_slice(&99u32.to_le_bytes());
+        assert!(DeltaStore::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn scatter_view_matches_dense_matmul() {
+        let mut rng = Rng::new(8);
+        let (_, d) = setup(9, 7, 3, 8);
+        let x = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        // dense: x · Δᵀ
+        let expect = ops::matmul_nt(&x, &d.to_dense());
+        let mut got = Tensor::zeros(&[5, 9]);
+        d.scatter_view().accum_matmul_nt(&x, &mut got);
+        assert!(got.max_abs_diff(&expect) < 1e-5, "{}", got.max_abs_diff(&expect));
+    }
+
+    #[test]
+    fn scatter_view_rows_decode() {
+        let (_, d) = setup(4, 6, 2, 9);
+        let view = d.scatter_view();
+        assert_eq!(view.d_out(), 4);
+        assert_eq!(view.k(), 2);
+        for i in 0..4 {
+            let pairs: Vec<(usize, f32)> = view.row(i).collect();
+            assert_eq!(pairs.len(), 2);
+            for (j, &(col, v)) in pairs.iter().enumerate() {
+                assert_eq!(col, d.sel.idx.at2(i, j) as usize);
+                assert_eq!(v, d.get(i, j));
+            }
+        }
     }
 }

@@ -1,0 +1,211 @@
+//! Continuous micro-batching: coalesce same-adapter requests.
+//!
+//! Requests accumulate in per-adapter FIFO queues. A batch becomes ready
+//! when either (a) an adapter has `max_batch` requests waiting — a *full*
+//! batch — or (b) the oldest request of some adapter has waited `max_delay`
+//! — a *deadline flush*, which bounds tail latency for sparse traffic.
+//! Expired requests take priority over full-but-young batches, so the
+//! bound holds even under sustained hot-adapter load. The batcher is pure
+//! data (no threads, no clocks of its own): callers pass `Instant`s in,
+//! which keeps the coalescing policy deterministic and unit-testable. The
+//! scheduler wraps it in a mutex + condvar.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// Per-adapter FIFO queues with full-batch and deadline-flush readiness.
+#[derive(Debug)]
+pub struct MicroBatcher<T> {
+    max_batch: usize,
+    max_delay: Duration,
+    queues: BTreeMap<String, VecDeque<(Instant, T)>>,
+    depth: usize,
+}
+
+impl<T> MicroBatcher<T> {
+    pub fn new(max_batch: usize, max_delay: Duration) -> MicroBatcher<T> {
+        assert!(max_batch >= 1);
+        MicroBatcher { max_batch, max_delay, queues: BTreeMap::new(), depth: 0 }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Total requests pending across all adapters.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.depth == 0
+    }
+
+    /// Enqueue one request for `adapter`, stamped with its arrival time.
+    pub fn push(&mut self, adapter: &str, enqueued: Instant, item: T) {
+        self.queues
+            .entry(adapter.to_string())
+            .or_default()
+            .push_back((enqueued, item));
+        self.depth += 1;
+    }
+
+    /// Pop the next ready batch at time `now`, if any.
+    ///
+    /// Deadline-expired requests outrank full-but-young batches — so the
+    /// `max_delay` tail-latency bound holds for a sparse-traffic adapter
+    /// even while a hot adapter keeps producing full batches — and among
+    /// equal-urgency candidates the oldest head wins (FIFO fairness across
+    /// adapters). Returns `(adapter, requests)` with at most `max_batch`
+    /// requests, oldest first.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<(String, Vec<T>)> {
+        let mut best: Option<(&String, Instant, bool)> = None;
+        for (name, q) in &self.queues {
+            let Some(&(head, _)) = q.front() else { continue };
+            let full = q.len() >= self.max_batch;
+            let expired = now.saturating_duration_since(head) >= self.max_delay;
+            if !full && !expired {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                // expired first (latency bound), then oldest head
+                Some((_, bt, bexp)) => {
+                    (expired, std::cmp::Reverse(head)) > (bexp, std::cmp::Reverse(bt))
+                }
+            };
+            if better {
+                best = Some((name, head, expired));
+            }
+        }
+        let name = best.map(|(n, _, _)| n.clone())?;
+        let items = self.take(&name);
+        Some((name, items))
+    }
+
+    /// Pop any pending batch regardless of readiness (shutdown drain).
+    pub fn pop_any(&mut self) -> Option<(String, Vec<T>)> {
+        let name = self.queues.keys().next().cloned()?;
+        let items = self.take(&name);
+        Some((name, items))
+    }
+
+    /// Earliest instant at which a pending request will deadline-flush.
+    /// `None` when idle. A queue that is already full is due immediately
+    /// (its head's deadline is in the past or `pop_ready` will fire first).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front().map(|(t, _)| *t + self.max_delay))
+            .min()
+    }
+
+    fn take(&mut self, name: &str) -> Vec<T> {
+        let q = self.queues.get_mut(name).expect("queue exists");
+        let n = q.len().min(self.max_batch);
+        let out: Vec<T> = q.drain(..n).map(|(_, it)| it).collect();
+        if q.is_empty() {
+            self.queues.remove(name);
+        }
+        self.depth -= out.len();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn at(base: Instant, ms: u64) -> Instant {
+        base + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn full_batch_fires_immediately() {
+        let base = Instant::now();
+        let mut b: MicroBatcher<u32> = MicroBatcher::new(3, Duration::from_millis(100));
+        b.push("a", at(base, 0), 1);
+        b.push("a", at(base, 1), 2);
+        assert!(b.pop_ready(at(base, 2)).is_none()); // not full, not expired
+        b.push("a", at(base, 2), 3);
+        let (name, items) = b.pop_ready(at(base, 2)).unwrap();
+        assert_eq!(name, "a");
+        assert_eq!(items, vec![1, 2, 3]); // FIFO order
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let base = Instant::now();
+        let mut b: MicroBatcher<u32> = MicroBatcher::new(16, Duration::from_millis(10));
+        b.push("a", at(base, 0), 7);
+        assert!(b.pop_ready(at(base, 5)).is_none());
+        let (name, items) = b.pop_ready(at(base, 10)).unwrap();
+        assert_eq!((name.as_str(), items), ("a", vec![7]));
+    }
+
+    #[test]
+    fn expired_partial_beats_young_full_batch() {
+        // the max_delay bound must hold even while a hot adapter keeps
+        // producing full batches
+        let base = Instant::now();
+        let mut b: MicroBatcher<u32> = MicroBatcher::new(2, Duration::from_millis(20));
+        b.push("old", at(base, 0), 1); // expired by t=45, partial
+        b.push("hot", at(base, 40), 2);
+        b.push("hot", at(base, 41), 3); // full, not expired at t=45
+        let (name, _) = b.pop_ready(at(base, 45)).unwrap();
+        assert_eq!(name, "old");
+        let (name, _) = b.pop_ready(at(base, 45)).unwrap();
+        assert_eq!(name, "hot");
+    }
+
+    #[test]
+    fn oldest_head_wins_among_expired() {
+        let base = Instant::now();
+        let mut b: MicroBatcher<u32> = MicroBatcher::new(8, Duration::from_millis(10));
+        b.push("younger", at(base, 5), 1);
+        b.push("elder", at(base, 0), 2);
+        let (name, _) = b.pop_ready(at(base, 100)).unwrap();
+        assert_eq!(name, "elder");
+    }
+
+    #[test]
+    fn oversize_queue_pops_in_max_batch_chunks() {
+        let base = Instant::now();
+        let mut b: MicroBatcher<u32> = MicroBatcher::new(2, Duration::from_millis(10));
+        for i in 0..5 {
+            b.push("a", at(base, i), i as u32);
+        }
+        assert_eq!(b.depth(), 5);
+        assert_eq!(b.pop_ready(at(base, 5)).unwrap().1, vec![0, 1]);
+        assert_eq!(b.pop_ready(at(base, 5)).unwrap().1, vec![2, 3]);
+        assert_eq!(b.depth(), 1);
+        // leftover single: not full, waits for its deadline
+        assert!(b.pop_ready(at(base, 5)).is_none());
+        assert_eq!(b.pop_ready(at(base, 14)).unwrap().1, vec![4]);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest_head() {
+        let base = Instant::now();
+        let mut b: MicroBatcher<u32> = MicroBatcher::new(4, Duration::from_millis(10));
+        assert!(b.next_deadline().is_none());
+        b.push("a", at(base, 3), 1);
+        b.push("b", at(base, 1), 2);
+        assert_eq!(b.next_deadline().unwrap(), at(base, 11));
+    }
+
+    #[test]
+    fn pop_any_drains_everything() {
+        let base = Instant::now();
+        let mut b: MicroBatcher<u32> = MicroBatcher::new(4, Duration::from_secs(60));
+        b.push("a", base, 1);
+        b.push("b", base, 2);
+        let mut n = 0;
+        while let Some((_, items)) = b.pop_any() {
+            n += items.len();
+        }
+        assert_eq!(n, 2);
+        assert!(b.is_empty());
+    }
+}

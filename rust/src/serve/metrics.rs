@@ -1,0 +1,243 @@
+//! Serving observability: request latency percentiles, throughput, queue
+//! depth, micro-batch occupancy, per-adapter path hit rates, and typed
+//! rejection counts.
+//!
+//! Counters are cheap to record under one mutex (the serving hot path is the
+//! forward pass, not the bookkeeping); [`ServeMetrics::snapshot`] freezes a
+//! consistent [`MetricsReport`] that renders as a table for the CLI and is
+//! asserted on by the scheduler tests.
+
+use super::registry::ServePath;
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Per-adapter serving counters.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct AdapterCounters {
+    pub served: u64,
+    /// Requests answered from a cached merged backbone (hot path).
+    pub merged_hits: u64,
+    /// Requests answered through the unmerged sparse bypass (cold path).
+    pub bypass_hits: u64,
+}
+
+impl AdapterCounters {
+    /// Fraction of this adapter's requests that hit a merged backbone.
+    pub fn merged_hit_rate(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.merged_hits as f64 / self.served as f64
+        }
+    }
+}
+
+/// Latency percentiles are computed over a sliding window of the most
+/// recent requests, so a long-running server's metric state (and snapshot
+/// sort cost) stays bounded regardless of uptime.
+pub const LATENCY_WINDOW: usize = 4096;
+
+#[derive(Default)]
+struct Inner {
+    /// Circular once `LATENCY_WINDOW` is reached (oldest overwritten).
+    latencies: Vec<f64>,
+    next_lat: usize,
+    batches: u64,
+    batch_req_sum: u64,
+    served: u64,
+    rejected: BTreeMap<&'static str, u64>,
+    adapters: BTreeMap<String, AdapterCounters>,
+    max_queue_depth: usize,
+}
+
+/// Shared, thread-safe metric sink for one serving engine.
+pub struct ServeMetrics {
+    start: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> ServeMetrics {
+        ServeMetrics::new()
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics { start: Instant::now(), inner: Mutex::new(Inner::default()) }
+    }
+
+    /// One request completed. `latency` is submit→response seconds.
+    pub fn record_served(&self, adapter: &str, path: ServePath, latency: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.served += 1;
+        if g.latencies.len() < LATENCY_WINDOW {
+            g.latencies.push(latency);
+        } else {
+            let i = g.next_lat;
+            g.latencies[i] = latency;
+            g.next_lat = (i + 1) % LATENCY_WINDOW;
+        }
+        let c = g.adapters.entry(adapter.to_string()).or_default();
+        c.served += 1;
+        match path {
+            ServePath::Merged => c.merged_hits += 1,
+            ServePath::Bypass => c.bypass_hits += 1,
+        }
+    }
+
+    /// One micro-batch executed with `n` coalesced requests.
+    pub fn record_batch(&self, n: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_req_sum += n as u64;
+    }
+
+    /// One request rejected, by typed-rejection kind (see `Reject::kind`).
+    pub fn record_reject(&self, kind: &'static str) {
+        *self.inner.lock().unwrap().rejected.entry(kind).or_insert(0) += 1;
+    }
+
+    /// Queue-depth gauge sample (taken at submit time).
+    pub fn observe_queue_depth(&self, depth: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.max_queue_depth = g.max_queue_depth.max(depth);
+    }
+
+    /// Freeze a consistent snapshot.
+    pub fn snapshot(&self) -> MetricsReport {
+        let g = self.inner.lock().unwrap();
+        let uptime = self.start.elapsed().as_secs_f64().max(1e-9);
+        MetricsReport {
+            uptime_secs: uptime,
+            served: g.served,
+            latency: (!g.latencies.is_empty()).then(|| Summary::of(&g.latencies)),
+            req_per_sec: g.served as f64 / uptime,
+            mean_batch: if g.batches == 0 {
+                0.0
+            } else {
+                g.batch_req_sum as f64 / g.batches as f64
+            },
+            batches: g.batches as usize,
+            max_queue_depth: g.max_queue_depth,
+            rejected: g.rejected.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+            adapters: g.adapters.clone(),
+        }
+    }
+}
+
+/// Frozen metrics snapshot.
+#[derive(Debug, Clone)]
+pub struct MetricsReport {
+    pub uptime_secs: f64,
+    pub served: u64,
+    /// Latency summary in seconds over the most recent [`LATENCY_WINDOW`]
+    /// requests (None before the first response).
+    pub latency: Option<Summary>,
+    pub req_per_sec: f64,
+    /// Mean coalesced requests per executed micro-batch.
+    pub mean_batch: f64,
+    pub batches: usize,
+    pub max_queue_depth: usize,
+    pub rejected: BTreeMap<String, u64>,
+    pub adapters: BTreeMap<String, AdapterCounters>,
+}
+
+impl MetricsReport {
+    pub fn total_rejected(&self) -> u64 {
+        self.rejected.values().sum()
+    }
+
+    /// Render the snapshot as printable tables.
+    pub fn render(&self) -> String {
+        let (p50, p95) = self
+            .latency
+            .as_ref()
+            .map(|s| (s.p50 * 1e3, s.p95 * 1e3))
+            .unwrap_or((f64::NAN, f64::NAN));
+        let mut t = Table::new("Serving metrics").header(&["Metric", "Value"]);
+        t.row(vec!["served".into(), self.served.to_string()]);
+        t.row(vec!["rejected".into(), self.total_rejected().to_string()]);
+        t.row(vec!["req/s".into(), format!("{:.1}", self.req_per_sec)]);
+        t.row(vec!["p50 latency".into(), format!("{p50:.2} ms")]);
+        t.row(vec!["p95 latency".into(), format!("{p95:.2} ms")]);
+        t.row(vec!["batches".into(), self.batches.to_string()]);
+        t.row(vec!["mean batch".into(), format!("{:.2}", self.mean_batch)]);
+        t.row(vec!["max queue depth".into(), self.max_queue_depth.to_string()]);
+        for (kind, n) in &self.rejected {
+            t.row(vec![format!("rejected/{kind}"), n.to_string()]);
+        }
+        let mut out = t.render();
+        if !self.adapters.is_empty() {
+            let mut a = Table::new("Per-adapter")
+                .header(&["Adapter", "Served", "Merged hits", "Bypass hits", "Merged rate"]);
+            for (name, c) in &self.adapters {
+                a.row(vec![
+                    name.clone(),
+                    c.served.to_string(),
+                    c.merged_hits.to_string(),
+                    c.bypass_hits.to_string(),
+                    format!("{:.0}%", 100.0 * c.merged_hit_rate()),
+                ]);
+            }
+            out.push('\n');
+            out.push_str(&a.render());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_snapshot() {
+        let m = ServeMetrics::new();
+        m.record_served("a", ServePath::Merged, 0.010);
+        m.record_served("a", ServePath::Bypass, 0.020);
+        m.record_served("b", ServePath::Bypass, 0.030);
+        m.record_batch(2);
+        m.record_batch(1);
+        m.record_reject("queue_full");
+        m.observe_queue_depth(3);
+        m.observe_queue_depth(1);
+        let r = m.snapshot();
+        assert_eq!(r.served, 3);
+        assert_eq!(r.total_rejected(), 1);
+        assert_eq!(r.max_queue_depth, 3);
+        assert_eq!(r.batches, 2);
+        assert!((r.mean_batch - 1.5).abs() < 1e-9);
+        let a = &r.adapters["a"];
+        assert_eq!(a.merged_hits, 1);
+        assert_eq!(a.bypass_hits, 1);
+        assert!((a.merged_hit_rate() - 0.5).abs() < 1e-9);
+        let lat = r.latency.unwrap();
+        assert!(lat.p50 >= 0.010 && lat.p95 <= 0.031);
+        assert!(r.render().contains("queue_full"));
+    }
+
+    #[test]
+    fn latency_window_is_bounded() {
+        let m = ServeMetrics::new();
+        for i in 0..(LATENCY_WINDOW + 100) {
+            m.record_served("a", ServePath::Bypass, i as f64);
+        }
+        let r = m.snapshot();
+        assert_eq!(r.served, (LATENCY_WINDOW + 100) as u64);
+        let lat = r.latency.unwrap();
+        assert_eq!(lat.n, LATENCY_WINDOW);
+        assert!(lat.min >= 100.0, "oldest samples overwritten, got min {}", lat.min);
+    }
+
+    #[test]
+    fn empty_snapshot_renders() {
+        let r = ServeMetrics::new().snapshot();
+        assert_eq!(r.served, 0);
+        assert!(r.latency.is_none());
+        assert!(r.render().contains("Serving metrics"));
+    }
+}

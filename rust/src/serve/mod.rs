@@ -1,0 +1,75 @@
+//! Multi-adapter serving engine: hot-swappable NeuroAda deltas on one
+//! frozen backbone, with continuous micro-batching.
+//!
+//! NeuroAda's compact `(index, value)` delta store (§3.2) makes per-task
+//! adapters ~0.02% of model size, so the natural serving shape is *many
+//! adapters, one backbone*. This subsystem provides exactly that:
+//!
+//! * [`registry`] — [`AdapterRegistry`]: load/evict delta checkpoints by
+//!   name; an LRU cache of *merged* backbones for hot adapters and a
+//!   zero-copy **unmerged bypass** (`x Wᵀ + x Δᵀ` per projection, via
+//!   `DeltaStore::scatter_view`) for cold ones. Bypass and merged paths are
+//!   parity-tested to float tolerance.
+//! * [`batcher`]  — [`MicroBatcher`]: per-adapter request coalescing with
+//!   full-batch dispatch and deadline flush (continuous micro-batching).
+//! * [`scheduler`] — [`Server`]: bounded admission queue with typed
+//!   backpressure rejections, a worker-thread pool executing batches
+//!   through the pure-rust forward ([`Backend::Host`]) or the AOT HLO eval
+//!   artifacts ([`Backend::Hlo`], including the scatter-input bypass
+//!   artifact), and per-request response channels.
+//! * [`metrics`]  — [`ServeMetrics`]: p50/p95 latency, req/s, queue depth,
+//!   micro-batch occupancy, per-adapter merged/bypass hit rates, rejection
+//!   counts.
+//!
+//! See `docs/serving.md` for the architecture and lifecycle, and
+//! `bench/serve_bench` for the merged-vs-bypass perf baseline. The
+//! `neuroada serve` CLI subcommand drives all of it end-to-end.
+
+pub mod batcher;
+pub mod metrics;
+pub mod registry;
+pub mod scheduler;
+
+pub use batcher::MicroBatcher;
+pub use metrics::{AdapterCounters, MetricsReport, ServeMetrics};
+pub use registry::{AdapterInfo, AdapterRegistry, ModelRef, RegistryCfg, ServePath};
+pub use scheduler::{Backend, Reject, Request, Response, ServeCfg, Server, Ticket};
+
+use crate::config::ModelCfg;
+use crate::coordinator::common::RunOpts;
+use crate::runtime::{Manifest, ValueStore};
+
+/// Pick the serving backend for `size`: the HLO eval artifact (plus the
+/// scatter-input bypass artifact when built) if a manifest is present,
+/// else the pure-rust forward. One policy, shared by the CLI and the
+/// serving example.
+pub fn backend_from_manifest(artifacts_dir: &str, size: &str) -> Backend {
+    match Manifest::load(artifacts_dir) {
+        Ok(m) => match m.get(&format!("{size}_eval")) {
+            Ok(eval) => Backend::Hlo {
+                eval: eval.clone(),
+                bypass: m.artifacts.get(&format!("{size}_eval_bypass")).cloned(),
+            },
+            Err(_) => Backend::Host,
+        },
+        Err(_) => Backend::Host,
+    }
+}
+
+/// The serving backbone: the cached pretrain checkpoint for (cfg.name,
+/// opts) when one exists, else deterministic seeded init. The fallback is
+/// logged loudly — trained adapters served on a random backbone produce
+/// garbage logits.
+pub fn load_or_init_backbone(opts: &RunOpts, cfg: &ModelCfg) -> anyhow::Result<ValueStore> {
+    let dir = opts.backbone_dir(&cfg.name);
+    if dir.join("meta.json").exists() {
+        eprintln!("[serve] backbone: cached checkpoint {dir:?}");
+        crate::train::checkpoint::load_params(&dir)
+    } else {
+        eprintln!(
+            "[serve] backbone: no cached checkpoint at {dir:?}; seeded random init \
+             (run `neuroada pretrain` first for real serving)"
+        );
+        Ok(crate::model::init::init_params(cfg, &mut crate::util::rng::Rng::new(opts.seed)))
+    }
+}

@@ -1,0 +1,487 @@
+//! Adapter registry: many NeuroAda delta checkpoints on one frozen backbone.
+//!
+//! Each adapter is a set of compact `(index, value)` delta stores (~0.02% of
+//! model size at k=1), so hundreds fit in memory next to a single backbone.
+//! Serving resolves an adapter to one of two weight views:
+//!
+//! * **merged** — a dense backbone copy with the deltas folded in (Algorithm
+//!   1 Phase 3): zero per-token overhead, but costs a full parameter copy.
+//!   An LRU cache of `merged_capacity` such copies holds the hot adapters.
+//! * **bypass** — the frozen backbone plus a zero-copy scatter view of the
+//!   deltas, applied per projection as `x Wᵀ + x Δᵀ` during the forward.
+//!   Cold adapters serve through this without ever materializing weights.
+//!
+//! An adapter is promoted (merged + cached) once it has been requested
+//! `promote_after` times; promotion evicts the least-recently-used merged
+//! copy when the cache is full. The deltas themselves stay registered either
+//! way, so demotion only costs the next request the bypass overhead.
+
+use crate::config::ModelCfg;
+use crate::peft::DeltaStore;
+use crate::runtime::ValueStore;
+use crate::train::checkpoint;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Which weight view served a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServePath {
+    Merged,
+    Bypass,
+}
+
+impl ServePath {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServePath::Merged => "merged",
+            ServePath::Bypass => "bypass",
+        }
+    }
+}
+
+/// A resolved weight view for one request batch. Both variants are cheap
+/// `Arc` clones — nothing tensor-sized is copied at resolve time.
+#[derive(Clone)]
+pub enum ModelRef {
+    Merged(Arc<ValueStore>),
+    Bypass { backbone: Arc<ValueStore>, deltas: Arc<Vec<(String, DeltaStore)>> },
+}
+
+impl ModelRef {
+    pub fn path(&self) -> ServePath {
+        match self {
+            ModelRef::Merged(_) => ServePath::Merged,
+            ModelRef::Bypass { .. } => ServePath::Bypass,
+        }
+    }
+}
+
+/// Registry policy knobs.
+#[derive(Debug, Clone)]
+pub struct RegistryCfg {
+    /// Merged backbone copies kept resident (0 disables the merged path).
+    pub merged_capacity: usize,
+    /// Requests before an adapter earns a merged copy. 1 = merge on first
+    /// use; higher values keep one-off tenants on the cheap bypass path.
+    pub promote_after: u64,
+}
+
+impl Default for RegistryCfg {
+    fn default() -> RegistryCfg {
+        RegistryCfg { merged_capacity: 2, promote_after: 3 }
+    }
+}
+
+/// Point-in-time view of one adapter's registry state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdapterInfo {
+    pub requests: u64,
+    pub merges: u64,
+    pub merged_resident: bool,
+    pub delta_bytes: u64,
+}
+
+struct Entry {
+    deltas: Arc<Vec<(String, DeltaStore)>>,
+    merged: Option<Arc<ValueStore>>,
+    /// A worker is building this adapter's merged copy outside the lock;
+    /// concurrent requests keep riding the bypass instead of piling up.
+    merge_in_flight: bool,
+    /// Bumped on (re-)registration: a merge built from an older generation's
+    /// deltas must never be installed into a hot-swapped entry.
+    generation: u64,
+    last_used: u64,
+    requests: u64,
+    merges: u64,
+}
+
+struct Inner {
+    entries: BTreeMap<String, Entry>,
+    tick: u64,
+}
+
+/// Thread-safe multi-adapter store over one frozen backbone.
+pub struct AdapterRegistry {
+    cfg: ModelCfg,
+    rcfg: RegistryCfg,
+    backbone: Arc<ValueStore>,
+    inner: Mutex<Inner>,
+}
+
+impl AdapterRegistry {
+    pub fn new(cfg: ModelCfg, backbone: ValueStore, rcfg: RegistryCfg) -> AdapterRegistry {
+        AdapterRegistry {
+            cfg,
+            rcfg,
+            backbone: Arc::new(backbone),
+            inner: Mutex::new(Inner { entries: BTreeMap::new(), tick: 0 }),
+        }
+    }
+
+    pub fn model_cfg(&self) -> &ModelCfg {
+        &self.cfg
+    }
+
+    pub fn backbone(&self) -> Arc<ValueStore> {
+        self.backbone.clone()
+    }
+
+    /// Register (or replace) an adapter. Deltas are validated against the
+    /// backbone's projection shapes; a replacement drops any merged copy.
+    pub fn register(&self, name: &str, deltas: Vec<(String, DeltaStore)>) -> Result<()> {
+        if name.is_empty() {
+            bail!("adapter name must be non-empty");
+        }
+        if deltas.is_empty() {
+            bail!("adapter {name:?}: no deltas");
+        }
+        let shapes: BTreeMap<String, (usize, usize)> = self
+            .cfg
+            .proj_shapes()
+            .into_iter()
+            .map(|(n, o, i)| (n, (o, i)))
+            .collect();
+        for (proj, d) in &deltas {
+            let (d_out, d_in) = *shapes
+                .get(proj)
+                .ok_or_else(|| anyhow!("adapter {name:?}: unknown projection {proj:?}"))?;
+            if d.d_out() != d_out || d.sel.d_in != d_in {
+                bail!(
+                    "adapter {name:?}: {proj} delta is {}×{}, backbone wants {d_out}×{d_in}",
+                    d.d_out(),
+                    d.sel.d_in
+                );
+            }
+            d.sel.check().map_err(|e| anyhow!("adapter {name:?}: {proj}: {e}"))?;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        g.entries.insert(
+            name.to_string(),
+            Entry {
+                deltas: Arc::new(deltas),
+                merged: None,
+                merge_in_flight: false,
+                generation: tick,
+                last_used: tick,
+                requests: 0,
+                merges: 0,
+            },
+        );
+        Ok(())
+    }
+
+    /// Register an adapter from a delta checkpoint directory (the layout
+    /// `train::checkpoint::save_deltas` writes: `<dir>/deltas/<proj>.bin`).
+    pub fn register_dir(&self, name: &str, dir: impl AsRef<Path>) -> Result<()> {
+        let deltas = checkpoint::load_deltas(dir)?;
+        self.register(name, deltas)
+    }
+
+    /// Drop an adapter entirely (deltas and any merged copy).
+    pub fn evict(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().entries.remove(name).is_some()
+    }
+
+    /// Drop only the merged copy, demoting the adapter to the bypass path.
+    pub fn demote(&self, name: &str) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.entries.get_mut(name) {
+            Some(e) => e.merged.take().is_some(),
+            None => false,
+        }
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().entries.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Merged copies currently resident.
+    pub fn merged_count(&self) -> usize {
+        self.inner.lock().unwrap().entries.values().filter(|e| e.merged.is_some()).count()
+    }
+
+    pub fn is_merged(&self, name: &str) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .entries
+            .get(name)
+            .is_some_and(|e| e.merged.is_some())
+    }
+
+    pub fn info(&self, name: &str) -> Option<AdapterInfo> {
+        let g = self.inner.lock().unwrap();
+        g.entries.get(name).map(|e| AdapterInfo {
+            requests: e.requests,
+            merges: e.merges,
+            merged_resident: e.merged.is_some(),
+            delta_bytes: e.deltas.iter().map(|(_, d)| d.storage_bytes()).sum(),
+        })
+    }
+
+    /// Resolve one request for an adapter. See [`AdapterRegistry::resolve_batch`].
+    pub fn resolve(&self, name: &str) -> Option<ModelRef> {
+        self.resolve_batch(name, 1)
+    }
+
+    /// Resolve a coalesced batch of `n_requests` for an adapter, applying
+    /// the promotion policy (`promote_after` counts *requests*, not
+    /// batches). `None` for unknown adapters.
+    ///
+    /// The O(params) merge itself runs OUTSIDE the registry lock, so
+    /// admission (`contains`) and other workers never stall behind a
+    /// promotion; a `merge_in_flight` flag keeps concurrent batches of the
+    /// same adapter on the bypass instead of racing to build duplicates.
+    pub fn resolve_batch(&self, name: &str, n_requests: u64) -> Option<ModelRef> {
+        let (deltas, generation) = {
+            let mut g = self.inner.lock().unwrap();
+            g.tick += 1;
+            let tick = g.tick;
+            let e = g.entries.get_mut(name)?;
+            e.last_used = tick;
+            e.requests += n_requests;
+            if let Some(m) = &e.merged {
+                return Some(ModelRef::Merged(m.clone()));
+            }
+            let promote = self.rcfg.merged_capacity > 0
+                && e.requests >= self.rcfg.promote_after
+                && !e.merge_in_flight;
+            if !promote {
+                return Some(ModelRef::Bypass {
+                    backbone: self.backbone.clone(),
+                    deltas: e.deltas.clone(),
+                });
+            }
+            e.merge_in_flight = true;
+            (e.deltas.clone(), e.generation)
+        };
+        // build the merged copy without holding the lock
+        let merged = self.build_merged(&deltas);
+        let mut g = self.inner.lock().unwrap();
+        match g.entries.get_mut(name) {
+            // install only into the generation we merged from — a hot
+            // re-registered adapter must never be served stale weights
+            Some(e) if e.generation == generation => {
+                e.merge_in_flight = false;
+                if e.merged.is_none() {
+                    e.merged = Some(merged);
+                    e.merges += 1;
+                }
+                let m = e.merged.clone().expect("just installed");
+                self.evict_lru_over_capacity(&mut g, name);
+                Some(ModelRef::Merged(m))
+            }
+            // evicted or replaced while merging: discard the stale build and
+            // serve this batch from the delta snapshot it was admitted under
+            _ => Some(ModelRef::Bypass { backbone: self.backbone.clone(), deltas }),
+        }
+    }
+
+    /// Force-promote an adapter to a merged copy (bench/tests).
+    pub fn merge_now(&self, name: &str) -> Result<ModelRef> {
+        let (deltas, generation) = {
+            let mut g = self.inner.lock().unwrap();
+            g.tick += 1;
+            let tick = g.tick;
+            let e = g.entries.get_mut(name).ok_or_else(|| anyhow!("unknown adapter {name:?}"))?;
+            e.last_used = tick;
+            if let Some(m) = &e.merged {
+                return Ok(ModelRef::Merged(m.clone()));
+            }
+            (e.deltas.clone(), e.generation)
+        };
+        let merged = self.build_merged(&deltas);
+        let mut g = self.inner.lock().unwrap();
+        let e = g
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("adapter {name:?} evicted during merge"))?;
+        if e.generation != generation {
+            bail!("adapter {name:?} re-registered during merge");
+        }
+        if e.merged.is_none() {
+            e.merged = Some(merged);
+            e.merges += 1;
+        }
+        let m = e.merged.clone().expect("just installed");
+        self.evict_lru_over_capacity(&mut g, name);
+        Ok(ModelRef::Merged(m))
+    }
+
+    /// Force the bypass view regardless of cache state (bench/tests).
+    pub fn bypass(&self, name: &str) -> Result<ModelRef> {
+        let g = self.inner.lock().unwrap();
+        let e = g.entries.get(name).ok_or_else(|| anyhow!("unknown adapter {name:?}"))?;
+        Ok(ModelRef::Bypass { backbone: self.backbone.clone(), deltas: e.deltas.clone() })
+    }
+
+    fn build_merged(&self, deltas: &[(String, DeltaStore)]) -> Arc<ValueStore> {
+        let mut store = (*self.backbone).clone();
+        crate::model::merge_deltas(&mut store, deltas)
+            .expect("registered deltas merge (validated at register)");
+        Arc::new(store)
+    }
+
+    /// Evict least-recently-used merged copies until within capacity,
+    /// never evicting `keep` (the adapter just promoted).
+    fn evict_lru_over_capacity(&self, g: &mut Inner, keep: &str) {
+        loop {
+            let resident = g.entries.values().filter(|e| e.merged.is_some()).count();
+            if resident <= self.rcfg.merged_capacity {
+                return;
+            }
+            let victim = g
+                .entries
+                .iter()
+                .filter(|(n, e)| e.merged.is_some() && n.as_str() != keep)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(n, _)| n.clone());
+            match victim {
+                Some(v) => {
+                    g.entries.get_mut(&v).unwrap().merged = None;
+                }
+                None => return, // only `keep` is resident and capacity is 0
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::init::init_params;
+    use crate::peft::selection::select_topk;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn nano_registry(rcfg: RegistryCfg) -> AdapterRegistry {
+        let cfg = presets::model("nano").unwrap();
+        let backbone = init_params(&cfg, &mut Rng::new(1));
+        AdapterRegistry::new(cfg, backbone, rcfg)
+    }
+
+    /// A small adapter touching only l0.wq, seeded per name.
+    fn adapter(reg: &AdapterRegistry, seed: u64) -> Vec<(String, DeltaStore)> {
+        let mut rng = Rng::new(seed);
+        let w = reg.backbone().get("params.l0.wq").unwrap().as_f32().unwrap().to_vec();
+        let wt = Tensor::from_vec(&[64, 64], w);
+        let sel = select_topk(&wt, 1);
+        let vals: Vec<f32> = (0..64).map(|_| rng.normal() * 0.1).collect();
+        vec![("l0.wq".to_string(), DeltaStore::from_f32(sel, &vals))]
+    }
+
+    #[test]
+    fn register_validates_shapes() {
+        let reg = nano_registry(RegistryCfg::default());
+        assert!(reg.register("ok", adapter(&reg, 1)).is_ok());
+        // unknown projection
+        let mut bad = adapter(&reg, 2);
+        bad[0].0 = "l9.wq".into();
+        assert!(reg.register("bad-proj", bad).is_err());
+        // wrong shape
+        let w = Tensor::zeros(&[8, 8]);
+        let sel = select_topk(&w, 1);
+        let d = DeltaStore::from_f32(sel, &[0.0; 8]);
+        assert!(reg.register("bad-shape", vec![("l0.wq".into(), d)]).is_err());
+        // empty
+        assert!(reg.register("empty", vec![]).is_err());
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn promotion_policy_and_hit_tracking() {
+        let reg = nano_registry(RegistryCfg { merged_capacity: 2, promote_after: 3 });
+        reg.register("a", adapter(&reg, 1)).unwrap();
+        // first two requests ride the bypass
+        assert_eq!(reg.resolve("a").unwrap().path(), ServePath::Bypass);
+        assert_eq!(reg.resolve("a").unwrap().path(), ServePath::Bypass);
+        assert!(!reg.is_merged("a"));
+        // third promotes
+        assert_eq!(reg.resolve("a").unwrap().path(), ServePath::Merged);
+        assert!(reg.is_merged("a"));
+        let info = reg.info("a").unwrap();
+        assert_eq!(info.requests, 3);
+        assert_eq!(info.merges, 1);
+        // subsequent requests reuse the cached copy (no re-merge)
+        assert_eq!(reg.resolve("a").unwrap().path(), ServePath::Merged);
+        assert_eq!(reg.info("a").unwrap().merges, 1);
+        assert!(reg.resolve("nope").is_none());
+    }
+
+    #[test]
+    fn lru_eviction_of_merged_backbones() {
+        let reg = nano_registry(RegistryCfg { merged_capacity: 1, promote_after: 1 });
+        for (name, seed) in [("a", 1u64), ("b", 2), ("c", 3)] {
+            reg.register(name, adapter(&reg, seed)).unwrap();
+        }
+        assert_eq!(reg.resolve("a").unwrap().path(), ServePath::Merged);
+        assert!(reg.is_merged("a"));
+        // promoting b evicts a (LRU, capacity 1)
+        assert_eq!(reg.resolve("b").unwrap().path(), ServePath::Merged);
+        assert!(reg.is_merged("b"));
+        assert!(!reg.is_merged("a"));
+        assert_eq!(reg.merged_count(), 1);
+        // touching b keeps it hot; promoting c evicts... b is most recent?
+        // a's re-promotion counts as a fresh request stream
+        assert_eq!(reg.resolve("c").unwrap().path(), ServePath::Merged);
+        assert!(reg.is_merged("c"));
+        assert!(!reg.is_merged("b"));
+        // the deltas stayed registered throughout
+        assert_eq!(reg.len(), 3);
+    }
+
+    #[test]
+    fn capacity_zero_never_merges() {
+        let reg = nano_registry(RegistryCfg { merged_capacity: 0, promote_after: 1 });
+        reg.register("a", adapter(&reg, 1)).unwrap();
+        for _ in 0..5 {
+            assert_eq!(reg.resolve("a").unwrap().path(), ServePath::Bypass);
+        }
+        assert_eq!(reg.merged_count(), 0);
+    }
+
+    #[test]
+    fn reregistration_drops_merged_copy() {
+        let reg = nano_registry(RegistryCfg { merged_capacity: 2, promote_after: 1 });
+        reg.register("a", adapter(&reg, 1)).unwrap();
+        reg.resolve("a").unwrap();
+        assert!(reg.is_merged("a"));
+        // hot swap: new deltas must invalidate the cached merged copy
+        reg.register("a", adapter(&reg, 9)).unwrap();
+        assert!(!reg.is_merged("a"));
+        assert_eq!(reg.info("a").unwrap().requests, 0);
+        // and the swapped adapter re-promotes from its own deltas
+        assert_eq!(reg.resolve("a").unwrap().path(), ServePath::Merged);
+    }
+
+    #[test]
+    fn demote_and_evict() {
+        let reg = nano_registry(RegistryCfg { merged_capacity: 2, promote_after: 1 });
+        reg.register("a", adapter(&reg, 1)).unwrap();
+        reg.resolve("a").unwrap();
+        assert!(reg.is_merged("a"));
+        assert!(reg.demote("a"));
+        assert!(!reg.is_merged("a"));
+        assert!(reg.contains("a"));
+        assert!(reg.evict("a"));
+        assert!(!reg.contains("a"));
+        assert!(!reg.evict("a"));
+    }
+}

@@ -1,0 +1,753 @@
+//! Request scheduler: bounded admission queue → continuous micro-batching →
+//! worker pool → per-request responses.
+//!
+//! `Server::start` spawns `workers` OS threads (sized like
+//! `coordinator::pool::Pool::default_size`). Each worker loops: pop a ready
+//! batch from the shared [`MicroBatcher`] (full batch or deadline flush),
+//! resolve the adapter through the [`AdapterRegistry`] (merged or bypass
+//! view), run one forward for the whole batch, and answer every request on
+//! its own channel. Different adapters execute concurrently across workers;
+//! within one adapter, FIFO order is preserved per batch.
+//!
+//! Admission is strictly bounded: when `max_queue` requests are pending,
+//! `submit` fails fast with [`Reject::QueueFull`] instead of buffering —
+//! backpressure the caller can see and act on. All rejections are typed.
+
+use super::batcher::MicroBatcher;
+use super::metrics::{MetricsReport, ServeMetrics};
+use super::registry::{AdapterRegistry, ModelRef};
+use crate::config::ModelCfg;
+use crate::data::{eval_batch, Example};
+use crate::model::{DeltaOverlay, RefModel};
+use crate::runtime::manifest::ArtifactMeta;
+use crate::runtime::{state::run_once, Engine, Value};
+use crate::tensor::Tensor;
+use crate::util::nan_safe_argmax;
+use anyhow::Result;
+use std::fmt;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// One multiple-choice inference request: score `options` (answer-token
+/// candidates) after `prompt` under the named adapter.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub adapter: String,
+    pub prompt: Vec<i32>,
+    pub options: Vec<i32>,
+}
+
+/// A completed request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Index into `options` of the highest-logit candidate.
+    pub pick: usize,
+    /// Logit of each option, in request order.
+    pub option_logits: Vec<f32>,
+    /// Which weight view served it (merged backbone vs sparse bypass).
+    pub path: super::registry::ServePath,
+    /// Coalesced batch size this request rode in.
+    pub batch_size: usize,
+    /// Submit → response.
+    pub latency: Duration,
+}
+
+/// Typed admission/served failures. Everything a caller can hit is an
+/// explicit variant — no stringly-typed errors on the serving path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Reject {
+    UnknownAdapter(String),
+    QueueFull { depth: usize, capacity: usize },
+    EmptyOptions,
+    EmptyPrompt,
+    PromptTooLong { len: usize, max: usize },
+    InvalidOption { token: i32, vocab: usize },
+    InvalidPromptToken { token: i32, vocab: usize },
+    ShuttingDown,
+    /// Backend failure while executing the batch (e.g. PJRT error).
+    Internal(String),
+}
+
+impl Reject {
+    /// Stable metric key for this rejection class.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Reject::UnknownAdapter(_) => "unknown_adapter",
+            Reject::QueueFull { .. } => "queue_full",
+            Reject::EmptyOptions => "empty_options",
+            Reject::EmptyPrompt => "empty_prompt",
+            Reject::PromptTooLong { .. } => "prompt_too_long",
+            Reject::InvalidOption { .. } => "invalid_option",
+            Reject::InvalidPromptToken { .. } => "invalid_prompt_token",
+            Reject::ShuttingDown => "shutting_down",
+            Reject::Internal(_) => "internal",
+        }
+    }
+}
+
+impl fmt::Display for Reject {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Reject::UnknownAdapter(a) => write!(f, "unknown adapter {a:?}"),
+            Reject::QueueFull { depth, capacity } => {
+                write!(f, "queue full ({depth}/{capacity})")
+            }
+            Reject::EmptyOptions => write!(f, "request has no options to score"),
+            Reject::EmptyPrompt => write!(f, "request has an empty prompt"),
+            Reject::PromptTooLong { len, max } => {
+                write!(f, "prompt length {len} exceeds max {max}")
+            }
+            Reject::InvalidOption { token, vocab } => {
+                write!(f, "option token {token} outside vocab {vocab}")
+            }
+            Reject::InvalidPromptToken { token, vocab } => {
+                write!(f, "prompt token {token} outside vocab {vocab}")
+            }
+            Reject::ShuttingDown => write!(f, "server is shutting down"),
+            Reject::Internal(e) => write!(f, "internal serving error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Reject {}
+
+/// Scheduler knobs.
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Micro-batch coalescing limit (defaults to the model's batch size).
+    pub max_batch: usize,
+    /// Bounded admission queue; beyond this, `submit` rejects.
+    pub max_queue: usize,
+    /// Deadline flush: max time a request waits for batch-mates.
+    pub max_delay: Duration,
+    /// Worker threads executing batches.
+    pub workers: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> ServeCfg {
+        ServeCfg {
+            max_batch: 16,
+            max_queue: 256,
+            max_delay: Duration::from_millis(10),
+            workers: crate::coordinator::pool::Pool::default_size(),
+        }
+    }
+}
+
+/// How batches turn into logits.
+#[derive(Debug, Clone)]
+pub enum Backend {
+    /// Pure-rust reference forward (always available; parity-tested against
+    /// the HLO eval artifact). Batch size is flexible.
+    Host,
+    /// AOT HLO eval artifacts on PJRT. `eval` serves merged views (zero
+    /// biases); `bypass` is the scatter-input eval artifact
+    /// (`<size>_eval_bypass`) serving unmerged views when its `k` matches
+    /// the adapter — otherwise the worker falls back to the host forward.
+    /// Engines are per-worker-thread (`Engine::shared` is thread-bound).
+    Hlo { eval: ArtifactMeta, bypass: Option<ArtifactMeta> },
+}
+
+struct Queued {
+    req: Request,
+    enqueued: Instant,
+    tx: mpsc::Sender<Result<Response, Reject>>,
+}
+
+struct State {
+    batcher: MicroBatcher<Queued>,
+    stopping: bool,
+}
+
+struct Shared {
+    cfg: ServeCfg,
+    backend: Backend,
+    registry: AdapterRegistry,
+    metrics: ServeMetrics,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+/// Handle for one pending request; `wait` blocks for its response.
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<Response, Reject>>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Result<Response, Reject> {
+        self.rx.recv().unwrap_or(Err(Reject::ShuttingDown))
+    }
+
+    pub fn wait_timeout(&self, dur: Duration) -> Option<Result<Response, Reject>> {
+        self.rx.recv_timeout(dur).ok()
+    }
+}
+
+/// A running multi-adapter serving engine.
+pub struct Server {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the worker pool over a registry. Decoder models only (encoder
+    /// serving is a ROADMAP item).
+    pub fn start(registry: AdapterRegistry, cfg: ServeCfg, backend: Backend) -> Result<Server> {
+        anyhow::ensure!(
+            registry.model_cfg().n_classes == 0,
+            "serve: encoder sizes are not supported yet"
+        );
+        anyhow::ensure!(cfg.workers >= 1, "serve: need at least one worker");
+        anyhow::ensure!(cfg.max_queue >= 1, "serve: need max_queue >= 1");
+        let mut cfg = cfg;
+        if let Backend::Hlo { eval, .. } = &backend {
+            // the HLO artifact has a fixed batch dimension; coalescing past
+            // it would make every full batch unservable (Internal rejects)
+            cfg.max_batch = cfg.max_batch.min(eval.model.batch);
+        }
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                batcher: MicroBatcher::new(cfg.max_batch.max(1), cfg.max_delay),
+                stopping: false,
+            }),
+            cfg,
+            backend,
+            registry,
+            metrics: ServeMetrics::new(),
+            cv: Condvar::new(),
+        });
+        let workers = (0..shared.cfg.workers)
+            .map(|i| {
+                let sh = shared.clone();
+                thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        Ok(Server { shared, workers })
+    }
+
+    pub fn registry(&self) -> &AdapterRegistry {
+        &self.shared.registry
+    }
+
+    pub fn metrics(&self) -> MetricsReport {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Admit one request. Fails fast with a typed [`Reject`] (recorded in
+    /// metrics) instead of blocking the caller.
+    pub fn submit(&self, req: Request) -> Result<Ticket, Reject> {
+        let sh = &self.shared;
+        let mcfg = sh.registry.model_cfg();
+        let res = Self::validate(sh, &req, mcfg).and_then(|()| {
+            let mut st = sh.state.lock().unwrap();
+            if st.stopping {
+                return Err(Reject::ShuttingDown);
+            }
+            let depth = st.batcher.depth();
+            if depth >= sh.cfg.max_queue {
+                return Err(Reject::QueueFull { depth, capacity: sh.cfg.max_queue });
+            }
+            let (tx, rx) = mpsc::channel();
+            let adapter = req.adapter.clone();
+            let now = Instant::now();
+            st.batcher.push(&adapter, now, Queued { req, enqueued: now, tx });
+            sh.metrics.observe_queue_depth(depth + 1);
+            sh.cv.notify_one();
+            Ok(Ticket { rx })
+        });
+        if let Err(r) = &res {
+            sh.metrics.record_reject(r.kind());
+        }
+        res
+    }
+
+    fn validate(sh: &Shared, req: &Request, mcfg: &ModelCfg) -> Result<(), Reject> {
+        if !sh.registry.contains(&req.adapter) {
+            return Err(Reject::UnknownAdapter(req.adapter.clone()));
+        }
+        if req.options.is_empty() {
+            return Err(Reject::EmptyOptions);
+        }
+        if req.prompt.is_empty() {
+            return Err(Reject::EmptyPrompt);
+        }
+        if req.prompt.len() > mcfg.seq {
+            return Err(Reject::PromptTooLong { len: req.prompt.len(), max: mcfg.seq });
+        }
+        for &t in &req.options {
+            if t < 0 || t as usize >= mcfg.vocab {
+                return Err(Reject::InvalidOption { token: t, vocab: mcfg.vocab });
+            }
+        }
+        // out-of-range prompt tokens would index out of the embedding table
+        // inside a worker — reject at admission, never panic a worker
+        for &t in &req.prompt {
+            if t < 0 || t as usize >= mcfg.vocab {
+                return Err(Reject::InvalidPromptToken { token: t, vocab: mcfg.vocab });
+            }
+        }
+        Ok(())
+    }
+
+    /// Submit a whole request stream and wait for every response, in order.
+    pub fn serve_all(&self, reqs: Vec<Request>) -> Vec<Result<Response, Reject>> {
+        let tickets: Vec<Result<Ticket, Reject>> =
+            reqs.into_iter().map(|r| self.submit(r)).collect();
+        tickets
+            .into_iter()
+            .map(|t| match t {
+                Ok(ticket) => ticket.wait(),
+                Err(r) => Err(r),
+            })
+            .collect()
+    }
+
+    /// Open-loop client fan-out: split `requests` across `clients` threads,
+    /// each bursting its share (submit all, then wait all) so continuous
+    /// micro-batching has same-adapter requests to coalesce. Returns
+    /// `(served, rejected)`. Shared by `neuroada serve` and `serve_bench`.
+    pub fn drive_clients(&self, requests: Vec<Request>, clients: usize) -> (usize, usize) {
+        let per = requests.len().div_ceil(clients.max(1)).max(1);
+        let chunks: Vec<Vec<Request>> = requests.chunks(per).map(|c| c.to_vec()).collect();
+        thread::scope(|s| {
+            let handles: Vec<_> = chunks
+                .into_iter()
+                .map(|chunk| {
+                    s.spawn(move || {
+                        let tickets: Vec<_> = chunk.into_iter().map(|r| self.submit(r)).collect();
+                        let (mut ok, mut rej) = (0usize, 0usize);
+                        for t in tickets {
+                            match t.and_then(|t| t.wait()) {
+                                Ok(_) => ok += 1,
+                                Err(_) => rej += 1,
+                            }
+                        }
+                        (ok, rej)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("serve client thread"))
+                .fold((0, 0), |(a, b), (o, r)| (a + o, b + r))
+        })
+    }
+
+    /// Drain pending work, stop the workers, and return the final metrics.
+    pub fn shutdown(mut self) -> MetricsReport {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.stopping = true;
+            self.shared.cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.shared.metrics.snapshot()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if self.workers.is_empty() {
+            return; // already shut down
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        st.stopping = true;
+        self.shared.cv.notify_all();
+        drop(st);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// How long an idle worker sleeps between wake checks.
+const IDLE_WAIT: Duration = Duration::from_millis(50);
+
+fn worker_loop(sh: &Shared) {
+    loop {
+        let popped = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                let now = Instant::now();
+                if let Some(b) = st.batcher.pop_ready(now) {
+                    break Some(b);
+                }
+                if st.stopping {
+                    break st.batcher.pop_any();
+                }
+                let wait = st
+                    .batcher
+                    .next_deadline()
+                    .map(|d| d.saturating_duration_since(now).min(IDLE_WAIT))
+                    .unwrap_or(IDLE_WAIT)
+                    .max(Duration::from_micros(200));
+                let (guard, _) = sh.cv.wait_timeout(st, wait).unwrap();
+                st = guard;
+            }
+        };
+        match popped {
+            Some((adapter, items)) => run_batch(sh, &adapter, items),
+            None => return, // stopping and drained
+        }
+    }
+}
+
+fn run_batch(sh: &Shared, adapter: &str, items: Vec<Queued>) {
+    let n = items.len();
+    sh.metrics.record_batch(n);
+    let Some(model) = sh.registry.resolve_batch(adapter, n as u64) else {
+        // evicted between admission and execution
+        for it in items {
+            sh.metrics.record_reject("unknown_adapter");
+            let _ = it.tx.send(Err(Reject::UnknownAdapter(adapter.to_string())));
+        }
+        return;
+    };
+    let path = model.path();
+    let mcfg = sh.registry.model_cfg();
+    let examples: Vec<Example> = items
+        .iter()
+        .map(|it| Example {
+            prompt: it.req.prompt.clone(),
+            answer_tok: 0,
+            label: 0,
+            options: it.req.options.clone(),
+            score: 0.0,
+        })
+        .collect();
+    let eb = eval_batch(&examples, mcfg.seq);
+    let logits = batch_logits(sh, mcfg, &model, &eb.tokens, &eb.pad_mask, &eb.last_pos, n);
+    match logits {
+        Ok(logits) => {
+            for (i, it) in items.into_iter().enumerate() {
+                let row = &logits.data[i * mcfg.vocab..(i + 1) * mcfg.vocab];
+                let option_logits: Vec<f32> =
+                    it.req.options.iter().map(|&o| row[o as usize]).collect();
+                let pick = nan_safe_argmax(option_logits.iter().copied()).unwrap_or(0);
+                let latency = it.enqueued.elapsed();
+                sh.metrics.record_served(adapter, path, latency.as_secs_f64());
+                let _ = it.tx.send(Ok(Response {
+                    pick,
+                    option_logits,
+                    path,
+                    batch_size: n,
+                    latency,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for it in items {
+                sh.metrics.record_reject("internal");
+                let _ = it.tx.send(Err(Reject::Internal(msg.clone())));
+            }
+        }
+    }
+}
+
+/// Logits [n, vocab] for a batch through the configured backend.
+fn batch_logits(
+    sh: &Shared,
+    mcfg: &ModelCfg,
+    model: &ModelRef,
+    tokens: &[i32],
+    pad_mask: &[f32],
+    last_pos: &[i32],
+    n: usize,
+) -> Result<Tensor> {
+    match &sh.backend {
+        Backend::Host => host_logits(mcfg, model, tokens, pad_mask, last_pos, n),
+        Backend::Hlo { eval, bypass } => {
+            hlo_logits(mcfg, model, eval, bypass.as_ref(), tokens, pad_mask, last_pos, n)
+        }
+    }
+}
+
+/// Pure-rust forward: merged → plain dense; bypass → overlay forward.
+/// Public for the serving bench and parity tests (the worker path and the
+/// measurement path must be the same code).
+pub fn host_logits(
+    mcfg: &ModelCfg,
+    model: &ModelRef,
+    tokens: &[i32],
+    pad_mask: &[f32],
+    last_pos: &[i32],
+    n: usize,
+) -> Result<Tensor> {
+    match model {
+        ModelRef::Merged(store) => {
+            RefModel::new(mcfg, store).lm_logits_at(tokens, pad_mask, last_pos, n)
+        }
+        ModelRef::Bypass { backbone, deltas } => {
+            let overlay = DeltaOverlay::new(deltas);
+            RefModel::with_overlay(mcfg, backbone, &overlay)
+                .lm_logits_at(tokens, pad_mask, last_pos, n)
+        }
+    }
+}
+
+thread_local! {
+    /// Per-worker cache of the last HLO input store. Building the store
+    /// clones every parameter tensor; consecutive batches of the same
+    /// weight view (the common case under coalescing) only swap the
+    /// tokens/pad_mask/last_pos inputs. `Weak` handles pin only the key
+    /// allocations' control blocks — not the evicted parameter data — so
+    /// the pointer-identity key can never alias a new allocation while the
+    /// registry's `merged_capacity` memory bound is preserved (one input
+    /// store per worker is the cache's whole footprint).
+    static HLO_STORE_CACHE: std::cell::RefCell<Option<HloStoreCache>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+struct HloStoreCache {
+    key: (usize, usize),
+    /// Address pins for `key` (see HLO_STORE_CACHE docs).
+    _pin: WeakPin,
+    store: crate::runtime::ValueStore,
+}
+
+// fields are never read: they exist only to pin the key addresses
+#[allow(dead_code)]
+enum WeakPin {
+    Merged(std::sync::Weak<crate::runtime::ValueStore>),
+    Bypass {
+        backbone: std::sync::Weak<crate::runtime::ValueStore>,
+        deltas: std::sync::Weak<Vec<(String, crate::peft::DeltaStore)>>,
+    },
+}
+
+fn model_key(model: &ModelRef) -> (usize, usize) {
+    match model {
+        ModelRef::Merged(s) => (Arc::as_ptr(s) as usize, 0),
+        ModelRef::Bypass { backbone, deltas } => {
+            (Arc::as_ptr(backbone) as usize, Arc::as_ptr(deltas) as usize)
+        }
+    }
+}
+
+fn model_pin(model: &ModelRef) -> WeakPin {
+    match model {
+        ModelRef::Merged(s) => WeakPin::Merged(Arc::downgrade(s)),
+        ModelRef::Bypass { backbone, deltas } => WeakPin::Bypass {
+            backbone: Arc::downgrade(backbone),
+            deltas: Arc::downgrade(deltas),
+        },
+    }
+}
+
+/// The per-view invariant inputs: parameters plus zero biases (merged) or
+/// the compact scatter inputs (bypass).
+fn build_hlo_store(mcfg: &ModelCfg, model: &ModelRef, meta: &ArtifactMeta) -> crate::runtime::ValueStore {
+    match model {
+        ModelRef::Merged(s) => {
+            let mut store = (**s).clone();
+            for (name, d_out, _) in mcfg.proj_shapes() {
+                store.insert_f32(format!("biases.{name}"), &[d_out], vec![0.0; d_out]);
+            }
+            store
+        }
+        ModelRef::Bypass { backbone, deltas } => {
+            let mut store = (**backbone).clone();
+            // scatter inputs: every projection gets idx/theta (zeros = no-op)
+            let by_name: std::collections::BTreeMap<&str, &crate::peft::DeltaStore> =
+                deltas.iter().map(|(nm, d)| (nm.as_str(), d)).collect();
+            for (name, d_out, _) in mcfg.proj_shapes() {
+                let (idx, theta) = match by_name.get(name.as_str()) {
+                    Some(d) => (d.sel.idx.data.clone(), d.theta_f32()),
+                    None => (vec![0i32; d_out * meta.k], vec![0f32; d_out * meta.k]),
+                };
+                store.insert_i32(format!("delta.idx.{name}"), &[d_out, meta.k], idx);
+                store.insert_f32(format!("delta.theta.{name}"), &[d_out, meta.k], theta);
+            }
+            store
+        }
+    }
+}
+
+/// The per-batch inputs, padded to the artifact's fixed batch size `b`.
+fn insert_batch_inputs(
+    store: &mut crate::runtime::ValueStore,
+    mcfg: &ModelCfg,
+    b: usize,
+    tokens: &[i32],
+    pad_mask: &[f32],
+    last_pos: &[i32],
+) {
+    let pad_i32 = |v: &[i32], w: usize| -> Vec<i32> {
+        let mut out = v.to_vec();
+        out.resize(b * w, 0);
+        out
+    };
+    let mut pm = pad_mask.to_vec();
+    pm.resize(b * mcfg.seq, 0.0);
+    store.insert("tokens", Value::I32 { shape: vec![b, mcfg.seq], data: pad_i32(tokens, mcfg.seq) });
+    store.insert_f32("pad_mask", &[b, mcfg.seq], pm);
+    store.insert("last_pos", Value::I32 { shape: vec![b], data: pad_i32(last_pos, 1) });
+}
+
+/// HLO forward on PJRT, padding the batch to the artifact's fixed size.
+/// Falls back to the host forward for bypass views the scatter artifact
+/// cannot serve (absent, or compiled for a different k).
+#[allow(clippy::too_many_arguments)]
+fn hlo_logits(
+    mcfg: &ModelCfg,
+    model: &ModelRef,
+    eval: &ArtifactMeta,
+    bypass: Option<&ArtifactMeta>,
+    tokens: &[i32],
+    pad_mask: &[f32],
+    last_pos: &[i32],
+    n: usize,
+) -> Result<Tensor> {
+    let meta = match model {
+        ModelRef::Merged(_) => eval,
+        ModelRef::Bypass { deltas, .. } => {
+            match bypass {
+                Some(meta) if deltas.iter().all(|(_, d)| d.k() == meta.k) => meta,
+                // artifact absent or compiled for a different k
+                _ => return host_logits(mcfg, model, tokens, pad_mask, last_pos, n),
+            }
+        }
+    };
+    // pad to the batch the artifact was actually lowered with (Manifest
+    // cross-checks it against the preset, but the artifact is the truth
+    // for the executable's input shapes)
+    let b = meta.model.batch;
+    anyhow::ensure!(n <= b, "batch {n} exceeds artifact batch {b}");
+    HLO_STORE_CACHE.with(|cache| {
+        let mut slot = cache.borrow_mut();
+        let key = model_key(model);
+        if !matches!(&*slot, Some(c) if c.key == key) {
+            *slot = Some(HloStoreCache {
+                key,
+                _pin: model_pin(model),
+                store: build_hlo_store(mcfg, model, meta),
+            });
+        }
+        let store = &mut slot.as_mut().expect("just filled").store;
+        insert_batch_inputs(store, mcfg, b, tokens, pad_mask, last_pos);
+        let engine = Engine::shared();
+        let out = run_once(&engine, meta, store)?;
+        let logits = out.get(&meta.outputs[0].name)?.as_f32()?;
+        Ok(Tensor::from_vec(&[n, mcfg.vocab], logits[..n * mcfg.vocab].to_vec()))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::init::init_params;
+    use crate::peft::selection::select_topk;
+    use crate::peft::DeltaStore;
+    use crate::serve::registry::RegistryCfg;
+    use crate::util::rng::Rng;
+
+    fn nano_server(rcfg: RegistryCfg, cfg: ServeCfg) -> Server {
+        let mcfg = presets::model("nano").unwrap();
+        let backbone = init_params(&mcfg, &mut Rng::new(1));
+        let reg = AdapterRegistry::new(mcfg, backbone, rcfg);
+        for (name, seed) in [("task-a", 10u64), ("task-b", 20)] {
+            reg.register(name, test_adapter(&reg, seed)).unwrap();
+        }
+        Server::start(reg, cfg, Backend::Host).unwrap()
+    }
+
+    fn test_adapter(reg: &AdapterRegistry, seed: u64) -> Vec<(String, DeltaStore)> {
+        let mut rng = Rng::new(seed);
+        let mcfg = reg.model_cfg().clone();
+        let mut out = Vec::new();
+        for (name, d_out, d_in) in mcfg.proj_shapes().into_iter().take(2) {
+            let w = reg.backbone().get(&format!("params.{name}")).unwrap().as_f32().unwrap().to_vec();
+            let wt = Tensor::from_vec(&[d_out, d_in], w);
+            let sel = select_topk(&wt, 1);
+            let vals: Vec<f32> = (0..d_out).map(|_| rng.normal() * 0.1).collect();
+            out.push((name, DeltaStore::from_f32(sel, &vals)));
+        }
+        out
+    }
+
+    fn req(adapter: &str, seed: i32) -> Request {
+        Request {
+            adapter: adapter.into(),
+            prompt: (0..8).map(|i| 4 + (i + seed) % 40).collect(),
+            options: vec![4, 5],
+        }
+    }
+
+    #[test]
+    fn submit_rejections_are_typed() {
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        });
+        let r = srv.submit(req("nope", 0)).map(|_| ());
+        assert_eq!(r, Err(Reject::UnknownAdapter("nope".into())));
+        let r = srv
+            .submit(Request { options: vec![], ..req("task-a", 0) })
+            .map(|_| ());
+        assert_eq!(r, Err(Reject::EmptyOptions));
+        let r = srv
+            .submit(Request { prompt: vec![4; 999], ..req("task-a", 0) })
+            .map(|_| ());
+        assert_eq!(r, Err(Reject::PromptTooLong { len: 999, max: 32 }));
+        let r = srv
+            .submit(Request { options: vec![9999], ..req("task-a", 0) })
+            .map(|_| ());
+        assert_eq!(r, Err(Reject::InvalidOption { token: 9999, vocab: 256 }));
+        let r = srv
+            .submit(Request { prompt: vec![-1, 4], ..req("task-a", 0) })
+            .map(|_| ());
+        assert_eq!(r, Err(Reject::InvalidPromptToken { token: -1, vocab: 256 }));
+        let m = srv.shutdown();
+        assert_eq!(m.total_rejected(), 5);
+    }
+
+    #[test]
+    fn queue_full_backpressure() {
+        // max_batch larger than the queue and a long flush deadline: nothing
+        // drains until shutdown, so the 3rd submit must be rejected.
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            max_batch: 64,
+            max_queue: 2,
+            max_delay: Duration::from_secs(30),
+            workers: 1,
+        });
+        let t1 = srv.submit(req("task-a", 1)).unwrap();
+        let t2 = srv.submit(req("task-a", 2)).unwrap();
+        match srv.submit(req("task-a", 3)) {
+            Err(Reject::QueueFull { depth: 2, capacity: 2 }) => {}
+            other => panic!("expected QueueFull, got {:?}", other.map(|_| ())),
+        }
+        // shutdown drains the two admitted requests
+        let (r1, r2) = (t1, t2);
+        let m = srv.shutdown();
+        assert!(r1.wait().is_ok());
+        assert!(r2.wait().is_ok());
+        assert_eq!(m.rejected.get("queue_full"), Some(&1));
+    }
+
+    #[test]
+    fn deadline_flush_serves_lone_request() {
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            max_batch: 16,
+            max_queue: 16,
+            max_delay: Duration::from_millis(5),
+            workers: 1,
+        });
+        let t0 = Instant::now();
+        let resp = srv.submit(req("task-a", 0)).unwrap().wait().unwrap();
+        assert_eq!(resp.batch_size, 1);
+        assert!(resp.pick < 2);
+        // flushed by deadline, not stuck until some full batch
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        srv.shutdown();
+    }
+}

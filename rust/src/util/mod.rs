@@ -35,6 +35,23 @@ pub fn fmt_bytes(b: u64) -> String {
     }
 }
 
+/// NaN-safe argmax over a score stream: NaN scores are skipped (a NaN logit
+/// must never win an option), ties keep the earliest index. `None` only when
+/// the stream is empty or all-NaN.
+pub fn nan_safe_argmax(scores: impl IntoIterator<Item = f32>) -> Option<usize> {
+    let mut best: Option<(usize, f32)> = None;
+    for (i, s) in scores.into_iter().enumerate() {
+        if s.is_nan() {
+            continue;
+        }
+        match best {
+            Some((_, bv)) if s <= bv => {}
+            _ => best = Some((i, s)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
 /// Format a ratio like the paper's "156×".
 pub fn fmt_ratio(r: f64) -> String {
     if r >= 100.0 {
@@ -55,6 +72,16 @@ mod tests {
         assert_eq!(fmt_bytes(512), "512 B");
         assert_eq!(fmt_bytes(2048), "2.00 KiB");
         assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn nan_safe_argmax_basics() {
+        assert_eq!(nan_safe_argmax([1.0, 3.0, 2.0]), Some(1));
+        assert_eq!(nan_safe_argmax([2.0, 2.0, 1.0]), Some(0)); // first max wins
+        assert_eq!(nan_safe_argmax([f32::NAN, 1.0, f32::NAN]), Some(1));
+        assert_eq!(nan_safe_argmax([f32::NAN, f32::NAN]), None);
+        assert_eq!(nan_safe_argmax(std::iter::empty::<f32>()), None);
+        assert_eq!(nan_safe_argmax([f32::NEG_INFINITY, -1.0]), Some(1));
     }
 
     #[test]

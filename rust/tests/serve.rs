@@ -1,0 +1,212 @@
+//! Serving-engine integration tests (artifact-free: everything runs through
+//! the pure-rust forward, so these execute on any machine).
+//!
+//! Covers the ISSUE-1 acceptance points: ≥2 distinct adapters served from
+//! one resident backbone, bypass-vs-merged logit parity to ≤1e-5, batch
+//! coalescing under concurrent load, deadline flush, LRU eviction of merged
+//! backbones, and hot-swap (register/evict while serving).
+
+use neuroada::bench::serve_bench::synth_adapter;
+use neuroada::config::presets;
+use neuroada::data::{example_stream, tasks, Split};
+use neuroada::model::init::init_params;
+use neuroada::serve::scheduler::host_logits;
+use neuroada::serve::{
+    AdapterRegistry, Backend, Reject, RegistryCfg, Request, ServeCfg, Server,
+};
+use neuroada::util::rng::Rng;
+use std::time::Duration;
+
+fn nano() -> (neuroada::config::ModelCfg, neuroada::runtime::ValueStore) {
+    let cfg = presets::model("nano").unwrap();
+    let backbone = init_params(&cfg, &mut Rng::new(42));
+    (cfg, backbone)
+}
+
+fn registry(n_adapters: usize, rcfg: RegistryCfg) -> AdapterRegistry {
+    let (cfg, backbone) = nano();
+    let reg = AdapterRegistry::new(cfg.clone(), backbone.clone(), rcfg);
+    for i in 0..n_adapters {
+        let deltas = synth_adapter(&cfg, &backbone, 1, 100 + i as u64).unwrap();
+        reg.register(&format!("adapter-{i}"), deltas).unwrap();
+    }
+    reg
+}
+
+fn task_requests(cfg: &neuroada::config::ModelCfg, adapters: &[&str], n: usize) -> Vec<Request> {
+    let task = tasks::by_name("cs-boolq").unwrap();
+    let examples = example_stream(&task, Split::Test, 7, cfg.vocab, cfg.seq - 2, n);
+    examples
+        .into_iter()
+        .enumerate()
+        .map(|(i, ex)| Request {
+            adapter: adapters[i % adapters.len()].to_string(),
+            prompt: ex.prompt,
+            options: ex.options,
+        })
+        .collect()
+}
+
+/// Acceptance: the unmerged bypass path and the merged-dense path produce
+/// the same logits to ≤ 1e-5, end-to-end through the registry.
+#[test]
+fn bypass_matches_merged_to_tolerance() {
+    let reg = registry(2, RegistryCfg { merged_capacity: 2, promote_after: 1 });
+    let cfg = reg.model_cfg().clone();
+    let reqs = task_requests(&cfg, &["adapter-0"], 4);
+    let examples: Vec<neuroada::data::Example> = reqs
+        .iter()
+        .map(|r| neuroada::data::Example {
+            prompt: r.prompt.clone(),
+            answer_tok: 0,
+            label: 0,
+            options: r.options.clone(),
+            score: 0.0,
+        })
+        .collect();
+    let eb = neuroada::data::eval_batch(&examples, cfg.seq);
+    for name in ["adapter-0", "adapter-1"] {
+        let merged = reg.merge_now(name).unwrap();
+        let bypass = reg.bypass(name).unwrap();
+        let lm = host_logits(&cfg, &merged, &eb.tokens, &eb.pad_mask, &eb.last_pos, 4).unwrap();
+        let lb = host_logits(&cfg, &bypass, &eb.tokens, &eb.pad_mask, &eb.last_pos, 4).unwrap();
+        let diff = lm.max_abs_diff(&lb);
+        assert!(diff <= 1e-5, "{name}: bypass vs merged diff {diff}");
+    }
+    // and the two adapters are genuinely distinct models
+    let a = host_logits(&cfg, &reg.bypass("adapter-0").unwrap(), &eb.tokens, &eb.pad_mask, &eb.last_pos, 4).unwrap();
+    let b = host_logits(&cfg, &reg.bypass("adapter-1").unwrap(), &eb.tokens, &eb.pad_mask, &eb.last_pos, 4).unwrap();
+    assert!(a.max_abs_diff(&b) > 1e-6, "adapters should differ");
+}
+
+/// ≥2 distinct adapters served from one resident backbone, through the full
+/// scheduler; every request answered; per-adapter accounting adds up.
+#[test]
+fn serves_multiple_adapters_from_one_backbone() {
+    let reg = registry(3, RegistryCfg::default());
+    let cfg = reg.model_cfg().clone();
+    let srv = Server::start(reg, ServeCfg {
+        max_batch: 4,
+        max_queue: 128,
+        max_delay: Duration::from_millis(5),
+        workers: 2,
+    }, Backend::Host)
+    .unwrap();
+    let reqs = task_requests(&cfg, &["adapter-0", "adapter-1", "adapter-2"], 24);
+    let responses = srv.serve_all(reqs);
+    assert!(responses.iter().all(|r| r.is_ok()), "all requests served");
+    let m = srv.shutdown();
+    assert_eq!(m.served, 24);
+    assert_eq!(m.adapters.len(), 3);
+    for c in m.adapters.values() {
+        assert_eq!(c.served, 8);
+        assert_eq!(c.merged_hits + c.bypass_hits, c.served);
+    }
+}
+
+/// Batch coalescing under concurrent load: many clients, few adapters —
+/// the scheduler must execute far fewer batches than requests.
+#[test]
+fn coalesces_batches_under_concurrent_load() {
+    let reg = registry(2, RegistryCfg::default());
+    let cfg = reg.model_cfg().clone();
+    let srv = Server::start(reg, ServeCfg {
+        max_batch: 8,
+        max_queue: 256,
+        max_delay: Duration::from_millis(20),
+        workers: 2,
+    }, Backend::Host)
+    .unwrap();
+    let reqs = task_requests(&cfg, &["adapter-0", "adapter-1"], 64);
+    let (ok, rejected) = srv.drive_clients(reqs, 8);
+    assert_eq!((ok, rejected), (64, 0));
+    let m = srv.shutdown();
+    assert_eq!(m.served, 64);
+    assert!(
+        m.batches < 64 && m.mean_batch > 1.0,
+        "expected coalescing: {} batches, mean {}",
+        m.batches,
+        m.mean_batch
+    );
+}
+
+/// Deadline flush: a lone request must be served within the flush window
+/// (plus execution), not wait for a full batch that never arrives.
+#[test]
+fn deadline_flush_bounds_lone_request_latency() {
+    let reg = registry(1, RegistryCfg::default());
+    let cfg = reg.model_cfg().clone();
+    let srv = Server::start(reg, ServeCfg {
+        max_batch: 16,
+        max_queue: 16,
+        max_delay: Duration::from_millis(10),
+        workers: 1,
+    }, Backend::Host)
+    .unwrap();
+    let req = task_requests(&cfg, &["adapter-0"], 1).remove(0);
+    let resp = srv.submit(req).unwrap().wait().unwrap();
+    assert_eq!(resp.batch_size, 1);
+    // generous bound: 10ms flush + forward + scheduling noise on slow CI
+    assert!(resp.latency < Duration::from_secs(10), "latency {:?}", resp.latency);
+    srv.shutdown();
+}
+
+/// LRU eviction: with capacity 1 and instant promotion, the merged-copy
+/// count never exceeds capacity while the deltas of every adapter stay
+/// registered and servable.
+#[test]
+fn lru_keeps_merged_copies_within_capacity() {
+    let reg = registry(3, RegistryCfg { merged_capacity: 1, promote_after: 1 });
+    let cfg = reg.model_cfg().clone();
+    let srv = Server::start(reg, ServeCfg {
+        max_batch: 4,
+        max_queue: 64,
+        max_delay: Duration::from_millis(2),
+        workers: 1,
+    }, Backend::Host)
+    .unwrap();
+    for round in 0..3 {
+        let adapter = format!("adapter-{round}");
+        let reqs = task_requests(&cfg, &[&adapter], 4);
+        for r in srv.serve_all(reqs) {
+            r.unwrap();
+        }
+        assert!(srv.registry().merged_count() <= 1, "capacity 1 exceeded");
+        assert!(srv.registry().is_merged(&adapter), "{adapter} just promoted");
+        assert_eq!(srv.registry().len(), 3, "deltas stay registered");
+    }
+    srv.shutdown();
+}
+
+/// Hot swap: adapters can be registered and evicted while the server runs;
+/// evicted adapters reject with a typed error.
+#[test]
+fn hot_swap_register_and_evict_while_serving() {
+    let reg = registry(1, RegistryCfg::default());
+    let cfg = reg.model_cfg().clone();
+    let (_, backbone) = nano();
+    let srv = Server::start(reg, ServeCfg {
+        max_batch: 4,
+        max_queue: 64,
+        max_delay: Duration::from_millis(2),
+        workers: 1,
+    }, Backend::Host)
+    .unwrap();
+    // serve from the initial adapter
+    let r = srv.serve_all(task_requests(&cfg, &["adapter-0"], 2));
+    assert!(r.iter().all(|x| x.is_ok()));
+    // hot-register a new adapter and serve from it immediately
+    let deltas = synth_adapter(&cfg, &backbone, 1, 999).unwrap();
+    srv.registry().register("late-arrival", deltas).unwrap();
+    let r = srv.serve_all(task_requests(&cfg, &["late-arrival"], 2));
+    assert!(r.iter().all(|x| x.is_ok()));
+    // evict and observe the typed rejection
+    assert!(srv.registry().evict("late-arrival"));
+    match srv.submit(task_requests(&cfg, &["late-arrival"], 1).remove(0)) {
+        Err(Reject::UnknownAdapter(a)) => assert_eq!(a, "late-arrival"),
+        other => panic!("expected UnknownAdapter, got {:?}", other.map(|_| ())),
+    }
+    let m = srv.shutdown();
+    assert_eq!(m.served, 4);
+    assert_eq!(m.rejected.get("unknown_adapter"), Some(&1));
+}
