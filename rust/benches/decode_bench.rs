@@ -1,0 +1,35 @@
+//! Decode benchmark binary (harness = false; in-repo bench harness).
+//!
+//!   decode/prefill     feeding the prompt through the KV-cached step
+//!   decode/cached      per-token greedy continuation via the KV cache
+//!   decode/reforward   the same continuation via full re-forward per token
+//!   decode/bypass      the cached step through the sparse bypass overlay
+//!
+//! Writes `BENCH_decode.json` next to the working directory for the CI
+//! bench-artifact step. Run: `cargo bench --bench decode_bench`
+//! (NEUROADA_BENCH=full for longer budgets; NEUROADA_DECODE_SIZE / _CTX /
+//! _GEN to scale).
+
+use neuroada::bench::decode_bench;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("NEUROADA_BENCH").as_deref() == Ok("full");
+    let size = std::env::var("NEUROADA_DECODE_SIZE").unwrap_or_else(|_| "nano".into());
+    let ctx: usize = std::env::var("NEUROADA_DECODE_CTX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    let gen: usize = std::env::var("NEUROADA_DECODE_GEN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    println!(
+        "== decode_bench ({} mode, size={size}, ctx={ctx}, gen={gen}) ==",
+        if full { "full" } else { "quick" }
+    );
+    let report = decode_bench::run(&size, ctx, gen, !full)?;
+    print!("{}", report.render());
+    std::fs::write("BENCH_decode.json", report.to_json().dump_pretty())?;
+    println!("(wrote BENCH_decode.json; cached = KV-cache incremental step, reforward = full forward per generated token)");
+    Ok(())
+}

@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         if full { "full" } else { "quick" });
     let report = serve_bench::run(&size, adapters, requests, !full)?;
     print!("{}", report.render());
-    println!("(merged = dense backbone copy per hot adapter; bypass = one frozen backbone + sparse Δ per request)");
+    std::fs::write("BENCH_serve.json", report.to_json().dump_pretty())?;
+    println!("(wrote BENCH_serve.json; merged = dense backbone copy per hot adapter; bypass = one frozen backbone + sparse Δ per request)");
     Ok(())
 }

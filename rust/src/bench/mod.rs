@@ -2,6 +2,7 @@
 //! offline; this provides the warmup/iterate/summarize loop the bench
 //! binaries use, with deterministic iteration counts and robust statistics).
 
+pub mod decode_bench;
 pub mod serve_bench;
 
 use crate::util::stats::Summary;

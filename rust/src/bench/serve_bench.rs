@@ -1,8 +1,9 @@
 //! Serving-path benchmark (criterion-free): merged-vs-bypass forward
-//! latency, promotion (merge) cost, and end-to-end scheduler throughput
-//! with continuous micro-batching. Drives the same code the `neuroada
-//! serve` subcommand runs; numbers from here are the serving-perf baseline
-//! recorded in PR descriptions.
+//! latency (including the crossover vs k ∈ {1, 2, 4, 8}), promotion
+//! (merge) cost, and end-to-end scheduler throughput with continuous
+//! micro-batching. Drives the same code the `neuroada serve` subcommand
+//! runs; numbers from here are the serving-perf baseline recorded in PR
+//! descriptions and exported as JSON for the CI bench artifact.
 
 use super::{Bench, BenchResult};
 use crate::config::{presets, ModelCfg};
@@ -19,6 +20,16 @@ use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 
+/// Forward latency at one sparsity level k: the merged path is k-invariant
+/// (dense weights), the bypass pays O(d_out·k) extra per projection — the
+/// crossover point tells the registry when merging starts paying off.
+#[derive(Debug, Clone)]
+pub struct KPoint {
+    pub k: usize,
+    pub merged_ms: f64,
+    pub bypass_ms: f64,
+}
+
 /// One full serving-bench run.
 pub struct ServeBenchReport {
     pub results: Vec<BenchResult>,
@@ -26,6 +37,9 @@ pub struct ServeBenchReport {
     pub e2e_merged: MetricsReport,
     /// Same load with merging disabled (pure bypass path).
     pub e2e_bypass: MetricsReport,
+    /// Merged-vs-bypass forward latency at k ∈ {1, 2, 4, 8} (ROADMAP:
+    /// record the crossover point vs k).
+    pub crossover: Vec<KPoint>,
 }
 
 impl ServeBenchReport {
@@ -34,6 +48,15 @@ impl ServeBenchReport {
         for r in &self.results {
             out.push_str(&r.render());
             out.push('\n');
+        }
+        for p in &self.crossover {
+            out.push_str(&format!(
+                "crossover/k={:<30} merged {:>8.3} ms  bypass {:>8.3} ms  (bypass/merged {:.2}×)\n",
+                p.k,
+                p.merged_ms,
+                p.bypass_ms,
+                p.bypass_ms / p.merged_ms,
+            ));
         }
         for (name, m) in [("merged", &self.e2e_merged), ("bypass", &self.e2e_bypass)] {
             let (p50, p95) = m
@@ -48,6 +71,43 @@ impl ServeBenchReport {
             ));
         }
         out
+    }
+
+    /// Stable JSON blob for the CI bench artifact.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut j = Json::obj();
+        j.set("bench", "serve_bench");
+        let mut results = Vec::new();
+        for r in &self.results {
+            let mut o = Json::obj();
+            o.set("name", r.name.as_str());
+            o.set("mean_ms", r.summary.mean * 1e3);
+            o.set("p50_ms", r.summary.p50 * 1e3);
+            o.set("p95_ms", r.summary.p95 * 1e3);
+            results.push(o);
+        }
+        j.set("results", Json::Arr(results));
+        let mut cross = Vec::new();
+        for p in &self.crossover {
+            let mut o = Json::obj();
+            o.set("k", p.k);
+            o.set("merged_ms", p.merged_ms);
+            o.set("bypass_ms", p.bypass_ms);
+            cross.push(o);
+        }
+        j.set("crossover", Json::Arr(cross));
+        for (name, m) in [("e2e_merged", &self.e2e_merged), ("e2e_bypass", &self.e2e_bypass)] {
+            let mut o = Json::obj();
+            o.set("req_per_sec", m.req_per_sec);
+            o.set("mean_batch", m.mean_batch);
+            if let Some(s) = &m.latency {
+                o.set("p50_ms", s.p50 * 1e3);
+                o.set("p95_ms", s.p95 * 1e3);
+            }
+            j.set(name, o);
+        }
+        j
     }
 }
 
@@ -127,6 +187,7 @@ fn e2e(
         max_queue: requests.len().max(1),
         max_delay: std::time::Duration::from_millis(5),
         workers: Pool::default_size(),
+        ..ServeCfg::default()
     };
     let srv = Server::start(reg, scfg, Backend::Host)?;
     let (_served, rejected) = srv.drive_clients(requests, clients);
@@ -169,17 +230,38 @@ pub fn run(size: &str, n_adapters: usize, n_requests: usize, quick: bool) -> Res
     let mut results = Vec::new();
 
     let merged = reg.merge_now(&names[0])?;
-    results.push(b.run(&format!("forward/merged {size} b={n}"), || {
+    let r_merged = b.run(&format!("forward/merged {size} b={n}"), || {
         std::hint::black_box(
             host_logits(&cfg, &merged, &eb.tokens, &eb.pad_mask, &eb.last_pos, n).unwrap().numel(),
         );
-    }));
+    });
+    // the merged forward is k-invariant (dense weights): one measurement
+    // is the flat line every bypass-at-k point is compared against
+    let merged_ms = r_merged.summary.mean * 1e3;
+    results.push(r_merged);
     let bypass = reg.bypass(&names[0])?;
     results.push(b.run(&format!("forward/bypass {size} b={n}"), || {
         std::hint::black_box(
             host_logits(&cfg, &bypass, &eb.tokens, &eb.pad_mask, &eb.last_pos, n).unwrap().numel(),
         );
     }));
+
+    // --- merged-vs-bypass crossover vs k (ROADMAP item) ------------------
+    let mut crossover = Vec::new();
+    for k in [1usize, 2, 4, 8] {
+        let name = format!("crossover-k{k}");
+        reg.register(&name, synth_adapter(&cfg, &backbone, k, 0x900 + k as u64)?)?;
+        let view = reg.bypass(&name)?;
+        let r = b.run(&format!("forward/bypass {size} b={n} k={k}"), || {
+            std::hint::black_box(
+                host_logits(&cfg, &view, &eb.tokens, &eb.pad_mask, &eb.last_pos, n)
+                    .unwrap()
+                    .numel(),
+            );
+        });
+        crossover.push(KPoint { k, merged_ms, bypass_ms: r.summary.mean * 1e3 });
+        results.push(r);
+    }
 
     // --- promotion (merge) cost ------------------------------------------
     results.push(b.run(&format!("registry/merge {size}"), || {
@@ -207,7 +289,7 @@ pub fn run(size: &str, n_adapters: usize, n_requests: usize, quick: bool) -> Res
         requests,
         clients,
     )?;
-    Ok(ServeBenchReport { results, e2e_merged, e2e_bypass })
+    Ok(ServeBenchReport { results, e2e_merged, e2e_bypass, crossover })
 }
 
 #[cfg(test)]
@@ -217,7 +299,15 @@ mod tests {
     #[test]
     fn quick_bench_runs() {
         let r = run("nano", 2, 16, true).unwrap();
-        assert_eq!(r.results.len(), 3);
+        // merged + bypass + 4 crossover points + merge cost
+        assert_eq!(r.results.len(), 7);
+        assert_eq!(r.crossover.len(), 4);
+        for p in &r.crossover {
+            assert!(p.merged_ms > 0.0 && p.bypass_ms > 0.0);
+        }
+        let j = r.to_json();
+        assert_eq!(j.at(&["crossover"]).and_then(|c| c.as_arr()).map(|a| a.len()), Some(4));
+        assert!(j.at(&["e2e_merged", "req_per_sec"]).and_then(|v| v.as_f64()).is_some());
         assert_eq!(r.e2e_merged.served, 16);
         assert_eq!(r.e2e_bypass.served, 16);
         // path accounting: promotion happened in the merged run (a batch

@@ -6,7 +6,8 @@
 //!   pretrain       build + cache a backbone checkpoint
 //!   train          one fine-tuning run (method × task), merge + eval
 //!   eval           zero-shot eval of a cached backbone on a task
-//!   serve          multi-adapter serving engine (registry + micro-batching)
+//!   serve          multi-adapter serving engine (registry + micro-batching
+//!                  + streaming greedy decode via --generate)
 //!   audit          memory audit: analytic (Eq. 5/6) vs measured bytes
 //!   tasks          list the 23 synthetic tasks
 //!
@@ -103,6 +104,9 @@ SUBCOMMANDS
                     [--ckpt-dir DIR] [--requests 256] [--clients 4]
                     [--workers N] [--queue 256] [--max-batch B]
                     [--wait-ms 10] [--capacity 2] [--promote 3] [--host]
+                    [--generate] [--max-new 16] [--slots 8] [--quota N]
+                    (--generate streams greedy-decode tokens through the
+                    KV-cached slot scheduler instead of scoring options)
   audit             memory audit table: [--size nano] [--k 1]
   tasks             list the 23 synthetic tasks
 

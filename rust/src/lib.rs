@@ -16,14 +16,18 @@
 //! * [`peft`]        — the paper's contribution: top-k selection, compact
 //!                     delta store, sparse AdamW accounting, memory model,
 //!                     baselines (masked / LoRA / BitFit / full).
-//! * [`model`]       — pure-rust reference transformer (parity + fast eval).
+//! * [`model`]       — pure-rust reference transformer (parity + fast eval)
+//!                     with a KV-cached incremental decode path
+//!                     ([`model::DecodeState`]) for streaming generation.
 //! * [`runtime`]     — PJRT artifact registry + device-resident train state.
 //! * [`data`]        — synthetic corpus + the 23 downstream task generators.
 //! * [`train`]       — trainer loop, LR schedules, metrics, checkpoints.
 //! * [`eval`]        — accuracy / MCC / Pearson / multiple-choice harness.
 //! * [`serve`]       — multi-adapter serving engine: adapter registry with
 //!                     merged-LRU + sparse-bypass paths, continuous
-//!                     micro-batching scheduler, serving metrics.
+//!                     micro-batching scheduler, streaming greedy decode
+//!                     over slot-based KV caches, per-adapter admission
+//!                     quotas, serving metrics (see `docs/serving.md`).
 //! * [`sweep`]       — hyperparameter grid search (Tables 5–7).
 //! * [`coordinator`] — thread-pool job runner + experiment drivers (repro).
 //! * [`bench`]       — measurement harness used by `cargo bench` targets.

@@ -213,7 +213,10 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 /// `neuroada serve`: stand up the multi-adapter serving engine, drive a
-/// synthetic request stream through it, and report serving metrics.
+/// synthetic request stream through it, and report serving metrics. With
+/// `--generate`, traffic is streaming greedy decode (tokens stream back as
+/// they are produced through the KV-cached slot scheduler) instead of
+/// multiple-choice scoring.
 ///
 /// Adapters come from `--ckpt-dir` (every subdirectory holding a
 /// `deltas/` checkpoint becomes one adapter, named after the subdir) or are
@@ -227,8 +230,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use neuroada::coordinator::pool::Pool;
     use neuroada::data::tasks;
     use neuroada::serve::{
-        backend_from_manifest, load_or_init_backbone, AdapterRegistry, Backend, RegistryCfg,
-        Request, ServeCfg, Server,
+        backend_from_manifest, load_or_init_backbone, AdapterRegistry, Backend, GenEvent,
+        GenerateRequest, RegistryCfg, Request, ServeCfg, Server,
     };
     use neuroada::util::rng::Rng;
     use std::time::Duration;
@@ -307,6 +310,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .opt_usize("workers")
             .map_err(|e| anyhow!(e))?
             .unwrap_or_else(Pool::default_size),
+        max_slots: args.opt_usize("slots").map_err(|e| anyhow!(e))?.unwrap_or(8).max(1),
+        adapter_quota: args.opt_usize("quota").map_err(|e| anyhow!(e))?.unwrap_or(0),
     };
     let srv = Server::start(registry, scfg, backend)?;
 
@@ -316,6 +321,72 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let clients = args.opt_usize("clients").map_err(|e| anyhow!(e))?.unwrap_or(4).max(1);
     let task = tasks::by_name("cs-boolq").unwrap();
     let mut rng = Rng::new(seed ^ 0x5E21);
+
+    if args.flag("generate") {
+        // streaming greedy-decode traffic: every request generates up to
+        // --max-new tokens (clamped to the per-slot KV capacity) and its
+        // tokens stream back as they are produced
+        let max_new = args.opt_usize("max-new").map_err(|e| anyhow!(e))?.unwrap_or(16).max(1);
+        let mut gen_reqs: Vec<GenerateRequest> = (0..n_req)
+            .map(|_| {
+                let ex = (task.gen)(&mut rng, cfg.vocab, cfg.seq / 2);
+                let new = max_new.min(cfg.seq.saturating_sub(ex.prompt.len())).max(1);
+                GenerateRequest {
+                    adapter: names[rng.zipf(names.len(), 1.1)].clone(),
+                    prompt: ex.prompt,
+                    max_new_tokens: new,
+                    stop: vec![],
+                }
+            })
+            .collect();
+        // stream one sample request token-by-token (taken OUT of the fan-out
+        // set so it is served exactly once), then fan the rest out
+        let (mut ok, mut rejected, mut toks) = (0usize, 0usize, 0u64);
+        if !gen_reqs.is_empty() {
+            let first = gen_reqs.remove(0);
+            let adapter = first.adapter.clone();
+            let t = srv.submit_generate(first).map_err(|e| anyhow!("{e}"))?;
+            print!("[serve] streaming sample via {adapter:?}:");
+            loop {
+                use std::io::Write as _;
+                match t.next_event() {
+                    Some(Ok(GenEvent::Token { token, .. })) => {
+                        print!(" {token}");
+                        std::io::stdout().flush().ok();
+                    }
+                    Some(Ok(GenEvent::Done(r))) => {
+                        println!(
+                            "  [{} tokens, ttft {:.2} ms, {:?}, {} path]",
+                            r.tokens.len(),
+                            r.ttft.as_secs_f64() * 1e3,
+                            r.finish,
+                            r.path.name(),
+                        );
+                        ok += 1;
+                        toks += r.tokens.len() as u64;
+                        break;
+                    }
+                    Some(Err(e)) => {
+                        println!(" (rejected: {e})");
+                        rejected += 1;
+                        break;
+                    }
+                    None => break,
+                }
+            }
+        }
+        let (o, r, t) = srv.drive_gen_clients(gen_reqs, clients);
+        let (ok, rejected, toks) = (ok + o, rejected + r, toks + t);
+        let report = srv.shutdown();
+        println!("{}", report.render());
+        println!(
+            "streamed {toks} tokens over {ok}/{n_req} generations ({rejected} rejected) \
+             across {} adapters from one resident backbone",
+            names.len()
+        );
+        return Ok(());
+    }
+
     let requests: Vec<Request> = (0..n_req)
         .map(|_| {
             let ex = (task.gen)(&mut rng, cfg.vocab, cfg.seq - 2);

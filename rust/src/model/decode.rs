@@ -1,0 +1,453 @@
+//! KV-cached incremental decoding for the reference transformer.
+//!
+//! The full forward ([`RefModel::hidden`]) recomputes every position on
+//! every call — fine for single-position multiple-choice scoring, ruinous
+//! for multi-token generation where step t re-pays the cost of steps
+//! 0..t-1. This module adds the standard fix: a [`DecodeState`] holding the
+//! per-layer K/V projections of every position seen so far, and
+//! [`RefModel::forward_step`], which feeds ONE token, attends over the
+//! cache, appends its own K/V, and returns next-token logits. Per-token
+//! cost drops from O(t·d² + t²·d) to O(d² + t·d).
+//!
+//! The step path reuses the exact op set of the full forward (RMSNorm →
+//! attention → residual → RMSNorm → SiLU MLP → residual, sinusoidal
+//! additive positions, tied LM head) and applies the same [`DeltaOverlay`]
+//! sparse bypass when the model carries one, so cold adapters decode
+//! without merging. Parity against the full re-forward path — token-for-
+//! token greedy agreement and logits to float tolerance, merged and bypass
+//! — is enforced by the tests below and `rust/tests/serve.rs`.
+//!
+//! KV memory per decode slot (the serving planner's formula, see
+//! `docs/serving.md`): `2 · n_layers · seq · d_model · 4` bytes.
+
+use super::RefModel;
+use crate::config::ModelCfg;
+use crate::tensor::{ops, Tensor};
+use anyhow::Result;
+
+/// Per-sequence decode state: the K/V cache plus the position cursor.
+///
+/// Capacity is fixed at `cfg.seq` rows per layer; `len` positions are
+/// valid. Cloning is a deep copy (used by benches to replay a prefilled
+/// context); the serving scheduler gives each slot its own state.
+#[derive(Debug, Clone)]
+pub struct DecodeState {
+    /// Per-layer cached K, each [capacity, d_model]; rows 0..len valid.
+    k: Vec<Tensor>,
+    /// Per-layer cached V, same layout as `k`.
+    v: Vec<Tensor>,
+    len: usize,
+    capacity: usize,
+}
+
+impl DecodeState {
+    /// Empty cache sized for `cfg.seq` positions.
+    pub fn new(cfg: &ModelCfg) -> DecodeState {
+        let (t, d) = (cfg.seq, cfg.d_model);
+        DecodeState {
+            k: (0..cfg.n_layers).map(|_| Tensor::zeros(&[t, d])).collect(),
+            v: (0..cfg.n_layers).map(|_| Tensor::zeros(&[t, d])).collect(),
+            len: 0,
+            capacity: t,
+        }
+    }
+
+    /// Positions cached so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum positions this cache can hold (= `cfg.seq` at creation).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Positions still free.
+    pub fn remaining(&self) -> usize {
+        self.capacity - self.len
+    }
+
+    /// K/V bytes held by this state (actual allocation, f32 storage).
+    pub fn kv_bytes(&self) -> u64 {
+        self.k
+            .iter()
+            .chain(&self.v)
+            .map(|t| t.numel() as u64 * 4)
+            .sum()
+    }
+
+    /// Analytic K/V bytes per decode slot for a model config:
+    /// `2 · n_layers · seq · d_model · 4`.
+    pub fn kv_bytes_for(cfg: &ModelCfg) -> u64 {
+        2 * (cfg.n_layers * cfg.seq * cfg.d_model) as u64 * 4
+    }
+}
+
+impl<'a> RefModel<'a> {
+    /// Feed one token at the next position, append its K/V to `state`, and
+    /// return the next-token LM logits `[vocab]`.
+    ///
+    /// Applies the sparse [`crate::model::DeltaOverlay`] bypass when the
+    /// model carries one, exactly like the full forward's projections, so
+    /// the merged and bypass serving paths share this step. Errors when the
+    /// cache is full or the token is out of vocab (serving validates both
+    /// at admission).
+    pub fn forward_step(&self, token: i32, state: &mut DecodeState) -> Result<Vec<f32>> {
+        let cfg = self.cfg;
+        let d = cfg.d_model;
+        anyhow::ensure!(
+            state.len < state.capacity,
+            "decode state full ({} positions)",
+            state.capacity
+        );
+        anyhow::ensure!(
+            token >= 0 && (token as usize) < cfg.vocab,
+            "token {token} outside vocab {}",
+            cfg.vocab
+        );
+        anyhow::ensure!(
+            state.k.len() == cfg.n_layers,
+            "decode state was built for a different model config"
+        );
+        if let Some(k0) = state.k.first() {
+            anyhow::ensure!(
+                k0.shape == [state.capacity, d],
+                "decode state was built for a different model config"
+            );
+        }
+        let p = state.len;
+        let embed = self.p("embed")?;
+        let erow = &embed[token as usize * d..(token as usize + 1) * d];
+
+        // x = embed[token] + pos[p] — the position row is computed on the
+        // fly (O(d)) so a slot's memory is exactly its K/V cache
+        let mut x = vec![0.0f32; d];
+        positional_row(p, d, &mut x);
+        for j in 0..d {
+            x[j] += erow[j];
+        }
+
+        let (nh, hd) = (cfg.n_heads, d / cfg.n_heads);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut h = vec![0.0f32; d];
+        for l in 0..cfg.n_layers {
+            // attention block
+            ops::rmsnorm(&x, self.p(&format!("l{l}.ln1"))?, &mut h);
+            let q = self.proj_step(&h, &format!("l{l}.wq"), d, d)?;
+            let kk = self.proj_step(&h, &format!("l{l}.wk"), d, d)?;
+            let vv = self.proj_step(&h, &format!("l{l}.wv"), d, d)?;
+            state.k[l].row_mut(p).copy_from_slice(&kk);
+            state.v[l].row_mut(p).copy_from_slice(&vv);
+
+            // attend over cached positions 0..=p (causal by construction:
+            // the cache only ever holds the past)
+            let mut att = vec![0.0f32; d];
+            let mut scores = vec![0.0f32; p + 1];
+            for head in 0..nh {
+                let qh = &q[head * hd..(head + 1) * hd];
+                for (ki, s) in scores.iter_mut().enumerate() {
+                    let krow = &state.k[l].row(ki)[head * hd..(head + 1) * hd];
+                    *s = qh.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
+                }
+                let mx = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut sum = 0.0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - mx).exp();
+                    sum += *s;
+                }
+                for s in scores.iter_mut() {
+                    *s /= sum;
+                }
+                let orow = &mut att[head * hd..(head + 1) * hd];
+                for (ki, &w) in scores.iter().enumerate() {
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let vrow = &state.v[l].row(ki)[head * hd..(head + 1) * hd];
+                    for j in 0..hd {
+                        orow[j] += w * vrow[j];
+                    }
+                }
+            }
+            let o = self.proj_step(&att, &format!("l{l}.wo"), d, d)?;
+            for j in 0..d {
+                x[j] += o[j];
+            }
+
+            // mlp block
+            ops::rmsnorm(&x, self.p(&format!("l{l}.ln2"))?, &mut h);
+            let mut m = self.proj_step(&h, &format!("l{l}.w1"), cfg.d_ff, d)?;
+            for v in m.iter_mut() {
+                *v = ops::silu(*v);
+            }
+            let mm = self.proj_step(&m, &format!("l{l}.w2"), d, cfg.d_ff)?;
+            for j in 0..d {
+                x[j] += mm[j];
+            }
+        }
+        state.len = p + 1;
+
+        let mut out = vec![0.0f32; d];
+        ops::rmsnorm(&x, self.p("ln_f")?, &mut out);
+        // tied LM head: logits = out · embedᵀ
+        let mut logits = vec![0.0f32; cfg.vocab];
+        for (t, lg) in logits.iter_mut().enumerate() {
+            let er = &embed[t * d..(t + 1) * d];
+            *lg = out.iter().zip(er).map(|(a, b)| a * b).sum::<f32>();
+        }
+        Ok(logits)
+    }
+
+    /// One adapted projection for a single row, zero-copy: `y = h Wᵀ` plus
+    /// the sparse bypass term when an overlay delta exists for `name`. The
+    /// step-path analogue of [`RefModel::proj`] (which goes through dense
+    /// `Tensor`s and would clone the weight every token).
+    fn proj_step(&self, h: &[f32], name: &str, d_out: usize, d_in: usize) -> Result<Vec<f32>> {
+        let w = self.p(name)?;
+        debug_assert_eq!(w.len(), d_out * d_in);
+        debug_assert_eq!(h.len(), d_in);
+        let mut y = vec![0.0f32; d_out];
+        for (i, yi) in y.iter_mut().enumerate() {
+            let wr = &w[i * d_in..(i + 1) * d_in];
+            *yi = h.iter().zip(wr).map(|(a, b)| a * b).sum::<f32>();
+        }
+        if let Some(view) = self.overlay.and_then(|o| o.get(name)) {
+            for (i, yi) in y.iter_mut().enumerate() {
+                for (col, theta) in view.row(i) {
+                    *yi += theta * h[col];
+                }
+            }
+        }
+        Ok(y)
+    }
+}
+
+/// One row of the sinusoidal position table, written into `out[..d]` —
+/// identical values to `ops::positional(seq, d).row(p)` (same f64 math),
+/// without materializing an O(seq·d) table per decode slot.
+fn positional_row(p: usize, d: usize, out: &mut [f32]) {
+    let half = d / 2;
+    for i in 0..half {
+        let ang = p as f64 / (10000f64).powf(2.0 * i as f64 / d as f64);
+        out[i] = ang.sin() as f32;
+        out[half + i] = ang.cos() as f32;
+    }
+}
+
+/// Greedy continuation via the KV cache: prefill `prompt`, then emit
+/// `max_new` argmax tokens (fewer if the cache fills). Reference path for
+/// parity tests and the decode bench; the serving scheduler drives
+/// `forward_step` directly for streaming.
+pub fn greedy_decode(model: &RefModel, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+    anyhow::ensure!(!prompt.is_empty(), "greedy_decode: empty prompt");
+    let mut state = DecodeState::new(model.cfg);
+    let mut logits = Vec::new();
+    for &t in prompt {
+        logits = model.forward_step(t, &mut state)?;
+    }
+    let mut out = Vec::new();
+    for _ in 0..max_new {
+        let next = crate::util::nan_safe_argmax(logits.iter().copied()).unwrap_or(0) as i32;
+        out.push(next);
+        if out.len() == max_new || state.remaining() == 0 {
+            break;
+        }
+        logits = model.forward_step(next, &mut state)?;
+    }
+    Ok(out)
+}
+
+/// Greedy continuation via FULL re-forward per token — the uncached
+/// baseline the KV path is parity-tested and benchmarked against. Each
+/// step pads the running sequence to `cfg.seq` and calls
+/// [`RefModel::lm_logits_at`] at the last real position.
+pub fn greedy_full_reforward(model: &RefModel, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+    let cfg = model.cfg;
+    anyhow::ensure!(!prompt.is_empty(), "greedy_full_reforward: empty prompt");
+    anyhow::ensure!(prompt.len() <= cfg.seq, "prompt exceeds seq {}", cfg.seq);
+    let mut toks = prompt.to_vec();
+    let mut out = Vec::new();
+    for _ in 0..max_new {
+        let mut tokens = vec![crate::data::tokenizer::PAD; cfg.seq];
+        tokens[..toks.len()].copy_from_slice(&toks);
+        let mut pad = vec![0.0f32; cfg.seq];
+        for p in pad.iter_mut().take(toks.len()) {
+            *p = 1.0;
+        }
+        let last = vec![(toks.len() - 1) as i32];
+        let logits = model.lm_logits_at(&tokens, &pad, &last, 1)?;
+        let next = crate::util::nan_safe_argmax(logits.row(0).iter().copied()).unwrap_or(0) as i32;
+        out.push(next);
+        toks.push(next);
+        // `> seq` (not `>= seq`): the token computed at context == seq is
+        // still emittable — it just cannot be fed back. This matches
+        // `greedy_decode`, which emits the final token after the KV cache
+        // fills, so both reference paths agree in the cache-bound regime.
+        if out.len() == max_new || toks.len() > cfg.seq {
+            break;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::init::init_params;
+    use crate::model::DeltaOverlay;
+    use crate::peft::DeltaStore;
+    use crate::util::rng::Rng;
+
+    fn full_logits_at(
+        m: &RefModel,
+        toks: &[i32],
+    ) -> Tensor {
+        let cfg = m.cfg;
+        let mut tokens = vec![crate::data::tokenizer::PAD; cfg.seq];
+        tokens[..toks.len()].copy_from_slice(toks);
+        let mut pad = vec![0.0f32; cfg.seq];
+        for p in pad.iter_mut().take(toks.len()) {
+            *p = 1.0;
+        }
+        m.lm_logits_at(&tokens, &pad, &[(toks.len() - 1) as i32], 1).unwrap()
+    }
+
+    /// One k=2 full-coverage adapter (the bench synthesizer is the single
+    /// source of adapter synthesis — no per-test reimplementation).
+    fn deltas_for(
+        cfg: &ModelCfg,
+        params: &crate::runtime::ValueStore,
+        seed: u64,
+    ) -> Vec<(String, DeltaStore)> {
+        crate::bench::serve_bench::synth_adapter(cfg, params, 2, seed).unwrap()
+    }
+
+    fn assert_per_position_parity(cfg: &ModelCfg, m: &RefModel, label: &str) {
+        let toks: Vec<i32> = (0..12).map(|i| 4 + (i * 7) % 40).collect();
+        let mut state = DecodeState::new(cfg);
+        for n in 1..=toks.len() {
+            let step = m.forward_step(toks[n - 1], &mut state).unwrap();
+            assert_eq!(state.len(), n);
+            let full = full_logits_at(m, &toks[..n]);
+            let diff = step
+                .iter()
+                .zip(full.row(0))
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff <= 1e-4, "{label} position {n}: step vs full logit diff {diff}");
+        }
+    }
+
+    /// Acceptance: step logits at every prefix position match the full
+    /// forward's logits at that position to ≤ 1e-4 — on BOTH the dense
+    /// (merged) path and the sparse bypass overlay path.
+    #[test]
+    fn step_logits_match_full_forward_per_position() {
+        let cfg = presets::model("nano").unwrap();
+        let mut rng = Rng::new(11);
+        let params = init_params(&cfg, &mut rng);
+        assert_per_position_parity(&cfg, &RefModel::new(&cfg, &params), "dense");
+        let deltas = deltas_for(&cfg, &params, 44);
+        let overlay = DeltaOverlay::new(&deltas);
+        let m = RefModel::with_overlay(&cfg, &params, &overlay);
+        assert_per_position_parity(&cfg, &m, "bypass");
+    }
+
+    /// Acceptance: greedy continuation via the KV cache matches the full
+    /// re-forward continuation token-for-token — merged (dense) path.
+    #[test]
+    fn greedy_decode_matches_full_reforward_dense() {
+        let cfg = presets::model("nano").unwrap();
+        let mut rng = Rng::new(12);
+        let params = init_params(&cfg, &mut rng);
+        let m = RefModel::new(&cfg, &params);
+        let prompt: Vec<i32> = (0..6).map(|i| 4 + (i * 5) % 30).collect();
+        let cached = greedy_decode(&m, &prompt, 10).unwrap();
+        let full = greedy_full_reforward(&m, &prompt, 10).unwrap();
+        assert_eq!(cached, full, "cached vs re-forward continuation");
+        assert_eq!(cached.len(), 10);
+    }
+
+    /// Acceptance: same token-for-token parity through the sparse bypass
+    /// overlay (cold-adapter decode without merging), and the overlay
+    /// genuinely changes the continuation vs the raw backbone.
+    #[test]
+    fn greedy_decode_matches_full_reforward_bypass() {
+        let cfg = presets::model("nano").unwrap();
+        let mut rng = Rng::new(13);
+        let params = init_params(&cfg, &mut rng);
+        let deltas = deltas_for(&cfg, &params, 99);
+        let overlay = DeltaOverlay::new(&deltas);
+        let m = RefModel::with_overlay(&cfg, &params, &overlay);
+        let prompt: Vec<i32> = (0..6).map(|i| 4 + (i * 3) % 30).collect();
+        let cached = greedy_decode(&m, &prompt, 10).unwrap();
+        let full = greedy_full_reforward(&m, &prompt, 10).unwrap();
+        assert_eq!(cached, full, "bypass cached vs re-forward continuation");
+
+        // merged deltas give the same continuation as the overlay
+        let mut merged = params.clone();
+        crate::model::merge_deltas(&mut merged, &deltas).unwrap();
+        let mm = RefModel::new(&cfg, &merged);
+        assert_eq!(greedy_decode(&mm, &prompt, 10).unwrap(), cached);
+    }
+
+    #[test]
+    fn state_capacity_is_enforced() {
+        let cfg = presets::model("nano").unwrap();
+        let mut rng = Rng::new(14);
+        let params = init_params(&cfg, &mut rng);
+        let m = RefModel::new(&cfg, &params);
+        let mut state = DecodeState::new(&cfg);
+        for _ in 0..cfg.seq {
+            m.forward_step(4, &mut state).unwrap();
+        }
+        assert_eq!(state.remaining(), 0);
+        assert!(m.forward_step(4, &mut state).is_err(), "step past capacity must fail");
+        assert!(m.forward_step(-1, &mut DecodeState::new(&cfg)).is_err(), "bad token");
+    }
+
+    #[test]
+    fn positional_row_matches_table() {
+        for d in [10usize, 7] {
+            let seq = 16;
+            let table = ops::positional(seq, d);
+            let mut row = vec![0.0f32; d];
+            for p in 0..seq {
+                row.iter_mut().for_each(|v| *v = 0.0);
+                positional_row(p, d, &mut row);
+                assert_eq!(row.as_slice(), table.row(p), "position {p}, d {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn kv_bytes_formula_matches_allocation() {
+        let cfg = presets::model("nano").unwrap();
+        let st = DecodeState::new(&cfg);
+        assert_eq!(st.kv_bytes(), DecodeState::kv_bytes_for(&cfg));
+        assert_eq!(
+            DecodeState::kv_bytes_for(&cfg),
+            2 * (cfg.n_layers * cfg.seq * cfg.d_model) as u64 * 4
+        );
+    }
+
+    /// The decode path honours a longer context when the config says so
+    /// (the decode bench runs nano at seq=64+).
+    #[test]
+    fn longer_context_cfg_keeps_parity() {
+        let mut cfg = presets::model("nano").unwrap();
+        cfg.seq = 48;
+        let mut rng = Rng::new(15);
+        let params = init_params(&cfg, &mut rng);
+        let m = RefModel::new(&cfg, &params);
+        let prompt: Vec<i32> = (0..40).map(|i| 4 + (i * 11) % 50).collect();
+        let cached = greedy_decode(&m, &prompt, 6).unwrap();
+        let full = greedy_full_reforward(&m, &prompt, 6).unwrap();
+        assert_eq!(cached, full);
+    }
+}

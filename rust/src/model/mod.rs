@@ -8,9 +8,16 @@
 //!    the AOT HLO eval artifact must agree to float tolerance (the strongest
 //!    cross-layer integration signal we have);
 //!  * **fast host-side eval** of merged models (no PJRT dependency);
-//!  * **parameter initialization** for pretraining-from-scratch.
+//!  * **parameter initialization** for pretraining-from-scratch;
+//!  * **streaming greedy decode** — [`decode::DecodeState`] +
+//!    [`RefModel::forward_step`] give a KV-cached incremental forward
+//!    (O(d² + t·d) per token instead of a full re-forward) that the
+//!    serving engine drives for multi-token generation.
 
+pub mod decode;
 pub mod init;
+
+pub use decode::{greedy_decode, greedy_full_reforward, DecodeState};
 
 use crate::config::ModelCfg;
 use crate::peft::delta::ScatterView;

@@ -41,6 +41,11 @@ impl<T> MicroBatcher<T> {
         self.depth == 0
     }
 
+    /// Requests pending for one adapter (the admission-quota input).
+    pub fn adapter_depth(&self, adapter: &str) -> usize {
+        self.queues.get(adapter).map_or(0, VecDeque::len)
+    }
+
     /// Enqueue one request for `adapter`, stamped with its arrival time.
     pub fn push(&mut self, adapter: &str, enqueued: Instant, item: T) {
         self.queues
@@ -193,6 +198,21 @@ mod tests {
         b.push("a", at(base, 3), 1);
         b.push("b", at(base, 1), 2);
         assert_eq!(b.next_deadline().unwrap(), at(base, 11));
+    }
+
+    #[test]
+    fn adapter_depth_tracks_per_queue() {
+        let base = Instant::now();
+        let mut b: MicroBatcher<u32> = MicroBatcher::new(4, Duration::from_millis(10));
+        assert_eq!(b.adapter_depth("a"), 0);
+        b.push("a", base, 1);
+        b.push("a", base, 2);
+        b.push("b", base, 3);
+        assert_eq!(b.adapter_depth("a"), 2);
+        assert_eq!(b.adapter_depth("b"), 1);
+        assert_eq!(b.depth(), 3);
+        b.pop_ready(at(base, 20)).unwrap();
+        assert!(b.adapter_depth("a") == 0 || b.adapter_depth("b") == 0);
     }
 
     #[test]

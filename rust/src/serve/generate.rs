@@ -1,0 +1,94 @@
+//! Streaming greedy-decode request/response types.
+//!
+//! A [`GenerateRequest`] asks the server to greedily continue `prompt` for
+//! up to `max_new_tokens` tokens under the named adapter. The scheduler's
+//! decode thread assigns it a slot, prefills the KV cache, and then streams
+//! every produced token back over the ticket's channel as a
+//! [`GenEvent::Token`] the moment it exists — followed by one
+//! [`GenEvent::Done`] carrying the full continuation and latency breakdown
+//! (time-to-first-token vs end-to-end). Slot-based continuous batching
+//! means decode steps of different requests share a micro-batch and a
+//! finished sequence frees its slot mid-flight; see `docs/serving.md`.
+
+use super::registry::ServePath;
+use super::scheduler::Reject;
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// One streaming generation request.
+#[derive(Debug, Clone)]
+pub struct GenerateRequest {
+    pub adapter: String,
+    /// Prompt tokens; `prompt.len() + max_new_tokens` must fit `cfg.seq`
+    /// (the per-slot KV capacity) or admission rejects with
+    /// [`Reject::ContextOverflow`].
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Stop tokens: generation finishes as soon as one is produced (the
+    /// stop token is included in the output). Empty = length-only.
+    pub stop: Vec<i32>,
+}
+
+/// Why a generation finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// A token in `stop` was produced.
+    Stop,
+    /// `max_new_tokens` produced (or the KV cache filled).
+    Length,
+}
+
+/// Final summary of one generation, sent after the last streamed token.
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    /// The generated continuation (prompt excluded), in stream order.
+    pub tokens: Vec<i32>,
+    /// Which weight view decoded it (merged backbone vs sparse bypass).
+    pub path: ServePath,
+    pub finish: FinishReason,
+    /// Submit → first streamed token.
+    pub ttft: Duration,
+    /// Submit → Done.
+    pub latency: Duration,
+}
+
+/// One event on a generation stream.
+#[derive(Debug, Clone)]
+pub enum GenEvent {
+    /// A token, streamed as soon as it is produced; `index` counts from 0.
+    Token { token: i32, index: usize },
+    /// Stream end; no further events follow.
+    Done(GenResponse),
+}
+
+/// Handle for one pending generation: a stream of [`GenEvent`]s.
+pub struct GenTicket {
+    pub(crate) rx: mpsc::Receiver<Result<GenEvent, Reject>>,
+}
+
+impl GenTicket {
+    /// Block for the next stream event; `None` once the stream has closed
+    /// (after `Done`, an error, or server teardown).
+    pub fn next_event(&self) -> Option<Result<GenEvent, Reject>> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking poll with a deadline.
+    pub fn next_event_timeout(&self, dur: Duration) -> Option<Result<GenEvent, Reject>> {
+        self.rx.recv_timeout(dur).ok()
+    }
+
+    /// Drain the stream to completion and return the final response.
+    /// Callable after any number of `next_event` reads — the `Done`
+    /// summary always carries the full continuation.
+    pub fn wait(self) -> Result<GenResponse, Reject> {
+        loop {
+            match self.rx.recv() {
+                Ok(Ok(GenEvent::Token { .. })) => {}
+                Ok(Ok(GenEvent::Done(r))) => return Ok(r),
+                Ok(Err(rej)) => return Err(rej),
+                Err(_) => return Err(Reject::ShuttingDown),
+            }
+        }
+    }
+}

@@ -51,6 +51,32 @@ struct Inner {
     rejected: BTreeMap<&'static str, u64>,
     adapters: BTreeMap<String, AdapterCounters>,
     max_queue_depth: usize,
+    // --- streaming-decode counters -----------------------------------
+    /// Completed generation requests (also counted in `served`).
+    gen_served: u64,
+    /// Tokens streamed across all generations.
+    gen_tokens: u64,
+    /// Decode micro-batch iterations (each advances every active slot).
+    decode_steps: u64,
+    /// Active slots summed over decode steps (mean occupancy numerator).
+    slot_occupancy_sum: u64,
+    max_active_slots: usize,
+    /// Submit → first token, sliding window like `latencies`.
+    ttft: Vec<f64>,
+    next_ttft: usize,
+    /// Gap between consecutive streamed tokens of one sequence.
+    inter_token: Vec<f64>,
+    next_itl: usize,
+}
+
+/// Push into a `LATENCY_WINDOW`-bounded circular sample buffer.
+fn push_window(buf: &mut Vec<f64>, next: &mut usize, v: f64) {
+    if buf.len() < LATENCY_WINDOW {
+        buf.push(v);
+    } else {
+        buf[*next] = v;
+        *next = (*next + 1) % LATENCY_WINDOW;
+    }
 }
 
 /// Shared, thread-safe metric sink for one serving engine.
@@ -73,20 +99,49 @@ impl ServeMetrics {
     /// One request completed. `latency` is submit→response seconds.
     pub fn record_served(&self, adapter: &str, path: ServePath, latency: f64) {
         let mut g = self.inner.lock().unwrap();
+        Self::record_served_locked(&mut g, adapter, path, latency);
+    }
+
+    fn record_served_locked(g: &mut Inner, adapter: &str, path: ServePath, latency: f64) {
         g.served += 1;
-        if g.latencies.len() < LATENCY_WINDOW {
-            g.latencies.push(latency);
-        } else {
-            let i = g.next_lat;
-            g.latencies[i] = latency;
-            g.next_lat = (i + 1) % LATENCY_WINDOW;
-        }
+        push_window(&mut g.latencies, &mut g.next_lat, latency);
         let c = g.adapters.entry(adapter.to_string()).or_default();
         c.served += 1;
         match path {
             ServePath::Merged => c.merged_hits += 1,
             ServePath::Bypass => c.bypass_hits += 1,
         }
+    }
+
+    /// One generation completed: `n_tokens` streamed, submit→Done `latency`
+    /// seconds. Also counts as a served request for the aggregate stats.
+    pub fn record_gen_served(&self, adapter: &str, path: ServePath, latency: f64, n_tokens: u64) {
+        let mut g = self.inner.lock().unwrap();
+        Self::record_served_locked(&mut g, adapter, path, latency);
+        g.gen_served += 1;
+        g.gen_tokens += n_tokens;
+    }
+
+    /// First streamed token of a generation: submit→token seconds (TTFT).
+    pub fn record_first_token(&self, ttft: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let g = &mut *g;
+        push_window(&mut g.ttft, &mut g.next_ttft, ttft);
+    }
+
+    /// Gap since the previous streamed token of the same sequence.
+    pub fn record_inter_token(&self, gap: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let g = &mut *g;
+        push_window(&mut g.inter_token, &mut g.next_itl, gap);
+    }
+
+    /// One decode micro-batch iteration advanced `active` slots.
+    pub fn record_decode_step(&self, active: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.decode_steps += 1;
+        g.slot_occupancy_sum += active as u64;
+        g.max_active_slots = g.max_active_slots.max(active);
     }
 
     /// One micro-batch executed with `n` coalesced requests.
@@ -125,6 +180,18 @@ impl ServeMetrics {
             max_queue_depth: g.max_queue_depth,
             rejected: g.rejected.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
             adapters: g.adapters.clone(),
+            gen_served: g.gen_served,
+            gen_tokens: g.gen_tokens,
+            tokens_per_sec: g.gen_tokens as f64 / uptime,
+            decode_steps: g.decode_steps,
+            mean_slot_occupancy: if g.decode_steps == 0 {
+                0.0
+            } else {
+                g.slot_occupancy_sum as f64 / g.decode_steps as f64
+            },
+            max_active_slots: g.max_active_slots,
+            ttft: (!g.ttft.is_empty()).then(|| Summary::of(&g.ttft)),
+            inter_token: (!g.inter_token.is_empty()).then(|| Summary::of(&g.inter_token)),
         }
     }
 }
@@ -144,6 +211,21 @@ pub struct MetricsReport {
     pub max_queue_depth: usize,
     pub rejected: BTreeMap<String, u64>,
     pub adapters: BTreeMap<String, AdapterCounters>,
+    /// Completed generation requests (a subset of `served`).
+    pub gen_served: u64,
+    /// Tokens streamed across all generations.
+    pub gen_tokens: u64,
+    /// Streamed tokens per second of uptime.
+    pub tokens_per_sec: f64,
+    /// Decode micro-batch iterations executed.
+    pub decode_steps: u64,
+    /// Mean active decode slots per iteration (continuous-batching gain).
+    pub mean_slot_occupancy: f64,
+    pub max_active_slots: usize,
+    /// Time-to-first-token summary in seconds (None before any stream).
+    pub ttft: Option<Summary>,
+    /// Inter-token gap summary in seconds (None before any 2-token stream).
+    pub inter_token: Option<Summary>,
 }
 
 impl MetricsReport {
@@ -167,6 +249,30 @@ impl MetricsReport {
         t.row(vec!["batches".into(), self.batches.to_string()]);
         t.row(vec!["mean batch".into(), format!("{:.2}", self.mean_batch)]);
         t.row(vec!["max queue depth".into(), self.max_queue_depth.to_string()]);
+        if self.gen_served > 0 {
+            let (tp50, tp95) = self
+                .ttft
+                .as_ref()
+                .map(|s| (s.p50 * 1e3, s.p95 * 1e3))
+                .unwrap_or((f64::NAN, f64::NAN));
+            let (ip50, ip95) = self
+                .inter_token
+                .as_ref()
+                .map(|s| (s.p50 * 1e3, s.p95 * 1e3))
+                .unwrap_or((f64::NAN, f64::NAN));
+            t.row(vec!["generations".into(), self.gen_served.to_string()]);
+            t.row(vec!["tokens streamed".into(), self.gen_tokens.to_string()]);
+            t.row(vec!["tokens/s".into(), format!("{:.1}", self.tokens_per_sec)]);
+            t.row(vec!["ttft p50".into(), format!("{tp50:.2} ms")]);
+            t.row(vec!["ttft p95".into(), format!("{tp95:.2} ms")]);
+            t.row(vec!["inter-token p50".into(), format!("{ip50:.2} ms")]);
+            t.row(vec!["inter-token p95".into(), format!("{ip95:.2} ms")]);
+            t.row(vec!["decode steps".into(), self.decode_steps.to_string()]);
+            t.row(vec![
+                "slot occupancy".into(),
+                format!("{:.2} mean / {} max", self.mean_slot_occupancy, self.max_active_slots),
+            ]);
+        }
         for (kind, n) in &self.rejected {
             t.row(vec![format!("rejected/{kind}"), n.to_string()]);
         }
@@ -238,6 +344,36 @@ mod tests {
         let r = ServeMetrics::new().snapshot();
         assert_eq!(r.served, 0);
         assert!(r.latency.is_none());
-        assert!(r.render().contains("Serving metrics"));
+        assert!(r.ttft.is_none());
+        assert_eq!(r.gen_served, 0);
+        let rendered = r.render();
+        assert!(rendered.contains("Serving metrics"));
+        // decode rows only appear once a generation completed
+        assert!(!rendered.contains("tokens streamed"));
+    }
+
+    #[test]
+    fn decode_counters_and_render() {
+        let m = ServeMetrics::new();
+        m.record_first_token(0.004);
+        m.record_inter_token(0.001);
+        m.record_inter_token(0.002);
+        m.record_decode_step(2);
+        m.record_decode_step(1);
+        m.record_gen_served("a", ServePath::Bypass, 0.010, 3);
+        let r = m.snapshot();
+        assert_eq!(r.gen_served, 1);
+        assert_eq!(r.gen_tokens, 3);
+        assert_eq!(r.served, 1, "a generation is also a served request");
+        assert_eq!(r.decode_steps, 2);
+        assert!((r.mean_slot_occupancy - 1.5).abs() < 1e-9);
+        assert_eq!(r.max_active_slots, 2);
+        assert_eq!(r.ttft.as_ref().unwrap().n, 1);
+        assert_eq!(r.inter_token.as_ref().unwrap().n, 2);
+        assert_eq!(r.adapters["a"].bypass_hits, 1);
+        let rendered = r.render();
+        assert!(rendered.contains("tokens streamed"));
+        assert!(rendered.contains("ttft p50"));
+        assert!(rendered.contains("slot occupancy"));
     }
 }

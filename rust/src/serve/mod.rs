@@ -13,24 +13,32 @@
 //! * [`batcher`]  — [`MicroBatcher`]: per-adapter request coalescing with
 //!   full-batch dispatch and deadline flush (continuous micro-batching).
 //! * [`scheduler`] — [`Server`]: bounded admission queue with typed
-//!   backpressure rejections, a worker-thread pool executing batches
-//!   through the pure-rust forward ([`Backend::Host`]) or the AOT HLO eval
-//!   artifacts ([`Backend::Hlo`], including the scatter-input bypass
-//!   artifact), and per-request response channels.
+//!   backpressure rejections (including per-adapter admission quotas), a
+//!   worker-thread pool executing batches through the pure-rust forward
+//!   ([`Backend::Host`]) or the AOT HLO eval artifacts ([`Backend::Hlo`],
+//!   including the scatter-input bypass artifact), per-request response
+//!   channels, and a slot-based decode thread for streaming generation.
+//! * [`generate`] — [`GenerateRequest`] / [`GenTicket`]: streaming greedy
+//!   decode over the KV-cached incremental forward
+//!   (`model::DecodeState`); tokens stream back as they are produced,
+//!   finished sequences free their decode slot mid-flight.
 //! * [`metrics`]  — [`ServeMetrics`]: p50/p95 latency, req/s, queue depth,
 //!   micro-batch occupancy, per-adapter merged/bypass hit rates, rejection
-//!   counts.
+//!   counts; decode adds TTFT, inter-token latency, tokens/s, and slot
+//!   occupancy.
 //!
 //! See `docs/serving.md` for the architecture and lifecycle, and
 //! `bench/serve_bench` for the merged-vs-bypass perf baseline. The
 //! `neuroada serve` CLI subcommand drives all of it end-to-end.
 
 pub mod batcher;
+pub mod generate;
 pub mod metrics;
 pub mod registry;
 pub mod scheduler;
 
 pub use batcher::MicroBatcher;
+pub use generate::{FinishReason, GenEvent, GenResponse, GenTicket, GenerateRequest};
 pub use metrics::{AdapterCounters, MetricsReport, ServeMetrics};
 pub use registry::{AdapterInfo, AdapterRegistry, ModelRef, RegistryCfg, ServePath};
 pub use scheduler::{Backend, Reject, Request, Response, ServeCfg, Server, Ticket};

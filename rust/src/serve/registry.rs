@@ -240,6 +240,28 @@ impl AdapterRegistry {
         self.resolve_batch(name, 1)
     }
 
+    /// Resolve for the latency-critical decode path: counts the request and
+    /// uses the resident merged copy when one exists, but NEVER builds a
+    /// merge inline — the single decode thread must not stall every active
+    /// stream behind an O(params) promotion. The counted requests still
+    /// advance `promote_after`, so the next scoring-path resolve performs
+    /// the merge (on a pool worker) once the threshold is crossed.
+    pub fn resolve_no_promote(&self, name: &str) -> Option<ModelRef> {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        let e = g.entries.get_mut(name)?;
+        e.last_used = tick;
+        e.requests += 1;
+        match &e.merged {
+            Some(m) => Some(ModelRef::Merged(m.clone())),
+            None => Some(ModelRef::Bypass {
+                backbone: self.backbone.clone(),
+                deltas: e.deltas.clone(),
+            }),
+        }
+    }
+
     /// Resolve a coalesced batch of `n_requests` for an adapter, applying
     /// the promotion policy (`promote_after` counts *requests*, not
     /// batches). `None` for unknown adapters.
@@ -445,6 +467,22 @@ mod tests {
         assert!(!reg.is_merged("b"));
         // the deltas stayed registered throughout
         assert_eq!(reg.len(), 3);
+    }
+
+    #[test]
+    fn resolve_no_promote_counts_but_never_merges() {
+        let reg = nano_registry(RegistryCfg { merged_capacity: 2, promote_after: 1 });
+        reg.register("a", adapter(&reg, 1)).unwrap();
+        // stays on the bypass even past promote_after (no inline merge)
+        for _ in 0..3 {
+            assert_eq!(reg.resolve_no_promote("a").unwrap().path(), ServePath::Bypass);
+        }
+        assert!(!reg.is_merged("a"));
+        assert_eq!(reg.info("a").unwrap().requests, 3);
+        // but a resident merged copy is used when one exists
+        reg.merge_now("a").unwrap();
+        assert_eq!(reg.resolve_no_promote("a").unwrap().path(), ServePath::Merged);
+        assert!(reg.resolve_no_promote("nope").is_none());
     }
 
     #[test]

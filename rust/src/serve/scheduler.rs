@@ -1,5 +1,17 @@
 //! Request scheduler: bounded admission queue → continuous micro-batching →
-//! worker pool → per-request responses.
+//! worker pool → per-request responses; plus slot-based streaming decode.
+//!
+//! Two request classes share the bounded queue and the typed-rejection
+//! surface. Multiple-choice **scoring** ([`Request`]) coalesces per adapter
+//! in the [`MicroBatcher`] and runs one forward per batch on the worker
+//! pool. Streaming **generation** ([`GenerateRequest`]) is admitted to a
+//! FIFO and served by a dedicated decode thread owning `max_slots` slots:
+//! each slot holds one sequence's KV cache ([`DecodeState`]), every
+//! iteration advances all active slots one token (the decode micro-batch),
+//! tokens stream back the moment they are produced, and a finished
+//! sequence frees its slot mid-flight for the next queued request. An
+//! optional per-adapter admission quota ([`ServeCfg::adapter_quota`])
+//! keeps one hot tenant from consuming the whole queue.
 //!
 //! `Server::start` spawns `workers` OS threads (sized like
 //! `coordinator::pool::Pool::default_size`). Each worker loops: pop a ready
@@ -14,16 +26,18 @@
 //! backpressure the caller can see and act on. All rejections are typed.
 
 use super::batcher::MicroBatcher;
+use super::generate::{FinishReason, GenEvent, GenResponse, GenTicket, GenerateRequest};
 use super::metrics::{MetricsReport, ServeMetrics};
-use super::registry::{AdapterRegistry, ModelRef};
+use super::registry::{AdapterRegistry, ModelRef, ServePath};
 use crate::config::ModelCfg;
 use crate::data::{eval_batch, Example};
-use crate::model::{DeltaOverlay, RefModel};
+use crate::model::{DecodeState, DeltaOverlay, RefModel};
 use crate::runtime::manifest::ArtifactMeta;
 use crate::runtime::{state::run_once, Engine, Value};
 use crate::tensor::Tensor;
 use crate::util::nan_safe_argmax;
 use anyhow::Result;
+use std::collections::VecDeque;
 use std::fmt;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
@@ -64,6 +78,14 @@ pub enum Reject {
     PromptTooLong { len: usize, max: usize },
     InvalidOption { token: i32, vocab: usize },
     InvalidPromptToken { token: i32, vocab: usize },
+    InvalidStopToken { token: i32, vocab: usize },
+    /// The adapter already has `quota` requests pending — per-tenant
+    /// fairness: one hot adapter cannot consume the whole bounded queue.
+    QuotaExceeded { adapter: String, pending: usize, quota: usize },
+    /// `prompt + max_new_tokens` does not fit the per-slot KV capacity.
+    ContextOverflow { need: usize, max: usize },
+    /// A generation request asked for zero new tokens.
+    ZeroMaxTokens,
     ShuttingDown,
     /// Backend failure while executing the batch (e.g. PJRT error).
     Internal(String),
@@ -80,6 +102,10 @@ impl Reject {
             Reject::PromptTooLong { .. } => "prompt_too_long",
             Reject::InvalidOption { .. } => "invalid_option",
             Reject::InvalidPromptToken { .. } => "invalid_prompt_token",
+            Reject::InvalidStopToken { .. } => "invalid_stop_token",
+            Reject::QuotaExceeded { .. } => "quota_exceeded",
+            Reject::ContextOverflow { .. } => "context_overflow",
+            Reject::ZeroMaxTokens => "zero_max_tokens",
             Reject::ShuttingDown => "shutting_down",
             Reject::Internal(_) => "internal",
         }
@@ -104,6 +130,16 @@ impl fmt::Display for Reject {
             Reject::InvalidPromptToken { token, vocab } => {
                 write!(f, "prompt token {token} outside vocab {vocab}")
             }
+            Reject::InvalidStopToken { token, vocab } => {
+                write!(f, "stop token {token} outside vocab {vocab}")
+            }
+            Reject::QuotaExceeded { adapter, pending, quota } => {
+                write!(f, "adapter {adapter:?} at its admission quota ({pending}/{quota})")
+            }
+            Reject::ContextOverflow { need, max } => {
+                write!(f, "prompt + max_new_tokens = {need} exceeds context {max}")
+            }
+            Reject::ZeroMaxTokens => write!(f, "generation request asks for zero new tokens"),
             Reject::ShuttingDown => write!(f, "server is shutting down"),
             Reject::Internal(e) => write!(f, "internal serving error: {e}"),
         }
@@ -123,6 +159,16 @@ pub struct ServeCfg {
     pub max_delay: Duration,
     /// Worker threads executing batches.
     pub workers: usize,
+    /// Concurrent decode slots (streaming generations in flight). Each slot
+    /// owns one KV cache (`DecodeState::kv_bytes_for(cfg)` bytes); the
+    /// decode thread advances every active slot one token per micro-batch
+    /// iteration, and a finished sequence frees its slot mid-flight.
+    pub max_slots: usize,
+    /// Per-adapter admission quota across the scoring queue and the
+    /// generation queue (0 = unlimited). With a quota, one hot tenant can
+    /// hold at most this many pending requests — the rest of the bounded
+    /// queue stays available to other adapters ([`Reject::QuotaExceeded`]).
+    pub adapter_quota: usize,
 }
 
 impl Default for ServeCfg {
@@ -132,6 +178,8 @@ impl Default for ServeCfg {
             max_queue: 256,
             max_delay: Duration::from_millis(10),
             workers: crate::coordinator::pool::Pool::default_size(),
+            max_slots: 8,
+            adapter_quota: 0,
         }
     }
 }
@@ -156,8 +204,17 @@ struct Queued {
     tx: mpsc::Sender<Result<Response, Reject>>,
 }
 
+struct QueuedGen {
+    req: GenerateRequest,
+    enqueued: Instant,
+    tx: mpsc::Sender<Result<GenEvent, Reject>>,
+}
+
 struct State {
     batcher: MicroBatcher<Queued>,
+    /// FIFO of admitted generations waiting for a decode slot. Counted
+    /// against `max_queue` together with the batcher's depth.
+    gen_queue: VecDeque<QueuedGen>,
     stopping: bool,
 }
 
@@ -167,7 +224,12 @@ struct Shared {
     registry: AdapterRegistry,
     metrics: ServeMetrics,
     state: Mutex<State>,
+    /// Wakes batch workers (scoring queue). Paired with `state`.
     cv: Condvar,
+    /// Wakes the decode thread (generation queue). A separate condvar so
+    /// the scoring path keeps cheap `notify_one` wakeups instead of
+    /// broadcasting to every thread on each submit. Paired with `state`.
+    gen_cv: Condvar,
 }
 
 /// Handle for one pending request; `wait` blocks for its response.
@@ -201,6 +263,7 @@ impl Server {
         );
         anyhow::ensure!(cfg.workers >= 1, "serve: need at least one worker");
         anyhow::ensure!(cfg.max_queue >= 1, "serve: need max_queue >= 1");
+        anyhow::ensure!(cfg.max_slots >= 1, "serve: need max_slots >= 1");
         let mut cfg = cfg;
         if let Backend::Hlo { eval, .. } = &backend {
             // the HLO artifact has a fixed batch dimension; coalescing past
@@ -210,6 +273,7 @@ impl Server {
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 batcher: MicroBatcher::new(cfg.max_batch.max(1), cfg.max_delay),
+                gen_queue: VecDeque::new(),
                 stopping: false,
             }),
             cfg,
@@ -217,8 +281,9 @@ impl Server {
             registry,
             metrics: ServeMetrics::new(),
             cv: Condvar::new(),
+            gen_cv: Condvar::new(),
         });
-        let workers = (0..shared.cfg.workers)
+        let mut workers: Vec<thread::JoinHandle<()>> = (0..shared.cfg.workers)
             .map(|i| {
                 let sh = shared.clone();
                 thread::Builder::new()
@@ -227,6 +292,15 @@ impl Server {
                     .expect("spawn serve worker")
             })
             .collect();
+        // one decode thread owns all generation slots (the slot loop is the
+        // micro-batch: every active slot advances one token per iteration)
+        let sh = shared.clone();
+        workers.push(
+            thread::Builder::new()
+                .name("serve-decode".into())
+                .spawn(move || decode_loop(&sh))
+                .expect("spawn serve decode thread"),
+        );
         Ok(Server { shared, workers })
     }
 
@@ -248,10 +322,11 @@ impl Server {
             if st.stopping {
                 return Err(Reject::ShuttingDown);
             }
-            let depth = st.batcher.depth();
+            let depth = st.batcher.depth() + st.gen_queue.len();
             if depth >= sh.cfg.max_queue {
                 return Err(Reject::QueueFull { depth, capacity: sh.cfg.max_queue });
             }
+            Self::check_quota(sh, &st, &req.adapter)?;
             let (tx, rx) = mpsc::channel();
             let adapter = req.adapter.clone();
             let now = Instant::now();
@@ -264,6 +339,89 @@ impl Server {
             sh.metrics.record_reject(r.kind());
         }
         res
+    }
+
+    /// Admit one streaming generation. Fails fast with a typed [`Reject`]
+    /// like [`Server::submit`]; on success the returned [`GenTicket`]
+    /// streams every token as it is produced, then a final
+    /// [`GenEvent::Done`]. Decoding always runs the host forward (there is
+    /// no decode HLO artifact yet), whichever backend scores batches.
+    pub fn submit_generate(&self, req: GenerateRequest) -> Result<GenTicket, Reject> {
+        let sh = &self.shared;
+        let mcfg = sh.registry.model_cfg();
+        let res = Self::validate_generate(sh, &req, mcfg).and_then(|()| {
+            let mut st = sh.state.lock().unwrap();
+            if st.stopping {
+                return Err(Reject::ShuttingDown);
+            }
+            let depth = st.batcher.depth() + st.gen_queue.len();
+            if depth >= sh.cfg.max_queue {
+                return Err(Reject::QueueFull { depth, capacity: sh.cfg.max_queue });
+            }
+            Self::check_quota(sh, &st, &req.adapter)?;
+            let (tx, rx) = mpsc::channel();
+            st.gen_queue.push_back(QueuedGen { req, enqueued: Instant::now(), tx });
+            sh.metrics.observe_queue_depth(depth + 1);
+            sh.gen_cv.notify_one();
+            Ok(GenTicket { rx })
+        });
+        if let Err(r) = &res {
+            sh.metrics.record_reject(r.kind());
+        }
+        res
+    }
+
+    /// Per-adapter admission quota over everything pending (score batches +
+    /// queued generations). Disabled at `adapter_quota == 0`.
+    fn check_quota(sh: &Shared, st: &State, adapter: &str) -> Result<(), Reject> {
+        let quota = sh.cfg.adapter_quota;
+        if quota == 0 {
+            return Ok(());
+        }
+        let pending = st.batcher.adapter_depth(adapter)
+            + st.gen_queue.iter().filter(|g| g.req.adapter == adapter).count();
+        if pending >= quota {
+            return Err(Reject::QuotaExceeded {
+                adapter: adapter.to_string(),
+                pending,
+                quota,
+            });
+        }
+        Ok(())
+    }
+
+    fn validate_generate(
+        sh: &Shared,
+        req: &GenerateRequest,
+        mcfg: &ModelCfg,
+    ) -> Result<(), Reject> {
+        if !sh.registry.contains(&req.adapter) {
+            return Err(Reject::UnknownAdapter(req.adapter.clone()));
+        }
+        if req.prompt.is_empty() {
+            return Err(Reject::EmptyPrompt);
+        }
+        if req.max_new_tokens == 0 {
+            return Err(Reject::ZeroMaxTokens);
+        }
+        if req.prompt.len() > mcfg.seq {
+            return Err(Reject::PromptTooLong { len: req.prompt.len(), max: mcfg.seq });
+        }
+        let need = req.prompt.len() + req.max_new_tokens;
+        if need > mcfg.seq {
+            return Err(Reject::ContextOverflow { need, max: mcfg.seq });
+        }
+        for &t in &req.prompt {
+            if t < 0 || t as usize >= mcfg.vocab {
+                return Err(Reject::InvalidPromptToken { token: t, vocab: mcfg.vocab });
+            }
+        }
+        for &t in &req.stop {
+            if t < 0 || t as usize >= mcfg.vocab {
+                return Err(Reject::InvalidStopToken { token: t, vocab: mcfg.vocab });
+            }
+        }
+        Ok(())
     }
 
     fn validate(sh: &Shared, req: &Request, mcfg: &ModelCfg) -> Result<(), Reject> {
@@ -338,12 +496,51 @@ impl Server {
         })
     }
 
+    /// Open-loop generation fan-out, mirroring [`Server::drive_clients`]:
+    /// split `requests` across `clients` threads, each bursting its share.
+    /// Returns `(completed, rejected, tokens_streamed)`.
+    pub fn drive_gen_clients(
+        &self,
+        requests: Vec<GenerateRequest>,
+        clients: usize,
+    ) -> (usize, usize, u64) {
+        let per = requests.len().div_ceil(clients.max(1)).max(1);
+        let chunks: Vec<Vec<GenerateRequest>> = requests.chunks(per).map(|c| c.to_vec()).collect();
+        thread::scope(|s| {
+            let handles: Vec<_> = chunks
+                .into_iter()
+                .map(|chunk| {
+                    s.spawn(move || {
+                        let tickets: Vec<_> =
+                            chunk.into_iter().map(|r| self.submit_generate(r)).collect();
+                        let (mut ok, mut rej, mut toks) = (0usize, 0usize, 0u64);
+                        for t in tickets {
+                            match t.and_then(|t| t.wait()) {
+                                Ok(r) => {
+                                    ok += 1;
+                                    toks += r.tokens.len() as u64;
+                                }
+                                Err(_) => rej += 1,
+                            }
+                        }
+                        (ok, rej, toks)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("serve gen client thread"))
+                .fold((0, 0, 0), |(a, b, c), (o, r, t)| (a + o, b + r, c + t))
+        })
+    }
+
     /// Drain pending work, stop the workers, and return the final metrics.
     pub fn shutdown(mut self) -> MetricsReport {
         {
             let mut st = self.shared.state.lock().unwrap();
             st.stopping = true;
             self.shared.cv.notify_all();
+            self.shared.gen_cv.notify_all();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -360,6 +557,7 @@ impl Drop for Server {
         let mut st = self.shared.state.lock().unwrap();
         st.stopping = true;
         self.shared.cv.notify_all();
+        self.shared.gen_cv.notify_all();
         drop(st);
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -397,6 +595,231 @@ fn worker_loop(sh: &Shared) {
             None => return, // stopping and drained
         }
     }
+}
+
+/// One in-flight generation: a decode slot with its own KV cache.
+struct GenSlot {
+    adapter: String,
+    model: ModelRef,
+    path: ServePath,
+    state: DecodeState,
+    /// Prompt followed by generated tokens, in order.
+    tokens: Vec<i32>,
+    prompt_len: usize,
+    max_new: usize,
+    stop: Vec<i32>,
+    tx: mpsc::Sender<Result<GenEvent, Reject>>,
+    enqueued: Instant,
+    ttft: Duration,
+    emitted: usize,
+    last_token_at: Instant,
+}
+
+enum SlotStatus {
+    Active,
+    Finished,
+}
+
+/// The decode thread: slot-based continuous batching for streaming
+/// generation. Each iteration (a decode micro-batch) admits queued
+/// generations into free slots, prefills them, and advances every active
+/// slot one token; a finished sequence frees its slot mid-flight so the
+/// next queued request starts without waiting for its batch-mates.
+fn decode_loop(sh: &Shared) {
+    let mcfg = sh.registry.model_cfg().clone();
+    let mut slots: Vec<GenSlot> = Vec::new();
+    loop {
+        let mut admitted: Vec<QueuedGen> = Vec::new();
+        {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                while slots.len() + admitted.len() < sh.cfg.max_slots {
+                    match st.gen_queue.pop_front() {
+                        Some(g) => admitted.push(g),
+                        None => break,
+                    }
+                }
+                if !slots.is_empty() || !admitted.is_empty() {
+                    break;
+                }
+                if st.stopping {
+                    return; // no slots, no queue: drained
+                }
+                let (guard, _) = sh.gen_cv.wait_timeout(st, IDLE_WAIT).unwrap();
+                st = guard;
+            }
+        }
+        // prefill newly admitted requests into slots (outside the lock; the
+        // first token is produced here, so TTFT covers queue wait + prefill)
+        for g in admitted {
+            if let Some(slot) = prefill_slot(sh, &mcfg, g) {
+                slots.push(slot);
+            }
+        }
+        if slots.is_empty() {
+            continue; // every prefill rejected/finished instantly
+        }
+        // one decode micro-batch: every active slot advances one token
+        sh.metrics.record_decode_step(slots.len());
+        let mut i = 0;
+        while i < slots.len() {
+            match step_slot(sh, &mcfg, &mut slots[i]) {
+                SlotStatus::Active => i += 1,
+                SlotStatus::Finished => {
+                    slots.swap_remove(i); // freed mid-flight
+                }
+            }
+        }
+    }
+}
+
+/// Resolve the adapter, prefill the prompt through the KV cache, and emit
+/// the first token. `None` when the request finished at prefill (rejected,
+/// errored, or single-token generations that complete immediately).
+fn prefill_slot(sh: &Shared, mcfg: &ModelCfg, g: QueuedGen) -> Option<GenSlot> {
+    let QueuedGen { req, enqueued, tx } = g;
+    // no-promote resolve: an inline O(params) promotion merge on the single
+    // decode thread would stall every active stream's inter-token latency
+    let Some(model) = sh.registry.resolve_no_promote(&req.adapter) else {
+        // evicted between admission and slot assignment
+        sh.metrics.record_reject("unknown_adapter");
+        let _ = tx.send(Err(Reject::UnknownAdapter(req.adapter.clone())));
+        return None;
+    };
+    let path = model.path();
+    let mut state = DecodeState::new(mcfg);
+    let logits = match host_prefill(mcfg, &model, &req.prompt, &mut state) {
+        Ok(l) => l,
+        Err(e) => {
+            sh.metrics.record_reject("internal");
+            let _ = tx.send(Err(Reject::Internal(format!("{e:#}"))));
+            return None;
+        }
+    };
+    let prompt_len = req.prompt.len();
+    let mut slot = GenSlot {
+        adapter: req.adapter,
+        model,
+        path,
+        state,
+        tokens: req.prompt,
+        prompt_len,
+        max_new: req.max_new_tokens,
+        stop: req.stop,
+        tx,
+        enqueued,
+        ttft: Duration::ZERO,
+        emitted: 0,
+        last_token_at: enqueued,
+    };
+    let first = nan_safe_argmax(logits.iter().copied()).unwrap_or(0) as i32;
+    match emit_token(sh, &mut slot, first) {
+        SlotStatus::Active => Some(slot),
+        SlotStatus::Finished => None,
+    }
+}
+
+/// Advance one slot by one token: feed the last token, greedy-pick the
+/// next, stream it.
+fn step_slot(sh: &Shared, mcfg: &ModelCfg, slot: &mut GenSlot) -> SlotStatus {
+    let last = *slot.tokens.last().expect("slot holds at least the prompt");
+    match host_step(mcfg, &slot.model, last, &mut slot.state) {
+        Ok(logits) => {
+            let next = nan_safe_argmax(logits.iter().copied()).unwrap_or(0) as i32;
+            emit_token(sh, slot, next)
+        }
+        Err(e) => {
+            sh.metrics.record_reject("internal");
+            let _ = slot.tx.send(Err(Reject::Internal(format!("{e:#}"))));
+            SlotStatus::Finished
+        }
+    }
+}
+
+/// Stream one produced token, then finish the slot (Done event) when a
+/// stop token was produced, `max_new` is reached, or the KV cache is full.
+fn emit_token(sh: &Shared, slot: &mut GenSlot, token: i32) -> SlotStatus {
+    let now = Instant::now();
+    if slot.emitted == 0 {
+        slot.ttft = now.duration_since(slot.enqueued);
+        sh.metrics.record_first_token(slot.ttft.as_secs_f64());
+    } else {
+        sh.metrics
+            .record_inter_token(now.duration_since(slot.last_token_at).as_secs_f64());
+    }
+    slot.last_token_at = now;
+    slot.tokens.push(token);
+    let index = slot.emitted;
+    slot.emitted += 1;
+    if slot.tx.send(Ok(GenEvent::Token { token, index })).is_err() {
+        // the client dropped its ticket: nobody is reading this stream, so
+        // free the slot now instead of decoding to completion for no one;
+        // counted so served + rejected still tallies with admissions
+        sh.metrics.record_reject("abandoned");
+        return SlotStatus::Finished;
+    }
+    let stopped = slot.stop.contains(&token);
+    // `state.remaining() == 0` is a belt-and-braces guard: admission
+    // already ensures prompt + max_new fits the cache
+    let done = stopped || slot.emitted >= slot.max_new || slot.state.remaining() == 0;
+    if !done {
+        return SlotStatus::Active;
+    }
+    let latency = slot.enqueued.elapsed();
+    sh.metrics
+        .record_gen_served(&slot.adapter, slot.path, latency.as_secs_f64(), slot.emitted as u64);
+    let _ = slot.tx.send(Ok(GenEvent::Done(GenResponse {
+        tokens: slot.tokens[slot.prompt_len..].to_vec(),
+        path: slot.path,
+        finish: if stopped { FinishReason::Stop } else { FinishReason::Length },
+        ttft: slot.ttft,
+        latency,
+    })));
+    SlotStatus::Finished
+}
+
+/// One incremental decode step through the host forward for a resolved
+/// weight view: merged → plain dense step; bypass → overlay step. Public
+/// for the decode bench and parity tests (the slot path and the
+/// measurement path must be the same code). The bypass arm rebuilds the
+/// (small, O(#projections)) overlay map per call — negligible next to the
+/// O(d²) step; multi-token prefill goes through [`host_prefill`], which
+/// builds it once.
+pub fn host_step(
+    mcfg: &ModelCfg,
+    model: &ModelRef,
+    token: i32,
+    state: &mut DecodeState,
+) -> Result<Vec<f32>> {
+    host_prefill(mcfg, model, std::slice::from_ref(&token), state)
+}
+
+/// Feed a token run through the KV-cached step, returning the logits after
+/// the last token. Builds the bypass overlay once for the whole run.
+pub fn host_prefill(
+    mcfg: &ModelCfg,
+    model: &ModelRef,
+    tokens: &[i32],
+    state: &mut DecodeState,
+) -> Result<Vec<f32>> {
+    anyhow::ensure!(!tokens.is_empty(), "host_prefill: empty token run");
+    let mut logits = Vec::new();
+    match model {
+        ModelRef::Merged(store) => {
+            let m = RefModel::new(mcfg, store);
+            for &t in tokens {
+                logits = m.forward_step(t, state)?;
+            }
+        }
+        ModelRef::Bypass { backbone, deltas } => {
+            let overlay = DeltaOverlay::new(deltas);
+            let m = RefModel::with_overlay(mcfg, backbone, &overlay);
+            for &t in tokens {
+                logits = m.forward_step(t, state)?;
+            }
+        }
+    }
+    Ok(logits)
 }
 
 fn run_batch(sh: &Shared, adapter: &str, items: Vec<Queued>) {
@@ -719,6 +1142,7 @@ mod tests {
             max_queue: 2,
             max_delay: Duration::from_secs(30),
             workers: 1,
+            ..ServeCfg::default()
         });
         let t1 = srv.submit(req("task-a", 1)).unwrap();
         let t2 = srv.submit(req("task-a", 2)).unwrap();
@@ -741,6 +1165,7 @@ mod tests {
             max_queue: 16,
             max_delay: Duration::from_millis(5),
             workers: 1,
+            ..ServeCfg::default()
         });
         let t0 = Instant::now();
         let resp = srv.submit(req("task-a", 0)).unwrap().wait().unwrap();
@@ -749,5 +1174,119 @@ mod tests {
         // flushed by deadline, not stuck until some full batch
         assert!(t0.elapsed() < Duration::from_secs(5));
         srv.shutdown();
+    }
+
+    fn gen_req(adapter: &str) -> GenerateRequest {
+        GenerateRequest {
+            adapter: adapter.into(),
+            prompt: vec![4, 5, 6, 7],
+            max_new_tokens: 5,
+            stop: vec![],
+        }
+    }
+
+    #[test]
+    fn generate_rejections_are_typed() {
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        });
+        let r = srv.submit_generate(gen_req("nope")).map(|_| ());
+        assert_eq!(r, Err(Reject::UnknownAdapter("nope".into())));
+        let r = srv
+            .submit_generate(GenerateRequest { max_new_tokens: 0, ..gen_req("task-a") })
+            .map(|_| ());
+        assert_eq!(r, Err(Reject::ZeroMaxTokens));
+        let r = srv
+            .submit_generate(GenerateRequest {
+                prompt: vec![4; 30],
+                max_new_tokens: 10,
+                ..gen_req("task-a")
+            })
+            .map(|_| ());
+        assert_eq!(r, Err(Reject::ContextOverflow { need: 40, max: 32 }));
+        let r = srv
+            .submit_generate(GenerateRequest { stop: vec![-3], ..gen_req("task-a") })
+            .map(|_| ());
+        assert_eq!(r, Err(Reject::InvalidStopToken { token: -3, vocab: 256 }));
+        let m = srv.shutdown();
+        assert_eq!(m.total_rejected(), 4);
+    }
+
+    #[test]
+    fn streams_tokens_then_done() {
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        });
+        let t = srv.submit_generate(gen_req("task-a")).unwrap();
+        let mut tokens = Vec::new();
+        let done = loop {
+            match t.next_event().expect("stream open until Done") {
+                Ok(GenEvent::Token { token, index }) => {
+                    assert_eq!(index, tokens.len(), "tokens stream in order");
+                    tokens.push(token);
+                }
+                Ok(GenEvent::Done(r)) => break r,
+                Err(e) => panic!("unexpected reject {e}"),
+            }
+        };
+        assert_eq!(done.tokens, tokens, "summary matches the stream");
+        assert_eq!(tokens.len(), 5);
+        assert_eq!(done.finish, FinishReason::Length);
+        assert!(done.ttft <= done.latency);
+        let m = srv.shutdown();
+        assert_eq!(m.gen_served, 1);
+        assert_eq!(m.gen_tokens, 5);
+        assert_eq!(m.served, 1);
+        assert!(m.ttft.is_some());
+        assert!(m.inter_token.is_some());
+        assert_eq!(m.decode_steps, 4, "first token at prefill, 4 stepped");
+    }
+
+    #[test]
+    fn stop_token_finishes_generation() {
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        });
+        // learn the deterministic greedy first token, then stop on it
+        let r1 = srv.submit_generate(gen_req("task-a")).unwrap().wait().unwrap();
+        let first = r1.tokens[0];
+        let r2 = srv
+            .submit_generate(GenerateRequest { stop: vec![first], ..gen_req("task-a") })
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r2.tokens, vec![first], "stop token included, then finished");
+        assert_eq!(r2.finish, FinishReason::Stop);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn adapter_quota_bounds_hot_tenant() {
+        // nothing drains (long flush deadline); the hot tenant is capped at
+        // 2 pending while other tenants still get queue space
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            max_batch: 64,
+            max_queue: 16,
+            max_delay: Duration::from_secs(30),
+            workers: 1,
+            adapter_quota: 2,
+            ..ServeCfg::default()
+        });
+        let t1 = srv.submit(req("task-a", 1)).unwrap();
+        let t2 = srv.submit(req("task-a", 2)).unwrap();
+        match srv.submit(req("task-a", 3)) {
+            Err(Reject::QuotaExceeded { pending: 2, quota: 2, .. }) => {}
+            other => panic!("expected QuotaExceeded, got {:?}", other.map(|_| ())),
+        }
+        let t3 = srv.submit(req("task-b", 1)).unwrap();
+        // generations count against the same per-adapter quota
+        let r = srv.submit_generate(gen_req("task-a")).map(|_| ());
+        assert!(matches!(r, Err(Reject::QuotaExceeded { .. })));
+        let m = srv.shutdown();
+        assert!(t1.wait().is_ok() && t2.wait().is_ok() && t3.wait().is_ok());
+        assert_eq!(m.rejected.get("quota_exceeded"), Some(&2));
     }
 }

@@ -4,15 +4,20 @@
 //! Covers the ISSUE-1 acceptance points: ≥2 distinct adapters served from
 //! one resident backbone, bypass-vs-merged logit parity to ≤1e-5, batch
 //! coalescing under concurrent load, deadline flush, LRU eviction of merged
-//! backbones, and hot-swap (register/evict while serving).
+//! backbones, and hot-swap (register/evict while serving). ISSUE-2 adds
+//! streaming-decode parity (KV-cached greedy continuation vs full
+//! re-forward, merged AND bypass paths, token-for-token through the real
+//! scheduler) and mid-flight decode-slot reuse without cross-contamination.
 
 use neuroada::bench::serve_bench::synth_adapter;
 use neuroada::config::presets;
 use neuroada::data::{example_stream, tasks, Split};
 use neuroada::model::init::init_params;
+use neuroada::model::{greedy_full_reforward, merge_deltas, RefModel};
 use neuroada::serve::scheduler::host_logits;
 use neuroada::serve::{
-    AdapterRegistry, Backend, Reject, RegistryCfg, Request, ServeCfg, Server,
+    AdapterRegistry, Backend, GenerateRequest, Reject, RegistryCfg, Request, ServeCfg, ServePath,
+    Server,
 };
 use neuroada::util::rng::Rng;
 use std::time::Duration;
@@ -90,6 +95,7 @@ fn serves_multiple_adapters_from_one_backbone() {
         max_queue: 128,
         max_delay: Duration::from_millis(5),
         workers: 2,
+        ..ServeCfg::default()
     }, Backend::Host)
     .unwrap();
     let reqs = task_requests(&cfg, &["adapter-0", "adapter-1", "adapter-2"], 24);
@@ -115,6 +121,7 @@ fn coalesces_batches_under_concurrent_load() {
         max_queue: 256,
         max_delay: Duration::from_millis(20),
         workers: 2,
+        ..ServeCfg::default()
     }, Backend::Host)
     .unwrap();
     let reqs = task_requests(&cfg, &["adapter-0", "adapter-1"], 64);
@@ -141,6 +148,7 @@ fn deadline_flush_bounds_lone_request_latency() {
         max_queue: 16,
         max_delay: Duration::from_millis(10),
         workers: 1,
+        ..ServeCfg::default()
     }, Backend::Host)
     .unwrap();
     let req = task_requests(&cfg, &["adapter-0"], 1).remove(0);
@@ -163,6 +171,7 @@ fn lru_keeps_merged_copies_within_capacity() {
         max_queue: 64,
         max_delay: Duration::from_millis(2),
         workers: 1,
+        ..ServeCfg::default()
     }, Backend::Host)
     .unwrap();
     for round in 0..3 {
@@ -190,6 +199,7 @@ fn hot_swap_register_and_evict_while_serving() {
         max_queue: 64,
         max_delay: Duration::from_millis(2),
         workers: 1,
+        ..ServeCfg::default()
     }, Backend::Host)
     .unwrap();
     // serve from the initial adapter
@@ -209,4 +219,111 @@ fn hot_swap_register_and_evict_while_serving() {
     let m = srv.shutdown();
     assert_eq!(m.served, 4);
     assert_eq!(m.rejected.get("unknown_adapter"), Some(&1));
+}
+
+/// Acceptance (ISSUE-2): greedy continuation through the server's KV-cached
+/// decode path matches the full re-forward continuation token-for-token,
+/// on BOTH the merged and the bypass adapter paths.
+#[test]
+fn streaming_decode_parity_merged_and_bypass() {
+    let (cfg, backbone) = nano();
+    let deltas = synth_adapter(&cfg, &backbone, 1, 123).unwrap();
+    let prompt: Vec<i32> = (0..6).map(|i| 4 + (i * 5) % 30).collect();
+    let max_new = 8;
+    // reference: full re-forward greedy continuation on the merged weights
+    // (bypass parity with merged is covered by model-level tests)
+    let reference = {
+        let mut merged = backbone.clone();
+        merge_deltas(&mut merged, &deltas).unwrap();
+        greedy_full_reforward(&RefModel::new(&cfg, &merged), &prompt, max_new).unwrap()
+    };
+    for (rcfg, want_path) in [
+        (RegistryCfg { merged_capacity: 2, promote_after: 1 }, ServePath::Merged),
+        (RegistryCfg { merged_capacity: 0, promote_after: 1 }, ServePath::Bypass),
+    ] {
+        let reg = AdapterRegistry::new(cfg.clone(), backbone.clone(), rcfg);
+        reg.register("gen-a", deltas.clone()).unwrap();
+        let srv = Server::start(
+            reg,
+            ServeCfg { workers: 1, ..ServeCfg::default() },
+            Backend::Host,
+        )
+        .unwrap();
+        if want_path == ServePath::Merged {
+            // the decode path never merges inline (it would stall every
+            // active stream); promote explicitly to exercise the merged
+            // decode path
+            srv.registry().merge_now("gen-a").unwrap();
+        }
+        let r = srv
+            .submit_generate(GenerateRequest {
+                adapter: "gen-a".into(),
+                prompt: prompt.clone(),
+                max_new_tokens: max_new,
+                stop: vec![],
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r.path, want_path);
+        assert_eq!(
+            r.tokens, reference,
+            "{want_path:?} served decode vs full re-forward reference"
+        );
+        let m = srv.shutdown();
+        assert_eq!(m.gen_served, 1);
+        assert_eq!(m.gen_tokens, max_new as u64);
+    }
+}
+
+/// Satellite (ISSUE-2): a short sequence finishes while a long one is
+/// decoding; the freed slot is reassigned mid-flight to the next queued
+/// request, and no stream is cross-contaminated.
+#[test]
+fn mid_flight_slot_reuse_no_cross_contamination() {
+    let (cfg, backbone) = nano();
+    let deltas = synth_adapter(&cfg, &backbone, 1, 500).unwrap();
+    let reg = AdapterRegistry::new(cfg.clone(), backbone.clone(), RegistryCfg::default());
+    reg.register("gen-a", deltas.clone()).unwrap();
+    let srv = Server::start(
+        reg,
+        ServeCfg { workers: 1, max_slots: 2, max_queue: 8, ..ServeCfg::default() },
+        Backend::Host,
+    )
+    .unwrap();
+    let prompt = |seed: i32| -> Vec<i32> { (0..6).map(|i| 4 + (i * 5 + seed * 3) % 30).collect() };
+    let gen = |p: Vec<i32>, n: usize| GenerateRequest {
+        adapter: "gen-a".into(),
+        prompt: p,
+        max_new_tokens: n,
+        stop: vec![],
+    };
+    // A holds a slot for 24 tokens; B finishes after 2 and frees its slot
+    // while A is mid-flight; C (queued — only 2 slots) takes it over.
+    let ta = srv.submit_generate(gen(prompt(0), 24)).unwrap();
+    let tb = srv.submit_generate(gen(prompt(1), 2)).unwrap();
+    let tc = srv.submit_generate(gen(prompt(2), 2)).unwrap();
+    let ra = ta.wait().unwrap();
+    let rb = tb.wait().unwrap();
+    let rc = tc.wait().unwrap();
+    // every stream matches its own single-request reference — slot reuse
+    // must not leak KV state or tokens across sequences
+    let mut merged = backbone.clone();
+    merge_deltas(&mut merged, &deltas).unwrap();
+    let m = RefModel::new(&cfg, &merged);
+    assert_eq!(ra.tokens, greedy_full_reforward(&m, &prompt(0), 24).unwrap(), "A contaminated");
+    assert_eq!(rb.tokens, greedy_full_reforward(&m, &prompt(1), 2).unwrap(), "B contaminated");
+    assert_eq!(rc.tokens, greedy_full_reforward(&m, &prompt(2), 2).unwrap(), "C contaminated");
+    // C completed while A was still decoding: the freed slot was reassigned
+    // mid-flight (~20 decode steps before A's end), not after A drained.
+    assert!(
+        rc.latency < ra.latency,
+        "C should finish in B's freed slot while A decodes (C {:?} vs A {:?})",
+        rc.latency,
+        ra.latency
+    );
+    let metrics = srv.shutdown();
+    assert_eq!(metrics.gen_served, 3);
+    assert_eq!(metrics.max_active_slots, 2, "both slots were occupied concurrently");
+    assert_eq!(metrics.gen_tokens, 24 + 2 + 2);
 }
