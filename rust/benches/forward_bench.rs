@@ -1,0 +1,56 @@
+//! Forward benchmark binary (harness = false; in-repo bench harness).
+//!
+//!   forward/legacy   pre-plan forward: per-row name lookups + weight copies
+//!   forward/plan     zero-copy planned forward, 1 thread and N threads
+//!
+//! measured × {nano, micro} × {merged, bypass} at batch 8. Writes
+//! `BENCH_forward.json` for the CI bench-artifact step. The "multi" thread
+//! count N comes from NEUROADA_THREADS (default 1, which collapses the
+//! thread axis); CI runs quick mode at =1 and =4.
+//!
+//! When N >= 2 this binary ASSERTS the ISSUE-3 floors on micro/merged at
+//! batch 8: plan×N >= 1.5× plan×1, and plan×N >= 2× legacy×1. Run:
+//! `cargo bench --bench forward_bench` (NEUROADA_BENCH=full for longer
+//! budgets; NEUROADA_FORWARD_BATCH / _SIZES to scale).
+
+use neuroada::bench::forward_bench;
+use neuroada::util::resolve_threads;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("NEUROADA_BENCH").as_deref() == Ok("full");
+    let threads = resolve_threads(0);
+    let batch: usize = std::env::var("NEUROADA_FORWARD_BATCH")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let sizes_raw = std::env::var("NEUROADA_FORWARD_SIZES").unwrap_or_else(|_| "nano,micro".into());
+    let sizes: Vec<&str> = sizes_raw.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    println!(
+        "== forward_bench ({} mode, sizes={sizes_raw}, batch={batch}, threads={threads}) ==",
+        if full { "full" } else { "quick" }
+    );
+    let report = forward_bench::run(&sizes, batch, threads, !full)?;
+    print!("{}", report.render());
+    std::fs::write("BENCH_forward.json", report.to_json().dump_pretty())?;
+    println!(
+        "(wrote BENCH_forward.json; legacy = per-call name resolution + weight copies, \
+         plan = zero-copy resolution, ×N = row-partitioned matmuls)"
+    );
+    if threads >= 2 && report.anchor == "micro" {
+        anyhow::ensure!(
+            report.micro_mt_vs_st >= 1.5,
+            "multi-thread floor: plan×{threads} is {:.2}× plan×1 on micro (need >= 1.5×)",
+            report.micro_mt_vs_st
+        );
+        anyhow::ensure!(
+            report.micro_plan_mt_vs_legacy_st >= 2.0,
+            "acceptance floor: plan×{threads} is {:.2}× legacy×1 on micro (need >= 2×)",
+            report.micro_plan_mt_vs_legacy_st
+        );
+        println!(
+            "floors OK: plan×{threads} = {:.2}× plan×1, {:.2}× legacy×1 (micro, batch {batch})",
+            report.micro_mt_vs_st, report.micro_plan_mt_vs_legacy_st
+        );
+    }
+    Ok(())
+}

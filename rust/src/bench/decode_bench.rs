@@ -19,8 +19,10 @@
 
 use super::{Bench, BenchResult};
 use crate::config::presets;
-use crate::model::{greedy_decode, greedy_full_reforward, DecodeState, DeltaOverlay, RefModel};
 use crate::model::init::init_params;
+use crate::model::{
+    greedy_decode, greedy_full_reforward, DecodeState, DeltaOverlay, PlannedModel, RefModel,
+};
 use crate::util::json::Json;
 use crate::util::nan_safe_argmax;
 use crate::util::rng::Rng;
@@ -109,24 +111,28 @@ pub fn run(size: &str, ctx: usize, gen: usize, quick: bool) -> Result<DecodeBenc
         "decode parity broken: cached {cached_toks:?} vs re-forward {reforward_toks:?}"
     );
 
+    // the steady-state surfaces under test resolve the zero-copy plan ONCE
+    // and step through it — the same shape the serving decode loop runs
+    let plan = m.plan()?;
+
     // prefill the shared state once; measured iterations clone it
     let mut prefilled = DecodeState::new(&cfg);
     let mut prefill_logits = Vec::new();
     for &t in &prompt {
-        prefill_logits = m.forward_step(t, &mut prefilled)?;
+        prefill_logits = plan.forward_step(t, &mut prefilled)?;
     }
 
     let mut results = Vec::new();
     let r_prefill = b.run(&format!("decode/prefill {size} ctx={ctx}"), || {
         let mut st = DecodeState::new(&cfg);
         for &t in &prompt {
-            std::hint::black_box(m.forward_step(t, &mut st).unwrap().len());
+            std::hint::black_box(plan.forward_step(t, &mut st).unwrap().len());
         }
     });
     let prefill_ms_per_token = r_prefill.per_iter_ms() / ctx as f64;
     results.push(r_prefill);
 
-    let greedy_from = |model: &RefModel| {
+    let greedy_from = |model: &PlannedModel| {
         let mut st = prefilled.clone();
         let mut lg = prefill_logits.clone();
         for _ in 0..gen {
@@ -136,7 +142,7 @@ pub fn run(size: &str, ctx: usize, gen: usize, quick: bool) -> Result<DecodeBenc
         std::hint::black_box(lg.len());
     };
     let r_cached = b.run(&format!("decode/cached {size} ctx={ctx} gen={gen}"), || {
-        greedy_from(&m);
+        greedy_from(&plan);
     });
     let cached_step_ms = r_cached.per_iter_ms() / gen as f64;
     results.push(r_cached);
@@ -152,9 +158,9 @@ pub fn run(size: &str, ctx: usize, gen: usize, quick: bool) -> Result<DecodeBenc
     // cost (the overlay changes logits, not the measured work shape).
     let deltas = super::serve_bench::synth_adapter(&cfg, &backbone, 1, 77)?;
     let overlay = DeltaOverlay::new(&deltas);
-    let mb = RefModel::with_overlay(&cfg, &backbone, &overlay);
+    let bypass_plan = RefModel::with_overlay(&cfg, &backbone, &overlay).plan()?;
     let r_bypass = b.run(&format!("decode/bypass {size} ctx={ctx} gen={gen}"), || {
-        greedy_from(&mb);
+        greedy_from(&bypass_plan);
     });
     let bypass_step_ms = r_bypass.per_iter_ms() / gen as f64;
     results.push(r_bypass);

@@ -3,6 +3,7 @@
 //! binaries use, with deterministic iteration counts and robust statistics).
 
 pub mod decode_bench;
+pub mod forward_bench;
 pub mod serve_bench;
 
 use crate::util::stats::Summary;

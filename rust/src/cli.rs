@@ -104,9 +104,13 @@ SUBCOMMANDS
                     [--ckpt-dir DIR] [--requests 256] [--clients 4]
                     [--workers N] [--queue 256] [--max-batch B]
                     [--wait-ms 10] [--capacity 2] [--promote 3] [--host]
-                    [--generate] [--max-new 16] [--slots 8] [--quota N]
-                    (--generate streams greedy-decode tokens through the
-                    KV-cached slot scheduler instead of scoring options)
+                    [--threads N] [--generate] [--max-new 16] [--slots 8]
+                    [--quota N] [--temp T] [--top-k K]
+                    (--generate streams decode tokens through the KV-cached
+                    slot scheduler instead of scoring options; --temp/--top-k
+                    switch greedy to seeded sampling; --threads N
+                    row-partitions the host batched forward, default
+                    NEUROADA_THREADS or serial)
   audit             memory audit table: [--size nano] [--k 1]
   tasks             list the 23 synthetic tasks
 

@@ -10,7 +10,7 @@
 use crate::data::{self, tasks::{Metric, Task}, Split};
 use crate::peft::{DeltaStore, MethodKind};
 use crate::runtime::{state::run_once, Engine, Manifest, TrainSession, Value, ValueStore};
-use crate::tensor::{ops, Tensor};
+use crate::tensor::Tensor;
 use crate::util::nan_safe_argmax;
 use crate::util::stats::{matthews, pearson};
 use anyhow::{bail, Result};
@@ -177,7 +177,10 @@ pub fn eval_encoder(
         let out = run_once(engine, meta, &store)?;
         let logits = out.get(&meta.outputs[0].name)?.as_f32()?;
         for i in 0..chunk.len() {
-            preds.push(ops::argmax(&logits[i * cfg.n_classes..(i + 1) * cfg.n_classes]));
+            // NaN-safe like the decoder path: a NaN class logit never wins,
+            // and an all-NaN row falls back to class 0 (scored wrong)
+            let row = &logits[i * cfg.n_classes..(i + 1) * cfg.n_classes];
+            preds.push(nan_safe_argmax(row.iter().copied()).unwrap_or(0));
         }
     }
     Ok(score(task, &examples, &preds))

@@ -17,8 +17,12 @@
 //!                     delta store, sparse AdamW accounting, memory model,
 //!                     baselines (masked / LoRA / BitFit / full).
 //! * [`model`]       — pure-rust reference transformer (parity + fast eval)
-//!                     with a KV-cached incremental decode path
-//!                     ([`model::DecodeState`]) for streaming generation.
+//!                     built on a planned zero-copy forward
+//!                     ([`model::PlannedModel`]: resolve names once, borrow
+//!                     weights, row-partitioned threaded matmuls — see
+//!                     `docs/performance.md`), with a KV-cached incremental
+//!                     decode path ([`model::DecodeState`]) for streaming
+//!                     generation, greedy or sampled ([`model::SampleCfg`]).
 //! * [`runtime`]     — PJRT artifact registry + device-resident train state.
 //! * [`data`]        — synthetic corpus + the 23 downstream task generators.
 //! * [`train`]       — trainer loop, LR schedules, metrics, checkpoints.
@@ -30,7 +34,9 @@
 //!                     quotas, serving metrics (see `docs/serving.md`).
 //! * [`sweep`]       — hyperparameter grid search (Tables 5–7).
 //! * [`coordinator`] — thread-pool job runner + experiment drivers (repro).
-//! * [`bench`]       — measurement harness used by `cargo bench` targets.
+//! * [`bench`]       — measurement harness used by `cargo bench` targets
+//!                     (serve/decode/forward benches; `BENCH_*.json` CI
+//!                     artifacts, schemas in `docs/performance.md`).
 //! * [`testing`]     — property-based testing mini-framework.
 
 pub mod bench;

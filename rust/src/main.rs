@@ -231,7 +231,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use neuroada::data::tasks;
     use neuroada::serve::{
         backend_from_manifest, load_or_init_backbone, AdapterRegistry, Backend, GenEvent,
-        GenerateRequest, RegistryCfg, Request, ServeCfg, Server,
+        GenerateRequest, RegistryCfg, Request, SampleCfg, ServeCfg, Server,
     };
     use neuroada::util::rng::Rng;
     use std::time::Duration;
@@ -312,7 +312,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .unwrap_or_else(Pool::default_size),
         max_slots: args.opt_usize("slots").map_err(|e| anyhow!(e))?.unwrap_or(8).max(1),
         adapter_quota: args.opt_usize("quota").map_err(|e| anyhow!(e))?.unwrap_or(0),
+        // 0 = NEUROADA_THREADS env fallback, else serial (resolved at start)
+        threads: args.opt_usize("threads").map_err(|e| anyhow!(e))?.unwrap_or(0),
     };
+    eprintln!(
+        "[serve] host forward threads: {} (--threads / NEUROADA_THREADS)",
+        neuroada::util::resolve_threads(scfg.threads)
+    );
     let srv = Server::start(registry, scfg, backend)?;
 
     // synthetic traffic: task-shaped prompts, Zipf-popular adapters (so the
@@ -323,10 +329,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut rng = Rng::new(seed ^ 0x5E21);
 
     if args.flag("generate") {
-        // streaming greedy-decode traffic: every request generates up to
-        // --max-new tokens (clamped to the per-slot KV capacity) and its
-        // tokens stream back as they are produced
+        // streaming decode traffic: every request generates up to --max-new
+        // tokens (clamped to the per-slot KV capacity) and its tokens
+        // stream back as they are produced. --temp/--top-k switch the
+        // streams from greedy to seeded temperature/top-k sampling.
         let max_new = args.opt_usize("max-new").map_err(|e| anyhow!(e))?.unwrap_or(16).max(1);
+        let temp_arg = args.opt_f64("temp").map_err(|e| anyhow!(e))?.map(|v| v as f32);
+        let top_k = args.opt_usize("top-k").map_err(|e| anyhow!(e))?.unwrap_or(0);
+        // --top-k alone implies sampling at the conventional temperature 1.0
+        // (temperature 0 would make the truncation inert); an EXPLICIT
+        // --temp always wins, including --temp 0 = greedy by contract
+        let temperature = match temp_arg {
+            Some(t) => t,
+            None if top_k > 0 => 1.0,
+            None => 0.0,
+        };
+        let sample = (temp_arg.is_some() || top_k > 0)
+            .then_some(SampleCfg { temperature, top_k, seed: 0 });
+        if let Some(s) = &sample {
+            // one validity rule, owned by SampleCfg (admission enforces it
+            // per request; failing here gives one startup error instead —
+            // this runs for every explicit --temp, so bad values never fall
+            // back to greedy silently)
+            s.validate().map_err(|e| anyhow!("--temp: {e}"))?;
+            eprintln!(
+                "[serve] sampling: temp={} top-k={} (seeded per request{})",
+                s.temperature,
+                s.top_k,
+                if s.temperature == 0.0 { "; temp 0 = greedy" } else { "" }
+            );
+        }
         let mut gen_reqs: Vec<GenerateRequest> = (0..n_req)
             .map(|_| {
                 let ex = (task.gen)(&mut rng, cfg.vocab, cfg.seq / 2);
@@ -336,6 +368,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     prompt: ex.prompt,
                     max_new_tokens: new,
                     stop: vec![],
+                    // per-request seed off the run seed: replayable streams
+                    sample: sample.map(|s| SampleCfg { seed: rng.next_u64(), ..s }),
                 }
             })
             .collect();

@@ -9,21 +9,32 @@
 //!    cross-layer integration signal we have);
 //!  * **fast host-side eval** of merged models (no PJRT dependency);
 //!  * **parameter initialization** for pretraining-from-scratch;
-//!  * **streaming greedy decode** — [`decode::DecodeState`] +
-//!    [`RefModel::forward_step`] give a KV-cached incremental forward
+//!  * **streaming decode** — [`decode::DecodeState`] +
+//!    [`PlannedModel::forward_step`] give a KV-cached incremental forward
 //!    (O(d² + t·d) per token instead of a full re-forward) that the
-//!    serving engine drives for multi-token generation.
+//!    serving engine drives for multi-token generation, greedy or sampled
+//!    ([`SampleCfg`]).
+//!
+//! All forward math lives in [`plan::PlannedModel`]: parameter names are
+//! resolved ONCE into borrowed zero-copy slices (no `format!`, no store
+//! lookups, no weight copies in the steady state), and the batched matmuls
+//! row-partition across a configurable thread count. [`RefModel`] remains
+//! the ergonomic entry point and resolves a plan per call.
 
 pub mod decode;
 pub mod init;
+pub mod plan;
 
-pub use decode::{greedy_decode, greedy_full_reforward, DecodeState};
+pub use decode::{
+    greedy_decode, greedy_full_reforward, sample_decode, sample_token, DecodeState, SampleCfg,
+};
+pub use plan::{LayerPlan, PlannedModel, ProjPlan};
 
 use crate::config::ModelCfg;
 use crate::peft::delta::ScatterView;
 use crate::peft::DeltaStore;
 use crate::runtime::{Value, ValueStore};
-use crate::tensor::{ops, Tensor};
+use crate::tensor::Tensor;
 use anyhow::Result;
 use std::collections::BTreeMap;
 
@@ -61,6 +72,13 @@ impl<'a> DeltaOverlay<'a> {
 }
 
 /// Borrowed view of the named parameters for one forward pass.
+///
+/// Thin facade over [`PlannedModel`]: every public forward resolves the
+/// zero-copy plan once per call and runs through it, so no per-row name
+/// lookups or weight copies survive anywhere. Steady-state loops (decode,
+/// serving) call [`RefModel::plan`] themselves and reuse the plan across
+/// tokens/batches instead of paying the (cheap, O(n_layers)) resolution per
+/// call.
 pub struct RefModel<'a> {
     pub cfg: &'a ModelCfg,
     pub params: &'a ValueStore,
@@ -83,129 +101,16 @@ impl<'a> RefModel<'a> {
         RefModel { cfg, params, overlay: Some(overlay) }
     }
 
-    fn p(&self, name: &str) -> Result<&[f32]> {
-        self.params.get(&format!("params.{name}"))?.as_f32()
-    }
-
-    /// One adapted projection: dense `h Wᵀ` plus the sparse bypass term when
-    /// an overlay delta exists for `name`.
-    fn proj(&self, h: &Tensor, name: &str, w: &Tensor) -> Tensor {
-        let mut y = ops::matmul_nt(h, w);
-        if let Some(view) = self.overlay.and_then(|o| o.get(name)) {
-            view.accum_matmul_nt(h, &mut y);
-        }
-        y
-    }
-
-    fn p2(&self, name: &str, d_out: usize, d_in: usize) -> Result<Tensor> {
-        Ok(Tensor::from_vec(&[d_out, d_in], self.p(name)?.to_vec()))
+    /// Resolve every parameter name once into the zero-copy forward plan
+    /// (serial; thread a plan with [`PlannedModel::with_threads`] or resolve
+    /// directly via [`PlannedModel::resolve`] / `ModelRef::planned`).
+    pub fn plan(&self) -> Result<PlannedModel<'a>> {
+        PlannedModel::resolve(self.cfg, self.params, self.overlay, 1)
     }
 
     /// Full forward: tokens [b, t] (+pad mask) → hidden states [b·t, d].
     pub fn hidden(&self, tokens: &[i32], pad_mask: &[f32], b: usize) -> Result<Tensor> {
-        let cfg = self.cfg;
-        let (t, d) = (cfg.seq, cfg.d_model);
-        assert_eq!(tokens.len(), b * t);
-        let embed = self.p("embed")?;
-        let pos = ops::positional(t, d);
-
-        // x [b·t, d]
-        let mut x = Tensor::zeros(&[b * t, d]);
-        for i in 0..b * t {
-            let tok = tokens[i] as usize;
-            let row = &embed[tok * d..(tok + 1) * d];
-            let pr = pos.row(i % t);
-            let xr = x.row_mut(i);
-            for j in 0..d {
-                xr[j] = row[j] + pr[j];
-            }
-        }
-
-        let mut h = Tensor::zeros(&[b * t, d]);
-        for l in 0..cfg.n_layers {
-            // attention block
-            for i in 0..b * t {
-                ops::rmsnorm(x.row(i), self.p(&format!("l{l}.ln1"))?, h.row_mut(i));
-            }
-            let wq = self.p2(&format!("l{l}.wq"), d, d)?;
-            let wk = self.p2(&format!("l{l}.wk"), d, d)?;
-            let wv = self.p2(&format!("l{l}.wv"), d, d)?;
-            let wo = self.p2(&format!("l{l}.wo"), d, d)?;
-            let q = self.proj(&h, &format!("l{l}.wq"), &wq);
-            let k = self.proj(&h, &format!("l{l}.wk"), &wk);
-            let v = self.proj(&h, &format!("l{l}.wv"), &wv);
-            let att = self.attention(&q, &k, &v, pad_mask, b)?;
-            let o = self.proj(&att, &format!("l{l}.wo"), &wo);
-            x.add_assign(&o);
-
-            // mlp block
-            for i in 0..b * t {
-                ops::rmsnorm(x.row(i), self.p(&format!("l{l}.ln2"))?, h.row_mut(i));
-            }
-            let w1 = self.p2(&format!("l{l}.w1"), cfg.d_ff, d)?;
-            let w2 = self.p2(&format!("l{l}.w2"), d, cfg.d_ff)?;
-            let mut m = self.proj(&h, &format!("l{l}.w1"), &w1);
-            for vv in m.data.iter_mut() {
-                *vv = ops::silu(*vv);
-            }
-            let mm = self.proj(&m, &format!("l{l}.w2"), &w2);
-            x.add_assign(&mm);
-        }
-
-        let mut out = Tensor::zeros(&[b * t, d]);
-        for i in 0..b * t {
-            ops::rmsnorm(x.row(i), self.p("ln_f")?, out.row_mut(i));
-        }
-        Ok(out)
-    }
-
-    fn attention(
-        &self,
-        q: &Tensor,
-        k: &Tensor,
-        v: &Tensor,
-        pad_mask: &[f32],
-        b: usize,
-    ) -> Result<Tensor> {
-        let cfg = self.cfg;
-        let (t, d) = (cfg.seq, cfg.d_model);
-        let (nh, hd) = (cfg.n_heads, cfg.d_model / cfg.n_heads);
-        let scale = 1.0 / (hd as f32).sqrt();
-        let mut out = Tensor::zeros(&[b * t, d]);
-        let mut scores = Tensor::zeros(&[t, t]);
-        for bi in 0..b {
-            for h in 0..nh {
-                // scores[qi, ki]
-                for qi in 0..t {
-                    let qrow = &q.row(bi * t + qi)[h * hd..(h + 1) * hd];
-                    for ki in 0..t {
-                        let masked = (cfg.causal && ki > qi) || pad_mask[bi * t + ki] == 0.0;
-                        let s = if masked {
-                            -1e9
-                        } else {
-                            let krow = &k.row(bi * t + ki)[h * hd..(h + 1) * hd];
-                            qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale
-                        };
-                        scores.set2(qi, ki, s);
-                    }
-                }
-                ops::softmax_rows(&mut scores);
-                for qi in 0..t {
-                    let orow = &mut out.row_mut(bi * t + qi)[h * hd..(h + 1) * hd];
-                    for ki in 0..t {
-                        let w = scores.at2(qi, ki);
-                        if w == 0.0 {
-                            continue;
-                        }
-                        let vrow = &v.row(bi * t + ki)[h * hd..(h + 1) * hd];
-                        for j in 0..hd {
-                            orow[j] += w * vrow[j];
-                        }
-                    }
-                }
-            }
-        }
-        Ok(out)
+        self.plan()?.hidden(tokens, pad_mask, b)
     }
 
     /// LM logits at one position per batch row (the eval artifact's output):
@@ -217,44 +122,12 @@ impl<'a> RefModel<'a> {
         last_pos: &[i32],
         b: usize,
     ) -> Result<Tensor> {
-        let cfg = self.cfg;
-        let h = self.hidden(tokens, pad_mask, b)?;
-        let embed = Tensor::from_vec(&[cfg.vocab, cfg.d_model], self.p("embed")?.to_vec());
-        let mut sel = Tensor::zeros(&[b, cfg.d_model]);
-        for bi in 0..b {
-            let pos = last_pos[bi] as usize;
-            sel.row_mut(bi).copy_from_slice(h.row(bi * cfg.seq + pos));
-        }
-        Ok(ops::matmul_nt(&sel, &embed))
+        self.plan()?.lm_logits_at(tokens, pad_mask, last_pos, b)
     }
 
     /// Encoder class logits: mean-pool masked positions → head.
     pub fn cls_logits(&self, tokens: &[i32], pad_mask: &[f32], b: usize) -> Result<Tensor> {
-        let cfg = self.cfg;
-        let h = self.hidden(tokens, pad_mask, b)?;
-        let head = Tensor::from_vec(
-            &[cfg.n_classes, cfg.d_model],
-            self.p("head")?.to_vec(),
-        );
-        let mut pooled = Tensor::zeros(&[b, cfg.d_model]);
-        for bi in 0..b {
-            let mut n = 0.0f32;
-            for t in 0..cfg.seq {
-                if pad_mask[bi * cfg.seq + t] > 0.0 {
-                    n += 1.0;
-                    let hr = h.row(bi * cfg.seq + t);
-                    let pr = pooled.row_mut(bi);
-                    for j in 0..cfg.d_model {
-                        pr[j] += hr[j];
-                    }
-                }
-            }
-            let n = n.max(1.0);
-            for vv in pooled.row_mut(bi) {
-                *vv /= n;
-            }
-        }
-        Ok(ops::matmul_nt(&pooled, &head))
+        self.plan()?.cls_logits(tokens, pad_mask, b)
     }
 }
 

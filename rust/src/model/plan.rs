@@ -1,0 +1,524 @@
+//! Planned forward: resolve every `params.*` name ONCE, then run.
+//!
+//! The original [`RefModel`](super::RefModel) forward resolved parameters on
+//! the fly — `p(&format!("l{l}.ln1"))` inside per-row loops, and `p2`
+//! heap-copying every weight matrix (`to_vec()`, `d_out·d_in` floats per
+//! projection per forward). [`PlannedModel`] moves all of that to a single
+//! resolution step: one pass over the [`ValueStore`] builds a per-layer
+//! struct of borrowed `&[f32]` slices plus pre-bound per-projection
+//! [`ScatterView`] bypass slots, and the steady-state forward then does **no
+//! string formatting, no store lookups, and no weight copies** — plan
+//! construction is the only place names are resolved.
+//!
+//! On top of the zero-copy views, the batched matmuls run through
+//! [`ops::nt_into`], row-partitioned across `threads` scoped OS threads
+//! (`NEUROADA_THREADS` / `ServeCfg::threads` / `--threads`; see
+//! `util::resolve_threads`). Row partitioning keeps results bit-identical
+//! to serial for every thread count. The single-row decode step stays
+//! serial by design: its matmuls have one input row, so a row partition has
+//! nothing to split and per-token thread spawns would cost more than the
+//! O(d²) step they wrap.
+//!
+//! Lifecycle: **resolve → (optionally re-thread) → forward many times.**
+//! A plan borrows the parameter store (and the adapter's delta stores), so
+//! it is cheap to build — pointer work plus one name lookup per parameter —
+//! and callers re-plan whenever the underlying weights change (the serving
+//! registry hands out a fresh plan per resolved weight view via
+//! `ModelRef::planned`). See `docs/performance.md`.
+
+use super::decode::{positional_row, DecodeState};
+use super::DeltaOverlay;
+use crate::config::ModelCfg;
+use crate::peft::delta::ScatterView;
+use crate::runtime::ValueStore;
+use crate::tensor::{ops, Tensor};
+use anyhow::Result;
+
+/// One adapted projection, fully resolved: the borrowed dense weight
+/// `[d_out, d_in]` plus the pre-bound sparse bypass view when the adapter
+/// touches this projection.
+#[derive(Clone, Copy)]
+pub struct ProjPlan<'a> {
+    pub w: &'a [f32],
+    pub d_out: usize,
+    pub d_in: usize,
+    pub delta: Option<ScatterView<'a>>,
+}
+
+impl ProjPlan<'_> {
+    /// Batched `y = h Wᵀ (+ h Δᵀ)`, h [rows, d_in] → y [rows, d_out],
+    /// row-partitioned across `threads`.
+    fn forward(&self, h: &Tensor, threads: usize) -> Tensor {
+        debug_assert_eq!(h.shape[1], self.d_in);
+        let rows = h.shape[0];
+        let mut y = Tensor::zeros(&[rows, self.d_out]);
+        ops::nt_into(&h.data, rows, self.d_in, self.w, self.d_out, &mut y.data, threads);
+        if let Some(view) = &self.delta {
+            view.accum_matmul_nt(h, &mut y);
+        }
+        y
+    }
+
+    /// Single-row step: `y = h Wᵀ (+ h Δᵀ)` for one token. Serial, and
+    /// accumulated in the same order as the pre-plan decode step
+    /// (sequential zip-sum per neuron), so step logits are bit-identical to
+    /// the legacy path.
+    fn forward_row(&self, h: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(h.len(), self.d_in);
+        debug_assert_eq!(y.len(), self.d_out);
+        for (i, yi) in y.iter_mut().enumerate() {
+            let wr = &self.w[i * self.d_in..(i + 1) * self.d_in];
+            *yi = h.iter().zip(wr).map(|(a, b)| a * b).sum::<f32>();
+        }
+        if let Some(view) = &self.delta {
+            for (i, yi) in y.iter_mut().enumerate() {
+                for (col, theta) in view.row(i) {
+                    *yi += theta * h[col];
+                }
+            }
+        }
+    }
+}
+
+/// One transformer layer's resolved parameters.
+#[derive(Clone, Copy)]
+pub struct LayerPlan<'a> {
+    pub ln1: &'a [f32],
+    pub ln2: &'a [f32],
+    pub wq: ProjPlan<'a>,
+    pub wk: ProjPlan<'a>,
+    pub wv: ProjPlan<'a>,
+    pub wo: ProjPlan<'a>,
+    pub w1: ProjPlan<'a>,
+    pub w2: ProjPlan<'a>,
+}
+
+/// Fully-resolved zero-copy forward over borrowed parameters.
+///
+/// Every forward entry point of the reference transformer lives here:
+/// batched [`hidden`](PlannedModel::hidden) /
+/// [`lm_logits_at`](PlannedModel::lm_logits_at) /
+/// [`cls_logits`](PlannedModel::cls_logits) and the KV-cached
+/// [`forward_step`](PlannedModel::forward_step). `RefModel` keeps its
+/// historical API by resolving a plan per call; steady-state loops (decode,
+/// serving) resolve once and reuse.
+pub struct PlannedModel<'a> {
+    pub cfg: &'a ModelCfg,
+    /// Row-partition width for the batched matmuls (1 = serial).
+    pub threads: usize,
+    pub embed: &'a [f32],
+    pub ln_f: &'a [f32],
+    /// Encoder classifier head `[n_classes, d_model]`; decoders have none.
+    pub head: Option<&'a [f32]>,
+    pub layers: Vec<LayerPlan<'a>>,
+}
+
+impl<'a> PlannedModel<'a> {
+    /// Resolve a dense (merged) forward plan.
+    pub fn new(cfg: &'a ModelCfg, params: &'a ValueStore) -> Result<PlannedModel<'a>> {
+        PlannedModel::resolve(cfg, params, None, 1)
+    }
+
+    /// Resolve every parameter name once. `overlay` pre-binds the sparse
+    /// bypass view into each adapted projection's slot; the plan keeps only
+    /// the (Copy) scatter views, so the overlay itself may be dropped after
+    /// resolution. Shapes are validated here — the forward never re-checks.
+    pub fn resolve(
+        cfg: &'a ModelCfg,
+        params: &'a ValueStore,
+        overlay: Option<&DeltaOverlay<'a>>,
+        threads: usize,
+    ) -> Result<PlannedModel<'a>> {
+        let d = cfg.d_model;
+        let p = |name: &str, want: usize| -> Result<&'a [f32]> {
+            let v = params.get(&format!("params.{name}"))?.as_f32()?;
+            anyhow::ensure!(v.len() == want, "params.{name}: {} elems, want {want}", v.len());
+            Ok(v)
+        };
+        let proj = |name: String, d_out: usize, d_in: usize| -> Result<ProjPlan<'a>> {
+            Ok(ProjPlan {
+                w: p(&name, d_out * d_in)?,
+                d_out,
+                d_in,
+                delta: overlay.and_then(|o| o.get(&name)).copied(),
+            })
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            layers.push(LayerPlan {
+                ln1: p(&format!("l{l}.ln1"), d)?,
+                ln2: p(&format!("l{l}.ln2"), d)?,
+                wq: proj(format!("l{l}.wq"), d, d)?,
+                wk: proj(format!("l{l}.wk"), d, d)?,
+                wv: proj(format!("l{l}.wv"), d, d)?,
+                wo: proj(format!("l{l}.wo"), d, d)?,
+                w1: proj(format!("l{l}.w1"), cfg.d_ff, d)?,
+                w2: proj(format!("l{l}.w2"), d, cfg.d_ff)?,
+            });
+        }
+        Ok(PlannedModel {
+            cfg,
+            threads: threads.max(1),
+            embed: p("embed", cfg.vocab * d)?,
+            ln_f: p("ln_f", d)?,
+            head: if cfg.n_classes > 0 { Some(p("head", cfg.n_classes * d)?) } else { None },
+            layers,
+        })
+    }
+
+    /// Re-thread an existing plan (no re-resolution).
+    pub fn with_threads(mut self, threads: usize) -> PlannedModel<'a> {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Number of projections carrying a bound bypass delta.
+    pub fn bound_deltas(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| [&l.wq, &l.wk, &l.wv, &l.wo, &l.w1, &l.w2])
+            .filter(|p| p.delta.is_some())
+            .count()
+    }
+
+    /// Full forward: tokens [b, t] (+pad mask) → hidden states [b·t, d].
+    pub fn hidden(&self, tokens: &[i32], pad_mask: &[f32], b: usize) -> Result<Tensor> {
+        let cfg = self.cfg;
+        let (t, d) = (cfg.seq, cfg.d_model);
+        assert_eq!(tokens.len(), b * t);
+        let pos = ops::positional(t, d);
+
+        // x [b·t, d]
+        let mut x = Tensor::zeros(&[b * t, d]);
+        for i in 0..b * t {
+            let tok = tokens[i] as usize;
+            let row = &self.embed[tok * d..(tok + 1) * d];
+            let pr = pos.row(i % t);
+            let xr = x.row_mut(i);
+            for j in 0..d {
+                xr[j] = row[j] + pr[j];
+            }
+        }
+
+        let mut h = Tensor::zeros(&[b * t, d]);
+        for lp in &self.layers {
+            // attention block
+            for i in 0..b * t {
+                ops::rmsnorm(x.row(i), lp.ln1, h.row_mut(i));
+            }
+            let q = lp.wq.forward(&h, self.threads);
+            let k = lp.wk.forward(&h, self.threads);
+            let v = lp.wv.forward(&h, self.threads);
+            let att = self.attention(&q, &k, &v, pad_mask, b);
+            let o = lp.wo.forward(&att, self.threads);
+            x.add_assign(&o);
+
+            // mlp block
+            for i in 0..b * t {
+                ops::rmsnorm(x.row(i), lp.ln2, h.row_mut(i));
+            }
+            let mut m = lp.w1.forward(&h, self.threads);
+            for vv in m.data.iter_mut() {
+                *vv = ops::silu(*vv);
+            }
+            let mm = lp.w2.forward(&m, self.threads);
+            x.add_assign(&mm);
+        }
+
+        let mut out = Tensor::zeros(&[b * t, d]);
+        for i in 0..b * t {
+            ops::rmsnorm(x.row(i), self.ln_f, out.row_mut(i));
+        }
+        Ok(out)
+    }
+
+    fn attention(&self, q: &Tensor, k: &Tensor, v: &Tensor, pad_mask: &[f32], b: usize) -> Tensor {
+        let cfg = self.cfg;
+        let (t, d) = (cfg.seq, cfg.d_model);
+        let (nh, hd) = (cfg.n_heads, cfg.d_model / cfg.n_heads);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut out = Tensor::zeros(&[b * t, d]);
+        let mut scores = Tensor::zeros(&[t, t]);
+        for bi in 0..b {
+            for h in 0..nh {
+                // scores[qi, ki]
+                for qi in 0..t {
+                    let qrow = &q.row(bi * t + qi)[h * hd..(h + 1) * hd];
+                    for ki in 0..t {
+                        let masked = (cfg.causal && ki > qi) || pad_mask[bi * t + ki] == 0.0;
+                        let s = if masked {
+                            -1e9
+                        } else {
+                            let krow = &k.row(bi * t + ki)[h * hd..(h + 1) * hd];
+                            qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale
+                        };
+                        scores.set2(qi, ki, s);
+                    }
+                }
+                ops::softmax_rows(&mut scores);
+                for qi in 0..t {
+                    let orow = &mut out.row_mut(bi * t + qi)[h * hd..(h + 1) * hd];
+                    for ki in 0..t {
+                        let w = scores.at2(qi, ki);
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let vrow = &v.row(bi * t + ki)[h * hd..(h + 1) * hd];
+                        for j in 0..hd {
+                            orow[j] += w * vrow[j];
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// LM logits at one position per batch row (the eval artifact's output):
+    /// logits[b] = h[b, last_pos[b]] · embedᵀ  → [b, vocab]. The tied head
+    /// multiplies the borrowed embedding table directly — no `[vocab, d]`
+    /// copy per call.
+    pub fn lm_logits_at(
+        &self,
+        tokens: &[i32],
+        pad_mask: &[f32],
+        last_pos: &[i32],
+        b: usize,
+    ) -> Result<Tensor> {
+        let cfg = self.cfg;
+        let h = self.hidden(tokens, pad_mask, b)?;
+        let mut sel = Tensor::zeros(&[b, cfg.d_model]);
+        for bi in 0..b {
+            let pos = last_pos[bi] as usize;
+            sel.row_mut(bi).copy_from_slice(h.row(bi * cfg.seq + pos));
+        }
+        let mut out = Tensor::zeros(&[b, cfg.vocab]);
+        ops::nt_into(&sel.data, b, cfg.d_model, self.embed, cfg.vocab, &mut out.data, self.threads);
+        Ok(out)
+    }
+
+    /// Encoder class logits: mean-pool masked positions → head.
+    pub fn cls_logits(&self, tokens: &[i32], pad_mask: &[f32], b: usize) -> Result<Tensor> {
+        let cfg = self.cfg;
+        let head = self
+            .head
+            .ok_or_else(|| anyhow::anyhow!("cls_logits on a headless (decoder) config"))?;
+        let h = self.hidden(tokens, pad_mask, b)?;
+        let mut pooled = Tensor::zeros(&[b, cfg.d_model]);
+        for bi in 0..b {
+            let mut n = 0.0f32;
+            for t in 0..cfg.seq {
+                if pad_mask[bi * cfg.seq + t] > 0.0 {
+                    n += 1.0;
+                    let hr = h.row(bi * cfg.seq + t);
+                    let pr = pooled.row_mut(bi);
+                    for j in 0..cfg.d_model {
+                        pr[j] += hr[j];
+                    }
+                }
+            }
+            let n = n.max(1.0);
+            for vv in pooled.row_mut(bi) {
+                *vv /= n;
+            }
+        }
+        let mut out = Tensor::zeros(&[b, cfg.n_classes]);
+        ops::nt_into(&pooled.data, b, cfg.d_model, head, cfg.n_classes, &mut out.data, self.threads);
+        Ok(out)
+    }
+
+    /// Feed one token at the next position, append its K/V to `state`, and
+    /// return the next-token LM logits `[vocab]`.
+    ///
+    /// The KV-cached incremental step (see `model::decode` for the
+    /// cost model). Pre-bound bypass deltas apply exactly like the batched
+    /// projections, so merged and bypass serving paths share this step.
+    /// Errors when the cache is full or the token is out of vocab (serving
+    /// validates both at admission). Serial: the step's matmuls have one
+    /// input row, so there is nothing for the row partition to split.
+    pub fn forward_step(&self, token: i32, state: &mut DecodeState) -> Result<Vec<f32>> {
+        let cfg = self.cfg;
+        let d = cfg.d_model;
+        anyhow::ensure!(
+            state.len < state.capacity,
+            "decode state full ({} positions)",
+            state.capacity
+        );
+        anyhow::ensure!(
+            token >= 0 && (token as usize) < cfg.vocab,
+            "token {token} outside vocab {}",
+            cfg.vocab
+        );
+        anyhow::ensure!(
+            state.k.len() == cfg.n_layers,
+            "decode state was built for a different model config"
+        );
+        if let Some(k0) = state.k.first() {
+            anyhow::ensure!(
+                k0.shape == [state.capacity, d],
+                "decode state was built for a different model config"
+            );
+        }
+        let p = state.len;
+        let erow = &self.embed[token as usize * d..(token as usize + 1) * d];
+
+        // x = embed[token] + pos[p] — the position row is computed on the
+        // fly (O(d)) so a slot's memory is exactly its K/V cache
+        let mut x = vec![0.0f32; d];
+        positional_row(p, d, &mut x);
+        for j in 0..d {
+            x[j] += erow[j];
+        }
+
+        let (nh, hd) = (cfg.n_heads, d / cfg.n_heads);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut h = vec![0.0f32; d];
+        for (l, lp) in self.layers.iter().enumerate() {
+            // attention block
+            ops::rmsnorm(&x, lp.ln1, &mut h);
+            let mut q = vec![0.0f32; d];
+            let mut kk = vec![0.0f32; d];
+            let mut vv = vec![0.0f32; d];
+            lp.wq.forward_row(&h, &mut q);
+            lp.wk.forward_row(&h, &mut kk);
+            lp.wv.forward_row(&h, &mut vv);
+            state.k[l].row_mut(p).copy_from_slice(&kk);
+            state.v[l].row_mut(p).copy_from_slice(&vv);
+
+            // attend over cached positions 0..=p (causal by construction:
+            // the cache only ever holds the past)
+            let mut att = vec![0.0f32; d];
+            let mut scores = vec![0.0f32; p + 1];
+            for head in 0..nh {
+                let qh = &q[head * hd..(head + 1) * hd];
+                for (ki, s) in scores.iter_mut().enumerate() {
+                    let krow = &state.k[l].row(ki)[head * hd..(head + 1) * hd];
+                    *s = qh.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
+                }
+                let mx = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut sum = 0.0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - mx).exp();
+                    sum += *s;
+                }
+                for s in scores.iter_mut() {
+                    *s /= sum;
+                }
+                let orow = &mut att[head * hd..(head + 1) * hd];
+                for (ki, &w) in scores.iter().enumerate() {
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let vrow = &state.v[l].row(ki)[head * hd..(head + 1) * hd];
+                    for j in 0..hd {
+                        orow[j] += w * vrow[j];
+                    }
+                }
+            }
+            let mut o = vec![0.0f32; d];
+            lp.wo.forward_row(&att, &mut o);
+            for j in 0..d {
+                x[j] += o[j];
+            }
+
+            // mlp block
+            ops::rmsnorm(&x, lp.ln2, &mut h);
+            let mut m = vec![0.0f32; cfg.d_ff];
+            lp.w1.forward_row(&h, &mut m);
+            for v in m.iter_mut() {
+                *v = ops::silu(*v);
+            }
+            let mut mm = vec![0.0f32; d];
+            lp.w2.forward_row(&m, &mut mm);
+            for j in 0..d {
+                x[j] += mm[j];
+            }
+        }
+        state.len = p + 1;
+
+        let mut out = vec![0.0f32; d];
+        ops::rmsnorm(&x, self.ln_f, &mut out);
+        // tied LM head: logits = out · embedᵀ
+        let mut logits = vec![0.0f32; cfg.vocab];
+        for (t, lg) in logits.iter_mut().enumerate() {
+            let er = &self.embed[t * d..(t + 1) * d];
+            *lg = out.iter().zip(er).map(|(a, b)| a * b).sum::<f32>();
+        }
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::RefModel;
+    use super::*;
+    use crate::config::presets;
+    use crate::model::init::init_params;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn plan_resolves_all_layers_once() {
+        let cfg = presets::model("nano").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(1));
+        let plan = PlannedModel::new(&cfg, &params).unwrap();
+        assert_eq!(plan.layers.len(), cfg.n_layers);
+        assert_eq!(plan.embed.len(), cfg.vocab * cfg.d_model);
+        assert_eq!(plan.bound_deltas(), 0);
+        assert_eq!(plan.threads, 1);
+        assert_eq!(plan.with_threads(0).threads, 1, "threads clamp to >= 1");
+    }
+
+    #[test]
+    fn plan_rejects_incomplete_store() {
+        let cfg = presets::model("nano").unwrap();
+        let mut params = init_params(&cfg, &mut Rng::new(2));
+        // break one weight's shape
+        params.insert_f32("params.l0.wq", &[4], vec![0.0; 4]);
+        assert!(PlannedModel::new(&cfg, &params).is_err());
+    }
+
+    #[test]
+    fn planned_forward_matches_refmodel_bitwise() {
+        // RefModel delegates to the plan; an explicitly-resolved plan with
+        // any thread count must agree exactly (row partitioning never
+        // splits a dot product)
+        let cfg = presets::model("nano").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(3));
+        let tokens: Vec<i32> = (0..2 * cfg.seq).map(|i| 4 + (i as i32 % 40)).collect();
+        let pad = vec![1.0f32; 2 * cfg.seq];
+        let last = vec![(cfg.seq - 1) as i32; 2];
+        let via_ref = RefModel::new(&cfg, &params).lm_logits_at(&tokens, &pad, &last, 2).unwrap();
+        for threads in [1usize, 3, 8] {
+            let plan = PlannedModel::resolve(&cfg, &params, None, threads).unwrap();
+            let got = plan.lm_logits_at(&tokens, &pad, &last, 2).unwrap();
+            assert_eq!(via_ref.data, got.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn overlay_binds_per_projection() {
+        let cfg = presets::model("nano").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(4));
+        let deltas = crate::bench::serve_bench::synth_adapter(&cfg, &params, 1, 9).unwrap();
+        let overlay = DeltaOverlay::new(&deltas);
+        let plan = PlannedModel::resolve(&cfg, &params, Some(&overlay), 1).unwrap();
+        // the overlay may be dropped after resolve: views are pre-bound
+        drop(overlay);
+        assert_eq!(plan.bound_deltas(), deltas.len());
+    }
+
+    #[test]
+    fn encoder_plan_has_head() {
+        let cfg = presets::model("enc-micro").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(5));
+        let plan = PlannedModel::new(&cfg, &params).unwrap();
+        assert_eq!(plan.head.unwrap().len(), cfg.n_classes * cfg.d_model);
+        let tokens: Vec<i32> = vec![4; cfg.seq];
+        let pad = vec![1.0f32; cfg.seq];
+        let cls = plan.cls_logits(&tokens, &pad, 1).unwrap();
+        assert_eq!(cls.shape, vec![1, cfg.n_classes]);
+        // threaded encoder forward is bit-identical too
+        let cls4 = plan.with_threads(4).cls_logits(&tokens, &pad, 1).unwrap();
+        assert_eq!(cls.data, cls4.data);
+    }
+}

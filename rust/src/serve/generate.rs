@@ -12,6 +12,7 @@
 
 use super::registry::ServePath;
 use super::scheduler::Reject;
+use crate::model::SampleCfg;
 use std::sync::mpsc;
 use std::time::Duration;
 
@@ -27,6 +28,9 @@ pub struct GenerateRequest {
     /// Stop tokens: generation finishes as soon as one is produced (the
     /// stop token is included in the output). Empty = length-only.
     pub stop: Vec<i32>,
+    /// Temperature/top-k sampling policy; `None` (or temperature 0) streams
+    /// greedy argmax tokens. The seed makes the stream replayable.
+    pub sample: Option<SampleCfg>,
 }
 
 /// Why a generation finished.

@@ -38,6 +38,7 @@ pub mod registry;
 pub mod scheduler;
 
 pub use batcher::MicroBatcher;
+pub use crate::model::SampleCfg;
 pub use generate::{FinishReason, GenEvent, GenResponse, GenTicket, GenerateRequest};
 pub use metrics::{AdapterCounters, MetricsReport, ServeMetrics};
 pub use registry::{AdapterInfo, AdapterRegistry, ModelRef, RegistryCfg, ServePath};

@@ -17,6 +17,7 @@
 //! way, so demotion only costs the next request the bypass overhead.
 
 use crate::config::ModelCfg;
+use crate::model::{DeltaOverlay, PlannedModel};
 use crate::peft::DeltaStore;
 use crate::runtime::ValueStore;
 use crate::train::checkpoint;
@@ -54,6 +55,23 @@ impl ModelRef {
         match self {
             ModelRef::Merged(_) => ServePath::Merged,
             ModelRef::Bypass { .. } => ServePath::Bypass,
+        }
+    }
+
+    /// Resolve this weight view into a zero-copy [`PlannedModel`]: every
+    /// `params.*` name is looked up exactly once and, for the bypass view,
+    /// each adapted projection gets its scatter view pre-bound. The plan
+    /// borrows the `Arc`'d weights behind `self`, so resolution copies
+    /// nothing tensor-sized; callers resolve once per batch / decode
+    /// micro-batch iteration and run every forward through the plan —
+    /// the steady-state loops never touch a name or rebuild an overlay.
+    pub fn planned<'a>(&'a self, cfg: &'a ModelCfg, threads: usize) -> Result<PlannedModel<'a>> {
+        match self {
+            ModelRef::Merged(store) => PlannedModel::resolve(cfg, store.as_ref(), None, threads),
+            ModelRef::Bypass { backbone, deltas } => {
+                let overlay = DeltaOverlay::new(deltas.as_slice());
+                PlannedModel::resolve(cfg, backbone.as_ref(), Some(&overlay), threads)
+            }
         }
     }
 }
@@ -507,6 +525,21 @@ mod tests {
         assert_eq!(reg.info("a").unwrap().requests, 0);
         // and the swapped adapter re-promotes from its own deltas
         assert_eq!(reg.resolve("a").unwrap().path(), ServePath::Merged);
+    }
+
+    #[test]
+    fn resolved_views_plan_without_copying() {
+        let reg = nano_registry(RegistryCfg { merged_capacity: 1, promote_after: 1 });
+        reg.register("a", adapter(&reg, 4)).unwrap();
+        let cfg = reg.model_cfg().clone();
+        // bypass view: the adapter's single delta is pre-bound
+        let bypass = reg.bypass("a").unwrap();
+        let plan = bypass.planned(&cfg, 2).unwrap();
+        assert_eq!(plan.bound_deltas(), 1);
+        assert_eq!(plan.threads, 2);
+        // merged view: dense weights, nothing bound
+        let merged = reg.merge_now("a").unwrap();
+        assert_eq!(merged.planned(&cfg, 1).unwrap().bound_deltas(), 0);
     }
 
     #[test]

@@ -17,9 +17,11 @@
 //! `coordinator::pool::Pool::default_size`). Each worker loops: pop a ready
 //! batch from the shared [`MicroBatcher`] (full batch or deadline flush),
 //! resolve the adapter through the [`AdapterRegistry`] (merged or bypass
-//! view), run one forward for the whole batch, and answer every request on
-//! its own channel. Different adapters execute concurrently across workers;
-//! within one adapter, FIFO order is preserved per batch.
+//! view), resolve that view's zero-copy [`PlannedModel`] once, run one
+//! forward for the whole batch (row-partitioned across
+//! [`ServeCfg::threads`]), and answer every request on its own channel.
+//! Different adapters execute concurrently across workers; within one
+//! adapter, FIFO order is preserved per batch.
 //!
 //! Admission is strictly bounded: when `max_queue` requests are pending,
 //! `submit` fails fast with [`Reject::QueueFull`] instead of buffering —
@@ -31,11 +33,12 @@ use super::metrics::{MetricsReport, ServeMetrics};
 use super::registry::{AdapterRegistry, ModelRef, ServePath};
 use crate::config::ModelCfg;
 use crate::data::{eval_batch, Example};
-use crate::model::{DecodeState, DeltaOverlay, RefModel};
+use crate::model::{sample_token, DecodeState, PlannedModel, SampleCfg};
 use crate::runtime::manifest::ArtifactMeta;
 use crate::runtime::{state::run_once, Engine, Value};
 use crate::tensor::Tensor;
 use crate::util::nan_safe_argmax;
+use crate::util::rng::Rng;
 use anyhow::Result;
 use std::collections::VecDeque;
 use std::fmt;
@@ -86,6 +89,9 @@ pub enum Reject {
     ContextOverflow { need: usize, max: usize },
     /// A generation request asked for zero new tokens.
     ZeroMaxTokens,
+    /// The request's sampling policy is malformed (e.g. negative or
+    /// non-finite temperature).
+    InvalidSampling(String),
     ShuttingDown,
     /// Backend failure while executing the batch (e.g. PJRT error).
     Internal(String),
@@ -106,6 +112,7 @@ impl Reject {
             Reject::QuotaExceeded { .. } => "quota_exceeded",
             Reject::ContextOverflow { .. } => "context_overflow",
             Reject::ZeroMaxTokens => "zero_max_tokens",
+            Reject::InvalidSampling(_) => "invalid_sampling",
             Reject::ShuttingDown => "shutting_down",
             Reject::Internal(_) => "internal",
         }
@@ -140,6 +147,7 @@ impl fmt::Display for Reject {
                 write!(f, "prompt + max_new_tokens = {need} exceeds context {max}")
             }
             Reject::ZeroMaxTokens => write!(f, "generation request asks for zero new tokens"),
+            Reject::InvalidSampling(reason) => write!(f, "invalid sampling policy: {reason}"),
             Reject::ShuttingDown => write!(f, "server is shutting down"),
             Reject::Internal(e) => write!(f, "internal serving error: {e}"),
         }
@@ -169,6 +177,12 @@ pub struct ServeCfg {
     /// hold at most this many pending requests — the rest of the bounded
     /// queue stays available to other adapters ([`Reject::QuotaExceeded`]).
     pub adapter_quota: usize,
+    /// Row-partition threads for the host batched forward (the planned
+    /// `matmul_nt`; results are bit-identical to serial at any count).
+    /// 0 = fall back to the `NEUROADA_THREADS` env var, else 1 (serial) —
+    /// resolved once at [`Server::start`]. The single-row decode step never
+    /// threads (nothing to partition; see `model::plan`).
+    pub threads: usize,
 }
 
 impl Default for ServeCfg {
@@ -180,6 +194,7 @@ impl Default for ServeCfg {
             workers: crate::coordinator::pool::Pool::default_size(),
             max_slots: 8,
             adapter_quota: 0,
+            threads: 0,
         }
     }
 }
@@ -270,6 +285,8 @@ impl Server {
             // it would make every full batch unservable (Internal rejects)
             cfg.max_batch = cfg.max_batch.min(eval.model.batch);
         }
+        // resolve the forward thread count once (explicit > env > serial)
+        cfg.threads = crate::util::resolve_threads(cfg.threads);
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 batcher: MicroBatcher::new(cfg.max_batch.max(1), cfg.max_delay),
@@ -420,6 +437,9 @@ impl Server {
             if t < 0 || t as usize >= mcfg.vocab {
                 return Err(Reject::InvalidStopToken { token: t, vocab: mcfg.vocab });
             }
+        }
+        if let Some(s) = &req.sample {
+            s.validate().map_err(Reject::InvalidSampling)?;
         }
         Ok(())
     }
@@ -608,6 +628,8 @@ struct GenSlot {
     prompt_len: usize,
     max_new: usize,
     stop: Vec<i32>,
+    /// Temperature/top-k sampling state; `None` streams greedy argmax.
+    sampler: Option<(SampleCfg, Rng)>,
     tx: mpsc::Sender<Result<GenEvent, Reject>>,
     enqueued: Instant,
     ttft: Duration,
@@ -620,11 +642,26 @@ enum SlotStatus {
     Finished,
 }
 
+/// Pick the next token for a slot: seeded temperature/top-k sampling when
+/// the request asked for it, NaN-safe greedy argmax otherwise.
+fn choose_token(slot: &mut GenSlot, logits: &[f32]) -> i32 {
+    match slot.sampler.as_mut() {
+        Some((scfg, rng)) => sample_token(logits, scfg, rng) as i32,
+        None => nan_safe_argmax(logits.iter().copied()).unwrap_or(0) as i32,
+    }
+}
+
 /// The decode thread: slot-based continuous batching for streaming
 /// generation. Each iteration (a decode micro-batch) admits queued
 /// generations into free slots, prefills them, and advances every active
 /// slot one token; a finished sequence frees its slot mid-flight so the
 /// next queued request starts without waiting for its batch-mates.
+///
+/// Weight resolution is planned: each iteration resolves ONE zero-copy
+/// [`PlannedModel`] per distinct weight view (slots of the same adapter
+/// share it), so the per-token step does no name lookups, no overlay
+/// rebuilds, and no weight copies — plan resolution is the only place
+/// names are touched, and it is amortized over every active slot.
 fn decode_loop(sh: &Shared) {
     let mcfg = sh.registry.model_cfg().clone();
     let mut slots: Vec<GenSlot> = Vec::new();
@@ -659,11 +696,35 @@ fn decode_loop(sh: &Shared) {
         if slots.is_empty() {
             continue; // every prefill rejected/finished instantly
         }
-        // one decode micro-batch: every active slot advances one token
+        // one decode micro-batch: every active slot advances one token.
+        // Resolve each distinct weight view's plan once for the iteration —
+        // the plans borrow `models` (cheap Arc clones), NOT the slots, so
+        // slot state stays freely mutable below.
         sh.metrics.record_decode_step(slots.len());
+        let mut models: Vec<ModelRef> = Vec::new();
+        for s in &slots {
+            let key = model_key(&s.model);
+            if !models.iter().any(|m| model_key(m) == key) {
+                models.push(s.model.clone());
+            }
+        }
+        let plans: Vec<Result<PlannedModel>> =
+            models.iter().map(|m| m.planned(&mcfg, sh.cfg.threads)).collect();
         let mut i = 0;
         while i < slots.len() {
-            match step_slot(sh, &mcfg, &mut slots[i]) {
+            let pi = models
+                .iter()
+                .position(|m| model_key(m) == model_key(&slots[i].model))
+                .expect("every slot's model was collected above");
+            let status = match &plans[pi] {
+                Ok(plan) => step_slot(sh, plan, &mut slots[i]),
+                Err(e) => {
+                    sh.metrics.record_reject("internal");
+                    let _ = slots[i].tx.send(Err(Reject::Internal(format!("{e:#}"))));
+                    SlotStatus::Finished
+                }
+            };
+            match status {
                 SlotStatus::Active => i += 1,
                 SlotStatus::Finished => {
                     slots.swap_remove(i); // freed mid-flight
@@ -706,26 +767,27 @@ fn prefill_slot(sh: &Shared, mcfg: &ModelCfg, g: QueuedGen) -> Option<GenSlot> {
         prompt_len,
         max_new: req.max_new_tokens,
         stop: req.stop,
+        sampler: req.sample.map(|s| (s, Rng::new(s.seed))),
         tx,
         enqueued,
         ttft: Duration::ZERO,
         emitted: 0,
         last_token_at: enqueued,
     };
-    let first = nan_safe_argmax(logits.iter().copied()).unwrap_or(0) as i32;
+    let first = choose_token(&mut slot, &logits);
     match emit_token(sh, &mut slot, first) {
         SlotStatus::Active => Some(slot),
         SlotStatus::Finished => None,
     }
 }
 
-/// Advance one slot by one token: feed the last token, greedy-pick the
-/// next, stream it.
-fn step_slot(sh: &Shared, mcfg: &ModelCfg, slot: &mut GenSlot) -> SlotStatus {
+/// Advance one slot by one token through the iteration's resolved plan:
+/// feed the last token, pick the next (greedy or sampled), stream it.
+fn step_slot(sh: &Shared, plan: &PlannedModel, slot: &mut GenSlot) -> SlotStatus {
     let last = *slot.tokens.last().expect("slot holds at least the prompt");
-    match host_step(mcfg, &slot.model, last, &mut slot.state) {
+    match plan.forward_step(last, &mut slot.state) {
         Ok(logits) => {
-            let next = nan_safe_argmax(logits.iter().copied()).unwrap_or(0) as i32;
+            let next = choose_token(slot, &logits);
             emit_token(sh, slot, next)
         }
         Err(e) => {
@@ -778,24 +840,11 @@ fn emit_token(sh: &Shared, slot: &mut GenSlot, token: i32) -> SlotStatus {
     SlotStatus::Finished
 }
 
-/// One incremental decode step through the host forward for a resolved
-/// weight view: merged → plain dense step; bypass → overlay step. Public
-/// for the decode bench and parity tests (the slot path and the
-/// measurement path must be the same code). The bypass arm rebuilds the
-/// (small, O(#projections)) overlay map per call — negligible next to the
-/// O(d²) step; multi-token prefill goes through [`host_prefill`], which
-/// builds it once.
-pub fn host_step(
-    mcfg: &ModelCfg,
-    model: &ModelRef,
-    token: i32,
-    state: &mut DecodeState,
-) -> Result<Vec<f32>> {
-    host_prefill(mcfg, model, std::slice::from_ref(&token), state)
-}
-
 /// Feed a token run through the KV-cached step, returning the logits after
-/// the last token. Builds the bypass overlay once for the whole run.
+/// the last token. Resolves the zero-copy plan ONCE for the whole run —
+/// merged and bypass views share the code path, with bypass deltas
+/// pre-bound into the plan's projection slots. (Single steps after prefill
+/// go through the decode loop's per-iteration plans, not through here.)
 pub fn host_prefill(
     mcfg: &ModelCfg,
     model: &ModelRef,
@@ -803,21 +852,11 @@ pub fn host_prefill(
     state: &mut DecodeState,
 ) -> Result<Vec<f32>> {
     anyhow::ensure!(!tokens.is_empty(), "host_prefill: empty token run");
+    // threads=1: the step matmuls are single-row, nothing to partition
+    let plan = model.planned(mcfg, 1)?;
     let mut logits = Vec::new();
-    match model {
-        ModelRef::Merged(store) => {
-            let m = RefModel::new(mcfg, store);
-            for &t in tokens {
-                logits = m.forward_step(t, state)?;
-            }
-        }
-        ModelRef::Bypass { backbone, deltas } => {
-            let overlay = DeltaOverlay::new(deltas);
-            let m = RefModel::with_overlay(mcfg, backbone, &overlay);
-            for &t in tokens {
-                logits = m.forward_step(t, state)?;
-            }
-        }
+    for &t in tokens {
+        logits = plan.forward_step(t, state)?;
     }
     Ok(logits)
 }
@@ -886,16 +925,20 @@ fn batch_logits(
     n: usize,
 ) -> Result<Tensor> {
     match &sh.backend {
-        Backend::Host => host_logits(mcfg, model, tokens, pad_mask, last_pos, n),
+        Backend::Host => {
+            host_logits_threaded(mcfg, model, tokens, pad_mask, last_pos, n, sh.cfg.threads)
+        }
         Backend::Hlo { eval, bypass } => {
             hlo_logits(mcfg, model, eval, bypass.as_ref(), tokens, pad_mask, last_pos, n)
         }
     }
 }
 
-/// Pure-rust forward: merged → plain dense; bypass → overlay forward.
-/// Public for the serving bench and parity tests (the worker path and the
-/// measurement path must be the same code).
+/// Pure-rust forward through the zero-copy plan: merged and bypass views
+/// share the path, with bypass deltas pre-bound per projection. Public for
+/// the serving bench and parity tests (the worker path and the measurement
+/// path must be the same code). Serial; workers that want the
+/// row-partitioned matmuls use [`host_logits_threaded`].
 pub fn host_logits(
     mcfg: &ModelCfg,
     model: &ModelRef,
@@ -904,16 +947,22 @@ pub fn host_logits(
     last_pos: &[i32],
     n: usize,
 ) -> Result<Tensor> {
-    match model {
-        ModelRef::Merged(store) => {
-            RefModel::new(mcfg, store).lm_logits_at(tokens, pad_mask, last_pos, n)
-        }
-        ModelRef::Bypass { backbone, deltas } => {
-            let overlay = DeltaOverlay::new(deltas);
-            RefModel::with_overlay(mcfg, backbone, &overlay)
-                .lm_logits_at(tokens, pad_mask, last_pos, n)
-        }
-    }
+    host_logits_threaded(mcfg, model, tokens, pad_mask, last_pos, n, 1)
+}
+
+/// [`host_logits`] with the batched matmuls row-partitioned across
+/// `threads` (bit-identical to serial for any count).
+#[allow(clippy::too_many_arguments)]
+pub fn host_logits_threaded(
+    mcfg: &ModelCfg,
+    model: &ModelRef,
+    tokens: &[i32],
+    pad_mask: &[f32],
+    last_pos: &[i32],
+    n: usize,
+    threads: usize,
+) -> Result<Tensor> {
+    model.planned(mcfg, threads)?.lm_logits_at(tokens, pad_mask, last_pos, n)
 }
 
 thread_local! {
@@ -1182,6 +1231,7 @@ mod tests {
             prompt: vec![4, 5, 6, 7],
             max_new_tokens: 5,
             stop: vec![],
+            sample: None,
         }
     }
 
@@ -1242,6 +1292,46 @@ mod tests {
         assert!(m.ttft.is_some());
         assert!(m.inter_token.is_some());
         assert_eq!(m.decode_steps, 4, "first token at prefill, 4 stepped");
+    }
+
+    /// Satellite: served sampling replays deterministically per seed, and a
+    /// temperature-0 sampled request matches the greedy stream exactly.
+    #[test]
+    fn sampled_generation_is_seeded_and_temp_zero_is_greedy() {
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        });
+        let sampled = |seed: u64, temperature: f32| GenerateRequest {
+            sample: Some(SampleCfg { temperature, top_k: 12, seed }),
+            ..gen_req("task-a")
+        };
+        let greedy = srv.submit_generate(gen_req("task-a")).unwrap().wait().unwrap();
+        let t0 = srv.submit_generate(sampled(9, 0.0)).unwrap().wait().unwrap();
+        assert_eq!(t0.tokens, greedy.tokens, "temp=0 sampling must stream greedy");
+        let a = srv.submit_generate(sampled(7, 1.3)).unwrap().wait().unwrap();
+        let b = srv.submit_generate(sampled(7, 1.3)).unwrap().wait().unwrap();
+        assert_eq!(a.tokens, b.tokens, "same seed must replay the stream");
+        assert_eq!(a.tokens.len(), 5);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn invalid_sampling_is_rejected_at_admission() {
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        });
+        let bad = GenerateRequest {
+            sample: Some(SampleCfg { temperature: -0.5, top_k: 0, seed: 1 }),
+            ..gen_req("task-a")
+        };
+        match srv.submit_generate(bad) {
+            Err(Reject::InvalidSampling(reason)) => assert!(reason.contains("temperature")),
+            other => panic!("expected InvalidSampling, got {:?}", other.map(|_| ())),
+        }
+        let m = srv.shutdown();
+        assert_eq!(m.rejected.get("invalid_sampling"), Some(&1));
     }
 
     #[test]

@@ -6,39 +6,92 @@
 
 use super::Tensor;
 
-/// C = A·Bᵀ with A [m, k], B [n, k] → C [m, n].
+/// The shared dot kernel behind every `A·Bᵀ` variant: 4-wide manual unroll,
+/// the autovectorizer does the rest. Serial and threaded matmuls both call
+/// this per output element, so their results are bit-identical by
+/// construction (same additions, same order).
+#[inline]
+fn nt_dot(ar: &[f32], br: &[f32], k: usize) -> f32 {
+    let mut acc = 0.0f32;
+    let mut t = 0;
+    while t + 4 <= k {
+        acc += ar[t] * br[t]
+            + ar[t + 1] * br[t + 1]
+            + ar[t + 2] * br[t + 2]
+            + ar[t + 3] * br[t + 3];
+        t += 4;
+    }
+    while t < k {
+        acc += ar[t] * br[t];
+        t += 1;
+    }
+    acc
+}
+
+/// One output row of `A·Bᵀ`: out[j] = a_row · b.row(j).
+#[inline]
+fn nt_row(ar: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(ar.len(), k);
+    debug_assert_eq!(out.len(), n);
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = nt_dot(ar, &b[j * k..(j + 1) * k], k);
+    }
+}
+
+/// Raw-slice `C = A·Bᵀ` with A [m, k], B [n, k] → out [m, n], row-partitioned
+/// across `threads` scoped OS threads (no thread pool, no dependencies).
+///
+/// Each output row is produced by the same serial kernel whichever thread
+/// computes it, so any thread count yields bit-identical results — the
+/// partition only divides rows, never a dot product. `threads <= 1` (or a
+/// single row) runs inline with zero spawn overhead. This is the planned
+/// forward's matmul: weights arrive as borrowed slices, never as copied
+/// `Tensor`s.
+pub fn nt_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32], threads: usize) {
+    assert_eq!(a.len(), m * k, "A is [m, k]");
+    assert_eq!(b.len(), n * k, "B is [n, k]");
+    assert_eq!(out.len(), m * n, "out is [m, n]");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let t = threads.max(1).min(m);
+    if t <= 1 {
+        for (i, orow) in out.chunks_mut(n).enumerate() {
+            nt_row(&a[i * k..(i + 1) * k], b, k, n, orow);
+        }
+        return;
+    }
+    let rows = m.div_ceil(t);
+    std::thread::scope(|s| {
+        for (ci, chunk) in out.chunks_mut(rows * n).enumerate() {
+            s.spawn(move || {
+                for (r, orow) in chunk.chunks_mut(n).enumerate() {
+                    let i = ci * rows + r;
+                    nt_row(&a[i * k..(i + 1) * k], b, k, n, orow);
+                }
+            });
+        }
+    });
+}
+
+/// C = A·Bᵀ with A [m, k], B [n, k] → C [m, n], single-threaded.
 ///
 /// The `b` operand is row-major [n, k], matching how weight matrices are
 /// stored ([d_out, d_in]) so every row is a neuron and access is sequential.
 pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_nt_threaded(a, b, 1)
+}
+
+/// C = A·Bᵀ row-partitioned across `threads`; bit-identical to
+/// [`matmul_nt`] for every thread count (see [`nt_into`]).
+pub fn matmul_nt_threaded(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
     assert_eq!(a.rank(), 2);
     assert_eq!(b.rank(), 2);
     let (m, k) = (a.shape[0], a.shape[1]);
     let (n, k2) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "inner dims: {:?} vs {:?}", a.shape, b.shape);
     let mut c = Tensor::zeros(&[m, n]);
-    for i in 0..m {
-        let ar = a.row(i);
-        let cr = c.row_mut(i);
-        for j in 0..n {
-            let br = b.row(j);
-            let mut acc = 0.0f32;
-            // 4-wide manual unroll; the autovectorizer does the rest.
-            let mut t = 0;
-            while t + 4 <= k {
-                acc += ar[t] * br[t]
-                    + ar[t + 1] * br[t + 1]
-                    + ar[t + 2] * br[t + 2]
-                    + ar[t + 3] * br[t + 3];
-                t += 4;
-            }
-            while t < k {
-                acc += ar[t] * br[t];
-                t += 1;
-            }
-            cr[j] = acc;
-        }
-    }
+    nt_into(&a.data, m, k, &b.data, n, &mut c.data, threads);
     c
 }
 
@@ -102,19 +155,6 @@ pub fn log_softmax_pick(row: &[f32], target: usize) -> f32 {
     let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     let lse = mx + row.iter().map(|v| (v - mx).exp()).sum::<f32>().ln();
     row[target] - lse
-}
-
-/// argmax of a slice (first max wins).
-pub fn argmax(xs: &[f32]) -> usize {
-    let mut bi = 0;
-    let mut bv = f32::NEG_INFINITY;
-    for (i, &v) in xs.iter().enumerate() {
-        if v > bv {
-            bv = v;
-            bi = i;
-        }
-    }
-    bi
 }
 
 /// Sinusoidal positional encoding matching python model._positional:
@@ -192,7 +232,30 @@ mod tests {
     }
 
     #[test]
-    fn argmax_first_wins() {
-        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+    fn threaded_matmul_is_bitwise_serial() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(9);
+        // odd shapes: m, n, k deliberately not multiples of the partition
+        for (m, n, k) in [(1usize, 5usize, 3usize), (7, 11, 13), (17, 3, 9), (5, 1, 4)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut r);
+            let b = Tensor::randn(&[n, k], 1.0, &mut r);
+            let serial = matmul_nt(&a, &b);
+            for threads in [2usize, 3, 4, 32] {
+                let par = matmul_nt_threaded(&a, &b, threads);
+                assert_eq!(serial.data, par.data, "m={m} n={n} k={k} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn nt_into_matches_tensor_path() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(10);
+        let a = Tensor::randn(&[6, 5], 1.0, &mut r);
+        let b = Tensor::randn(&[4, 5], 1.0, &mut r);
+        let c = matmul_nt(&a, &b);
+        let mut out = vec![0.0f32; 6 * 4];
+        nt_into(&a.data, 6, 5, &b.data, 4, &mut out, 2);
+        assert_eq!(c.data, out);
     }
 }

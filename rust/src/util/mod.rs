@@ -52,6 +52,22 @@ pub fn nan_safe_argmax(scores: impl IntoIterator<Item = f32>) -> Option<usize> {
     best.map(|(i, _)| i)
 }
 
+/// Resolve the host-forward thread count: an explicit non-zero setting wins
+/// (e.g. `ServeCfg::threads`, `--threads`), else the `NEUROADA_THREADS`
+/// environment variable, else 1 (serial — the bit-identical baseline).
+/// Used everywhere a row-partitioned forward is configured so the CLI, the
+/// serving engine, and the benches share one policy.
+pub fn resolve_threads(explicit: usize) -> usize {
+    if explicit > 0 {
+        return explicit;
+    }
+    std::env::var("NEUROADA_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(1)
+}
+
 /// Format a ratio like the paper's "156×".
 pub fn fmt_ratio(r: f64) -> String {
     if r >= 100.0 {
@@ -82,6 +98,15 @@ mod tests {
         assert_eq!(nan_safe_argmax([f32::NAN, f32::NAN]), None);
         assert_eq!(nan_safe_argmax(std::iter::empty::<f32>()), None);
         assert_eq!(nan_safe_argmax([f32::NEG_INFINITY, -1.0]), Some(1));
+    }
+
+    #[test]
+    fn explicit_thread_count_wins() {
+        // explicit setting bypasses the env entirely; 0 falls through to the
+        // env/default path, which is always >= 1 (no env mutation here —
+        // tests run concurrently and the env is process-global)
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1);
     }
 
     #[test]

@@ -1,0 +1,129 @@
+//! ISSUE-3 acceptance tests for the planned forward refactor.
+//!
+//! 1. **Parity**: the zero-copy [`PlannedModel`] reproduces the
+//!    pre-refactor forward's logits to ≤ 1e-6 on nano for all four of
+//!    {merged, bypass} × {batch `lm_logits_at`, KV-cached `forward_step`}.
+//!    The pre-refactor path is kept verbatim as
+//!    `bench::forward_bench::legacy::LegacyModel`; in practice the batch
+//!    kernels are bit-identical, so the observed diff is 0.0.
+//! 2. **Threading**: the row-partitioned `matmul_nt` equals serial
+//!    BITWISE on randomized odd shapes (m, n, k not multiples of the
+//!    partition), via the in-repo property framework.
+
+use neuroada::bench::forward_bench::legacy::LegacyModel;
+use neuroada::bench::serve_bench::synth_adapter;
+use neuroada::config::presets;
+use neuroada::model::init::init_params;
+use neuroada::model::{DecodeState, DeltaOverlay, PlannedModel};
+use neuroada::tensor::ops::{matmul_nt, matmul_nt_threaded};
+use neuroada::tensor::Tensor;
+use neuroada::testing::{prop_check, PropConfig};
+use neuroada::util::rng::Rng;
+
+fn nano() -> (neuroada::config::ModelCfg, neuroada::runtime::ValueStore) {
+    let cfg = presets::model("nano").unwrap();
+    let backbone = init_params(&cfg, &mut Rng::new(77));
+    (cfg, backbone)
+}
+
+fn batch_inputs(cfg: &neuroada::config::ModelCfg, b: usize) -> (Vec<i32>, Vec<f32>, Vec<i32>) {
+    let tokens: Vec<i32> = (0..b * cfg.seq).map(|i| 4 + ((i * 11) % (cfg.vocab - 4)) as i32).collect();
+    let pad = vec![1.0f32; b * cfg.seq];
+    let last: Vec<i32> = (0..b).map(|i| (cfg.seq - 1 - i % 3) as i32).collect();
+    (tokens, pad, last)
+}
+
+/// Acceptance: planned batch forward == pre-refactor batch forward to
+/// ≤ 1e-6, merged AND bypass, serial AND threaded.
+#[test]
+fn planned_batch_matches_legacy_merged_and_bypass() {
+    let (cfg, backbone) = nano();
+    let deltas = synth_adapter(&cfg, &backbone, 2, 42).unwrap();
+    let overlay = DeltaOverlay::new(&deltas);
+    let (tokens, pad, last) = batch_inputs(&cfg, 4);
+    for (label, ov) in [("merged", None), ("bypass", Some(&overlay))] {
+        let legacy = LegacyModel { cfg: &cfg, params: &backbone, overlay: ov };
+        let want = legacy.lm_logits_at(&tokens, &pad, &last, 4).unwrap();
+        for threads in [1usize, 4] {
+            let plan = PlannedModel::resolve(&cfg, &backbone, ov, threads).unwrap();
+            let got = plan.lm_logits_at(&tokens, &pad, &last, 4).unwrap();
+            let diff = want.max_abs_diff(&got);
+            assert!(diff <= 1e-6, "{label} threads={threads}: plan vs legacy diff {diff}");
+        }
+    }
+    // the bypass genuinely differs from the raw backbone (the overlay bound)
+    let raw = PlannedModel::new(&cfg, &backbone).unwrap().lm_logits_at(&tokens, &pad, &last, 4).unwrap();
+    let by = PlannedModel::resolve(&cfg, &backbone, Some(&overlay), 1)
+        .unwrap()
+        .lm_logits_at(&tokens, &pad, &last, 4)
+        .unwrap();
+    assert!(raw.max_abs_diff(&by) > 1e-5, "overlay must change logits");
+}
+
+/// Acceptance: planned KV-cached step == pre-refactor step to ≤ 1e-6 at
+/// every position, merged AND bypass.
+#[test]
+fn planned_step_matches_legacy_merged_and_bypass() {
+    let (cfg, backbone) = nano();
+    let deltas = synth_adapter(&cfg, &backbone, 1, 43).unwrap();
+    let overlay = DeltaOverlay::new(&deltas);
+    let toks: Vec<i32> = (0..16).map(|i| 4 + (i * 7) % 40).collect();
+    for (label, ov) in [("merged", None), ("bypass", Some(&overlay))] {
+        let legacy = LegacyModel { cfg: &cfg, params: &backbone, overlay: ov };
+        let plan = PlannedModel::resolve(&cfg, &backbone, ov, 1).unwrap();
+        let mut sl = DecodeState::new(&cfg);
+        let mut sp = DecodeState::new(&cfg);
+        for (pos, &t) in toks.iter().enumerate() {
+            let want = legacy.forward_step(t, &mut sl).unwrap();
+            let got = plan.forward_step(t, &mut sp).unwrap();
+            let diff = want
+                .iter()
+                .zip(&got)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff <= 1e-6, "{label} position {pos}: step diff {diff}");
+        }
+        assert_eq!(sl.len(), sp.len());
+    }
+}
+
+/// Satellite property: threaded `matmul_nt` equals serial bitwise on odd
+/// shapes — m, n, k drawn so they are NOT multiples of the thread count.
+#[test]
+fn prop_threaded_matmul_bitwise_on_odd_shapes() {
+    prop_check(PropConfig { cases: 48, max_size: 23, base_seed: 0xF00D }, |rng, size| {
+        let m = 1 + rng.below(size.max(1) * 2);
+        let n = 1 + rng.below(size.max(1) * 2);
+        let k = 1 + rng.below(size.max(1) * 2);
+        let a = Tensor::randn(&[m, k], 1.0, rng);
+        let b = Tensor::randn(&[n, k], 1.0, rng);
+        let serial = matmul_nt(&a, &b);
+        for threads in [2usize, 3, 5, 7, m + 1] {
+            let par = matmul_nt_threaded(&a, &b, threads);
+            if serial.data != par.data {
+                return Err(format!("m={m} n={n} k={k} threads={threads}: not bitwise equal"));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Steady-state contract: a resolved plan keeps serving after the overlay
+/// handle is gone (views are pre-bound), and re-threading does not change
+/// results.
+#[test]
+fn plan_survives_overlay_drop_and_rethreading() {
+    let (cfg, backbone) = nano();
+    let deltas = synth_adapter(&cfg, &backbone, 1, 44).unwrap();
+    let (tokens, pad, last) = batch_inputs(&cfg, 2);
+    let plan = {
+        let overlay = DeltaOverlay::new(&deltas);
+        PlannedModel::resolve(&cfg, &backbone, Some(&overlay), 1).unwrap()
+        // overlay dropped here; the plan's scatter views borrow `deltas`
+    };
+    assert_eq!(plan.bound_deltas(), deltas.len());
+    let a = plan.lm_logits_at(&tokens, &pad, &last, 2).unwrap();
+    let b = plan.with_threads(3).lm_logits_at(&tokens, &pad, &last, 2).unwrap();
+    assert_eq!(a.data, b.data);
+}

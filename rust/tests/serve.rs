@@ -261,6 +261,7 @@ fn streaming_decode_parity_merged_and_bypass() {
                 prompt: prompt.clone(),
                 max_new_tokens: max_new,
                 stop: vec![],
+                sample: None,
             })
             .unwrap()
             .wait()
@@ -297,6 +298,7 @@ fn mid_flight_slot_reuse_no_cross_contamination() {
         prompt: p,
         max_new_tokens: n,
         stop: vec![],
+        sample: None,
     };
     // A holds a slot for 24 tokens; B finishes after 2 and frees its slot
     // while A is mid-flight; C (queued — only 2 slots) takes it over.
