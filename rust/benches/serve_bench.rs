@@ -5,15 +5,20 @@
 //!   registry/merge   adapter promotion (merge + cache) cost
 //!   e2e/merged       scheduler throughput, all adapters promoted
 //!   e2e/bypass       scheduler throughput, merging disabled
+//!   cls/*            the encoder-classification mirror of the above
 //!
 //! Run: `cargo bench --bench serve_bench` (NEUROADA_BENCH=full for longer
-//! budgets; NEUROADA_SERVE_SIZE / _ADAPTERS / _REQUESTS to scale).
+//! budgets; NEUROADA_SERVE_SIZE / _ADAPTERS / _REQUESTS to scale). The
+//! full run embeds the cls sections in `BENCH_serve.json`; `-- --cls`
+//! runs ONLY the encoder-classification bench (NEUROADA_SERVE_CLS_SIZE,
+//! default enc-micro) and writes `BENCH_serve_cls.json` — the quick CI
+//! smoke for GLUE-suite serving.
 
 use neuroada::bench::serve_bench;
 
 fn main() -> anyhow::Result<()> {
     let full = std::env::var("NEUROADA_BENCH").as_deref() == Ok("full");
-    let size = std::env::var("NEUROADA_SERVE_SIZE").unwrap_or_else(|_| "nano".into());
+    let cls_only = std::env::args().any(|a| a == "--cls");
     let adapters: usize = std::env::var("NEUROADA_SERVE_ADAPTERS")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -22,6 +27,21 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(if full { 512 } else { 128 });
+    if cls_only {
+        let size = std::env::var("NEUROADA_SERVE_CLS_SIZE").unwrap_or_else(|_| "enc-micro".into());
+        println!(
+            "== serve_bench --cls ({} mode, size={size}, {adapters} adapters) ==",
+            if full { "full" } else { "quick" }
+        );
+        let report = serve_bench::run_cls(&size, adapters, requests, !full)?;
+        print!("{}", report.render());
+        std::fs::write("BENCH_serve_cls.json", report.to_json().dump_pretty())?;
+        println!(
+            "(wrote BENCH_serve_cls.json; GLUE-suite classification served merged vs bypass)"
+        );
+        return Ok(());
+    }
+    let size = std::env::var("NEUROADA_SERVE_SIZE").unwrap_or_else(|_| "nano".into());
     println!("== serve_bench ({} mode, size={size}, {adapters} adapters) ==",
         if full { "full" } else { "quick" });
     let report = serve_bench::run(&size, adapters, requests, !full)?;

@@ -1,20 +1,23 @@
 //! Serving-path benchmark (criterion-free): merged-vs-bypass forward
 //! latency (including the crossover vs k ∈ {1, 2, 4, 8}), promotion
 //! (merge) cost, and end-to-end scheduler throughput with continuous
-//! micro-batching. Drives the same code the `neuroada serve` subcommand
-//! runs; numbers from here are the serving-perf baseline recorded in PR
-//! descriptions and exported as JSON for the CI bench artifact.
+//! micro-batching — for the decoder scoring path AND the encoder
+//! classification path (the cls merged-vs-bypass crossover rides in the
+//! same `BENCH_serve.json`). Drives the same code the `neuroada serve`
+//! subcommand runs; numbers from here are the serving-perf baseline
+//! recorded in PR descriptions and exported as JSON for the CI bench
+//! artifact.
 
 use super::{Bench, BenchResult};
 use crate::config::{presets, ModelCfg};
 use crate::coordinator::pool::Pool;
-use crate::data::eval_batch;
+use crate::data::{cls_batch, eval_batch, example_stream, tasks, Split};
 use crate::model::init::init_params;
 use crate::peft::{selection::select_topk, DeltaStore};
 use crate::runtime::ValueStore;
-use crate::serve::scheduler::host_logits;
+use crate::serve::scheduler::{host_cls_logits, host_logits};
 use crate::serve::{
-    AdapterRegistry, Backend, MetricsReport, RegistryCfg, Request, ServeCfg, Server,
+    AdapterRegistry, Backend, ClsRequest, MetricsReport, RegistryCfg, Request, ServeCfg, Server,
 };
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -40,6 +43,95 @@ pub struct ServeBenchReport {
     /// Merged-vs-bypass forward latency at k ∈ {1, 2, 4, 8} (ROADMAP:
     /// record the crossover point vs k).
     pub crossover: Vec<KPoint>,
+    /// Encoder-classification serving bench (enc-micro), mirroring the
+    /// decoder sections; `None` when the cls section failed (logged and
+    /// skipped so an encoder problem cannot lose the decoder baseline).
+    pub cls: Option<ClsBenchReport>,
+}
+
+/// The encoder-classification half of the serving bench: cls forward
+/// merged-vs-bypass (crossover vs k) plus end-to-end cls scheduler runs.
+pub struct ClsBenchReport {
+    pub size: String,
+    pub results: Vec<BenchResult>,
+    /// Merged-vs-bypass cls forward latency at k ∈ {1, 2, 4, 8}.
+    pub crossover: Vec<KPoint>,
+    /// End-to-end cls scheduler run with every adapter promoted.
+    pub e2e_merged: MetricsReport,
+    /// Same cls load with merging disabled (pure bypass path).
+    pub e2e_bypass: MetricsReport,
+}
+
+impl ClsBenchReport {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.results {
+            out.push_str(&r.render());
+            out.push('\n');
+        }
+        for p in &self.crossover {
+            out.push_str(&format!(
+                "cls-crossover/k={:<22} merged {:>8.3} ms  bypass {:>8.3} ms  (bypass/merged {:.2}×)\n",
+                p.k,
+                p.merged_ms,
+                p.bypass_ms,
+                p.bypass_ms / p.merged_ms,
+            ));
+        }
+        for (name, m) in [("merged", &self.e2e_merged), ("bypass", &self.e2e_bypass)] {
+            let (p50, p95) = m
+                .cls_latency
+                .as_ref()
+                .map(|s| (format!("{:.2}", s.p50 * 1e3), format!("{:.2}", s.p95 * 1e3)))
+                .unwrap_or(("-".into(), "-".into()));
+            out.push_str(&format!(
+                "e2e-cls/{name:<30} p50 {p50:>8} ms  p95 {p95:>8} ms  {:.0} req/s  \
+                 mean batch {:.2}\n",
+                m.req_per_sec, m.cls_mean_batch,
+            ));
+        }
+        out
+    }
+
+    /// Stable JSON blob (embedded under `"cls"` in `BENCH_serve.json`, or
+    /// the whole document for `serve_bench -- --cls`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut j = Json::obj();
+        j.set("bench", "serve_bench_cls");
+        j.set("size", self.size.as_str());
+        let mut results = Vec::new();
+        for r in &self.results {
+            let mut o = Json::obj();
+            o.set("name", r.name.as_str());
+            o.set("mean_ms", r.summary.mean * 1e3);
+            o.set("p50_ms", r.summary.p50 * 1e3);
+            o.set("p95_ms", r.summary.p95 * 1e3);
+            results.push(o);
+        }
+        j.set("results", Json::Arr(results));
+        let mut cross = Vec::new();
+        for p in &self.crossover {
+            let mut o = Json::obj();
+            o.set("k", p.k);
+            o.set("merged_ms", p.merged_ms);
+            o.set("bypass_ms", p.bypass_ms);
+            cross.push(o);
+        }
+        j.set("crossover", Json::Arr(cross));
+        for (name, m) in [("e2e_merged", &self.e2e_merged), ("e2e_bypass", &self.e2e_bypass)] {
+            let mut o = Json::obj();
+            o.set("req_per_sec", m.req_per_sec);
+            o.set("cls_served", m.cls_served);
+            o.set("cls_mean_batch", m.cls_mean_batch);
+            if let Some(s) = &m.cls_latency {
+                o.set("p50_ms", s.p50 * 1e3);
+                o.set("p95_ms", s.p95 * 1e3);
+            }
+            j.set(name, o);
+        }
+        j
+    }
 }
 
 impl ServeBenchReport {
@@ -62,13 +154,16 @@ impl ServeBenchReport {
             let (p50, p95) = m
                 .latency
                 .as_ref()
-                .map(|s| (s.p50 * 1e3, s.p95 * 1e3))
-                .unwrap_or((f64::NAN, f64::NAN));
+                .map(|s| (format!("{:.2}", s.p50 * 1e3), format!("{:.2}", s.p95 * 1e3)))
+                .unwrap_or(("-".into(), "-".into()));
             out.push_str(&format!(
-                "e2e/{name:<34} p50 {p50:>8.2} ms  p95 {p95:>8.2} ms  {:.0} req/s  \
+                "e2e/{name:<34} p50 {p50:>8} ms  p95 {p95:>8} ms  {:.0} req/s  \
                  mean batch {:.2}\n",
                 m.req_per_sec, m.mean_batch,
             ));
+        }
+        if let Some(cls) = &self.cls {
+            out.push_str(&cls.render());
         }
         out
     }
@@ -107,8 +202,30 @@ impl ServeBenchReport {
             }
             j.set(name, o);
         }
+        if let Some(cls) = &self.cls {
+            j.set("cls", cls.to_json());
+        }
         j
     }
+}
+
+/// Seeded fill for an all-zero encoder classifier head (`init_params`
+/// zeroes it; training is what normally fills it). Serving demos, benches
+/// and tests call this so synthetic cls traffic is non-degenerate —
+/// with a zero head every class logit is exactly 0 and every prediction
+/// is class 0. A trained head (any nonzero value) or a decoder config is
+/// left untouched. Returns whether the head was randomized.
+pub fn randomize_zero_head(cfg: &ModelCfg, store: &mut ValueStore, seed: u64) -> Result<bool> {
+    if cfg.n_classes == 0 {
+        return Ok(false);
+    }
+    if store.get("params.head")?.as_f32()?.iter().any(|&v| v != 0.0) {
+        return Ok(false);
+    }
+    let mut head = vec![0.0f32; cfg.n_classes * cfg.d_model];
+    Rng::new(seed).fill_normal(&mut head, 0.1);
+    store.insert_f32("params.head", &[cfg.n_classes, cfg.d_model], head);
+    Ok(true)
 }
 
 /// Synthesize a full-coverage adapter (one k-sparse delta per projection),
@@ -168,6 +285,132 @@ fn gen_requests(cfg: &ModelCfg, adapters: &[String], n: usize, seed: u64) -> Vec
             }
         })
         .collect()
+}
+
+/// Task-shaped cls traffic (sentence pairs from the GLUE-like generators),
+/// round-robin across adapters.
+fn gen_cls_requests(cfg: &ModelCfg, adapters: &[String], n: usize, seed: u64) -> Vec<ClsRequest> {
+    let task = tasks::by_name("glue-mnli").expect("registry task");
+    example_stream(&task, Split::Test, seed, cfg.vocab, cfg.seq, n)
+        .into_iter()
+        .enumerate()
+        .map(|(i, ex)| ClsRequest {
+            adapter: adapters[i % adapters.len()].clone(),
+            tokens: ex.prompt,
+        })
+        .collect()
+}
+
+fn e2e_cls(
+    cfg: &ModelCfg,
+    backbone: &ValueStore,
+    adapters: &[(String, Vec<(String, DeltaStore)>)],
+    rcfg: RegistryCfg,
+    requests: Vec<ClsRequest>,
+    clients: usize,
+) -> Result<MetricsReport> {
+    let reg = AdapterRegistry::new(cfg.clone(), backbone.clone(), rcfg);
+    for (name, deltas) in adapters {
+        reg.register(name, deltas.clone())?;
+    }
+    let scfg = ServeCfg {
+        max_batch: cfg.batch,
+        max_queue: requests.len().max(1),
+        max_delay: std::time::Duration::from_millis(5),
+        workers: Pool::default_size(),
+        ..ServeCfg::default()
+    };
+    let srv = Server::start(reg, scfg, Backend::Host)?;
+    let (_served, rejected) = srv.drive_cls_clients(requests, clients);
+    anyhow::ensure!(rejected == 0, "e2e cls bench rejected {rejected} requests");
+    Ok(srv.shutdown())
+}
+
+/// Run the encoder-classification serving bench (the cls mirror of
+/// [`run`]'s forward/crossover/e2e sections). Standalone entry for
+/// `cargo bench --bench serve_bench -- --cls`; also embedded in the full
+/// report so the cls crossover lands in `BENCH_serve.json`.
+pub fn run_cls(
+    size: &str,
+    n_adapters: usize,
+    n_requests: usize,
+    quick: bool,
+) -> Result<ClsBenchReport> {
+    let cfg = presets::model(size).ok_or_else(|| anyhow!("unknown size {size:?}"))?;
+    anyhow::ensure!(cfg.n_classes > 0, "cls bench needs an encoder size");
+    let b = if quick { Bench::quick() } else { Bench::default() };
+    let mut rng = Rng::new(8);
+    let mut backbone = init_params(&cfg, &mut rng);
+    randomize_zero_head(&cfg, &mut backbone, 0x4EAD)?;
+    let adapters = synth_adapters(&cfg, &backbone, n_adapters.max(2), 1, 88)?;
+    let names: Vec<String> = adapters.iter().map(|(n, _)| n.clone()).collect();
+
+    // --- single-batch cls forward: merged vs bypass ----------------------
+    let reg = AdapterRegistry::new(
+        cfg.clone(),
+        backbone.clone(),
+        RegistryCfg { merged_capacity: 1, promote_after: 1 },
+    );
+    for (name, deltas) in &adapters {
+        reg.register(name, deltas.clone())?;
+    }
+    let n = cfg.batch.min(8);
+    let task = tasks::by_name("glue-sst2").expect("registry task");
+    let examples = example_stream(&task, Split::Test, 13, cfg.vocab, cfg.seq, n);
+    let cb = cls_batch(&examples, cfg.seq);
+    let mut results = Vec::new();
+    let merged = reg.merge_now(&names[0])?;
+    let r_merged = b.run(&format!("cls/merged {size} b={n}"), || {
+        std::hint::black_box(
+            host_cls_logits(&cfg, &merged, &cb.tokens, &cb.pad_mask, n).unwrap().numel(),
+        );
+    });
+    // like the decoder section: the merged cls forward is k-invariant
+    let merged_ms = r_merged.summary.mean * 1e3;
+    results.push(r_merged);
+    let bypass = reg.bypass(&names[0])?;
+    results.push(b.run(&format!("cls/bypass {size} b={n}"), || {
+        std::hint::black_box(
+            host_cls_logits(&cfg, &bypass, &cb.tokens, &cb.pad_mask, n).unwrap().numel(),
+        );
+    }));
+
+    // --- merged-vs-bypass cls crossover vs k -----------------------------
+    let mut crossover = Vec::new();
+    for k in [1usize, 2, 4, 8] {
+        let name = format!("cls-crossover-k{k}");
+        reg.register(&name, synth_adapter(&cfg, &backbone, k, 0xC00 + k as u64)?)?;
+        let view = reg.bypass(&name)?;
+        let r = b.run(&format!("cls/bypass {size} b={n} k={k}"), || {
+            std::hint::black_box(
+                host_cls_logits(&cfg, &view, &cb.tokens, &cb.pad_mask, n).unwrap().numel(),
+            );
+        });
+        crossover.push(KPoint { k, merged_ms, bypass_ms: r.summary.mean * 1e3 });
+        results.push(r);
+    }
+
+    // --- end-to-end cls scheduler: merged vs bypass ----------------------
+    let n_req = if quick { n_requests.min(32) } else { n_requests };
+    let clients = 4;
+    let requests = gen_cls_requests(&cfg, &names, n_req, 17);
+    let e2e_merged = e2e_cls(
+        &cfg,
+        &backbone,
+        &adapters,
+        RegistryCfg { merged_capacity: adapters.len(), promote_after: 1 },
+        requests.clone(),
+        clients,
+    )?;
+    let e2e_bypass = e2e_cls(
+        &cfg,
+        &backbone,
+        &adapters,
+        RegistryCfg { merged_capacity: 0, promote_after: 1 },
+        requests,
+        clients,
+    )?;
+    Ok(ClsBenchReport { size: size.to_string(), results, crossover, e2e_merged, e2e_bypass })
 }
 
 fn e2e(
@@ -289,7 +532,18 @@ pub fn run(size: &str, n_adapters: usize, n_requests: usize, quick: bool) -> Res
         requests,
         clients,
     )?;
-    Ok(ServeBenchReport { results, e2e_merged, e2e_bypass, crossover })
+    // encoder-classification mirror (ROADMAP: GLUE-suite serving): the cls
+    // merged-vs-bypass crossover rides in the same BENCH_serve.json. A cls
+    // failure degrades to `cls: null` rather than losing the decoder
+    // baseline (the standalone `serve_bench -- --cls` surfaces it loudly).
+    let cls = match run_cls("enc-micro", 2, n_requests.min(32), quick) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("serve_bench: cls section skipped: {e:#}");
+            None
+        }
+    };
+    Ok(ServeBenchReport { results, e2e_merged, e2e_bypass, crossover, cls })
 }
 
 #[cfg(test)]
@@ -308,6 +562,20 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.at(&["crossover"]).and_then(|c| c.as_arr()).map(|a| a.len()), Some(4));
         assert!(j.at(&["e2e_merged", "req_per_sec"]).and_then(|v| v.as_f64()).is_some());
+        // the embedded cls section mirrors the decoder one
+        let cls = r.cls.as_ref().expect("cls bench embedded");
+        assert_eq!(cls.crossover.len(), 4);
+        for p in &cls.crossover {
+            assert!(p.merged_ms > 0.0 && p.bypass_ms > 0.0);
+        }
+        assert_eq!(cls.e2e_merged.cls_served, 16);
+        assert_eq!(cls.e2e_bypass.cls_served, 16);
+        assert_eq!(
+            j.at(&["cls", "crossover"]).and_then(|c| c.as_arr()).map(|a| a.len()),
+            Some(4)
+        );
+        assert!(j.at(&["cls", "e2e_merged", "req_per_sec"]).and_then(|v| v.as_f64()).is_some());
+        assert!(r.render().contains("e2e-cls/merged"));
         assert_eq!(r.e2e_merged.served, 16);
         assert_eq!(r.e2e_bypass.served, 16);
         // path accounting: promotion happened in the merged run (a batch

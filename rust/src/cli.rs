@@ -7,7 +7,8 @@
 //!   train          one fine-tuning run (method × task), merge + eval
 //!   eval           zero-shot eval of a cached backbone on a task
 //!   serve          multi-adapter serving engine (registry + micro-batching
-//!                  + streaming greedy decode via --generate)
+//!                  + streaming greedy decode via --generate; encoder sizes
+//!                  serve GLUE classification with exact eval parity)
 //!   audit          memory audit: analytic (Eq. 5/6) vs measured bytes
 //!   tasks          list the 23 synthetic tasks
 //!
@@ -106,11 +107,16 @@ SUBCOMMANDS
                     [--wait-ms 10] [--capacity 2] [--promote 3] [--host]
                     [--threads N] [--generate] [--max-new 16] [--slots 8]
                     [--quota N] [--temp T] [--top-k K]
+                    [--cls] [--task glue-sst2]
                     (--generate streams decode tokens through the KV-cached
                     slot scheduler instead of scoring options; --temp/--top-k
                     switch greedy to seeded sampling; --threads N
                     row-partitions the host batched forward, default
-                    NEUROADA_THREADS or serial)
+                    NEUROADA_THREADS or serial. Encoder sizes, e.g.
+                    --size enc-micro [--cls], serve a GLUE task's dev set
+                    as classification requests on both weight views and
+                    assert the served metric reproduces the offline
+                    encoder eval exactly)
   audit             memory audit table: [--size nano] [--k 1]
   tasks             list the 23 synthetic tasks
 

@@ -7,7 +7,9 @@
 //! inputs. Metrics follow Table 4's conventions: accuracy everywhere, MCC
 //! for the cola-like task, Pearson for the stsb-like task.
 
+use crate::config::ModelCfg;
 use crate::data::{self, tasks::{Metric, Task}, Split};
+use crate::model::{DeltaOverlay, PlannedModel};
 use crate::peft::{DeltaStore, MethodKind};
 use crate::runtime::{state::run_once, Engine, Manifest, TrainSession, Value, ValueStore};
 use crate::tensor::Tensor;
@@ -186,6 +188,41 @@ pub fn eval_encoder(
     Ok(score(task, &examples, &preds))
 }
 
+/// Host-forward twin of [`eval_encoder`]: the same example stream, the
+/// same chunked batch assembly (`data::cls_batch` padded to `cfg.seq`),
+/// and the same NaN-safe argmax — through the zero-copy
+/// `PlannedModel::cls_predict` instead of the HLO artifact. With
+/// `deltas: Some(..)` the adapter is applied through the sparse bypass
+/// overlay (unmerged); with `None` the store is evaluated as-is (pass a
+/// pre-merged store for the merged view).
+///
+/// This is the correctness oracle for encoder *serving*: `neuroada serve
+/// --cls` and the cls parity tests assert the served task metric equals
+/// this one exactly, per path. Keep its batching in lockstep with both
+/// `eval_encoder` and the scheduler's cls batch assembly.
+pub fn eval_encoder_host(
+    cfg: &ModelCfg,
+    params: &ValueStore,
+    deltas: Option<&[(String, DeltaStore)]>,
+    task: &Task,
+    n: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<f64> {
+    let overlay = deltas.map(DeltaOverlay::new);
+    let plan = PlannedModel::resolve(cfg, params, overlay.as_ref(), threads)?;
+    let examples = data::example_stream(task, Split::Test, seed, cfg.vocab, cfg.seq, n);
+    let mut preds: Vec<usize> = Vec::with_capacity(examples.len());
+    for chunk in examples.chunks(cfg.batch) {
+        // no fixed-batch padding needed on the host path: rows are
+        // independent, so per-example logits match the artifact's
+        let cb = data::cls_batch(chunk, cfg.seq);
+        let (_, picks) = plan.cls_predict(&cb.tokens, &cb.pad_mask, chunk.len())?;
+        preds.extend(picks);
+    }
+    Ok(score(task, &examples, &preds))
+}
+
 /// Apply the task's metric to predictions.
 pub fn score(task: &Task, examples: &[data::Example], preds: &[usize]) -> f64 {
     match task.metric {
@@ -228,6 +265,25 @@ mod tests {
         assert_eq!(score(&task_acc, &exs, &[1, 0, 1, 0]), 0.0);
         let task_mcc = tasks::by_name("glue-cola").unwrap();
         assert!((score(&task_mcc, &exs, &[0, 1, 0, 1]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eval_encoder_host_is_deterministic_across_threads() {
+        use crate::config::presets;
+        use crate::model::init::init_params;
+        use crate::util::rng::Rng;
+        let cfg = presets::model("enc-micro").unwrap();
+        let mut params = init_params(&cfg, &mut Rng::new(3));
+        // the zero-init head would make every prediction class 0
+        assert!(crate::bench::serve_bench::randomize_zero_head(&cfg, &mut params, 4).unwrap());
+        let deltas = crate::bench::serve_bench::synth_adapter(&cfg, &params, 1, 11).unwrap();
+        let task = tasks::by_name("glue-sst2").unwrap();
+        let merged_only = eval_encoder_host(&cfg, &params, None, &task, 16, 5, 1).unwrap();
+        assert!((0.0..=1.0).contains(&merged_only));
+        let a = eval_encoder_host(&cfg, &params, Some(&deltas), &task, 16, 5, 1).unwrap();
+        let b = eval_encoder_host(&cfg, &params, Some(&deltas), &task, 16, 5, 4).unwrap();
+        assert_eq!(a, b, "row-partitioned host eval must be bit-identical to serial");
+        assert!((0.0..=1.0).contains(&a));
     }
 
     #[test]

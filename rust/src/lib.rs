@@ -30,8 +30,10 @@
 //! * [`serve`]       — multi-adapter serving engine: adapter registry with
 //!                     merged-LRU + sparse-bypass paths, continuous
 //!                     micro-batching scheduler, streaming greedy decode
-//!                     over slot-based KV caches, per-adapter admission
-//!                     quotas, serving metrics (see `docs/serving.md`).
+//!                     over slot-based KV caches, encoder (GLUE-suite)
+//!                     classification serving with exact eval parity,
+//!                     per-adapter admission quotas, serving metrics
+//!                     (see `docs/serving.md`).
 //! * [`sweep`]       — hyperparameter grid search (Tables 5–7).
 //! * [`coordinator`] — thread-pool job runner + experiment drivers (repro).
 //! * [`bench`]       — measurement harness used by `cargo bench` targets

@@ -216,7 +216,10 @@ fn cmd_eval(args: &Args) -> Result<()> {
 /// synthetic request stream through it, and report serving metrics. With
 /// `--generate`, traffic is streaming greedy decode (tokens stream back as
 /// they are produced through the KV-cached slot scheduler) instead of
-/// multiple-choice scoring.
+/// multiple-choice scoring. Encoder sizes (or `--cls`) switch to
+/// classification serving: a GLUE task's dev set is driven through the
+/// server on BOTH weight views and the served task metric is checked for
+/// exact parity against the offline encoder eval (see [`cmd_serve_cls`]).
 ///
 /// Adapters come from `--ckpt-dir` (every subdirectory holding a
 /// `deltas/` checkpoint becomes one adapter, named after the subdir) or are
@@ -238,8 +241,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let size = args.opt_or("size", "nano");
     let cfg = presets::model(&size).ok_or_else(|| anyhow!("unknown size {size:?}"))?;
+    if args.flag("cls") && cfg.n_classes == 0 {
+        bail!("serve --cls needs an encoder size (e.g. --size enc-micro; got decoder {size:?})");
+    }
     if cfg.n_classes > 0 {
-        bail!("serve supports decoder sizes only (got encoder {size:?})");
+        // encoders serve classification — the only request type their
+        // backbone supports (scoring/generation reject WrongModelKind)
+        return cmd_serve_cls(args, cfg);
     }
     let opts = opts_from(args)?;
     let seed = opts.seed;
@@ -452,6 +460,167 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "served {ok}/{n_req} requests ({rejected} rejected) across {} adapters from one resident backbone",
         names.len()
+    );
+    Ok(())
+}
+
+/// `neuroada serve --cls` (and any encoder `--size`): classification
+/// serving with a built-in correctness oracle. A GLUE task's dev-example
+/// stream is driven through the full scheduler TWICE — once on the pure
+/// sparse-bypass view, once after an explicit merge — and the served task
+/// metric must reproduce the offline host encoder eval
+/// (`eval::eval_encoder_host`) bit-exactly on both paths; any divergence
+/// exits non-zero. The backend is the pure-rust planned forward: the
+/// oracle and the server must run the same math for the parity contract
+/// to be exact (HLO cls serving is exercised by the scheduler when
+/// artifacts are present, parity-tested to tolerance elsewhere).
+fn cmd_serve_cls(args: &Args, cfg: neuroada::config::ModelCfg) -> Result<()> {
+    use neuroada::bench::serve_bench::{randomize_zero_head, synth_adapters};
+    use neuroada::coordinator::pool::Pool;
+    use neuroada::data::{example_stream, tasks, Split};
+    use neuroada::eval::{eval_encoder_host, score};
+    use neuroada::model::merge_deltas;
+    use neuroada::peft::DeltaStore;
+    use neuroada::serve::{
+        load_or_init_backbone, AdapterRegistry, Backend, ClsRequest, RegistryCfg, ServeCfg, Server,
+    };
+    use std::time::Duration;
+
+    let size = cfg.name.clone();
+    let opts = opts_from(args)?;
+    let seed = opts.seed;
+    let mut backbone = load_or_init_backbone(&opts, &cfg)?;
+    // a fresh-init encoder has an all-zero classifier head (training fills
+    // it); a trained checkpoint's head is left untouched
+    if randomize_zero_head(&cfg, &mut backbone, seed ^ 0xEAD)? {
+        eprintln!("[serve] zero classifier head: randomized (seeded) for synthetic cls serving");
+    }
+
+    // adapters, with their deltas kept aside for the parity oracle
+    let mut adapters: Vec<(String, Vec<(String, DeltaStore)>)> = Vec::new();
+    if let Some(dir) = args.opt("ckpt-dir") {
+        let mut entries: Vec<_> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().join("deltas").is_dir())
+            .collect();
+        entries.sort_by_key(|e| e.file_name());
+        for e in &entries {
+            let name = e.file_name().to_string_lossy().to_string();
+            let deltas = neuroada::train::checkpoint::load_deltas(e.path())?;
+            eprintln!("[serve] loaded adapter {name:?} from {:?}", e.path());
+            adapters.push((name, deltas));
+        }
+        if adapters.is_empty() {
+            bail!("no delta checkpoints under {dir:?} (want <dir>/<name>/deltas/*.bin)");
+        }
+    } else {
+        let n = args.opt_usize("adapters").map_err(|e| anyhow!(e))?.unwrap_or(4).max(1);
+        eprintln!("[serve] synthesizing {n} adapters (k=1, seeded)");
+        adapters = synth_adapters(&cfg, &backbone, n, 1, seed ^ 0xADAF)?;
+    }
+
+    // never auto-promote: the first pass must stay pure-bypass, then an
+    // explicit merge pins the merged pass — both paths get the full dev
+    // set, and each is parity-checked against its own offline oracle
+    let rcfg = RegistryCfg {
+        merged_capacity: args.opt_usize("capacity").map_err(|e| anyhow!(e))?.unwrap_or(2).max(1),
+        promote_after: u64::MAX,
+    };
+    let registry = AdapterRegistry::new(cfg.clone(), backbone.clone(), rcfg);
+    for (name, deltas) in &adapters {
+        registry.register(name, deltas.clone())?;
+    }
+
+    // the GLUE dev set, served through the first adapter
+    let task_name = args.opt_or("task", "glue-sst2");
+    let task = tasks::by_name(&task_name).ok_or_else(|| anyhow!("unknown task {task_name:?}"))?;
+    if task.suite != tasks::Suite::Glue {
+        bail!("serve --cls wants a GLUE-like task (got {task_name:?}; see `neuroada tasks`)");
+    }
+    let n = args.opt_usize("requests").map_err(|e| anyhow!(e))?.unwrap_or(256);
+    let quota = args.opt_usize("quota").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    let scfg = ServeCfg {
+        max_batch: args.opt_usize("max-batch").map_err(|e| anyhow!(e))?.unwrap_or(cfg.batch),
+        // the dev set is submitted open-loop (all tickets before any wait),
+        // so the default queue must hold the whole pass — a smaller bound
+        // would turn large --requests into spurious QueueFull rejections
+        max_queue: args.opt_usize("queue").map_err(|e| anyhow!(e))?.unwrap_or(n.max(256)),
+        max_delay: Duration::from_millis(
+            args.opt_usize("wait-ms").map_err(|e| anyhow!(e))?.unwrap_or(10) as u64,
+        ),
+        workers: args
+            .opt_usize("workers")
+            .map_err(|e| anyhow!(e))?
+            .unwrap_or_else(Pool::default_size),
+        adapter_quota: quota,
+        threads: args.opt_usize("threads").map_err(|e| anyhow!(e))?.unwrap_or(0),
+        ..ServeCfg::default()
+    };
+    eprintln!("[serve] backend: pure-rust forward (cls parity mode)");
+    let srv = Server::start(registry, scfg, Backend::Host)?;
+    let examples = example_stream(&task, Split::Test, seed, cfg.vocab, cfg.seq, n);
+    let (name0, deltas0) = &adapters[0];
+    let reqs: Vec<ClsRequest> =
+        examples.iter().map(|ex| ClsRequest::from_example(name0.clone(), ex)).collect();
+    let serve_metric = |reqs: Vec<ClsRequest>| -> Result<f64> {
+        // with a per-adapter quota, submit in quota-sized waves (each wave
+        // fully waited) so the single-adapter dev-set pass never trips its
+        // own admission limit; without one, the whole pass goes open-loop
+        let wave = if quota > 0 { quota } else { reqs.len().max(1) };
+        let mut preds = Vec::with_capacity(reqs.len());
+        for chunk in reqs.chunks(wave) {
+            for r in srv.serve_all_cls(chunk.to_vec()) {
+                preds.push(r.map_err(|e| anyhow!("cls request rejected: {e}"))?.class);
+            }
+        }
+        Ok(score(&task, &examples, &preds))
+    };
+    let served_bypass = serve_metric(reqs.clone())?;
+    srv.registry().merge_now(name0)?;
+    let served_merged = serve_metric(reqs)?;
+
+    // offline oracles: the exact same stream through the host encoder eval
+    let oracle_bypass = eval_encoder_host(&cfg, &backbone, Some(deltas0), &task, n, seed, 1)?;
+    let mut merged_store = backbone.clone();
+    merge_deltas(&mut merged_store, deltas0)?;
+    let oracle_merged = eval_encoder_host(&cfg, &merged_store, None, &task, n, seed, 1)?;
+
+    // bitwise comparison: NaN-valued metrics (e.g. a degenerate Pearson)
+    // still count as parity when both sides computed the same thing
+    let exact = |a: f64, b: f64| a.to_bits() == b.to_bits();
+    let metric_name = match task.metric {
+        tasks::Metric::Accuracy => "accuracy",
+        tasks::Metric::Matthews => "mcc",
+        tasks::Metric::Pearson => "pearson",
+    };
+    let mut t = Table::new(&format!(
+        "Encoder serving parity — {task_name} on {size} (n={n}, adapter {name0:?})"
+    ))
+    .header(&["Path", &format!("served {metric_name}"), "eval (host)", "parity"]);
+    for (path, served, oracle) in
+        [("bypass", served_bypass, oracle_bypass), ("merged", served_merged, oracle_merged)]
+    {
+        t.row(vec![
+            path.into(),
+            format!("{served:.4}"),
+            format!("{oracle:.4}"),
+            if exact(served, oracle) { "exact".into() } else { "MISMATCH".into() },
+        ]);
+    }
+    t.print();
+    let report = srv.shutdown();
+    println!("{}", report.render());
+    if !exact(served_bypass, oracle_bypass) || !exact(served_merged, oracle_merged) {
+        bail!(
+            "cls serving metric diverged from the offline encoder eval \
+             (bypass {served_bypass} vs {oracle_bypass}, merged {served_merged} vs {oracle_merged})"
+        );
+    }
+    println!(
+        "served {} cls requests ({n} dev examples × bypass + merged) through adapter \
+         {name0:?} ({} registered) with exact eval parity",
+        report.cls_served,
+        adapters.len()
     );
     Ok(())
 }

@@ -327,6 +327,29 @@ impl<'a> PlannedModel<'a> {
         Ok(out)
     }
 
+    /// [`cls_logits`](PlannedModel::cls_logits) plus the per-row class
+    /// prediction under the ONE tie-/NaN-breaking rule the whole encoder
+    /// stack shares (NaN-safe argmax, all-NaN rows fall back to class 0).
+    /// The serving worker and `eval::eval_encoder_host` both predict
+    /// through here, so serving-vs-eval parity is structural, not
+    /// coincidental.
+    pub fn cls_predict(
+        &self,
+        tokens: &[i32],
+        pad_mask: &[f32],
+        b: usize,
+    ) -> Result<(Tensor, Vec<usize>)> {
+        let logits = self.cls_logits(tokens, pad_mask, b)?;
+        let nc = self.cfg.n_classes;
+        let picks = (0..b)
+            .map(|i| {
+                crate::util::nan_safe_argmax(logits.data[i * nc..(i + 1) * nc].iter().copied())
+                    .unwrap_or(0)
+            })
+            .collect();
+        Ok((logits, picks))
+    }
+
     /// Feed one token at the next position, append its K/V to `state`, and
     /// return the next-token LM logits `[vocab]`.
     ///

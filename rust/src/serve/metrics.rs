@@ -51,6 +51,16 @@ struct Inner {
     rejected: BTreeMap<&'static str, u64>,
     adapters: BTreeMap<String, AdapterCounters>,
     max_queue_depth: usize,
+    // --- encoder-classification counters -----------------------------
+    /// Completed cls requests (also counted in `served`).
+    cls_served: u64,
+    /// Submit → response for cls requests, sliding window like `latencies`.
+    cls_latencies: Vec<f64>,
+    next_cls: usize,
+    /// Executed cls micro-batches (also counted in `batches`).
+    cls_batches: u64,
+    /// Coalesced cls requests summed over cls batches (occupancy numerator).
+    cls_batch_req_sum: u64,
     // --- streaming-decode counters -----------------------------------
     /// Completed generation requests (also counted in `served`).
     gen_served: u64,
@@ -122,6 +132,28 @@ impl ServeMetrics {
         g.gen_tokens += n_tokens;
     }
 
+    /// One classification request completed: submit→response `latency`
+    /// seconds. Also counts as a served request for the aggregate stats
+    /// (like generations), with its own latency window so cls percentiles
+    /// are not blurred into the scoring ones.
+    pub fn record_cls_served(&self, adapter: &str, path: ServePath, latency: f64) {
+        let mut g = self.inner.lock().unwrap();
+        Self::record_served_locked(&mut g, adapter, path, latency);
+        let g = &mut *g;
+        g.cls_served += 1;
+        push_window(&mut g.cls_latencies, &mut g.next_cls, latency);
+    }
+
+    /// One cls micro-batch executed with `n` coalesced requests. Also
+    /// counted in the aggregate batch stats.
+    pub fn record_cls_batch(&self, n: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_req_sum += n as u64;
+        g.cls_batches += 1;
+        g.cls_batch_req_sum += n as u64;
+    }
+
     /// First streamed token of a generation: submit→token seconds (TTFT).
     pub fn record_first_token(&self, ttft: f64) {
         let mut g = self.inner.lock().unwrap();
@@ -180,6 +212,14 @@ impl ServeMetrics {
             max_queue_depth: g.max_queue_depth,
             rejected: g.rejected.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
             adapters: g.adapters.clone(),
+            cls_served: g.cls_served,
+            cls_latency: (!g.cls_latencies.is_empty()).then(|| Summary::of(&g.cls_latencies)),
+            cls_batches: g.cls_batches as usize,
+            cls_mean_batch: if g.cls_batches == 0 {
+                0.0
+            } else {
+                g.cls_batch_req_sum as f64 / g.cls_batches as f64
+            },
             gen_served: g.gen_served,
             gen_tokens: g.gen_tokens,
             tokens_per_sec: g.gen_tokens as f64 / uptime,
@@ -211,6 +251,15 @@ pub struct MetricsReport {
     pub max_queue_depth: usize,
     pub rejected: BTreeMap<String, u64>,
     pub adapters: BTreeMap<String, AdapterCounters>,
+    /// Completed classification requests (a subset of `served`).
+    pub cls_served: u64,
+    /// Latency summary in seconds over the most recent cls requests
+    /// (None before the first cls response).
+    pub cls_latency: Option<Summary>,
+    /// Executed cls micro-batches (a subset of `batches`).
+    pub cls_batches: usize,
+    /// Mean coalesced requests per executed cls micro-batch.
+    pub cls_mean_batch: f64,
     /// Completed generation requests (a subset of `served`).
     pub gen_served: u64,
     /// Tokens streamed across all generations.
@@ -228,6 +277,16 @@ pub struct MetricsReport {
     pub inter_token: Option<Summary>,
 }
 
+/// Render `p * 1e3` as `"<x>.xx ms"`, or `-` before any sample exists —
+/// never a literal `NaN ms` row (an empty percentile summary is normal at
+/// startup and must not look like a broken metric).
+fn ms_or_dash(p: Option<f64>) -> String {
+    match p {
+        Some(v) => format!("{:.2} ms", v * 1e3),
+        None => "-".to_string(),
+    }
+}
+
 impl MetricsReport {
     pub fn total_rejected(&self) -> u64 {
         self.rejected.values().sum()
@@ -235,38 +294,36 @@ impl MetricsReport {
 
     /// Render the snapshot as printable tables.
     pub fn render(&self) -> String {
-        let (p50, p95) = self
-            .latency
-            .as_ref()
-            .map(|s| (s.p50 * 1e3, s.p95 * 1e3))
-            .unwrap_or((f64::NAN, f64::NAN));
         let mut t = Table::new("Serving metrics").header(&["Metric", "Value"]);
         t.row(vec!["served".into(), self.served.to_string()]);
         t.row(vec!["rejected".into(), self.total_rejected().to_string()]);
         t.row(vec!["req/s".into(), format!("{:.1}", self.req_per_sec)]);
-        t.row(vec!["p50 latency".into(), format!("{p50:.2} ms")]);
-        t.row(vec!["p95 latency".into(), format!("{p95:.2} ms")]);
+        t.row(vec!["p50 latency".into(), ms_or_dash(self.latency.as_ref().map(|s| s.p50))]);
+        t.row(vec!["p95 latency".into(), ms_or_dash(self.latency.as_ref().map(|s| s.p95))]);
         t.row(vec!["batches".into(), self.batches.to_string()]);
         t.row(vec!["mean batch".into(), format!("{:.2}", self.mean_batch)]);
         t.row(vec!["max queue depth".into(), self.max_queue_depth.to_string()]);
+        if self.cls_served > 0 || self.cls_batches > 0 {
+            t.row(vec!["cls served".into(), self.cls_served.to_string()]);
+            t.row(vec!["cls p50".into(), ms_or_dash(self.cls_latency.as_ref().map(|s| s.p50))]);
+            t.row(vec!["cls p95".into(), ms_or_dash(self.cls_latency.as_ref().map(|s| s.p95))]);
+            t.row(vec!["cls batches".into(), self.cls_batches.to_string()]);
+            t.row(vec!["cls mean batch".into(), format!("{:.2}", self.cls_mean_batch)]);
+        }
         if self.gen_served > 0 {
-            let (tp50, tp95) = self
-                .ttft
-                .as_ref()
-                .map(|s| (s.p50 * 1e3, s.p95 * 1e3))
-                .unwrap_or((f64::NAN, f64::NAN));
-            let (ip50, ip95) = self
-                .inter_token
-                .as_ref()
-                .map(|s| (s.p50 * 1e3, s.p95 * 1e3))
-                .unwrap_or((f64::NAN, f64::NAN));
             t.row(vec!["generations".into(), self.gen_served.to_string()]);
             t.row(vec!["tokens streamed".into(), self.gen_tokens.to_string()]);
             t.row(vec!["tokens/s".into(), format!("{:.1}", self.tokens_per_sec)]);
-            t.row(vec!["ttft p50".into(), format!("{tp50:.2} ms")]);
-            t.row(vec!["ttft p95".into(), format!("{tp95:.2} ms")]);
-            t.row(vec!["inter-token p50".into(), format!("{ip50:.2} ms")]);
-            t.row(vec!["inter-token p95".into(), format!("{ip95:.2} ms")]);
+            t.row(vec!["ttft p50".into(), ms_or_dash(self.ttft.as_ref().map(|s| s.p50))]);
+            t.row(vec!["ttft p95".into(), ms_or_dash(self.ttft.as_ref().map(|s| s.p95))]);
+            t.row(vec![
+                "inter-token p50".into(),
+                ms_or_dash(self.inter_token.as_ref().map(|s| s.p50)),
+            ]);
+            t.row(vec![
+                "inter-token p95".into(),
+                ms_or_dash(self.inter_token.as_ref().map(|s| s.p95)),
+            ]);
             t.row(vec!["decode steps".into(), self.decode_steps.to_string()]);
             t.row(vec![
                 "slot occupancy".into(),
@@ -346,10 +403,42 @@ mod tests {
         assert!(r.latency.is_none());
         assert!(r.ttft.is_none());
         assert_eq!(r.gen_served, 0);
+        assert_eq!(r.cls_served, 0);
+        assert!(r.cls_latency.is_none());
         let rendered = r.render();
         assert!(rendered.contains("Serving metrics"));
-        // decode rows only appear once a generation completed
+        // decode/cls rows only appear once such a request completed
         assert!(!rendered.contains("tokens streamed"));
+        assert!(!rendered.contains("cls served"));
+        // empty percentile summaries render as '-', never a NaN row
+        assert!(!rendered.contains("NaN"), "{rendered}");
+        assert!(rendered.contains('-'));
+    }
+
+    #[test]
+    fn cls_counters_and_render() {
+        let m = ServeMetrics::new();
+        m.record_cls_batch(3);
+        m.record_cls_batch(1);
+        m.record_cls_served("a", ServePath::Merged, 0.004);
+        m.record_cls_served("a", ServePath::Merged, 0.006);
+        m.record_cls_served("b", ServePath::Bypass, 0.008);
+        m.record_cls_served("b", ServePath::Bypass, 0.010);
+        let r = m.snapshot();
+        assert_eq!(r.cls_served, 4);
+        assert_eq!(r.served, 4, "cls requests count in the aggregate");
+        assert_eq!(r.cls_batches, 2);
+        assert_eq!(r.batches, 2, "cls batches count in the aggregate");
+        assert!((r.cls_mean_batch - 2.0).abs() < 1e-9);
+        let lat = r.cls_latency.as_ref().unwrap();
+        assert_eq!(lat.n, 4);
+        assert!(lat.p50 >= 0.004 && lat.p95 <= 0.011);
+        assert_eq!(r.adapters["a"].merged_hits, 2);
+        assert_eq!(r.adapters["b"].bypass_hits, 2);
+        let rendered = r.render();
+        assert!(rendered.contains("cls served"));
+        assert!(rendered.contains("cls mean batch"));
+        assert!(!rendered.contains("NaN"), "{rendered}");
     }
 
     #[test]

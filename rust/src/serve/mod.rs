@@ -18,6 +18,11 @@
 //!   ([`Backend::Host`]) or the AOT HLO eval artifacts ([`Backend::Hlo`],
 //!   including the scatter-input bypass artifact), per-request response
 //!   channels, and a slot-based decode thread for streaming generation.
+//!   Request types route by the registry's [`ModelKind`]: decoder
+//!   backbones serve scoring + generation, encoder (GLUE-suite) backbones
+//!   serve classification ([`ClsRequest`] → `PlannedModel::cls_logits`,
+//!   parity-locked to the offline `eval_encoder`); wrong-kind requests get
+//!   a typed `Reject::WrongModelKind`.
 //! * [`generate`] — [`GenerateRequest`] / [`GenTicket`]: streaming greedy
 //!   decode over the KV-cached incremental forward
 //!   (`model::DecodeState`); tokens stream back as they are produced,
@@ -41,8 +46,11 @@ pub use batcher::MicroBatcher;
 pub use crate::model::SampleCfg;
 pub use generate::{FinishReason, GenEvent, GenResponse, GenTicket, GenerateRequest};
 pub use metrics::{AdapterCounters, MetricsReport, ServeMetrics};
-pub use registry::{AdapterInfo, AdapterRegistry, ModelRef, RegistryCfg, ServePath};
-pub use scheduler::{Backend, Reject, Request, Response, ServeCfg, Server, Ticket};
+pub use registry::{AdapterInfo, AdapterRegistry, ModelKind, ModelRef, RegistryCfg, ServePath};
+pub use scheduler::{
+    Backend, ClsRequest, ClsResponse, ClsTicket, Reject, Request, Response, ServeCfg, Server,
+    Ticket,
+};
 
 use crate::config::ModelCfg;
 use crate::coordinator::common::RunOpts;

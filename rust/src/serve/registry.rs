@@ -26,6 +26,28 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
+/// What the registry's backbone is — and therefore which request types the
+/// serving engine routes to it: causal decoders serve multiple-choice
+/// scoring and streaming generation, classification encoders serve
+/// [`cls_logits`](crate::model::PlannedModel::cls_logits) requests.
+/// Wrong-kind requests get a typed `Reject::WrongModelKind` at admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Causal LM (`n_classes == 0`): score / generate.
+    Decoder,
+    /// Classification encoder (`n_classes > 0`): cls.
+    Encoder,
+}
+
+impl ModelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Decoder => "decoder",
+            ModelKind::Encoder => "encoder",
+        }
+    }
+}
+
 /// Which weight view served a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ServePath {
@@ -140,6 +162,17 @@ impl AdapterRegistry {
 
     pub fn model_cfg(&self) -> &ModelCfg {
         &self.cfg
+    }
+
+    /// The backbone's kind, derived from the config: encoder sizes carry a
+    /// classifier head (`n_classes > 0`), decoders do not. The scheduler
+    /// routes request types by this — see [`ModelKind`].
+    pub fn kind(&self) -> ModelKind {
+        if self.cfg.n_classes > 0 {
+            ModelKind::Encoder
+        } else {
+            ModelKind::Decoder
+        }
     }
 
     pub fn backbone(&self) -> Arc<ValueStore> {
@@ -425,6 +458,16 @@ mod tests {
         let sel = select_topk(&wt, 1);
         let vals: Vec<f32> = (0..64).map(|_| rng.normal() * 0.1).collect();
         vec![("l0.wq".to_string(), DeltaStore::from_f32(sel, &vals))]
+    }
+
+    #[test]
+    fn kind_follows_n_classes() {
+        assert_eq!(nano_registry(RegistryCfg::default()).kind(), ModelKind::Decoder);
+        let enc = presets::model("enc-micro").unwrap();
+        let backbone = init_params(&enc, &mut Rng::new(1));
+        let reg = AdapterRegistry::new(enc, backbone, RegistryCfg::default());
+        assert_eq!(reg.kind(), ModelKind::Encoder);
+        assert_eq!(reg.kind().name(), "encoder");
     }
 
     #[test]

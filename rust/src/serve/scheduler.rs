@@ -1,17 +1,25 @@
 //! Request scheduler: bounded admission queue → continuous micro-batching →
 //! worker pool → per-request responses; plus slot-based streaming decode.
 //!
-//! Two request classes share the bounded queue and the typed-rejection
-//! surface. Multiple-choice **scoring** ([`Request`]) coalesces per adapter
-//! in the [`MicroBatcher`] and runs one forward per batch on the worker
-//! pool. Streaming **generation** ([`GenerateRequest`]) is admitted to a
+//! Three request classes share the bounded queue and the typed-rejection
+//! surface, routed by the registry's [`ModelKind`]. On decoder backbones,
+//! multiple-choice **scoring** ([`Request`]) coalesces per adapter in the
+//! [`MicroBatcher`] and runs one forward per batch on the worker pool,
+//! while streaming **generation** ([`GenerateRequest`]) is admitted to a
 //! FIFO and served by a dedicated decode thread owning `max_slots` slots:
 //! each slot holds one sequence's KV cache ([`DecodeState`]), every
 //! iteration advances all active slots one token (the decode micro-batch),
 //! tokens stream back the moment they are produced, and a finished
-//! sequence frees its slot mid-flight for the next queued request. An
+//! sequence frees its slot mid-flight for the next queued request. On
+//! encoder backbones, **classification** ([`ClsRequest`]) rides the same
+//! batcher and dispatches through `PlannedModel::cls_logits` (merged and
+//! zero-copy bypass views alike), with requests padded to `cfg.seq` at
+//! batch assembly exactly like the offline encoder eval. Wrong-kind
+//! requests get a typed [`Reject::WrongModelKind`] at admission. An
 //! optional per-adapter admission quota ([`ServeCfg::adapter_quota`])
-//! keeps one hot tenant from consuming the whole queue.
+//! keeps one hot tenant from consuming the whole queue; it counts queued
+//! work AND generations holding (or awaiting) a decode slot, so a tenant
+//! cannot occupy every slot and still fill its queue share.
 //!
 //! `Server::start` spawns `workers` OS threads (sized like
 //! `coordinator::pool::Pool::default_size`). Each worker loops: pop a ready
@@ -30,9 +38,9 @@
 use super::batcher::MicroBatcher;
 use super::generate::{FinishReason, GenEvent, GenResponse, GenTicket, GenerateRequest};
 use super::metrics::{MetricsReport, ServeMetrics};
-use super::registry::{AdapterRegistry, ModelRef, ServePath};
+use super::registry::{AdapterRegistry, ModelKind, ModelRef, ServePath};
 use crate::config::ModelCfg;
-use crate::data::{eval_batch, Example};
+use crate::data::{cls_batch, eval_batch, Example};
 use crate::model::{sample_token, DecodeState, PlannedModel, SampleCfg};
 use crate::runtime::manifest::ArtifactMeta;
 use crate::runtime::{state::run_once, Engine, Value};
@@ -40,7 +48,7 @@ use crate::tensor::Tensor;
 use crate::util::nan_safe_argmax;
 use crate::util::rng::Rng;
 use anyhow::Result;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
@@ -62,6 +70,41 @@ pub struct Response {
     pub pick: usize,
     /// Logit of each option, in request order.
     pub option_logits: Vec<f32>,
+    /// Which weight view served it (merged backbone vs sparse bypass).
+    pub path: super::registry::ServePath,
+    /// Coalesced batch size this request rode in.
+    pub batch_size: usize,
+    /// Submit → response.
+    pub latency: Duration,
+}
+
+/// One encoder classification request: class logits for `tokens` (e.g. a
+/// `BOS s1 SEP s2` sentence pair from `data::tasks`) under the named
+/// adapter. Tokens are padded to `cfg.seq` at batch assembly (the pad mask
+/// is derived — 1 over `tokens`, 0 after — via `data::cls_batch`, the same
+/// layout the offline encoder eval uses, so serving logits match
+/// `eval_encoder` exactly).
+#[derive(Debug, Clone)]
+pub struct ClsRequest {
+    pub adapter: String,
+    pub tokens: Vec<i32>,
+}
+
+impl ClsRequest {
+    /// Build from a pre-tokenized task example (`data::tasks` generators).
+    pub fn from_example(adapter: impl Into<String>, ex: &Example) -> ClsRequest {
+        ClsRequest { adapter: adapter.into(), tokens: ex.prompt.clone() }
+    }
+}
+
+/// A completed classification request.
+#[derive(Debug, Clone)]
+pub struct ClsResponse {
+    /// Predicted class: NaN-safe argmax over `class_logits` (all-NaN rows
+    /// fall back to class 0 — the same rule as the offline encoder eval).
+    pub class: usize,
+    /// Logit per class, `[n_classes]`.
+    pub class_logits: Vec<f32>,
     /// Which weight view served it (merged backbone vs sparse bypass).
     pub path: super::registry::ServePath,
     /// Coalesced batch size this request rode in.
@@ -92,6 +135,10 @@ pub enum Reject {
     /// The request's sampling policy is malformed (e.g. negative or
     /// non-finite temperature).
     InvalidSampling(String),
+    /// The request type does not match the served backbone kind (a cls
+    /// request on a decoder, or score/generate on an encoder) — a typed
+    /// rejection instead of a panic or silently-garbage logits.
+    WrongModelKind { request: &'static str, model: &'static str },
     ShuttingDown,
     /// Backend failure while executing the batch (e.g. PJRT error).
     Internal(String),
@@ -113,6 +160,7 @@ impl Reject {
             Reject::ContextOverflow { .. } => "context_overflow",
             Reject::ZeroMaxTokens => "zero_max_tokens",
             Reject::InvalidSampling(_) => "invalid_sampling",
+            Reject::WrongModelKind { .. } => "wrong_model_kind",
             Reject::ShuttingDown => "shutting_down",
             Reject::Internal(_) => "internal",
         }
@@ -148,6 +196,9 @@ impl fmt::Display for Reject {
             }
             Reject::ZeroMaxTokens => write!(f, "generation request asks for zero new tokens"),
             Reject::InvalidSampling(reason) => write!(f, "invalid sampling policy: {reason}"),
+            Reject::WrongModelKind { request, model } => {
+                write!(f, "{request} request is not servable on a {model} model")
+            }
             Reject::ShuttingDown => write!(f, "server is shutting down"),
             Reject::Internal(e) => write!(f, "internal serving error: {e}"),
         }
@@ -172,10 +223,11 @@ pub struct ServeCfg {
     /// decode thread advances every active slot one token per micro-batch
     /// iteration, and a finished sequence frees its slot mid-flight.
     pub max_slots: usize,
-    /// Per-adapter admission quota across the scoring queue and the
-    /// generation queue (0 = unlimited). With a quota, one hot tenant can
-    /// hold at most this many pending requests — the rest of the bounded
-    /// queue stays available to other adapters ([`Reject::QuotaExceeded`]).
+    /// Per-adapter admission quota across the batcher (score + cls), the
+    /// generation queue, AND generations in flight on decode slots
+    /// (0 = unlimited). With a quota, one hot tenant can hold at most this
+    /// much pending-or-executing work — the rest of the bounded queue
+    /// stays available to other adapters ([`Reject::QuotaExceeded`]).
     pub adapter_quota: usize,
     /// Row-partition threads for the host batched forward (the planned
     /// `matmul_nt`; results are bit-identical to serial at any count).
@@ -219,6 +271,20 @@ struct Queued {
     tx: mpsc::Sender<Result<Response, Reject>>,
 }
 
+struct QueuedCls {
+    req: ClsRequest,
+    enqueued: Instant,
+    tx: mpsc::Sender<Result<ClsResponse, Reject>>,
+}
+
+/// One batcher item. Admission routes by the registry's [`ModelKind`], so
+/// a server only ever enqueues one variant — every popped batch is
+/// homogeneous (the worker still splits defensively).
+enum Work {
+    Score(Queued),
+    Cls(QueuedCls),
+}
+
 struct QueuedGen {
     req: GenerateRequest,
     enqueued: Instant,
@@ -226,10 +292,15 @@ struct QueuedGen {
 }
 
 struct State {
-    batcher: MicroBatcher<Queued>,
+    batcher: MicroBatcher<Work>,
     /// FIFO of admitted generations waiting for a decode slot. Counted
     /// against `max_queue` together with the batcher's depth.
     gen_queue: VecDeque<QueuedGen>,
+    /// Generations per adapter that left `gen_queue` but have not finished:
+    /// holding a decode slot or being prefilled into one. Counted by the
+    /// per-adapter admission quota — a tenant occupying every slot must
+    /// not be able to queue `quota` more on top and starve others.
+    decoding: BTreeMap<String, usize>,
     stopping: bool,
 }
 
@@ -262,6 +333,21 @@ impl Ticket {
     }
 }
 
+/// Handle for one pending classification request.
+pub struct ClsTicket {
+    rx: mpsc::Receiver<Result<ClsResponse, Reject>>,
+}
+
+impl ClsTicket {
+    pub fn wait(self) -> Result<ClsResponse, Reject> {
+        self.rx.recv().unwrap_or(Err(Reject::ShuttingDown))
+    }
+
+    pub fn wait_timeout(&self, dur: Duration) -> Option<Result<ClsResponse, Reject>> {
+        self.rx.recv_timeout(dur).ok()
+    }
+}
+
 /// A running multi-adapter serving engine.
 pub struct Server {
     shared: Arc<Shared>,
@@ -269,13 +355,11 @@ pub struct Server {
 }
 
 impl Server {
-    /// Spawn the worker pool over a registry. Decoder models only (encoder
-    /// serving is a ROADMAP item).
+    /// Spawn the worker pool over a registry. The registry's [`ModelKind`]
+    /// routes request types: decoders serve scoring + generation, encoders
+    /// serve classification — wrong-kind submissions get a typed
+    /// [`Reject::WrongModelKind`].
     pub fn start(registry: AdapterRegistry, cfg: ServeCfg, backend: Backend) -> Result<Server> {
-        anyhow::ensure!(
-            registry.model_cfg().n_classes == 0,
-            "serve: encoder sizes are not supported yet"
-        );
         anyhow::ensure!(cfg.workers >= 1, "serve: need at least one worker");
         anyhow::ensure!(cfg.max_queue >= 1, "serve: need max_queue >= 1");
         anyhow::ensure!(cfg.max_slots >= 1, "serve: need max_slots >= 1");
@@ -291,6 +375,7 @@ impl Server {
             state: Mutex::new(State {
                 batcher: MicroBatcher::new(cfg.max_batch.max(1), cfg.max_delay),
                 gen_queue: VecDeque::new(),
+                decoding: BTreeMap::new(),
                 stopping: false,
             }),
             cfg,
@@ -310,14 +395,17 @@ impl Server {
             })
             .collect();
         // one decode thread owns all generation slots (the slot loop is the
-        // micro-batch: every active slot advances one token per iteration)
-        let sh = shared.clone();
-        workers.push(
-            thread::Builder::new()
-                .name("serve-decode".into())
-                .spawn(move || decode_loop(&sh))
-                .expect("spawn serve decode thread"),
-        );
+        // micro-batch: every active slot advances one token per iteration);
+        // encoders never generate, so they skip the thread entirely
+        if shared.registry.kind() == ModelKind::Decoder {
+            let sh = shared.clone();
+            workers.push(
+                thread::Builder::new()
+                    .name("serve-decode".into())
+                    .spawn(move || decode_loop(&sh))
+                    .expect("spawn serve decode thread"),
+            );
+        }
         Ok(Server { shared, workers })
     }
 
@@ -336,21 +424,38 @@ impl Server {
         let mcfg = sh.registry.model_cfg();
         let res = Self::validate(sh, &req, mcfg).and_then(|()| {
             let mut st = sh.state.lock().unwrap();
-            if st.stopping {
-                return Err(Reject::ShuttingDown);
-            }
-            let depth = st.batcher.depth() + st.gen_queue.len();
-            if depth >= sh.cfg.max_queue {
-                return Err(Reject::QueueFull { depth, capacity: sh.cfg.max_queue });
-            }
-            Self::check_quota(sh, &st, &req.adapter)?;
+            Self::gate(sh, &st, &req.adapter)?;
             let (tx, rx) = mpsc::channel();
             let adapter = req.adapter.clone();
             let now = Instant::now();
-            st.batcher.push(&adapter, now, Queued { req, enqueued: now, tx });
-            sh.metrics.observe_queue_depth(depth + 1);
+            st.batcher.push(&adapter, now, Work::Score(Queued { req, enqueued: now, tx }));
+            sh.metrics.observe_queue_depth(st.batcher.depth() + st.gen_queue.len());
             sh.cv.notify_one();
             Ok(Ticket { rx })
+        });
+        if let Err(r) = &res {
+            sh.metrics.record_reject(r.kind());
+        }
+        res
+    }
+
+    /// Admit one classification request (encoder backbones). Fails fast
+    /// with a typed [`Reject`] like [`Server::submit`]; cls requests share
+    /// the bounded queue, per-adapter quota, and micro-batch coalescing
+    /// with every other request class.
+    pub fn submit_cls(&self, req: ClsRequest) -> Result<ClsTicket, Reject> {
+        let sh = &self.shared;
+        let mcfg = sh.registry.model_cfg();
+        let res = Self::validate_cls(sh, &req, mcfg).and_then(|()| {
+            let mut st = sh.state.lock().unwrap();
+            Self::gate(sh, &st, &req.adapter)?;
+            let (tx, rx) = mpsc::channel();
+            let adapter = req.adapter.clone();
+            let now = Instant::now();
+            st.batcher.push(&adapter, now, Work::Cls(QueuedCls { req, enqueued: now, tx }));
+            sh.metrics.observe_queue_depth(st.batcher.depth() + st.gen_queue.len());
+            sh.cv.notify_one();
+            Ok(ClsTicket { rx })
         });
         if let Err(r) = &res {
             sh.metrics.record_reject(r.kind());
@@ -368,17 +473,10 @@ impl Server {
         let mcfg = sh.registry.model_cfg();
         let res = Self::validate_generate(sh, &req, mcfg).and_then(|()| {
             let mut st = sh.state.lock().unwrap();
-            if st.stopping {
-                return Err(Reject::ShuttingDown);
-            }
-            let depth = st.batcher.depth() + st.gen_queue.len();
-            if depth >= sh.cfg.max_queue {
-                return Err(Reject::QueueFull { depth, capacity: sh.cfg.max_queue });
-            }
-            Self::check_quota(sh, &st, &req.adapter)?;
+            Self::gate(sh, &st, &req.adapter)?;
             let (tx, rx) = mpsc::channel();
             st.gen_queue.push_back(QueuedGen { req, enqueued: Instant::now(), tx });
-            sh.metrics.observe_queue_depth(depth + 1);
+            sh.metrics.observe_queue_depth(st.batcher.depth() + st.gen_queue.len());
             sh.gen_cv.notify_one();
             Ok(GenTicket { rx })
         });
@@ -388,15 +486,33 @@ impl Server {
         res
     }
 
-    /// Per-adapter admission quota over everything pending (score batches +
-    /// queued generations). Disabled at `adapter_quota == 0`.
+    /// Shared admission gate, identical for every request class: reject
+    /// while stopping, enforce the bounded queue, then the per-adapter
+    /// quota. Called under the state lock by each `submit_*`.
+    fn gate(sh: &Shared, st: &State, adapter: &str) -> Result<(), Reject> {
+        if st.stopping {
+            return Err(Reject::ShuttingDown);
+        }
+        let depth = st.batcher.depth() + st.gen_queue.len();
+        if depth >= sh.cfg.max_queue {
+            return Err(Reject::QueueFull { depth, capacity: sh.cfg.max_queue });
+        }
+        Self::check_quota(sh, st, adapter)
+    }
+
+    /// Per-adapter admission quota over everything pending: batcher depth
+    /// (score + cls), queued generations, AND generations in flight on a
+    /// decode slot (`State::decoding`). Counting only the queues would let
+    /// a hot tenant holding all `max_slots` slots still queue `quota` more
+    /// and starve everyone else. Disabled at `adapter_quota == 0`.
     fn check_quota(sh: &Shared, st: &State, adapter: &str) -> Result<(), Reject> {
         let quota = sh.cfg.adapter_quota;
         if quota == 0 {
             return Ok(());
         }
         let pending = st.batcher.adapter_depth(adapter)
-            + st.gen_queue.iter().filter(|g| g.req.adapter == adapter).count();
+            + st.gen_queue.iter().filter(|g| g.req.adapter == adapter).count()
+            + st.decoding.get(adapter).copied().unwrap_or(0);
         if pending >= quota {
             return Err(Reject::QuotaExceeded {
                 adapter: adapter.to_string(),
@@ -407,11 +523,42 @@ impl Server {
         Ok(())
     }
 
+    /// Typed wrong-kind rejection: `request` names the submitted class.
+    fn check_kind(sh: &Shared, request: &'static str, want: ModelKind) -> Result<(), Reject> {
+        let kind = sh.registry.kind();
+        if kind != want {
+            return Err(Reject::WrongModelKind { request, model: kind.name() });
+        }
+        Ok(())
+    }
+
+    fn validate_cls(sh: &Shared, req: &ClsRequest, mcfg: &ModelCfg) -> Result<(), Reject> {
+        Self::check_kind(sh, "cls", ModelKind::Encoder)?;
+        if !sh.registry.contains(&req.adapter) {
+            return Err(Reject::UnknownAdapter(req.adapter.clone()));
+        }
+        if req.tokens.is_empty() {
+            return Err(Reject::EmptyPrompt);
+        }
+        if req.tokens.len() > mcfg.seq {
+            return Err(Reject::PromptTooLong { len: req.tokens.len(), max: mcfg.seq });
+        }
+        // out-of-range tokens would index out of the embedding table inside
+        // a worker — reject at admission, never panic a worker
+        for &t in &req.tokens {
+            if t < 0 || t as usize >= mcfg.vocab {
+                return Err(Reject::InvalidPromptToken { token: t, vocab: mcfg.vocab });
+            }
+        }
+        Ok(())
+    }
+
     fn validate_generate(
         sh: &Shared,
         req: &GenerateRequest,
         mcfg: &ModelCfg,
     ) -> Result<(), Reject> {
+        Self::check_kind(sh, "generate", ModelKind::Decoder)?;
         if !sh.registry.contains(&req.adapter) {
             return Err(Reject::UnknownAdapter(req.adapter.clone()));
         }
@@ -445,6 +592,7 @@ impl Server {
     }
 
     fn validate(sh: &Shared, req: &Request, mcfg: &ModelCfg) -> Result<(), Reject> {
+        Self::check_kind(sh, "score", ModelKind::Decoder)?;
         if !sh.registry.contains(&req.adapter) {
             return Err(Reject::UnknownAdapter(req.adapter.clone()));
         }
@@ -483,6 +631,52 @@ impl Server {
                 Err(r) => Err(r),
             })
             .collect()
+    }
+
+    /// Submit a whole classification stream and wait for every response,
+    /// in order (the shape the GLUE dev-set driver and the parity tests
+    /// need: response `i` answers request `i`).
+    pub fn serve_all_cls(&self, reqs: Vec<ClsRequest>) -> Vec<Result<ClsResponse, Reject>> {
+        let tickets: Vec<Result<ClsTicket, Reject>> =
+            reqs.into_iter().map(|r| self.submit_cls(r)).collect();
+        tickets
+            .into_iter()
+            .map(|t| match t {
+                Ok(ticket) => ticket.wait(),
+                Err(r) => Err(r),
+            })
+            .collect()
+    }
+
+    /// Open-loop classification fan-out, mirroring
+    /// [`Server::drive_clients`]: split `requests` across `clients`
+    /// threads, each bursting its share. Returns `(served, rejected)`.
+    pub fn drive_cls_clients(&self, requests: Vec<ClsRequest>, clients: usize) -> (usize, usize) {
+        let per = requests.len().div_ceil(clients.max(1)).max(1);
+        let chunks: Vec<Vec<ClsRequest>> = requests.chunks(per).map(|c| c.to_vec()).collect();
+        thread::scope(|s| {
+            let handles: Vec<_> = chunks
+                .into_iter()
+                .map(|chunk| {
+                    s.spawn(move || {
+                        let tickets: Vec<_> =
+                            chunk.into_iter().map(|r| self.submit_cls(r)).collect();
+                        let (mut ok, mut rej) = (0usize, 0usize);
+                        for t in tickets {
+                            match t.and_then(|t| t.wait()) {
+                                Ok(_) => ok += 1,
+                                Err(_) => rej += 1,
+                            }
+                        }
+                        (ok, rej)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("serve cls client thread"))
+                .fold((0, 0), |(a, b), (o, r)| (a + o, b + r))
+        })
     }
 
     /// Open-loop client fan-out: split `requests` across `clients` threads,
@@ -672,7 +866,14 @@ fn decode_loop(sh: &Shared) {
             loop {
                 while slots.len() + admitted.len() < sh.cfg.max_slots {
                     match st.gen_queue.pop_front() {
-                        Some(g) => admitted.push(g),
+                        Some(g) => {
+                            // count the generation as in-flight the instant
+                            // it leaves the queue (still under the lock):
+                            // the quota must never see a gap between queue
+                            // and slot that a hot tenant could slip through
+                            *st.decoding.entry(g.req.adapter.clone()).or_insert(0) += 1;
+                            admitted.push(g);
+                        }
                         None => break,
                     }
                 }
@@ -689,8 +890,11 @@ fn decode_loop(sh: &Shared) {
         // prefill newly admitted requests into slots (outside the lock; the
         // first token is produced here, so TTFT covers queue wait + prefill)
         for g in admitted {
-            if let Some(slot) = prefill_slot(sh, &mcfg, g) {
-                slots.push(slot);
+            let adapter = g.req.adapter.clone();
+            match prefill_slot(sh, &mcfg, g) {
+                Some(slot) => slots.push(slot),
+                // finished (or rejected) at prefill: release its quota share
+                None => release_decoding(sh, &adapter),
             }
         }
         if slots.is_empty() {
@@ -727,9 +931,22 @@ fn decode_loop(sh: &Shared) {
             match status {
                 SlotStatus::Active => i += 1,
                 SlotStatus::Finished => {
-                    slots.swap_remove(i); // freed mid-flight
+                    let s = slots.swap_remove(i); // freed mid-flight
+                    release_decoding(sh, &s.adapter);
                 }
             }
+        }
+    }
+}
+
+/// Decrement the admission-quota accounting for one generation that left
+/// `State::decoding` (finished, errored, rejected at prefill, abandoned).
+fn release_decoding(sh: &Shared, adapter: &str) {
+    let mut st = sh.state.lock().unwrap();
+    if let Some(n) = st.decoding.get_mut(adapter) {
+        *n -= 1;
+        if *n == 0 {
+            st.decoding.remove(adapter);
         }
     }
 }
@@ -861,7 +1078,82 @@ pub fn host_prefill(
     Ok(logits)
 }
 
-fn run_batch(sh: &Shared, adapter: &str, items: Vec<Queued>) {
+/// Execute one popped batch. Admission routes request types by the
+/// registry's [`ModelKind`], so a popped batch is homogeneous; the split
+/// here is defensive — a mixed batch would simply run as two forwards.
+fn run_batch(sh: &Shared, adapter: &str, items: Vec<Work>) {
+    let mut scores: Vec<Queued> = Vec::new();
+    let mut cls: Vec<QueuedCls> = Vec::new();
+    for w in items {
+        match w {
+            Work::Score(q) => scores.push(q),
+            Work::Cls(q) => cls.push(q),
+        }
+    }
+    if !scores.is_empty() {
+        run_batch_score(sh, adapter, scores);
+    }
+    if !cls.is_empty() {
+        run_batch_cls(sh, adapter, cls);
+    }
+}
+
+/// One classification micro-batch: pad every request to `cfg.seq` (the
+/// same `data::cls_batch` assembly the offline encoder eval uses — that
+/// shared layout is what makes serving-vs-`eval_encoder` parity exact),
+/// run `cls_logits` through the resolved weight view, and answer each
+/// request with its class-logit row + NaN-safe prediction.
+fn run_batch_cls(sh: &Shared, adapter: &str, items: Vec<QueuedCls>) {
+    let n = items.len();
+    sh.metrics.record_cls_batch(n);
+    let Some(model) = sh.registry.resolve_batch(adapter, n as u64) else {
+        // evicted between admission and execution
+        for it in items {
+            sh.metrics.record_reject("unknown_adapter");
+            let _ = it.tx.send(Err(Reject::UnknownAdapter(adapter.to_string())));
+        }
+        return;
+    };
+    let path = model.path();
+    let mcfg = sh.registry.model_cfg();
+    let examples: Vec<Example> = items
+        .iter()
+        .map(|it| Example {
+            prompt: it.req.tokens.clone(),
+            answer_tok: 0,
+            label: 0,
+            options: vec![],
+            score: 0.0,
+        })
+        .collect();
+    let cb = cls_batch(&examples, mcfg.seq);
+    match cls_batch_predict(sh, mcfg, &model, &cb.tokens, &cb.pad_mask, n) {
+        Ok((logits, picks)) => {
+            for (i, it) in items.into_iter().enumerate() {
+                let class_logits =
+                    logits.data[i * mcfg.n_classes..(i + 1) * mcfg.n_classes].to_vec();
+                let latency = it.enqueued.elapsed();
+                sh.metrics.record_cls_served(adapter, path, latency.as_secs_f64());
+                let _ = it.tx.send(Ok(ClsResponse {
+                    class: picks[i],
+                    class_logits,
+                    path,
+                    batch_size: n,
+                    latency,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for it in items {
+                sh.metrics.record_reject("internal");
+                let _ = it.tx.send(Err(Reject::Internal(msg.clone())));
+            }
+        }
+    }
+}
+
+fn run_batch_score(sh: &Shared, adapter: &str, items: Vec<Queued>) {
     let n = items.len();
     sh.metrics.record_batch(n);
     let Some(model) = sh.registry.resolve_batch(adapter, n as u64) else {
@@ -963,6 +1255,94 @@ pub fn host_logits_threaded(
     threads: usize,
 ) -> Result<Tensor> {
     model.planned(mcfg, threads)?.lm_logits_at(tokens, pad_mask, last_pos, n)
+}
+
+/// Class logits `[n, n_classes]` through the zero-copy plan: merged and
+/// bypass views share the path, with bypass deltas pre-bound per
+/// projection. Public for the serving bench and the cls parity tests.
+/// Serial, like [`host_logits`] — the worker path threads the same plan
+/// via `ServeCfg::threads` (bit-identical results at any count).
+pub fn host_cls_logits(
+    mcfg: &ModelCfg,
+    model: &ModelRef,
+    tokens: &[i32],
+    pad_mask: &[f32],
+    n: usize,
+) -> Result<Tensor> {
+    model.planned(mcfg, 1)?.cls_logits(tokens, pad_mask, n)
+}
+
+/// Class logits + NaN-safe predictions for a cls batch through the
+/// configured backend. The HLO path serves merged views through the
+/// encoder eval artifact; bypass views fall back to the host forward
+/// (there is no scatter-input cls artifact yet).
+fn cls_batch_predict(
+    sh: &Shared,
+    mcfg: &ModelCfg,
+    model: &ModelRef,
+    tokens: &[i32],
+    pad_mask: &[f32],
+    n: usize,
+) -> Result<(Tensor, Vec<usize>)> {
+    let logits = match (&sh.backend, model) {
+        (Backend::Host, _) | (Backend::Hlo { .. }, ModelRef::Bypass { .. }) => {
+            return model.planned(mcfg, sh.cfg.threads)?.cls_predict(tokens, pad_mask, n);
+        }
+        (Backend::Hlo { eval, .. }, ModelRef::Merged(_)) => {
+            hlo_cls_logits(mcfg, model, eval, tokens, pad_mask, n)?
+        }
+    };
+    // same prediction rule as PlannedModel::cls_predict / eval_encoder
+    let picks = (0..n)
+        .map(|i| {
+            nan_safe_argmax(
+                logits.data[i * mcfg.n_classes..(i + 1) * mcfg.n_classes].iter().copied(),
+            )
+            .unwrap_or(0)
+        })
+        .collect();
+    Ok((logits, picks))
+}
+
+/// Encoder eval artifact on PJRT (tokens + pad_mask inputs, class-logit
+/// output — the same artifact `eval::eval_encoder` drives), padding the
+/// batch to the artifact's fixed size and reusing the per-worker input
+/// store cache.
+fn hlo_cls_logits(
+    mcfg: &ModelCfg,
+    model: &ModelRef,
+    eval: &ArtifactMeta,
+    tokens: &[i32],
+    pad_mask: &[f32],
+    n: usize,
+) -> Result<Tensor> {
+    let b = eval.model.batch;
+    anyhow::ensure!(n <= b, "batch {n} exceeds artifact batch {b}");
+    HLO_STORE_CACHE.with(|cache| {
+        let mut slot = cache.borrow_mut();
+        let key = model_key(model);
+        if !matches!(&*slot, Some(c) if c.key == key) {
+            *slot = Some(HloStoreCache {
+                key,
+                _pin: model_pin(model),
+                store: build_hlo_store(mcfg, model, eval),
+            });
+        }
+        let store = &mut slot.as_mut().expect("just filled").store;
+        let pad_i32 = {
+            let mut out = tokens.to_vec();
+            out.resize(b * mcfg.seq, 0);
+            out
+        };
+        let mut pm = pad_mask.to_vec();
+        pm.resize(b * mcfg.seq, 0.0);
+        store.insert("tokens", Value::I32 { shape: vec![b, mcfg.seq], data: pad_i32 });
+        store.insert_f32("pad_mask", &[b, mcfg.seq], pm);
+        let engine = Engine::shared();
+        let out = run_once(&engine, eval, store)?;
+        let logits = out.get(&eval.outputs[0].name)?.as_f32()?;
+        Ok(Tensor::from_vec(&[n, mcfg.n_classes], logits[..n * mcfg.n_classes].to_vec()))
+    })
 }
 
 thread_local! {
@@ -1132,6 +1512,18 @@ mod tests {
         Server::start(reg, cfg, Backend::Host).unwrap()
     }
 
+    fn enc_server(rcfg: RegistryCfg, cfg: ServeCfg) -> Server {
+        let mcfg = presets::model("enc-micro").unwrap();
+        let mut backbone = init_params(&mcfg, &mut Rng::new(1));
+        // the zero-init head would make every prediction class 0
+        crate::bench::serve_bench::randomize_zero_head(&mcfg, &mut backbone, 77).unwrap();
+        let reg = AdapterRegistry::new(mcfg, backbone, rcfg);
+        for (name, seed) in [("enc-a", 10u64), ("enc-b", 20)] {
+            reg.register(name, test_adapter(&reg, seed)).unwrap();
+        }
+        Server::start(reg, cfg, Backend::Host).unwrap()
+    }
+
     fn test_adapter(reg: &AdapterRegistry, seed: u64) -> Vec<(String, DeltaStore)> {
         let mut rng = Rng::new(seed);
         let mcfg = reg.model_cfg().clone();
@@ -1223,6 +1615,63 @@ mod tests {
         // flushed by deadline, not stuck until some full batch
         assert!(t0.elapsed() < Duration::from_secs(5));
         srv.shutdown();
+    }
+
+    #[test]
+    fn cls_serves_on_encoder_and_wrong_kinds_are_typed() {
+        let srv = enc_server(RegistryCfg::default(), ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        });
+        let mcfg = srv.registry().model_cfg().clone();
+        let tokens: Vec<i32> = (0..10).map(|i| 4 + i % 40).collect();
+        let resp = srv
+            .submit_cls(ClsRequest { adapter: "enc-a".into(), tokens })
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(resp.class < mcfg.n_classes);
+        assert_eq!(resp.class_logits.len(), mcfg.n_classes);
+        assert!(resp.class_logits.iter().all(|v| v.is_finite()));
+        // score and generate are wrong-kind on an encoder
+        let r = srv.submit(req("enc-a", 0)).map(|_| ());
+        assert_eq!(r, Err(Reject::WrongModelKind { request: "score", model: "encoder" }));
+        let r = srv.submit_generate(gen_req("enc-a")).map(|_| ());
+        assert_eq!(r, Err(Reject::WrongModelKind { request: "generate", model: "encoder" }));
+        let m = srv.shutdown();
+        assert_eq!(m.cls_served, 1);
+        assert_eq!(m.served, 1);
+        assert_eq!(m.rejected.get("wrong_model_kind"), Some(&2));
+    }
+
+    #[test]
+    fn cls_rejections_are_typed() {
+        // cls on a decoder is wrong-kind
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        });
+        let r = srv
+            .submit_cls(ClsRequest { adapter: "task-a".into(), tokens: vec![4, 5] })
+            .map(|_| ());
+        assert_eq!(r, Err(Reject::WrongModelKind { request: "cls", model: "decoder" }));
+        srv.shutdown();
+        // shape/vocab validation on an encoder
+        let srv = enc_server(RegistryCfg::default(), ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        });
+        let cls = |adapter: &str, tokens: Vec<i32>| ClsRequest { adapter: adapter.into(), tokens };
+        let r = srv.submit_cls(cls("nope", vec![4])).map(|_| ());
+        assert_eq!(r, Err(Reject::UnknownAdapter("nope".into())));
+        let r = srv.submit_cls(cls("enc-a", vec![])).map(|_| ());
+        assert_eq!(r, Err(Reject::EmptyPrompt));
+        let r = srv.submit_cls(cls("enc-a", vec![4; 999])).map(|_| ());
+        assert_eq!(r, Err(Reject::PromptTooLong { len: 999, max: 48 }));
+        let r = srv.submit_cls(cls("enc-a", vec![4, -2])).map(|_| ());
+        assert_eq!(r, Err(Reject::InvalidPromptToken { token: -2, vocab: 512 }));
+        let m = srv.shutdown();
+        assert_eq!(m.total_rejected(), 4);
     }
 
     fn gen_req(adapter: &str) -> GenerateRequest {
@@ -1375,8 +1824,45 @@ mod tests {
         // generations count against the same per-adapter quota
         let r = srv.submit_generate(gen_req("task-a")).map(|_| ());
         assert!(matches!(r, Err(Reject::QuotaExceeded { .. })));
+        // in-flight decode slots count too: simulate task-b holding two
+        // slots (exactly the bookkeeping the decode thread maintains when a
+        // generation leaves the queue for a slot) — its next submits must
+        // hit the quota even though its queue share alone is under it
+        srv.shared.state.lock().unwrap().decoding.insert("task-b".into(), 2);
+        match srv.submit(req("task-b", 9)) {
+            // 1 queued (t3) + 2 in flight = 3 pending
+            Err(Reject::QuotaExceeded { pending: 3, quota: 2, .. }) => {}
+            other => panic!("expected QuotaExceeded, got {:?}", other.map(|_| ())),
+        }
+        let r = srv.submit_generate(gen_req("task-b")).map(|_| ());
+        assert!(matches!(r, Err(Reject::QuotaExceeded { pending: 3, .. })));
+        srv.shared.state.lock().unwrap().decoding.clear();
         let m = srv.shutdown();
         assert!(t1.wait().is_ok() && t2.wait().is_ok() && t3.wait().is_ok());
-        assert_eq!(m.rejected.get("quota_exceeded"), Some(&2));
+        assert_eq!(m.rejected.get("quota_exceeded"), Some(&4));
+    }
+
+    /// The decode thread's in-flight accounting must drain back to zero
+    /// once generations complete — a leak would permanently eat into the
+    /// adapter's admission quota.
+    #[test]
+    fn decode_slot_accounting_releases_on_completion() {
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            workers: 1,
+            adapter_quota: 2,
+            ..ServeCfg::default()
+        });
+        for _ in 0..3 {
+            srv.submit_generate(gen_req("task-a")).unwrap().wait().unwrap();
+        }
+        // Done streams before the decode loop's release runs; poll briefly
+        let t0 = Instant::now();
+        while !srv.shared.state.lock().unwrap().decoding.is_empty() {
+            assert!(t0.elapsed() < Duration::from_secs(5), "in-flight accounting leaked");
+            thread::sleep(Duration::from_millis(1));
+        }
+        // and the quota admits the adapter again
+        assert!(srv.submit_generate(gen_req("task-a")).is_ok());
+        srv.shutdown();
     }
 }

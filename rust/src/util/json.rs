@@ -174,6 +174,13 @@ fn indent(out: &mut String, depth: usize) {
 }
 
 fn fmt_num(n: f64) -> String {
+    // JSON has no NaN/Infinity literals (RFC 8259 §6): `{n}` would print
+    // `NaN`/`inf` and make the whole document unparseable (e.g. a metrics
+    // dump carrying an empty-percentile stat). Emit `null` instead — every
+    // standard parser accepts it where a number was expected.
+    if !n.is_finite() {
+        return "null".to_string();
+    }
     if n.fract() == 0.0 && n.abs() < 1e15 {
         format!("{}", n as i64)
     } else {
@@ -487,5 +494,24 @@ mod tests {
     fn integer_formatting() {
         assert_eq!(Json::Num(1024.0).dump(), "1024");
         assert_eq!(Json::Num(0.5).dump(), "0.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_dump_as_null_and_roundtrip() {
+        let mut o = Json::obj();
+        o.set("a", f64::NAN).set("b", f64::INFINITY).set("c", f64::NEG_INFINITY);
+        o.set("arr", Json::Arr(vec![Json::Num(f64::NAN), Json::Num(1.5)]));
+        for dumped in [o.dump(), o.dump_pretty()] {
+            // no non-finite literal may reach the document (keys here are
+            // chosen not to collide with the substrings being checked)
+            assert!(!dumped.contains("NaN") && !dumped.contains("inf"), "{dumped}");
+            let back = parse(&dumped).expect("non-finite dump must stay valid JSON");
+            assert_eq!(back.get("a"), Some(&Json::Null));
+            assert_eq!(back.get("b"), Some(&Json::Null));
+            assert_eq!(back.get("c"), Some(&Json::Null));
+            let arr = back.get("arr").unwrap().as_arr().unwrap();
+            assert_eq!(arr[0], Json::Null);
+            assert_eq!(arr[1].as_f64(), Some(1.5));
+        }
     }
 }

@@ -8,16 +8,21 @@
 //! streaming-decode parity (KV-cached greedy continuation vs full
 //! re-forward, merged AND bypass paths, token-for-token through the real
 //! scheduler) and mid-flight decode-slot reuse without cross-contamination.
+//! ISSUE-4 adds encoder classification serving: cls parity through the
+//! full scheduler (queue → batcher → worker) against the offline host
+//! encoder eval — merged and bypass, exact — plus mixed-adapter cls
+//! coalescing.
 
 use neuroada::bench::serve_bench::synth_adapter;
 use neuroada::config::presets;
 use neuroada::data::{example_stream, tasks, Split};
+use neuroada::eval::{eval_encoder_host, score};
 use neuroada::model::init::init_params;
 use neuroada::model::{greedy_full_reforward, merge_deltas, RefModel};
 use neuroada::serve::scheduler::host_logits;
 use neuroada::serve::{
-    AdapterRegistry, Backend, GenerateRequest, Reject, RegistryCfg, Request, ServeCfg, ServePath,
-    Server,
+    AdapterRegistry, Backend, ClsRequest, GenerateRequest, Reject, RegistryCfg, Request, ServeCfg,
+    ServePath, Server,
 };
 use neuroada::util::rng::Rng;
 use std::time::Duration;
@@ -328,4 +333,149 @@ fn mid_flight_slot_reuse_no_cross_contamination() {
     assert_eq!(metrics.gen_served, 3);
     assert_eq!(metrics.max_active_slots, 2, "both slots were occupied concurrently");
     assert_eq!(metrics.gen_tokens, 24 + 2 + 2);
+}
+
+/// Seeded encoder backbone: `init_params` zeroes the classifier head, so
+/// randomize it (seeded) — otherwise every class logit is exactly 0 and
+/// parity is vacuous.
+fn enc_backbone(seed: u64) -> (neuroada::config::ModelCfg, neuroada::runtime::ValueStore) {
+    let cfg = presets::model("enc-micro").unwrap();
+    let mut backbone = init_params(&cfg, &mut Rng::new(seed));
+    neuroada::bench::serve_bench::randomize_zero_head(&cfg, &mut backbone, seed ^ 0xC15).unwrap();
+    (cfg, backbone)
+}
+
+/// Acceptance (ISSUE-4): encoder classification through the FULL scheduler
+/// (queue → batcher → worker) reproduces the offline host encoder eval's
+/// task metric EXACTLY, on both the merged and the bypass weight view. The
+/// served batch assembly (`data::cls_batch`, padded to `cfg.seq`) and
+/// prediction rule (NaN-safe argmax) are shared with `eval_encoder_host`,
+/// so parity is bitwise, not to-tolerance.
+#[test]
+fn cls_serving_parity_merged_and_bypass_vs_eval_encoder() {
+    let (cfg, backbone) = enc_backbone(42);
+    let deltas = synth_adapter(&cfg, &backbone, 1, 321).unwrap();
+    let task = tasks::by_name("glue-sst2").unwrap();
+    let n = 24;
+    let seed = 9;
+    let examples = example_stream(&task, Split::Test, seed, cfg.vocab, cfg.seq, n);
+    // offline oracles, one per weight view
+    let mut merged_store = backbone.clone();
+    merge_deltas(&mut merged_store, &deltas).unwrap();
+    let oracle_merged = eval_encoder_host(&cfg, &merged_store, None, &task, n, seed, 1).unwrap();
+    let oracle_bypass =
+        eval_encoder_host(&cfg, &backbone, Some(&deltas), &task, n, seed, 1).unwrap();
+    for (rcfg, want_path, oracle) in [
+        (RegistryCfg { merged_capacity: 2, promote_after: 1 }, ServePath::Merged, oracle_merged),
+        (RegistryCfg { merged_capacity: 0, promote_after: 1 }, ServePath::Bypass, oracle_bypass),
+    ] {
+        let reg = AdapterRegistry::new(cfg.clone(), backbone.clone(), rcfg);
+        reg.register("enc-a", deltas.clone()).unwrap();
+        let srv = Server::start(
+            reg,
+            ServeCfg {
+                max_batch: 8,
+                max_queue: 64,
+                max_delay: Duration::from_millis(2),
+                workers: 2,
+                ..ServeCfg::default()
+            },
+            Backend::Host,
+        )
+        .unwrap();
+        if want_path == ServePath::Merged {
+            // promote up front: a batch racing an in-flight merge would
+            // (correctly) ride the bypass, and this test pins the path
+            srv.registry().merge_now("enc-a").unwrap();
+        }
+        let reqs: Vec<ClsRequest> =
+            examples.iter().map(|ex| ClsRequest::from_example("enc-a", ex)).collect();
+        let responses = srv.serve_all_cls(reqs);
+        let mut preds = Vec::with_capacity(n);
+        for r in responses {
+            let r = r.expect("every cls request served");
+            assert_eq!(r.path, want_path);
+            assert_eq!(r.class_logits.len(), cfg.n_classes);
+            preds.push(r.class);
+        }
+        let served_metric = score(&task, &examples, &preds);
+        assert_eq!(served_metric, oracle, "{want_path:?} served cls metric vs eval_encoder_host");
+        let m = srv.shutdown();
+        assert_eq!(m.cls_served, n as u64);
+        assert!(m.cls_latency.is_some());
+    }
+}
+
+/// Satellite (ISSUE-4): mixed-adapter cls coalescing — two adapters'
+/// requests interleaved through the shared queue still coalesce per
+/// adapter, and every response matches its own adapter's offline
+/// prediction (no cross-adapter contamination in the batcher).
+#[test]
+fn cls_mixed_adapter_coalescing_preserves_per_adapter_parity() {
+    let (cfg, backbone) = enc_backbone(43);
+    let deltas_a = synth_adapter(&cfg, &backbone, 1, 700).unwrap();
+    let deltas_b = synth_adapter(&cfg, &backbone, 2, 800).unwrap();
+    let reg = AdapterRegistry::new(
+        cfg.clone(),
+        backbone.clone(),
+        RegistryCfg { merged_capacity: 0, promote_after: 1 },
+    );
+    reg.register("enc-a", deltas_a.clone()).unwrap();
+    reg.register("enc-b", deltas_b.clone()).unwrap();
+    let srv = Server::start(
+        reg,
+        ServeCfg {
+            max_batch: 8,
+            max_queue: 64,
+            // long deadline: batches pop only when FULL, so coalescing is
+            // deterministic once all requests are queued
+            max_delay: Duration::from_secs(30),
+            workers: 2,
+            ..ServeCfg::default()
+        },
+        Backend::Host,
+    )
+    .unwrap();
+    let task = tasks::by_name("glue-mnli").unwrap();
+    let n = 32; // 16 per adapter = 2 full batches each
+    let examples = example_stream(&task, Split::Test, 11, cfg.vocab, cfg.seq, n);
+    // submit everything first (interleaved adapters), then wait
+    let tickets: Vec<_> = examples
+        .iter()
+        .enumerate()
+        .map(|(i, ex)| {
+            let adapter = if i % 2 == 0 { "enc-a" } else { "enc-b" };
+            srv.submit_cls(ClsRequest::from_example(adapter, ex)).unwrap()
+        })
+        .collect();
+    // offline per-adapter predictions over the same examples
+    let offline = |deltas: &[(String, neuroada::peft::DeltaStore)]| -> Vec<usize> {
+        let overlay = neuroada::model::DeltaOverlay::new(deltas);
+        let plan =
+            neuroada::model::PlannedModel::resolve(&cfg, &backbone, Some(&overlay), 1).unwrap();
+        examples
+            .iter()
+            .map(|ex| {
+                let cb = neuroada::data::cls_batch(std::slice::from_ref(ex), cfg.seq);
+                plan.cls_predict(&cb.tokens, &cb.pad_mask, 1).unwrap().1[0]
+            })
+            .collect()
+    };
+    let (preds_a, preds_b) = (offline(&deltas_a), offline(&deltas_b));
+    for (i, t) in tickets.into_iter().enumerate() {
+        let r = t.wait().expect("served");
+        let want = if i % 2 == 0 { preds_a[i] } else { preds_b[i] };
+        assert_eq!(r.class, want, "request {i} contaminated");
+        assert!(r.batch_size > 1, "request {i} rode a coalesced batch");
+    }
+    let m = srv.shutdown();
+    assert_eq!(m.cls_served, n as u64);
+    assert!(
+        m.cls_batches < n && m.cls_mean_batch > 1.0,
+        "expected cls coalescing: {} batches, mean {}",
+        m.cls_batches,
+        m.cls_mean_batch
+    );
+    assert_eq!(m.adapters["enc-a"].bypass_hits, (n / 2) as u64);
+    assert_eq!(m.adapters["enc-b"].bypass_hits, (n / 2) as u64);
 }
