@@ -11,6 +11,7 @@
 //! _GEN to scale).
 
 use neuroada::bench::decode_bench;
+use neuroada::util::resolve_threads;
 
 fn main() -> anyhow::Result<()> {
     let full = std::env::var("NEUROADA_BENCH").as_deref() == Ok("full");
@@ -23,13 +24,43 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(8);
+    let threads = resolve_threads(0);
     println!(
-        "== decode_bench ({} mode, size={size}, ctx={ctx}, gen={gen}) ==",
+        "== decode_bench ({} mode, size={size}, ctx={ctx}, gen={gen}, threads={threads}) ==",
         if full { "full" } else { "quick" }
     );
-    let report = decode_bench::run(&size, ctx, gen, !full)?;
+    let report = decode_bench::run(&size, ctx, gen, threads, !full)?;
     print!("{}", report.render());
     std::fs::write("BENCH_decode.json", report.to_json().dump_pretty())?;
-    println!("(wrote BENCH_decode.json; cached = KV-cache incremental step, reforward = full forward per generated token)");
+    println!(
+        "(wrote BENCH_decode.json; cached = KV-cache incremental step, cached-mt = the same \
+         step on a persistent kernel pool, reforward = full forward per generated token)"
+    );
+    // pooled-step acceptance floor: on micro at threads >= 2 the pooled
+    // batch-1 step must beat PR 3's serial step (bit-identical outputs are
+    // asserted inside run() before any timing). Only enforceable when the
+    // pool actually spawned a worker — on a single-core host the pooled
+    // cell runs inline and there is no parallelism to win with.
+    if threads >= 2 && size == "micro" {
+        if report.pool_workers == 0 {
+            println!(
+                "floor SKIPPED: single-core host (pool spawned 0 workers), pooled step ran inline"
+            );
+        } else {
+            anyhow::ensure!(
+                report.step_mt_speedup > 1.0,
+                "pooled decode step is {:.2}× serial on micro at {threads} threads / {} workers \
+                 (need > 1×: pooled {:.4} ms/tok vs serial {:.4} ms/tok)",
+                report.step_mt_speedup,
+                report.pool_workers,
+                report.cached_step_mt_ms,
+                report.cached_step_ms
+            );
+            println!(
+                "floor OK: pooled step ×{threads} = {:.2}× serial on micro ({} workers)",
+                report.step_mt_speedup, report.pool_workers
+            );
+        }
+    }
     Ok(())
 }

@@ -47,9 +47,18 @@ fn main() -> anyhow::Result<()> {
             "acceptance floor: plan×{threads} is {:.2}× legacy×1 on micro (need >= 2×)",
             report.micro_plan_mt_vs_legacy_st
         );
+        // ISSUE-5 floor: the persistent pool must at least match the
+        // scoped-spawn kernel it replaced on the small-batch matmul (the
+        // workload spawn overhead penalized most)
+        anyhow::ensure!(
+            report.pool_vs_spawn >= 1.0,
+            "pool floor: pooled nt_into is {:.2}× the scoped-spawn baseline on micro (need >= 1×)",
+            report.pool_vs_spawn
+        );
         println!(
-            "floors OK: plan×{threads} = {:.2}× plan×1, {:.2}× legacy×1 (micro, batch {batch})",
-            report.micro_mt_vs_st, report.micro_plan_mt_vs_legacy_st
+            "floors OK: plan×{threads} = {:.2}× plan×1, {:.2}× legacy×1, pooled matmul {:.2}× \
+             scoped-spawn (micro, batch {batch})",
+            report.micro_mt_vs_st, report.micro_plan_mt_vs_legacy_st, report.pool_vs_spawn
         );
     }
     Ok(())

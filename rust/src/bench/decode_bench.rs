@@ -6,16 +6,22 @@
 //!
 //!   prefill            feeding `ctx` prompt tokens through `forward_step`
 //!   decode/cached      per-token greedy continuation via the KV cache
+//!   decode/cached-mt   the same continuation with the step partitioned
+//!                      across a persistent `KernelPool` (threads > 1)
 //!   decode/reforward   the same continuation via full re-forward per token
 //!   decode/bypass      the cached step through the sparse bypass overlay
 //!
 //! The cached-vs-uncached speedup is the headline number (CI asserts ≥ 2×;
 //! the expected value is ~O(ctx)× since a re-forward re-pays every past
-//! position). The report renders for stdout and serializes to
-//! `BENCH_decode.json` (see `benches/decode_bench.rs`) so the CI artifact
-//! step can track the perf trajectory per PR. Greedy parity between the
-//! two paths is asserted before timing — a bench on diverging outputs
-//! would be meaningless.
+//! position). With threads > 1 the report also records the pooled
+//! batch-1 step vs the serial step (`step_mt_speedup`) — the decode-step
+//! threading PR 3 left on the table because scoped spawns cost more than
+//! the step itself; the bench binary asserts it beats serial on micro.
+//! The report renders for stdout and serializes to `BENCH_decode.json`
+//! (see `benches/decode_bench.rs`) so the CI artifact step can track the
+//! perf trajectory per PR. Greedy parity between the paths (and bitwise
+//! pooled-vs-serial state/logit equality) is asserted before timing — a
+//! bench on diverging outputs would be meaningless.
 
 use super::{Bench, BenchResult};
 use crate::config::presets;
@@ -35,11 +41,25 @@ pub struct DecodeBenchReport {
     pub ctx: usize,
     /// Greedy continuation length per measured iteration.
     pub gen: usize,
+    /// Kernel-pool partition width of the `cached-mt` cell (1 = not run).
+    pub threads: usize,
+    /// Persistent workers the pool actually spawned
+    /// (`min(threads, cores) - 1`; 0 = the pooled cell ran inline). The
+    /// bench binary only enforces its speedup floor when this is >= 1 — a
+    /// single-core host has no parallelism for the pool to win with.
+    pub pool_workers: usize,
     pub results: Vec<BenchResult>,
     /// Prefill cost per prompt token (ms).
     pub prefill_ms_per_token: f64,
     /// KV-cached greedy step at context `ctx` (ms/token, merged weights).
     pub cached_step_ms: f64,
+    /// The same step through a `threads`-wide persistent pool (ms/token;
+    /// NaN when `threads <= 1`). Bit-identical outputs to the serial step.
+    pub cached_step_mt_ms: f64,
+    /// `cached_step_ms / cached_step_mt_ms` — the pooled batch-1 decode
+    /// step vs PR 3's serial step (NaN when `threads <= 1`; the bench
+    /// binary asserts > 1 on micro).
+    pub step_mt_speedup: f64,
     /// Full re-forward greedy step at the same context (ms/token).
     pub reforward_step_ms: f64,
     /// `reforward_step_ms / cached_step_ms` — the acceptance number.
@@ -68,6 +88,12 @@ impl DecodeBenchReport {
             self.prefill_ms_per_token,
             crate::util::fmt_bytes(self.kv_bytes_per_slot),
         ));
+        if self.step_mt_speedup.is_finite() {
+            out.push_str(&format!(
+                "decode step ×{}: pooled {:.4} ms/tok vs serial {:.4} ms/tok → {:.2}×\n",
+                self.threads, self.cached_step_mt_ms, self.cached_step_ms, self.step_mt_speedup,
+            ));
+        }
         out
     }
 
@@ -78,8 +104,13 @@ impl DecodeBenchReport {
         j.set("size", self.size.as_str());
         j.set("ctx", self.ctx);
         j.set("gen", self.gen);
+        j.set("threads", self.threads);
+        j.set("pool_workers", self.pool_workers);
         j.set("prefill_ms_per_token", self.prefill_ms_per_token);
         j.set("cached_step_ms", self.cached_step_ms);
+        // null when threads <= 1, via fmt_num's non-finite rule
+        j.set("cached_step_mt_ms", self.cached_step_mt_ms);
+        j.set("step_mt_speedup", self.step_mt_speedup);
         j.set("reforward_step_ms", self.reforward_step_ms);
         j.set("cached_speedup", self.cached_speedup);
         j.set("bypass_step_ms", self.bypass_step_ms);
@@ -89,13 +120,23 @@ impl DecodeBenchReport {
 }
 
 /// Run the decode bench: greedy-continue `gen` tokens from a `ctx`-token
-/// prompt, cached vs re-forward vs bypass. `size` must be a decoder
-/// preset; its `seq` is overridden to `ctx + gen` so the bench measures
-/// exactly the requested context (nano at ctx 64 is the acceptance point).
-pub fn run(size: &str, ctx: usize, gen: usize, quick: bool) -> Result<DecodeBenchReport> {
+/// prompt, cached vs re-forward vs bypass — plus, at `threads > 1`, the
+/// pooled batch-1 step vs the serial step (bit-identical outputs asserted
+/// first). `size` must be a decoder preset; its `seq` is overridden to
+/// `ctx + gen` so the bench measures exactly the requested context (nano
+/// at ctx 64 is the PR-2 acceptance point; micro at 4 threads is the
+/// pooled-step acceptance point).
+pub fn run(
+    size: &str,
+    ctx: usize,
+    gen: usize,
+    threads: usize,
+    quick: bool,
+) -> Result<DecodeBenchReport> {
     let mut cfg = presets::model(size).ok_or_else(|| anyhow!("unknown size {size:?}"))?;
     anyhow::ensure!(cfg.n_classes == 0, "decode bench needs a decoder size");
     anyhow::ensure!(ctx >= 4 && gen >= 1, "decode bench needs ctx >= 4, gen >= 1");
+    let threads = threads.max(1);
     cfg.seq = ctx + gen;
     let b = if quick { Bench::quick() } else { Bench::default() };
     let mut rng = Rng::new(7);
@@ -147,6 +188,46 @@ pub fn run(size: &str, ctx: usize, gen: usize, quick: bool) -> Result<DecodeBenc
     let cached_step_ms = r_cached.per_iter_ms() / gen as f64;
     results.push(r_cached);
 
+    // pooled batch-1 step: one persistent pool for the whole bench run,
+    // bit-identical to the serial step (asserted on the prefilled state
+    // AND the final-step logits before timing)
+    let mut cached_step_mt_ms = f64::NAN;
+    let mut pool_workers = 0usize;
+    if threads > 1 {
+        let pool = crate::tensor::pool::KernelPool::new(threads);
+        pool_workers = pool.workers();
+        let mt_plan = PlannedModel::resolve(&cfg, &backbone, None, &pool)?;
+        let mut mt_state = DecodeState::new(&cfg);
+        let mut mt_logits = Vec::new();
+        for &t in &prompt {
+            mt_logits = mt_plan.forward_step(t, &mut mt_state)?;
+        }
+        anyhow::ensure!(
+            mt_logits == prefill_logits && mt_state.k == prefilled.k && mt_state.v == prefilled.v,
+            "pooled prefill diverged from serial (must be bit-identical)"
+        );
+        let mt_toks = {
+            let mut st = mt_state.clone();
+            let mut lg = mt_logits.clone();
+            let mut toks = Vec::new();
+            for _ in 0..gen {
+                let next = nan_safe_argmax(lg.iter().copied()).unwrap_or(0) as i32;
+                toks.push(next);
+                lg = mt_plan.forward_step(next, &mut st)?;
+            }
+            toks
+        };
+        anyhow::ensure!(
+            mt_toks == cached_toks,
+            "pooled continuation diverged from serial: {mt_toks:?} vs {cached_toks:?}"
+        );
+        let r_mt = b.run(&format!("decode/cached-mt {size} ctx={ctx} gen={gen} t={threads}"), || {
+            greedy_from(&mt_plan);
+        });
+        cached_step_mt_ms = r_mt.per_iter_ms() / gen as f64;
+        results.push(r_mt);
+    }
+
     let r_full = b.run(&format!("decode/reforward {size} ctx={ctx} gen={gen}"), || {
         std::hint::black_box(greedy_full_reforward(&m, &prompt, gen).unwrap().len());
     });
@@ -169,9 +250,13 @@ pub fn run(size: &str, ctx: usize, gen: usize, quick: bool) -> Result<DecodeBenc
         size: size.to_string(),
         ctx,
         gen,
+        threads,
+        pool_workers,
         results,
         prefill_ms_per_token,
         cached_step_ms,
+        cached_step_mt_ms,
+        step_mt_speedup: cached_step_ms / cached_step_mt_ms,
         reforward_step_ms,
         cached_speedup: reforward_step_ms / cached_step_ms,
         bypass_step_ms,
@@ -188,7 +273,7 @@ mod tests {
     /// is far higher; 2× is the regression floor).
     #[test]
     fn cached_decode_beats_reforward_at_ctx_64() {
-        let r = run("nano", 64, 8, true).unwrap();
+        let r = run("nano", 64, 8, 1, true).unwrap();
         assert_eq!(r.results.len(), 4);
         assert!(
             r.cached_speedup >= 2.0,
@@ -198,10 +283,27 @@ mod tests {
             r.reforward_step_ms
         );
         assert!(r.bypass_step_ms > 0.0 && r.prefill_ms_per_token > 0.0);
+        assert!(r.cached_step_mt_ms.is_nan() && r.step_mt_speedup.is_nan());
         assert_eq!(r.kv_bytes_per_slot, 2 * (2 * 72 * 64) as u64 * 4);
         let j = r.to_json();
         assert_eq!(j.at(&["bench"]).and_then(Json::as_str), Some("decode_bench"));
         assert!(j.at(&["cached_speedup"]).and_then(Json::as_f64).unwrap() >= 2.0);
         assert!(r.render().contains("decode ctx=64"));
+    }
+
+    /// Structure + bitwise-parity gate of the pooled batch-1 step cell (no
+    /// perf floor here — the bench binary asserts that on micro, so test
+    /// runs stay robust to loaded machines).
+    #[test]
+    fn pooled_step_cell_runs_with_parity() {
+        let r = run("nano", 16, 4, 3, true).unwrap();
+        assert_eq!(r.results.len(), 5, "prefill, cached, cached-mt, reforward, bypass");
+        assert_eq!(r.threads, 3);
+        assert!(r.cached_step_mt_ms > 0.0);
+        assert!(r.step_mt_speedup > 0.0);
+        assert!(r.render().contains("decode step ×3"));
+        let j = r.to_json();
+        assert_eq!(j.at(&["threads"]).and_then(Json::as_f64), Some(3.0));
+        assert!(j.at(&["step_mt_speedup"]).and_then(Json::as_f64).unwrap() > 0.0);
     }
 }

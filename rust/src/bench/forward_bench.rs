@@ -24,6 +24,8 @@ use super::{Bench, BenchResult};
 use crate::config::presets;
 use crate::model::init::init_params;
 use crate::model::{DeltaOverlay, PlannedModel};
+use crate::tensor::pool::KernelPool;
+use crate::tensor::{ops, Tensor};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
@@ -307,6 +309,11 @@ pub struct ForwardBenchReport {
     /// anchor/merged: plan @ `threads` vs LEGACY @ 1 — the acceptance
     /// number (≥ 2× on micro at 4 threads, batch 8).
     pub micro_plan_mt_vs_legacy_st: f64,
+    /// Persistent-pool vs scoped-spawn `nt_into` on the anchor size's
+    /// small-batch matmul (`[batch, d_model] × [d_ff, d_model]ᵀ`) —
+    /// spawn_ms / pool_ms, so ≥ 1 means the pool won. NaN when the matrix
+    /// ran single-threaded (no spawn baseline to compare).
+    pub pool_vs_spawn: f64,
 }
 
 impl ForwardBenchReport {
@@ -327,6 +334,12 @@ impl ForwardBenchReport {
             self.anchor, self.batch, self.threads, self.micro_mt_vs_st, self.threads,
             self.micro_plan_mt_vs_legacy_st,
         ));
+        if self.pool_vs_spawn.is_finite() {
+            out.push_str(&format!(
+                "kernel {} m={}: pooled nt_into is {:.2}× the scoped-spawn baseline\n",
+                self.anchor, self.batch, self.pool_vs_spawn,
+            ));
+        }
         out
     }
 
@@ -352,6 +365,8 @@ impl ForwardBenchReport {
         j.set("anchor", self.anchor.as_str());
         j.set("micro_mt_vs_st", self.micro_mt_vs_st);
         j.set("micro_plan_mt_vs_legacy_st", self.micro_plan_mt_vs_legacy_st);
+        // null (not NaN) when single-threaded, via fmt_num's non-finite rule
+        j.set("pool_vs_spawn_matmul", self.pool_vs_spawn);
         j
     }
 }
@@ -366,6 +381,11 @@ pub fn run(sizes: &[&str], batch: usize, threads: usize, quick: bool) -> Result<
     let b = if quick { Bench::quick() } else { Bench::default() };
     let mut results = Vec::new();
     let mut cases = Vec::new();
+    // the tentpole shape: ONE persistent pool for the whole bench run (its
+    // workers are spawned here once); the serial cells use the shared
+    // serial pool, the bit-identical baseline
+    let pool = KernelPool::new(threads);
+    let serial = KernelPool::serial();
 
     for &size in sizes {
         let cfg = presets::model(size).ok_or_else(|| anyhow!("unknown size {size:?}"))?;
@@ -387,8 +407,8 @@ pub fn run(sizes: &[&str], batch: usize, threads: usize, quick: bool) -> Result<
             // parity gate before timing: the plan must reproduce the
             // pre-refactor logits (bit-identical kernels; ≤1e-6 contract)
             let want = lm.lm_logits_at(&tokens, &pad, &last, batch)?;
-            for t in [1, threads] {
-                let got = PlannedModel::resolve(&cfg, &backbone, ov, t)?
+            for (t, pl) in [(1usize, &serial), (threads, &pool)] {
+                let got = PlannedModel::resolve(&cfg, &backbone, ov, pl)?
                     .lm_logits_at(&tokens, &pad, &last, batch)?;
                 let diff = want.max_abs_diff(&got);
                 anyhow::ensure!(
@@ -417,14 +437,15 @@ pub fn run(sizes: &[&str], batch: usize, threads: usize, quick: bool) -> Result<
             });
             // plan resolution is INSIDE the measured iteration: the honest
             // comparison includes the (cheap) per-call resolve the serving
-            // worker pays per batch
+            // worker pays per batch — but NOT pool construction, which the
+            // serving engine pays once per server, not per batch
             measure("plan", 1, &mut || {
-                let p = PlannedModel::resolve(&cfg, &backbone, ov, 1).unwrap();
+                let p = PlannedModel::resolve(&cfg, &backbone, ov, &serial).unwrap();
                 std::hint::black_box(p.lm_logits_at(&tokens, &pad, &last, batch).unwrap().numel());
             });
             if threads > 1 {
                 measure("plan", threads, &mut || {
-                    let p = PlannedModel::resolve(&cfg, &backbone, ov, threads).unwrap();
+                    let p = PlannedModel::resolve(&cfg, &backbone, ov, &pool).unwrap();
                     std::hint::black_box(
                         p.lm_logits_at(&tokens, &pad, &last, batch).unwrap().numel(),
                     );
@@ -443,6 +464,52 @@ pub fn run(sizes: &[&str], batch: usize, threads: usize, quick: bool) -> Result<
     // the acceptance size is micro; fall back to the last size when the
     // matrix was run without it (lib tests use nano only)
     let anchor = if sizes.contains(&"micro") { "micro" } else { sizes.last().copied().unwrap_or("nano") };
+
+    // kernel-level pooled-vs-spawn baseline: the small-batch matmul where
+    // the scoped-spawn kernel paid thread creation per call. Same shape as
+    // the anchor's w1 projection at the bench batch; parity is asserted
+    // bitwise across pooled, scoped, and serial before timing.
+    let mut pool_vs_spawn = f64::NAN;
+    if threads > 1 {
+        let acfg = presets::model(anchor).ok_or_else(|| anyhow!("unknown size {anchor:?}"))?;
+        let (m, k, n) = (batch, acfg.d_model, acfg.d_ff);
+        let mut rng = Rng::new(41);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let w = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let mut want = vec![0.0f32; m * n];
+        ops::nt_into(&a.data, m, k, &w.data, n, &mut want, &serial);
+        let mut got = vec![0.0f32; m * n];
+        ops::nt_into(&a.data, m, k, &w.data, n, &mut got, &pool);
+        anyhow::ensure!(want == got, "pooled nt_into diverged from serial");
+        got.fill(0.0);
+        ops::nt_into_scoped(&a.data, m, k, &w.data, n, &mut got, threads);
+        anyhow::ensure!(want == got, "scoped nt_into diverged from serial");
+        let mut out = vec![0.0f32; m * n];
+        let mut measure_kernel = |resolve: &str, f: &mut dyn FnMut(&mut [f32])| {
+            let r = b.run(&format!("matmul/{resolve} {anchor} m={m} t={threads}"), &mut || {
+                f(&mut out);
+                std::hint::black_box(out.len());
+            });
+            cases.push(ForwardCase {
+                size: anchor.to_string(),
+                path: "kernel".to_string(),
+                resolve: resolve.to_string(),
+                threads,
+                ms_per_forward: r.per_iter_ms(),
+                forwards_per_s: r.throughput(1.0),
+            });
+            let ms = r.per_iter_ms();
+            results.push(r);
+            ms
+        };
+        let pool_ms =
+            measure_kernel("pool", &mut |o| ops::nt_into(&a.data, m, k, &w.data, n, o, &pool));
+        let spawn_ms = measure_kernel("spawn", &mut |o| {
+            ops::nt_into_scoped(&a.data, m, k, &w.data, n, o, threads)
+        });
+        pool_vs_spawn = spawn_ms / pool_ms;
+    }
+
     let plan_st = pick(&cases, anchor, "plan", 1);
     let plan_mt = if threads > 1 { pick(&cases, anchor, "plan", threads) } else { plan_st };
     let legacy_st = pick(&cases, anchor, "legacy", 1);
@@ -454,6 +521,7 @@ pub fn run(sizes: &[&str], batch: usize, threads: usize, quick: bool) -> Result<
         cases,
         micro_mt_vs_st: plan_st / plan_mt,
         micro_plan_mt_vs_legacy_st: legacy_st / plan_mt,
+        pool_vs_spawn,
     })
 }
 
@@ -467,17 +535,30 @@ mod tests {
     #[test]
     fn quick_forward_bench_runs_with_parity() {
         let r = run(&["nano"], 4, 2, true).unwrap();
-        // 2 paths × (legacy + plan@1 + plan@2)
-        assert_eq!(r.cases.len(), 6);
+        // 2 paths × (legacy + plan@1 + plan@2) + the 2 pooled-vs-spawn
+        // kernel cells
+        assert_eq!(r.cases.len(), 8);
         assert!(r.cases.iter().all(|c| c.ms_per_forward > 0.0 && c.forwards_per_s > 0.0));
         assert!(r.case("nano", "bypass", "plan", 2).is_some());
+        assert!(r.case("nano", "kernel", "pool", 2).is_some());
+        assert!(r.case("nano", "kernel", "spawn", 2).is_some());
         assert!(r.micro_mt_vs_st > 0.0 && r.micro_plan_mt_vs_legacy_st > 0.0);
+        // the ratio is recorded (its >= 1 floor is asserted by the bench
+        // binary on micro, not here — module tests stay load-insensitive)
+        assert!(r.pool_vs_spawn > 0.0);
         let j = r.to_json();
         assert_eq!(j.at(&["bench"]).and_then(Json::as_str), Some("forward_bench"));
-        assert_eq!(j.at(&["cases"]).and_then(|c| c.as_arr()).map(|a| a.len()), Some(6));
+        assert_eq!(j.at(&["cases"]).and_then(|c| c.as_arr()).map(|a| a.len()), Some(8));
         assert!(j.at(&["micro_plan_mt_vs_legacy_st"]).and_then(Json::as_f64).is_some());
+        assert!(j.at(&["pool_vs_spawn_matmul"]).and_then(Json::as_f64).is_some());
         assert_eq!(r.anchor, "nano", "anchor falls back to the measured size");
         assert!(r.render().contains("forward nano b=4"), "{}", r.render());
+        assert!(r.render().contains("kernel nano"), "{}", r.render());
+        // single-threaded runs have no spawn baseline: the ratio is NaN,
+        // which fmt_num serializes as null (valid JSON)
+        let r1 = run(&["nano"], 2, 1, true).unwrap();
+        assert!(r1.pool_vs_spawn.is_nan());
+        assert_eq!(r1.cases.len(), 4, "no kernel cells without a multi-thread matrix");
     }
 
     /// The legacy step oracle agrees with itself across state reuse (sanity

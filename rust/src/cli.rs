@@ -110,8 +110,10 @@ SUBCOMMANDS
                     [--cls] [--task glue-sst2]
                     (--generate streams decode tokens through the KV-cached
                     slot scheduler instead of scoring options; --temp/--top-k
-                    switch greedy to seeded sampling; --threads N
-                    row-partitions the host batched forward, default
+                    switch greedy to seeded sampling; --threads N sizes the
+                    server's ONE persistent kernel pool — batched matmuls,
+                    attention, and the per-token decode step all partition
+                    across it, bit-identical to serial — default
                     NEUROADA_THREADS or serial. Encoder sizes, e.g.
                     --size enc-micro [--cls], serve a GLUE task's dev set
                     as classification requests on both weight views and

@@ -4,6 +4,13 @@
 //! input order in the output. On this 1-core testbed the default pool size
 //! is 1 (PJRT executions are already multi-threaded internally and the
 //! experiments are compute-bound), but sweeps on bigger hosts scale out.
+//!
+//! This is the COARSE pool: whole experiments / sweep points, spawned per
+//! `scatter`, results collected by channel. Fine-grained data-parallel
+//! kernels (matmul row ranges, decode-step partitions) go through its
+//! sibling [`tensor::pool::KernelPool`](crate::tensor::pool::KernelPool),
+//! whose persistent workers and ~µs dispatch are built for call rates
+//! where a thread spawn per job would dominate the work.
 
 use std::sync::mpsc;
 use std::thread;

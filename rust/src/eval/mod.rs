@@ -210,7 +210,11 @@ pub fn eval_encoder_host(
     threads: usize,
 ) -> Result<f64> {
     let overlay = deltas.map(DeltaOverlay::new);
-    let plan = PlannedModel::resolve(cfg, params, overlay.as_ref(), threads)?;
+    // one kernel pool per eval invocation: spawned here, reused across
+    // every chunk's forward, joined on drop (results are bit-identical to
+    // serial at any width, hence the thread-determinism test below)
+    let pool = crate::tensor::pool::KernelPool::new(threads);
+    let plan = PlannedModel::resolve(cfg, params, overlay.as_ref(), &pool)?;
     let examples = data::example_stream(task, Split::Test, seed, cfg.vocab, cfg.seq, n);
     let mut preds: Vec<usize> = Vec::with_capacity(examples.len());
     for chunk in examples.chunks(cfg.batch) {

@@ -12,7 +12,8 @@
 //! * [`util`]        — JSON codec, RNG, stats, table rendering (offline env:
 //!                     no serde/clap/criterion, so these are first-class).
 //! * [`config`]      — TOML-subset config system + presets.
-//! * [`tensor`]      — dense f32/bf16 host tensor substrate.
+//! * [`tensor`]      — dense f32/bf16 host tensor substrate + the
+//!   persistent [`tensor::pool::KernelPool`] behind every threaded kernel.
 //! * [`peft`]        — the paper's contribution: top-k selection, compact
 //!                     delta store, sparse AdamW accounting, memory model,
 //!                     baselines (masked / LoRA / BitFit / full).

@@ -324,7 +324,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         threads: args.opt_usize("threads").map_err(|e| anyhow!(e))?.unwrap_or(0),
     };
     eprintln!(
-        "[serve] host forward threads: {} (--threads / NEUROADA_THREADS)",
+        "[serve] kernel pool width: {} (--threads / NEUROADA_THREADS; one persistent pool \
+         shared by workers + decode thread)",
         neuroada::util::resolve_threads(scfg.threads)
     );
     let srv = Server::start(registry, scfg, backend)?;

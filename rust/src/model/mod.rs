@@ -17,8 +17,10 @@
 //!
 //! All forward math lives in [`plan::PlannedModel`]: parameter names are
 //! resolved ONCE into borrowed zero-copy slices (no `format!`, no store
-//! lookups, no weight copies in the steady state), and the batched matmuls
-//! row-partition across a configurable thread count. [`RefModel`] remains
+//! lookups, no weight copies in the steady state), and the hot loops —
+//! batched matmuls, attention score/mix, and the KV-cached decode step —
+//! row-partition across a persistent
+//! [`KernelPool`](crate::tensor::pool::KernelPool). [`RefModel`] remains
 //! the ergonomic entry point and resolves a plan per call.
 
 pub mod decode;
@@ -102,10 +104,12 @@ impl<'a> RefModel<'a> {
     }
 
     /// Resolve every parameter name once into the zero-copy forward plan
-    /// (serial; thread a plan with [`PlannedModel::with_threads`] or resolve
-    /// directly via [`PlannedModel::resolve`] / `ModelRef::planned`).
+    /// (serial pool; re-pool a plan with [`PlannedModel::with_pool`] or
+    /// resolve directly via [`PlannedModel::resolve`] / `ModelRef::planned`
+    /// against a shared [`tensor::pool::KernelPool`](crate::tensor::pool::KernelPool)).
     pub fn plan(&self) -> Result<PlannedModel<'a>> {
-        PlannedModel::resolve(self.cfg, self.params, self.overlay, 1)
+        let pool = crate::tensor::pool::KernelPool::serial();
+        PlannedModel::resolve(self.cfg, self.params, self.overlay, &pool)
     }
 
     /// Full forward: tokens [b, t] (+pad mask) → hidden states [b·t, d].

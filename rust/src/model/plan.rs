@@ -10,29 +10,39 @@
 //! string formatting, no store lookups, and no weight copies** — plan
 //! construction is the only place names are resolved.
 //!
-//! On top of the zero-copy views, the batched matmuls run through
-//! [`ops::nt_into`], row-partitioned across `threads` scoped OS threads
-//! (`NEUROADA_THREADS` / `ServeCfg::threads` / `--threads`; see
-//! `util::resolve_threads`). Row partitioning keeps results bit-identical
-//! to serial for every thread count. The single-row decode step stays
-//! serial by design: its matmuls have one input row, so a row partition has
-//! nothing to split and per-token thread spawns would cost more than the
-//! O(d²) step they wrap.
+//! On top of the zero-copy views, every hot loop runs through a persistent
+//! [`KernelPool`] (`NEUROADA_THREADS` / `ServeCfg::threads` / `--threads`;
+//! see `util::resolve_threads`): the batched matmuls via [`ops::nt_into`],
+//! the attention score/mix loops partitioned across batch rows, and — now
+//! that dispatch no longer costs a thread spawn — the single-row decode
+//! step partitioned over `d_out` per projection (plus its attention across
+//! heads and the tied LM head over the vocab). Row partitioning keeps every
+//! result bit-identical to serial at any pool width: the partition divides
+//! output elements, never an accumulation.
 //!
-//! Lifecycle: **resolve → (optionally re-thread) → forward many times.**
+//! Lifecycle: **resolve → (optionally re-pool) → forward many times.**
 //! A plan borrows the parameter store (and the adapter's delta stores), so
 //! it is cheap to build — pointer work plus one name lookup per parameter —
 //! and callers re-plan whenever the underlying weights change (the serving
 //! registry hands out a fresh plan per resolved weight view via
-//! `ModelRef::planned`). See `docs/performance.md`.
+//! `ModelRef::planned`). The pool handle is a cheap `Arc` clone; pool
+//! *workers* are spawned once per server / bench / eval invocation, never
+//! per plan or per call. See `docs/performance.md`.
 
 use super::decode::{positional_row, DecodeState};
 use super::DeltaOverlay;
 use crate::config::ModelCfg;
 use crate::peft::delta::ScatterView;
 use crate::runtime::ValueStore;
+use crate::tensor::pool::KernelPool;
 use crate::tensor::{ops, Tensor};
 use anyhow::Result;
+
+/// Work floor (score+mix elements, `nh · ctx · head_dim`) below which the
+/// decode step's attention stays inline: under it, per-head tasks are so
+/// small that even the pool's ~µs dispatch would cost more than the loop.
+/// Purely a perf gate — the pooled and inline paths are bit-identical.
+const STEP_ATTN_POOL_FLOOR: usize = 4096;
 
 /// One adapted projection, fully resolved: the borrowed dense weight
 /// `[d_out, d_in]` plus the pre-bound sparse bypass view when the adapter
@@ -47,36 +57,55 @@ pub struct ProjPlan<'a> {
 
 impl ProjPlan<'_> {
     /// Batched `y = h Wᵀ (+ h Δᵀ)`, h [rows, d_in] → y [rows, d_out],
-    /// row-partitioned across `threads`.
-    fn forward(&self, h: &Tensor, threads: usize) -> Tensor {
+    /// row-partitioned across `pool`.
+    fn forward(&self, h: &Tensor, pool: &KernelPool) -> Tensor {
         debug_assert_eq!(h.shape[1], self.d_in);
         let rows = h.shape[0];
         let mut y = Tensor::zeros(&[rows, self.d_out]);
-        ops::nt_into(&h.data, rows, self.d_in, self.w, self.d_out, &mut y.data, threads);
+        ops::nt_into(&h.data, rows, self.d_in, self.w, self.d_out, &mut y.data, pool);
         if let Some(view) = &self.delta {
             view.accum_matmul_nt(h, &mut y);
         }
         y
     }
 
-    /// Single-row step: `y = h Wᵀ (+ h Δᵀ)` for one token. Serial, and
-    /// accumulated in the same order as the pre-plan decode step
-    /// (sequential zip-sum per neuron), so step logits are bit-identical to
-    /// the legacy path.
-    fn forward_row(&self, h: &[f32], y: &mut [f32]) {
-        debug_assert_eq!(h.len(), self.d_in);
-        debug_assert_eq!(y.len(), self.d_out);
-        for (i, yi) in y.iter_mut().enumerate() {
-            let wr = &self.w[i * self.d_in..(i + 1) * self.d_in];
-            *yi = h.iter().zip(wr).map(|(a, b)| a * b).sum::<f32>();
-        }
+    /// One output neuron of the single-row step: the same sequential
+    /// zip-sum (then in-order delta adds) as the pre-plan decode step, so
+    /// the value is bit-identical whether computed serially or by any pool
+    /// executor.
+    #[inline]
+    fn step_neuron(&self, i: usize, h: &[f32]) -> f32 {
+        let wr = &self.w[i * self.d_in..(i + 1) * self.d_in];
+        let mut y = h.iter().zip(wr).map(|(a, b)| a * b).sum::<f32>();
         if let Some(view) = &self.delta {
-            for (i, yi) in y.iter_mut().enumerate() {
-                for (col, theta) in view.row(i) {
-                    *yi += theta * h[col];
-                }
+            for (col, theta) in view.row(i) {
+                y += theta * h[col];
             }
         }
+        y
+    }
+
+    /// Single-row step: `y = h Wᵀ (+ h Δᵀ)` for one token, partitioned over
+    /// `d_out` across the pool (the decode-step threading PR 3 deferred —
+    /// viable now that dispatch is a pool handoff, not a thread spawn).
+    /// Each neuron is [`ProjPlan::step_neuron`] wherever it executes, so
+    /// step logits stay bit-identical to serial and to the legacy path.
+    fn forward_row(&self, h: &[f32], y: &mut [f32], pool: &KernelPool) {
+        debug_assert_eq!(h.len(), self.d_in);
+        debug_assert_eq!(y.len(), self.d_out);
+        let t = pool.threads().max(1).min(self.d_out);
+        if t <= 1 {
+            for (i, yi) in y.iter_mut().enumerate() {
+                *yi = self.step_neuron(i, h);
+            }
+            return;
+        }
+        let rows = self.d_out.div_ceil(t);
+        pool.run_chunks(y, rows, |ci, chunk| {
+            for (r, yi) in chunk.iter_mut().enumerate() {
+                *yi = self.step_neuron(ci * rows + r, h);
+            }
+        });
     }
 }
 
@@ -104,8 +133,9 @@ pub struct LayerPlan<'a> {
 /// serving) resolve once and reuse.
 pub struct PlannedModel<'a> {
     pub cfg: &'a ModelCfg,
-    /// Row-partition width for the batched matmuls (1 = serial).
-    pub threads: usize,
+    /// The kernel pool every forward runs through (a cheap `Arc` handle;
+    /// `KernelPool::serial()` = the bit-identical serial baseline).
+    pub pool: KernelPool,
     pub embed: &'a [f32],
     pub ln_f: &'a [f32],
     /// Encoder classifier head `[n_classes, d_model]`; decoders have none.
@@ -114,20 +144,21 @@ pub struct PlannedModel<'a> {
 }
 
 impl<'a> PlannedModel<'a> {
-    /// Resolve a dense (merged) forward plan.
+    /// Resolve a dense (merged) forward plan on the serial pool.
     pub fn new(cfg: &'a ModelCfg, params: &'a ValueStore) -> Result<PlannedModel<'a>> {
-        PlannedModel::resolve(cfg, params, None, 1)
+        PlannedModel::resolve(cfg, params, None, &KernelPool::serial())
     }
 
     /// Resolve every parameter name once. `overlay` pre-binds the sparse
     /// bypass view into each adapted projection's slot; the plan keeps only
     /// the (Copy) scatter views, so the overlay itself may be dropped after
     /// resolution. Shapes are validated here — the forward never re-checks.
+    /// The plan keeps a clone of `pool` (no workers are spawned here).
     pub fn resolve(
         cfg: &'a ModelCfg,
         params: &'a ValueStore,
         overlay: Option<&DeltaOverlay<'a>>,
-        threads: usize,
+        pool: &KernelPool,
     ) -> Result<PlannedModel<'a>> {
         let d = cfg.d_model;
         let p = |name: &str, want: usize| -> Result<&'a [f32]> {
@@ -158,7 +189,7 @@ impl<'a> PlannedModel<'a> {
         }
         Ok(PlannedModel {
             cfg,
-            threads: threads.max(1),
+            pool: pool.clone(),
             embed: p("embed", cfg.vocab * d)?,
             ln_f: p("ln_f", d)?,
             head: if cfg.n_classes > 0 { Some(p("head", cfg.n_classes * d)?) } else { None },
@@ -166,10 +197,15 @@ impl<'a> PlannedModel<'a> {
         })
     }
 
-    /// Re-thread an existing plan (no re-resolution).
-    pub fn with_threads(mut self, threads: usize) -> PlannedModel<'a> {
-        self.threads = threads.max(1);
+    /// Re-pool an existing plan (no re-resolution).
+    pub fn with_pool(mut self, pool: &KernelPool) -> PlannedModel<'a> {
+        self.pool = pool.clone();
         self
+    }
+
+    /// Partition width of the plan's pool (1 = serial).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 
     /// Number of projections carrying a bound bypass delta.
@@ -206,22 +242,22 @@ impl<'a> PlannedModel<'a> {
             for i in 0..b * t {
                 ops::rmsnorm(x.row(i), lp.ln1, h.row_mut(i));
             }
-            let q = lp.wq.forward(&h, self.threads);
-            let k = lp.wk.forward(&h, self.threads);
-            let v = lp.wv.forward(&h, self.threads);
+            let q = lp.wq.forward(&h, &self.pool);
+            let k = lp.wk.forward(&h, &self.pool);
+            let v = lp.wv.forward(&h, &self.pool);
             let att = self.attention(&q, &k, &v, pad_mask, b);
-            let o = lp.wo.forward(&att, self.threads);
+            let o = lp.wo.forward(&att, &self.pool);
             x.add_assign(&o);
 
             // mlp block
             for i in 0..b * t {
                 ops::rmsnorm(x.row(i), lp.ln2, h.row_mut(i));
             }
-            let mut m = lp.w1.forward(&h, self.threads);
+            let mut m = lp.w1.forward(&h, &self.pool);
             for vv in m.data.iter_mut() {
                 *vv = ops::silu(*vv);
             }
-            let mm = lp.w2.forward(&m, self.threads);
+            let mm = lp.w2.forward(&m, &self.pool);
             x.add_assign(&mm);
         }
 
@@ -232,14 +268,20 @@ impl<'a> PlannedModel<'a> {
         Ok(out)
     }
 
+    /// Attention score/mix, partitioned across batch rows through the pool
+    /// (each row's `[t, d]` output block is disjoint, so tasks never share
+    /// writes; every (row, head) is computed by the same serial loops
+    /// whichever executor runs it — bit-identical to serial at any width).
     fn attention(&self, q: &Tensor, k: &Tensor, v: &Tensor, pad_mask: &[f32], b: usize) -> Tensor {
         let cfg = self.cfg;
         let (t, d) = (cfg.seq, cfg.d_model);
         let (nh, hd) = (cfg.n_heads, cfg.d_model / cfg.n_heads);
         let scale = 1.0 / (hd as f32).sqrt();
         let mut out = Tensor::zeros(&[b * t, d]);
-        let mut scores = Tensor::zeros(&[t, t]);
-        for bi in 0..b {
+        // one batch row's score + mix (`orows` = its [t, d] output block);
+        // the scratch score matrix is per task, so parallel rows never race
+        let attend_row = |bi: usize, orows: &mut [f32]| {
+            let mut scores = Tensor::zeros(&[t, t]);
             for h in 0..nh {
                 // scores[qi, ki]
                 for qi in 0..t {
@@ -257,7 +299,7 @@ impl<'a> PlannedModel<'a> {
                 }
                 ops::softmax_rows(&mut scores);
                 for qi in 0..t {
-                    let orow = &mut out.row_mut(bi * t + qi)[h * hd..(h + 1) * hd];
+                    let orow = &mut orows[qi * d + h * hd..qi * d + (h + 1) * hd];
                     for ki in 0..t {
                         let w = scores.at2(qi, ki);
                         if w == 0.0 {
@@ -270,7 +312,10 @@ impl<'a> PlannedModel<'a> {
                     }
                 }
             }
-        }
+        };
+        // chunk = one batch row's [t, d] block; the pool inlines when
+        // serial or b == 1
+        self.pool.run_chunks(&mut out.data, t * d, attend_row);
         out
     }
 
@@ -293,7 +338,7 @@ impl<'a> PlannedModel<'a> {
             sel.row_mut(bi).copy_from_slice(h.row(bi * cfg.seq + pos));
         }
         let mut out = Tensor::zeros(&[b, cfg.vocab]);
-        ops::nt_into(&sel.data, b, cfg.d_model, self.embed, cfg.vocab, &mut out.data, self.threads);
+        ops::nt_into(&sel.data, b, cfg.d_model, self.embed, cfg.vocab, &mut out.data, &self.pool);
         Ok(out)
     }
 
@@ -323,7 +368,7 @@ impl<'a> PlannedModel<'a> {
             }
         }
         let mut out = Tensor::zeros(&[b, cfg.n_classes]);
-        ops::nt_into(&pooled.data, b, cfg.d_model, head, cfg.n_classes, &mut out.data, self.threads);
+        ops::nt_into(&pooled.data, b, cfg.d_model, head, cfg.n_classes, &mut out.data, &self.pool);
         Ok(out)
     }
 
@@ -357,8 +402,14 @@ impl<'a> PlannedModel<'a> {
     /// cost model). Pre-bound bypass deltas apply exactly like the batched
     /// projections, so merged and bypass serving paths share this step.
     /// Errors when the cache is full or the token is out of vocab (serving
-    /// validates both at admission). Serial: the step's matmuls have one
-    /// input row, so there is nothing for the row partition to split.
+    /// validates both at admission).
+    ///
+    /// With a parallel pool, the step threads over `d_out` per projection,
+    /// over heads in attention (above [`STEP_ATTN_POOL_FLOOR`]), and over
+    /// the vocab in the tied LM head — PR 3 kept this step serial only
+    /// because per-token thread spawns cost more than the O(d²) they
+    /// wrapped; the persistent pool's ~µs dispatch removes that constraint.
+    /// Bit-identical to the serial step at any pool width.
     pub fn forward_step(&self, token: i32, state: &mut DecodeState) -> Result<Vec<f32>> {
         let cfg = self.cfg;
         let d = cfg.d_model;
@@ -402,20 +453,22 @@ impl<'a> PlannedModel<'a> {
             let mut q = vec![0.0f32; d];
             let mut kk = vec![0.0f32; d];
             let mut vv = vec![0.0f32; d];
-            lp.wq.forward_row(&h, &mut q);
-            lp.wk.forward_row(&h, &mut kk);
-            lp.wv.forward_row(&h, &mut vv);
+            lp.wq.forward_row(&h, &mut q, &self.pool);
+            lp.wk.forward_row(&h, &mut kk, &self.pool);
+            lp.wv.forward_row(&h, &mut vv, &self.pool);
             state.k[l].row_mut(p).copy_from_slice(&kk);
             state.v[l].row_mut(p).copy_from_slice(&vv);
 
             // attend over cached positions 0..=p (causal by construction:
-            // the cache only ever holds the past)
-            let mut att = vec![0.0f32; d];
-            let mut scores = vec![0.0f32; p + 1];
-            for head in 0..nh {
+            // the cache only ever holds the past). One head's score/mix —
+            // `orow` is its disjoint slice of `att`, scratch scores are per
+            // task — runs identically on any executor.
+            let (kl, vl) = (&state.k[l], &state.v[l]);
+            let attend_head = |head: usize, orow: &mut [f32]| {
+                let mut scores = vec![0.0f32; p + 1];
                 let qh = &q[head * hd..(head + 1) * hd];
                 for (ki, s) in scores.iter_mut().enumerate() {
-                    let krow = &state.k[l].row(ki)[head * hd..(head + 1) * hd];
+                    let krow = &kl.row(ki)[head * hd..(head + 1) * hd];
                     *s = qh.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
                 }
                 let mx = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -427,19 +480,26 @@ impl<'a> PlannedModel<'a> {
                 for s in scores.iter_mut() {
                     *s /= sum;
                 }
-                let orow = &mut att[head * hd..(head + 1) * hd];
                 for (ki, &w) in scores.iter().enumerate() {
                     if w == 0.0 {
                         continue;
                     }
-                    let vrow = &state.v[l].row(ki)[head * hd..(head + 1) * hd];
+                    let vrow = &vl.row(ki)[head * hd..(head + 1) * hd];
                     for j in 0..hd {
                         orow[j] += w * vrow[j];
                     }
                 }
+            };
+            let mut att = vec![0.0f32; d];
+            if self.pool.threads() > 1 && nh * (p + 1) * hd >= STEP_ATTN_POOL_FLOOR {
+                self.pool.run_chunks(&mut att, hd, attend_head);
+            } else {
+                for (head, orow) in att.chunks_mut(hd).enumerate() {
+                    attend_head(head, orow);
+                }
             }
             let mut o = vec![0.0f32; d];
-            lp.wo.forward_row(&att, &mut o);
+            lp.wo.forward_row(&att, &mut o, &self.pool);
             for j in 0..d {
                 x[j] += o[j];
             }
@@ -447,12 +507,12 @@ impl<'a> PlannedModel<'a> {
             // mlp block
             ops::rmsnorm(&x, lp.ln2, &mut h);
             let mut m = vec![0.0f32; cfg.d_ff];
-            lp.w1.forward_row(&h, &mut m);
+            lp.w1.forward_row(&h, &mut m, &self.pool);
             for v in m.iter_mut() {
                 *v = ops::silu(*v);
             }
             let mut mm = vec![0.0f32; d];
-            lp.w2.forward_row(&m, &mut mm);
+            lp.w2.forward_row(&m, &mut mm, &self.pool);
             for j in 0..d {
                 x[j] += mm[j];
             }
@@ -461,12 +521,18 @@ impl<'a> PlannedModel<'a> {
 
         let mut out = vec![0.0f32; d];
         ops::rmsnorm(&x, self.ln_f, &mut out);
-        // tied LM head: logits = out · embedᵀ
+        // tied LM head: logits = out · embedᵀ, partitioned over the vocab
+        // (the step's biggest single matmul: vocab · d MACs)
         let mut logits = vec![0.0f32; cfg.vocab];
-        for (t, lg) in logits.iter_mut().enumerate() {
-            let er = &self.embed[t * d..(t + 1) * d];
-            *lg = out.iter().zip(er).map(|(a, b)| a * b).sum::<f32>();
-        }
+        let tn = self.pool.threads().max(1).min(cfg.vocab);
+        let rows = cfg.vocab.div_ceil(tn);
+        self.pool.run_chunks(&mut logits, rows, |ci, chunk| {
+            for (r, lg) in chunk.iter_mut().enumerate() {
+                let t = ci * rows + r;
+                let er = &self.embed[t * d..(t + 1) * d];
+                *lg = out.iter().zip(er).map(|(a, b)| a * b).sum::<f32>();
+            }
+        });
         Ok(logits)
     }
 }
@@ -487,8 +553,8 @@ mod tests {
         assert_eq!(plan.layers.len(), cfg.n_layers);
         assert_eq!(plan.embed.len(), cfg.vocab * cfg.d_model);
         assert_eq!(plan.bound_deltas(), 0);
-        assert_eq!(plan.threads, 1);
-        assert_eq!(plan.with_threads(0).threads, 1, "threads clamp to >= 1");
+        assert_eq!(plan.threads(), 1, "new() plans on the serial pool");
+        assert_eq!(plan.with_pool(&KernelPool::new(0)).threads(), 1, "pool width clamps to >= 1");
     }
 
     #[test]
@@ -512,7 +578,8 @@ mod tests {
         let last = vec![(cfg.seq - 1) as i32; 2];
         let via_ref = RefModel::new(&cfg, &params).lm_logits_at(&tokens, &pad, &last, 2).unwrap();
         for threads in [1usize, 3, 8] {
-            let plan = PlannedModel::resolve(&cfg, &params, None, threads).unwrap();
+            let pool = KernelPool::new(threads);
+            let plan = PlannedModel::resolve(&cfg, &params, None, &pool).unwrap();
             let got = plan.lm_logits_at(&tokens, &pad, &last, 2).unwrap();
             assert_eq!(via_ref.data, got.data, "threads={threads}");
         }
@@ -524,7 +591,8 @@ mod tests {
         let params = init_params(&cfg, &mut Rng::new(4));
         let deltas = crate::bench::serve_bench::synth_adapter(&cfg, &params, 1, 9).unwrap();
         let overlay = DeltaOverlay::new(&deltas);
-        let plan = PlannedModel::resolve(&cfg, &params, Some(&overlay), 1).unwrap();
+        let plan =
+            PlannedModel::resolve(&cfg, &params, Some(&overlay), &KernelPool::serial()).unwrap();
         // the overlay may be dropped after resolve: views are pre-bound
         drop(overlay);
         assert_eq!(plan.bound_deltas(), deltas.len());
@@ -540,8 +608,8 @@ mod tests {
         let pad = vec![1.0f32; cfg.seq];
         let cls = plan.cls_logits(&tokens, &pad, 1).unwrap();
         assert_eq!(cls.shape, vec![1, cfg.n_classes]);
-        // threaded encoder forward is bit-identical too
-        let cls4 = plan.with_threads(4).cls_logits(&tokens, &pad, 1).unwrap();
+        // pooled encoder forward is bit-identical too
+        let cls4 = plan.with_pool(&KernelPool::new(4)).cls_logits(&tokens, &pad, 1).unwrap();
         assert_eq!(cls.data, cls4.data);
     }
 }

@@ -84,11 +84,18 @@ impl RowSelection {
 ///
 /// `score` gives each coordinate's priority (higher = selected first); the
 /// tie-break is the lower index, matching `jax.lax.top_k`.
+///
+/// The ordering is **total** (`f32::total_cmp`), so degenerate score
+/// tensors — NaN weights from a diverged checkpoint — select
+/// deterministically instead of panicking the old
+/// `partial_cmp().unwrap()`. Under `total_cmp`, positive NaN ranks above
+/// +inf: a NaN magnitude (`|NaN|` is positive) is selected first, ties
+/// still broken by the lower index.
 fn topk_row_by<F: Fn(usize) -> f32>(d_in: usize, k: usize, score: F) -> Vec<i32> {
     debug_assert!(k <= d_in);
-    // (score, index): order by score desc, then index asc.
+    // (score, index): TOTAL order by score desc, then index asc.
     let cmp = |a: &(f32, usize), b: &(f32, usize)| {
-        b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1))
+        b.0.total_cmp(&a.0).then(a.1.cmp(&b.1))
     };
     let mut items: Vec<(f32, usize)> = (0..d_in).map(|j| (score(j), j)).collect();
     if k < d_in {
@@ -258,6 +265,32 @@ mod tests {
         for i in 0..10 {
             assert_eq!(m.at2(i, 0), m.at2(i, 1)); // whole rows on/off
         }
+    }
+
+    /// Regression (ISSUE 5): NaN weights (a diverged checkpoint) used to
+    /// panic the importance ranking through `partial_cmp().unwrap()`. Now
+    /// selection is total and deterministic: NaN magnitude outranks every
+    /// finite weight (positive NaN > +inf under `total_cmp`), ties keep
+    /// the lower index, and the structural invariants still hold.
+    #[test]
+    fn nan_scores_select_deterministically() {
+        let w = w_from(&[
+            &[0.1, f32::NAN, 2.0, 0.0],
+            &[1.0, 1.0, f32::NAN, f32::NAN],
+            &[f32::NAN, f32::NAN, f32::NAN, f32::NAN],
+        ]);
+        let a = select_topk(&w, 2);
+        let b = select_topk(&w, 2);
+        assert_eq!(a.idx, b.idx, "degenerate selection must replay identically");
+        a.check().unwrap();
+        assert_eq!(a.idx.row(0), &[1, 2], "NaN outranks the finite weights");
+        assert_eq!(a.idx.row(1), &[2, 3], "NaN ties break by lower index");
+        assert_eq!(a.idx.row(2), &[0, 1], "all-NaN row degrades to index order");
+        // the reverse strategy is total too (negated NaN ranks last)
+        let mut rng = Rng::new(0);
+        let r = select(&w, 2, Strategy::Reverse, None, &mut rng);
+        r.check().unwrap();
+        assert_eq!(r.idx.row(0), &[3, 0], "reverse never selects the NaN first");
     }
 
     #[test]

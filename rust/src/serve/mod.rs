@@ -18,6 +18,10 @@
 //!   ([`Backend::Host`]) or the AOT HLO eval artifacts ([`Backend::Hlo`],
 //!   including the scatter-input bypass artifact), per-request response
 //!   channels, and a slot-based decode thread for streaming generation.
+//!   All host kernels (batched matmuls, attention, KV-cached decode steps)
+//!   run on ONE persistent `tensor::pool::KernelPool` per server, sized by
+//!   [`ServeCfg::threads`] and shared by the workers and the decode thread
+//!   — kernel threads are spawned once at `Server::start`, never per call.
 //!   Request types route by the registry's [`ModelKind`]: decoder
 //!   backbones serve scoring + generation, encoder (GLUE-suite) backbones
 //!   serve classification ([`ClsRequest`] → `PlannedModel::cls_logits`,

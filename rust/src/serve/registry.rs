@@ -19,6 +19,7 @@
 use crate::config::ModelCfg;
 use crate::model::{DeltaOverlay, PlannedModel};
 use crate::peft::DeltaStore;
+use crate::tensor::pool::KernelPool;
 use crate::runtime::ValueStore;
 use crate::train::checkpoint;
 use anyhow::{anyhow, bail, Result};
@@ -87,12 +88,14 @@ impl ModelRef {
     /// nothing tensor-sized; callers resolve once per batch / decode
     /// micro-batch iteration and run every forward through the plan —
     /// the steady-state loops never touch a name or rebuild an overlay.
-    pub fn planned<'a>(&'a self, cfg: &'a ModelCfg, threads: usize) -> Result<PlannedModel<'a>> {
+    /// `pool` is the shared [`KernelPool`] the plan's kernels run on (the
+    /// server's one pool; `KernelPool::serial()` for the serial baseline).
+    pub fn planned<'a>(&'a self, cfg: &'a ModelCfg, pool: &KernelPool) -> Result<PlannedModel<'a>> {
         match self {
-            ModelRef::Merged(store) => PlannedModel::resolve(cfg, store.as_ref(), None, threads),
+            ModelRef::Merged(store) => PlannedModel::resolve(cfg, store.as_ref(), None, pool),
             ModelRef::Bypass { backbone, deltas } => {
                 let overlay = DeltaOverlay::new(deltas.as_slice());
-                PlannedModel::resolve(cfg, backbone.as_ref(), Some(&overlay), threads)
+                PlannedModel::resolve(cfg, backbone.as_ref(), Some(&overlay), pool)
             }
         }
     }
@@ -577,12 +580,12 @@ mod tests {
         let cfg = reg.model_cfg().clone();
         // bypass view: the adapter's single delta is pre-bound
         let bypass = reg.bypass("a").unwrap();
-        let plan = bypass.planned(&cfg, 2).unwrap();
+        let plan = bypass.planned(&cfg, &KernelPool::new(2)).unwrap();
         assert_eq!(plan.bound_deltas(), 1);
-        assert_eq!(plan.threads, 2);
+        assert_eq!(plan.threads(), 2);
         // merged view: dense weights, nothing bound
         let merged = reg.merge_now("a").unwrap();
-        assert_eq!(merged.planned(&cfg, 1).unwrap().bound_deltas(), 0);
+        assert_eq!(merged.planned(&cfg, &KernelPool::serial()).unwrap().bound_deltas(), 0);
     }
 
     #[test]

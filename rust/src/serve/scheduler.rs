@@ -26,10 +26,11 @@
 //! batch from the shared [`MicroBatcher`] (full batch or deadline flush),
 //! resolve the adapter through the [`AdapterRegistry`] (merged or bypass
 //! view), resolve that view's zero-copy [`PlannedModel`] once, run one
-//! forward for the whole batch (row-partitioned across
-//! [`ServeCfg::threads`]), and answer every request on its own channel.
-//! Different adapters execute concurrently across workers; within one
-//! adapter, FIFO order is preserved per batch.
+//! forward for the whole batch (kernels row-partitioned across the
+//! server's one persistent [`KernelPool`], width [`ServeCfg::threads`],
+//! shared with the decode thread), and answer every request on its own
+//! channel. Different adapters execute concurrently across workers; within
+//! one adapter, FIFO order is preserved per batch.
 //!
 //! Admission is strictly bounded: when `max_queue` requests are pending,
 //! `submit` fails fast with [`Reject::QueueFull`] instead of buffering —
@@ -44,6 +45,7 @@ use crate::data::{cls_batch, eval_batch, Example};
 use crate::model::{sample_token, DecodeState, PlannedModel, SampleCfg};
 use crate::runtime::manifest::ArtifactMeta;
 use crate::runtime::{state::run_once, Engine, Value};
+use crate::tensor::pool::KernelPool;
 use crate::tensor::Tensor;
 use crate::util::nan_safe_argmax;
 use crate::util::rng::Rng;
@@ -229,11 +231,13 @@ pub struct ServeCfg {
     /// much pending-or-executing work — the rest of the bounded queue
     /// stays available to other adapters ([`Reject::QuotaExceeded`]).
     pub adapter_quota: usize,
-    /// Row-partition threads for the host batched forward (the planned
-    /// `matmul_nt`; results are bit-identical to serial at any count).
-    /// 0 = fall back to the `NEUROADA_THREADS` env var, else 1 (serial) —
-    /// resolved once at [`Server::start`]. The single-row decode step never
-    /// threads (nothing to partition; see `model::plan`).
+    /// Partition width of the server's one persistent [`KernelPool`]
+    /// (results are bit-identical to serial at any width). The pool is
+    /// created once at [`Server::start`] and shared by every scheduler
+    /// worker AND the decode thread: batched matmuls, attention, decode
+    /// steps, and prefill all run through it (see `tensor::pool` /
+    /// `docs/performance.md`). 0 = fall back to the `NEUROADA_THREADS`
+    /// env var, else 1 (serial).
     pub threads: usize,
 }
 
@@ -309,6 +313,10 @@ struct Shared {
     backend: Backend,
     registry: AdapterRegistry,
     metrics: ServeMetrics,
+    /// The server's one persistent kernel pool (width `cfg.threads`),
+    /// shared by the scheduler workers and the decode thread — its workers
+    /// are spawned once here, never per batch or per token.
+    pool: KernelPool,
     state: Mutex<State>,
     /// Wakes batch workers (scoring queue). Paired with `state`.
     cv: Condvar,
@@ -369,8 +377,11 @@ impl Server {
             // it would make every full batch unservable (Internal rejects)
             cfg.max_batch = cfg.max_batch.min(eval.model.batch);
         }
-        // resolve the forward thread count once (explicit > env > serial)
+        // resolve the forward thread count once (explicit > env > serial),
+        // then spawn the server's one kernel pool at that width — the only
+        // place serving ever spawns kernel threads
         cfg.threads = crate::util::resolve_threads(cfg.threads);
+        let pool = KernelPool::new(cfg.threads);
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 batcher: MicroBatcher::new(cfg.max_batch.max(1), cfg.max_delay),
@@ -382,6 +393,7 @@ impl Server {
             backend,
             registry,
             metrics: ServeMetrics::new(),
+            pool,
             cv: Condvar::new(),
             gen_cv: Condvar::new(),
         });
@@ -411,6 +423,13 @@ impl Server {
 
     pub fn registry(&self) -> &AdapterRegistry {
         &self.shared.registry
+    }
+
+    /// The server's shared kernel pool (width `ServeCfg::threads`). Exposed
+    /// for the pool-reuse tests and for callers embedding extra host
+    /// compute next to a running server.
+    pub fn kernel_pool(&self) -> &KernelPool {
+        &self.shared.pool
     }
 
     pub fn metrics(&self) -> MetricsReport {
@@ -913,7 +932,7 @@ fn decode_loop(sh: &Shared) {
             }
         }
         let plans: Vec<Result<PlannedModel>> =
-            models.iter().map(|m| m.planned(&mcfg, sh.cfg.threads)).collect();
+            models.iter().map(|m| m.planned(&mcfg, &sh.pool)).collect();
         let mut i = 0;
         while i < slots.len() {
             let pi = models
@@ -966,7 +985,7 @@ fn prefill_slot(sh: &Shared, mcfg: &ModelCfg, g: QueuedGen) -> Option<GenSlot> {
     };
     let path = model.path();
     let mut state = DecodeState::new(mcfg);
-    let logits = match host_prefill(mcfg, &model, &req.prompt, &mut state) {
+    let logits = match host_prefill(mcfg, &model, &req.prompt, &mut state, &sh.pool) {
         Ok(l) => l,
         Err(e) => {
             sh.metrics.record_reject("internal");
@@ -1060,17 +1079,19 @@ fn emit_token(sh: &Shared, slot: &mut GenSlot, token: i32) -> SlotStatus {
 /// Feed a token run through the KV-cached step, returning the logits after
 /// the last token. Resolves the zero-copy plan ONCE for the whole run —
 /// merged and bypass views share the code path, with bypass deltas
-/// pre-bound into the plan's projection slots. (Single steps after prefill
-/// go through the decode loop's per-iteration plans, not through here.)
+/// pre-bound into the plan's projection slots. Steps run through `pool`
+/// (the decode thread passes the server's shared pool, so prefill threads
+/// over `d_out` like every other step). (Single steps after prefill go
+/// through the decode loop's per-iteration plans, not through here.)
 pub fn host_prefill(
     mcfg: &ModelCfg,
     model: &ModelRef,
     tokens: &[i32],
     state: &mut DecodeState,
+    pool: &KernelPool,
 ) -> Result<Vec<f32>> {
     anyhow::ensure!(!tokens.is_empty(), "host_prefill: empty token run");
-    // threads=1: the step matmuls are single-row, nothing to partition
-    let plan = model.planned(mcfg, 1)?;
+    let plan = model.planned(mcfg, pool)?;
     let mut logits = Vec::new();
     for &t in tokens {
         logits = plan.forward_step(t, state)?;
@@ -1217,9 +1238,7 @@ fn batch_logits(
     n: usize,
 ) -> Result<Tensor> {
     match &sh.backend {
-        Backend::Host => {
-            host_logits_threaded(mcfg, model, tokens, pad_mask, last_pos, n, sh.cfg.threads)
-        }
+        Backend::Host => host_logits_pooled(mcfg, model, tokens, pad_mask, last_pos, n, &sh.pool),
         Backend::Hlo { eval, bypass } => {
             hlo_logits(mcfg, model, eval, bypass.as_ref(), tokens, pad_mask, last_pos, n)
         }
@@ -1230,7 +1249,7 @@ fn batch_logits(
 /// share the path, with bypass deltas pre-bound per projection. Public for
 /// the serving bench and parity tests (the worker path and the measurement
 /// path must be the same code). Serial; workers that want the
-/// row-partitioned matmuls use [`host_logits_threaded`].
+/// row-partitioned kernels use [`host_logits_pooled`].
 pub fn host_logits(
     mcfg: &ModelCfg,
     model: &ModelRef,
@@ -1239,22 +1258,22 @@ pub fn host_logits(
     last_pos: &[i32],
     n: usize,
 ) -> Result<Tensor> {
-    host_logits_threaded(mcfg, model, tokens, pad_mask, last_pos, n, 1)
+    host_logits_pooled(mcfg, model, tokens, pad_mask, last_pos, n, &KernelPool::serial())
 }
 
-/// [`host_logits`] with the batched matmuls row-partitioned across
-/// `threads` (bit-identical to serial for any count).
+/// [`host_logits`] with the batched kernels row-partitioned across the
+/// shared [`KernelPool`] (bit-identical to serial for any width).
 #[allow(clippy::too_many_arguments)]
-pub fn host_logits_threaded(
+pub fn host_logits_pooled(
     mcfg: &ModelCfg,
     model: &ModelRef,
     tokens: &[i32],
     pad_mask: &[f32],
     last_pos: &[i32],
     n: usize,
-    threads: usize,
+    pool: &KernelPool,
 ) -> Result<Tensor> {
-    model.planned(mcfg, threads)?.lm_logits_at(tokens, pad_mask, last_pos, n)
+    model.planned(mcfg, pool)?.lm_logits_at(tokens, pad_mask, last_pos, n)
 }
 
 /// Class logits `[n, n_classes]` through the zero-copy plan: merged and
@@ -1269,7 +1288,7 @@ pub fn host_cls_logits(
     pad_mask: &[f32],
     n: usize,
 ) -> Result<Tensor> {
-    model.planned(mcfg, 1)?.cls_logits(tokens, pad_mask, n)
+    model.planned(mcfg, &KernelPool::serial())?.cls_logits(tokens, pad_mask, n)
 }
 
 /// Class logits + NaN-safe predictions for a cls batch through the
@@ -1286,7 +1305,7 @@ fn cls_batch_predict(
 ) -> Result<(Tensor, Vec<usize>)> {
     let logits = match (&sh.backend, model) {
         (Backend::Host, _) | (Backend::Hlo { .. }, ModelRef::Bypass { .. }) => {
-            return model.planned(mcfg, sh.cfg.threads)?.cls_predict(tokens, pad_mask, n);
+            return model.planned(mcfg, &sh.pool)?.cls_predict(tokens, pad_mask, n);
         }
         (Backend::Hlo { eval, .. }, ModelRef::Merged(_)) => {
             hlo_cls_logits(mcfg, model, eval, tokens, pad_mask, n)?
@@ -1614,6 +1633,10 @@ mod tests {
         assert!(resp.pick < 2);
         // flushed by deadline, not stuck until some full batch
         assert!(t0.elapsed() < Duration::from_secs(5));
+        // the host forward routed its kernels through the server's ONE
+        // persistent pool (width 1 here: tests leave threads unset)
+        assert!(srv.kernel_pool().jobs() > 0, "forward must run on the server pool");
+        assert_eq!(srv.kernel_pool().threads(), crate::util::resolve_threads(0));
         srv.shutdown();
     }
 

@@ -67,7 +67,17 @@ where
         })
         .collect();
     let mut results = pool.scatter(jobs);
-    results.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    // Total, NaN-last ordering: a diverged run (NaN objective) must never
+    // panic the whole sweep (`partial_cmp().unwrap()` did) nor rank above
+    // a real score. Finite scores sort best-first via `total_cmp`; NaN
+    // points sink to the tail, mutually Equal so the stable sort keeps
+    // them in deterministic grid order.
+    results.sort_by(|a, b| match (a.score.is_nan(), b.score.is_nan()) {
+        (false, false) => b.score.total_cmp(&a.score),
+        (true, true) => std::cmp::Ordering::Equal,
+        (true, false) => std::cmp::Ordering::Greater,
+        (false, true) => std::cmp::Ordering::Less,
+    });
     results
 }
 
@@ -105,5 +115,30 @@ mod tests {
     fn point_rendering() {
         let p: Point = vec![("lr".into(), 0.003), ("k".into(), 1.0)];
         assert_eq!(point_str(&p), "lr=0.003 k=1");
+    }
+
+    /// Regression (ISSUE 5): a diverged objective (NaN score) used to
+    /// panic the whole sweep through `partial_cmp().unwrap()`. Now the
+    /// sweep completes, real scores rank best-first, and every NaN point
+    /// sinks to the tail in deterministic grid order.
+    #[test]
+    fn nan_scores_rank_last_without_panicking() {
+        let axes = [Axis::new("x", &[-2.0, -1.0, 0.0, 0.5, 1.0, 3.0])];
+        // x = -1 and x = 3 "diverge"; the rest score -(x-0.5)²
+        let res = search(&axes, 2, |p| {
+            let x = p[0].1;
+            if x == -1.0 || x == 3.0 {
+                f64::NAN
+            } else {
+                -(x - 0.5) * (x - 0.5)
+            }
+        });
+        assert_eq!(res.len(), 6, "every point evaluated");
+        assert_eq!(res[0].point[0].1, 0.5, "best finite point still wins");
+        assert!(res[..4].iter().all(|r| !r.score.is_nan()), "finite scores first");
+        assert!(res[4..].iter().all(|r| r.score.is_nan()), "NaN points last");
+        // stable sort keeps NaN points in grid order: x=-1 before x=3
+        assert_eq!(res[4].point[0].1, -1.0);
+        assert_eq!(res[5].point[0].1, 3.0);
     }
 }

@@ -8,6 +8,7 @@
 
 pub mod bf16;
 pub mod ops;
+pub mod pool;
 
 use crate::util::rng::Rng;
 

@@ -4,6 +4,7 @@
 //! selection, and evaluation. The hot training path does NOT run through
 //! here — that's the AOT HLO on PJRT.
 
+use super::pool::KernelPool;
 use super::Tensor;
 
 /// The shared dot kernel behind every `A·Bᵀ` variant: 4-wide manual unroll,
@@ -39,15 +40,60 @@ fn nt_row(ar: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
 }
 
 /// Raw-slice `C = A·Bᵀ` with A [m, k], B [n, k] → out [m, n], row-partitioned
-/// across `threads` scoped OS threads (no thread pool, no dependencies).
+/// across the persistent [`KernelPool`]'s width.
 ///
-/// Each output row is produced by the same serial kernel whichever thread
-/// computes it, so any thread count yields bit-identical results — the
-/// partition only divides rows, never a dot product. `threads <= 1` (or a
-/// single row) runs inline with zero spawn overhead. This is the planned
+/// Each output row is produced by the same serial kernel whichever executor
+/// computes it, so any partition width yields bit-identical results — the
+/// partition only divides rows, never a dot product. A serial pool (or a
+/// single row) runs inline with zero dispatch overhead. This is the planned
 /// forward's matmul: weights arrive as borrowed slices, never as copied
-/// `Tensor`s.
-pub fn nt_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32], threads: usize) {
+/// `Tensor`s, and the pool's workers are spawned once per server/bench/eval
+/// rather than per call (see `tensor::pool`; the old per-call
+/// scoped-spawn kernel survives as [`nt_into_scoped`], the bench baseline).
+pub fn nt_into(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+    pool: &KernelPool,
+) {
+    assert_eq!(a.len(), m * k, "A is [m, k]");
+    assert_eq!(b.len(), n * k, "B is [n, k]");
+    assert_eq!(out.len(), m * n, "out is [m, n]");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let t = pool.threads().max(1).min(m);
+    if t <= 1 {
+        for (i, orow) in out.chunks_mut(n).enumerate() {
+            nt_row(&a[i * k..(i + 1) * k], b, k, n, orow);
+        }
+        return;
+    }
+    let rows = m.div_ceil(t);
+    pool.run_chunks(out, rows * n, |ci, chunk| {
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            let i = ci * rows + r;
+            nt_row(&a[i * k..(i + 1) * k], b, k, n, orow);
+        }
+    });
+}
+
+/// PR 3's scoped-spawn kernel, kept verbatim as the perf baseline the
+/// pooled [`nt_into`] is benchmarked against (`forward_bench`'s
+/// pooled-vs-spawn cases) and cross-checked against bitwise in the parity
+/// tests. Spawns `threads` OS threads per call — do not use on a hot path.
+pub fn nt_into_scoped(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
     assert_eq!(a.len(), m * k, "A is [m, k]");
     assert_eq!(b.len(), n * k, "B is [n, k]");
     assert_eq!(out.len(), m * n, "out is [m, n]");
@@ -79,19 +125,19 @@ pub fn nt_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f3
 /// The `b` operand is row-major [n, k], matching how weight matrices are
 /// stored ([d_out, d_in]) so every row is a neuron and access is sequential.
 pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
-    matmul_nt_threaded(a, b, 1)
+    matmul_nt_pooled(a, b, &KernelPool::serial())
 }
 
-/// C = A·Bᵀ row-partitioned across `threads`; bit-identical to
-/// [`matmul_nt`] for every thread count (see [`nt_into`]).
-pub fn matmul_nt_threaded(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+/// C = A·Bᵀ row-partitioned across `pool`; bit-identical to
+/// [`matmul_nt`] for every partition width (see [`nt_into`]).
+pub fn matmul_nt_pooled(a: &Tensor, b: &Tensor, pool: &KernelPool) -> Tensor {
     assert_eq!(a.rank(), 2);
     assert_eq!(b.rank(), 2);
     let (m, k) = (a.shape[0], a.shape[1]);
     let (n, k2) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "inner dims: {:?} vs {:?}", a.shape, b.shape);
     let mut c = Tensor::zeros(&[m, n]);
-    nt_into(&a.data, m, k, &b.data, n, &mut c.data, threads);
+    nt_into(&a.data, m, k, &b.data, n, &mut c.data, pool);
     c
 }
 
@@ -232,17 +278,23 @@ mod tests {
     }
 
     #[test]
-    fn threaded_matmul_is_bitwise_serial() {
+    fn pooled_matmul_is_bitwise_serial() {
         use crate::util::rng::Rng;
         let mut r = Rng::new(9);
+        let pools: Vec<KernelPool> =
+            [2usize, 3, 4, 32].iter().map(|&t| KernelPool::new(t)).collect();
         // odd shapes: m, n, k deliberately not multiples of the partition
         for (m, n, k) in [(1usize, 5usize, 3usize), (7, 11, 13), (17, 3, 9), (5, 1, 4)] {
             let a = Tensor::randn(&[m, k], 1.0, &mut r);
             let b = Tensor::randn(&[n, k], 1.0, &mut r);
             let serial = matmul_nt(&a, &b);
-            for threads in [2usize, 3, 4, 32] {
-                let par = matmul_nt_threaded(&a, &b, threads);
-                assert_eq!(serial.data, par.data, "m={m} n={n} k={k} threads={threads}");
+            for pool in &pools {
+                let par = matmul_nt_pooled(&a, &b, pool);
+                assert_eq!(serial.data, par.data, "m={m} n={n} k={k} t={}", pool.threads());
+                // and the scoped-spawn baseline agrees with both
+                let mut scoped = vec![0.0f32; m * n];
+                nt_into_scoped(&a.data, m, k, &b.data, n, &mut scoped, pool.threads());
+                assert_eq!(serial.data, scoped, "scoped m={m} n={n} k={k}");
             }
         }
     }
@@ -255,7 +307,7 @@ mod tests {
         let b = Tensor::randn(&[4, 5], 1.0, &mut r);
         let c = matmul_nt(&a, &b);
         let mut out = vec![0.0f32; 6 * 4];
-        nt_into(&a.data, 6, 5, &b.data, 4, &mut out, 2);
+        nt_into(&a.data, 6, 5, &b.data, 4, &mut out, &KernelPool::new(2));
         assert_eq!(c.data, out);
     }
 }

@@ -1,0 +1,469 @@
+//! Persistent worker pool for data-parallel compute kernels.
+//!
+//! PR 3's row-partitioned matmuls spawned `std::thread::scope` threads per
+//! batched matmul. That was correct and bit-identical to serial, but every
+//! call paid OS thread creation + teardown (tens of microseconds), which is
+//! why the single-row decode step stayed serial: per-token spawns would have
+//! cost more than the O(d²) step they wrap. [`KernelPool`] removes that
+//! excuse — workers are spawned ONCE, live as long as the pool, and pick up
+//! per-call row-range tasks through an atomic cursor with a blocking join.
+//!
+//! Design:
+//!
+//! * **Partition width vs executors.** `threads` is the *partition* width —
+//!   kernels split their output into up to `threads` row ranges, exactly as
+//!   the scoped-spawn kernels did, so results stay bit-identical to serial
+//!   regardless of how many executors exist. The pool spawns
+//!   `min(threads, cores) - 1` persistent workers (the calling thread is
+//!   always executor #0), so an oversized `--threads` never oversubscribes
+//!   the machine — the dynamic task cursor load-balances the extra ranges.
+//! * **One job at a time.** Concurrent callers (scheduler workers + the
+//!   decode thread share one pool per `Server`) serialize on an internal
+//!   turn lock: the machine's cores are one resource, and two kernels
+//!   racing each other would just thrash. Each `run` is a blocking join —
+//!   it returns only after every task of its job has executed, which is
+//!   also what makes lending stack-borrowed closures to the workers sound.
+//! * **Fast handoff.** Workers spin briefly on an epoch atomic before
+//!   falling back to a condvar, so back-to-back kernels (the decode step
+//!   issues ~7 jobs per layer per token) pay ~microsecond pickup, not a
+//!   scheduler round trip.
+//! * **Panic containment.** A panicking task poisons the job, the join
+//!   still completes (no deadlocked `run`), and the *caller* re-panics.
+//!   Workers survive to serve the next job.
+//!
+//! Ownership: one pool per [`serve::Server`](crate::serve::Server) (sized by
+//! `ServeCfg::threads` / `NEUROADA_THREADS` / `--threads`, shared by the
+//! scheduler workers and the decode thread), one per bench or eval
+//! invocation. `KernelPool` is a cheap `Arc` handle — a resolved
+//! [`PlannedModel`](crate::model::PlannedModel) holds a clone, and the
+//! workers shut down (joined) when the last handle drops.
+//!
+//! Tasks must not call back into the pool (the turn lock is not reentrant);
+//! every kernel routed through here is a leaf computation.
+//!
+//! Sibling of [`coordinator::pool::Pool`](crate::coordinator::pool::Pool),
+//! which fans out coarse *jobs* (experiments, sweep points) over a
+//! spawn-per-scatter queue; `KernelPool` is for fine-grained *data-parallel*
+//! kernels where dispatch latency dominates.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+/// A borrowed data-parallel task body: called once per task index.
+type TaskFn = dyn Fn(usize) + Sync;
+
+/// One published job: the lifetime-erased task plus its own cursor and
+/// completion counter. The counters live *in the job* (not the pool) so a
+/// straggling worker still draining a finished job can never steal indices
+/// from the next one.
+struct JobCtx {
+    /// Erased borrow of the caller's closure — sound because `run` does not
+    /// return until `remaining` hits zero and the slot is cleared.
+    task: &'static TaskFn,
+    n_tasks: usize,
+    cursor: AtomicUsize,
+    remaining: AtomicUsize,
+    poisoned: AtomicBool,
+}
+
+struct Slot {
+    job: Option<Arc<JobCtx>>,
+    epoch: u64,
+    shutdown: bool,
+}
+
+struct Inner {
+    /// Partition width kernels split their work into (NOT the executor
+    /// count — see the module docs).
+    threads: usize,
+    /// Persistent workers spawned (`min(threads, cores) - 1`).
+    workers: usize,
+    slot: Mutex<Slot>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// Mirrors `Slot::epoch` for the workers' lock-free spin fast path.
+    epoch: AtomicU64,
+    /// Serializes concurrent `run` callers (one job at a time).
+    turn: Mutex<()>,
+    jobs: AtomicU64,
+    dispatched: AtomicU64,
+    tasks: AtomicU64,
+}
+
+/// Spin iterations before a waiter falls back to its condvar. Roughly a few
+/// microseconds — enough to catch the next kernel of a back-to-back stream,
+/// short enough not to burn a core when the pool goes idle.
+const SPIN: u32 = 1 << 14;
+
+fn run_tasks(inner: &Inner, ctx: &JobCtx) {
+    loop {
+        let i = ctx.cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= ctx.n_tasks {
+            return;
+        }
+        let task = ctx.task;
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(i))).is_err() {
+            ctx.poisoned.store(true, Ordering::Release);
+        }
+        inner.tasks.fetch_add(1, Ordering::Relaxed);
+        if ctx.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // last task of the job: wake the joining caller. Taking the
+            // slot lock orders the notify after the caller's wait, so the
+            // wakeup can never be missed.
+            let _g = inner.slot.lock().unwrap();
+            inner.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    let mut seen = 0u64;
+    loop {
+        // fast path: spin for the next epoch before sleeping
+        let mut spun = 0u32;
+        while inner.epoch.load(Ordering::Acquire) == seen && spun < SPIN {
+            std::hint::spin_loop();
+            spun += 1;
+        }
+        let ctx = {
+            let mut g = inner.slot.lock().unwrap();
+            loop {
+                if g.shutdown {
+                    return;
+                }
+                if g.epoch != seen {
+                    if let Some(ctx) = &g.job {
+                        seen = g.epoch;
+                        break ctx.clone();
+                    }
+                    // the job we spun towards already completed; wait for
+                    // the next publication
+                    seen = g.epoch;
+                }
+                g = inner.work_cv.wait(g).unwrap();
+            }
+        };
+        run_tasks(inner, &ctx);
+    }
+}
+
+/// Joins the workers when the last user handle drops. Workers hold
+/// `Arc<Inner>` themselves, so shutdown is signalled by this guard rather
+/// than by `Inner`'s refcount.
+struct Guard {
+    inner: Arc<Inner>,
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl Drop for Guard {
+    fn drop(&mut self) {
+        {
+            let mut g = self.inner.slot.lock().unwrap();
+            g.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Long-lived, work-distributing pool for compute kernels. Cheap to clone
+/// (an `Arc` handle); see the module docs for the execution model.
+#[derive(Clone)]
+pub struct KernelPool {
+    inner: Arc<Inner>,
+    _guard: Arc<Guard>,
+}
+
+impl KernelPool {
+    /// Pool with partition width `threads` (clamped to >= 1). Spawns
+    /// `min(threads, available cores) - 1` persistent workers; `threads <= 1`
+    /// spawns none and every `run` executes inline (the serial baseline).
+    pub fn new(threads: usize) -> KernelPool {
+        let threads = threads.max(1);
+        let cores = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let workers = threads.min(cores).saturating_sub(1);
+        let inner = Arc::new(Inner {
+            threads,
+            workers,
+            slot: Mutex::new(Slot { job: None, epoch: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            epoch: AtomicU64::new(0),
+            turn: Mutex::new(()),
+            jobs: AtomicU64::new(0),
+            dispatched: AtomicU64::new(0),
+            tasks: AtomicU64::new(0),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let inner = inner.clone();
+                thread::Builder::new()
+                    .name(format!("neuroada-kernel-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn kernel pool worker")
+            })
+            .collect();
+        let guard = Guard { inner: inner.clone(), handles: Mutex::new(handles) };
+        KernelPool { inner, _guard: Arc::new(guard) }
+    }
+
+    /// The shared serial pool (partition width 1, no workers, `run` always
+    /// inline). The bit-identical baseline every pooled kernel is tested
+    /// against; also what `RefModel::plan` and the serial bench cells use.
+    pub fn serial() -> KernelPool {
+        static SERIAL: OnceLock<KernelPool> = OnceLock::new();
+        SERIAL.get_or_init(|| KernelPool::new(1)).clone()
+    }
+
+    /// Partition width kernels split their work into.
+    pub fn threads(&self) -> usize {
+        self.inner.threads
+    }
+
+    /// Persistent workers spawned at construction (never changes — the
+    /// pool-reuse tests assert on this).
+    pub fn workers(&self) -> usize {
+        self.inner.workers
+    }
+
+    /// Total `run` calls (inline and dispatched).
+    pub fn jobs(&self) -> u64 {
+        self.inner.jobs.load(Ordering::Relaxed)
+    }
+
+    /// `run` calls that actually engaged the workers.
+    pub fn dispatched(&self) -> u64 {
+        self.inner.dispatched.load(Ordering::Relaxed)
+    }
+
+    /// Total task bodies executed across all jobs.
+    pub fn tasks(&self) -> u64 {
+        self.inner.tasks.load(Ordering::Relaxed)
+    }
+
+    /// Execute `task(0..n_tasks)` across the pool and block until every
+    /// task has run (the join). Tasks are claimed dynamically, so any
+    /// executor may run any index — callers must make tasks independent
+    /// (the kernels here write disjoint output ranges). Runs inline when
+    /// the pool is serial, the job is a single task, or no workers exist.
+    ///
+    /// Panics (after completing the join) if any task panicked.
+    pub fn run(&self, n_tasks: usize, task: &TaskFn) {
+        self.inner.jobs.fetch_add(1, Ordering::Relaxed);
+        if self.inner.workers == 0 || n_tasks <= 1 {
+            for i in 0..n_tasks {
+                task(i);
+            }
+            self.inner.tasks.fetch_add(n_tasks as u64, Ordering::Relaxed);
+            return;
+        }
+        // one job at a time; a poisoned turn (a previous caller's task
+        // panicked) must not wedge the pool for everyone else
+        let turn = self.inner.turn.lock().unwrap_or_else(|e| e.into_inner());
+        self.inner.dispatched.fetch_add(1, Ordering::Relaxed);
+        // Lifetime erasure: sound because this function does not return
+        // until `remaining == 0` and the slot's handle is cleared, so no
+        // worker can touch `task` after the borrow ends.
+        let task: &'static TaskFn = unsafe { &*(task as *const TaskFn) };
+        let ctx = Arc::new(JobCtx {
+            task,
+            n_tasks,
+            cursor: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(n_tasks),
+            poisoned: AtomicBool::new(false),
+        });
+        {
+            let mut g = self.inner.slot.lock().unwrap();
+            g.epoch += 1;
+            g.job = Some(ctx.clone());
+            self.inner.epoch.store(g.epoch, Ordering::Release);
+        }
+        self.inner.work_cv.notify_all();
+        // the caller is executor #0
+        run_tasks(&self.inner, &ctx);
+        // join: spin briefly for stragglers, then block on the condvar
+        let mut spun = 0u32;
+        while ctx.remaining.load(Ordering::Acquire) != 0 {
+            if spun < SPIN {
+                std::hint::spin_loop();
+                spun += 1;
+            } else {
+                let mut g = self.inner.slot.lock().unwrap();
+                while ctx.remaining.load(Ordering::Acquire) != 0 {
+                    g = self.inner.done_cv.wait(g).unwrap();
+                }
+                break;
+            }
+        }
+        {
+            let mut g = self.inner.slot.lock().unwrap();
+            g.job = None;
+        }
+        drop(turn);
+        if ctx.poisoned.load(Ordering::Acquire) {
+            panic!("kernel pool task panicked");
+        }
+    }
+
+    /// Partition `out` into consecutive `chunk_len`-element chunks and run
+    /// `f(chunk_index, chunk)` for each across the pool. Chunks are
+    /// disjoint, so each task owns its slice exclusively — this is the
+    /// shape every pooled kernel uses (row ranges of a row-major output).
+    pub fn run_chunks<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+        &self,
+        out: &mut [T],
+        chunk_len: usize,
+        f: F,
+    ) {
+        if out.is_empty() {
+            return;
+        }
+        assert!(chunk_len > 0, "run_chunks needs chunk_len >= 1");
+        let len = out.len();
+        let n_tasks = len.div_ceil(chunk_len);
+        let base = SendPtr(out.as_mut_ptr());
+        self.run(n_tasks, &|i| {
+            let start = i * chunk_len;
+            let end = (start + chunk_len).min(len);
+            // SAFETY: chunks [start, end) are disjoint per task index, each
+            // index runs exactly once per job, and `run` joins before the
+            // `out` borrow ends.
+            let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+            f(i, chunk);
+        });
+    }
+}
+
+/// Raw base pointer of a mutable slice, smuggled into `Sync` closures for
+/// disjoint-chunk writes (see [`KernelPool::run_chunks`] for the safety
+/// argument).
+struct SendPtr<T>(*mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_task_exactly_once() {
+        let pool = KernelPool::new(4);
+        for n in [1usize, 2, 3, 7, 64, 1000] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "n={n}: every task must run exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn run_chunks_partitions_disjointly() {
+        let pool = KernelPool::new(3);
+        // odd length vs chunk size: the tail chunk is short
+        let mut out = vec![0usize; 17];
+        pool.run_chunks(&mut out, 5, |ci, chunk| {
+            for (r, v) in chunk.iter_mut().enumerate() {
+                *v = ci * 5 + r + 1; // global index + 1
+            }
+        });
+        let want: Vec<usize> = (1..=17).collect();
+        assert_eq!(out, want);
+        // empty output is a no-op
+        pool.run_chunks(&mut [] as &mut [usize], 5, |_, _| panic!("no tasks"));
+    }
+
+    #[test]
+    fn serial_pool_is_inline_and_counts() {
+        // the shared serial() pool is inline by construction
+        assert_eq!(KernelPool::serial().threads(), 1);
+        assert_eq!(KernelPool::serial().workers(), 0);
+        // counter assertions use a PRIVATE width-1 pool: the shared static
+        // is used by concurrently-running tests, so its counters race
+        let pool = KernelPool::new(1);
+        assert_eq!((pool.threads(), pool.workers()), (1, 0));
+        let sum = AtomicUsize::new(0);
+        pool.run(8, &|i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 28);
+        assert_eq!(pool.jobs(), 1);
+        assert_eq!(pool.tasks(), 8);
+        assert_eq!(pool.dispatched(), 0, "a width-1 pool never dispatches");
+    }
+
+    #[test]
+    fn pool_is_reusable_and_workers_are_stable() {
+        let pool = KernelPool::new(3);
+        let workers = pool.workers();
+        assert!(workers <= 2, "never more workers than threads - 1");
+        let (j0, t0) = (pool.jobs(), pool.tasks());
+        for round in 1..=5u64 {
+            let sum = AtomicUsize::new(0);
+            pool.run(6, &|i| {
+                sum.fetch_add(i + 1, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 21);
+            assert_eq!(pool.jobs(), j0 + round);
+            assert_eq!(pool.tasks(), t0 + 6 * round);
+            // reuse spawns nothing: the worker set is fixed at construction
+            assert_eq!(pool.workers(), workers);
+        }
+    }
+
+    #[test]
+    fn concurrent_callers_serialize_but_complete() {
+        let pool = KernelPool::new(2);
+        let total = Arc::new(AtomicUsize::new(0));
+        thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = pool.clone();
+                let total = total.clone();
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        pool.run(4, &|_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 4);
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let pool = KernelPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(4, &|i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "a panicking task must fail the run");
+        // the pool is still serviceable afterwards
+        let ok = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn clones_share_one_worker_set() {
+        let pool = KernelPool::new(4);
+        let clone = pool.clone();
+        let before = pool.jobs();
+        clone.run(2, &|_| {});
+        assert_eq!(pool.jobs(), before + 1, "clones share counters (same pool)");
+        assert_eq!(pool.workers(), clone.workers());
+    }
+}

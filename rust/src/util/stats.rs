@@ -1,9 +1,19 @@
 //! Descriptive statistics for benches and evaluation metrics.
 
 /// Summary of a sample of measurements.
+///
+/// NaN policy (ISSUE 5): NaN samples are **filtered and counted** (`nan`)
+/// rather than panicking the sort (`partial_cmp().unwrap()` used to) or
+/// poisoning every statistic — one bad latency sample must not kill a
+/// bench run. All statistics describe the `n` valid samples; an empty or
+/// all-NaN input yields `n == 0` with every statistic NaN (which the JSON
+/// codec serializes as `null` and the metrics renderer prints as `-`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Valid (non-NaN) samples the statistics describe.
     pub n: usize,
+    /// NaN samples dropped from the input.
+    pub nan: usize,
     pub mean: f64,
     pub std: f64,
     pub min: f64,
@@ -14,14 +24,29 @@ pub struct Summary {
 
 impl Summary {
     pub fn of(xs: &[f64]) -> Summary {
-        assert!(!xs.is_empty());
-        let n = xs.len();
-        let mean = xs.iter().sum::<f64>() / n as f64;
-        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
-        let mut s = xs.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut s: Vec<f64> = xs.iter().copied().filter(|v| !v.is_nan()).collect();
+        let nan = xs.len() - s.len();
+        let n = s.len();
+        if n == 0 {
+            return Summary {
+                n: 0,
+                nan,
+                mean: f64::NAN,
+                std: f64::NAN,
+                min: f64::NAN,
+                max: f64::NAN,
+                p50: f64::NAN,
+                p95: f64::NAN,
+            };
+        }
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        // NaN-free by construction above; total_cmp keeps the sort total
+        // even for ±inf samples
+        s.sort_by(|a, b| a.total_cmp(b));
         Summary {
             n,
+            nan,
             mean,
             std: var.sqrt(),
             min: s[0],
@@ -32,9 +57,13 @@ impl Summary {
     }
 }
 
-/// Linear-interpolated percentile of a pre-sorted slice.
+/// Linear-interpolated percentile of a pre-sorted slice. An empty slice
+/// has no percentiles: NaN (explicit, instead of an index panic).
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     let n = sorted.len();
+    if n == 0 {
+        return f64::NAN;
+    }
     if n == 1 {
         return sorted[0];
     }
@@ -122,6 +151,47 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
+        assert_eq!((s.n, s.nan), (5, 0));
+    }
+
+    /// Regression (ISSUE 5): a NaN sample used to panic `Summary::of`
+    /// through `partial_cmp().unwrap()`. Now NaNs are filtered and
+    /// counted, and the statistics describe the remaining samples.
+    #[test]
+    fn summary_filters_and_counts_nan_samples() {
+        let s = Summary::of(&[2.0, f64::NAN, 1.0, f64::NAN, 3.0]);
+        assert_eq!((s.n, s.nan), (3, 2));
+        assert_eq!(s.mean, 2.0);
+        assert_eq!((s.min, s.max, s.p50), (1.0, 3.0, 2.0));
+        assert!(s.p95.is_finite());
+        // single valid sample: every order statistic is that sample
+        let one = Summary::of(&[f64::NAN, 7.5]);
+        assert_eq!((one.n, one.nan), (1, 1));
+        assert_eq!((one.min, one.max, one.p50, one.p95), (7.5, 7.5, 7.5, 7.5));
+    }
+
+    #[test]
+    fn summary_empty_and_all_nan_are_explicit() {
+        for (input, want_nan) in [(&[][..], 0usize), (&[f64::NAN, f64::NAN][..], 2)] {
+            let s = Summary::of(input);
+            assert_eq!((s.n, s.nan), (0, want_nan));
+            for v in [s.mean, s.std, s.min, s.max, s.p50, s.p95] {
+                assert!(v.is_nan(), "empty summary statistics are NaN, not a panic");
+            }
+        }
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        assert!(percentile(&[], 0.5).is_nan(), "empty slice: NaN, not an index panic");
+        assert_eq!(percentile(&[4.0], 0.95), 4.0);
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 1.0), 4.0);
+        assert_eq!(percentile(&s, 0.5), 2.5);
+        // ±inf samples stay total under total_cmp-sorted input
+        let inf = Summary::of(&[f64::NEG_INFINITY, 0.0, f64::INFINITY]);
+        assert_eq!((inf.min, inf.max), (f64::NEG_INFINITY, f64::INFINITY));
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! ISSUE-3 acceptance tests for the planned forward refactor.
+//! ISSUE-3/ISSUE-5 acceptance tests for the planned forward + the
+//! persistent kernel pool.
 //!
 //! 1. **Parity**: the zero-copy [`PlannedModel`] reproduces the
 //!    pre-refactor forward's logits to ≤ 1e-6 on nano for all four of
@@ -6,16 +7,22 @@
 //!    The pre-refactor path is kept verbatim as
 //!    `bench::forward_bench::legacy::LegacyModel`; in practice the batch
 //!    kernels are bit-identical, so the observed diff is 0.0.
-//! 2. **Threading**: the row-partitioned `matmul_nt` equals serial
-//!    BITWISE on randomized odd shapes (m, n, k not multiples of the
-//!    partition), via the in-repo property framework.
+//! 2. **Pooled kernels are bitwise serial** (ISSUE 5): the persistent-pool
+//!    `matmul_nt`, the `d_out`-partitioned decode step, and the pooled
+//!    attention (batched across rows, step across heads) equal the serial
+//!    path BITWISE on randomized odd shapes and thread counts, via the
+//!    in-repo property framework. The scoped-spawn baseline kernel is
+//!    cross-checked too.
+//! 3. **Pool reuse**: one pool serves many forwards without spawning
+//!    anything new — asserted via pool-internal counters, not timing.
 
 use neuroada::bench::forward_bench::legacy::LegacyModel;
 use neuroada::bench::serve_bench::synth_adapter;
 use neuroada::config::presets;
 use neuroada::model::init::init_params;
 use neuroada::model::{DecodeState, DeltaOverlay, PlannedModel};
-use neuroada::tensor::ops::{matmul_nt, matmul_nt_threaded};
+use neuroada::tensor::ops::{matmul_nt, matmul_nt_pooled, nt_into_scoped};
+use neuroada::tensor::pool::KernelPool;
 use neuroada::tensor::Tensor;
 use neuroada::testing::{prop_check, PropConfig};
 use neuroada::util::rng::Rng;
@@ -34,26 +41,32 @@ fn batch_inputs(cfg: &neuroada::config::ModelCfg, b: usize) -> (Vec<i32>, Vec<f3
 }
 
 /// Acceptance: planned batch forward == pre-refactor batch forward to
-/// ≤ 1e-6, merged AND bypass, serial AND threaded.
+/// ≤ 1e-6, merged AND bypass, serial AND pooled.
 #[test]
 fn planned_batch_matches_legacy_merged_and_bypass() {
     let (cfg, backbone) = nano();
     let deltas = synth_adapter(&cfg, &backbone, 2, 42).unwrap();
     let overlay = DeltaOverlay::new(&deltas);
     let (tokens, pad, last) = batch_inputs(&cfg, 4);
+    let serial = KernelPool::serial();
+    let pool4 = KernelPool::new(4);
     for (label, ov) in [("merged", None), ("bypass", Some(&overlay))] {
         let legacy = LegacyModel { cfg: &cfg, params: &backbone, overlay: ov };
         let want = legacy.lm_logits_at(&tokens, &pad, &last, 4).unwrap();
-        for threads in [1usize, 4] {
-            let plan = PlannedModel::resolve(&cfg, &backbone, ov, threads).unwrap();
+        for pool in [&serial, &pool4] {
+            let plan = PlannedModel::resolve(&cfg, &backbone, ov, pool).unwrap();
             let got = plan.lm_logits_at(&tokens, &pad, &last, 4).unwrap();
             let diff = want.max_abs_diff(&got);
-            assert!(diff <= 1e-6, "{label} threads={threads}: plan vs legacy diff {diff}");
+            assert!(
+                diff <= 1e-6,
+                "{label} threads={}: plan vs legacy diff {diff}",
+                pool.threads()
+            );
         }
     }
     // the bypass genuinely differs from the raw backbone (the overlay bound)
     let raw = PlannedModel::new(&cfg, &backbone).unwrap().lm_logits_at(&tokens, &pad, &last, 4).unwrap();
-    let by = PlannedModel::resolve(&cfg, &backbone, Some(&overlay), 1)
+    let by = PlannedModel::resolve(&cfg, &backbone, Some(&overlay), &KernelPool::serial())
         .unwrap()
         .lm_logits_at(&tokens, &pad, &last, 4)
         .unwrap();
@@ -70,7 +83,7 @@ fn planned_step_matches_legacy_merged_and_bypass() {
     let toks: Vec<i32> = (0..16).map(|i| 4 + (i * 7) % 40).collect();
     for (label, ov) in [("merged", None), ("bypass", Some(&overlay))] {
         let legacy = LegacyModel { cfg: &cfg, params: &backbone, overlay: ov };
-        let plan = PlannedModel::resolve(&cfg, &backbone, ov, 1).unwrap();
+        let plan = PlannedModel::resolve(&cfg, &backbone, ov, &KernelPool::serial()).unwrap();
         let mut sl = DecodeState::new(&cfg);
         let mut sp = DecodeState::new(&cfg);
         for (pos, &t) in toks.iter().enumerate() {
@@ -87,10 +100,13 @@ fn planned_step_matches_legacy_merged_and_bypass() {
     }
 }
 
-/// Satellite property: threaded `matmul_nt` equals serial bitwise on odd
-/// shapes — m, n, k drawn so they are NOT multiples of the thread count.
+/// ISSUE-5 property: the persistent-pool `matmul_nt` equals serial bitwise
+/// on odd shapes — m, n, k drawn so they are NOT multiples of the
+/// partition — and the scoped-spawn baseline kernel agrees with both.
 #[test]
-fn prop_threaded_matmul_bitwise_on_odd_shapes() {
+fn prop_pooled_matmul_bitwise_on_odd_shapes() {
+    let pools: Vec<KernelPool> =
+        [2usize, 3, 5, 7, 33].iter().map(|&t| KernelPool::new(t)).collect();
     prop_check(PropConfig { cases: 48, max_size: 23, base_seed: 0xF00D }, |rng, size| {
         let m = 1 + rng.below(size.max(1) * 2);
         let n = 1 + rng.below(size.max(1) * 2);
@@ -98,10 +114,21 @@ fn prop_threaded_matmul_bitwise_on_odd_shapes() {
         let a = Tensor::randn(&[m, k], 1.0, rng);
         let b = Tensor::randn(&[n, k], 1.0, rng);
         let serial = matmul_nt(&a, &b);
-        for threads in [2usize, 3, 5, 7, m + 1] {
-            let par = matmul_nt_threaded(&a, &b, threads);
+        for pool in &pools {
+            let par = matmul_nt_pooled(&a, &b, pool);
             if serial.data != par.data {
-                return Err(format!("m={m} n={n} k={k} threads={threads}: not bitwise equal"));
+                return Err(format!(
+                    "m={m} n={n} k={k} threads={}: pooled not bitwise equal",
+                    pool.threads()
+                ));
+            }
+            let mut scoped = vec![0.0f32; m * n];
+            nt_into_scoped(&a.data, m, k, &b.data, n, &mut scoped, pool.threads());
+            if serial.data != scoped {
+                return Err(format!(
+                    "m={m} n={n} k={k} threads={}: scoped baseline not bitwise equal",
+                    pool.threads()
+                ));
             }
         }
         Ok(())
@@ -109,21 +136,104 @@ fn prop_threaded_matmul_bitwise_on_odd_shapes() {
     .unwrap();
 }
 
+/// ISSUE-5 property: the pooled decode step (the `d_out` partition per
+/// projection, pooled attention across heads, pooled LM head over the
+/// vocab) is bitwise identical to the serial step at every position,
+/// merged AND bypass, across odd pool widths. micro with a lengthened
+/// context so the step's attention clears its pooling work floor.
+#[test]
+fn prop_pooled_step_bitwise_merged_and_bypass() {
+    let mut cfg = presets::model("micro").unwrap();
+    cfg.seq = 64; // nh·ctx·hd = 4·p·32 crosses the attention pool floor
+    let backbone = init_params(&cfg, &mut Rng::new(99));
+    let deltas = synth_adapter(&cfg, &backbone, 1, 44).unwrap();
+    let overlay = DeltaOverlay::new(&deltas);
+    let toks: Vec<i32> = (0..cfg.seq).map(|i| 4 + ((i * 13) % (cfg.vocab - 4)) as i32).collect();
+    for threads in [2usize, 3, 5] {
+        let pool = KernelPool::new(threads);
+        for (label, ov) in [("merged", None), ("bypass", Some(&overlay))] {
+            let serial = PlannedModel::resolve(&cfg, &backbone, ov, &KernelPool::serial()).unwrap();
+            let pooled = PlannedModel::resolve(&cfg, &backbone, ov, &pool).unwrap();
+            let mut ss = DecodeState::new(&cfg);
+            let mut sp = DecodeState::new(&cfg);
+            for (pos, &t) in toks.iter().enumerate() {
+                let want = serial.forward_step(t, &mut ss).unwrap();
+                let got = pooled.forward_step(t, &mut sp).unwrap();
+                assert_eq!(want, got, "{label} threads={threads} position {pos}");
+            }
+            // the KV caches themselves are bitwise identical too
+            assert_eq!(ss.kv_bytes(), sp.kv_bytes());
+        }
+    }
+}
+
+/// ISSUE-5: pooled batched attention (partitioned across batch rows) is
+/// bitwise identical to serial — `hidden` exercises attention directly,
+/// and a batch > 1 with per-row pad masks makes the partition non-trivial.
+#[test]
+fn pooled_batched_attention_bitwise_matches_serial() {
+    let (cfg, backbone) = nano();
+    let b = 5; // odd batch: partitions unevenly at every pool width
+    let (tokens, mut pad, _) = batch_inputs(&cfg, b);
+    // ragged pad masks so every batch row attends differently
+    for bi in 0..b {
+        for t in (cfg.seq - bi)..cfg.seq {
+            pad[bi * cfg.seq + t] = 0.0;
+        }
+    }
+    let serial = PlannedModel::new(&cfg, &backbone).unwrap();
+    let want = serial.hidden(&tokens, &pad, b).unwrap();
+    for threads in [2usize, 3, 8] {
+        let pool = KernelPool::new(threads);
+        let got = PlannedModel::resolve(&cfg, &backbone, None, &pool)
+            .unwrap()
+            .hidden(&tokens, &pad, b)
+            .unwrap();
+        assert_eq!(want.data, got.data, "threads={threads}");
+    }
+}
+
+/// ISSUE-5: one pool serves many forwards — jobs flow through it, and
+/// nothing new is ever spawned (pool-internal counters, not timing).
+#[test]
+fn pool_reuse_two_forwards_no_worker_leak() {
+    let (cfg, backbone) = nano();
+    let (tokens, pad, last) = batch_inputs(&cfg, 4);
+    let pool = KernelPool::new(3);
+    let workers = pool.workers();
+    assert!(workers <= 2, "a width-3 pool spawns at most 2 workers");
+    let plan = PlannedModel::resolve(&cfg, &backbone, None, &pool).unwrap();
+    let first = plan.lm_logits_at(&tokens, &pad, &last, 4).unwrap();
+    let jobs_after_first = pool.jobs();
+    assert!(jobs_after_first > 0, "the forward must route its kernels through the pool");
+    let second = plan.lm_logits_at(&tokens, &pad, &last, 4).unwrap();
+    assert_eq!(first.data, second.data, "same plan, same pool, same bits");
+    assert!(pool.jobs() > jobs_after_first, "the second forward reuses the same pool");
+    assert_eq!(pool.workers(), workers, "reuse spawns no new workers");
+    assert!(pool.dispatched() <= pool.jobs());
+    // a decode step over the same pool also reuses it
+    let mut state = DecodeState::new(&cfg);
+    let jobs_before_step = pool.jobs();
+    plan.forward_step(4, &mut state).unwrap();
+    assert!(pool.jobs() > jobs_before_step, "the step routes through the pool too");
+    assert_eq!(pool.workers(), workers);
+}
+
 /// Steady-state contract: a resolved plan keeps serving after the overlay
-/// handle is gone (views are pre-bound), and re-threading does not change
+/// handle is gone (views are pre-bound), and re-pooling does not change
 /// results.
 #[test]
-fn plan_survives_overlay_drop_and_rethreading() {
+fn plan_survives_overlay_drop_and_repooling() {
     let (cfg, backbone) = nano();
     let deltas = synth_adapter(&cfg, &backbone, 1, 44).unwrap();
     let (tokens, pad, last) = batch_inputs(&cfg, 2);
     let plan = {
         let overlay = DeltaOverlay::new(&deltas);
-        PlannedModel::resolve(&cfg, &backbone, Some(&overlay), 1).unwrap()
+        PlannedModel::resolve(&cfg, &backbone, Some(&overlay), &KernelPool::serial()).unwrap()
         // overlay dropped here; the plan's scatter views borrow `deltas`
     };
     assert_eq!(plan.bound_deltas(), deltas.len());
     let a = plan.lm_logits_at(&tokens, &pad, &last, 2).unwrap();
-    let b = plan.with_threads(3).lm_logits_at(&tokens, &pad, &last, 2).unwrap();
+    let b = plan.with_pool(&KernelPool::new(3)).lm_logits_at(&tokens, &pad, &last, 2).unwrap();
     assert_eq!(a.data, b.data);
 }

@@ -451,8 +451,13 @@ fn cls_mixed_adapter_coalescing_preserves_per_adapter_parity() {
     // offline per-adapter predictions over the same examples
     let offline = |deltas: &[(String, neuroada::peft::DeltaStore)]| -> Vec<usize> {
         let overlay = neuroada::model::DeltaOverlay::new(deltas);
-        let plan =
-            neuroada::model::PlannedModel::resolve(&cfg, &backbone, Some(&overlay), 1).unwrap();
+        let plan = neuroada::model::PlannedModel::resolve(
+            &cfg,
+            &backbone,
+            Some(&overlay),
+            &neuroada::tensor::pool::KernelPool::serial(),
+        )
+        .unwrap();
         examples
             .iter()
             .map(|ex| {
