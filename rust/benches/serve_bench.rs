@@ -5,6 +5,9 @@
 //!   registry/merge   adapter promotion (merge + cache) cost
 //!   e2e/merged       scheduler throughput, all adapters promoted
 //!   e2e/bypass       scheduler throughput, merging disabled
+//!   trace-overhead   traced vs untraced e2e (gated: <=1.05x by default,
+//!                    NEUROADA_TRACE_OVERHEAD_CAP to override)
+//!   e2e-size/*       per-size e2e sweep with stage-latency breakdown
 //!   cls/*            the encoder-classification mirror of the above
 //!
 //! Run: `cargo bench --bench serve_bench` (NEUROADA_BENCH=full for longer
@@ -48,5 +51,31 @@ fn main() -> anyhow::Result<()> {
     print!("{}", report.render());
     std::fs::write("BENCH_serve.json", report.to_json().dump_pretty())?;
     println!("(wrote BENCH_serve.json; merged = dense backbone copy per hot adapter; bypass = one frozen backbone + sparse Δ per request)");
+    // tracing-overhead gate: ServeCfg::trace must stay near-free. The cap
+    // applies to the RATIO, with a small absolute-time slack so tiny quick
+    // workloads (total e2e of a few ms, where one scheduler wakeup is
+    // already >5%) cannot flake the gate on noise alone.
+    let cap: f64 = std::env::var("NEUROADA_TRACE_OVERHEAD_CAP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.05);
+    println!("trace overhead: {:.3}x (cap {cap:.2}x)", report.trace_overhead);
+    if report.trace_overhead > cap {
+        let merged_secs =
+            report.e2e_merged.latency.as_ref().map(|s| s.mean * s.n as f64).unwrap_or(0.0);
+        if merged_secs < 0.050 {
+            println!(
+                "trace overhead {:.3}x exceeds cap {cap:.2}x but the workload is too small \
+                 ({merged_secs:.4}s of total request time) for the ratio to be signal; \
+                 rerun with NEUROADA_BENCH=full to enforce",
+                report.trace_overhead
+            );
+        } else {
+            anyhow::bail!(
+                "trace overhead {:.3}x exceeds cap {cap:.2}x (NEUROADA_TRACE_OVERHEAD_CAP)",
+                report.trace_overhead
+            );
+        }
+    }
     Ok(())
 }

@@ -108,7 +108,17 @@ SUBCOMMANDS
                     [--threads N] [--generate] [--max-new 16] [--slots 8]
                     [--quota N] [--temp T] [--top-k K]
                     [--cls] [--task glue-sst2]
-                    (--generate streams decode tokens through the KV-cached
+                    [--metrics-addr HOST:PORT] [--metrics-out FILE]
+                    [--trace-out FILE]
+                    (observability: --metrics-addr serves GET /metrics
+                    (Prometheus text) and /metrics.json (JSON snapshot)
+                    for the run's duration; --metrics-out writes the final
+                    snapshot JSON; --trace-out enables request tracing and
+                    writes a Chrome trace-event JSON loadable in Perfetto,
+                    asserting stage spans cover >=95% of each request's
+                    end-to-end latency. NEUROADA_LOG=error|warn|info|debug
+                    filters the serve log lines. See docs/observability.md.
+                    --generate streams decode tokens through the KV-cached
                     slot scheduler instead of scoring options; --temp/--top-k
                     switch greedy to seeded sampling; --threads N sizes the
                     server's ONE persistent kernel pool — batched matmuls,

@@ -35,6 +35,11 @@
 //!                     classification serving with exact eval parity,
 //!                     per-adapter admission quotas, serving metrics
 //!                     (see `docs/serving.md`).
+//! * [`obs`]         — observability: lock-light request/span tracing with
+//!                     Chrome-trace (Perfetto) export, leveled `NEUROADA_LOG`
+//!                     logging, and the Prometheus/JSON metrics endpoint
+//!                     behind `neuroada serve --metrics-addr`
+//!                     (see `docs/observability.md`).
 //! * [`sweep`]       — hyperparameter grid search (Tables 5–7).
 //! * [`coordinator`] — thread-pool job runner + experiment drivers (repro).
 //! * [`bench`]       — measurement harness used by `cargo bench` targets
@@ -49,6 +54,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod model;
+pub mod obs;
 pub mod peft;
 pub mod runtime;
 pub mod serve;

@@ -10,8 +10,11 @@ use neuroada::config::presets;
 use neuroada::coordinator::common::{Coordinator, RunOpts};
 use neuroada::coordinator::experiments as exp;
 use neuroada::data::tasks;
+use neuroada::obs::http::HttpServer;
+use neuroada::obs::log as olog;
 use neuroada::peft::memory::DtypeModel;
 use neuroada::peft::{Method, MethodKind, Strategy};
+use neuroada::serve::{MetricsReport, Server};
 use neuroada::util::fmt_bytes;
 use neuroada::util::table::Table;
 
@@ -212,6 +215,84 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Shared tail of every `neuroada serve` mode: self-scrape the metrics
+/// endpoint while the server is still live (so a CI run proves the
+/// exporters parse, not just that they bind), shut down, then write the
+/// `--metrics-out` JSON snapshot and the `--trace-out` Chrome trace.
+/// With `--trace-out`, the per-request stage-span coverage is the run's
+/// correctness gate: spans must account for >= 95% of every request's
+/// end-to-end latency or the command exits non-zero.
+fn finish_serve(
+    srv: Server,
+    http: Option<HttpServer>,
+    trace_out: Option<&str>,
+    metrics_out: Option<&str>,
+) -> Result<MetricsReport> {
+    let tracer = srv.tracer();
+    if let Some(h) = &http {
+        let prom = neuroada::obs::http::get(h.addr(), "/metrics")
+            .map_err(|e| anyhow!("self-scrape of /metrics failed: {e}"))?;
+        let json = neuroada::obs::http::get(h.addr(), "/metrics.json")
+            .map_err(|e| anyhow!("self-scrape of /metrics.json failed: {e}"))?;
+        neuroada::util::json::Json::parse(&json)
+            .map_err(|e| anyhow!("/metrics.json did not parse back: {e}"))?;
+        olog::info(
+            "serve",
+            format_args!(
+                "metrics endpoint {}: scraped {} bytes of Prometheus text, \
+                 {} bytes of JSON (parsed)",
+                h.addr(),
+                prom.len(),
+                json.len()
+            ),
+        );
+    }
+    let report = srv.shutdown();
+    if let Some(h) = http {
+        h.stop();
+    }
+    if let Some(path) = metrics_out {
+        std::fs::write(path, report.to_json().dump_pretty())?;
+        olog::info("serve", format_args!("wrote metrics snapshot to {path:?}"));
+    }
+    if let Some(path) = trace_out {
+        std::fs::write(path, tracer.to_chrome_json().dump_pretty())?;
+        let events = tracer.events();
+        let dropped = tracer.dropped();
+        if dropped > 0 {
+            olog::warn(
+                "serve",
+                format_args!("trace ring wrapped: {dropped} spans overwritten"),
+            );
+        }
+        let mut fracs: Vec<f64> =
+            neuroada::obs::trace::request_coverage(&events).into_iter().map(|(_, f)| f).collect();
+        if fracs.is_empty() {
+            olog::warn("serve", format_args!("trace at {path:?} has no completed request spans"));
+        } else {
+            fracs.sort_by(|a, b| a.total_cmp(b));
+            let min = fracs[0];
+            let p50 = fracs[fracs.len() / 2];
+            olog::info(
+                "serve",
+                format_args!(
+                    "wrote Chrome trace to {path:?}: {} spans, {} requests, \
+                     stage coverage min {min:.3} / p50 {p50:.3}",
+                    events.len(),
+                    fracs.len()
+                ),
+            );
+            if min < 0.95 {
+                bail!(
+                    "trace stage coverage {min:.3} below the 0.95 contract \
+                     (stage spans must account for each request's end-to-end latency)"
+                );
+            }
+        }
+    }
+    Ok(report)
+}
+
 /// `neuroada serve`: stand up the multi-adapter serving engine, drive a
 /// synthetic request stream through it, and report serving metrics. With
 /// `--generate`, traffic is streaming greedy decode (tokens stream back as
@@ -269,14 +350,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         for e in &entries {
             let name = e.file_name().to_string_lossy().to_string();
             registry.register_dir(&name, e.path())?;
-            eprintln!("[serve] registered adapter {name:?} from {:?}", e.path());
+            olog::info("serve", format_args!("registered adapter {name:?} from {:?}", e.path()));
         }
         if registry.is_empty() {
             bail!("no delta checkpoints under {dir:?} (want <dir>/<name>/deltas/*.bin)");
         }
     } else {
         let n = args.opt_usize("adapters").map_err(|e| anyhow!(e))?.unwrap_or(4).max(2);
-        eprintln!("[serve] synthesizing {n} adapters (k=1, seeded)");
+        olog::info("serve", format_args!("synthesizing {n} adapters (k=1, seeded)"));
         for (name, deltas) in synth_adapters(&cfg, &backbone, n, 1, seed ^ 0xADAF)? {
             registry.register(&name, deltas)?;
         }
@@ -301,10 +382,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         backend_from_manifest(&args.opt_or("artifacts", "artifacts"), &size)
     };
     match &backend {
-        Backend::Host => eprintln!("[serve] backend: pure-rust forward"),
-        Backend::Hlo { bypass, .. } => eprintln!(
-            "[serve] backend: HLO eval artifact (bypass artifact: {})",
-            if bypass.is_some() { "present" } else { "absent, host fallback" }
+        Backend::Host => olog::info("serve", format_args!("backend: pure-rust forward")),
+        Backend::Hlo { bypass, .. } => olog::info(
+            "serve",
+            format_args!(
+                "backend: HLO eval artifact (bypass artifact: {})",
+                if bypass.is_some() { "present" } else { "absent, host fallback" }
+            ),
         ),
     }
 
@@ -322,13 +406,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
         adapter_quota: args.opt_usize("quota").map_err(|e| anyhow!(e))?.unwrap_or(0),
         // 0 = NEUROADA_THREADS env fallback, else serial (resolved at start)
         threads: args.opt_usize("threads").map_err(|e| anyhow!(e))?.unwrap_or(0),
+        // request tracing rides the --trace-out flag: no output file, no
+        // per-request span overhead
+        trace: args.opt("trace-out").is_some(),
     };
-    eprintln!(
-        "[serve] kernel pool width: {} (--threads / NEUROADA_THREADS; one persistent pool \
-         shared by workers + decode thread)",
-        neuroada::util::resolve_threads(scfg.threads)
+    let trace_out = args.opt("trace-out").map(str::to_string);
+    let metrics_out = args.opt("metrics-out").map(str::to_string);
+    olog::info(
+        "serve",
+        format_args!(
+            "kernel pool width: {} (--threads / NEUROADA_THREADS; one persistent pool \
+             shared by workers + decode thread){}",
+            neuroada::util::resolve_threads(scfg.threads),
+            if scfg.trace { "; request tracing ON" } else { "" }
+        ),
     );
     let srv = Server::start(registry, scfg, backend)?;
+    let http = match args.opt("metrics-addr") {
+        Some(addr) => {
+            let h = srv.metrics_http(addr).map_err(|e| anyhow!("--metrics-addr {addr}: {e}"))?;
+            olog::info(
+                "serve",
+                format_args!("metrics endpoint on http://{}/metrics (+ /metrics.json)", h.addr()),
+            );
+            Some(h)
+        }
+        None => None,
+    };
 
     // synthetic traffic: task-shaped prompts, Zipf-popular adapters (so the
     // LRU + promotion machinery sees realistic skew)
@@ -361,11 +465,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // this runs for every explicit --temp, so bad values never fall
             // back to greedy silently)
             s.validate().map_err(|e| anyhow!("--temp: {e}"))?;
-            eprintln!(
-                "[serve] sampling: temp={} top-k={} (seeded per request{})",
-                s.temperature,
-                s.top_k,
-                if s.temperature == 0.0 { "; temp 0 = greedy" } else { "" }
+            olog::info(
+                "serve",
+                format_args!(
+                    "sampling: temp={} top-k={} (seeded per request{})",
+                    s.temperature,
+                    s.top_k,
+                    if s.temperature == 0.0 { "; temp 0 = greedy" } else { "" }
+                ),
             );
         }
         let mut gen_reqs: Vec<GenerateRequest> = (0..n_req)
@@ -420,7 +527,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         let (o, r, t) = srv.drive_gen_clients(gen_reqs, clients);
         let (ok, rejected, toks) = (ok + o, rejected + r, toks + t);
-        let report = srv.shutdown();
+        let report = finish_serve(srv, http, trace_out.as_deref(), metrics_out.as_deref())?;
         println!("{}", report.render());
         println!(
             "streamed {toks} tokens over {ok}/{n_req} generations ({rejected} rejected) \
@@ -456,7 +563,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     adapter_table.print();
-    let report = srv.shutdown();
+    let report = finish_serve(srv, http, trace_out.as_deref(), metrics_out.as_deref())?;
     println!("{}", report.render());
     println!(
         "served {ok}/{n_req} requests ({rejected} rejected) across {} adapters from one resident backbone",
@@ -494,7 +601,10 @@ fn cmd_serve_cls(args: &Args, cfg: neuroada::config::ModelCfg) -> Result<()> {
     // a fresh-init encoder has an all-zero classifier head (training fills
     // it); a trained checkpoint's head is left untouched
     if randomize_zero_head(&cfg, &mut backbone, seed ^ 0xEAD)? {
-        eprintln!("[serve] zero classifier head: randomized (seeded) for synthetic cls serving");
+        olog::info(
+            "serve",
+            format_args!("zero classifier head: randomized (seeded) for synthetic cls serving"),
+        );
     }
 
     // adapters, with their deltas kept aside for the parity oracle
@@ -508,7 +618,7 @@ fn cmd_serve_cls(args: &Args, cfg: neuroada::config::ModelCfg) -> Result<()> {
         for e in &entries {
             let name = e.file_name().to_string_lossy().to_string();
             let deltas = neuroada::train::checkpoint::load_deltas(e.path())?;
-            eprintln!("[serve] loaded adapter {name:?} from {:?}", e.path());
+            olog::info("serve", format_args!("loaded adapter {name:?} from {:?}", e.path()));
             adapters.push((name, deltas));
         }
         if adapters.is_empty() {
@@ -516,7 +626,7 @@ fn cmd_serve_cls(args: &Args, cfg: neuroada::config::ModelCfg) -> Result<()> {
         }
     } else {
         let n = args.opt_usize("adapters").map_err(|e| anyhow!(e))?.unwrap_or(4).max(1);
-        eprintln!("[serve] synthesizing {n} adapters (k=1, seeded)");
+        olog::info("serve", format_args!("synthesizing {n} adapters (k=1, seeded)"));
         adapters = synth_adapters(&cfg, &backbone, n, 1, seed ^ 0xADAF)?;
     }
 
@@ -555,10 +665,24 @@ fn cmd_serve_cls(args: &Args, cfg: neuroada::config::ModelCfg) -> Result<()> {
             .unwrap_or_else(Pool::default_size),
         adapter_quota: quota,
         threads: args.opt_usize("threads").map_err(|e| anyhow!(e))?.unwrap_or(0),
+        trace: args.opt("trace-out").is_some(),
         ..ServeCfg::default()
     };
-    eprintln!("[serve] backend: pure-rust forward (cls parity mode)");
+    let trace_out = args.opt("trace-out").map(str::to_string);
+    let metrics_out = args.opt("metrics-out").map(str::to_string);
+    olog::info("serve", format_args!("backend: pure-rust forward (cls parity mode)"));
     let srv = Server::start(registry, scfg, Backend::Host)?;
+    let http = match args.opt("metrics-addr") {
+        Some(addr) => {
+            let h = srv.metrics_http(addr).map_err(|e| anyhow!("--metrics-addr {addr}: {e}"))?;
+            olog::info(
+                "serve",
+                format_args!("metrics endpoint on http://{}/metrics (+ /metrics.json)", h.addr()),
+            );
+            Some(h)
+        }
+        None => None,
+    };
     let examples = example_stream(&task, Split::Test, seed, cfg.vocab, cfg.seq, n);
     let (name0, deltas0) = &adapters[0];
     let reqs: Vec<ClsRequest> =
@@ -609,7 +733,7 @@ fn cmd_serve_cls(args: &Args, cfg: neuroada::config::ModelCfg) -> Result<()> {
         ]);
     }
     t.print();
-    let report = srv.shutdown();
+    let report = finish_serve(srv, http, trace_out.as_deref(), metrics_out.as_deref())?;
     println!("{}", report.render());
     if !exact(served_bypass, oracle_bypass) || !exact(served_merged, oracle_merged) {
         bail!(

@@ -1,0 +1,164 @@
+//! A tiny HTTP/1.1 server on `std::net::TcpListener` for metrics export.
+//!
+//! Offline build: no hyper/axum — GET-only, `Connection: close`, one
+//! request per connection, which is exactly the shape of a Prometheus
+//! scrape or a `curl` of the JSON snapshot. The route callback maps a
+//! path to `(content_type, body)`; everything else is a 404.
+//!
+//! The accept loop runs on one named thread; [`HttpServer::stop`] (or
+//! drop) sets a flag and pokes the listener with a loopback connection so
+//! the blocking `accept` wakes up and the thread joins promptly.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Path → `(content_type, body)`; `None` renders a 404.
+pub type Routes = Arc<dyn Fn(&str) -> Option<(&'static str, String)> + Send + Sync>;
+
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Bind `addr` (e.g. `"127.0.0.1:9100"`; port 0 picks a free port) and
+/// serve `routes` until stopped.
+pub fn serve(addr: &str, routes: Routes) -> std::io::Result<HttpServer> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handle = std::thread::Builder::new()
+        .name("neuroada-metrics".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                // a bad client must not take the exporter down
+                let _ = handle_conn(stream, &routes);
+            }
+        })?;
+    Ok(HttpServer { addr: local, stop, handle: Some(handle) })
+}
+
+fn handle_conn(mut stream: TcpStream, routes: &Routes) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    let mut buf = [0u8; 2048];
+    let mut req = Vec::new();
+    loop {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        req.extend_from_slice(&buf[..n]);
+        // headers done, or a hostile client: stop reading either way
+        if req.windows(4).any(|w| w == b"\r\n\r\n") || req.len() > 16 * 1024 {
+            break;
+        }
+    }
+    let text = String::from_utf8_lossy(&req);
+    let mut parts = text.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("/");
+    let (status, ctype, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain; charset=utf-8", "method not allowed\n".to_string())
+    } else {
+        match routes(path) {
+            Some((ct, b)) => ("200 OK", ct, b),
+            None => ("404 Not Found", "text/plain; charset=utf-8", format!("no route for {path}\n")),
+        }
+    };
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+impl HttpServer {
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the server thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        if self.handle.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::Relaxed);
+        // wake the blocking accept so the loop observes the flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Minimal GET client (the CLI's self-scrape and the tests): returns the
+/// response body.
+pub fn get(addr: SocketAddr, path: &str) -> std::io::Result<String> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(Duration::from_secs(5)))?;
+    write!(s, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?;
+    s.flush()?;
+    let mut out = String::new();
+    s.read_to_string(&mut out)?;
+    Ok(out
+        .split_once("\r\n\r\n")
+        .map(|(_, body)| body.to_string())
+        .unwrap_or_default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_routes() -> Routes {
+        Arc::new(|path: &str| match path {
+            "/ping" => Some(("text/plain; charset=utf-8", "pong\n".to_string())),
+            "/json" => Some(("application/json", "{\"ok\":true}".to_string())),
+            _ => None,
+        })
+    }
+
+    #[test]
+    fn serves_routes_and_404s() {
+        let srv = serve("127.0.0.1:0", test_routes()).expect("bind loopback");
+        let addr = srv.addr();
+        assert_eq!(get(addr, "/ping").unwrap(), "pong\n");
+        assert_eq!(get(addr, "/json").unwrap(), "{\"ok\":true}");
+        let missing = get(addr, "/nope").unwrap();
+        assert!(missing.contains("no route"));
+        srv.stop(); // joins without hanging
+    }
+
+    #[test]
+    fn non_get_is_rejected() {
+        let srv = serve("127.0.0.1:0", test_routes()).expect("bind loopback");
+        let addr = srv.addr();
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "POST /ping HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 405"));
+    }
+}

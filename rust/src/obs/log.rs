@@ -1,0 +1,169 @@
+//! Leveled, timestamped stderr logging with a `NEUROADA_LOG` env filter.
+//!
+//! Replaces the serve stack's ad-hoc `eprintln!` calls: one line format,
+//! one filter, zero cost for suppressed levels (the message is a lazy
+//! [`std::fmt::Arguments`], so nothing is formatted unless it prints).
+//!
+//! ```text
+//! [12:34:56.789 INFO  serve] kernel pool width: 4
+//! ```
+//!
+//! Filter resolution: an explicit [`set_filter`] call wins (the CLI and
+//! tests use it), else the `NEUROADA_LOG` environment variable
+//! (`error|warn|info|debug|trace`, case-insensitive), else [`Level::Info`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" | "0" => Some(Level::Error),
+            "warn" | "warning" | "1" => Some(Level::Warn),
+            "info" | "2" => Some(Level::Info),
+            "debug" | "3" => Some(Level::Debug),
+            "trace" | "4" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            3 => Level::Debug,
+            _ => Level::Trace,
+        }
+    }
+}
+
+/// 255 = "not yet resolved"; first use reads `NEUROADA_LOG` exactly once.
+const UNSET: u8 = 255;
+static FILTER: AtomicU8 = AtomicU8::new(UNSET);
+
+/// The active filter level (resolving the env var on first use).
+pub fn filter() -> Level {
+    let v = FILTER.load(Ordering::Relaxed);
+    if v != UNSET {
+        return Level::from_u8(v);
+    }
+    let l = std::env::var("NEUROADA_LOG")
+        .ok()
+        .and_then(|s| Level::parse(&s))
+        .unwrap_or(Level::Info);
+    // a racing first use resolves the same env var — last store is fine
+    FILTER.store(l as u8, Ordering::Relaxed);
+    l
+}
+
+/// Override the filter (wins over the environment from now on).
+pub fn set_filter(l: Level) {
+    FILTER.store(l as u8, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    level <= filter()
+}
+
+/// UTC HH:MM:SS.mmm from the wall clock — enough timestamp for a log line
+/// without pulling in a date library.
+fn stamp() -> String {
+    let now = crate::util::now_secs();
+    let secs = now as u64;
+    let ms = ((now - secs as f64) * 1000.0) as u64;
+    format!(
+        "{:02}:{:02}:{:02}.{:03}",
+        (secs / 3600) % 24,
+        (secs / 60) % 60,
+        secs % 60,
+        ms.min(999)
+    )
+}
+
+/// Core sink. Call through the level helpers with `format_args!`:
+/// `obs::log::info("serve", format_args!("backend: {name}"))`.
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    eprintln!("[{} {} {}] {}", stamp(), level.name(), target, args);
+}
+
+pub fn error(target: &str, args: std::fmt::Arguments<'_>) {
+    log(Level::Error, target, args);
+}
+
+pub fn warn(target: &str, args: std::fmt::Arguments<'_>) {
+    log(Level::Warn, target, args);
+}
+
+pub fn info(target: &str, args: std::fmt::Arguments<'_>) {
+    log(Level::Info, target, args);
+}
+
+pub fn debug(target: &str, args: std::fmt::Arguments<'_>) {
+    log(Level::Debug, target, args);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_and_order() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse(" info "), Some(Level::Info));
+        assert_eq!(Level::parse("Debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("trace"), Some(Level::Trace));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Trace);
+    }
+
+    #[test]
+    fn explicit_filter_gates_levels() {
+        // no env mutation (tests run concurrently; the env is process-global)
+        // — set_filter overrides whatever NEUROADA_LOG resolved to
+        set_filter(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_filter(Level::Trace);
+        assert!(enabled(Level::Debug));
+        // suppressed log() must be a no-op even mid-format
+        set_filter(Level::Error);
+        log(Level::Debug, "test", format_args!("{}", "never formatted"));
+        set_filter(Level::Info); // restore the default for other tests
+    }
+
+    #[test]
+    fn stamp_is_wall_clock_shaped() {
+        let s = stamp();
+        // HH:MM:SS.mmm
+        assert_eq!(s.len(), 12);
+        assert_eq!(&s[2..3], ":");
+        assert_eq!(&s[5..6], ":");
+        assert_eq!(&s[8..9], ".");
+    }
+}

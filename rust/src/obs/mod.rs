@@ -1,0 +1,28 @@
+//! Observability: request tracing, leveled logging, and metrics export.
+//!
+//! The serving stack (`serve/`) answers "how fast" with endpoint p50/p95
+//! aggregates; this module answers "where did the time go":
+//!
+//! * [`trace`] — a lock-light span tracer. Sharded ring buffers of
+//!   **complete** spans (start + duration, monotonic microseconds, a request
+//!   id minted at admission), so ring wrap can never orphan half a span.
+//!   The disabled path is a single relaxed atomic load. Exports Chrome
+//!   trace-event JSON loadable in Perfetto (`neuroada serve --trace-out`).
+//! * [`log`] — leveled, timestamped stderr logging with a `NEUROADA_LOG`
+//!   environment filter (error|warn|info|debug|trace; default info). The
+//!   serve CLI routes through it instead of ad-hoc `eprintln!`.
+//! * [`http`] — a tiny `std::net::TcpListener` HTTP server for the
+//!   Prometheus / JSON metrics endpoints (`neuroada serve --metrics-addr`).
+//!
+//! This module is deliberately serve-agnostic: it knows about spans, levels,
+//! and routes — the serving stack owns the stage taxonomy's wiring and the
+//! exporter payloads (`serve::metrics::MetricsReport::{prometheus,to_json}`).
+//! See `docs/observability.md` for the span model and exporter formats.
+
+pub mod http;
+pub mod log;
+pub mod trace;
+
+pub use http::HttpServer;
+pub use log::Level;
+pub use trace::{Event, Stage, Tracer};

@@ -1,0 +1,469 @@
+//! Lock-light span tracing for the serving stack.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Disabled tracing must cost one atomic load.** Every record method
+//!    checks [`Tracer::enabled`] (a relaxed `AtomicBool`) before touching
+//!    anything else; `Server` threads call it on the hot path.
+//! 2. **Enabled tracing must not serialize the server.** Events land in
+//!    one of [`SHARDS`] ring buffers, each behind its own mutex; a thread
+//!    hashes its `ThreadId` once (cached in a thread-local) to pick its
+//!    shard, so the scheduler workers, the decode thread, and admission
+//!    almost never contend on a lock.
+//! 3. **Ring wrap must not corrupt the trace.** Events are **complete
+//!    spans** — recorded once, at the end, with start + duration — never
+//!    begin/end pairs. An overwritten event disappears whole (counted in
+//!    [`Tracer::dropped`]); it cannot leave an orphaned half behind.
+//!
+//! Timestamps are microseconds since the tracer's own `Instant` epoch
+//! (monotonic; wall-clock steps cannot reorder a trace). Request ids are
+//! minted at admission via [`Tracer::next_request_id`] and stitch a
+//! request's spans together across threads.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Ring shards; power of two so shard picking is a mask.
+const SHARDS: usize = 8;
+
+/// Default total event capacity (split across shards). At ~10 spans per
+/// scored request and ~1 span per decoded token this holds thousands of
+/// requests before wrapping.
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+/// The stage taxonomy. Stages marked by [`Stage::covers_request`] are
+/// defined to be **contiguous within a request** (each starts where the
+/// previous one ends), so their durations sum to ~the end-to-end span —
+/// that is what makes the ≥95% coverage contract structural rather than
+/// aspirational. See `docs/observability.md`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Whole request: admission → response (or final `Done` event).
+    Request,
+    /// Admission enqueue → popped by a worker (or admitted to a slot).
+    QueueWait,
+    /// Popped → forward starts: adapter resolve + batch padding/layout.
+    BatchAssembly,
+    /// The model forward (score or cls) for the whole micro-batch.
+    Forward,
+    /// Forward done → response handed to the ticket channel.
+    Respond,
+    /// Decode: slot admission → first token emitted (includes prompt feed).
+    Prefill,
+    /// Decode: first token → `Done`; contains the per-step spans.
+    DecodeStream,
+    /// One incremental `forward_step` for one slot (nested in DecodeStream).
+    DecodeStep,
+    /// Registry: building a merged backbone copy (promotion).
+    Merge,
+    /// Registry: a merged copy evicted (LRU pressure or explicit).
+    Evict,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Request => "request",
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchAssembly => "batch_assembly",
+            Stage::Forward => "forward",
+            Stage::Respond => "respond",
+            Stage::Prefill => "prefill",
+            Stage::DecodeStream => "decode_stream",
+            Stage::DecodeStep => "decode_step",
+            Stage::Merge => "merge",
+            Stage::Evict => "evict",
+        }
+    }
+
+    /// Stages that partition a request's lifetime. `DecodeStep` is nested
+    /// inside `DecodeStream` and would double-count; registry events are
+    /// not request-scoped.
+    pub fn covers_request(self) -> bool {
+        matches!(
+            self,
+            Stage::QueueWait
+                | Stage::BatchAssembly
+                | Stage::Forward
+                | Stage::Respond
+                | Stage::Prefill
+                | Stage::DecodeStream
+        )
+    }
+
+    fn cat(self) -> &'static str {
+        match self {
+            Stage::Merge | Stage::Evict => "registry",
+            Stage::Prefill | Stage::DecodeStream | Stage::DecodeStep => "decode",
+            _ => "serve",
+        }
+    }
+}
+
+/// One complete span. `id == 0` means "not request-scoped" (registry
+/// events); request ids start at 1.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub id: u64,
+    pub stage: Stage,
+    /// Microseconds since the tracer epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Free-form context (adapter name, finish reason); empty when none.
+    pub label: String,
+}
+
+struct Ring {
+    buf: Vec<Event>,
+    cap: usize,
+    next: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring { buf: Vec::with_capacity(cap), cap, next: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, e: Event) {
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+        } else {
+            // overwrite the oldest slot: the whole span vanishes, counted
+            self.buf[self.next] = e;
+            self.dropped += 1;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+}
+
+pub struct Tracer {
+    enabled: AtomicBool,
+    next_id: AtomicU64,
+    t0: Instant,
+    shards: Vec<Mutex<Ring>>,
+}
+
+/// Cached per-thread shard key (hash of the ThreadId, computed once).
+fn thread_key() -> usize {
+    use std::cell::Cell;
+    thread_local! {
+        static KEY: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    KEY.with(|c| {
+        let v = c.get();
+        if v != usize::MAX {
+            return v;
+        }
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        std::thread::current().id().hash(&mut h);
+        let v = (h.finish() as usize) & (usize::MAX >> 1); // never the sentinel
+        c.set(v);
+        v
+    })
+}
+
+impl Tracer {
+    /// A tracer with `capacity` total event slots split across the shards.
+    pub fn new(enabled: bool, capacity: usize) -> Arc<Tracer> {
+        let per_shard = (capacity / SHARDS).max(4);
+        Arc::new(Tracer {
+            enabled: AtomicBool::new(enabled),
+            next_id: AtomicU64::new(1),
+            t0: Instant::now(),
+            shards: (0..SHARDS).map(|_| Mutex::new(Ring::new(per_shard))).collect(),
+        })
+    }
+
+    /// A disabled tracer with minimal buffers — the default for a `Server`
+    /// started without tracing; recording through it is one atomic load.
+    pub fn off() -> Arc<Tracer> {
+        Tracer::new(false, SHARDS * 4)
+    }
+
+    /// THE hot-path check; every record method performs it first.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Mint a request id (starts at 1; 0 is reserved for "no request").
+    pub fn next_request_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn us_since(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.t0).as_micros() as u64
+    }
+
+    /// Record a complete span between two instants.
+    pub fn span(&self, id: u64, stage: Stage, start: Instant, end: Instant, label: &str) {
+        if !self.enabled() {
+            return;
+        }
+        let s = self.us_since(start);
+        let e = self.us_since(end);
+        self.push(Event {
+            id,
+            stage,
+            start_us: s,
+            dur_us: e.saturating_sub(s),
+            label: label.to_string(),
+        });
+    }
+
+    /// Record a point event (zero duration) at "now".
+    pub fn instant(&self, id: u64, stage: Stage, label: &str) {
+        if !self.enabled() {
+            return;
+        }
+        let now = self.us_since(Instant::now());
+        self.push(Event { id, stage, start_us: now, dur_us: 0, label: label.to_string() });
+    }
+
+    fn push(&self, e: Event) {
+        let i = thread_key() & (SHARDS - 1);
+        let mut g = self.shards[i].lock().unwrap_or_else(|p| p.into_inner());
+        g.push(e);
+    }
+
+    /// All retained events, sorted by start time (then id for stability).
+    pub fn events(&self) -> Vec<Event> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            let g = s.lock().unwrap_or_else(|p| p.into_inner());
+            out.extend(g.buf.iter().cloned());
+        }
+        out.sort_by(|a, b| (a.start_us, a.id).cmp(&(b.start_us, b.id)));
+        out
+    }
+
+    /// Events overwritten by ring wrap (each a whole span, never a half).
+    pub fn dropped(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(|p| p.into_inner()).dropped)
+            .sum()
+    }
+
+    pub fn clear(&self) {
+        for s in &self.shards {
+            let mut g = s.lock().unwrap_or_else(|p| p.into_inner());
+            g.buf.clear();
+            g.next = 0;
+            g.dropped = 0;
+        }
+    }
+
+    /// Chrome trace-event JSON (the `{"traceEvents": [...]}` envelope),
+    /// loadable in Perfetto / `chrome://tracing`. Every event is a `ph:"X"`
+    /// complete event; each request gets its own track (`tid` = request id,
+    /// registry events on track 0), timestamps in microseconds.
+    pub fn to_chrome_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events()
+            .iter()
+            .map(|e| {
+                let mut o = Json::obj();
+                o.set("name", e.stage.name());
+                o.set("cat", e.stage.cat());
+                o.set("ph", "X");
+                o.set("ts", e.start_us);
+                // zero-width spans are invisible in Perfetto; floor at 1µs
+                o.set("dur", e.dur_us.max(1));
+                o.set("pid", 1u64);
+                o.set("tid", e.id);
+                let mut args = Json::obj();
+                args.set("id", e.id);
+                if !e.label.is_empty() {
+                    args.set("label", e.label.as_str());
+                }
+                o.set("args", args);
+                o
+            })
+            .collect();
+        let mut top = Json::obj();
+        top.set("traceEvents", events);
+        top.set("displayTimeUnit", "ms");
+        top
+    }
+}
+
+/// Per-request coverage: for every request with a `Request` (end-to-end)
+/// span, the fraction of that span accounted for by its stage spans
+/// ([`Stage::covers_request`]). The serve taxonomy keeps those stages
+/// contiguous, so a healthy trace sits at ~1.0; the CLI and CI assert
+/// ≥ 0.95. Requests whose `Request` span was lost to ring wrap are
+/// omitted (their fraction would be meaningless, not misleading).
+pub fn request_coverage(events: &[Event]) -> Vec<(u64, f64)> {
+    use std::collections::BTreeMap;
+    let mut e2e: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut covered: BTreeMap<u64, u64> = BTreeMap::new();
+    for e in events {
+        if e.id == 0 {
+            continue;
+        }
+        if e.stage == Stage::Request {
+            *e2e.entry(e.id).or_default() += e.dur_us;
+        } else if e.stage.covers_request() {
+            *covered.entry(e.id).or_default() += e.dur_us;
+        }
+    }
+    e2e.into_iter()
+        .filter(|&(_, d)| d > 0)
+        .map(|(id, d)| {
+            let c = covered.get(&id).copied().unwrap_or(0);
+            (id, (c as f64 / d as f64).min(1.0))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn span_at(t: &Tracer, id: u64, stage: Stage, start_us: u64, dur_us: u64) {
+        // synthesize exact timestamps through the public API
+        let s = t.t0 + Duration::from_micros(start_us);
+        let e = s + Duration::from_micros(dur_us);
+        t.span(id, stage, s, e, "");
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::off();
+        assert!(!t.enabled());
+        t.span(1, Stage::Forward, Instant::now(), Instant::now(), "a");
+        t.instant(1, Stage::Evict, "b");
+        assert!(t.events().is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn request_ids_are_unique_and_nonzero() {
+        let t = Tracer::new(true, 64);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..100 {
+            let id = t.next_request_id();
+            assert!(id > 0);
+            assert!(seen.insert(id));
+        }
+    }
+
+    #[test]
+    fn concurrent_recording_from_many_threads_loses_nothing() {
+        let t = Tracer::new(true, 1 << 14);
+        let threads = 8;
+        let per = 100;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| {
+                    for _ in 0..per {
+                        let id = t.next_request_id();
+                        let now = Instant::now();
+                        t.span(id, Stage::Forward, now, now, "conc");
+                    }
+                });
+            }
+        });
+        let ev = t.events();
+        assert_eq!(ev.len(), threads * per);
+        assert_eq!(t.dropped(), 0);
+        // every event is a complete span with a distinct minted id
+        let ids: std::collections::BTreeSet<u64> = ev.iter().map(|e| e.id).collect();
+        assert_eq!(ids.len(), threads * per);
+    }
+
+    #[test]
+    fn ring_wrap_drops_whole_spans_never_halves() {
+        // tiny capacity: 8 shards × 4 slots; one thread lands on ONE shard
+        let t = Tracer::new(true, SHARDS * 4);
+        for i in 0..100u64 {
+            let id = t.next_request_id();
+            span_at(&t, id, Stage::Request, i * 10, 10);
+            span_at(&t, id, Stage::Forward, i * 10, 10);
+        }
+        assert!(t.dropped() > 0, "200 events into 4 slots must wrap");
+        let ev = t.events();
+        assert!(ev.len() <= SHARDS * 4);
+        assert!(!ev.is_empty());
+        // pairing survives: every retained event is complete (has its own
+        // start + duration), and coverage only reports requests whose
+        // end-to-end span survived — never a NaN or an orphan
+        for e in &ev {
+            assert_eq!(e.dur_us, 10);
+        }
+        for (_, frac) in request_coverage(&ev) {
+            assert!(frac.is_finite() && frac <= 1.0);
+        }
+    }
+
+    #[test]
+    fn coverage_reflects_contiguous_stages() {
+        let t = Tracer::new(true, 256);
+        // request 1: fully covered (queue 40 + assembly 10 + forward 40 +
+        // respond 10 over a 100µs e2e span)
+        span_at(&t, 1, Stage::Request, 0, 100);
+        span_at(&t, 1, Stage::QueueWait, 0, 40);
+        span_at(&t, 1, Stage::BatchAssembly, 40, 10);
+        span_at(&t, 1, Stage::Forward, 50, 40);
+        span_at(&t, 1, Stage::Respond, 90, 10);
+        // request 2: half covered; its decode steps must NOT double-count
+        span_at(&t, 2, Stage::Request, 0, 100);
+        span_at(&t, 2, Stage::DecodeStream, 0, 50);
+        span_at(&t, 2, Stage::DecodeStep, 0, 25);
+        span_at(&t, 2, Stage::DecodeStep, 25, 25);
+        // registry event: no request scope, ignored by coverage
+        t.instant(0, Stage::Evict, "cold");
+        let cov: std::collections::BTreeMap<u64, f64> =
+            request_coverage(&t.events()).into_iter().collect();
+        assert_eq!(cov.len(), 2);
+        assert!((cov[&1] - 1.0).abs() < 1e-9);
+        assert!((cov[&2] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chrome_export_parses_back_and_is_perfetto_shaped() {
+        let t = Tracer::new(true, 256);
+        let id = t.next_request_id();
+        span_at(&t, id, Stage::Request, 5, 90);
+        span_at(&t, id, Stage::Forward, 10, 30);
+        t.instant(0, Stage::Merge, "tenant-a");
+        let dump = t.to_chrome_json().dump();
+        let parsed = Json::parse(&dump).expect("chrome trace JSON round-trips");
+        let events = parsed.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(events.len(), 3);
+        for e in events {
+            assert_eq!(e.get("ph").and_then(|v| v.as_str()), Some("X"));
+            assert!(e.get("ts").and_then(|v| v.as_f64()).is_some());
+            assert!(e.get("dur").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+            assert!(e.get("name").and_then(|v| v.as_str()).is_some());
+            assert!(e.at(&["args", "id"]).is_some());
+        }
+        // the merge event carries its adapter label
+        assert!(events
+            .iter()
+            .any(|e| e.at(&["args", "label"]).and_then(|v| v.as_str()) == Some("tenant-a")));
+    }
+
+    #[test]
+    fn clear_resets_buffers_and_drop_counts() {
+        let t = Tracer::new(true, SHARDS * 4);
+        for i in 0..50 {
+            span_at(&t, 1, Stage::Forward, i, 1);
+        }
+        assert!(t.dropped() > 0);
+        t.clear();
+        assert!(t.events().is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+}

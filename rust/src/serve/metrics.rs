@@ -1,13 +1,22 @@
 //! Serving observability: request latency percentiles, throughput, queue
-//! depth, micro-batch occupancy, per-adapter path hit rates, and typed
-//! rejection counts.
+//! depth, micro-batch occupancy, per-adapter path hit rates, typed
+//! rejection counts — and the **stage-latency breakdown** (queue wait,
+//! batch assembly, forward, prefill, decode step) that explains where a
+//! request's latency went rather than just stating it.
 //!
 //! Counters are cheap to record under one mutex (the serving hot path is the
 //! forward pass, not the bookkeeping); [`ServeMetrics::snapshot`] freezes a
-//! consistent [`MetricsReport`] that renders as a table for the CLI and is
-//! asserted on by the scheduler tests.
+//! consistent [`MetricsReport`] that renders as a table for the CLI, is
+//! asserted on by the scheduler tests, and exports as Prometheus text
+//! ([`MetricsReport::prometheus`]) or a JSON snapshot
+//! ([`MetricsReport::to_json`]) for the `--metrics-addr` endpoint.
+//!
+//! Throughput semantics: `req_per_sec` / `tokens_per_sec` are **sliding
+//! 60-second rates** (an idle hour no longer dilutes them toward zero);
+//! the lifetime averages are kept as `*_lifetime` fields.
 
 use super::registry::ServePath;
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 use crate::util::table::Table;
 use std::collections::BTreeMap;
@@ -39,6 +48,102 @@ impl AdapterCounters {
 /// recent requests, so a long-running server's metric state (and snapshot
 /// sort cost) stays bounded regardless of uptime.
 pub const LATENCY_WINDOW: usize = 4096;
+
+/// Width of the sliding throughput window, in seconds.
+pub const RATE_WINDOW_SECS: u64 = 60;
+
+/// Sliding-window event rate: one-second buckets stamped with the absolute
+/// second (since server start) they count, so stale buckets are recognized
+/// by stamp rather than zeroed on a timer. Driven by an explicit `now_s`
+/// (the caller's monotonic uptime) so tests are exact.
+#[derive(Debug, Clone)]
+struct RateWindow {
+    counts: [u64; RATE_WINDOW_SECS as usize],
+    stamps: [u64; RATE_WINDOW_SECS as usize],
+    /// Second of the first recorded event (rate denominators never include
+    /// time before the server saw traffic-capable uptime).
+    first: Option<u64>,
+}
+
+impl Default for RateWindow {
+    fn default() -> RateWindow {
+        RateWindow {
+            counts: [0; RATE_WINDOW_SECS as usize],
+            stamps: [u64::MAX; RATE_WINDOW_SECS as usize],
+            first: None,
+        }
+    }
+}
+
+impl RateWindow {
+    fn record(&mut self, now_s: u64, n: u64) {
+        let idx = (now_s % RATE_WINDOW_SECS) as usize;
+        if self.stamps[idx] != now_s {
+            self.stamps[idx] = now_s;
+            self.counts[idx] = 0;
+        }
+        self.counts[idx] += n;
+        if self.first.is_none() {
+            self.first = Some(now_s);
+        }
+    }
+
+    /// Events per second over the trailing window. `uptime` is fractional
+    /// seconds since start (`now_s == uptime as u64`): a server younger
+    /// than the window divides by its true age — so short runs report the
+    /// same value as the lifetime rate — while an old server divides by
+    /// the window span, so idle hours stop diluting the rate.
+    fn rate(&self, now_s: u64, uptime: f64) -> f64 {
+        let Some(first) = self.first else { return 0.0 };
+        let lo = now_s.saturating_sub(RATE_WINDOW_SECS - 1);
+        let sum: u64 = self
+            .stamps
+            .iter()
+            .zip(&self.counts)
+            .filter(|&(&s, _)| s >= lo && s <= now_s)
+            .map(|(_, &c)| c)
+            .sum();
+        let span = (uptime - lo.max(first) as f64).clamp(1e-9, RATE_WINDOW_SECS as f64);
+        sum as f64 / span
+    }
+}
+
+/// The stage-latency taxonomy folded into [`MetricsReport`]. Matches the
+/// tracer's request-covering spans (`obs::trace::Stage`); see
+/// `docs/observability.md` for where each stage starts and ends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageLat {
+    /// Admission enqueue → popped by a worker / admitted to a decode slot.
+    QueueWait,
+    /// Pop → forward starts (adapter resolve + batch padding/layout).
+    BatchAssembly,
+    /// The micro-batch forward (score or cls).
+    Forward,
+    /// Decode slot admission → first token emitted.
+    Prefill,
+    /// One incremental decode step for one slot.
+    Step,
+}
+
+impl StageLat {
+    pub const ALL: [StageLat; 5] = [
+        StageLat::QueueWait,
+        StageLat::BatchAssembly,
+        StageLat::Forward,
+        StageLat::Prefill,
+        StageLat::Step,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StageLat::QueueWait => "queue_wait",
+            StageLat::BatchAssembly => "batch_assembly",
+            StageLat::Forward => "forward",
+            StageLat::Prefill => "prefill",
+            StageLat::Step => "step",
+        }
+    }
+}
 
 #[derive(Default)]
 struct Inner {
@@ -77,6 +182,20 @@ struct Inner {
     /// Gap between consecutive streamed tokens of one sequence.
     inter_token: Vec<f64>,
     next_itl: usize,
+    // --- sliding-window throughput (ISSUE 6 satellite) ----------------
+    req_window: RateWindow,
+    tok_window: RateWindow,
+    // --- stage-latency breakdown windows (seconds, LATENCY_WINDOW-bounded)
+    queue_wait: Vec<f64>,
+    next_qw: usize,
+    batch_assembly: Vec<f64>,
+    next_ba: usize,
+    forward: Vec<f64>,
+    next_fwd: usize,
+    prefill: Vec<f64>,
+    next_pf: usize,
+    step: Vec<f64>,
+    next_step: usize,
 }
 
 /// Push into a `LATENCY_WINDOW`-bounded circular sample buffer.
@@ -106,14 +225,29 @@ impl ServeMetrics {
         ServeMetrics { start: Instant::now(), inner: Mutex::new(Inner::default()) }
     }
 
-    /// One request completed. `latency` is submit→response seconds.
-    pub fn record_served(&self, adapter: &str, path: ServePath, latency: f64) {
-        let mut g = self.inner.lock().unwrap();
-        Self::record_served_locked(&mut g, adapter, path, latency);
+    /// Whole seconds since server start — the bucket stamp for the
+    /// sliding-rate windows (monotonic, so a wall-clock step cannot
+    /// smear a bucket).
+    fn now_s(&self) -> u64 {
+        self.start.elapsed().as_secs()
     }
 
-    fn record_served_locked(g: &mut Inner, adapter: &str, path: ServePath, latency: f64) {
+    /// One request completed. `latency` is submit→response seconds.
+    pub fn record_served(&self, adapter: &str, path: ServePath, latency: f64) {
+        let now_s = self.now_s();
+        let mut g = self.inner.lock().unwrap();
+        Self::record_served_locked(&mut g, now_s, adapter, path, latency);
+    }
+
+    fn record_served_locked(
+        g: &mut Inner,
+        now_s: u64,
+        adapter: &str,
+        path: ServePath,
+        latency: f64,
+    ) {
         g.served += 1;
+        g.req_window.record(now_s, 1);
         push_window(&mut g.latencies, &mut g.next_lat, latency);
         let c = g.adapters.entry(adapter.to_string()).or_default();
         c.served += 1;
@@ -126,10 +260,12 @@ impl ServeMetrics {
     /// One generation completed: `n_tokens` streamed, submit→Done `latency`
     /// seconds. Also counts as a served request for the aggregate stats.
     pub fn record_gen_served(&self, adapter: &str, path: ServePath, latency: f64, n_tokens: u64) {
+        let now_s = self.now_s();
         let mut g = self.inner.lock().unwrap();
-        Self::record_served_locked(&mut g, adapter, path, latency);
+        Self::record_served_locked(&mut g, now_s, adapter, path, latency);
         g.gen_served += 1;
         g.gen_tokens += n_tokens;
+        g.tok_window.record(now_s, n_tokens);
     }
 
     /// One classification request completed: submit→response `latency`
@@ -137,11 +273,27 @@ impl ServeMetrics {
     /// (like generations), with its own latency window so cls percentiles
     /// are not blurred into the scoring ones.
     pub fn record_cls_served(&self, adapter: &str, path: ServePath, latency: f64) {
+        let now_s = self.now_s();
         let mut g = self.inner.lock().unwrap();
-        Self::record_served_locked(&mut g, adapter, path, latency);
+        Self::record_served_locked(&mut g, now_s, adapter, path, latency);
         let g = &mut *g;
         g.cls_served += 1;
         push_window(&mut g.cls_latencies, &mut g.next_cls, latency);
+    }
+
+    /// One stage-latency sample, in seconds (see [`StageLat`] for where
+    /// each stage starts and ends). Always on — a handful of `Instant`
+    /// reads per batch — independent of whether span tracing is enabled.
+    pub fn record_stage(&self, stage: StageLat, secs: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let g = &mut *g;
+        match stage {
+            StageLat::QueueWait => push_window(&mut g.queue_wait, &mut g.next_qw, secs),
+            StageLat::BatchAssembly => push_window(&mut g.batch_assembly, &mut g.next_ba, secs),
+            StageLat::Forward => push_window(&mut g.forward, &mut g.next_fwd, secs),
+            StageLat::Prefill => push_window(&mut g.prefill, &mut g.next_pf, secs),
+            StageLat::Step => push_window(&mut g.step, &mut g.next_step, secs),
+        }
     }
 
     /// One cls micro-batch executed with `n` coalesced requests. Also
@@ -194,15 +346,19 @@ impl ServeMetrics {
         g.max_queue_depth = g.max_queue_depth.max(depth);
     }
 
-    /// Freeze a consistent snapshot.
+    /// Freeze a consistent snapshot. Kernel-pool utilization is not known
+    /// here (the pool belongs to the scheduler); `Server` fills the
+    /// `pool_*` fields in after snapshotting.
     pub fn snapshot(&self) -> MetricsReport {
         let g = self.inner.lock().unwrap();
         let uptime = self.start.elapsed().as_secs_f64().max(1e-9);
+        let now_s = uptime as u64;
         MetricsReport {
             uptime_secs: uptime,
             served: g.served,
             latency: (!g.latencies.is_empty()).then(|| Summary::of(&g.latencies)),
-            req_per_sec: g.served as f64 / uptime,
+            req_per_sec: g.req_window.rate(now_s, uptime),
+            req_per_sec_lifetime: g.served as f64 / uptime,
             mean_batch: if g.batches == 0 {
                 0.0
             } else {
@@ -222,7 +378,8 @@ impl ServeMetrics {
             },
             gen_served: g.gen_served,
             gen_tokens: g.gen_tokens,
-            tokens_per_sec: g.gen_tokens as f64 / uptime,
+            tokens_per_sec: g.tok_window.rate(now_s, uptime),
+            tokens_per_sec_lifetime: g.gen_tokens as f64 / uptime,
             decode_steps: g.decode_steps,
             mean_slot_occupancy: if g.decode_steps == 0 {
                 0.0
@@ -232,6 +389,16 @@ impl ServeMetrics {
             max_active_slots: g.max_active_slots,
             ttft: (!g.ttft.is_empty()).then(|| Summary::of(&g.ttft)),
             inter_token: (!g.inter_token.is_empty()).then(|| Summary::of(&g.inter_token)),
+            queue_wait: (!g.queue_wait.is_empty()).then(|| Summary::of(&g.queue_wait)),
+            batch_assembly: (!g.batch_assembly.is_empty())
+                .then(|| Summary::of(&g.batch_assembly)),
+            forward: (!g.forward.is_empty()).then(|| Summary::of(&g.forward)),
+            prefill: (!g.prefill.is_empty()).then(|| Summary::of(&g.prefill)),
+            step: (!g.step.is_empty()).then(|| Summary::of(&g.step)),
+            pool_threads: 0,
+            pool_jobs: 0,
+            pool_busy_frac: None,
+            pool_imbalance: None,
         }
     }
 }
@@ -244,7 +411,12 @@ pub struct MetricsReport {
     /// Latency summary in seconds over the most recent [`LATENCY_WINDOW`]
     /// requests (None before the first response).
     pub latency: Option<Summary>,
+    /// Requests per second over the trailing [`RATE_WINDOW_SECS`] window
+    /// (equals the lifetime rate while the server is younger than the
+    /// window; an idle hour no longer dilutes it toward zero).
     pub req_per_sec: f64,
+    /// Lifetime requests / uptime (the pre-windowing semantics, kept).
+    pub req_per_sec_lifetime: f64,
     /// Mean coalesced requests per executed micro-batch.
     pub mean_batch: f64,
     pub batches: usize,
@@ -264,8 +436,11 @@ pub struct MetricsReport {
     pub gen_served: u64,
     /// Tokens streamed across all generations.
     pub gen_tokens: u64,
-    /// Streamed tokens per second of uptime.
+    /// Streamed tokens per second over the trailing [`RATE_WINDOW_SECS`]
+    /// window (see `req_per_sec`).
     pub tokens_per_sec: f64,
+    /// Lifetime streamed tokens / uptime.
+    pub tokens_per_sec_lifetime: f64,
     /// Decode micro-batch iterations executed.
     pub decode_steps: u64,
     /// Mean active decode slots per iteration (continuous-batching gain).
@@ -275,6 +450,29 @@ pub struct MetricsReport {
     pub ttft: Option<Summary>,
     /// Inter-token gap summary in seconds (None before any 2-token stream).
     pub inter_token: Option<Summary>,
+    // --- stage-latency breakdown (seconds; None before the first sample) --
+    /// Admission enqueue → popped by a worker / admitted to a decode slot.
+    pub queue_wait: Option<Summary>,
+    /// Pop → forward starts (adapter resolve + batch padding/layout).
+    pub batch_assembly: Option<Summary>,
+    /// Micro-batch forward duration (score or cls).
+    pub forward: Option<Summary>,
+    /// Decode slot admission → first token emitted.
+    pub prefill: Option<Summary>,
+    /// One incremental decode step for one slot.
+    pub step: Option<Summary>,
+    // --- kernel-pool utilization (filled by `Server`; zero/None from a
+    // bare `ServeMetrics::snapshot`) ---------------------------------------
+    /// Kernel-pool width the server was started with.
+    pub pool_threads: usize,
+    /// Lifetime pool jobs (inline + dispatched).
+    pub pool_jobs: u64,
+    /// Busy worker-time / available worker-time over timed jobs (None
+    /// until pool timing ran — it is enabled alongside tracing).
+    pub pool_busy_frac: Option<f64>,
+    /// Slowest participant / mean participant busy time per timed job,
+    /// busy-weighted (1.0 = perfectly balanced task partition).
+    pub pool_imbalance: Option<f64>,
 }
 
 /// Render `p * 1e3` as `"<x>.xx ms"`, or `-` before any sample exists —
@@ -292,17 +490,55 @@ impl MetricsReport {
         self.rejected.values().sum()
     }
 
+    /// The stage-breakdown summaries by [`StageLat`], in taxonomy order.
+    pub fn stage(&self, s: StageLat) -> Option<&Summary> {
+        match s {
+            StageLat::QueueWait => self.queue_wait.as_ref(),
+            StageLat::BatchAssembly => self.batch_assembly.as_ref(),
+            StageLat::Forward => self.forward.as_ref(),
+            StageLat::Prefill => self.prefill.as_ref(),
+            StageLat::Step => self.step.as_ref(),
+        }
+    }
+
     /// Render the snapshot as printable tables.
     pub fn render(&self) -> String {
         let mut t = Table::new("Serving metrics").header(&["Metric", "Value"]);
         t.row(vec!["served".into(), self.served.to_string()]);
         t.row(vec!["rejected".into(), self.total_rejected().to_string()]);
         t.row(vec!["req/s".into(), format!("{:.1}", self.req_per_sec)]);
+        t.row(vec!["req/s lifetime".into(), format!("{:.1}", self.req_per_sec_lifetime)]);
         t.row(vec!["p50 latency".into(), ms_or_dash(self.latency.as_ref().map(|s| s.p50))]);
         t.row(vec!["p95 latency".into(), ms_or_dash(self.latency.as_ref().map(|s| s.p95))]);
         t.row(vec!["batches".into(), self.batches.to_string()]);
         t.row(vec!["mean batch".into(), format!("{:.2}", self.mean_batch)]);
         t.row(vec!["max queue depth".into(), self.max_queue_depth.to_string()]);
+        for s in StageLat::ALL {
+            if let Some(sum) = self.stage(s) {
+                t.row(vec![
+                    format!("stage/{} p50/p95", s.name()),
+                    format!(
+                        "{} / {}",
+                        ms_or_dash(Some(sum.p50)),
+                        ms_or_dash(Some(sum.p95))
+                    ),
+                ]);
+            }
+        }
+        if self.pool_busy_frac.is_some() || self.pool_imbalance.is_some() {
+            t.row(vec![
+                "pool busy".into(),
+                self.pool_busy_frac
+                    .map(|f| format!("{:.0}%", 100.0 * f))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+            t.row(vec![
+                "pool imbalance".into(),
+                self.pool_imbalance
+                    .map(|f| format!("{f:.2}×"))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
         if self.cls_served > 0 || self.cls_batches > 0 {
             t.row(vec!["cls served".into(), self.cls_served.to_string()]);
             t.row(vec!["cls p50".into(), ms_or_dash(self.cls_latency.as_ref().map(|s| s.p50))]);
@@ -314,6 +550,10 @@ impl MetricsReport {
             t.row(vec!["generations".into(), self.gen_served.to_string()]);
             t.row(vec!["tokens streamed".into(), self.gen_tokens.to_string()]);
             t.row(vec!["tokens/s".into(), format!("{:.1}", self.tokens_per_sec)]);
+            t.row(vec![
+                "tokens/s lifetime".into(),
+                format!("{:.1}", self.tokens_per_sec_lifetime),
+            ]);
             t.row(vec!["ttft p50".into(), ms_or_dash(self.ttft.as_ref().map(|s| s.p50))]);
             t.row(vec!["ttft p95".into(), ms_or_dash(self.ttft.as_ref().map(|s| s.p95))]);
             t.row(vec![
@@ -350,6 +590,171 @@ impl MetricsReport {
             out.push_str(&a.render());
         }
         out
+    }
+
+    /// Prometheus text exposition format (served on `GET /metrics` by the
+    /// `--metrics-addr` endpoint). Latency summaries become
+    /// `{quantile="…"}` sample lines plus `_count`/`_sum`; the stage
+    /// breakdown is one metric family labeled by stage; counters end in
+    /// `_total` per convention.
+    pub fn prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut o = String::new();
+        fn summary_lines(o: &mut String, name: &str, labels: &str, s: &Summary) {
+            let sep = if labels.is_empty() { "" } else { "," };
+            let _ = writeln!(o, "{name}{{{labels}{sep}quantile=\"0.5\"}} {}", s.p50);
+            let _ = writeln!(o, "{name}{{{labels}{sep}quantile=\"0.95\"}} {}", s.p95);
+            let _ = writeln!(
+                o,
+                "{name}_count{} {}",
+                if labels.is_empty() { String::new() } else { format!("{{{labels}}}") },
+                s.n
+            );
+            let _ = writeln!(
+                o,
+                "{name}_sum{} {}",
+                if labels.is_empty() { String::new() } else { format!("{{{labels}}}") },
+                s.mean * s.n as f64
+            );
+        }
+        let _ = writeln!(o, "# TYPE neuroada_uptime_seconds gauge");
+        let _ = writeln!(o, "neuroada_uptime_seconds {}", self.uptime_secs);
+        let _ = writeln!(o, "# TYPE neuroada_requests_served_total counter");
+        let _ = writeln!(o, "neuroada_requests_served_total {}", self.served);
+        let _ = writeln!(o, "# TYPE neuroada_requests_rejected_total counter");
+        for (kind, n) in &self.rejected {
+            let _ = writeln!(o, "neuroada_requests_rejected_total{{kind=\"{kind}\"}} {n}");
+        }
+        let _ = writeln!(o, "# TYPE neuroada_req_per_sec gauge");
+        let _ = writeln!(o, "neuroada_req_per_sec {}", self.req_per_sec);
+        let _ = writeln!(o, "neuroada_req_per_sec_lifetime {}", self.req_per_sec_lifetime);
+        let _ = writeln!(o, "# TYPE neuroada_tokens_per_sec gauge");
+        let _ = writeln!(o, "neuroada_tokens_per_sec {}", self.tokens_per_sec);
+        let _ = writeln!(o, "neuroada_tokens_per_sec_lifetime {}", self.tokens_per_sec_lifetime);
+        let _ = writeln!(o, "# TYPE neuroada_batches_total counter");
+        let _ = writeln!(o, "neuroada_batches_total {}", self.batches);
+        let _ = writeln!(o, "# TYPE neuroada_mean_batch gauge");
+        let _ = writeln!(o, "neuroada_mean_batch {}", self.mean_batch);
+        let _ = writeln!(o, "# TYPE neuroada_max_queue_depth gauge");
+        let _ = writeln!(o, "neuroada_max_queue_depth {}", self.max_queue_depth);
+        if let Some(s) = &self.latency {
+            let _ = writeln!(o, "# TYPE neuroada_latency_seconds summary");
+            summary_lines(&mut o, "neuroada_latency_seconds", "", s);
+        }
+        let _ = writeln!(o, "# TYPE neuroada_stage_seconds summary");
+        for st in StageLat::ALL {
+            if let Some(s) = self.stage(st) {
+                summary_lines(
+                    &mut o,
+                    "neuroada_stage_seconds",
+                    &format!("stage=\"{}\"", st.name()),
+                    s,
+                );
+            }
+        }
+        if self.gen_served > 0 {
+            let _ = writeln!(o, "# TYPE neuroada_generations_total counter");
+            let _ = writeln!(o, "neuroada_generations_total {}", self.gen_served);
+            let _ = writeln!(o, "neuroada_tokens_streamed_total {}", self.gen_tokens);
+            let _ = writeln!(o, "neuroada_decode_steps_total {}", self.decode_steps);
+            let _ = writeln!(o, "neuroada_slot_occupancy_mean {}", self.mean_slot_occupancy);
+            if let Some(s) = &self.ttft {
+                let _ = writeln!(o, "# TYPE neuroada_ttft_seconds summary");
+                summary_lines(&mut o, "neuroada_ttft_seconds", "", s);
+            }
+        }
+        let _ = writeln!(o, "# TYPE neuroada_pool_threads gauge");
+        let _ = writeln!(o, "neuroada_pool_threads {}", self.pool_threads);
+        let _ = writeln!(o, "neuroada_pool_jobs_total {}", self.pool_jobs);
+        if let Some(f) = self.pool_busy_frac {
+            let _ = writeln!(o, "neuroada_pool_busy_fraction {f}");
+        }
+        if let Some(f) = self.pool_imbalance {
+            let _ = writeln!(o, "neuroada_pool_imbalance {f}");
+        }
+        let _ = writeln!(o, "# TYPE neuroada_adapter_served_total counter");
+        for (name, c) in &self.adapters {
+            let _ = writeln!(o, "neuroada_adapter_served_total{{adapter=\"{name}\"}} {}", c.served);
+            let _ = writeln!(
+                o,
+                "neuroada_adapter_merged_hits_total{{adapter=\"{name}\"}} {}",
+                c.merged_hits
+            );
+            let _ = writeln!(
+                o,
+                "neuroada_adapter_bypass_hits_total{{adapter=\"{name}\"}} {}",
+                c.bypass_hits
+            );
+        }
+        o
+    }
+
+    /// Full JSON snapshot (served on `GET /metrics.json`, written by
+    /// `--metrics-out`, embedded per size in `BENCH_serve.json`).
+    /// Round-trips through `util::json` — non-finite values serialize as
+    /// `null` there, so an empty window can never smuggle a `NaN` out.
+    pub fn to_json(&self) -> Json {
+        fn summary_json(s: &Summary) -> Json {
+            let mut o = Json::obj();
+            o.set("n", s.n);
+            o.set("mean", s.mean);
+            o.set("min", s.min);
+            o.set("max", s.max);
+            o.set("p50", s.p50);
+            o.set("p95", s.p95);
+            o
+        }
+        fn opt_summary(s: &Option<Summary>) -> Json {
+            s.as_ref().map(summary_json).unwrap_or(Json::Null)
+        }
+        let mut o = Json::obj();
+        o.set("uptime_secs", self.uptime_secs);
+        o.set("served", self.served);
+        o.set("req_per_sec", self.req_per_sec);
+        o.set("req_per_sec_lifetime", self.req_per_sec_lifetime);
+        o.set("latency", opt_summary(&self.latency));
+        o.set("batches", self.batches);
+        o.set("mean_batch", self.mean_batch);
+        o.set("max_queue_depth", self.max_queue_depth);
+        let mut rej = Json::obj();
+        for (k, v) in &self.rejected {
+            rej.set(k, *v);
+        }
+        o.set("rejected", rej);
+        let mut stages = Json::obj();
+        for st in StageLat::ALL {
+            stages.set(st.name(), opt_summary(&self.stage(st).cloned()));
+        }
+        o.set("stages", stages);
+        o.set("cls_served", self.cls_served);
+        o.set("cls_latency", opt_summary(&self.cls_latency));
+        o.set("cls_batches", self.cls_batches);
+        o.set("cls_mean_batch", self.cls_mean_batch);
+        o.set("gen_served", self.gen_served);
+        o.set("gen_tokens", self.gen_tokens);
+        o.set("tokens_per_sec", self.tokens_per_sec);
+        o.set("tokens_per_sec_lifetime", self.tokens_per_sec_lifetime);
+        o.set("decode_steps", self.decode_steps);
+        o.set("mean_slot_occupancy", self.mean_slot_occupancy);
+        o.set("max_active_slots", self.max_active_slots);
+        o.set("ttft", opt_summary(&self.ttft));
+        o.set("inter_token", opt_summary(&self.inter_token));
+        let mut pool = Json::obj();
+        pool.set("threads", self.pool_threads);
+        pool.set("jobs", self.pool_jobs);
+        pool.set("busy_frac", self.pool_busy_frac.map(Json::from).unwrap_or(Json::Null));
+        pool.set("imbalance", self.pool_imbalance.map(Json::from).unwrap_or(Json::Null));
+        o.set("pool", pool);
+        let mut adapters = Json::obj();
+        for (name, c) in &self.adapters {
+            let mut a = Json::obj();
+            a.set("served", c.served);
+            a.set("merged_hits", c.merged_hits);
+            a.set("bypass_hits", c.bypass_hits);
+            adapters.set(name, a);
+        }
+        o.set("adapters", adapters);
+        o
     }
 }
 
@@ -464,5 +869,140 @@ mod tests {
         assert!(rendered.contains("tokens streamed"));
         assert!(rendered.contains("ttft p50"));
         assert!(rendered.contains("slot occupancy"));
+    }
+
+    #[test]
+    fn rate_window_is_sliding_not_lifetime() {
+        let mut w = RateWindow::default();
+        // 100 requests in the server's first 2 seconds...
+        w.record(0, 60);
+        w.record(1, 40);
+        // ...young server: rate over its true age (≈ lifetime rate)
+        assert!((w.rate(1, 2.0) - 50.0).abs() < 1e-9);
+        // ...then an idle hour: the stale buckets leave the window, so the
+        // rate is 0 instead of the lifetime-diluted 100/3600
+        assert_eq!(w.rate(3600, 3600.0), 0.0);
+        // fresh traffic dominates: 120 requests in the last minute
+        w.record(3599, 120);
+        let r = w.rate(3600, 3600.5);
+        assert!(r > 1.9 && r < 2.1, "windowed rate ≈ 2/s, got {r}");
+        // bucket reuse: a second 60s later overwrites its slot cleanly
+        let mut v = RateWindow::default();
+        v.record(5, 10);
+        v.record(5 + RATE_WINDOW_SECS, 30);
+        let idx = (5 % RATE_WINDOW_SECS) as usize;
+        assert_eq!(v.counts[idx], 30, "stale bucket must reset, not accumulate");
+    }
+
+    #[test]
+    fn windowed_and_lifetime_rates_both_reported() {
+        let m = ServeMetrics::new();
+        m.record_served("a", ServePath::Merged, 0.001);
+        m.record_gen_served("a", ServePath::Merged, 0.002, 7);
+        let r = m.snapshot();
+        // a sub-second run: windowed and lifetime agree (same denominator)
+        assert!(r.req_per_sec > 0.0);
+        assert!(r.req_per_sec_lifetime > 0.0);
+        assert!(r.tokens_per_sec > 0.0);
+        assert!(r.tokens_per_sec_lifetime > 0.0);
+        assert_eq!(r.gen_tokens, 7);
+    }
+
+    #[test]
+    fn stage_breakdown_records_and_renders() {
+        let m = ServeMetrics::new();
+        m.record_stage(StageLat::QueueWait, 0.004);
+        m.record_stage(StageLat::QueueWait, 0.006);
+        m.record_stage(StageLat::BatchAssembly, 0.001);
+        m.record_stage(StageLat::Forward, 0.010);
+        let r = m.snapshot();
+        assert_eq!(r.queue_wait.as_ref().unwrap().n, 2);
+        assert!((r.queue_wait.as_ref().unwrap().p50 - 0.005).abs() < 1e-9);
+        assert_eq!(r.forward.as_ref().unwrap().n, 1);
+        assert!(r.prefill.is_none(), "no decode traffic, no prefill stage");
+        assert!(r.step.is_none());
+        let rendered = r.render();
+        assert!(rendered.contains("stage/queue_wait p50/p95"));
+        assert!(rendered.contains("stage/forward p50/p95"));
+        assert!(!rendered.contains("stage/prefill"));
+        assert!(!rendered.contains("NaN"), "{rendered}");
+    }
+
+    #[test]
+    fn only_rejections_render_and_export_without_nan() {
+        // a server that only ever sheds load: every latency window empty
+        let m = ServeMetrics::new();
+        m.record_reject("queue_full");
+        m.record_reject("queue_full");
+        m.record_reject("unknown_adapter");
+        let r = m.snapshot();
+        assert_eq!(r.served, 0);
+        assert_eq!(r.total_rejected(), 3);
+        let rendered = r.render();
+        assert!(rendered.contains("rejected/queue_full"));
+        assert!(!rendered.contains("NaN"), "{rendered}");
+        let prom = r.prometheus();
+        assert!(!prom.contains("NaN"), "{prom}");
+        assert!(prom.contains("neuroada_requests_rejected_total{kind=\"queue_full\"} 2"));
+        // util::json serializes non-finite as null, so the JSON snapshot
+        // is NaN-free by construction — and must still parse back
+        let dump = r.to_json().dump();
+        assert!(!dump.contains("NaN"), "{dump}");
+        assert!(Json::parse(&dump).is_ok());
+    }
+
+    #[test]
+    fn json_export_round_trips_through_util_json() {
+        let m = ServeMetrics::new();
+        m.record_served("tenant-a", ServePath::Merged, 0.010);
+        m.record_stage(StageLat::Forward, 0.008);
+        m.record_batch(1);
+        let mut r = m.snapshot();
+        r.pool_threads = 4;
+        r.pool_jobs = 17;
+        r.pool_busy_frac = Some(0.75);
+        r.pool_imbalance = Some(1.25);
+        let parsed = Json::parse(&r.to_json().dump()).expect("metrics JSON parses back");
+        assert_eq!(parsed.get("served").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(
+            parsed.at(&["stages", "forward", "n"]).and_then(|v| v.as_usize()),
+            Some(1)
+        );
+        assert_eq!(parsed.at(&["pool", "threads"]).and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(parsed.at(&["pool", "busy_frac"]).and_then(|v| v.as_f64()), Some(0.75));
+        assert_eq!(
+            parsed.at(&["adapters", "tenant-a", "served"]).and_then(|v| v.as_usize()),
+            Some(1)
+        );
+        // stages with no samples are explicit nulls, not missing keys
+        assert!(matches!(parsed.at(&["stages", "prefill"]), Some(&Json::Null)));
+    }
+
+    #[test]
+    fn prometheus_export_is_well_formed() {
+        let m = ServeMetrics::new();
+        m.record_served("a", ServePath::Merged, 0.010);
+        m.record_served("a", ServePath::Bypass, 0.030);
+        m.record_stage(StageLat::QueueWait, 0.002);
+        m.record_reject("queue_full");
+        let mut r = m.snapshot();
+        r.pool_threads = 2;
+        r.pool_busy_frac = Some(0.5);
+        let prom = r.prometheus();
+        assert!(prom.contains("neuroada_requests_served_total 2"));
+        assert!(prom.contains("neuroada_stage_seconds{stage=\"queue_wait\",quantile=\"0.5\"}"));
+        assert!(prom.contains("neuroada_stage_seconds_count{stage=\"queue_wait\"} 1"));
+        assert!(prom.contains("neuroada_latency_seconds{quantile=\"0.95\"}"));
+        assert!(prom.contains("neuroada_pool_busy_fraction 0.5"));
+        assert!(prom.contains("neuroada_adapter_served_total{adapter=\"a\"} 2"));
+        // every sample line parses: `name{labels} value` with a numeric value
+        for line in prom.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (name, value) = line.rsplit_once(' ').expect("name value");
+            assert!(!name.is_empty());
+            assert!(
+                value.parse::<f64>().is_ok(),
+                "unparseable sample value in {line:?}"
+            );
+        }
     }
 }

@@ -31,10 +31,19 @@
 //!   decode over the KV-cached incremental forward
 //!   (`model::DecodeState`); tokens stream back as they are produced,
 //!   finished sequences free their decode slot mid-flight.
-//! * [`metrics`]  — [`ServeMetrics`]: p50/p95 latency, req/s, queue depth,
-//!   micro-batch occupancy, per-adapter merged/bypass hit rates, rejection
-//!   counts; decode adds TTFT, inter-token latency, tokens/s, and slot
-//!   occupancy.
+//! * [`metrics`]  — [`ServeMetrics`]: p50/p95 latency, sliding-window +
+//!   lifetime req/s and tokens/s, queue depth, micro-batch occupancy,
+//!   per-stage latency breakdown (queue wait / batch assembly / forward /
+//!   prefill / decode step), per-adapter merged/bypass hit rates, rejection
+//!   counts; decode adds TTFT, inter-token latency, and slot occupancy.
+//!   [`MetricsReport`] exports as a rendered table, Prometheus text, or a
+//!   JSON snapshot (`Server::metrics_http` serves the latter two over
+//!   HTTP).
+//!
+//! Request-level observability lives in [`crate::obs`]: start a server
+//! with [`ServeCfg::trace`] and every request records contiguous stage
+//! spans on `Server::tracer()`, exportable as Chrome trace-event JSON
+//! (`neuroada serve --trace-out`); see `docs/observability.md`.
 //!
 //! See `docs/serving.md` for the architecture and lifecycle, and
 //! `bench/serve_bench` for the merged-vs-bypass perf baseline. The
@@ -84,12 +93,15 @@ pub fn backend_from_manifest(artifacts_dir: &str, size: &str) -> Backend {
 pub fn load_or_init_backbone(opts: &RunOpts, cfg: &ModelCfg) -> anyhow::Result<ValueStore> {
     let dir = opts.backbone_dir(&cfg.name);
     if dir.join("meta.json").exists() {
-        eprintln!("[serve] backbone: cached checkpoint {dir:?}");
+        crate::obs::log::info("serve", format_args!("backbone: cached checkpoint {dir:?}"));
         crate::train::checkpoint::load_params(&dir)
     } else {
-        eprintln!(
-            "[serve] backbone: no cached checkpoint at {dir:?}; seeded random init \
-             (run `neuroada pretrain` first for real serving)"
+        crate::obs::log::warn(
+            "serve",
+            format_args!(
+                "backbone: no cached checkpoint at {dir:?}; seeded random init \
+                 (run `neuroada pretrain` first for real serving)"
+            ),
         );
         Ok(crate::model::init::init_params(cfg, &mut crate::util::rng::Rng::new(opts.seed)))
     }

@@ -18,6 +18,7 @@
 
 use crate::config::ModelCfg;
 use crate::model::{DeltaOverlay, PlannedModel};
+use crate::obs::trace::{Stage, Tracer};
 use crate::peft::DeltaStore;
 use crate::tensor::pool::KernelPool;
 use crate::runtime::ValueStore;
@@ -26,6 +27,7 @@ use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// What the registry's backbone is — and therefore which request types the
 /// serving engine routes to it: causal decoders serve multiple-choice
@@ -151,6 +153,10 @@ pub struct AdapterRegistry {
     rcfg: RegistryCfg,
     backbone: Arc<ValueStore>,
     inner: Mutex<Inner>,
+    /// Optional span tracer (installed by the server): merge builds and LRU
+    /// evictions show up on the trace timeline next to the requests that
+    /// triggered them. Separate lock from `inner` — never held together.
+    tracer: Mutex<Option<Arc<Tracer>>>,
 }
 
 impl AdapterRegistry {
@@ -160,7 +166,20 @@ impl AdapterRegistry {
             rcfg,
             backbone: Arc::new(backbone),
             inner: Mutex::new(Inner { entries: BTreeMap::new(), tick: 0 }),
+            tracer: Mutex::new(None),
         }
+    }
+
+    /// Install a span tracer; registry merge/evict events are recorded on it
+    /// whenever it is enabled.
+    pub fn set_tracer(&self, t: Arc<Tracer>) {
+        *self.tracer.lock().unwrap() = Some(t);
+    }
+
+    /// The installed tracer, only when it is currently enabled.
+    fn tracer(&self) -> Option<Arc<Tracer>> {
+        let g = self.tracer.lock().unwrap();
+        g.as_ref().filter(|t| t.enabled()).cloned()
     }
 
     pub fn model_cfg(&self) -> &ModelCfg {
@@ -348,7 +367,12 @@ impl AdapterRegistry {
             (e.deltas.clone(), e.generation)
         };
         // build the merged copy without holding the lock
+        let tracer = self.tracer();
+        let t_merge = Instant::now();
         let merged = self.build_merged(&deltas);
+        if let Some(t) = &tracer {
+            t.span(0, Stage::Merge, t_merge, Instant::now(), name);
+        }
         let mut g = self.inner.lock().unwrap();
         match g.entries.get_mut(name) {
             // install only into the generation we merged from — a hot
@@ -382,7 +406,12 @@ impl AdapterRegistry {
             }
             (e.deltas.clone(), e.generation)
         };
+        let tracer = self.tracer();
+        let t_merge = Instant::now();
         let merged = self.build_merged(&deltas);
+        if let Some(t) = &tracer {
+            t.span(0, Stage::Merge, t_merge, Instant::now(), name);
+        }
         let mut g = self.inner.lock().unwrap();
         let e = g
             .entries
@@ -431,6 +460,9 @@ impl AdapterRegistry {
             match victim {
                 Some(v) => {
                     g.entries.get_mut(&v).unwrap().merged = None;
+                    if let Some(t) = self.tracer() {
+                        t.instant(0, Stage::Evict, &v);
+                    }
                 }
                 None => return, // only `keep` is resident and capacity is 0
             }
@@ -586,6 +618,30 @@ mod tests {
         // merged view: dense weights, nothing bound
         let merged = reg.merge_now("a").unwrap();
         assert_eq!(merged.planned(&cfg, &KernelPool::serial()).unwrap().bound_deltas(), 0);
+    }
+
+    #[test]
+    fn tracer_records_merge_and_evict_events() {
+        let reg = nano_registry(RegistryCfg { merged_capacity: 1, promote_after: 1 });
+        reg.register("a", adapter(&reg, 1)).unwrap();
+        reg.register("b", adapter(&reg, 2)).unwrap();
+        let tracer = Tracer::new(true, 256);
+        reg.set_tracer(tracer.clone());
+        // promoting a records a merge; promoting b records a merge + a's eviction
+        reg.resolve("a").unwrap();
+        reg.resolve("b").unwrap();
+        let events = tracer.events();
+        let merges: Vec<_> = events.iter().filter(|e| e.stage == Stage::Merge).collect();
+        assert_eq!(merges.len(), 2);
+        assert_eq!(merges[0].label, "a");
+        assert_eq!(merges[1].label, "b");
+        let evicts: Vec<_> = events.iter().filter(|e| e.stage == Stage::Evict).collect();
+        assert_eq!(evicts.len(), 1);
+        assert_eq!(evicts[0].label, "a");
+        // disabled tracer: no further events recorded
+        tracer.set_enabled(false);
+        reg.resolve("a").unwrap();
+        assert_eq!(tracer.events().len(), events.len());
     }
 
     #[test]

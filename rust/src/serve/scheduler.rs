@@ -38,9 +38,11 @@
 
 use super::batcher::MicroBatcher;
 use super::generate::{FinishReason, GenEvent, GenResponse, GenTicket, GenerateRequest};
-use super::metrics::{MetricsReport, ServeMetrics};
+use super::metrics::{MetricsReport, ServeMetrics, StageLat};
 use super::registry::{AdapterRegistry, ModelKind, ModelRef, ServePath};
 use crate::config::ModelCfg;
+use crate::obs::http::{HttpServer, Routes};
+use crate::obs::trace::{Stage, Tracer};
 use crate::data::{cls_batch, eval_batch, Example};
 use crate::model::{sample_token, DecodeState, PlannedModel, SampleCfg};
 use crate::runtime::manifest::ArtifactMeta;
@@ -239,6 +241,11 @@ pub struct ServeCfg {
     /// `docs/performance.md`). 0 = fall back to the `NEUROADA_THREADS`
     /// env var, else 1 (serial).
     pub threads: usize,
+    /// Record per-request stage spans on the server's [`Tracer`] and enable
+    /// per-job [`KernelPool`] timing. Off (the default), the only cost on
+    /// the serving path is one relaxed atomic load per record site; stage
+    /// latency *metrics* are collected either way. See `docs/observability.md`.
+    pub trace: bool,
 }
 
 impl Default for ServeCfg {
@@ -251,6 +258,7 @@ impl Default for ServeCfg {
             max_slots: 8,
             adapter_quota: 0,
             threads: 0,
+            trace: false,
         }
     }
 }
@@ -271,12 +279,16 @@ pub enum Backend {
 
 struct Queued {
     req: Request,
+    /// Trace request id minted at admission (0 when tracing is off).
+    id: u64,
     enqueued: Instant,
     tx: mpsc::Sender<Result<Response, Reject>>,
 }
 
 struct QueuedCls {
     req: ClsRequest,
+    /// Trace request id minted at admission (0 when tracing is off).
+    id: u64,
     enqueued: Instant,
     tx: mpsc::Sender<Result<ClsResponse, Reject>>,
 }
@@ -291,6 +303,8 @@ enum Work {
 
 struct QueuedGen {
     req: GenerateRequest,
+    /// Trace request id minted at admission (0 when tracing is off).
+    id: u64,
     enqueued: Instant,
     tx: mpsc::Sender<Result<GenEvent, Reject>>,
 }
@@ -317,6 +331,10 @@ struct Shared {
     /// shared by the scheduler workers and the decode thread — its workers
     /// are spawned once here, never per batch or per token.
     pool: KernelPool,
+    /// Span tracer for the request timeline. Created at `Server::start`
+    /// (enabled iff [`ServeCfg::trace`]); request ids are minted at
+    /// admission, stage spans recorded by workers and the decode thread.
+    tracer: Arc<Tracer>,
     state: Mutex<State>,
     /// Wakes batch workers (scoring queue). Paired with `state`.
     cv: Condvar,
@@ -382,6 +400,11 @@ impl Server {
         // place serving ever spawns kernel threads
         cfg.threads = crate::util::resolve_threads(cfg.threads);
         let pool = KernelPool::new(cfg.threads);
+        // one tracer for the server's whole lifetime; registry merge/evict
+        // events and per-job pool timing ride the same switch
+        let tracer = Tracer::new(cfg.trace, crate::obs::trace::DEFAULT_CAPACITY);
+        pool.set_timed(cfg.trace);
+        registry.set_tracer(tracer.clone());
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 batcher: MicroBatcher::new(cfg.max_batch.max(1), cfg.max_delay),
@@ -394,6 +417,7 @@ impl Server {
             registry,
             metrics: ServeMetrics::new(),
             pool,
+            tracer,
             cv: Condvar::new(),
             gen_cv: Condvar::new(),
         });
@@ -433,7 +457,46 @@ impl Server {
     }
 
     pub fn metrics(&self) -> MetricsReport {
-        self.shared.metrics.snapshot()
+        Self::report(&self.shared)
+    }
+
+    /// Snapshot + the pool-utilization fields only the server can fill
+    /// (the metrics module never holds a [`KernelPool`]).
+    fn report(sh: &Shared) -> MetricsReport {
+        let mut m = sh.metrics.snapshot();
+        m.pool_threads = sh.pool.threads();
+        m.pool_jobs = sh.pool.jobs();
+        m.pool_busy_frac = sh.pool.busy_frac();
+        m.pool_imbalance = sh.pool.imbalance();
+        m
+    }
+
+    /// The server's span tracer (enabled iff started with
+    /// [`ServeCfg::trace`]); drain it with [`Tracer::events`] or export via
+    /// [`Tracer::to_chrome_json`].
+    pub fn tracer(&self) -> Arc<Tracer> {
+        self.shared.tracer.clone()
+    }
+
+    /// Start the metrics endpoint on `addr` (e.g. `"127.0.0.1:9100"`; port
+    /// 0 picks a free port): `GET /metrics` serves the Prometheus text
+    /// exposition, `GET /metrics.json` the full JSON snapshot — both
+    /// rendered from a fresh [`MetricsReport`] per scrape. The returned
+    /// handle owns the listener thread; it outlives `self` harmlessly
+    /// (scrapes keep the shared state alive through its `Arc`).
+    pub fn metrics_http(&self, addr: &str) -> std::io::Result<HttpServer> {
+        let sh = self.shared.clone();
+        let routes: Routes = Arc::new(move |path: &str| match path {
+            "/metrics" => Some((
+                "text/plain; version=0.0.4; charset=utf-8",
+                Server::report(&sh).prometheus(),
+            )),
+            "/metrics.json" => {
+                Some(("application/json", Server::report(&sh).to_json().dump_pretty()))
+            }
+            _ => None,
+        });
+        crate::obs::http::serve(addr, routes)
     }
 
     /// Admit one request. Fails fast with a typed [`Reject`] (recorded in
@@ -447,7 +510,8 @@ impl Server {
             let (tx, rx) = mpsc::channel();
             let adapter = req.adapter.clone();
             let now = Instant::now();
-            st.batcher.push(&adapter, now, Work::Score(Queued { req, enqueued: now, tx }));
+            let id = Self::mint_id(sh);
+            st.batcher.push(&adapter, now, Work::Score(Queued { req, id, enqueued: now, tx }));
             sh.metrics.observe_queue_depth(st.batcher.depth() + st.gen_queue.len());
             sh.cv.notify_one();
             Ok(Ticket { rx })
@@ -471,7 +535,8 @@ impl Server {
             let (tx, rx) = mpsc::channel();
             let adapter = req.adapter.clone();
             let now = Instant::now();
-            st.batcher.push(&adapter, now, Work::Cls(QueuedCls { req, enqueued: now, tx }));
+            let id = Self::mint_id(sh);
+            st.batcher.push(&adapter, now, Work::Cls(QueuedCls { req, id, enqueued: now, tx }));
             sh.metrics.observe_queue_depth(st.batcher.depth() + st.gen_queue.len());
             sh.cv.notify_one();
             Ok(ClsTicket { rx })
@@ -494,7 +559,8 @@ impl Server {
             let mut st = sh.state.lock().unwrap();
             Self::gate(sh, &st, &req.adapter)?;
             let (tx, rx) = mpsc::channel();
-            st.gen_queue.push_back(QueuedGen { req, enqueued: Instant::now(), tx });
+            let id = Self::mint_id(sh);
+            st.gen_queue.push_back(QueuedGen { req, id, enqueued: Instant::now(), tx });
             sh.metrics.observe_queue_depth(st.batcher.depth() + st.gen_queue.len());
             sh.gen_cv.notify_one();
             Ok(GenTicket { rx })
@@ -503,6 +569,16 @@ impl Server {
             sh.metrics.record_reject(r.kind());
         }
         res
+    }
+
+    /// Mint a trace request id at admission — 0 (the "no request" id) when
+    /// tracing is off, so the disabled path is one relaxed atomic load.
+    fn mint_id(sh: &Shared) -> u64 {
+        if sh.tracer.enabled() {
+            sh.tracer.next_request_id()
+        } else {
+            0
+        }
     }
 
     /// Shared admission gate, identical for every request class: reject
@@ -778,7 +854,7 @@ impl Server {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        self.shared.metrics.snapshot()
+        Self::report(&self.shared)
     }
 }
 
@@ -833,6 +909,8 @@ fn worker_loop(sh: &Shared) {
 /// One in-flight generation: a decode slot with its own KV cache.
 struct GenSlot {
     adapter: String,
+    /// Trace request id minted at admission (0 when tracing is off).
+    id: u64,
     model: ModelRef,
     path: ServePath,
     state: DecodeState,
@@ -845,6 +923,10 @@ struct GenSlot {
     sampler: Option<(SampleCfg, Rng)>,
     tx: mpsc::Sender<Result<GenEvent, Reject>>,
     enqueued: Instant,
+    /// Left the generation queue for this slot (prefill stage start).
+    admitted: Instant,
+    /// First token emitted (decode-stream stage start); `admitted` until then.
+    stream_start: Instant,
     ttft: Duration,
     emitted: usize,
     last_token_at: Instant,
@@ -974,7 +1056,13 @@ fn release_decoding(sh: &Shared, adapter: &str) {
 /// the first token. `None` when the request finished at prefill (rejected,
 /// errored, or single-token generations that complete immediately).
 fn prefill_slot(sh: &Shared, mcfg: &ModelCfg, g: QueuedGen) -> Option<GenSlot> {
-    let QueuedGen { req, enqueued, tx } = g;
+    let QueuedGen { req, id, enqueued, tx } = g;
+    let t_admit = Instant::now();
+    sh.metrics
+        .record_stage(StageLat::QueueWait, t_admit.saturating_duration_since(enqueued).as_secs_f64());
+    if sh.tracer.enabled() && id != 0 {
+        sh.tracer.span(id, Stage::QueueWait, enqueued, t_admit, &req.adapter);
+    }
     // no-promote resolve: an inline O(params) promotion merge on the single
     // decode thread would stall every active stream's inter-token latency
     let Some(model) = sh.registry.resolve_no_promote(&req.adapter) else {
@@ -996,6 +1084,7 @@ fn prefill_slot(sh: &Shared, mcfg: &ModelCfg, g: QueuedGen) -> Option<GenSlot> {
     let prompt_len = req.prompt.len();
     let mut slot = GenSlot {
         adapter: req.adapter,
+        id,
         model,
         path,
         state,
@@ -1006,6 +1095,8 @@ fn prefill_slot(sh: &Shared, mcfg: &ModelCfg, g: QueuedGen) -> Option<GenSlot> {
         sampler: req.sample.map(|s| (s, Rng::new(s.seed))),
         tx,
         enqueued,
+        admitted: t_admit,
+        stream_start: t_admit,
         ttft: Duration::ZERO,
         emitted: 0,
         last_token_at: enqueued,
@@ -1020,9 +1111,15 @@ fn prefill_slot(sh: &Shared, mcfg: &ModelCfg, g: QueuedGen) -> Option<GenSlot> {
 /// Advance one slot by one token through the iteration's resolved plan:
 /// feed the last token, pick the next (greedy or sampled), stream it.
 fn step_slot(sh: &Shared, plan: &PlannedModel, slot: &mut GenSlot) -> SlotStatus {
+    let t0 = Instant::now();
     let last = *slot.tokens.last().expect("slot holds at least the prompt");
     match plan.forward_step(last, &mut slot.state) {
         Ok(logits) => {
+            let t1 = Instant::now();
+            sh.metrics.record_stage(StageLat::Step, t1.saturating_duration_since(t0).as_secs_f64());
+            if sh.tracer.enabled() && slot.id != 0 {
+                sh.tracer.span(slot.id, Stage::DecodeStep, t0, t1, "");
+            }
             let next = choose_token(slot, &logits);
             emit_token(sh, slot, next)
         }
@@ -1041,6 +1138,16 @@ fn emit_token(sh: &Shared, slot: &mut GenSlot, token: i32) -> SlotStatus {
     if slot.emitted == 0 {
         slot.ttft = now.duration_since(slot.enqueued);
         sh.metrics.record_first_token(slot.ttft.as_secs_f64());
+        // prefill stage ends where the stream begins: slot admission →
+        // first token (prompt feed included), contiguous with queue wait
+        sh.metrics.record_stage(
+            StageLat::Prefill,
+            now.saturating_duration_since(slot.admitted).as_secs_f64(),
+        );
+        if sh.tracer.enabled() && slot.id != 0 {
+            sh.tracer.span(slot.id, Stage::Prefill, slot.admitted, now, &slot.adapter);
+        }
+        slot.stream_start = now;
     } else {
         sh.metrics
             .record_inter_token(now.duration_since(slot.last_token_at).as_secs_f64());
@@ -1073,6 +1180,11 @@ fn emit_token(sh: &Shared, slot: &mut GenSlot, token: i32) -> SlotStatus {
         ttft: slot.ttft,
         latency,
     })));
+    if sh.tracer.enabled() && slot.id != 0 {
+        let t_end = Instant::now();
+        sh.tracer.span(slot.id, Stage::DecodeStream, slot.stream_start, t_end, &slot.adapter);
+        sh.tracer.span(slot.id, Stage::Request, slot.enqueued, t_end, &slot.adapter);
+    }
     SlotStatus::Finished
 }
 
@@ -1125,8 +1237,17 @@ fn run_batch(sh: &Shared, adapter: &str, items: Vec<Work>) {
 /// run `cls_logits` through the resolved weight view, and answer each
 /// request with its class-logit row + NaN-safe prediction.
 fn run_batch_cls(sh: &Shared, adapter: &str, items: Vec<QueuedCls>) {
+    let t_pop = Instant::now();
     let n = items.len();
     sh.metrics.record_cls_batch(n);
+    let tracing = sh.tracer.enabled();
+    for it in &items {
+        let qw = t_pop.saturating_duration_since(it.enqueued);
+        sh.metrics.record_stage(StageLat::QueueWait, qw.as_secs_f64());
+        if tracing && it.id != 0 {
+            sh.tracer.span(it.id, Stage::QueueWait, it.enqueued, t_pop, adapter);
+        }
+    }
     let Some(model) = sh.registry.resolve_batch(adapter, n as u64) else {
         // evicted between admission and execution
         for it in items {
@@ -1148,7 +1269,15 @@ fn run_batch_cls(sh: &Shared, adapter: &str, items: Vec<QueuedCls>) {
         })
         .collect();
     let cb = cls_batch(&examples, mcfg.seq);
-    match cls_batch_predict(sh, mcfg, &model, &cb.tokens, &cb.pad_mask, n) {
+    // same contiguous stage boundaries as the scoring path
+    let t_fwd = Instant::now();
+    sh.metrics
+        .record_stage(StageLat::BatchAssembly, t_fwd.saturating_duration_since(t_pop).as_secs_f64());
+    let predicted = cls_batch_predict(sh, mcfg, &model, &cb.tokens, &cb.pad_mask, n);
+    let t_done = Instant::now();
+    sh.metrics
+        .record_stage(StageLat::Forward, t_done.saturating_duration_since(t_fwd).as_secs_f64());
+    match predicted {
         Ok((logits, picks)) => {
             for (i, it) in items.into_iter().enumerate() {
                 let class_logits =
@@ -1162,6 +1291,13 @@ fn run_batch_cls(sh: &Shared, adapter: &str, items: Vec<QueuedCls>) {
                     batch_size: n,
                     latency,
                 }));
+                if tracing && it.id != 0 {
+                    let t_sent = Instant::now();
+                    sh.tracer.span(it.id, Stage::BatchAssembly, t_pop, t_fwd, adapter);
+                    sh.tracer.span(it.id, Stage::Forward, t_fwd, t_done, adapter);
+                    sh.tracer.span(it.id, Stage::Respond, t_done, t_sent, "");
+                    sh.tracer.span(it.id, Stage::Request, it.enqueued, t_sent, adapter);
+                }
             }
         }
         Err(e) => {
@@ -1175,8 +1311,17 @@ fn run_batch_cls(sh: &Shared, adapter: &str, items: Vec<QueuedCls>) {
 }
 
 fn run_batch_score(sh: &Shared, adapter: &str, items: Vec<Queued>) {
+    let t_pop = Instant::now();
     let n = items.len();
     sh.metrics.record_batch(n);
+    let tracing = sh.tracer.enabled();
+    for it in &items {
+        let qw = t_pop.saturating_duration_since(it.enqueued);
+        sh.metrics.record_stage(StageLat::QueueWait, qw.as_secs_f64());
+        if tracing && it.id != 0 {
+            sh.tracer.span(it.id, Stage::QueueWait, it.enqueued, t_pop, adapter);
+        }
+    }
     let Some(model) = sh.registry.resolve_batch(adapter, n as u64) else {
         // evicted between admission and execution
         for it in items {
@@ -1198,7 +1343,16 @@ fn run_batch_score(sh: &Shared, adapter: &str, items: Vec<Queued>) {
         })
         .collect();
     let eb = eval_batch(&examples, mcfg.seq);
+    // stage boundaries: pop → assembly done (resolve + padding/layout) →
+    // forward done → each response handed to its channel — contiguous, so
+    // per-request span durations sum to the end-to-end latency
+    let t_fwd = Instant::now();
+    sh.metrics
+        .record_stage(StageLat::BatchAssembly, t_fwd.saturating_duration_since(t_pop).as_secs_f64());
     let logits = batch_logits(sh, mcfg, &model, &eb.tokens, &eb.pad_mask, &eb.last_pos, n);
+    let t_done = Instant::now();
+    sh.metrics
+        .record_stage(StageLat::Forward, t_done.saturating_duration_since(t_fwd).as_secs_f64());
     match logits {
         Ok(logits) => {
             for (i, it) in items.into_iter().enumerate() {
@@ -1215,6 +1369,13 @@ fn run_batch_score(sh: &Shared, adapter: &str, items: Vec<Queued>) {
                     batch_size: n,
                     latency,
                 }));
+                if tracing && it.id != 0 {
+                    let t_sent = Instant::now();
+                    sh.tracer.span(it.id, Stage::BatchAssembly, t_pop, t_fwd, adapter);
+                    sh.tracer.span(it.id, Stage::Forward, t_fwd, t_done, adapter);
+                    sh.tracer.span(it.id, Stage::Respond, t_done, t_sent, "");
+                    sh.tracer.span(it.id, Stage::Request, it.enqueued, t_sent, adapter);
+                }
             }
         }
         Err(e) => {
@@ -1886,6 +2047,78 @@ mod tests {
         }
         // and the quota admits the adapter again
         assert!(srv.submit_generate(gen_req("task-a")).is_ok());
+        srv.shutdown();
+    }
+
+    /// Tentpole: a traced server's contiguous stage spans must account for
+    /// (essentially all of) every request's end-to-end latency — scoring
+    /// and streaming generation alike — and pool timing rides the switch.
+    #[test]
+    fn traced_server_covers_requests_end_to_end() {
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            workers: 2,
+            trace: true,
+            ..ServeCfg::default()
+        });
+        let reqs: Vec<Request> = (0..6).map(|i| req("task-a", i)).collect();
+        let ok = srv.serve_all(reqs).into_iter().filter(|r| r.is_ok()).count();
+        assert_eq!(ok, 6);
+        srv.submit_generate(gen_req("task-a")).unwrap().wait().unwrap();
+        let events = srv.tracer().events();
+        for stage in [Stage::QueueWait, Stage::Forward, Stage::Prefill, Stage::DecodeStep] {
+            assert!(events.iter().any(|e| e.stage == stage), "missing {:?} span", stage);
+        }
+        let cov = crate::obs::trace::request_coverage(&events);
+        assert_eq!(cov.len(), 7, "6 scored + 1 generated request traced");
+        for (id, frac) in cov {
+            assert!(frac >= 0.95, "request {id}: stage spans cover only {frac:.3} of e2e");
+        }
+        // the pool timed its jobs, and the report carries utilization
+        let m = srv.metrics();
+        assert!(m.pool_threads >= 1);
+        assert!(m.pool_jobs > 0);
+        assert!(m.pool_busy_frac.is_some(), "traced server must time its pool");
+        assert!(m.stage(StageLat::Forward).is_some_and(|s| s.n >= 1));
+        assert!(m.stage(StageLat::Step).is_some_and(|s| s.n >= 1));
+        srv.shutdown();
+    }
+
+    /// Off by default: no spans, no ids, no pool timing — stage latency
+    /// metrics still collected.
+    #[test]
+    fn untraced_server_records_no_spans() {
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        });
+        srv.submit(req("task-a", 0)).unwrap().wait().unwrap();
+        assert!(!srv.tracer().enabled());
+        assert!(srv.tracer().events().is_empty());
+        let m = srv.metrics();
+        assert!(m.pool_busy_frac.is_none(), "untraced pool stays untimed");
+        assert!(m.stage(StageLat::QueueWait).is_some_and(|s| s.n == 1));
+        srv.shutdown();
+    }
+
+    /// The metrics endpoint serves the Prometheus text and the JSON
+    /// snapshot from live server state.
+    #[test]
+    fn metrics_http_serves_prometheus_and_json() {
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        });
+        srv.submit(req("task-a", 0)).unwrap().wait().unwrap();
+        let http = srv.metrics_http("127.0.0.1:0").expect("bind loopback");
+        let addr = http.addr();
+        let prom = crate::obs::http::get(addr, "/metrics").unwrap();
+        assert!(prom.contains("neuroada_requests_served_total 1"));
+        assert!(prom.contains("neuroada_stage_seconds"));
+        let json = crate::obs::http::get(addr, "/metrics.json").unwrap();
+        let parsed = crate::util::json::Json::parse(&json).expect("snapshot is valid JSON");
+        assert_eq!(parsed.get("served").and_then(|v| v.as_usize()), Some(1));
+        assert!(parsed.at(&["pool", "threads"]).is_some());
+        http.stop();
         srv.shutdown();
     }
 }

@@ -30,6 +30,13 @@
 //! * **Panic containment.** A panicking task poisons the job, the join
 //!   still completes (no deadlocked `run`), and the *caller* re-panics.
 //!   Workers survive to serve the next job.
+//! * **Optional per-job timing.** [`KernelPool::set_timed`] turns on
+//!   per-task clocks feeding two utilization aggregates:
+//!   [`KernelPool::busy_frac`] (busy executor-time / available
+//!   executor-time) and [`KernelPool::imbalance`] (slowest task × task
+//!   count / total busy — 1.0 means a perfectly uniform partition). The
+//!   untimed hot path pays exactly one extra relaxed atomic load per
+//!   `run`; the serving stack enables timing alongside request tracing.
 //!
 //! Ownership: one pool per [`serve::Server`](crate::serve::Server) (sized by
 //! `ServeCfg::threads` / `NEUROADA_THREADS` / `--threads`, shared by the
@@ -65,6 +72,16 @@ struct JobCtx {
     cursor: AtomicUsize,
     remaining: AtomicUsize,
     poisoned: AtomicBool,
+    /// Snapshot of `Inner::timed` at publication: executors check a plain
+    /// bool, not the shared atomic.
+    timed: bool,
+    /// Σ per-task durations (ns). Folded *before* each task's `remaining`
+    /// decrement, so the joining caller (which observes the final
+    /// decrement with Acquire) reads complete counters — no fold can race
+    /// past the join.
+    busy_ns: AtomicU64,
+    /// Slowest single task (ns) — the imbalance numerator.
+    max_task_ns: AtomicU64,
 }
 
 struct Slot {
@@ -89,6 +106,18 @@ struct Inner {
     jobs: AtomicU64,
     dispatched: AtomicU64,
     tasks: AtomicU64,
+    /// Per-job timing gate — the ONLY cost the untimed path pays is one
+    /// relaxed load of this per `run`.
+    timed: AtomicBool,
+    timed_jobs: AtomicU64,
+    /// Σ busy executor nanoseconds over timed jobs.
+    t_busy_ns: AtomicU64,
+    /// Σ wall × executor-count nanoseconds over timed jobs (the busy
+    /// fraction's denominator: time the executors *could* have worked).
+    t_avail_ns: AtomicU64,
+    /// Σ (slowest task × task count) nanoseconds over timed jobs; divided
+    /// by `t_busy_ns` this is the busy-weighted task imbalance (≥ 1.0).
+    t_maxw_ns: AtomicU64,
 }
 
 /// Spin iterations before a waiter falls back to its condvar. Roughly a few
@@ -103,8 +132,14 @@ fn run_tasks(inner: &Inner, ctx: &JobCtx) {
             return;
         }
         let task = ctx.task;
+        let t0 = ctx.timed.then(std::time::Instant::now);
         if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(i))).is_err() {
             ctx.poisoned.store(true, Ordering::Release);
+        }
+        if let Some(t0) = t0 {
+            let d = t0.elapsed().as_nanos() as u64;
+            ctx.busy_ns.fetch_add(d, Ordering::Relaxed);
+            ctx.max_task_ns.fetch_max(d, Ordering::Relaxed);
         }
         inner.tasks.fetch_add(1, Ordering::Relaxed);
         if ctx.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
@@ -196,6 +231,11 @@ impl KernelPool {
             jobs: AtomicU64::new(0),
             dispatched: AtomicU64::new(0),
             tasks: AtomicU64::new(0),
+            timed: AtomicBool::new(false),
+            timed_jobs: AtomicU64::new(0),
+            t_busy_ns: AtomicU64::new(0),
+            t_avail_ns: AtomicU64::new(0),
+            t_maxw_ns: AtomicU64::new(0),
         });
         let handles = (0..workers)
             .map(|i| {
@@ -244,6 +284,52 @@ impl KernelPool {
         self.inner.tasks.load(Ordering::Relaxed)
     }
 
+    /// Enable/disable per-job timing (see the module docs). Off by
+    /// default; the serving engine switches it on with request tracing.
+    pub fn set_timed(&self, on: bool) {
+        self.inner.timed.store(on, Ordering::Relaxed);
+    }
+
+    pub fn timed(&self) -> bool {
+        self.inner.timed.load(Ordering::Relaxed)
+    }
+
+    /// Jobs that ran with timing enabled.
+    pub fn timed_jobs(&self) -> u64 {
+        self.inner.timed_jobs.load(Ordering::Relaxed)
+    }
+
+    /// Busy executor-time / available executor-time over timed jobs
+    /// (in (0, 1]; the gap is dispatch latency + cursor contention +
+    /// straggler waits). `None` until a timed job ran.
+    pub fn busy_frac(&self) -> Option<f64> {
+        let avail = self.inner.t_avail_ns.load(Ordering::Relaxed);
+        if avail == 0 {
+            return None;
+        }
+        Some(self.inner.t_busy_ns.load(Ordering::Relaxed) as f64 / avail as f64)
+    }
+
+    /// Busy-weighted task imbalance over timed jobs: slowest task ×
+    /// task count / total busy, per job. Exactly 1.0 means every task of
+    /// every job took the same time; 2.0 means the critical path is twice
+    /// the mean. `None` until a timed job did measurable work.
+    pub fn imbalance(&self) -> Option<f64> {
+        let busy = self.inner.t_busy_ns.load(Ordering::Relaxed);
+        if busy == 0 {
+            return None;
+        }
+        Some(self.inner.t_maxw_ns.load(Ordering::Relaxed) as f64 / busy as f64)
+    }
+
+    /// Fold one timed job into the aggregates.
+    fn fold_timing(&self, wall_ns: u64, busy_ns: u64, max_task_ns: u64, n_tasks: u64, execs: u64) {
+        self.inner.timed_jobs.fetch_add(1, Ordering::Relaxed);
+        self.inner.t_busy_ns.fetch_add(busy_ns, Ordering::Relaxed);
+        self.inner.t_avail_ns.fetch_add(wall_ns.max(1) * execs, Ordering::Relaxed);
+        self.inner.t_maxw_ns.fetch_add(max_task_ns * n_tasks, Ordering::Relaxed);
+    }
+
     /// Execute `task(0..n_tasks)` across the pool and block until every
     /// task has run (the join). Tasks are claimed dynamically, so any
     /// executor may run any index — callers must make tasks independent
@@ -253,19 +339,37 @@ impl KernelPool {
     /// Panics (after completing the join) if any task panicked.
     pub fn run(&self, n_tasks: usize, task: &TaskFn) {
         self.inner.jobs.fetch_add(1, Ordering::Relaxed);
+        let timed = self.inner.timed.load(Ordering::Relaxed);
         if self.inner.workers == 0 || n_tasks <= 1 {
-            for i in 0..n_tasks {
-                task(i);
+            if timed {
+                let t_wall = std::time::Instant::now();
+                let mut busy = 0u64;
+                let mut max_task = 0u64;
+                for i in 0..n_tasks {
+                    let t = std::time::Instant::now();
+                    task(i);
+                    let d = t.elapsed().as_nanos() as u64;
+                    busy += d;
+                    max_task = max_task.max(d);
+                }
+                let wall = t_wall.elapsed().as_nanos() as u64;
+                self.inner.tasks.fetch_add(n_tasks as u64, Ordering::Relaxed);
+                self.fold_timing(wall, busy, max_task, n_tasks as u64, 1);
+            } else {
+                for i in 0..n_tasks {
+                    task(i);
+                }
+                self.inner.tasks.fetch_add(n_tasks as u64, Ordering::Relaxed);
             }
-            self.inner.tasks.fetch_add(n_tasks as u64, Ordering::Relaxed);
             return;
         }
         // one job at a time; a poisoned turn (a previous caller's task
         // panicked) must not wedge the pool for everyone else
         let turn = self.inner.turn.lock().unwrap_or_else(|e| e.into_inner());
         self.inner.dispatched.fetch_add(1, Ordering::Relaxed);
+        let t_wall = timed.then(std::time::Instant::now);
         // Lifetime erasure: sound because this function does not return
-        // until `remaining == 0` and the slot's handle is cleared, so no
+        // until `remaining == 0` and the slot is cleared, so no
         // worker can touch `task` after the borrow ends.
         let task: &'static TaskFn = unsafe { &*(task as *const TaskFn) };
         let ctx = Arc::new(JobCtx {
@@ -274,6 +378,9 @@ impl KernelPool {
             cursor: AtomicUsize::new(0),
             remaining: AtomicUsize::new(n_tasks),
             poisoned: AtomicBool::new(false),
+            timed,
+            busy_ns: AtomicU64::new(0),
+            max_task_ns: AtomicU64::new(0),
         });
         {
             let mut g = self.inner.slot.lock().unwrap();
@@ -301,6 +408,17 @@ impl KernelPool {
         {
             let mut g = self.inner.slot.lock().unwrap();
             g.job = None;
+        }
+        if let Some(t0) = t_wall {
+            // the join (Acquire on the final `remaining` decrement)
+            // ordered every per-task fold before this read
+            self.fold_timing(
+                t0.elapsed().as_nanos() as u64,
+                ctx.busy_ns.load(Ordering::Acquire),
+                ctx.max_task_ns.load(Ordering::Relaxed),
+                n_tasks as u64,
+                self.inner.workers as u64 + 1,
+            );
         }
         drop(turn);
         if ctx.poisoned.load(Ordering::Acquire) {
@@ -465,5 +583,61 @@ mod tests {
         clone.run(2, &|_| {});
         assert_eq!(pool.jobs(), before + 1, "clones share counters (same pool)");
         assert_eq!(pool.workers(), clone.workers());
+    }
+
+    #[test]
+    fn untimed_pool_reports_no_utilization() {
+        let pool = KernelPool::new(2);
+        pool.run(8, &|_| {});
+        assert!(!pool.timed());
+        assert_eq!(pool.timed_jobs(), 0);
+        assert!(pool.busy_frac().is_none());
+        assert!(pool.imbalance().is_none());
+    }
+
+    #[test]
+    fn timed_jobs_record_busy_fraction_and_imbalance() {
+        // dispatched path
+        let pool = KernelPool::new(4);
+        pool.set_timed(true);
+        let (j0, t0) = (pool.jobs(), pool.tasks());
+        for _ in 0..3 {
+            pool.run(16, &|i| {
+                // skewed tasks: index 0 is the straggler
+                let spins = if i == 0 { 20_000 } else { 500 };
+                let mut acc = 0u64;
+                for k in 0..spins {
+                    acc = acc.wrapping_add(std::hint::black_box(k));
+                }
+                std::hint::black_box(acc);
+            });
+        }
+        assert_eq!(pool.timed_jobs(), 3);
+        // timing is additive: the existing counters are untouched by it
+        assert_eq!(pool.jobs(), j0 + 3);
+        assert_eq!(pool.tasks(), t0 + 48);
+        let busy = pool.busy_frac().expect("timed jobs ran");
+        assert!(busy > 0.0 && busy <= 1.0, "busy fraction in (0,1], got {busy}");
+        let imb = pool.imbalance().expect("timed jobs did work");
+        assert!(imb >= 1.0, "imbalance is >= 1 by construction, got {imb}");
+        // once disabled, the aggregates freeze
+        pool.set_timed(false);
+        let frozen = pool.timed_jobs();
+        pool.run(16, &|_| {});
+        assert_eq!(pool.timed_jobs(), frozen);
+    }
+
+    #[test]
+    fn inline_timed_jobs_fold_too() {
+        let pool = KernelPool::new(1); // width-1: always inline
+        pool.set_timed(true);
+        pool.run(4, &|i| {
+            std::hint::black_box(i);
+        });
+        assert_eq!(pool.timed_jobs(), 1);
+        assert_eq!(pool.dispatched(), 0, "inline jobs never dispatch");
+        let busy = pool.busy_frac().unwrap();
+        assert!(busy > 0.0 && busy <= 1.0);
+        assert!(pool.imbalance().unwrap() >= 1.0);
     }
 }

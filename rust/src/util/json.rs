@@ -24,6 +24,12 @@ impl Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Parse a JSON document (associated-fn form of the module-level
+    /// [`parse`]).
+    pub fn parse(src: &str) -> Result<Json, ParseError> {
+        parse(src)
+    }
+
     pub fn set(&mut self, key: &str, v: impl Into<Json>) -> &mut Self {
         if let Json::Obj(m) = self {
             m.insert(key.to_string(), v.into());

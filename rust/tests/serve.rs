@@ -11,7 +11,10 @@
 //! ISSUE-4 adds encoder classification serving: cls parity through the
 //! full scheduler (queue → batcher → worker) against the offline host
 //! encoder eval — merged and bypass, exact — plus mixed-adapter cls
-//! coalescing.
+//! coalescing. ISSUE-6 adds observability: a traced run must produce
+//! stage spans covering ≥95% of every request's end-to-end latency, a
+//! Chrome trace-event export, and Prometheus + JSON metrics that parse
+//! back.
 
 use neuroada::bench::serve_bench::synth_adapter;
 use neuroada::config::presets;
@@ -483,4 +486,86 @@ fn cls_mixed_adapter_coalescing_preserves_per_adapter_parity() {
     );
     assert_eq!(m.adapters["enc-a"].bypass_hits, (n / 2) as u64);
     assert_eq!(m.adapters["enc-b"].bypass_hits, (n / 2) as u64);
+}
+
+/// Tentpole (ISSUE-6): end-to-end observability through the full server.
+/// A traced run (scoring + one streamed generation) must (a) record stage
+/// spans covering ≥95% of every request's end-to-end latency, (b) serve
+/// Prometheus text and a JSON snapshot over HTTP that parse back with
+/// stage and kernel-pool fields, and (c) export a valid Chrome
+/// trace-event JSON.
+#[test]
+fn traced_serving_covers_latency_and_exports_parse() {
+    use neuroada::obs::trace::{request_coverage, Stage};
+    use neuroada::util::json::Json;
+
+    let reg = registry(2, RegistryCfg { merged_capacity: 2, promote_after: 1 });
+    let cfg = reg.model_cfg().clone();
+    let srv = Server::start(
+        reg,
+        ServeCfg {
+            max_batch: 4,
+            max_queue: 64,
+            max_delay: Duration::from_millis(2),
+            workers: 2,
+            trace: true,
+            ..ServeCfg::default()
+        },
+        Backend::Host,
+    )
+    .unwrap();
+    let http = srv.metrics_http("127.0.0.1:0").unwrap();
+
+    // scoring traffic plus one streamed generation, all traced
+    let reqs = task_requests(&cfg, &["adapter-0", "adapter-1"], 12);
+    let (ok, rejected) = srv.drive_clients(reqs, 3);
+    assert_eq!((ok, rejected), (12, 0));
+    srv.submit_generate(GenerateRequest {
+        adapter: "adapter-0".into(),
+        prompt: (0..6).map(|i| 4 + i).collect(),
+        max_new_tokens: 4,
+        stop: vec![],
+        sample: None,
+    })
+    .unwrap()
+    .wait()
+    .unwrap();
+
+    // live scrape while the server is still up
+    let prom = neuroada::obs::http::get(http.addr(), "/metrics").unwrap();
+    assert!(prom.contains("neuroada_requests_served_total 12"), "prometheus text:\n{prom}");
+    assert!(prom.contains("neuroada_stage_seconds{stage=\"queue_wait\""), "{prom}");
+    assert!(prom.contains("neuroada_pool_threads"), "{prom}");
+    let snap = neuroada::obs::http::get(http.addr(), "/metrics.json").unwrap();
+    let j = Json::parse(&snap).expect("metrics.json parses back");
+    assert_eq!(j.at(&["served"]).and_then(|v| v.as_usize()), Some(12));
+    assert!(j.at(&["stages", "forward", "p50"]).and_then(|v| v.as_f64()).is_some());
+    assert!(j.at(&["pool", "threads"]).and_then(|v| v.as_usize()).is_some());
+    http.stop();
+
+    // the coverage contract: spans account for ≥95% of each request's
+    // end-to-end (Request-span) latency — the stage taxonomy is contiguous,
+    // so anything below that means an instrumentation gap
+    let tracer = srv.tracer();
+    let events = tracer.events();
+    assert_eq!(tracer.dropped(), 0, "ring should not wrap at this load");
+    for st in [Stage::QueueWait, Stage::Forward, Stage::Prefill, Stage::DecodeStream] {
+        assert!(events.iter().any(|e| e.stage == st), "missing {st:?} spans");
+    }
+    let cov = request_coverage(&events);
+    assert_eq!(cov.len(), 13, "12 scored + 1 generation");
+    for (id, frac) in &cov {
+        assert!(*frac >= 0.95, "request {id}: stage coverage {frac}");
+    }
+
+    // Chrome trace export: complete-span ("X") events in valid JSON
+    let chrome = tracer.to_chrome_json();
+    let parsed = Json::parse(&chrome.dump()).expect("chrome trace parses back");
+    let evs = parsed.at(&["traceEvents"]).and_then(|v| v.as_arr()).expect("traceEvents array");
+    assert!(!evs.is_empty());
+    assert_eq!(evs[0].at(&["ph"]).and_then(|v| v.as_str()), Some("X"));
+
+    let m = srv.shutdown();
+    assert!(m.pool_busy_frac.is_some(), "traced run times the kernel pool");
+    assert!(m.stage(neuroada::serve::metrics::StageLat::Forward).is_some());
 }
