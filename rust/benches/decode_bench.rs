@@ -4,18 +4,37 @@
 //!   decode/cached      per-token greedy continuation via the KV cache
 //!   decode/reforward   the same continuation via full re-forward per token
 //!   decode/bypass      the cached step through the sparse bypass overlay
+//!   decode/quant-*     (with --backbone-dtype bf16|int8) the cached step
+//!                      over the quantized backbone, gated on logit bound +
+//!                      cached-vs-replay token parity
 //!
-//! Writes `BENCH_decode.json` next to the working directory for the CI
-//! bench-artifact step. Run: `cargo bench --bench decode_bench`
-//! (NEUROADA_BENCH=full for longer budgets; NEUROADA_DECODE_SIZE / _CTX /
-//! _GEN to scale).
+//! Writes `BENCH_decode.json` (`BENCH_decode_q.json` at bf16,
+//! `BENCH_decode_q8.json` at int8) next to the working directory for the
+//! CI bench-artifact step. Run: `cargo bench --bench decode_bench
+//! [-- --backbone-dtype int8]` (NEUROADA_BENCH=full for longer budgets;
+//! NEUROADA_DECODE_SIZE / _CTX / _GEN to scale).
 
 use neuroada::bench::decode_bench;
+use neuroada::tensor::quant::BackboneDtype;
 use neuroada::util::resolve_threads;
+
+/// `--backbone-dtype <v>` from this binary's argv (after `--` under
+/// `cargo bench`); f32 when absent.
+fn dtype_from_argv() -> anyhow::Result<BackboneDtype> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.iter().position(|a| a == "--backbone-dtype") {
+        Some(i) => {
+            let v = args.get(i + 1).ok_or_else(|| anyhow::anyhow!("--backbone-dtype needs a value"))?;
+            BackboneDtype::parse(v).map_err(|e| anyhow::anyhow!("--backbone-dtype: {e}"))
+        }
+        None => Ok(BackboneDtype::F32),
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let full = std::env::var("NEUROADA_BENCH").as_deref() == Ok("full");
     let size = std::env::var("NEUROADA_DECODE_SIZE").unwrap_or_else(|_| "nano".into());
+    let dtype = dtype_from_argv()?;
     let ctx: usize = std::env::var("NEUROADA_DECODE_CTX")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -26,16 +45,37 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(8);
     let threads = resolve_threads(0);
     println!(
-        "== decode_bench ({} mode, size={size}, ctx={ctx}, gen={gen}, threads={threads}) ==",
-        if full { "full" } else { "quick" }
+        "== decode_bench ({} mode, size={size}, ctx={ctx}, gen={gen}, threads={threads}, \
+         backbone-dtype={}) ==",
+        if full { "full" } else { "quick" },
+        dtype.name()
     );
-    let report = decode_bench::run(&size, ctx, gen, threads, !full)?;
+    let report = decode_bench::run_with_dtype(&size, ctx, gen, threads, !full, dtype)?;
     print!("{}", report.render());
-    std::fs::write("BENCH_decode.json", report.to_json().dump_pretty())?;
+    let out = match dtype {
+        BackboneDtype::F32 => "BENCH_decode.json",
+        BackboneDtype::Bf16 => "BENCH_decode_q.json",
+        BackboneDtype::I8 => "BENCH_decode_q8.json",
+    };
+    std::fs::write(out, report.to_json().dump_pretty())?;
     println!(
-        "(wrote BENCH_decode.json; cached = KV-cache incremental step, cached-mt = the same \
+        "(wrote {out}; cached = KV-cache incremental step, cached-mt = the same \
          step on a persistent kernel pool, reforward = full forward per generated token)"
     );
+    if dtype.is_quantized() {
+        // the logit-bound and cached-vs-replay gates ran inside
+        // run_with_dtype; assert the measured cell actually landed
+        anyhow::ensure!(
+            report.quant_step_ms > 0.0,
+            "{} quant step cell missing from the report",
+            dtype.name()
+        );
+        println!(
+            "quant cell OK: {} cached step {:.4} ms/tok within the logit bound",
+            dtype.name(),
+            report.quant_step_ms
+        );
+    }
     // pooled-step acceptance floor: on micro at threads >= 2 the pooled
     // batch-1 step must beat PR 3's serial step (bit-identical outputs are
     // asserted inside run() before any timing). Only enforceable when the

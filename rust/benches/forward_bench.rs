@@ -2,23 +2,45 @@
 //!
 //!   forward/legacy   pre-plan forward: per-row name lookups + weight copies
 //!   forward/plan     zero-copy planned forward, 1 thread and N threads
+//!   matmul/*         dtype×kernel matrix: scalar/blocked f32, blocked
+//!                    bf16/int8, pooled-vs-spawn
+//!   forward/quant-*  (with --backbone-dtype bf16|int8) e2e forward over
+//!                    the quantized backbone, gated on the logit bound
 //!
 //! measured × {nano, micro} × {merged, bypass} at batch 8. Writes
-//! `BENCH_forward.json` for the CI bench-artifact step. The "multi" thread
-//! count N comes from NEUROADA_THREADS (default 1, which collapses the
-//! thread axis); CI runs quick mode at =1 and =4.
+//! `BENCH_forward.json` (`BENCH_forward_q.json` at bf16,
+//! `BENCH_forward_q8.json` at int8) for the CI bench-artifact step. The
+//! "multi" thread count N comes from NEUROADA_THREADS (default 1, which
+//! collapses the thread axis); CI runs quick mode at =1 and =4.
 //!
 //! When N >= 2 this binary ASSERTS the ISSUE-3 floors on micro/merged at
-//! batch 8: plan×N >= 1.5× plan×1, and plan×N >= 2× legacy×1. Run:
-//! `cargo bench --bench forward_bench` (NEUROADA_BENCH=full for longer
-//! budgets; NEUROADA_FORWARD_BATCH / _SIZES to scale).
+//! batch 8: plan×N >= 1.5× plan×1, and plan×N >= 2× legacy×1 — plus the
+//! ISSUE-7 kernel floor: blocked f32 gemm >= 1× the scalar loop. Run:
+//! `cargo bench --bench forward_bench [-- --backbone-dtype bf16]`
+//! (NEUROADA_BENCH=full for longer budgets; NEUROADA_FORWARD_BATCH /
+//! _SIZES to scale).
 
 use neuroada::bench::forward_bench;
+use neuroada::tensor::quant::BackboneDtype;
 use neuroada::util::resolve_threads;
+
+/// `--backbone-dtype <v>` from this binary's argv (after `--` under
+/// `cargo bench`); f32 when absent.
+fn dtype_from_argv() -> anyhow::Result<BackboneDtype> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.iter().position(|a| a == "--backbone-dtype") {
+        Some(i) => {
+            let v = args.get(i + 1).ok_or_else(|| anyhow::anyhow!("--backbone-dtype needs a value"))?;
+            BackboneDtype::parse(v).map_err(|e| anyhow::anyhow!("--backbone-dtype: {e}"))
+        }
+        None => Ok(BackboneDtype::F32),
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let full = std::env::var("NEUROADA_BENCH").as_deref() == Ok("full");
     let threads = resolve_threads(0);
+    let dtype = dtype_from_argv()?;
     let batch: usize = std::env::var("NEUROADA_FORWARD_BATCH")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -26,16 +48,35 @@ fn main() -> anyhow::Result<()> {
     let sizes_raw = std::env::var("NEUROADA_FORWARD_SIZES").unwrap_or_else(|_| "nano,micro".into());
     let sizes: Vec<&str> = sizes_raw.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
     println!(
-        "== forward_bench ({} mode, sizes={sizes_raw}, batch={batch}, threads={threads}) ==",
-        if full { "full" } else { "quick" }
+        "== forward_bench ({} mode, sizes={sizes_raw}, batch={batch}, threads={threads}, \
+         backbone-dtype={}) ==",
+        if full { "full" } else { "quick" },
+        dtype.name()
     );
-    let report = forward_bench::run(&sizes, batch, threads, !full)?;
+    let report = forward_bench::run_with_dtype(&sizes, batch, threads, !full, dtype)?;
     print!("{}", report.render());
-    std::fs::write("BENCH_forward.json", report.to_json().dump_pretty())?;
+    // dtype-suffixed blobs so the CI matrix uploads all three side by side
+    let out = match dtype {
+        BackboneDtype::F32 => "BENCH_forward.json",
+        BackboneDtype::Bf16 => "BENCH_forward_q.json",
+        BackboneDtype::I8 => "BENCH_forward_q8.json",
+    };
+    std::fs::write(out, report.to_json().dump_pretty())?;
     println!(
-        "(wrote BENCH_forward.json; legacy = per-call name resolution + weight copies, \
+        "(wrote {out}; legacy = per-call name resolution + weight copies, \
          plan = zero-copy resolution, ×N = row-partitioned matmuls)"
     );
+    if dtype.is_quantized() {
+        // the quant e2e cells passed their logit gates inside run_with_dtype;
+        // here assert they all landed (one per size)
+        let n_quant = report.cases.iter().filter(|c| c.path == "quant").count();
+        anyhow::ensure!(
+            n_quant == sizes.len(),
+            "expected one quant cell per size ({}), got {n_quant}",
+            sizes.len()
+        );
+        println!("quant cells OK: {n_quant} × {} within the logit bound", dtype.name());
+    }
     if threads >= 2 && report.anchor == "micro" {
         anyhow::ensure!(
             report.micro_mt_vs_st >= 1.5,
@@ -52,13 +93,23 @@ fn main() -> anyhow::Result<()> {
         // workload spawn overhead penalized most)
         anyhow::ensure!(
             report.pool_vs_spawn >= 1.0,
-            "pool floor: pooled nt_into is {:.2}× the scoped-spawn baseline on micro (need >= 1×)",
+            "pool floor: pooled gemm_nt is {:.2}× the scoped-spawn baseline on micro (need >= 1×)",
             report.pool_vs_spawn
+        );
+        // ISSUE-7 floor: the cache-blocked f32 kernel must not lose to the
+        // straight scalar loop on the anchor matmul
+        anyhow::ensure!(
+            report.blocked_vs_scalar >= 1.0,
+            "kernel floor: blocked gemm is {:.2}× the scalar loop on micro (need >= 1×)",
+            report.blocked_vs_scalar
         );
         println!(
             "floors OK: plan×{threads} = {:.2}× plan×1, {:.2}× legacy×1, pooled matmul {:.2}× \
-             scoped-spawn (micro, batch {batch})",
-            report.micro_mt_vs_st, report.micro_plan_mt_vs_legacy_st, report.pool_vs_spawn
+             scoped-spawn, blocked {:.2}× scalar (micro, batch {batch})",
+            report.micro_mt_vs_st,
+            report.micro_plan_mt_vs_legacy_st,
+            report.pool_vs_spawn,
+            report.blocked_vs_scalar
         );
     }
     Ok(())

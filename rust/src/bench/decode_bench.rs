@@ -29,6 +29,7 @@ use crate::model::init::init_params;
 use crate::model::{
     greedy_decode, greedy_full_reforward, DecodeState, DeltaOverlay, PlannedModel, RefModel,
 };
+use crate::tensor::quant::{BackboneDtype, QuantStore};
 use crate::util::json::Json;
 use crate::util::nan_safe_argmax;
 use crate::util::rng::Rng;
@@ -68,6 +69,12 @@ pub struct DecodeBenchReport {
     pub bypass_step_ms: f64,
     /// Analytic KV bytes held by one decode slot at this config.
     pub kv_bytes_per_slot: u64,
+    /// Backbone dtype of the quant step cell ("f32" = none was run).
+    pub backbone_dtype: String,
+    /// KV-cached step over the quantized backbone (ms/token; NaN at f32).
+    /// Gated before timing on token parity with a from-scratch replay and
+    /// on the documented logit bound vs the f32 prefill.
+    pub quant_step_ms: f64,
 }
 
 impl DecodeBenchReport {
@@ -94,6 +101,12 @@ impl DecodeBenchReport {
                 self.threads, self.cached_step_mt_ms, self.cached_step_ms, self.step_mt_speedup,
             ));
         }
+        if self.quant_step_ms.is_finite() {
+            out.push_str(&format!(
+                "decode step {}: quantized-backbone cached step {:.4} ms/tok (f32 {:.4} ms/tok)\n",
+                self.backbone_dtype, self.quant_step_ms, self.cached_step_ms,
+            ));
+        }
         out
     }
 
@@ -115,6 +128,9 @@ impl DecodeBenchReport {
         j.set("cached_speedup", self.cached_speedup);
         j.set("bypass_step_ms", self.bypass_step_ms);
         j.set("kv_bytes_per_slot", self.kv_bytes_per_slot);
+        j.set("backbone_dtype", self.backbone_dtype.as_str());
+        // null (not NaN) at f32, via fmt_num's non-finite rule
+        j.set("quant_step_ms", self.quant_step_ms);
         j
     }
 }
@@ -132,6 +148,24 @@ pub fn run(
     gen: usize,
     threads: usize,
     quick: bool,
+) -> Result<DecodeBenchReport> {
+    run_with_dtype(size, ctx, gen, threads, quick, BackboneDtype::F32)
+}
+
+/// [`run`] plus, at a quantized `dtype`, a `decode/quant-*` cell: the
+/// KV-cached greedy step over the quantized backbone. Two gates run before
+/// timing: (1) the quant prefill logits stay within the documented
+/// logit-deviation bound (`BackboneDtype::logit_tol`) of the f32 prefill;
+/// (2) the cached continuation reproduces a from-scratch replay of the
+/// same tokens token-for-token — a KV-cache bug in the dequantizing row
+/// kernels would break exactly this.
+pub fn run_with_dtype(
+    size: &str,
+    ctx: usize,
+    gen: usize,
+    threads: usize,
+    quick: bool,
+    dtype: BackboneDtype,
 ) -> Result<DecodeBenchReport> {
     let mut cfg = presets::model(size).ok_or_else(|| anyhow!("unknown size {size:?}"))?;
     anyhow::ensure!(cfg.n_classes == 0, "decode bench needs a decoder size");
@@ -173,15 +207,16 @@ pub fn run(
     let prefill_ms_per_token = r_prefill.per_iter_ms() / ctx as f64;
     results.push(r_prefill);
 
-    let greedy_from = |model: &PlannedModel| {
-        let mut st = prefilled.clone();
-        let mut lg = prefill_logits.clone();
+    let greedy_from_state = |model: &PlannedModel, st0: &DecodeState, lg0: &[f32]| {
+        let mut st = st0.clone();
+        let mut lg = lg0.to_vec();
         for _ in 0..gen {
             let next = nan_safe_argmax(lg.iter().copied()).unwrap_or(0) as i32;
             lg = model.forward_step(next, &mut st).unwrap();
         }
         std::hint::black_box(lg.len());
     };
+    let greedy_from = |model: &PlannedModel| greedy_from_state(model, &prefilled, &prefill_logits);
     let r_cached = b.run(&format!("decode/cached {size} ctx={ctx} gen={gen}"), || {
         greedy_from(&plan);
     });
@@ -246,6 +281,65 @@ pub fn run(
     let bypass_step_ms = r_bypass.per_iter_ms() / gen as f64;
     results.push(r_bypass);
 
+    // quant step cell: the cached greedy step with the backbone resident at
+    // a reduced dtype, dequantizing in-register per row
+    let mut quant_step_ms = f64::NAN;
+    if dtype.is_quantized() {
+        let serial = crate::tensor::pool::KernelPool::serial();
+        let qstore = QuantStore::from_store(&backbone, dtype)?;
+        let qplan = PlannedModel::resolve_from(&cfg, &qstore, None, &serial)?;
+        let mut q_prefilled = DecodeState::new(&cfg);
+        let mut q_logits = Vec::new();
+        for &t in &prompt {
+            q_logits = qplan.forward_step(t, &mut q_prefilled)?;
+        }
+        // gate 1: prefill logits within the documented bound of f32
+        let scale = prefill_logits.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+        let tol = dtype.logit_tol() * scale;
+        let diff = prefill_logits
+            .iter()
+            .zip(&q_logits)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+        anyhow::ensure!(
+            diff <= tol,
+            "{size}: {} prefill logits deviate {diff} from f32 (bound {tol})",
+            dtype.name()
+        );
+        // gate 2: cached continuation == from-scratch replay, token-for-token
+        let q_toks = {
+            let mut st = q_prefilled.clone();
+            let mut lg = q_logits.clone();
+            let mut toks = Vec::new();
+            for _ in 0..gen {
+                let next = nan_safe_argmax(lg.iter().copied()).unwrap_or(0) as i32;
+                toks.push(next);
+                lg = qplan.forward_step(next, &mut st)?;
+            }
+            toks
+        };
+        for g in 0..gen {
+            let mut st = DecodeState::new(&cfg);
+            let mut lg = Vec::new();
+            for &t in prompt.iter().chain(&q_toks[..g]) {
+                lg = qplan.forward_step(t, &mut st)?;
+            }
+            let next = nan_safe_argmax(lg.iter().copied()).unwrap_or(0) as i32;
+            anyhow::ensure!(
+                next == q_toks[g],
+                "{size}: {} cached step diverged from replay at token {g}: \
+                 {next} vs {}",
+                dtype.name(),
+                q_toks[g]
+            );
+        }
+        let r_q = b.run(
+            &format!("decode/quant-{} {size} ctx={ctx} gen={gen}", dtype.name()),
+            || greedy_from_state(&qplan, &q_prefilled, &q_logits),
+        );
+        quant_step_ms = r_q.per_iter_ms() / gen as f64;
+        results.push(r_q);
+    }
+
     Ok(DecodeBenchReport {
         size: size.to_string(),
         ctx,
@@ -261,6 +355,8 @@ pub fn run(
         cached_speedup: reforward_step_ms / cached_step_ms,
         bypass_step_ms,
         kv_bytes_per_slot: DecodeState::kv_bytes_for(&cfg),
+        backbone_dtype: dtype.name().to_string(),
+        quant_step_ms,
     })
 }
 
@@ -284,6 +380,8 @@ mod tests {
         );
         assert!(r.bypass_step_ms > 0.0 && r.prefill_ms_per_token > 0.0);
         assert!(r.cached_step_mt_ms.is_nan() && r.step_mt_speedup.is_nan());
+        assert_eq!(r.backbone_dtype, "f32");
+        assert!(r.quant_step_ms.is_nan(), "no quant cell at f32");
         assert_eq!(r.kv_bytes_per_slot, 2 * (2 * 72 * 64) as u64 * 4);
         let j = r.to_json();
         assert_eq!(j.at(&["bench"]).and_then(Json::as_str), Some("decode_bench"));
@@ -305,5 +403,23 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.at(&["threads"]).and_then(Json::as_f64), Some(3.0));
         assert!(j.at(&["step_mt_speedup"]).and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    /// Quantized-backbone step cell: both quant dtypes pass the prefill
+    /// logit bound and the cached-vs-replay token parity gate, and land one
+    /// extra `decode/quant-*` cell (the hard gates run inside
+    /// `run_with_dtype`).
+    #[test]
+    fn quant_step_cell_gates_and_measures() {
+        for (dtype, name) in [(BackboneDtype::Bf16, "bf16"), (BackboneDtype::I8, "int8")] {
+            let r = run_with_dtype("nano", 16, 3, 1, true, dtype).unwrap();
+            assert_eq!(r.results.len(), 5, "{name}: 4 base cells + 1 quant cell");
+            assert_eq!(r.backbone_dtype, name);
+            assert!(r.quant_step_ms > 0.0);
+            assert!(r.render().contains(&format!("decode step {name}")));
+            let j = r.to_json();
+            assert_eq!(j.at(&["backbone_dtype"]).and_then(Json::as_str), Some(name));
+            assert!(j.at(&["quant_step_ms"]).and_then(Json::as_f64).unwrap() > 0.0);
+        }
     }
 }

@@ -24,7 +24,9 @@ use super::{Bench, BenchResult};
 use crate::config::presets;
 use crate::model::init::init_params;
 use crate::model::{DeltaOverlay, PlannedModel};
+use crate::tensor::ops::Kernel;
 use crate::tensor::pool::KernelPool;
+use crate::tensor::quant::{BackboneDtype, MatRef, QuantMat, QuantStore};
 use crate::tensor::{ops, Tensor};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -46,6 +48,20 @@ pub mod legacy {
         pub overlay: Option<&'a DeltaOverlay<'a>>,
     }
 
+    /// The serial `A·Bᵀ` the pre-redesign `ops::matmul_nt` provided, now
+    /// routed through the unified dispatch (bit-identical: same dot kernel
+    /// per element), kept local so the oracle's shape survives API churn.
+    fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+        use crate::tensor::pool::KernelPool;
+        use crate::tensor::quant::MatRef;
+        let (m, k) = (a.shape[0], a.shape[1]);
+        let n = b.shape[0];
+        assert_eq!(k, b.shape[1]);
+        let mut c = Tensor::zeros(&[m, n]);
+        ops::gemm_nt(&a.data, m, k, MatRef::F32(&b.data), n, &mut c.data, &KernelPool::serial());
+        c
+    }
+
     impl<'a> LegacyModel<'a> {
         fn p(&self, name: &str) -> Result<&[f32]> {
             self.params.get(&format!("params.{name}"))?.as_f32()
@@ -57,7 +73,7 @@ pub mod legacy {
         }
 
         fn proj(&self, h: &Tensor, name: &str, w: &Tensor) -> Tensor {
-            let mut y = ops::matmul_nt(h, w);
+            let mut y = matmul_nt(h, w);
             if let Some(view) = self.overlay.and_then(|o| o.get(name)) {
                 view.accum_matmul_nt(h, &mut y);
             }
@@ -173,7 +189,7 @@ pub mod legacy {
                 let pos = last_pos[bi] as usize;
                 sel.row_mut(bi).copy_from_slice(h.row(bi * cfg.seq + pos));
             }
-            Ok(ops::matmul_nt(&sel, &embed))
+            Ok(matmul_nt(&sel, &embed))
         }
 
         fn proj_step(&self, h: &[f32], name: &str, d_out: usize, d_in: usize) -> Result<Vec<f32>> {
@@ -309,11 +325,17 @@ pub struct ForwardBenchReport {
     /// anchor/merged: plan @ `threads` vs LEGACY @ 1 — the acceptance
     /// number (≥ 2× on micro at 4 threads, batch 8).
     pub micro_plan_mt_vs_legacy_st: f64,
-    /// Persistent-pool vs scoped-spawn `nt_into` on the anchor size's
+    /// Persistent-pool vs scoped-spawn GEMM on the anchor size's
     /// small-batch matmul (`[batch, d_model] × [d_ff, d_model]ᵀ`) —
     /// spawn_ms / pool_ms, so ≥ 1 means the pool won. NaN when the matrix
     /// ran single-threaded (no spawn baseline to compare).
     pub pool_vs_spawn: f64,
+    /// `Kernel::Blocked` vs `Kernel::Scalar` (f32) on the same matmul —
+    /// scalar_ms / blocked_ms, so ≥ 1 means blocking won (the ISSUE-7
+    /// floor, asserted by the bench binary on micro).
+    pub blocked_vs_scalar: f64,
+    /// Backbone dtype of the quant e2e cells ("f32" = none were run).
+    pub backbone_dtype: String,
 }
 
 impl ForwardBenchReport {
@@ -334,9 +356,13 @@ impl ForwardBenchReport {
             self.anchor, self.batch, self.threads, self.micro_mt_vs_st, self.threads,
             self.micro_plan_mt_vs_legacy_st,
         ));
+        out.push_str(&format!(
+            "kernel {} m={}: blocked gemm is {:.2}× the scalar loop\n",
+            self.anchor, self.batch, self.blocked_vs_scalar,
+        ));
         if self.pool_vs_spawn.is_finite() {
             out.push_str(&format!(
-                "kernel {} m={}: pooled nt_into is {:.2}× the scoped-spawn baseline\n",
+                "kernel {} m={}: pooled gemm is {:.2}× the scoped-spawn baseline\n",
                 self.anchor, self.batch, self.pool_vs_spawn,
             ));
         }
@@ -363,19 +389,37 @@ impl ForwardBenchReport {
         }
         j.set("cases", Json::Arr(cases));
         j.set("anchor", self.anchor.as_str());
+        j.set("backbone_dtype", self.backbone_dtype.as_str());
         j.set("micro_mt_vs_st", self.micro_mt_vs_st);
         j.set("micro_plan_mt_vs_legacy_st", self.micro_plan_mt_vs_legacy_st);
         // null (not NaN) when single-threaded, via fmt_num's non-finite rule
         j.set("pool_vs_spawn_matmul", self.pool_vs_spawn);
+        j.set("blocked_vs_scalar", self.blocked_vs_scalar);
         j
     }
 }
 
-/// Run the forward bench over `sizes` at `batch`, measuring legacy @ 1
-/// thread, plan @ 1 thread, and plan @ `threads` for merged AND bypass.
-/// Plan-vs-legacy parity (≤ 1e-6; bit-identical in practice) is asserted
-/// for every cell before timing.
+/// [`run_with_dtype`] at f32 (no quant e2e cells) — the historical entry.
 pub fn run(sizes: &[&str], batch: usize, threads: usize, quick: bool) -> Result<ForwardBenchReport> {
+    run_with_dtype(sizes, batch, threads, quick, BackboneDtype::F32)
+}
+
+/// Run the forward bench over `sizes` at `batch`, measuring legacy @ 1
+/// thread, plan @ 1 thread, and plan @ `threads` for merged AND bypass,
+/// plus the dtype×kernel matmul matrix on the anchor size. Plan-vs-legacy
+/// parity (≤ 1e-6; bit-identical in practice) is asserted for every cell
+/// before timing, and kernel cells assert Scalar ≡ Blocked ≡ pooled
+/// bitwise per dtype. With a quantized `dtype`, each size additionally
+/// gets a `path: "quant"` e2e cell over the quantized backbone, gated on
+/// the documented logit-deviation bound (`BackboneDtype::logit_tol`) vs
+/// the f32 plan.
+pub fn run_with_dtype(
+    sizes: &[&str],
+    batch: usize,
+    threads: usize,
+    quick: bool,
+    dtype: BackboneDtype,
+) -> Result<ForwardBenchReport> {
     anyhow::ensure!(batch >= 1, "forward bench needs batch >= 1");
     let threads = threads.max(1);
     let b = if quick { Bench::quick() } else { Bench::default() };
@@ -452,6 +496,47 @@ pub fn run(sizes: &[&str], batch: usize, threads: usize, quick: bool) -> Result<
                 });
             }
         }
+
+        // quant e2e cell: the merged forward over the quantized backbone,
+        // gated on the documented logit bound vs the f32 plan (and on
+        // pooled ≡ serial bitwise — the partition invariant holds for
+        // every dtype)
+        if dtype.is_quantized() {
+            let qstore = QuantStore::from_store(&backbone, dtype)?;
+            let want = PlannedModel::resolve(&cfg, &backbone, None, &serial)?
+                .lm_logits_at(&tokens, &pad, &last, batch)?;
+            let got = PlannedModel::resolve_from(&cfg, &qstore, None, &serial)?
+                .lm_logits_at(&tokens, &pad, &last, batch)?;
+            let scale = want.data.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+            let tol = dtype.logit_tol() * scale;
+            let diff = want.max_abs_diff(&got);
+            anyhow::ensure!(
+                diff <= tol,
+                "{size}: {} logits deviate {diff} from f32 (bound {tol})",
+                dtype.name()
+            );
+            let (qt, qpool) = if threads > 1 { (threads, &pool) } else { (1, &serial) };
+            let pooled = PlannedModel::resolve_from(&cfg, &qstore, None, qpool)?
+                .lm_logits_at(&tokens, &pad, &last, batch)?;
+            anyhow::ensure!(
+                got.data == pooled.data,
+                "{size}: pooled {} forward diverged from serial",
+                dtype.name()
+            );
+            let r = b.run(&format!("forward/quant-{} {size} b={batch} t={qt}", dtype.name()), &mut || {
+                let p = PlannedModel::resolve_from(&cfg, &qstore, None, qpool).unwrap();
+                std::hint::black_box(p.lm_logits_at(&tokens, &pad, &last, batch).unwrap().numel());
+            });
+            cases.push(ForwardCase {
+                size: size.to_string(),
+                path: "quant".to_string(),
+                resolve: dtype.name().to_string(),
+                threads: qt,
+                ms_per_forward: r.per_iter_ms(),
+                forwards_per_s: r.throughput(1.0),
+            });
+            results.push(r);
+        }
     }
 
     let pick = |cases: &[ForwardCase], size: &str, resolve: &str, t: usize| -> f64 {
@@ -465,45 +550,73 @@ pub fn run(sizes: &[&str], batch: usize, threads: usize, quick: bool) -> Result<
     // matrix was run without it (lib tests use nano only)
     let anchor = if sizes.contains(&"micro") { "micro" } else { sizes.last().copied().unwrap_or("nano") };
 
-    // kernel-level pooled-vs-spawn baseline: the small-batch matmul where
-    // the scoped-spawn kernel paid thread creation per call. Same shape as
-    // the anchor's w1 projection at the bench batch; parity is asserted
-    // bitwise across pooled, scoped, and serial before timing.
+    // kernel-level dtype×kernel matrix on the anchor's w1-shaped matmul
+    // (`[batch, d_model] × [d_ff, d_model]ᵀ`): Scalar vs Blocked per dtype
+    // (always measured), plus the pooled-vs-spawn pair when the matrix ran
+    // multi-threaded. Before timing, every kernel×pool combination is
+    // asserted bitwise against its dtype's serial Scalar oracle.
+    let acfg = presets::model(anchor).ok_or_else(|| anyhow!("unknown size {anchor:?}"))?;
+    let (m, k, n) = (batch, acfg.d_model, acfg.d_ff);
+    let mut rng = Rng::new(41);
+    let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let w = Tensor::randn(&[n, k], 1.0, &mut rng);
+    let (kt, kpool) = if threads > 1 { (threads, &pool) } else { (1, &serial) };
+    let mut want = vec![0.0f32; m * n];
+    Kernel::Scalar.gemm_nt(&a.data, m, k, MatRef::F32(&w.data), n, &mut want, &serial);
+    let mut got = vec![0.0f32; m * n];
+    for kern in [Kernel::Scalar, Kernel::Blocked] {
+        got.fill(0.0);
+        kern.gemm_nt(&a.data, m, k, MatRef::F32(&w.data), n, &mut got, kpool);
+        anyhow::ensure!(want == got, "{kern:?} gemm diverged from the serial scalar oracle");
+    }
+    got.fill(0.0);
+    ops::nt_into_scoped(&a.data, m, k, &w.data, n, &mut got, kt);
+    anyhow::ensure!(want == got, "scoped gemm diverged from serial");
+    let qb16 = QuantMat::quantize(BackboneDtype::Bf16, n, k, &w.data);
+    let qi8 = QuantMat::quantize(BackboneDtype::I8, n, k, &w.data);
+    for (nm, q) in [("bf16", &qb16), ("int8", &qi8)] {
+        let mut qwant = vec![0.0f32; m * n];
+        Kernel::Scalar.gemm_nt(&a.data, m, k, q.as_ref(), n, &mut qwant, &serial);
+        got.fill(0.0);
+        Kernel::Blocked.gemm_nt(&a.data, m, k, q.as_ref(), n, &mut got, kpool);
+        anyhow::ensure!(qwant == got, "{nm} blocked gemm diverged from its scalar oracle");
+    }
+    let mut out = vec![0.0f32; m * n];
+    let mut measure_kernel = |resolve: &str, f: &mut dyn FnMut(&mut [f32])| {
+        let r = b.run(&format!("matmul/{resolve} {anchor} m={m} t={kt}"), &mut || {
+            f(&mut out);
+            std::hint::black_box(out.len());
+        });
+        cases.push(ForwardCase {
+            size: anchor.to_string(),
+            path: "kernel".to_string(),
+            resolve: resolve.to_string(),
+            threads: kt,
+            ms_per_forward: r.per_iter_ms(),
+            forwards_per_s: r.throughput(1.0),
+        });
+        let ms = r.per_iter_ms();
+        results.push(r);
+        ms
+    };
+    let scalar_ms = measure_kernel("scalar", &mut |o| {
+        Kernel::Scalar.gemm_nt(&a.data, m, k, MatRef::F32(&w.data), n, o, kpool)
+    });
+    let blocked_ms = measure_kernel("blocked", &mut |o| {
+        Kernel::Blocked.gemm_nt(&a.data, m, k, MatRef::F32(&w.data), n, o, kpool)
+    });
+    measure_kernel("blocked-bf16", &mut |o| {
+        Kernel::Blocked.gemm_nt(&a.data, m, k, qb16.as_ref(), n, o, kpool)
+    });
+    measure_kernel("blocked-int8", &mut |o| {
+        Kernel::Blocked.gemm_nt(&a.data, m, k, qi8.as_ref(), n, o, kpool)
+    });
+    let blocked_vs_scalar = scalar_ms / blocked_ms;
     let mut pool_vs_spawn = f64::NAN;
     if threads > 1 {
-        let acfg = presets::model(anchor).ok_or_else(|| anyhow!("unknown size {anchor:?}"))?;
-        let (m, k, n) = (batch, acfg.d_model, acfg.d_ff);
-        let mut rng = Rng::new(41);
-        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
-        let w = Tensor::randn(&[n, k], 1.0, &mut rng);
-        let mut want = vec![0.0f32; m * n];
-        ops::nt_into(&a.data, m, k, &w.data, n, &mut want, &serial);
-        let mut got = vec![0.0f32; m * n];
-        ops::nt_into(&a.data, m, k, &w.data, n, &mut got, &pool);
-        anyhow::ensure!(want == got, "pooled nt_into diverged from serial");
-        got.fill(0.0);
-        ops::nt_into_scoped(&a.data, m, k, &w.data, n, &mut got, threads);
-        anyhow::ensure!(want == got, "scoped nt_into diverged from serial");
-        let mut out = vec![0.0f32; m * n];
-        let mut measure_kernel = |resolve: &str, f: &mut dyn FnMut(&mut [f32])| {
-            let r = b.run(&format!("matmul/{resolve} {anchor} m={m} t={threads}"), &mut || {
-                f(&mut out);
-                std::hint::black_box(out.len());
-            });
-            cases.push(ForwardCase {
-                size: anchor.to_string(),
-                path: "kernel".to_string(),
-                resolve: resolve.to_string(),
-                threads,
-                ms_per_forward: r.per_iter_ms(),
-                forwards_per_s: r.throughput(1.0),
-            });
-            let ms = r.per_iter_ms();
-            results.push(r);
-            ms
-        };
-        let pool_ms =
-            measure_kernel("pool", &mut |o| ops::nt_into(&a.data, m, k, &w.data, n, o, &pool));
+        let pool_ms = measure_kernel("pool", &mut |o| {
+            ops::gemm_nt(&a.data, m, k, MatRef::F32(&w.data), n, o, &pool)
+        });
         let spawn_ms = measure_kernel("spawn", &mut |o| {
             ops::nt_into_scoped(&a.data, m, k, &w.data, n, o, threads)
         });
@@ -522,6 +635,8 @@ pub fn run(sizes: &[&str], batch: usize, threads: usize, quick: bool) -> Result<
         micro_mt_vs_st: plan_st / plan_mt,
         micro_plan_mt_vs_legacy_st: legacy_st / plan_mt,
         pool_vs_spawn,
+        blocked_vs_scalar,
+        backbone_dtype: dtype.name().to_string(),
     })
 }
 
@@ -535,30 +650,56 @@ mod tests {
     #[test]
     fn quick_forward_bench_runs_with_parity() {
         let r = run(&["nano"], 4, 2, true).unwrap();
-        // 2 paths × (legacy + plan@1 + plan@2) + the 2 pooled-vs-spawn
-        // kernel cells
-        assert_eq!(r.cases.len(), 8);
+        // 2 paths × (legacy + plan@1 + plan@2) + the 4 dtype×kernel cells
+        // + the 2 pooled-vs-spawn kernel cells
+        assert_eq!(r.cases.len(), 12);
         assert!(r.cases.iter().all(|c| c.ms_per_forward > 0.0 && c.forwards_per_s > 0.0));
         assert!(r.case("nano", "bypass", "plan", 2).is_some());
-        assert!(r.case("nano", "kernel", "pool", 2).is_some());
-        assert!(r.case("nano", "kernel", "spawn", 2).is_some());
+        for kernel in ["scalar", "blocked", "blocked-bf16", "blocked-int8", "pool", "spawn"] {
+            assert!(r.case("nano", "kernel", kernel, 2).is_some(), "missing kernel cell {kernel}");
+        }
         assert!(r.micro_mt_vs_st > 0.0 && r.micro_plan_mt_vs_legacy_st > 0.0);
-        // the ratio is recorded (its >= 1 floor is asserted by the bench
-        // binary on micro, not here — module tests stay load-insensitive)
+        // the ratios are recorded (their >= 1 floors are asserted by the
+        // bench binary on micro, not here — module tests stay
+        // load-insensitive)
         assert!(r.pool_vs_spawn > 0.0);
+        assert!(r.blocked_vs_scalar > 0.0);
+        assert_eq!(r.backbone_dtype, "f32");
         let j = r.to_json();
         assert_eq!(j.at(&["bench"]).and_then(Json::as_str), Some("forward_bench"));
-        assert_eq!(j.at(&["cases"]).and_then(|c| c.as_arr()).map(|a| a.len()), Some(8));
+        assert_eq!(j.at(&["cases"]).and_then(|c| c.as_arr()).map(|a| a.len()), Some(12));
         assert!(j.at(&["micro_plan_mt_vs_legacy_st"]).and_then(Json::as_f64).is_some());
         assert!(j.at(&["pool_vs_spawn_matmul"]).and_then(Json::as_f64).is_some());
+        assert!(j.at(&["blocked_vs_scalar"]).and_then(Json::as_f64).is_some());
+        assert_eq!(j.at(&["backbone_dtype"]).and_then(Json::as_str), Some("f32"));
         assert_eq!(r.anchor, "nano", "anchor falls back to the measured size");
         assert!(r.render().contains("forward nano b=4"), "{}", r.render());
         assert!(r.render().contains("kernel nano"), "{}", r.render());
-        // single-threaded runs have no spawn baseline: the ratio is NaN,
-        // which fmt_num serializes as null (valid JSON)
+        // single-threaded runs keep the dtype×kernel cells (serial pool)
+        // but have no spawn baseline: that ratio is NaN, which fmt_num
+        // serializes as null (valid JSON)
         let r1 = run(&["nano"], 2, 1, true).unwrap();
         assert!(r1.pool_vs_spawn.is_nan());
-        assert_eq!(r1.cases.len(), 4, "no kernel cells without a multi-thread matrix");
+        assert!(r1.blocked_vs_scalar > 0.0);
+        assert_eq!(r1.cases.len(), 8, "no pool/spawn cells without a multi-thread matrix");
+        assert!(r1.case("nano", "kernel", "blocked-int8", 1).is_some());
+    }
+
+    /// Quantized-backbone e2e cells: the merged forward over bf16/int8
+    /// backbones passes the documented logit gate and lands one `quant`
+    /// cell per size (the hard gates run inside `run_with_dtype`).
+    #[test]
+    fn quant_forward_bench_gates_and_measures() {
+        for (dtype, name) in
+            [(BackboneDtype::Bf16, "bf16"), (BackboneDtype::I8, "int8")]
+        {
+            let r = run_with_dtype(&["nano"], 2, 1, true, dtype).unwrap();
+            assert_eq!(r.cases.len(), 9, "{name}: 8 base cells + 1 quant cell");
+            assert!(r.case("nano", "quant", name, 1).is_some());
+            assert_eq!(r.backbone_dtype, name);
+            let j = r.to_json();
+            assert_eq!(j.at(&["backbone_dtype"]).and_then(Json::as_str), Some(name));
+        }
     }
 
     /// The legacy step oracle agrees with itself across state reuse (sanity

@@ -702,6 +702,11 @@ mod tests {
         assert_eq!(sz.len(), 1);
         assert_eq!(sz[0].at(&["size"]).and_then(|v| v.as_str()), Some("nano"));
         assert!(sz[0].at(&["stages", "queue_wait", "p50"]).and_then(|v| v.as_f64()).is_some());
+        // the embedded metrics snapshots carry the backbone residency pair
+        assert_eq!(r.e2e_merged.backbone_dtype, "f32");
+        assert!(r.e2e_merged.backbone_bytes > 0);
+        assert_eq!(sz[0].at(&["backbone", "dtype"]).and_then(|v| v.as_str()), Some("f32"));
+        assert!(sz[0].at(&["backbone", "bytes"]).and_then(|v| v.as_usize()).unwrap() > 0);
         assert!(r.render().contains("e2e-size/nano"));
         assert!(r.render().contains("trace-overhead"));
     }

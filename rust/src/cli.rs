@@ -107,6 +107,7 @@ SUBCOMMANDS
                     [--wait-ms 10] [--capacity 2] [--promote 3] [--host]
                     [--threads N] [--generate] [--max-new 16] [--slots 8]
                     [--quota N] [--temp T] [--top-k K]
+                    [--backbone-dtype f32|bf16|int8]
                     [--cls] [--task glue-sst2]
                     [--metrics-addr HOST:PORT] [--metrics-out FILE]
                     [--trace-out FILE]
@@ -124,7 +125,11 @@ SUBCOMMANDS
                     server's ONE persistent kernel pool — batched matmuls,
                     attention, and the per-token decode step all partition
                     across it, bit-identical to serial — default
-                    NEUROADA_THREADS or serial. Encoder sizes, e.g.
+                    NEUROADA_THREADS or serial; --backbone-dtype bf16|int8
+                    holds the frozen backbone (and every merged copy)
+                    quantized, dequantizing in-register on the host path —
+                    adapters stay f32, resident bytes drop ~2x/4x.
+                    Encoder sizes, e.g.
                     --size enc-micro [--cls], serve a GLUE task's dev set
                     as classification requests on both weight views and
                     assert the served metric reproduces the offline

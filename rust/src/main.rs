@@ -409,6 +409,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // request tracing rides the --trace-out flag: no output file, no
         // per-request span overhead
         trace: args.opt("trace-out").is_some(),
+        backbone_dtype: neuroada::tensor::quant::BackboneDtype::parse(
+            &args.opt_or("backbone-dtype", "f32"),
+        )
+        .map_err(|e| anyhow!("--backbone-dtype: {e}"))?,
     };
     let trace_out = args.opt("trace-out").map(str::to_string);
     let metrics_out = args.opt("metrics-out").map(str::to_string);
@@ -422,6 +426,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ),
     );
     let srv = Server::start(registry, scfg, backend)?;
+    if srv.registry().backbone_dtype().is_quantized() {
+        olog::info(
+            "serve",
+            format_args!(
+                "backbone quantized to {}: {} resident (f32 would be {})",
+                srv.registry().backbone_dtype().name(),
+                fmt_bytes(srv.registry().backbone_bytes()),
+                fmt_bytes(backbone.total_bytes()),
+            ),
+        );
+    }
     let http = match args.opt("metrics-addr") {
         Some(addr) => {
             let h = srv.metrics_http(addr).map_err(|e| anyhow!("--metrics-addr {addr}: {e}"))?;
@@ -594,6 +609,18 @@ fn cmd_serve_cls(args: &Args, cfg: neuroada::config::ModelCfg) -> Result<()> {
     };
     use std::time::Duration;
 
+    if let Some(d) = args.opt("backbone-dtype") {
+        let dtype = neuroada::tensor::quant::BackboneDtype::parse(d)
+            .map_err(|e| anyhow!("--backbone-dtype: {e}"))?;
+        if dtype.is_quantized() {
+            bail!(
+                "--backbone-dtype {}: classification serving is a bit-exact parity \
+                 oracle against the offline f32 encoder eval and cannot run on a \
+                 quantized backbone; drop the flag (or pass f32)",
+                dtype.name()
+            );
+        }
+    }
     let size = cfg.name.clone();
     let opts = opts_from(args)?;
     let seed = opts.seed;

@@ -30,7 +30,7 @@ pub mod plan;
 pub use decode::{
     greedy_decode, greedy_full_reforward, sample_decode, sample_token, DecodeState, SampleCfg,
 };
-pub use plan::{LayerPlan, PlannedModel, ProjPlan};
+pub use plan::{LayerPlan, ParamSource, PlannedModel, ProjPlan};
 
 use crate::config::ModelCfg;
 use crate::peft::delta::ScatterView;

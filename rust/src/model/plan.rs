@@ -12,13 +12,21 @@
 //!
 //! On top of the zero-copy views, every hot loop runs through a persistent
 //! [`KernelPool`] (`NEUROADA_THREADS` / `ServeCfg::threads` / `--threads`;
-//! see `util::resolve_threads`): the batched matmuls via [`ops::nt_into`],
+//! see `util::resolve_threads`): the batched matmuls via [`ops::gemm_nt`],
 //! the attention score/mix loops partitioned across batch rows, and — now
 //! that dispatch no longer costs a thread spawn — the single-row decode
 //! step partitioned over `d_out` per projection (plus its attention across
 //! heads and the tied LM head over the vocab). Row partitioning keeps every
 //! result bit-identical to serial at any pool width: the partition divides
 //! output elements, never an accumulation.
+//!
+//! Weights are [`MatRef`] views, not bare `&[f32]`: a plan resolves from
+//! any [`ParamSource`] — the f32 [`ValueStore`], a quantized
+//! [`QuantStore`] (bf16 / int8 frozen backbone), or serving's `Backbone`
+//! wrapper — and the forward runs dequantize-in-register kernels through
+//! the same `gemm_nt` dispatch. Sparse NeuroAda deltas stay f32 on top
+//! (the QLoRA pattern: quantized frozen base + full-precision adapters),
+//! and activations, norms, and the KV cache stay f32 everywhere.
 //!
 //! Lifecycle: **resolve → (optionally re-pool) → forward many times.**
 //! A plan borrows the parameter store (and the adapter's delta stores), so
@@ -35,8 +43,41 @@ use crate::config::ModelCfg;
 use crate::peft::delta::ScatterView;
 use crate::runtime::ValueStore;
 use crate::tensor::pool::KernelPool;
+use crate::tensor::quant::{MatRef, QuantStore};
 use crate::tensor::{ops, Tensor};
 use anyhow::Result;
+
+/// Anything a forward plan can resolve parameters from. Names are full
+/// store keys (`params.l0.wq`, `params.embed`, ...). Weight matrices come
+/// back as dtype-erased [`MatRef`] views; vectors (norm scales) are always
+/// f32 — quantization applies to rank-2 weights only.
+pub trait ParamSource {
+    /// Borrowed weight-matrix view for `name`, in whatever dtype the
+    /// source stores it.
+    fn mat(&self, name: &str) -> Result<MatRef<'_>>;
+    /// Borrowed f32 vector for `name`.
+    fn vec_f32(&self, name: &str) -> Result<&[f32]>;
+}
+
+impl ParamSource for ValueStore {
+    fn mat(&self, name: &str) -> Result<MatRef<'_>> {
+        Ok(MatRef::F32(self.get(name)?.as_f32()?))
+    }
+
+    fn vec_f32(&self, name: &str) -> Result<&[f32]> {
+        self.get(name)?.as_f32()
+    }
+}
+
+impl ParamSource for QuantStore {
+    fn mat(&self, name: &str) -> Result<MatRef<'_>> {
+        QuantStore::mat(self, name)
+    }
+
+    fn vec_f32(&self, name: &str) -> Result<&[f32]> {
+        QuantStore::vec_f32(self, name)
+    }
+}
 
 /// Work floor (score+mix elements, `nh · ctx · head_dim`) below which the
 /// decode step's attention stays inline: under it, per-head tasks are so
@@ -44,12 +85,12 @@ use anyhow::Result;
 /// Purely a perf gate — the pooled and inline paths are bit-identical.
 const STEP_ATTN_POOL_FLOOR: usize = 4096;
 
-/// One adapted projection, fully resolved: the borrowed dense weight
-/// `[d_out, d_in]` plus the pre-bound sparse bypass view when the adapter
-/// touches this projection.
+/// One adapted projection, fully resolved: the borrowed weight view
+/// `[d_out, d_in]` (any backbone dtype) plus the pre-bound sparse bypass
+/// view when the adapter touches this projection.
 #[derive(Clone, Copy)]
 pub struct ProjPlan<'a> {
-    pub w: &'a [f32],
+    pub w: MatRef<'a>,
     pub d_out: usize,
     pub d_in: usize,
     pub delta: Option<ScatterView<'a>>,
@@ -62,7 +103,7 @@ impl ProjPlan<'_> {
         debug_assert_eq!(h.shape[1], self.d_in);
         let rows = h.shape[0];
         let mut y = Tensor::zeros(&[rows, self.d_out]);
-        ops::nt_into(&h.data, rows, self.d_in, self.w, self.d_out, &mut y.data, pool);
+        ops::gemm_nt(&h.data, rows, self.d_in, self.w, self.d_out, &mut y.data, pool);
         if let Some(view) = &self.delta {
             view.accum_matmul_nt(h, &mut y);
         }
@@ -70,13 +111,12 @@ impl ProjPlan<'_> {
     }
 
     /// One output neuron of the single-row step: the same sequential
-    /// zip-sum (then in-order delta adds) as the pre-plan decode step, so
-    /// the value is bit-identical whether computed serially or by any pool
-    /// executor.
+    /// zip-sum ([`MatRef::dot_row`], then in-order delta adds) as the
+    /// pre-plan decode step, so the value is bit-identical whether
+    /// computed serially or by any pool executor.
     #[inline]
     fn step_neuron(&self, i: usize, h: &[f32]) -> f32 {
-        let wr = &self.w[i * self.d_in..(i + 1) * self.d_in];
-        let mut y = h.iter().zip(wr).map(|(a, b)| a * b).sum::<f32>();
+        let mut y = self.w.dot_row(i, h);
         if let Some(view) = &self.delta {
             for (col, theta) in view.row(i) {
                 y += theta * h[col];
@@ -136,10 +176,10 @@ pub struct PlannedModel<'a> {
     /// The kernel pool every forward runs through (a cheap `Arc` handle;
     /// `KernelPool::serial()` = the bit-identical serial baseline).
     pub pool: KernelPool,
-    pub embed: &'a [f32],
+    pub embed: MatRef<'a>,
     pub ln_f: &'a [f32],
     /// Encoder classifier head `[n_classes, d_model]`; decoders have none.
-    pub head: Option<&'a [f32]>,
+    pub head: Option<MatRef<'a>>,
     pub layers: Vec<LayerPlan<'a>>,
 }
 
@@ -149,26 +189,44 @@ impl<'a> PlannedModel<'a> {
         PlannedModel::resolve(cfg, params, None, &KernelPool::serial())
     }
 
-    /// Resolve every parameter name once. `overlay` pre-binds the sparse
-    /// bypass view into each adapted projection's slot; the plan keeps only
-    /// the (Copy) scatter views, so the overlay itself may be dropped after
-    /// resolution. Shapes are validated here — the forward never re-checks.
-    /// The plan keeps a clone of `pool` (no workers are spawned here).
+    /// [`resolve_from`](PlannedModel::resolve_from) over the plain f32
+    /// store (the historical entry point — every f32 call site keeps its
+    /// signature).
     pub fn resolve(
         cfg: &'a ModelCfg,
         params: &'a ValueStore,
         overlay: Option<&DeltaOverlay<'a>>,
         pool: &KernelPool,
     ) -> Result<PlannedModel<'a>> {
+        PlannedModel::resolve_from(cfg, params, overlay, pool)
+    }
+
+    /// Resolve every parameter name once from any [`ParamSource`].
+    /// `overlay` pre-binds the sparse bypass view into each adapted
+    /// projection's slot; the plan keeps only the (Copy) scatter views, so
+    /// the overlay itself may be dropped after resolution. Shapes are
+    /// validated here — the forward never re-checks. The plan keeps a
+    /// clone of `pool` (no workers are spawned here).
+    pub fn resolve_from<S: ParamSource>(
+        cfg: &'a ModelCfg,
+        params: &'a S,
+        overlay: Option<&DeltaOverlay<'a>>,
+        pool: &KernelPool,
+    ) -> Result<PlannedModel<'a>> {
         let d = cfg.d_model;
-        let p = |name: &str, want: usize| -> Result<&'a [f32]> {
-            let v = params.get(&format!("params.{name}"))?.as_f32()?;
+        let pv = |name: &str, want: usize| -> Result<&'a [f32]> {
+            let v = params.vec_f32(&format!("params.{name}"))?;
+            anyhow::ensure!(v.len() == want, "params.{name}: {} elems, want {want}", v.len());
+            Ok(v)
+        };
+        let pm = |name: &str, want: usize| -> Result<MatRef<'a>> {
+            let v = params.mat(&format!("params.{name}"))?;
             anyhow::ensure!(v.len() == want, "params.{name}: {} elems, want {want}", v.len());
             Ok(v)
         };
         let proj = |name: String, d_out: usize, d_in: usize| -> Result<ProjPlan<'a>> {
             Ok(ProjPlan {
-                w: p(&name, d_out * d_in)?,
+                w: pm(&name, d_out * d_in)?,
                 d_out,
                 d_in,
                 delta: overlay.and_then(|o| o.get(&name)).copied(),
@@ -177,8 +235,8 @@ impl<'a> PlannedModel<'a> {
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for l in 0..cfg.n_layers {
             layers.push(LayerPlan {
-                ln1: p(&format!("l{l}.ln1"), d)?,
-                ln2: p(&format!("l{l}.ln2"), d)?,
+                ln1: pv(&format!("l{l}.ln1"), d)?,
+                ln2: pv(&format!("l{l}.ln2"), d)?,
                 wq: proj(format!("l{l}.wq"), d, d)?,
                 wk: proj(format!("l{l}.wk"), d, d)?,
                 wv: proj(format!("l{l}.wv"), d, d)?,
@@ -190,9 +248,9 @@ impl<'a> PlannedModel<'a> {
         Ok(PlannedModel {
             cfg,
             pool: pool.clone(),
-            embed: p("embed", cfg.vocab * d)?,
-            ln_f: p("ln_f", d)?,
-            head: if cfg.n_classes > 0 { Some(p("head", cfg.n_classes * d)?) } else { None },
+            embed: pm("embed", cfg.vocab * d)?,
+            ln_f: pv("ln_f", d)?,
+            head: if cfg.n_classes > 0 { Some(pm("head", cfg.n_classes * d)?) } else { None },
             layers,
         })
     }
@@ -224,15 +282,16 @@ impl<'a> PlannedModel<'a> {
         assert_eq!(tokens.len(), b * t);
         let pos = ops::positional(t, d);
 
-        // x [b·t, d]
+        // x [b·t, d] — embed rows dequantize (f32: bitwise copy) into x,
+        // then the position row adds on top
         let mut x = Tensor::zeros(&[b * t, d]);
         for i in 0..b * t {
             let tok = tokens[i] as usize;
-            let row = &self.embed[tok * d..(tok + 1) * d];
             let pr = pos.row(i % t);
             let xr = x.row_mut(i);
+            self.embed.read_row(tok, xr);
             for j in 0..d {
-                xr[j] = row[j] + pr[j];
+                xr[j] += pr[j];
             }
         }
 
@@ -338,7 +397,7 @@ impl<'a> PlannedModel<'a> {
             sel.row_mut(bi).copy_from_slice(h.row(bi * cfg.seq + pos));
         }
         let mut out = Tensor::zeros(&[b, cfg.vocab]);
-        ops::nt_into(&sel.data, b, cfg.d_model, self.embed, cfg.vocab, &mut out.data, &self.pool);
+        ops::gemm_nt(&sel.data, b, cfg.d_model, self.embed, cfg.vocab, &mut out.data, &self.pool);
         Ok(out)
     }
 
@@ -368,7 +427,7 @@ impl<'a> PlannedModel<'a> {
             }
         }
         let mut out = Tensor::zeros(&[b, cfg.n_classes]);
-        ops::nt_into(&pooled.data, b, cfg.d_model, head, cfg.n_classes, &mut out.data, &self.pool);
+        ops::gemm_nt(&pooled.data, b, cfg.d_model, head, cfg.n_classes, &mut out.data, &self.pool);
         Ok(out)
     }
 
@@ -434,7 +493,8 @@ impl<'a> PlannedModel<'a> {
             );
         }
         let p = state.len;
-        let erow = &self.embed[token as usize * d..(token as usize + 1) * d];
+        let mut erow = vec![0.0f32; d];
+        self.embed.read_row(token as usize, &mut erow);
 
         // x = embed[token] + pos[p] — the position row is computed on the
         // fly (O(d)) so a slot's memory is exactly its K/V cache
@@ -528,9 +588,7 @@ impl<'a> PlannedModel<'a> {
         let rows = cfg.vocab.div_ceil(tn);
         self.pool.run_chunks(&mut logits, rows, |ci, chunk| {
             for (r, lg) in chunk.iter_mut().enumerate() {
-                let t = ci * rows + r;
-                let er = &self.embed[t * d..(t + 1) * d];
-                *lg = out.iter().zip(er).map(|(a, b)| a * b).sum::<f32>();
+                *lg = self.embed.dot_row(ci * rows + r, &out);
             }
         });
         Ok(logits)

@@ -199,7 +199,7 @@ impl ScatterView<'_> {
 
     /// out[r, i] += Σ_j θ[i, j] · x[r, idx[i, j]] — the sparse half of
     /// `x (W + Δ)ᵀ`, accumulated into a dense `x Wᵀ` result. Matches
-    /// `ops::matmul_nt` operand conventions (x [n, d_in] → out [n, d_out]).
+    /// `ops::gemm_nt` operand conventions (x [n, d_in] → out [n, d_out]).
     pub fn accum_matmul_nt(&self, x: &Tensor, out: &mut Tensor) {
         let (d_out, k) = (self.sel.d_out, self.sel.k);
         assert_eq!(x.rank(), 2);
@@ -325,11 +325,23 @@ mod tests {
 
     #[test]
     fn scatter_view_matches_dense_matmul() {
+        use crate::tensor::pool::KernelPool;
+        use crate::tensor::quant::MatRef;
         let mut rng = Rng::new(8);
         let (_, d) = setup(9, 7, 3, 8);
         let x = Tensor::randn(&[5, 7], 1.0, &mut rng);
         // dense: x · Δᵀ
-        let expect = ops::matmul_nt(&x, &d.to_dense());
+        let dense = d.to_dense();
+        let mut expect = Tensor::zeros(&[5, 9]);
+        ops::gemm_nt(
+            &x.data,
+            5,
+            7,
+            MatRef::F32(&dense.data),
+            9,
+            &mut expect.data,
+            &KernelPool::serial(),
+        );
         let mut got = Tensor::zeros(&[5, 9]);
         d.scatter_view().accum_matmul_nt(&x, &mut got);
         assert!(got.max_abs_diff(&expect) < 1e-5, "{}", got.max_abs_diff(&expect));

@@ -124,6 +124,29 @@ pub fn bitfit_memory(projs: &[Projection], backbone_params: u64, dt: DtypeModel)
     }
 }
 
+/// Resident bytes of a *serving* backbone held at `dtype`
+/// (`--backbone-dtype`): the analytic side of the serving memory formula,
+/// cross-checked against `tensor::quant::QuantStore::total_bytes` on real
+/// stores. Matrices (rank-2 parameters) quantize; vectors (layer norms
+/// etc.) stay exact f32; int8 adds one f32 scale per matrix row.
+///
+/// * f32:  `4·(mat_params + vec_params)`
+/// * bf16: `2·mat_params + 4·vec_params`
+/// * int8: `1·mat_params + 4·mat_rows + 4·vec_params`
+pub fn backbone_resident_bytes(
+    mat_params: u64,
+    mat_rows: u64,
+    vec_params: u64,
+    dtype: crate::tensor::quant::BackboneDtype,
+) -> u64 {
+    use crate::tensor::quant::BackboneDtype as D;
+    let scales = match dtype {
+        D::I8 => 4 * mat_rows,
+        D::F32 | D::Bf16 => 0,
+    };
+    dtype.mat_elem_bytes() * mat_params + scales + 4 * vec_params
+}
+
 /// Table 1 row: per-projection storage of the sparsity pattern itself —
 /// dense 1-bit mask vs NeuroAda's (BF16 value + u16 index) per neuron.
 #[derive(Debug, Clone)]
@@ -220,6 +243,45 @@ mod tests {
         let fu = full_ft_memory(&projs, 0, DtypeModel::BF16);
         assert!(na.adaptation_overhead() < lo.adaptation_overhead());
         assert!(lo.adaptation_overhead() < fu.adaptation_overhead());
+    }
+
+    /// The analytic per-dtype serving formula must agree byte-for-byte with
+    /// what `QuantStore` actually holds resident on a real (nano) backbone,
+    /// and int8 must clear the acceptance ratio: ≤ 0.5× the f32 bytes.
+    #[test]
+    fn backbone_resident_bytes_matches_quant_store_on_nano() {
+        use crate::config::presets;
+        use crate::runtime::Value;
+        use crate::tensor::quant::{BackboneDtype, QuantStore};
+        use crate::util::rng::Rng;
+
+        let cfg = presets::model("nano").unwrap();
+        let store = crate::model::init::init_params(&cfg, &mut Rng::new(7));
+        // classify exactly as QuantStore::from_store does: rank-2 f32 = mat
+        let (mut mat_params, mut mat_rows, mut vec_params) = (0u64, 0u64, 0u64);
+        for name in store.names() {
+            match store.get(name).unwrap() {
+                Value::F32 { shape, data } if shape.len() == 2 => {
+                    mat_params += data.len() as u64;
+                    mat_rows += shape[0] as u64;
+                }
+                v => vec_params += v.numel() as u64,
+            }
+        }
+
+        let f32_bytes = backbone_resident_bytes(mat_params, mat_rows, vec_params, BackboneDtype::F32);
+        assert_eq!(f32_bytes, store.total_bytes());
+        for dtype in [BackboneDtype::Bf16, BackboneDtype::I8] {
+            let q = QuantStore::from_store(&store, dtype).unwrap();
+            assert_eq!(
+                backbone_resident_bytes(mat_params, mat_rows, vec_params, dtype),
+                q.total_bytes(),
+                "{}",
+                dtype.name()
+            );
+        }
+        let i8_bytes = backbone_resident_bytes(mat_params, mat_rows, vec_params, BackboneDtype::I8);
+        assert!(i8_bytes * 2 <= f32_bytes, "int8 {i8_bytes} B vs f32 {f32_bytes} B");
     }
 
     #[test]

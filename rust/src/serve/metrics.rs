@@ -399,6 +399,8 @@ impl ServeMetrics {
             pool_jobs: 0,
             pool_busy_frac: None,
             pool_imbalance: None,
+            backbone_dtype: String::new(),
+            backbone_bytes: 0,
         }
     }
 }
@@ -473,6 +475,13 @@ pub struct MetricsReport {
     /// Slowest participant / mean participant busy time per timed job,
     /// busy-weighted (1.0 = perfectly balanced task partition).
     pub pool_imbalance: Option<f64>,
+    // --- backbone residency (filled by `Server`; empty/zero from a bare
+    // `ServeMetrics::snapshot`) --------------------------------------------
+    /// Storage dtype of the frozen backbone (`"f32"` / `"bf16"` / `"int8"`).
+    pub backbone_dtype: String,
+    /// Resident bytes of the frozen backbone at that dtype (bf16 ≈ half,
+    /// int8 ≈ a quarter of the f32 footprint — see `peft::memory`).
+    pub backbone_bytes: u64,
 }
 
 /// Render `p * 1e3` as `"<x>.xx ms"`, or `-` before any sample exists —
@@ -537,6 +546,13 @@ impl MetricsReport {
                 self.pool_imbalance
                     .map(|f| format!("{f:.2}×"))
                     .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        if !self.backbone_dtype.is_empty() {
+            t.row(vec!["backbone dtype".into(), self.backbone_dtype.clone()]);
+            t.row(vec![
+                "backbone bytes".into(),
+                format!("{:.2} MiB", self.backbone_bytes as f64 / (1024.0 * 1024.0)),
             ]);
         }
         if self.cls_served > 0 || self.cls_batches > 0 {
@@ -672,6 +688,14 @@ impl MetricsReport {
         if let Some(f) = self.pool_imbalance {
             let _ = writeln!(o, "neuroada_pool_imbalance {f}");
         }
+        if !self.backbone_dtype.is_empty() {
+            let _ = writeln!(o, "# TYPE neuroada_backbone_bytes gauge");
+            let _ = writeln!(
+                o,
+                "neuroada_backbone_bytes{{dtype=\"{}\"}} {}",
+                self.backbone_dtype, self.backbone_bytes
+            );
+        }
         let _ = writeln!(o, "# TYPE neuroada_adapter_served_total counter");
         for (name, c) in &self.adapters {
             let _ = writeln!(o, "neuroada_adapter_served_total{{adapter=\"{name}\"}} {}", c.served);
@@ -745,6 +769,10 @@ impl MetricsReport {
         pool.set("busy_frac", self.pool_busy_frac.map(Json::from).unwrap_or(Json::Null));
         pool.set("imbalance", self.pool_imbalance.map(Json::from).unwrap_or(Json::Null));
         o.set("pool", pool);
+        let mut backbone = Json::obj();
+        backbone.set("dtype", self.backbone_dtype.as_str());
+        backbone.set("bytes", self.backbone_bytes);
+        o.set("backbone", backbone);
         let mut adapters = Json::obj();
         for (name, c) in &self.adapters {
             let mut a = Json::obj();
@@ -976,6 +1004,28 @@ mod tests {
         );
         // stages with no samples are explicit nulls, not missing keys
         assert!(matches!(parsed.at(&["stages", "prefill"]), Some(&Json::Null)));
+    }
+
+    #[test]
+    fn backbone_fields_render_and_export() {
+        let m = ServeMetrics::new();
+        m.record_served("a", ServePath::Merged, 0.010);
+        let mut r = m.snapshot();
+        // a bare snapshot leaves the server-filled backbone fields unset
+        assert!(r.backbone_dtype.is_empty());
+        assert!(!r.render().contains("backbone dtype"));
+        assert!(!r.prometheus().contains("neuroada_backbone_bytes"));
+        r.backbone_dtype = "int8".to_string();
+        r.backbone_bytes = 123_456;
+        let rendered = r.render();
+        assert!(rendered.contains("backbone dtype"));
+        assert!(rendered.contains("int8"));
+        assert!(r
+            .prometheus()
+            .contains("neuroada_backbone_bytes{dtype=\"int8\"} 123456"));
+        let parsed = Json::parse(&r.to_json().dump()).unwrap();
+        assert_eq!(parsed.at(&["backbone", "dtype"]).and_then(|v| v.as_str()), Some("int8"));
+        assert_eq!(parsed.at(&["backbone", "bytes"]).and_then(|v| v.as_usize()), Some(123_456));
     }
 
     #[test]

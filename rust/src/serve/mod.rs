@@ -9,7 +9,11 @@
 //!   name; an LRU cache of *merged* backbones for hot adapters and a
 //!   zero-copy **unmerged bypass** (`x Wᵀ + x Δᵀ` per projection, via
 //!   `DeltaStore::scatter_view`) for cold ones. Bypass and merged paths are
-//!   parity-tested to float tolerance.
+//!   parity-tested to float tolerance. The backbone (and every merged
+//!   copy) can be held quantized — [`registry::Backbone`] wraps the f32
+//!   store or a bf16/int8 `tensor::quant::QuantStore`, selected by
+//!   [`ServeCfg::backbone_dtype`] (`--backbone-dtype`); forwards
+//!   dequantize in-register while the sparse deltas stay f32.
 //! * [`batcher`]  — [`MicroBatcher`]: per-adapter request coalescing with
 //!   full-batch dispatch and deadline flush (continuous micro-batching).
 //! * [`scheduler`] — [`Server`]: bounded admission queue with typed
@@ -59,7 +63,9 @@ pub use batcher::MicroBatcher;
 pub use crate::model::SampleCfg;
 pub use generate::{FinishReason, GenEvent, GenResponse, GenTicket, GenerateRequest};
 pub use metrics::{AdapterCounters, MetricsReport, ServeMetrics};
-pub use registry::{AdapterInfo, AdapterRegistry, ModelKind, ModelRef, RegistryCfg, ServePath};
+pub use registry::{
+    AdapterInfo, AdapterRegistry, Backbone, ModelKind, ModelRef, RegistryCfg, ServePath,
+};
 pub use scheduler::{
     Backend, ClsRequest, ClsResponse, ClsTicket, Reject, Request, Response, ServeCfg, Server,
     Ticket,

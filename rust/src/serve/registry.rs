@@ -15,12 +15,18 @@
 //! `promote_after` times; promotion evicts the least-recently-used merged
 //! copy when the cache is full. The deltas themselves stay registered either
 //! way, so demotion only costs the next request the bypass overhead.
+//!
+//! The backbone (and every merged copy) can be held quantized — see
+//! [`Backbone`] and [`AdapterRegistry::set_backbone_dtype`]: bf16 halves
+//! and int8 quarters the resident weight bytes, while the sparse deltas
+//! stay f32 and apply at full precision on the bypass path.
 
 use crate::config::ModelCfg;
-use crate::model::{DeltaOverlay, PlannedModel};
+use crate::model::{DeltaOverlay, ParamSource, PlannedModel};
 use crate::obs::trace::{Stage, Tracer};
 use crate::peft::DeltaStore;
 use crate::tensor::pool::KernelPool;
+use crate::tensor::quant::{BackboneDtype, MatRef, QuantStore};
 use crate::runtime::ValueStore;
 use crate::train::checkpoint;
 use anyhow::{anyhow, bail, Result};
@@ -67,12 +73,83 @@ impl ServePath {
     }
 }
 
+/// The frozen backbone in its resident precision: the plain f32
+/// [`ValueStore`], or a [`QuantStore`] holding bf16 / int8 weight matrices
+/// (the QLoRA pattern — quantized frozen base, f32 sparse adapters on
+/// top). Merged adapter copies are re-encoded at the same dtype, so a
+/// quantized registry never keeps an f32 master resident.
+pub enum Backbone {
+    F32(ValueStore),
+    Quant(QuantStore),
+}
+
+impl Backbone {
+    /// Wrap `store` at the requested precision, quantizing every rank-2
+    /// weight matrix for the bf16 / int8 dtypes.
+    pub fn from_store(store: ValueStore, dtype: BackboneDtype) -> Result<Backbone> {
+        match dtype {
+            BackboneDtype::F32 => Ok(Backbone::F32(store)),
+            _ => Ok(Backbone::Quant(QuantStore::from_store(&store, dtype)?)),
+        }
+    }
+
+    pub fn dtype(&self) -> BackboneDtype {
+        match self {
+            Backbone::F32(_) => BackboneDtype::F32,
+            Backbone::Quant(q) => q.dtype(),
+        }
+    }
+
+    /// Resident bytes of this weight view.
+    pub fn total_bytes(&self) -> u64 {
+        match self {
+            Backbone::F32(s) => s.total_bytes(),
+            Backbone::Quant(q) => q.total_bytes(),
+        }
+    }
+
+    /// The f32 store, only when this backbone is unquantized. Callers that
+    /// need bit-exact f32 weights (the HLO oracle, cls serving) gate on
+    /// this instead of silently dequantizing.
+    pub fn as_f32(&self) -> Option<&ValueStore> {
+        match self {
+            Backbone::F32(s) => Some(s),
+            Backbone::Quant(_) => None,
+        }
+    }
+
+    /// Dense f32 copy, dequantizing if needed — the delta-merge path and
+    /// the HLO parameter upload run on this.
+    pub fn to_f32_store(&self) -> ValueStore {
+        match self {
+            Backbone::F32(s) => s.clone(),
+            Backbone::Quant(q) => q.to_f32_store(),
+        }
+    }
+}
+
+impl ParamSource for Backbone {
+    fn mat(&self, name: &str) -> Result<MatRef<'_>> {
+        match self {
+            Backbone::F32(s) => ParamSource::mat(s, name),
+            Backbone::Quant(q) => ParamSource::mat(q, name),
+        }
+    }
+
+    fn vec_f32(&self, name: &str) -> Result<&[f32]> {
+        match self {
+            Backbone::F32(s) => ParamSource::vec_f32(s, name),
+            Backbone::Quant(q) => ParamSource::vec_f32(q, name),
+        }
+    }
+}
+
 /// A resolved weight view for one request batch. Both variants are cheap
 /// `Arc` clones — nothing tensor-sized is copied at resolve time.
 #[derive(Clone)]
 pub enum ModelRef {
-    Merged(Arc<ValueStore>),
-    Bypass { backbone: Arc<ValueStore>, deltas: Arc<Vec<(String, DeltaStore)>> },
+    Merged(Arc<Backbone>),
+    Bypass { backbone: Arc<Backbone>, deltas: Arc<Vec<(String, DeltaStore)>> },
 }
 
 impl ModelRef {
@@ -80,6 +157,14 @@ impl ModelRef {
         match self {
             ModelRef::Merged(_) => ServePath::Merged,
             ModelRef::Bypass { .. } => ServePath::Bypass,
+        }
+    }
+
+    /// Storage dtype of the weights behind this view.
+    pub fn dtype(&self) -> BackboneDtype {
+        match self {
+            ModelRef::Merged(s) => s.dtype(),
+            ModelRef::Bypass { backbone, .. } => backbone.dtype(),
         }
     }
 
@@ -94,10 +179,10 @@ impl ModelRef {
     /// server's one pool; `KernelPool::serial()` for the serial baseline).
     pub fn planned<'a>(&'a self, cfg: &'a ModelCfg, pool: &KernelPool) -> Result<PlannedModel<'a>> {
         match self {
-            ModelRef::Merged(store) => PlannedModel::resolve(cfg, store.as_ref(), None, pool),
+            ModelRef::Merged(store) => PlannedModel::resolve_from(cfg, store.as_ref(), None, pool),
             ModelRef::Bypass { backbone, deltas } => {
                 let overlay = DeltaOverlay::new(deltas.as_slice());
-                PlannedModel::resolve(cfg, backbone.as_ref(), Some(&overlay), pool)
+                PlannedModel::resolve_from(cfg, backbone.as_ref(), Some(&overlay), pool)
             }
         }
     }
@@ -130,7 +215,7 @@ pub struct AdapterInfo {
 
 struct Entry {
     deltas: Arc<Vec<(String, DeltaStore)>>,
-    merged: Option<Arc<ValueStore>>,
+    merged: Option<Arc<Backbone>>,
     /// A worker is building this adapter's merged copy outside the lock;
     /// concurrent requests keep riding the bypass instead of piling up.
     merge_in_flight: bool,
@@ -151,7 +236,7 @@ struct Inner {
 pub struct AdapterRegistry {
     cfg: ModelCfg,
     rcfg: RegistryCfg,
-    backbone: Arc<ValueStore>,
+    backbone: Arc<Backbone>,
     inner: Mutex<Inner>,
     /// Optional span tracer (installed by the server): merge builds and LRU
     /// evictions show up on the trace timeline next to the requests that
@@ -164,10 +249,56 @@ impl AdapterRegistry {
         AdapterRegistry {
             cfg,
             rcfg,
-            backbone: Arc::new(backbone),
+            backbone: Arc::new(Backbone::F32(backbone)),
             inner: Mutex::new(Inner { entries: BTreeMap::new(), tick: 0 }),
             tracer: Mutex::new(None),
         }
+    }
+
+    /// Like [`AdapterRegistry::new`], but holding the frozen backbone at
+    /// the requested storage precision from the start.
+    pub fn with_dtype(
+        cfg: ModelCfg,
+        backbone: ValueStore,
+        rcfg: RegistryCfg,
+        dtype: BackboneDtype,
+    ) -> Result<AdapterRegistry> {
+        let mut reg = AdapterRegistry::new(cfg, backbone, rcfg);
+        reg.set_backbone_dtype(dtype)?;
+        Ok(reg)
+    }
+
+    /// Re-encode the frozen backbone at `dtype`, dropping every resident
+    /// merged copy (they re-merge — and re-quantize — from the new
+    /// backbone on their next promotion). Quantizing drops the f32 master:
+    /// the registry's resident weight bytes shrink to the quantized
+    /// footprint. Requires exclusive access — serving applies the dtype
+    /// knob at startup, before the registry is shared.
+    pub fn set_backbone_dtype(&mut self, dtype: BackboneDtype) -> Result<()> {
+        if dtype == self.backbone.dtype() {
+            return Ok(());
+        }
+        let dense = self.backbone.to_f32_store();
+        self.backbone = Arc::new(Backbone::from_store(dense, dtype)?);
+        let g = self.inner.get_mut().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        for e in g.entries.values_mut() {
+            e.merged = None;
+            e.merge_in_flight = false;
+            e.generation = tick;
+        }
+        Ok(())
+    }
+
+    /// Storage dtype of the frozen backbone (and of merged copies).
+    pub fn backbone_dtype(&self) -> BackboneDtype {
+        self.backbone.dtype()
+    }
+
+    /// Resident bytes of the frozen backbone at its current dtype.
+    pub fn backbone_bytes(&self) -> u64 {
+        self.backbone.total_bytes()
     }
 
     /// Install a span tracer; registry merge/evict events are recorded on it
@@ -197,7 +328,7 @@ impl AdapterRegistry {
         }
     }
 
-    pub fn backbone(&self) -> Arc<ValueStore> {
+    pub fn backbone(&self) -> Arc<Backbone> {
         self.backbone.clone()
     }
 
@@ -436,11 +567,13 @@ impl AdapterRegistry {
         Ok(ModelRef::Bypass { backbone: self.backbone.clone(), deltas: e.deltas.clone() })
     }
 
-    fn build_merged(&self, deltas: &[(String, DeltaStore)]) -> Arc<ValueStore> {
-        let mut store = (*self.backbone).clone();
+    fn build_merged(&self, deltas: &[(String, DeltaStore)]) -> Arc<Backbone> {
+        let mut store = self.backbone.to_f32_store();
         crate::model::merge_deltas(&mut store, deltas)
             .expect("registered deltas merge (validated at register)");
-        Arc::new(store)
+        let merged = Backbone::from_store(store, self.backbone.dtype())
+            .expect("re-encode merged copy at the backbone dtype");
+        Arc::new(merged)
     }
 
     /// Evict least-recently-used merged copies until within capacity,
@@ -488,7 +621,8 @@ mod tests {
     /// A small adapter touching only l0.wq, seeded per name.
     fn adapter(reg: &AdapterRegistry, seed: u64) -> Vec<(String, DeltaStore)> {
         let mut rng = Rng::new(seed);
-        let w = reg.backbone().get("params.l0.wq").unwrap().as_f32().unwrap().to_vec();
+        let dense = reg.backbone().to_f32_store();
+        let w = dense.get("params.l0.wq").unwrap().as_f32().unwrap().to_vec();
         let wt = Tensor::from_vec(&[64, 64], w);
         let sel = select_topk(&wt, 1);
         let vals: Vec<f32> = (0..64).map(|_| rng.normal() * 0.1).collect();
@@ -642,6 +776,45 @@ mod tests {
         tracer.set_enabled(false);
         reg.resolve("a").unwrap();
         assert_eq!(tracer.events().len(), events.len());
+    }
+
+    #[test]
+    fn quantized_backbone_shrinks_and_requantizes_merges() {
+        let cfg = presets::model("nano").unwrap();
+        let backbone = init_params(&cfg, &mut Rng::new(1));
+        let f32_bytes = backbone.total_bytes();
+        let mut reg = AdapterRegistry::with_dtype(
+            cfg,
+            backbone,
+            RegistryCfg { merged_capacity: 2, promote_after: 1 },
+            BackboneDtype::I8,
+        )
+        .unwrap();
+        assert_eq!(reg.backbone_dtype(), BackboneDtype::I8);
+        // int8 backbone resident bytes must be at most half the f32 bytes
+        assert!(
+            reg.backbone_bytes() * 2 <= f32_bytes,
+            "int8 {} vs f32 {f32_bytes}",
+            reg.backbone_bytes()
+        );
+        reg.register("a", adapter(&reg, 3)).unwrap();
+        // merged copies are re-encoded at the backbone dtype...
+        let merged = reg.merge_now("a").unwrap();
+        assert_eq!(merged.dtype(), BackboneDtype::I8);
+        // ...and still plan (bypass keeps the f32 deltas bound on top)
+        let cfg = reg.model_cfg().clone();
+        assert_eq!(merged.planned(&cfg, &KernelPool::serial()).unwrap().bound_deltas(), 0);
+        let bypass = reg.bypass("a").unwrap();
+        assert_eq!(bypass.dtype(), BackboneDtype::I8);
+        assert_eq!(bypass.planned(&cfg, &KernelPool::serial()).unwrap().bound_deltas(), 1);
+        // switching dtype re-encodes the backbone and drops merged copies
+        reg.set_backbone_dtype(BackboneDtype::Bf16).unwrap();
+        assert_eq!(reg.backbone_dtype(), BackboneDtype::Bf16);
+        assert!(!reg.is_merged("a"));
+        // a no-op switch keeps everything resident
+        reg.merge_now("a").unwrap();
+        reg.set_backbone_dtype(BackboneDtype::Bf16).unwrap();
+        assert!(reg.is_merged("a"));
     }
 
     #[test]

@@ -40,6 +40,7 @@ use super::batcher::MicroBatcher;
 use super::generate::{FinishReason, GenEvent, GenResponse, GenTicket, GenerateRequest};
 use super::metrics::{MetricsReport, ServeMetrics, StageLat};
 use super::registry::{AdapterRegistry, ModelKind, ModelRef, ServePath};
+use crate::tensor::quant::BackboneDtype;
 use crate::config::ModelCfg;
 use crate::obs::http::{HttpServer, Routes};
 use crate::obs::trace::{Stage, Tracer};
@@ -246,6 +247,14 @@ pub struct ServeCfg {
     /// the serving path is one relaxed atomic load per record site; stage
     /// latency *metrics* are collected either way. See `docs/observability.md`.
     pub trace: bool,
+    /// Storage precision of the frozen backbone (`--backbone-dtype`):
+    /// `F32` (default, bit-exact), or `Bf16` / `I8` to quantize at startup
+    /// — halving / quartering resident weight bytes while forwards
+    /// dequantize in-register (see `tensor::quant`). Merged adapter copies
+    /// are re-encoded at the same dtype. Quantized backbones always serve
+    /// through the host forward: the HLO backend needs f32 parameters, so
+    /// it is forced to `Backend::Host` with a warning.
+    pub backbone_dtype: BackboneDtype,
 }
 
 impl Default for ServeCfg {
@@ -259,6 +268,7 @@ impl Default for ServeCfg {
             adapter_quota: 0,
             threads: 0,
             trace: false,
+            backbone_dtype: BackboneDtype::F32,
         }
     }
 }
@@ -390,6 +400,24 @@ impl Server {
         anyhow::ensure!(cfg.max_queue >= 1, "serve: need max_queue >= 1");
         anyhow::ensure!(cfg.max_slots >= 1, "serve: need max_slots >= 1");
         let mut cfg = cfg;
+        let mut registry = registry;
+        let mut backend = backend;
+        if cfg.backbone_dtype.is_quantized() {
+            // the HLO eval artifacts take f32 parameter literals; a
+            // quantized backbone serves through the host forward instead
+            // of silently dequantizing a full f32 copy per batch
+            if matches!(backend, Backend::Hlo { .. }) {
+                crate::obs::log::warn(
+                    "serve",
+                    format_args!(
+                        "{} backbone is host-only; ignoring the HLO backend",
+                        cfg.backbone_dtype.name()
+                    ),
+                );
+                backend = Backend::Host;
+            }
+            registry.set_backbone_dtype(cfg.backbone_dtype)?;
+        }
         if let Backend::Hlo { eval, .. } = &backend {
             // the HLO artifact has a fixed batch dimension; coalescing past
             // it would make every full batch unservable (Internal rejects)
@@ -468,6 +496,8 @@ impl Server {
         m.pool_jobs = sh.pool.jobs();
         m.pool_busy_frac = sh.pool.busy_frac();
         m.pool_imbalance = sh.pool.imbalance();
+        m.backbone_dtype = sh.registry.backbone_dtype().name().to_string();
+        m.backbone_bytes = sh.registry.backbone_bytes();
         m
     }
 
@@ -1548,9 +1578,9 @@ struct HloStoreCache {
 // fields are never read: they exist only to pin the key addresses
 #[allow(dead_code)]
 enum WeakPin {
-    Merged(std::sync::Weak<crate::runtime::ValueStore>),
+    Merged(std::sync::Weak<super::registry::Backbone>),
     Bypass {
-        backbone: std::sync::Weak<crate::runtime::ValueStore>,
+        backbone: std::sync::Weak<super::registry::Backbone>,
         deltas: std::sync::Weak<Vec<(String, crate::peft::DeltaStore)>>,
     },
 }
@@ -1579,14 +1609,14 @@ fn model_pin(model: &ModelRef) -> WeakPin {
 fn build_hlo_store(mcfg: &ModelCfg, model: &ModelRef, meta: &ArtifactMeta) -> crate::runtime::ValueStore {
     match model {
         ModelRef::Merged(s) => {
-            let mut store = (**s).clone();
+            let mut store = s.to_f32_store();
             for (name, d_out, _) in mcfg.proj_shapes() {
                 store.insert_f32(format!("biases.{name}"), &[d_out], vec![0.0; d_out]);
             }
             store
         }
         ModelRef::Bypass { backbone, deltas } => {
-            let mut store = (**backbone).clone();
+            let mut store = backbone.to_f32_store();
             // scatter inputs: every projection gets idx/theta (zeros = no-op)
             let by_name: std::collections::BTreeMap<&str, &crate::peft::DeltaStore> =
                 deltas.iter().map(|(nm, d)| (nm.as_str(), d)).collect();
@@ -1707,9 +1737,10 @@ mod tests {
     fn test_adapter(reg: &AdapterRegistry, seed: u64) -> Vec<(String, DeltaStore)> {
         let mut rng = Rng::new(seed);
         let mcfg = reg.model_cfg().clone();
+        let dense = reg.backbone().to_f32_store();
         let mut out = Vec::new();
         for (name, d_out, d_in) in mcfg.proj_shapes().into_iter().take(2) {
-            let w = reg.backbone().get(&format!("params.{name}")).unwrap().as_f32().unwrap().to_vec();
+            let w = dense.get(&format!("params.{name}")).unwrap().as_f32().unwrap().to_vec();
             let wt = Tensor::from_vec(&[d_out, d_in], w);
             let sel = select_topk(&wt, 1);
             let vals: Vec<f32> = (0..d_out).map(|_| rng.normal() * 0.1).collect();
@@ -2120,5 +2151,30 @@ mod tests {
         assert!(parsed.at(&["pool", "threads"]).is_some());
         http.stop();
         srv.shutdown();
+    }
+
+    /// A server started with a quantized backbone dtype re-encodes the
+    /// registry at startup, serves scoring end-to-end, and reports the
+    /// dtype + resident bytes in its metrics.
+    #[test]
+    fn quantized_backbone_server_serves_and_reports() {
+        let mcfg = presets::model("nano").unwrap();
+        let backbone = init_params(&mcfg, &mut Rng::new(1));
+        let f32_bytes = backbone.total_bytes();
+        let reg = AdapterRegistry::new(mcfg, backbone, RegistryCfg::default());
+        reg.register("task-a", test_adapter(&reg, 10)).unwrap();
+        let srv = Server::start(
+            reg,
+            ServeCfg { workers: 1, backbone_dtype: BackboneDtype::I8, ..ServeCfg::default() },
+            Backend::Host,
+        )
+        .unwrap();
+        assert_eq!(srv.registry().backbone_dtype(), BackboneDtype::I8);
+        let r = srv.submit(req("task-a", 1)).unwrap().wait().unwrap();
+        assert_eq!(r.option_logits.len(), 2);
+        assert!(r.option_logits.iter().all(|l| l.is_finite()));
+        let m = srv.shutdown();
+        assert_eq!(m.backbone_dtype, "int8");
+        assert!(m.backbone_bytes > 0 && m.backbone_bytes * 2 <= f32_bytes);
     }
 }

@@ -13,10 +13,8 @@ pub fn to_bf16(x: f32) -> u16 {
         // quiet NaN, preserving sign
         return ((bits >> 16) as u16) | 0x0040;
     }
-    let round_bit = 0x0000_8000u32;
     let lsb = (bits >> 16) & 1;
     let rounded = bits.wrapping_add(0x0000_7fff + lsb);
-    let _ = round_bit;
     (rounded >> 16) as u16
 }
 
@@ -68,6 +66,55 @@ mod tests {
         // 1.0 + 3·2^-9 rounds up to 1.0 + 2^-7... the next-next repr.
         let y = 1.0f32 + 3.0 / 512.0;
         assert_eq!(to_f32(to_bf16(y)), 1.0 + 1.0 / 128.0);
+    }
+
+    #[test]
+    fn round_to_nearest_even_more_ties() {
+        // bf16 step in [1,2) is 2^-7, so ties sit at odd multiples of
+        // 2^-8. 1 + 2^-8 ties between 1.0 (mantissa lsb even) and
+        // 1 + 2^-7 (odd) — RNE keeps the even 1.0.
+        assert_eq!(to_f32(to_bf16(1.0 + 1.0 / 256.0)), 1.0);
+        // 1 + 3·2^-8 ties between 1 + 2^-7 (odd) and 1 + 2^-6 (even) —
+        // RNE rounds UP to the even neighbor this time.
+        let up = 1.0f32 + 3.0 / 256.0;
+        assert_eq!(to_f32(to_bf16(up)), 1.0 + 1.0 / 64.0);
+        // Same tie on the negative side: magnitude rounds identically.
+        assert_eq!(to_f32(to_bf16(-up)), -(1.0 + 1.0 / 64.0));
+        // Next binade [2,4): step 2^-6, tie at 2 + 2^-7 → even 2.0 ...
+        let tie2 = 2.0f32 + 1.0 / 128.0;
+        assert_eq!(to_f32(to_bf16(tie2)), 2.0);
+        // ... and one f32 ulp past the tie must round up.
+        let past = f32::from_bits(tie2.to_bits() + 1);
+        assert_eq!(to_f32(to_bf16(past)), 2.0 + 1.0 / 64.0);
+    }
+
+    #[test]
+    fn subnormals_and_signed_zero() {
+        // Signed zeros survive exactly.
+        assert_eq!(to_bf16(0.0), 0x0000);
+        assert_eq!(to_bf16(-0.0), 0x8000);
+        assert!(to_f32(to_bf16(-0.0)).is_sign_negative());
+        // The smallest positive f32 subnormal rounds to (signed) zero...
+        let tiny = f32::from_bits(1);
+        assert_eq!(to_f32(to_bf16(tiny)), 0.0);
+        assert!(to_f32(to_bf16(-tiny)).is_sign_negative());
+        // ...while a bf16-representable subnormal round-trips exactly
+        // (exponent 0, mantissa bits within the top 7).
+        let sub = f32::from_bits(0x0040_0000); // 2^-127
+        assert_eq!(to_f32(to_bf16(sub)), sub);
+        // Smallest normal stays normal.
+        assert_eq!(to_f32(to_bf16(f32::MIN_POSITIVE)), f32::MIN_POSITIVE);
+    }
+
+    #[test]
+    fn overflow_rounds_to_infinity() {
+        // f32::MAX (0x7f7f_ffff) rounds up past the largest finite bf16
+        // into the infinity encoding — RNE overflow behavior.
+        assert_eq!(to_f32(to_bf16(f32::MAX)), f32::INFINITY);
+        assert_eq!(to_f32(to_bf16(f32::MIN)), f32::NEG_INFINITY);
+        // The largest f32 that is exactly a bf16 value stays finite.
+        let max_bf16 = f32::from_bits(0x7f7f_0000);
+        assert_eq!(to_f32(to_bf16(max_bf16)), max_bf16);
     }
 
     #[test]

@@ -1,14 +1,33 @@
-//! Dense host-side tensor substrate (f32 primary, bf16 codec for the memory
-//! model and checkpoint compaction).
+//! Dense host-side tensor substrate: f32 working precision, quantized
+//! weight *views* for the frozen backbone.
+//!
+//! Activations, deltas, and all mutable state are f32 [`Tensor`]s. Frozen
+//! backbone weights can additionally live at reduced precision — bf16
+//! ([`bf16`], 2 B/elem, also the delta checkpoint codec) or int8 with
+//! per-row scales ([`quant`], ~1 B/elem) — and are read through the
+//! [`quant::MatRef`] view type (`F32` / `Bf16` / `I8`), so the NeuroAda
+//! invariant (frozen base + full-precision sparse deltas, the QLoRA
+//! pattern) is visible in the types: only `&[f32]` can be trained or
+//! merged into; quantized data is read-only by construction.
+//!
+//! Every `A·Bᵀ` over a `MatRef` runs through the single [`ops::gemm_nt`]
+//! dispatch point — one pooled entry ([`pool::KernelPool`], with
+//! `KernelPool::serial()` for the poolless case), two loop orders
+//! ([`ops::Kernel`]: cache-blocked default, scalar parity oracle), one
+//! 4-wide dequantize-in-register dot kernel per dtype. Per-dtype resident
+//! bytes for an `[n, k]` matrix: f32 `4·n·k`, bf16 `2·n·k`, int8
+//! `n·k + 4·n` (data + scales).
 //!
 //! This is NOT a deep-learning framework: the heavy compute runs inside the
 //! AOT HLO artifacts on PJRT. The host tensor exists for everything around
 //! that — parameter initialization, selection, data generation, the pure-rust
-//! reference transformer used in parity tests, and metric computation.
+//! reference transformer used in parity tests, serving on quantized
+//! backbones, and metric computation.
 
 pub mod bf16;
 pub mod ops;
 pub mod pool;
+pub mod quant;
 
 use crate::util::rng::Rng;
 

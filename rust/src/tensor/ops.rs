@@ -1,15 +1,35 @@
-//! Host-side numeric ops over [`Tensor`].
+//! Host-side numeric ops over [`Tensor`], and THE GEMM dispatch point.
 //!
+//! Every `A·Bᵀ` in the crate goes through [`gemm_nt`] (or the explicit
+//! [`Kernel`] it dispatches to): A is always f32 activations `[m, k]`, B is
+//! a [`MatRef`] weight view `[n, k]` in any backbone dtype (f32 / bf16 /
+//! int8 with per-row scales), and the work is row-partitioned across a
+//! persistent [`KernelPool`] (`KernelPool::serial()` covers the poolless
+//! case). Two kernels compute identical results per dtype:
+//!
+//! * [`Kernel::Scalar`] — the straight row-major loop, kept as the parity
+//!   oracle (this is the pre-redesign `nt_into` body for f32).
+//! * [`Kernel::Blocked`] — the default: a cache-blocked loop reorder that
+//!   walks B in [`B_PANEL`]-row panels so a panel stays L1-resident across
+//!   all of a chunk's A rows, instead of streaming the whole of B once per
+//!   row. Each output element is still produced by the *same* per-dtype dot
+//!   kernel in the same order, so Blocked ≡ Scalar **bitwise** at any pool
+//!   width — blocking reorders loop iterations, never additions.
+//!
+//! The per-dtype dots are 4-wide unrolled with dequantize-in-register for
+//! bf16/int8 (`tensor::quant`); the f32 dot is [`nt_dot`], unchanged from
+//! the pre-redesign kernels, so existing f32 parity tests stay bitwise.
 //! Used by the reference transformer (parity tests vs the HLO artifacts),
 //! selection, and evaluation. The hot training path does NOT run through
 //! here — that's the AOT HLO on PJRT.
 
 use super::pool::KernelPool;
+use super::quant::{nt_dot_bf16, nt_dot_i8, MatRef};
 use super::Tensor;
 
-/// The shared dot kernel behind every `A·Bᵀ` variant: 4-wide manual unroll,
-/// the autovectorizer does the rest. Serial and threaded matmuls both call
-/// this per output element, so their results are bit-identical by
+/// The shared f32 dot kernel behind every `A·Bᵀ` variant: 4-wide manual
+/// unroll, the autovectorizer does the rest. Serial and threaded matmuls
+/// both call this per output element, so their results are bit-identical by
 /// construction (same additions, same order).
 #[inline]
 fn nt_dot(ar: &[f32], br: &[f32], k: usize) -> f32 {
@@ -29,7 +49,8 @@ fn nt_dot(ar: &[f32], br: &[f32], k: usize) -> f32 {
     acc
 }
 
-/// One output row of `A·Bᵀ`: out[j] = a_row · b.row(j).
+/// One output row of `A·Bᵀ`: out[j] = a_row · b.row(j). (The scoped-spawn
+/// bench baseline's row kernel.)
 #[inline]
 fn nt_row(ar: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
     debug_assert_eq!(ar.len(), k);
@@ -39,53 +60,131 @@ fn nt_row(ar: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
     }
 }
 
-/// Raw-slice `C = A·Bᵀ` with A [m, k], B [n, k] → out [m, n], row-partitioned
-/// across the persistent [`KernelPool`]'s width.
+/// B-panel height of the blocked kernel: 64 rows × k columns of B reused
+/// across every A row of a chunk (≤ 32 KiB of f32 panel at k = 128 — L1
+/// territory; half/quarter that for bf16/int8).
+const B_PANEL: usize = 64;
+
+/// GEMM kernel choice. Both members compute identical results per dtype —
+/// the same per-dtype dot per output element — so this is purely a loop
+/// order / perf knob, benchmarked against each other in `forward_bench`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum Kernel {
+    /// Cache-blocked panels over B (the default).
+    #[default]
+    Blocked,
+    /// Straight row-major loop — the parity oracle and bench baseline.
+    Scalar,
+}
+
+/// `C = A·Bᵀ` through the default kernel: A `[m, k]` f32 activations, B
+/// `[n, k]` weights in any dtype, out `[m, n]`, row-partitioned across
+/// `pool`. The single public GEMM entry point — every matmul call site in
+/// the crate routes here.
 ///
-/// Each output row is produced by the same serial kernel whichever executor
-/// computes it, so any partition width yields bit-identical results — the
-/// partition only divides rows, never a dot product. A serial pool (or a
-/// single row) runs inline with zero dispatch overhead. This is the planned
-/// forward's matmul: weights arrive as borrowed slices, never as copied
-/// `Tensor`s, and the pool's workers are spawned once per server/bench/eval
-/// rather than per call (see `tensor::pool`; the old per-call
-/// scoped-spawn kernel survives as [`nt_into_scoped`], the bench baseline).
-pub fn nt_into(
+/// Bit-exactness contract: results are identical for every pool width and
+/// both [`Kernel`]s (the partition divides output rows, never a dot; the
+/// kernels share one dot per dtype). The f32 dot is the pre-redesign
+/// kernel, so f32 results are bitwise unchanged from the old `nt_into`.
+pub fn gemm_nt(
     a: &[f32],
     m: usize,
     k: usize,
-    b: &[f32],
+    b: MatRef<'_>,
     n: usize,
     out: &mut [f32],
     pool: &KernelPool,
 ) {
-    assert_eq!(a.len(), m * k, "A is [m, k]");
-    assert_eq!(b.len(), n * k, "B is [n, k]");
-    assert_eq!(out.len(), m * n, "out is [m, n]");
-    if m == 0 || n == 0 {
-        return;
-    }
-    let t = pool.threads().max(1).min(m);
-    if t <= 1 {
-        for (i, orow) in out.chunks_mut(n).enumerate() {
-            nt_row(&a[i * k..(i + 1) * k], b, k, n, orow);
-        }
-        return;
-    }
-    let rows = m.div_ceil(t);
-    pool.run_chunks(out, rows * n, |ci, chunk| {
-        for (r, orow) in chunk.chunks_mut(n).enumerate() {
-            let i = ci * rows + r;
-            nt_row(&a[i * k..(i + 1) * k], b, k, n, orow);
-        }
-    });
+    Kernel::default().gemm_nt(a, m, k, b, n, out, pool)
 }
 
-/// PR 3's scoped-spawn kernel, kept verbatim as the perf baseline the
-/// pooled [`nt_into`] is benchmarked against (`forward_bench`'s
-/// pooled-vs-spawn cases) and cross-checked against bitwise in the parity
-/// tests. Spawns `threads` OS threads per call — do not use on a hot path.
-pub fn nt_into_scoped(
+impl Kernel {
+    /// `C = A·Bᵀ` through this specific kernel (see [`gemm_nt`]).
+    pub fn gemm_nt(
+        self,
+        a: &[f32],
+        m: usize,
+        k: usize,
+        b: MatRef<'_>,
+        n: usize,
+        out: &mut [f32],
+        pool: &KernelPool,
+    ) {
+        assert_eq!(a.len(), m * k, "A is [m, k]");
+        assert_eq!(b.len(), n * k, "B is [n, k]");
+        assert_eq!(out.len(), m * n, "out is [m, n]");
+        if m == 0 || n == 0 {
+            return;
+        }
+        let t = pool.threads().max(1).min(m);
+        if t <= 1 {
+            self.row_range(a, 0, k, b, n, out);
+            return;
+        }
+        let rows = m.div_ceil(t);
+        pool.run_chunks(out, rows * n, |ci, chunk| {
+            self.row_range(a, ci * rows, k, b, n, chunk);
+        });
+    }
+
+    /// Compute output rows `r0 ..` into `out` (`out.len() / n` rows).
+    fn row_range(self, a: &[f32], r0: usize, k: usize, b: MatRef<'_>, n: usize, out: &mut [f32]) {
+        match b {
+            MatRef::F32(w) => {
+                self.row_range_with(a, r0, k, n, out, |ar, j| nt_dot(ar, &w[j * k..(j + 1) * k], k))
+            }
+            MatRef::Bf16(w) => self.row_range_with(a, r0, k, n, out, |ar, j| {
+                nt_dot_bf16(ar, &w[j * k..(j + 1) * k], k)
+            }),
+            MatRef::I8 { data, scales } => self.row_range_with(a, r0, k, n, out, |ar, j| {
+                nt_dot_i8(ar, &data[j * k..(j + 1) * k], k, scales[j])
+            }),
+        }
+    }
+
+    /// The two loop orders over one monomorphized per-dtype dot.
+    #[inline]
+    fn row_range_with(
+        self,
+        a: &[f32],
+        r0: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+        dot: impl Fn(&[f32], usize) -> f32,
+    ) {
+        match self {
+            Kernel::Scalar => {
+                for (r, orow) in out.chunks_mut(n).enumerate() {
+                    let ar = &a[(r0 + r) * k..(r0 + r + 1) * k];
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        *o = dot(ar, j);
+                    }
+                }
+            }
+            Kernel::Blocked => {
+                let rows = out.len() / n;
+                let mut jb = 0;
+                while jb < n {
+                    let je = (jb + B_PANEL).min(n);
+                    for r in 0..rows {
+                        let ar = &a[(r0 + r) * k..(r0 + r + 1) * k];
+                        for (dj, o) in out[r * n + jb..r * n + je].iter_mut().enumerate() {
+                            *o = dot(ar, jb + dj);
+                        }
+                    }
+                    jb = je;
+                }
+            }
+        }
+    }
+}
+
+/// PR 3's scoped-spawn kernel, kept crate-private purely as the perf
+/// baseline the pooled [`gemm_nt`] is benchmarked against
+/// (`forward_bench`'s pooled-vs-spawn cases). Spawns `threads` OS threads
+/// per call — do not use on a hot path.
+pub(crate) fn nt_into_scoped(
     a: &[f32],
     m: usize,
     k: usize,
@@ -118,27 +217,6 @@ pub fn nt_into_scoped(
             });
         }
     });
-}
-
-/// C = A·Bᵀ with A [m, k], B [n, k] → C [m, n], single-threaded.
-///
-/// The `b` operand is row-major [n, k], matching how weight matrices are
-/// stored ([d_out, d_in]) so every row is a neuron and access is sequential.
-pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
-    matmul_nt_pooled(a, b, &KernelPool::serial())
-}
-
-/// C = A·Bᵀ row-partitioned across `pool`; bit-identical to
-/// [`matmul_nt`] for every partition width (see [`nt_into`]).
-pub fn matmul_nt_pooled(a: &Tensor, b: &Tensor, pool: &KernelPool) -> Tensor {
-    assert_eq!(a.rank(), 2);
-    assert_eq!(b.rank(), 2);
-    let (m, k) = (a.shape[0], a.shape[1]);
-    let (n, k2) = (b.shape[0], b.shape[1]);
-    assert_eq!(k, k2, "inner dims: {:?} vs {:?}", a.shape, b.shape);
-    let mut c = Tensor::zeros(&[m, n]);
-    nt_into(&a.data, m, k, &b.data, n, &mut c.data, pool);
-    c
 }
 
 /// C = A·B with A [m, k], B [k, n].
@@ -221,13 +299,24 @@ pub fn positional(seq: usize, d: usize) -> Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::quant::{BackboneDtype, QuantMat};
+
+    /// Tensor-shaped wrapper over the dispatch, for test ergonomics.
+    fn gemm(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape[0], a.shape[1]);
+        let n = b.shape[0];
+        assert_eq!(k, b.shape[1]);
+        let mut c = Tensor::zeros(&[m, n]);
+        gemm_nt(&a.data, m, k, MatRef::F32(&b.data), n, &mut c.data, &KernelPool::serial());
+        c
+    }
 
     #[test]
     fn matmul_nt_small() {
         // A = [[1,2],[3,4]], B = [[1,0],[0,1],[1,1]] (rows are B's "neurons")
         let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
         let b = Tensor::from_vec(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
-        let c = matmul_nt(&a, &b);
+        let c = gemm(&a, &b);
         assert_eq!(c.data, vec![1.0, 2.0, 3.0, 3.0, 4.0, 7.0]);
     }
 
@@ -244,7 +333,7 @@ mod tests {
                 bt.set2(j, i, b.at2(i, j));
             }
         }
-        let c1 = matmul_nt(&a, &b);
+        let c1 = gemm(&a, &b);
         let c2 = matmul(&a, &bt);
         assert!(c1.max_abs_diff(&c2) < 1e-5);
     }
@@ -277,37 +366,79 @@ mod tests {
         assert!((total - 1.0).abs() < 1e-5);
     }
 
+    /// The pool/kernel bitwise contract, every dtype: for each shape, the
+    /// serial Scalar result is the oracle; Blocked, every pool width, and
+    /// (f32) the scoped-spawn baseline must all equal it bitwise. bf16
+    /// additionally equals the f32 kernel run on the exactly-dequantized
+    /// matrix — dequantize-in-register changes no additions.
     #[test]
     fn pooled_matmul_is_bitwise_serial() {
         use crate::util::rng::Rng;
         let mut r = Rng::new(9);
         let pools: Vec<KernelPool> =
             [2usize, 3, 4, 32].iter().map(|&t| KernelPool::new(t)).collect();
+        let serial = KernelPool::serial();
         // odd shapes: m, n, k deliberately not multiples of the partition
-        for (m, n, k) in [(1usize, 5usize, 3usize), (7, 11, 13), (17, 3, 9), (5, 1, 4)] {
+        // (and of the blocked panel); the last crosses B_PANEL
+        for (m, n, k) in [(1usize, 5usize, 3usize), (7, 11, 13), (17, 3, 9), (5, 1, 4), (3, 130, 6)]
+        {
             let a = Tensor::randn(&[m, k], 1.0, &mut r);
             let b = Tensor::randn(&[n, k], 1.0, &mut r);
-            let serial = matmul_nt(&a, &b);
+            let mut want = vec![0.0f32; m * n];
+            Kernel::Scalar.gemm_nt(&a.data, m, k, MatRef::F32(&b.data), n, &mut want, &serial);
+            let mut got = vec![0.0f32; m * n];
+            for pool in pools.iter().chain([&serial]) {
+                for kern in [Kernel::Scalar, Kernel::Blocked] {
+                    got.fill(0.0);
+                    kern.gemm_nt(&a.data, m, k, MatRef::F32(&b.data), n, &mut got, pool);
+                    assert_eq!(want, got, "{kern:?} m={m} n={n} k={k} t={}", pool.threads());
+                }
+            }
+            // the scoped-spawn baseline agrees with all of them
             for pool in &pools {
-                let par = matmul_nt_pooled(&a, &b, pool);
-                assert_eq!(serial.data, par.data, "m={m} n={n} k={k} t={}", pool.threads());
-                // and the scoped-spawn baseline agrees with both
-                let mut scoped = vec![0.0f32; m * n];
-                nt_into_scoped(&a.data, m, k, &b.data, n, &mut scoped, pool.threads());
-                assert_eq!(serial.data, scoped, "scoped m={m} n={n} k={k}");
+                got.fill(0.0);
+                nt_into_scoped(&a.data, m, k, &b.data, n, &mut got, pool.threads());
+                assert_eq!(want, got, "scoped m={m} n={n} k={k}");
+            }
+            // quantized dtypes: Scalar ≡ Blocked ≡ pooled bitwise per dtype
+            for dtype in [BackboneDtype::Bf16, BackboneDtype::I8] {
+                let q = QuantMat::quantize(dtype, n, k, &b.data);
+                let mut qwant = vec![0.0f32; m * n];
+                Kernel::Scalar.gemm_nt(&a.data, m, k, q.as_ref(), n, &mut qwant, &serial);
+                for pool in pools.iter().chain([&serial]) {
+                    for kern in [Kernel::Scalar, Kernel::Blocked] {
+                        got.fill(0.0);
+                        kern.gemm_nt(&a.data, m, k, q.as_ref(), n, &mut got, pool);
+                        assert_eq!(
+                            qwant,
+                            got,
+                            "{} {kern:?} m={m} n={n} k={k} t={}",
+                            dtype.name(),
+                            pool.threads()
+                        );
+                    }
+                }
+                if dtype == BackboneDtype::Bf16 {
+                    // bf16 dequant is exact, so in-register dequant equals
+                    // the f32 kernel on the dequantized matrix BITWISE
+                    let dq = q.dequant();
+                    got.fill(0.0);
+                    Kernel::Scalar.gemm_nt(&a.data, m, k, MatRef::F32(&dq), n, &mut got, &serial);
+                    assert_eq!(qwant, got, "bf16 in-register vs dequantized m={m} n={n} k={k}");
+                }
             }
         }
     }
 
     #[test]
-    fn nt_into_matches_tensor_path() {
+    fn gemm_matches_tensor_path() {
         use crate::util::rng::Rng;
         let mut r = Rng::new(10);
         let a = Tensor::randn(&[6, 5], 1.0, &mut r);
         let b = Tensor::randn(&[4, 5], 1.0, &mut r);
-        let c = matmul_nt(&a, &b);
+        let c = gemm(&a, &b);
         let mut out = vec![0.0f32; 6 * 4];
-        nt_into(&a.data, 6, 5, &b.data, 4, &mut out, &KernelPool::new(2));
+        gemm_nt(&a.data, 6, 5, MatRef::F32(&b.data), 4, &mut out, &KernelPool::new(2));
         assert_eq!(c.data, out);
     }
 }

@@ -1,0 +1,545 @@
+//! Quantized frozen-backbone storage and the [`MatRef`] weight view.
+//!
+//! NeuroAda freezes the backbone by construction and trains only sparse
+//! f32/bf16 bypass deltas, so the resident backbone can be stored at
+//! reduced precision with zero effect on training semantics — the QLoRA
+//! pattern (quantized frozen base + full-precision adapters). This module
+//! owns the three storage dtypes behind one view type:
+//!
+//! * [`MatRef`] — a borrowed row-major matrix in any dtype. Every GEMM in
+//!   the crate takes one (`ops::gemm_nt`), and `ProjPlan`/`PlannedModel`
+//!   hold them, so forward, batched attention, and the batch-1 decode step
+//!   all run on quantized backbones unchanged.
+//! * [`QuantMat`] / [`QuantStore`] — owned quantized tensors keyed like a
+//!   `ValueStore`. Rank-2 f32 parameters are quantized; rank-1 vectors
+//!   (layer norms) and integer tensors stay exact, so normalization math is
+//!   untouched by the dtype knob.
+//!
+//! Dtype semantics:
+//! * **bf16** — round-to-nearest-even truncation (`tensor::bf16`);
+//!   dequantization is exact (bf16 ⊂ f32), so per-element error is bounded
+//!   by `|x| · BF16_EPS` and bf16-representable values round-trip bitwise.
+//! * **int8** — symmetric per-row scales: `scale = max|row| / 127`,
+//!   `q = round(x / scale)` clamped to ±127, dequant `q · scale`.
+//!   Per-element error is bounded by `scale / 2`; an all-zero row stores
+//!   scale 0 and round-trips exactly.
+//!
+//! Bytes per dtype (the serving memory formula, cross-checked against
+//! `peft::memory::backbone_resident_bytes`): f32 = 4·P; bf16 = 2·P_mat +
+//! 4·P_vec; int8 = 1·P_mat + 4·rows (scales) + 4·P_vec.
+//!
+//! The dequantize-in-register dot kernels live here next to the formats
+//! ([`nt_dot_bf16`], [`nt_dot_i8`]); `ops::gemm_nt`'s blocked and scalar
+//! kernels share them per dtype, so kernel choice never changes results
+//! (bit-identical per dtype by construction).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{Value, ValueStore};
+use crate::tensor::bf16;
+
+/// Storage dtype of a resident (frozen) backbone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackboneDtype {
+    #[default]
+    F32,
+    Bf16,
+    I8,
+}
+
+impl BackboneDtype {
+    /// Parse the CLI knob (`--backbone-dtype f32|bf16|int8`).
+    pub fn parse(s: &str) -> Result<BackboneDtype, String> {
+        match s {
+            "f32" => Ok(BackboneDtype::F32),
+            "bf16" => Ok(BackboneDtype::Bf16),
+            "int8" | "i8" => Ok(BackboneDtype::I8),
+            other => Err(format!("unknown backbone dtype {other:?} (want f32 | bf16 | int8)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackboneDtype::F32 => "f32",
+            BackboneDtype::Bf16 => "bf16",
+            BackboneDtype::I8 => "int8",
+        }
+    }
+
+    /// Bytes per matrix element (int8 scales are accounted per row).
+    pub fn mat_elem_bytes(self) -> u64 {
+        match self {
+            BackboneDtype::F32 => 4,
+            BackboneDtype::Bf16 => 2,
+            BackboneDtype::I8 => 1,
+        }
+    }
+
+    pub fn is_quantized(self) -> bool {
+        self != BackboneDtype::F32
+    }
+
+    /// Documented end-to-end logit-deviation bound for a forward over a
+    /// backbone quantized at this dtype, as a fraction of the f32 run's
+    /// max |logit|. These are regression gates (used by the bench binaries
+    /// and the quant acceptance tests), deliberately generous vs the
+    /// observed deviation: per-element weight error is ≤ `BF16_EPS` (bf16)
+    /// / `scale/2` (int8) and RMSNorm re-normalizes between layers, so a
+    /// breach means quantization broke, not that the model drifted.
+    pub fn logit_tol(self) -> f32 {
+        match self {
+            BackboneDtype::F32 => 0.0,
+            BackboneDtype::Bf16 => 0.05,
+            BackboneDtype::I8 => 0.15,
+        }
+    }
+}
+
+/// A borrowed row-major matrix in any backbone dtype — the one weight-view
+/// type the GEMM dispatch (`ops::gemm_nt`) and the planned forward accept.
+///
+/// `MatRef` carries no dimensions; callers supply `cols` implicitly through
+/// the output/input slice lengths exactly as the raw-slice kernels always
+/// did.
+#[derive(Debug, Clone, Copy)]
+pub enum MatRef<'a> {
+    F32(&'a [f32]),
+    Bf16(&'a [u16]),
+    I8 {
+        data: &'a [i8],
+        /// One symmetric scale per matrix row.
+        scales: &'a [f32],
+    },
+}
+
+impl<'a> MatRef<'a> {
+    /// Total element count (rows · cols).
+    pub fn len(&self) -> usize {
+        match self {
+            MatRef::F32(d) => d.len(),
+            MatRef::Bf16(d) => d.len(),
+            MatRef::I8 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> BackboneDtype {
+        match self {
+            MatRef::F32(_) => BackboneDtype::F32,
+            MatRef::Bf16(_) => BackboneDtype::Bf16,
+            MatRef::I8 { .. } => BackboneDtype::I8,
+        }
+    }
+
+    /// Dequantize row `i` into `out` (`out.len()` is the column count).
+    /// The f32 path is a bitwise copy.
+    pub fn read_row(&self, i: usize, out: &mut [f32]) {
+        let c = out.len();
+        match self {
+            MatRef::F32(d) => out.copy_from_slice(&d[i * c..(i + 1) * c]),
+            MatRef::Bf16(d) => {
+                for (o, &h) in out.iter_mut().zip(&d[i * c..(i + 1) * c]) {
+                    *o = bf16::to_f32(h);
+                }
+            }
+            MatRef::I8 { data, scales } => {
+                let s = scales[i];
+                for (o, &q) in out.iter_mut().zip(&data[i * c..(i + 1) * c]) {
+                    *o = q as f32 * s;
+                }
+            }
+        }
+    }
+
+    /// `row(i) · x` with `x.len()` columns — the batch-1 decode-step dot.
+    ///
+    /// The f32 path is the sequential zip-sum the pre-`MatRef` decode step
+    /// used, kept verbatim so the step stays bitwise identical to its
+    /// legacy oracle; bf16/int8 dequantize in-register through the same
+    /// 4-wide kernels the batched GEMM uses, so the step and batch paths
+    /// agree bitwise per dtype.
+    pub fn dot_row(&self, i: usize, x: &[f32]) -> f32 {
+        let c = x.len();
+        match self {
+            MatRef::F32(d) => {
+                let wr = &d[i * c..(i + 1) * c];
+                x.iter().zip(wr).map(|(a, b)| a * b).sum::<f32>()
+            }
+            MatRef::Bf16(d) => nt_dot_bf16(x, &d[i * c..(i + 1) * c], c),
+            MatRef::I8 { data, scales } => nt_dot_i8(x, &data[i * c..(i + 1) * c], c, scales[i]),
+        }
+    }
+}
+
+/// bf16 dot with dequantize-in-register: 4-wide manual unroll mirroring the
+/// f32 `nt_dot` structure (the autovectorizer does the rest). Bit-identical
+/// to running the f32 kernel on the exactly-dequantized matrix.
+#[inline]
+pub(crate) fn nt_dot_bf16(ar: &[f32], br: &[u16], k: usize) -> f32 {
+    let mut acc = 0.0f32;
+    let mut t = 0;
+    while t + 4 <= k {
+        acc += ar[t] * bf16::to_f32(br[t])
+            + ar[t + 1] * bf16::to_f32(br[t + 1])
+            + ar[t + 2] * bf16::to_f32(br[t + 2])
+            + ar[t + 3] * bf16::to_f32(br[t + 3]);
+        t += 4;
+    }
+    while t < k {
+        acc += ar[t] * bf16::to_f32(br[t]);
+        t += 1;
+    }
+    acc
+}
+
+/// int8 dot with the per-row scale applied once at the end: the integer
+/// codes widen to f32 in-register and accumulate 4-wide, then one multiply
+/// by `scale` — not per element.
+#[inline]
+pub(crate) fn nt_dot_i8(ar: &[f32], br: &[i8], k: usize, scale: f32) -> f32 {
+    let mut acc = 0.0f32;
+    let mut t = 0;
+    while t + 4 <= k {
+        acc += ar[t] * br[t] as f32
+            + ar[t + 1] * br[t + 1] as f32
+            + ar[t + 2] * br[t + 2] as f32
+            + ar[t + 3] * br[t + 3] as f32;
+        t += 4;
+    }
+    while t < k {
+        acc += ar[t] * br[t] as f32;
+        t += 1;
+    }
+    acc * scale
+}
+
+/// Owned quantized storage of one rank-2 matrix.
+#[derive(Debug, Clone)]
+pub struct QuantMat {
+    pub rows: usize,
+    pub cols: usize,
+    data: QuantData,
+}
+
+#[derive(Debug, Clone)]
+enum QuantData {
+    Bf16(Vec<u16>),
+    I8 { data: Vec<i8>, scales: Vec<f32> },
+}
+
+impl QuantMat {
+    /// Quantize a row-major `[rows, cols]` f32 matrix. `dtype` must be a
+    /// quantized dtype (an f32 "quantization" would just be the input).
+    pub fn quantize(dtype: BackboneDtype, rows: usize, cols: usize, data: &[f32]) -> QuantMat {
+        assert_eq!(data.len(), rows * cols, "matrix is [rows, cols]");
+        let qd = match dtype {
+            BackboneDtype::F32 => panic!("QuantMat::quantize: f32 is not a quantized dtype"),
+            BackboneDtype::Bf16 => QuantData::Bf16(bf16::pack(data)),
+            BackboneDtype::I8 => {
+                let mut q = vec![0i8; data.len()];
+                let mut scales = vec![0.0f32; rows];
+                for (i, scale) in scales.iter_mut().enumerate() {
+                    let row = &data[i * cols..(i + 1) * cols];
+                    let mx = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                    *scale = mx / 127.0;
+                    if *scale > 0.0 {
+                        let inv = 1.0 / *scale;
+                        for (o, &v) in q[i * cols..(i + 1) * cols].iter_mut().zip(row) {
+                            *o = (v * inv).round().clamp(-127.0, 127.0) as i8;
+                        }
+                    }
+                }
+                QuantData::I8 { data: q, scales }
+            }
+        };
+        QuantMat { rows, cols, data: qd }
+    }
+
+    pub fn dtype(&self) -> BackboneDtype {
+        match &self.data {
+            QuantData::Bf16(_) => BackboneDtype::Bf16,
+            QuantData::I8 { .. } => BackboneDtype::I8,
+        }
+    }
+
+    pub fn as_ref(&self) -> MatRef<'_> {
+        match &self.data {
+            QuantData::Bf16(d) => MatRef::Bf16(d),
+            QuantData::I8 { data, scales } => MatRef::I8 { data, scales },
+        }
+    }
+
+    /// Resident bytes: codes plus (for int8) the per-row f32 scales.
+    pub fn bytes(&self) -> u64 {
+        match &self.data {
+            QuantData::Bf16(d) => 2 * d.len() as u64,
+            QuantData::I8 { data, scales } => (data.len() + 4 * scales.len()) as u64,
+        }
+    }
+
+    /// Dequantize back to a dense f32 matrix.
+    pub fn dequant(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        let r = self.as_ref();
+        for i in 0..self.rows {
+            r.read_row(i, &mut out[i * self.cols..(i + 1) * self.cols]);
+        }
+        out
+    }
+}
+
+/// A quantized `ValueStore`: rank-2 f32 parameters held as [`QuantMat`]s,
+/// everything else (rank-1 norm vectors, integer tensors) verbatim.
+#[derive(Debug, Clone)]
+pub struct QuantStore {
+    dtype: BackboneDtype,
+    mats: BTreeMap<String, QuantMat>,
+    /// The unquantized remainder, stored as a plain [`ValueStore`].
+    full: ValueStore,
+}
+
+impl QuantStore {
+    /// Quantize every rank-2 f32 tensor of `store` to `dtype` (which must
+    /// be bf16 or int8 — an f32 backbone stays a `ValueStore`).
+    pub fn from_store(store: &ValueStore, dtype: BackboneDtype) -> Result<QuantStore> {
+        if !dtype.is_quantized() {
+            bail!("QuantStore wants a quantized dtype, got {}", dtype.name());
+        }
+        let mut mats = BTreeMap::new();
+        let mut full = ValueStore::new();
+        for name in store.names() {
+            match store.get(name)? {
+                Value::F32 { shape, data } if shape.len() == 2 => {
+                    let q = QuantMat::quantize(dtype, shape[0], shape[1], data);
+                    mats.insert(name.clone(), q);
+                }
+                v => full.insert(name.clone(), v.clone()),
+            }
+        }
+        Ok(QuantStore { dtype, mats, full })
+    }
+
+    pub fn dtype(&self) -> BackboneDtype {
+        self.dtype
+    }
+
+    /// Entry by full key, as a [`MatRef`] (quantized matrices and exact f32
+    /// leftovers both resolve; integer tensors error).
+    pub fn mat(&self, name: &str) -> Result<MatRef<'_>> {
+        if let Some(q) = self.mats.get(name) {
+            return Ok(q.as_ref());
+        }
+        Ok(MatRef::F32(self.full.get(name)?.as_f32()?))
+    }
+
+    /// Exact-f32 entry by full key (layer norms etc.); quantized matrices
+    /// error — they have no resident f32 form.
+    pub fn vec_f32(&self, name: &str) -> Result<&[f32]> {
+        if self.mats.contains_key(name) {
+            bail!("{name:?} is quantized ({}); no resident f32 form", self.dtype.name());
+        }
+        self.full.get(name)?.as_f32()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.mats.contains_key(name) || self.full.contains(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.mats.len() + self.full.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident bytes: quantized codes + scales + the exact remainder.
+    pub fn total_bytes(&self) -> u64 {
+        self.mats.values().map(QuantMat::bytes).sum::<u64>() + self.full.total_bytes()
+    }
+
+    /// Dequantize everything back into a dense f32 [`ValueStore`] (the HLO
+    /// backend and merge-time delta application run on this).
+    pub fn to_f32_store(&self) -> ValueStore {
+        let mut out = self.full.clone();
+        for (name, q) in &self.mats {
+            out.insert_f32(name.clone(), &[q.rows, q.cols], q.dequant());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::bf16::BF16_EPS;
+    use crate::tensor::Tensor;
+    use crate::testing::{prop_check, PropConfig};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dtype_parses_and_names() {
+        for (s, d) in
+            [("f32", BackboneDtype::F32), ("bf16", BackboneDtype::Bf16), ("int8", BackboneDtype::I8)]
+        {
+            assert_eq!(BackboneDtype::parse(s).unwrap(), d);
+            assert_eq!(BackboneDtype::parse(d.name()).unwrap(), d);
+        }
+        assert_eq!(BackboneDtype::parse("i8").unwrap(), BackboneDtype::I8);
+        assert!(BackboneDtype::parse("fp4").is_err());
+        assert!(!BackboneDtype::F32.is_quantized());
+        assert!(BackboneDtype::Bf16.is_quantized() && BackboneDtype::I8.is_quantized());
+    }
+
+    /// Property: per-element round-trip error bounds — `|x| · BF16_EPS` for
+    /// bf16, `scale/2` per row for int8 — on randomized shapes and scales.
+    #[test]
+    fn prop_roundtrip_error_bounded() {
+        prop_check(PropConfig { cases: 48, max_size: 19, base_seed: 0x9A17 }, |rng, size| {
+            let rows = 1 + rng.below(size.max(1));
+            let cols = 1 + rng.below(size.max(1) * 2);
+            let spread = 0.1 + rng.below(40) as f32;
+            let x = Tensor::randn(&[rows, cols], spread, rng);
+            for dtype in [BackboneDtype::Bf16, BackboneDtype::I8] {
+                let q = QuantMat::quantize(dtype, rows, cols, &x.data);
+                let back = q.dequant();
+                for i in 0..rows {
+                    let row = &x.data[i * cols..(i + 1) * cols];
+                    let bound = match dtype {
+                        BackboneDtype::Bf16 => f32::NAN, // per-element below
+                        BackboneDtype::I8 => {
+                            let mx = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                            // scale/2 plus float-rounding headroom
+                            mx / 127.0 * 0.5 + mx * 1e-6
+                        }
+                        BackboneDtype::F32 => unreachable!(),
+                    };
+                    for (j, (&want, &got)) in
+                        row.iter().zip(&back[i * cols..(i + 1) * cols]).enumerate()
+                    {
+                        let err = (want - got).abs();
+                        let lim = if dtype == BackboneDtype::Bf16 {
+                            want.abs() * BF16_EPS
+                        } else {
+                            bound
+                        };
+                        if err > lim {
+                            return Err(format!(
+                                "{} [{i},{j}]: |{want} - {got}| = {err} > {lim}",
+                                dtype.name()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn all_zero_row_roundtrips_exactly() {
+        let x = vec![0.0f32; 12];
+        for dtype in [BackboneDtype::Bf16, BackboneDtype::I8] {
+            let q = QuantMat::quantize(dtype, 3, 4, &x);
+            assert_eq!(q.dequant(), x, "{}", dtype.name());
+        }
+    }
+
+    /// A single outlier sets the int8 row scale; the other entries still
+    /// obey the scale/2 bound and the outlier itself is near-exact.
+    #[test]
+    fn single_outlier_row_keeps_bound() {
+        let mut x = vec![0.01f32; 8];
+        x[3] = 100.0;
+        let q = QuantMat::quantize(BackboneDtype::I8, 1, 8, &x);
+        let back = q.dequant();
+        let scale = 100.0 / 127.0;
+        assert!((back[3] - 100.0).abs() <= scale * 0.5);
+        for (j, (&want, &got)) in x.iter().zip(&back).enumerate() {
+            assert!((want - got).abs() <= scale * 0.5 + 1e-6, "[{j}] {want} vs {got}");
+        }
+        // the tiny entries quantize to code 0 under an outlier-driven scale
+        assert_eq!(back[0], 0.0);
+    }
+
+    #[test]
+    fn read_row_and_dot_row_agree_with_dequant() {
+        let mut rng = Rng::new(5);
+        let (rows, cols) = (7, 13);
+        let x = Tensor::randn(&[rows, cols], 1.0, &mut rng);
+        let act: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+        for dtype in [BackboneDtype::Bf16, BackboneDtype::I8] {
+            let q = QuantMat::quantize(dtype, rows, cols, &x.data);
+            let dq = q.dequant();
+            let mut row = vec![0.0f32; cols];
+            for i in 0..rows {
+                q.as_ref().read_row(i, &mut row);
+                assert_eq!(&row[..], &dq[i * cols..(i + 1) * cols], "{} row {i}", dtype.name());
+                let want: f32 = act.iter().zip(&row).map(|(a, b)| a * b).sum();
+                let got = q.as_ref().dot_row(i, &act);
+                assert!((want - got).abs() <= 1e-4 * want.abs().max(1.0), "{} row {i}", dtype.name());
+            }
+        }
+        // the f32 view's read/dot are bitwise
+        let f = MatRef::F32(&x.data);
+        let mut row = vec![0.0f32; cols];
+        f.read_row(2, &mut row);
+        assert_eq!(&row[..], &x.data[2 * cols..3 * cols]);
+        assert_eq!(f.dot_row(2, &act), act.iter().zip(&row).map(|(a, b)| a * b).sum::<f32>());
+    }
+
+    #[test]
+    fn store_quantizes_rank2_only_and_shrinks() {
+        let mut s = ValueStore::new();
+        let mut rng = Rng::new(11);
+        s.insert_f32("params.w", &[16, 8], (0..128).map(|_| rng.normal()).collect());
+        s.insert_f32("params.ln", &[8], vec![1.0; 8]);
+        s.insert_i32("params.idx", &[4], vec![1, 2, 3, 4]);
+        for dtype in [BackboneDtype::Bf16, BackboneDtype::I8] {
+            let q = QuantStore::from_store(&s, dtype).unwrap();
+            assert_eq!(q.dtype(), dtype);
+            assert_eq!(q.len(), 3);
+            assert!(q.contains("params.w") && q.contains("params.ln"));
+            // the norm vector stays exact f32; the matrix has no f32 form
+            assert_eq!(q.vec_f32("params.ln").unwrap(), &[1.0f32; 8][..]);
+            assert!(q.vec_f32("params.w").is_err());
+            assert_eq!(q.mat("params.w").unwrap().dtype(), dtype);
+            assert_eq!(q.mat("params.ln").unwrap().dtype(), BackboneDtype::F32);
+            assert!(q.total_bytes() < s.total_bytes());
+            // round-trip restores shapes and the exact entries bitwise
+            let back = q.to_f32_store();
+            assert_eq!(back.len(), 3);
+            assert_eq!(back.get("params.w").unwrap().shape(), &[16, 8]);
+            assert_eq!(
+                back.get("params.ln").unwrap().as_f32().unwrap(),
+                s.get("params.ln").unwrap().as_f32().unwrap()
+            );
+        }
+        assert!(QuantStore::from_store(&s, BackboneDtype::F32).is_err());
+    }
+
+    /// The acceptance byte ratio: int8 ≤ 0.5× f32 resident bytes on a
+    /// realistically matrix-dominated store (and bf16 ≤ ~0.5× + vectors).
+    #[test]
+    fn int8_store_is_at_most_half_of_f32() {
+        let mut s = ValueStore::new();
+        let mut rng = Rng::new(12);
+        s.insert_f32("params.embed", &[64, 32], (0..64 * 32).map(|_| rng.normal()).collect());
+        s.insert_f32("params.w", &[32, 32], (0..32 * 32).map(|_| rng.normal()).collect());
+        s.insert_f32("params.ln", &[32], vec![1.0; 32]);
+        let f32_bytes = s.total_bytes();
+        let i8_bytes = QuantStore::from_store(&s, BackboneDtype::I8).unwrap().total_bytes();
+        let bf16_bytes = QuantStore::from_store(&s, BackboneDtype::Bf16).unwrap().total_bytes();
+        assert!(
+            i8_bytes * 2 <= f32_bytes,
+            "int8 {i8_bytes} B must be <= 0.5x f32 {f32_bytes} B"
+        );
+        assert!(bf16_bytes < f32_bytes && i8_bytes < bf16_bytes);
+    }
+}

@@ -7,12 +7,12 @@
 //!    The pre-refactor path is kept verbatim as
 //!    `bench::forward_bench::legacy::LegacyModel`; in practice the batch
 //!    kernels are bit-identical, so the observed diff is 0.0.
-//! 2. **Pooled kernels are bitwise serial** (ISSUE 5): the persistent-pool
-//!    `matmul_nt`, the `d_out`-partitioned decode step, and the pooled
+//! 2. **Pooled kernels are bitwise serial** (ISSUE 5/7): `gemm_nt` through
+//!    the unified `Kernel` dispatch — Scalar and Blocked, serial and
+//!    pooled — the `d_out`-partitioned decode step, and the pooled
 //!    attention (batched across rows, step across heads) equal the serial
-//!    path BITWISE on randomized odd shapes and thread counts, via the
-//!    in-repo property framework. The scoped-spawn baseline kernel is
-//!    cross-checked too.
+//!    scalar oracle BITWISE on randomized odd shapes and thread counts,
+//!    via the in-repo property framework.
 //! 3. **Pool reuse**: one pool serves many forwards without spawning
 //!    anything new — asserted via pool-internal counters, not timing.
 
@@ -21,8 +21,9 @@ use neuroada::bench::serve_bench::synth_adapter;
 use neuroada::config::presets;
 use neuroada::model::init::init_params;
 use neuroada::model::{DecodeState, DeltaOverlay, PlannedModel};
-use neuroada::tensor::ops::{matmul_nt, matmul_nt_pooled, nt_into_scoped};
+use neuroada::tensor::ops::Kernel;
 use neuroada::tensor::pool::KernelPool;
+use neuroada::tensor::quant::MatRef;
 use neuroada::tensor::Tensor;
 use neuroada::testing::{prop_check, PropConfig};
 use neuroada::util::rng::Rng;
@@ -100,11 +101,12 @@ fn planned_step_matches_legacy_merged_and_bypass() {
     }
 }
 
-/// ISSUE-5 property: the persistent-pool `matmul_nt` equals serial bitwise
-/// on odd shapes — m, n, k drawn so they are NOT multiples of the
-/// partition — and the scoped-spawn baseline kernel agrees with both.
+/// ISSUE-5/7 property: `gemm_nt` through every `Kernel` × pool width
+/// equals the serial Scalar oracle bitwise on odd shapes — m, n, k drawn
+/// so they are NOT multiples of the partition or the blocked panel.
 #[test]
 fn prop_pooled_matmul_bitwise_on_odd_shapes() {
+    let serial = KernelPool::serial();
     let pools: Vec<KernelPool> =
         [2usize, 3, 5, 7, 33].iter().map(|&t| KernelPool::new(t)).collect();
     prop_check(PropConfig { cases: 48, max_size: 23, base_seed: 0xF00D }, |rng, size| {
@@ -113,22 +115,20 @@ fn prop_pooled_matmul_bitwise_on_odd_shapes() {
         let k = 1 + rng.below(size.max(1) * 2);
         let a = Tensor::randn(&[m, k], 1.0, rng);
         let b = Tensor::randn(&[n, k], 1.0, rng);
-        let serial = matmul_nt(&a, &b);
-        for pool in &pools {
-            let par = matmul_nt_pooled(&a, &b, pool);
-            if serial.data != par.data {
-                return Err(format!(
-                    "m={m} n={n} k={k} threads={}: pooled not bitwise equal",
-                    pool.threads()
-                ));
-            }
-            let mut scoped = vec![0.0f32; m * n];
-            nt_into_scoped(&a.data, m, k, &b.data, n, &mut scoped, pool.threads());
-            if serial.data != scoped {
-                return Err(format!(
-                    "m={m} n={n} k={k} threads={}: scoped baseline not bitwise equal",
-                    pool.threads()
-                ));
+        let mut want = vec![0.0f32; m * n];
+        Kernel::Scalar.gemm_nt(&a.data, m, k, MatRef::F32(&b.data), n, &mut want, &serial);
+        let mut got = vec![0.0f32; m * n];
+        for pool in std::iter::once(&serial).chain(&pools) {
+            for kern in [Kernel::Scalar, Kernel::Blocked] {
+                got.fill(0.0);
+                kern.gemm_nt(&a.data, m, k, MatRef::F32(&b.data), n, &mut got, pool);
+                if want != got {
+                    return Err(format!(
+                        "m={m} n={n} k={k} threads={} {kern:?}: not bitwise equal to \
+                         the serial scalar oracle",
+                        pool.threads()
+                    ));
+                }
             }
         }
         Ok(())

@@ -1,0 +1,210 @@
+//! ISSUE-7 acceptance tests: quantized frozen backbone (bf16/int8) end to
+//! end through the `MatRef` weight view.
+//!
+//! 1. **Logit bound**: the planned batch forward over a quantized nano
+//!    backbone stays within the documented logit-deviation bound
+//!    (`BackboneDtype::logit_tol`) of the f32 forward, and the pooled
+//!    quantized forward is bitwise identical to the serial one (the
+//!    partition invariant is dtype-independent).
+//! 2. **Cls stability**: on a GLUE dev slice (enc-micro), quantized
+//!    `cls_predict` reproduces every f32 argmax whose winning margin
+//!    exceeds twice the documented bound — within the bound a flip is
+//!    arithmetically impossible, so any such flip means the kernels broke.
+//! 3. **Registry**: a registry built `with_dtype(int8)` holds ≤ 0.5× the
+//!    f32 resident bytes, and merging an adapter re-quantizes the merged
+//!    copy at the same dtype (no f32 copies accumulate at steady state).
+//! 4. **Decode**: the KV-cached step over a quantized backbone is bitwise
+//!    identical to a from-scratch replay at every position — the
+//!    dequantize-in-register row kernels must not perturb cache contents.
+
+use neuroada::bench::serve_bench::{randomize_zero_head, synth_adapter};
+use neuroada::config::presets;
+use neuroada::data::{cls_batch, example_stream, tasks, Split};
+use neuroada::model::init::init_params;
+use neuroada::model::{DecodeState, PlannedModel};
+use neuroada::serve::{AdapterRegistry, RegistryCfg};
+use neuroada::tensor::pool::KernelPool;
+use neuroada::tensor::quant::{BackboneDtype, QuantStore};
+use neuroada::util::nan_safe_argmax;
+use neuroada::util::rng::Rng;
+
+fn batch_inputs(cfg: &neuroada::config::ModelCfg, b: usize) -> (Vec<i32>, Vec<f32>, Vec<i32>) {
+    let tokens: Vec<i32> =
+        (0..b * cfg.seq).map(|i| 4 + ((i * 11) % (cfg.vocab - 4)) as i32).collect();
+    let pad = vec![1.0f32; b * cfg.seq];
+    let last: Vec<i32> = (0..b).map(|i| (cfg.seq - 1 - i % 3) as i32).collect();
+    (tokens, pad, last)
+}
+
+/// Acceptance: quantized-backbone logits within the documented bound of
+/// f32 on nano, serial ≡ pooled bitwise per dtype.
+#[test]
+fn quant_logits_within_documented_bound_on_nano() {
+    let cfg = presets::model("nano").unwrap();
+    let backbone = init_params(&cfg, &mut Rng::new(21));
+    let (tokens, pad, last) = batch_inputs(&cfg, 4);
+    let serial = KernelPool::serial();
+    let pool3 = KernelPool::new(3);
+    let want = PlannedModel::resolve(&cfg, &backbone, None, &serial)
+        .unwrap()
+        .lm_logits_at(&tokens, &pad, &last, 4)
+        .unwrap();
+    let scale = want.data.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+    for dtype in [BackboneDtype::Bf16, BackboneDtype::I8] {
+        let q = QuantStore::from_store(&backbone, dtype).unwrap();
+        let got = PlannedModel::resolve_from(&cfg, &q, None, &serial)
+            .unwrap()
+            .lm_logits_at(&tokens, &pad, &last, 4)
+            .unwrap();
+        let tol = dtype.logit_tol() * scale;
+        let diff = want.max_abs_diff(&got);
+        assert!(
+            diff <= tol,
+            "{}: logit deviation {diff} exceeds the documented bound {tol}",
+            dtype.name()
+        );
+        assert!(diff > 0.0, "{}: quantization must actually change something", dtype.name());
+        let pooled = PlannedModel::resolve_from(&cfg, &q, None, &pool3)
+            .unwrap()
+            .lm_logits_at(&tokens, &pad, &last, 4)
+            .unwrap();
+        assert_eq!(got.data, pooled.data, "{}: pooled must equal serial bitwise", dtype.name());
+    }
+}
+
+/// Acceptance: on a GLUE dev slice, every f32 prediction whose winning
+/// margin clears 2× the documented logit bound survives quantization
+/// (within the bound, per-class deviation ≤ tol each way cannot flip a
+/// margin > 2·tol). The slice must contain such examples — an all-tight
+/// slice would make the test vacuous.
+#[test]
+fn quant_cls_argmax_stable_on_glue_dev_slice() {
+    let cfg = presets::model("enc-micro").unwrap();
+    let mut backbone = init_params(&cfg, &mut Rng::new(5));
+    assert!(randomize_zero_head(&cfg, &mut backbone, 0xEAD).unwrap());
+    let task = tasks::by_name("glue-sst2").unwrap();
+    let n = 16;
+    let examples = example_stream(&task, Split::Val, 3, cfg.vocab, cfg.seq, n);
+    let cb = cls_batch(&examples, cfg.seq);
+    let serial = KernelPool::serial();
+    let plan = PlannedModel::resolve(&cfg, &backbone, None, &serial).unwrap();
+    let (logits, want) = plan.cls_predict(&cb.tokens, &cb.pad_mask, cb.b).unwrap();
+    let nc = cfg.n_classes;
+    let scale = logits.data.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+    for dtype in [BackboneDtype::Bf16, BackboneDtype::I8] {
+        let q = QuantStore::from_store(&backbone, dtype).unwrap();
+        let qplan = PlannedModel::resolve_from(&cfg, &q, None, &serial).unwrap();
+        let (qlogits, got) = qplan.cls_predict(&cb.tokens, &cb.pad_mask, cb.b).unwrap();
+        let tol = dtype.logit_tol() * scale;
+        let diff = logits.max_abs_diff(&qlogits);
+        assert!(diff <= tol, "{}: cls logit deviation {diff} > bound {tol}", dtype.name());
+        let mut checked = 0;
+        for bi in 0..cb.b {
+            let row = &logits.data[bi * nc..(bi + 1) * nc];
+            let top = row[want[bi]];
+            let margin = row
+                .iter()
+                .enumerate()
+                .filter(|(c, _)| *c != want[bi])
+                .map(|(_, &v)| top - v)
+                .fold(f32::INFINITY, f32::min);
+            if margin > 2.0 * tol {
+                assert_eq!(
+                    got[bi],
+                    want[bi],
+                    "{}: example {bi} flipped despite margin {margin} > 2·tol {tol}",
+                    dtype.name()
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > 0, "{}: no example cleared the margin — vacuous slice", dtype.name());
+    }
+}
+
+/// Acceptance: int8 registry residency ≤ 0.5× f32, and merges re-quantize.
+#[test]
+fn int8_registry_halves_bytes_and_requantizes_merges() {
+    let cfg = presets::model("nano").unwrap();
+    let backbone = init_params(&cfg, &mut Rng::new(9));
+    let f32_bytes = backbone.total_bytes();
+    let reg = AdapterRegistry::with_dtype(
+        cfg.clone(),
+        backbone.clone(),
+        RegistryCfg { merged_capacity: 2, promote_after: 1 },
+        BackboneDtype::I8,
+    )
+    .unwrap();
+    assert_eq!(reg.backbone_dtype(), BackboneDtype::I8);
+    assert!(
+        reg.backbone_bytes() * 2 <= f32_bytes,
+        "int8 backbone {} B must be <= 0.5x f32 {} B",
+        reg.backbone_bytes(),
+        f32_bytes
+    );
+    let deltas = synth_adapter(&cfg, &backbone, 1, 42).unwrap();
+    reg.register("a", deltas).unwrap();
+    let merged = reg.merge_now("a").unwrap();
+    assert_eq!(merged.dtype(), BackboneDtype::I8, "merged copies re-quantize at merge time");
+    // the merged quantized model actually serves
+    let serial = KernelPool::serial();
+    let (tokens, pad, last) = batch_inputs(&cfg, 2);
+    let logits = merged
+        .planned(&cfg, &serial)
+        .unwrap()
+        .lm_logits_at(&tokens, &pad, &last, 2)
+        .unwrap();
+    assert!(logits.data.iter().all(|v| v.is_finite()));
+    // ... and so does the bypass view over the quantized backbone
+    let bypass = reg.bypass("a").unwrap();
+    let blogits = bypass
+        .planned(&cfg, &serial)
+        .unwrap()
+        .lm_logits_at(&tokens, &pad, &last, 2)
+        .unwrap();
+    assert!(blogits.data.iter().all(|v| v.is_finite()));
+}
+
+/// Acceptance: the quantized KV-cached step is bitwise identical to a
+/// from-scratch replay at every position (same dots in the same order —
+/// a cache bug in the dequantizing row kernels would surface here).
+#[test]
+fn quant_decode_step_cached_matches_replay_bitwise() {
+    let cfg = presets::model("nano").unwrap();
+    let backbone = init_params(&cfg, &mut Rng::new(31));
+    let serial = KernelPool::serial();
+    let prompt: Vec<i32> = (0..12).map(|i| 4 + (i * 7) % 40).collect();
+    let gen = 4;
+    for dtype in [BackboneDtype::Bf16, BackboneDtype::I8] {
+        let q = QuantStore::from_store(&backbone, dtype).unwrap();
+        let plan = PlannedModel::resolve_from(&cfg, &q, None, &serial).unwrap();
+        // cached continuation
+        let mut st = DecodeState::new(&cfg);
+        let mut lg = Vec::new();
+        for &t in &prompt {
+            lg = plan.forward_step(t, &mut st).unwrap();
+        }
+        let mut toks = Vec::new();
+        let mut cached_logits = Vec::new();
+        for _ in 0..gen {
+            let next = nan_safe_argmax(lg.iter().copied()).unwrap() as i32;
+            toks.push(next);
+            lg = plan.forward_step(next, &mut st).unwrap();
+            cached_logits.push(lg.clone());
+        }
+        // from-scratch replay of the same token sequence
+        for g in 0..gen {
+            let mut rst = DecodeState::new(&cfg);
+            let mut rlg = Vec::new();
+            for &t in prompt.iter().chain(&toks[..=g]) {
+                rlg = plan.forward_step(t, &mut rst).unwrap();
+            }
+            assert_eq!(
+                rlg,
+                cached_logits[g],
+                "{}: replay logits diverge from cached at generated position {g}",
+                dtype.name()
+            );
+        }
+    }
+}
