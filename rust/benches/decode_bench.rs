@@ -7,6 +7,15 @@
 //!   decode/quant-*     (with --backbone-dtype bf16|int8) the cached step
 //!                      over the quantized backbone, gated on logit bound +
 //!                      cached-vs-replay token parity
+//!   decode/paged       the cached step through the block-paged KV pool
+//!                      (bitwise parity with the contiguous state asserted)
+//!   decode/paged s=4   4 concurrent paged streams sharing prompt pages
+//!   decode/contig s=4  the same 4 streams on contiguous per-slot states
+//!
+//! Plus the shared-prefix admission simulation: paged streams vs
+//! worst-case contiguous slots at a fixed 32-page budget (gated ≥ 4× on
+//! micro, alongside the paged-vs-contiguous step-cost floor
+//! `NEUROADA_PAGED_FLOOR`, default 1.0).
 //!
 //! Writes `BENCH_decode.json` (`BENCH_decode_q.json` at bf16,
 //! `BENCH_decode_q8.json` at int8) next to the working directory for the
@@ -101,6 +110,48 @@ fn main() -> anyhow::Result<()> {
                 report.step_mt_speedup, report.pool_workers
             );
         }
+    }
+    // paged-KV acceptance gates (micro): (1) the page-table indirection
+    // must not tax the single-stream step — paged ≥ NEUROADA_PAGED_FLOOR ×
+    // contiguous throughput (default 1.0; bitwise parity was asserted
+    // inside run() before timing); (2) at the fixed page budget,
+    // shared-prefix admission must sustain ≥ 4× the contiguous slots, and
+    // strictly more in absolute count.
+    if size == "micro" {
+        let paged_floor: f64 = std::env::var("NEUROADA_PAGED_FLOOR")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1.0);
+        anyhow::ensure!(
+            report.paged_step_ratio >= paged_floor,
+            "paged step is {:.3}× contiguous on micro (floor {paged_floor}: paged {:.4} \
+             ms/tok vs contiguous {:.4} ms/tok)",
+            report.paged_step_ratio,
+            report.paged_step_ms,
+            report.cached_step_ms
+        );
+        println!(
+            "floor OK: paged step = {:.2}× contiguous on micro (floor {paged_floor})",
+            report.paged_step_ratio
+        );
+        anyhow::ensure!(
+            report.sim_paged_streams > report.sim_contig_slots
+                && report.shared_admission_multiplier >= 4.0,
+            "shared-prefix admission {:.1}× below the 4× floor ({} paged streams vs {} \
+             contiguous slots at {} pages)",
+            report.shared_admission_multiplier,
+            report.sim_paged_streams,
+            report.sim_contig_slots,
+            report.sim_budget_pages
+        );
+        println!(
+            "floor OK: {} shared-prefix paged streams vs {} contiguous slots at {} pages \
+             ({:.1}× ≥ 4×)",
+            report.sim_paged_streams,
+            report.sim_contig_slots,
+            report.sim_budget_pages,
+            report.shared_admission_multiplier
+        );
     }
     Ok(())
 }

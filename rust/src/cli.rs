@@ -73,6 +73,17 @@ impl Args {
         }
     }
 
+    /// Like [`Args::opt_usize`] but rejects 0 with a typed error — for
+    /// flags where zero can never mean anything (`--slots 0` used to be
+    /// silently clamped to 1) as opposed to a "disabled/unbounded"
+    /// sentinel like `--quota 0` or `--kv-pages 0`.
+    pub fn opt_nonzero_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        match self.opt_usize(key)? {
+            Some(0) => Err(format!("--{key}: must be >= 1 (got 0)")),
+            v => Ok(v),
+        }
+    }
+
     pub fn opt_f64(&self, key: &str) -> Result<Option<f64>, String> {
         match self.opt(key) {
             None => Ok(None),
@@ -106,7 +117,7 @@ SUBCOMMANDS
                     [--workers N] [--queue 256] [--max-batch B]
                     [--wait-ms 10] [--capacity 2] [--promote 3] [--host]
                     [--threads N] [--generate] [--max-new 16] [--slots 8]
-                    [--quota N] [--temp T] [--top-k K]
+                    [--kv-pages N] [--quota N] [--temp T] [--top-k K]
                     [--backbone-dtype f32|bf16|int8]
                     [--cls] [--task glue-sst2]
                     [--metrics-addr HOST:PORT] [--metrics-out FILE]
@@ -128,7 +139,12 @@ SUBCOMMANDS
                     NEUROADA_THREADS or serial; --backbone-dtype bf16|int8
                     holds the frozen backbone (and every merged copy)
                     quantized, dequantizing in-register on the host path —
-                    adapters stay f32, resident bytes drop ~2x/4x.
+                    adapters stay f32, resident bytes drop ~2x/4x;
+                    --kv-pages N caps the block-paged KV pool at N pages
+                    (0 = unbounded) — under a finite budget the scheduler
+                    shares prompt-prefix pages copy-on-write across slots
+                    and spills/restores the newest stream instead of
+                    rejecting; --slots must be >= 1.
                     Encoder sizes, e.g.
                     --size enc-micro [--cls], serve a GLUE task's dev set
                     as classification requests on both weight views and
@@ -172,5 +188,19 @@ mod tests {
     fn bad_numbers_error() {
         let a = args(&["train", "--steps", "abc"]);
         assert!(a.opt_usize("steps").is_err());
+    }
+
+    #[test]
+    fn zero_rejected_where_nonzero_required() {
+        // `serve --slots 0` must be a typed CLI error, not a silent clamp
+        let a = args(&["serve", "--slots", "0"]);
+        let err = a.opt_nonzero_usize("slots").unwrap_err();
+        assert!(err.contains("--slots"), "error names the flag: {err}");
+        assert!(err.contains(">= 1"), "error states the bound: {err}");
+        // valid and absent values pass through unchanged
+        let a = args(&["serve", "--slots", "8"]);
+        assert_eq!(a.opt_nonzero_usize("slots").unwrap(), Some(8));
+        let a = args(&["serve"]);
+        assert_eq!(a.opt_nonzero_usize("slots").unwrap(), None);
     }
 }

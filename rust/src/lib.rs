@@ -22,8 +22,11 @@
 //!                     ([`model::PlannedModel`]: resolve names once, borrow
 //!                     weights, row-partitioned threaded matmuls — see
 //!                     `docs/performance.md`), with a KV-cached incremental
-//!                     decode path ([`model::DecodeState`]) for streaming
-//!                     generation, greedy or sampled ([`model::SampleCfg`]).
+//!                     decode path for streaming generation, greedy or
+//!                     sampled ([`model::SampleCfg`]), over either a
+//!                     contiguous [`model::DecodeState`] or the block-paged
+//!                     [`model::KvPool`] with copy-on-write prefix sharing
+//!                     ([`model::kvpool`]).
 //! * [`runtime`]     — PJRT artifact registry + device-resident train state.
 //! * [`data`]        — synthetic corpus + the 23 downstream task generators.
 //! * [`train`]       — trainer loop, LR schedules, metrics, checkpoints.

@@ -402,7 +402,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .opt_usize("workers")
             .map_err(|e| anyhow!(e))?
             .unwrap_or_else(Pool::default_size),
-        max_slots: args.opt_usize("slots").map_err(|e| anyhow!(e))?.unwrap_or(8).max(1),
+        // a zero slot count is a configuration error, not "clamp to 1"
+        max_slots: args.opt_nonzero_usize("slots").map_err(|e| anyhow!(e))?.unwrap_or(8),
+        // 0 = unbounded pool; a finite budget absorbs exhaustion by
+        // spilling/restoring slots instead of rejecting at admission
+        kv_pages: args.opt_usize("kv-pages").map_err(|e| anyhow!(e))?.unwrap_or(0),
         adapter_quota: args.opt_usize("quota").map_err(|e| anyhow!(e))?.unwrap_or(0),
         // 0 = NEUROADA_THREADS env fallback, else serial (resolved at start)
         threads: args.opt_usize("threads").map_err(|e| anyhow!(e))?.unwrap_or(0),

@@ -22,8 +22,17 @@
 //! [`Rng`] for deterministic replay; temperature 0 reduces to greedy
 //! exactly.
 //!
-//! KV memory per decode slot (the serving planner's formula, see
-//! `docs/serving.md`): `2 · n_layers · seq · d_model · 4` bytes.
+//! KV memory: a contiguous [`DecodeState`] pre-allocates the worst case —
+//! `2 · n_layers · seq · d_model · 4` bytes per slot, regardless of how
+//! many positions are actually cached. The serving decode path instead
+//! stores KV in the block-paged pool (`model::kvpool`): pages of `P`
+//! positions (`P = 16` by default; `2 · n_layers · P · d_model · 4` bytes
+//! each), so a stream holding `t` tokens keeps `ceil(t / P)` pages
+//! resident, matching prompt prefixes share pages copy-on-write across
+//! streams, and under a finite page budget (`serve --kv-pages`) the
+//! scheduler spills/restores whole streams instead of rejecting. Both
+//! layouts run the same step arithmetic ([`PlannedModel::forward_step_kv`])
+//! and are bit-identical; see `docs/serving.md` for formulas and knobs.
 
 use super::{PlannedModel, RefModel};
 use crate::config::ModelCfg;

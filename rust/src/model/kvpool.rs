@@ -1,0 +1,1019 @@
+//! Block-paged KV cache pool with copy-on-write prefix sharing and
+//! spill/restore preemption — the vLLM-style PagedAttention memory layer
+//! for high-concurrency streaming decode.
+//!
+//! A [`KvPool`] owns a budget of fixed-size **pages**; each page holds
+//! [`KvPool::page_positions`] positions × `d_model` for K and V across
+//! every layer (`2 · n_layers · P · d_model · 4` bytes). A [`PagedKv`] is
+//! one sequence's cache: a page table (`Vec<Arc<PageBuf>>`) instead of one
+//! contiguous allocation, so a slot's resident bytes track its *actual*
+//! length in page granularity, not the worst-case `cfg.seq`.
+//!
+//! Pages are refcounted (`Arc`). Sharing works in two directions:
+//!
+//! * **Prefix sharing** — a [`PrefixCache`] (hash-trie over whole prompt
+//!   token blocks, keyed by the serving weight view) maps a prompt prefix
+//!   to the pages that already hold its K/V. A new request whose prompt
+//!   matches attaches those pages instead of recomputing the prefix;
+//!   only the tokens past the match (always at least the last prompt
+//!   token, so first-token logits exist) are prefilled.
+//! * **Copy-on-write** — appending to a page with `strong_count > 1`
+//!   (shared with another stream or pinned by the prefix cache) first
+//!   forks a private copy; full prefix pages are never written again, so
+//!   only the *partial tail page* is ever forked, on the first divergent
+//!   write. K/V rows are plain f32 copies, so a forked or restored page is
+//!   bitwise identical to the original — paged decode produces logits
+//!   bit-identical to contiguous decode (enforced by the tests below).
+//!
+//! Under pool exhaustion a stream's pages can be **spilled** to a
+//! contiguous [`SpilledKv`] buffer (freeing its pages for other streams)
+//! and later **restored**; the scheduler uses this for swap-based
+//! backpressure instead of rejecting at admission (`serve::scheduler`).
+//!
+//! The [`KvCache`] trait abstracts row access so
+//! `PlannedModel::forward_step_kv` runs unchanged (same per-position dot
+//! order — the bitwise-parity anchor) over contiguous [`DecodeState`] and
+//! [`PagedKv`] alike, with static dispatch.
+
+use super::DecodeState;
+use crate::config::ModelCfg;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Default page size (positions per page) used by serving and benches.
+/// 16 positions keeps per-page bytes small enough that short streams
+/// waste little and large enough that page-table walks stay cheap.
+pub const DEFAULT_PAGE_POSITIONS: usize = 16;
+
+/// Uniform row access over a KV cache, so the incremental decode step is
+/// generic (static dispatch) over contiguous and paged storage. The
+/// implementation must hand back rows bit-identical to what was written —
+/// the step's per-position arithmetic order never changes with the
+/// storage layout, which is what keeps paged ≡ contiguous bitwise.
+pub trait KvCache {
+    /// Positions cached so far.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Maximum positions this cache can hold.
+    fn capacity(&self) -> usize;
+    /// Layers this cache was built for.
+    fn n_layers(&self) -> usize;
+    /// Row width (`d_model`) this cache was built for (0 when layerless).
+    fn width(&self) -> usize;
+    /// Make position `len()` writable in every layer: allocate the next
+    /// page and/or fork a shared tail page. Contiguous caches are
+    /// pre-allocated and never fail; paged caches fail on pool
+    /// exhaustion with a [`PoolExhausted`]-carrying error.
+    fn prepare_append(&mut self) -> Result<()>;
+    /// Cached K row for `pos` in `layer` (`pos < len()` or the row being
+    /// appended after [`KvCache::prepare_append`]).
+    fn k_row(&self, layer: usize, pos: usize) -> &[f32];
+    /// Cached V row, same addressing as [`KvCache::k_row`].
+    fn v_row(&self, layer: usize, pos: usize) -> &[f32];
+    /// Write the K and V rows for `pos` (= `len()`, after
+    /// [`KvCache::prepare_append`]) in `layer`.
+    fn write_kv(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]);
+    /// Commit `len` positions as valid.
+    fn set_len(&mut self, len: usize);
+}
+
+impl KvCache for DecodeState {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn n_layers(&self) -> usize {
+        self.k.len()
+    }
+
+    fn width(&self) -> usize {
+        self.k.first().map_or(0, |t| t.shape[1])
+    }
+
+    fn prepare_append(&mut self) -> Result<()> {
+        Ok(()) // contiguous storage is fully pre-allocated
+    }
+
+    fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
+        self.k[layer].row(pos)
+    }
+
+    fn v_row(&self, layer: usize, pos: usize) -> &[f32] {
+        self.v[layer].row(pos)
+    }
+
+    fn write_kv(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.k[layer].row_mut(pos).copy_from_slice(k);
+        self.v[layer].row_mut(pos).copy_from_slice(v);
+    }
+
+    fn set_len(&mut self, len: usize) {
+        self.len = len;
+    }
+}
+
+/// Typed pool-exhaustion marker: every page in the budget is in use. The
+/// scheduler downcasts for this (`anyhow::Error::downcast_ref`) to route
+/// to eviction/preemption instead of treating it as an internal error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolExhausted;
+
+impl std::fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "kv page pool exhausted")
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+/// Lifetime + instantaneous pool counters, snapshotted by
+/// [`KvPool::stats`] for `serve::metrics`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KvPoolStats {
+    /// Page budget (0 = unbounded).
+    pub budget_pages: usize,
+    /// Pages currently allocated (live `PageBuf`s).
+    pub in_use: usize,
+    /// High-water mark of `in_use`.
+    pub peak_in_use: usize,
+    /// Distinct pages currently referenced by more than one holder
+    /// (streams and/or the prefix cache) — set by the owner via
+    /// [`KvPool::set_shared`], not derived here.
+    pub shared: usize,
+    /// Lifetime page allocations (free-list reuses included).
+    pub allocated: u64,
+    /// Lifetime copy-on-write tail-page forks.
+    pub cow_forks: u64,
+    /// Lifetime prefix-cache attach hits.
+    pub prefix_hits: u64,
+    /// Lifetime spill-outs (slot preemptions).
+    pub preemptions: u64,
+    /// Lifetime restores of spilled slots.
+    pub restores: u64,
+    /// Bytes of one page.
+    pub page_bytes: u64,
+    /// Positions per page.
+    pub page_positions: usize,
+}
+
+impl KvPoolStats {
+    /// Bytes held by live pages right now.
+    pub fn resident_bytes(&self) -> u64 {
+        self.in_use as u64 * self.page_bytes
+    }
+}
+
+#[derive(Default)]
+struct PoolInner {
+    budget: usize,
+    in_use: usize,
+    peak_in_use: usize,
+    shared: usize,
+    allocated: u64,
+    cow_forks: u64,
+    prefix_hits: u64,
+    preemptions: u64,
+    restores: u64,
+    /// Recycled page buffers — the free list. Returned here by
+    /// `PageBuf::drop`, reused by `try_alloc`.
+    free: Vec<Vec<f32>>,
+}
+
+/// One page's storage. Held as `Arc<PageBuf>`; dropping the last `Arc`
+/// returns the buffer to its pool's free list and releases its budget
+/// share. Writes go through `Arc::get_mut`, so a page is only ever
+/// mutated while uniquely owned — sharing is always copy-on-write.
+pub struct PageBuf {
+    data: Vec<f32>,
+    home: Arc<Mutex<PoolInner>>,
+}
+
+impl Drop for PageBuf {
+    fn drop(&mut self) {
+        let mut inner = self.home.lock().unwrap();
+        inner.in_use -= 1;
+        inner.free.push(std::mem::take(&mut self.data));
+    }
+}
+
+/// A budgeted pool of fixed-size KV pages for one model shape. Cloning
+/// shares the pool (handles are `Arc`-backed).
+#[derive(Clone)]
+pub struct KvPool {
+    n_layers: usize,
+    width: usize,
+    page_positions: usize,
+    page_elems: usize,
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl KvPool {
+    /// Pool for `cfg`'s shape with `page_positions` positions per page and
+    /// a budget of `budget_pages` live pages (0 = unbounded).
+    pub fn new(cfg: &ModelCfg, page_positions: usize, budget_pages: usize) -> KvPool {
+        let page_positions = page_positions.max(1);
+        KvPool {
+            n_layers: cfg.n_layers,
+            width: cfg.d_model,
+            page_positions,
+            page_elems: 2 * cfg.n_layers * page_positions * cfg.d_model,
+            inner: Arc::new(Mutex::new(PoolInner {
+                budget: budget_pages,
+                ..PoolInner::default()
+            })),
+        }
+    }
+
+    pub fn page_positions(&self) -> usize {
+        self.page_positions
+    }
+
+    /// Bytes of one page: `2 · n_layers · page_positions · d_model · 4`.
+    pub fn page_bytes(&self) -> u64 {
+        self.page_elems as u64 * 4
+    }
+
+    /// Pages needed to hold `positions` rows.
+    pub fn pages_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.page_positions)
+    }
+
+    /// Pages still allocatable before the budget is hit (`None` when
+    /// unbounded). A scheduling hint — allocation is [`KvPool::try_alloc`].
+    pub fn available(&self) -> Option<usize> {
+        let inner = self.inner.lock().unwrap();
+        match inner.budget {
+            0 => None,
+            b => Some(b.saturating_sub(inner.in_use)),
+        }
+    }
+
+    /// Allocate one zeroed page, reusing a free-list buffer when one is
+    /// available. `None` when the budget is exhausted — the caller
+    /// evicts/preempts and retries, or spills.
+    pub fn try_alloc(&self) -> Option<Arc<PageBuf>> {
+        let mut data = {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.budget > 0 && inner.in_use >= inner.budget {
+                return None;
+            }
+            inner.in_use += 1;
+            inner.allocated += 1;
+            inner.peak_in_use = inner.peak_in_use.max(inner.in_use);
+            inner.free.pop().unwrap_or_default()
+        };
+        data.clear();
+        data.resize(self.page_elems, 0.0);
+        Some(Arc::new(PageBuf { data, home: self.inner.clone() }))
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        let inner = self.inner.lock().unwrap();
+        KvPoolStats {
+            budget_pages: inner.budget,
+            in_use: inner.in_use,
+            peak_in_use: inner.peak_in_use,
+            shared: inner.shared,
+            allocated: inner.allocated,
+            cow_forks: inner.cow_forks,
+            prefix_hits: inner.prefix_hits,
+            preemptions: inner.preemptions,
+            restores: inner.restores,
+            page_bytes: self.page_bytes(),
+            page_positions: self.page_positions,
+        }
+    }
+
+    /// Publish the shared-pages gauge (the owner counts distinct
+    /// multi-referenced pages across its streams per iteration).
+    pub fn set_shared(&self, n: usize) {
+        self.inner.lock().unwrap().shared = n;
+    }
+
+    fn note_cow(&self) {
+        self.inner.lock().unwrap().cow_forks += 1;
+    }
+
+    fn note_prefix_hit(&self) {
+        self.inner.lock().unwrap().prefix_hits += 1;
+    }
+
+    fn note_preemption(&self) {
+        self.inner.lock().unwrap().preemptions += 1;
+    }
+
+    fn note_restore(&self) {
+        self.inner.lock().unwrap().restores += 1;
+    }
+
+    /// Row offset of (`layer`, K/V `which`, page-local row `r`) within a
+    /// page buffer.
+    fn row_offset(&self, layer: usize, which: usize, r: usize) -> usize {
+        ((layer * 2 + which) * self.page_positions + r) * self.width
+    }
+}
+
+/// One sequence's paged KV cache: a page table over a shared [`KvPool`].
+/// Cloning shares every page (`Arc` bumps — O(pages), no row copies); the
+/// clone forks its tail page on its first divergent append. This is what
+/// makes spinning a new stream off a prefilled context cheap compared to
+/// deep-copying a contiguous [`DecodeState`].
+#[derive(Clone)]
+pub struct PagedKv {
+    pool: KvPool,
+    pages: Vec<Arc<PageBuf>>,
+    len: usize,
+    capacity: usize,
+}
+
+impl PagedKv {
+    /// Empty cache able to grow to `capacity` positions. Allocates no
+    /// pages until the first append.
+    pub fn new(pool: &KvPool, capacity: usize) -> PagedKv {
+        PagedKv { pool: pool.clone(), pages: Vec::new(), len: 0, capacity }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.capacity - self.len
+    }
+
+    /// Pages currently attached (shared pages counted once here; they may
+    /// also be attached to other streams).
+    pub fn pages(&self) -> &[Arc<PageBuf>] {
+        &self.pages
+    }
+
+    /// Bytes of the pages this stream references (shared pages included).
+    pub fn kv_bytes(&self) -> u64 {
+        self.pages.len() as u64 * self.pool.page_bytes()
+    }
+
+    /// Make the next position (`len`) writable: allocate the next page at
+    /// a page boundary, or copy-on-write-fork a shared tail page.
+    pub fn ensure_next(&mut self) -> Result<(), PoolExhausted> {
+        if self.len >= self.capacity {
+            return Ok(()); // let the step surface its capacity error
+        }
+        let pg = self.len / self.pool.page_positions;
+        if pg == self.pages.len() {
+            self.pages.push(self.pool.try_alloc().ok_or(PoolExhausted)?);
+            return Ok(());
+        }
+        debug_assert_eq!(pg, self.pages.len() - 1, "appends only touch the tail page");
+        if Arc::strong_count(&self.pages[pg]) > 1 {
+            // shared tail (another stream or the prefix cache holds it):
+            // fork a private copy — the one copy-on-write in the system
+            let mut fresh = self.pool.try_alloc().ok_or(PoolExhausted)?;
+            Arc::get_mut(&mut fresh)
+                .expect("freshly allocated page is unique")
+                .data
+                .copy_from_slice(&self.pages[pg].data);
+            self.pages[pg] = fresh;
+            self.pool.note_cow();
+        }
+        Ok(())
+    }
+
+    /// Attach shared `pages` covering the first `positions` rows (a prefix
+    /// cache hit). Only valid on an empty cache.
+    pub fn attach_prefix(&mut self, pages: &[Arc<PageBuf>], positions: usize) -> Result<()> {
+        anyhow::ensure!(self.len == 0 && self.pages.is_empty(), "attach_prefix on a used cache");
+        anyhow::ensure!(
+            positions <= pages.len() * self.pool.page_positions && positions <= self.capacity,
+            "prefix of {positions} positions does not fit {} pages (capacity {})",
+            pages.len(),
+            self.capacity
+        );
+        self.pages = pages.to_vec();
+        self.len = positions;
+        Ok(())
+    }
+
+    fn row(&self, layer: usize, which: usize, pos: usize) -> &[f32] {
+        let p = self.pool.page_positions;
+        let off = self.pool.row_offset(layer, which, pos % p);
+        &self.pages[pos / p].data[off..off + self.pool.width]
+    }
+
+    fn row_mut(&mut self, layer: usize, which: usize, pos: usize) -> &mut [f32] {
+        let p = self.pool.page_positions;
+        let off = self.pool.row_offset(layer, which, pos % p);
+        let page = Arc::get_mut(&mut self.pages[pos / p])
+            .expect("writable page is uniquely owned (ensure_next forks shared tails)");
+        &mut page.data[off..off + self.pool.width]
+    }
+
+    /// Serialize the valid rows to a contiguous spill buffer and release
+    /// every page (preemption swap-out). The cache is empty afterwards.
+    pub fn spill(&mut self) -> SpilledKv {
+        let (l, d) = (self.pool.n_layers, self.pool.width);
+        let mut rows = vec![0.0f32; 2 * l * self.len * d];
+        for layer in 0..l {
+            for which in 0..2 {
+                for pos in 0..self.len {
+                    let dst = ((layer * 2 + which) * self.len + pos) * d;
+                    rows[dst..dst + d].copy_from_slice(self.row(layer, which, pos));
+                }
+            }
+        }
+        let sp = SpilledKv { rows, len: self.len, n_layers: l, width: d };
+        self.pages.clear();
+        self.len = 0;
+        self.pool.note_preemption();
+        sp
+    }
+
+    /// Re-allocate pages and copy the spilled rows back (swap-in). Rows
+    /// are plain f32 copies, so the restored cache is bitwise identical
+    /// to the pre-spill one. On exhaustion the partially re-allocated
+    /// pages are released and the cache stays empty (retry later).
+    pub fn restore(&mut self, sp: &SpilledKv) -> Result<(), PoolExhausted> {
+        assert!(self.len == 0 && self.pages.is_empty(), "restore into a used cache");
+        assert_eq!((sp.n_layers, sp.width), (self.pool.n_layers, self.pool.width));
+        let d = self.pool.width;
+        for _ in 0..self.pool.pages_for(sp.len) {
+            match self.pool.try_alloc() {
+                Some(pg) => self.pages.push(pg),
+                None => {
+                    self.pages.clear();
+                    return Err(PoolExhausted);
+                }
+            }
+        }
+        for layer in 0..sp.n_layers {
+            for which in 0..2 {
+                for pos in 0..sp.len {
+                    let src = ((layer * 2 + which) * sp.len + pos) * d;
+                    self.row_mut(layer, which, pos).copy_from_slice(&sp.rows[src..src + d]);
+                }
+            }
+        }
+        self.len = sp.len;
+        self.pool.note_restore();
+        Ok(())
+    }
+}
+
+impl KvCache for PagedKv {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn n_layers(&self) -> usize {
+        self.pool.n_layers
+    }
+
+    fn width(&self) -> usize {
+        self.pool.width
+    }
+
+    fn prepare_append(&mut self) -> Result<()> {
+        self.ensure_next().map_err(anyhow::Error::new)
+    }
+
+    fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
+        self.row(layer, 0, pos)
+    }
+
+    fn v_row(&self, layer: usize, pos: usize) -> &[f32] {
+        self.row(layer, 1, pos)
+    }
+
+    fn write_kv(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.row_mut(layer, 0, pos).copy_from_slice(k);
+        self.row_mut(layer, 1, pos).copy_from_slice(v);
+    }
+
+    fn set_len(&mut self, len: usize) {
+        self.len = len;
+    }
+}
+
+/// A preempted stream's KV rows, contiguous in host memory (swap space).
+/// `2 · n_layers · len · d_model` f32s — exactly the valid rows, no page
+/// padding.
+pub struct SpilledKv {
+    rows: Vec<f32>,
+    len: usize,
+    n_layers: usize,
+    width: usize,
+}
+
+impl SpilledKv {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.rows.len() as u64 * 4
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv(h: u64, bytes: &[u8]) -> u64 {
+    bytes.iter().fold(h, |h, &b| (h ^ b as u64).wrapping_mul(FNV_PRIME))
+}
+
+struct PrefixNode {
+    /// Exact tokens this node covers (hash collisions are verified away).
+    tokens: Vec<i32>,
+    /// Pages holding those tokens' K/V: `pages_for(tokens.len())` strong
+    /// refs — pinning them keeps donors' tail appends copy-on-write.
+    pages: Vec<Arc<PageBuf>>,
+    /// Insertion tick for LRU-ish eviction.
+    tick: u64,
+}
+
+/// Prompt-prefix → KV-pages index: a hash-trie over whole token blocks
+/// (one node per full-block prefix, keyed by an FNV-1a chain over the
+/// weight-view key and the block's tokens, plus one node for the full
+/// prompt when it ends mid-block). Nodes hold *strong* page refs, so a
+/// cached prefix stays resident until [`PrefixCache::evict_lru`] /
+/// [`PrefixCache::clear`] — and any stream appending to a cached tail
+/// page forks it first (copy-on-write) instead of corrupting the cache.
+pub struct PrefixCache {
+    nodes: HashMap<u64, Vec<PrefixNode>>,
+    page_positions: usize,
+    max_nodes: usize,
+    entries: usize,
+    tick: u64,
+}
+
+impl PrefixCache {
+    /// `max_nodes` bounds resident index size (and, with a finite pool
+    /// budget, how many pages the cache may pin before the scheduler
+    /// starts evicting under pressure).
+    pub fn new(page_positions: usize, max_nodes: usize) -> PrefixCache {
+        PrefixCache {
+            nodes: HashMap::new(),
+            page_positions: page_positions.max(1),
+            max_nodes: max_nodes.max(1),
+            entries: 0,
+            tick: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries == 0
+    }
+
+    /// Distinct pages currently pinned by the cache.
+    pub fn pinned_pages(&self) -> usize {
+        let mut seen: Vec<*const PageBuf> = Vec::new();
+        for bucket in self.nodes.values() {
+            for node in bucket {
+                for pg in &node.pages {
+                    let p = Arc::as_ptr(pg);
+                    if !seen.contains(&p) {
+                        seen.push(p);
+                    }
+                }
+            }
+        }
+        seen.len()
+    }
+
+    fn key(model: &str, tokens: &[i32]) -> u64 {
+        let mut h = fnv(FNV_OFFSET, model.as_bytes());
+        for t in tokens {
+            h = fnv(h, &t.to_le_bytes());
+        }
+        h
+    }
+
+    /// Register a freshly prefilled prompt: one node per full-block
+    /// prefix plus one for the whole prompt when it ends mid-block.
+    /// `pages` must cover `prompt` (the prefiller's page table).
+    pub fn insert(&mut self, model: &str, prompt: &[i32], pages: &[Arc<PageBuf>]) {
+        let p = self.page_positions;
+        if prompt.is_empty() || pages.len() * p < prompt.len() {
+            return;
+        }
+        let mut lens: Vec<usize> = (1..=prompt.len() / p).map(|b| b * p).collect();
+        if prompt.len() % p != 0 {
+            lens.push(prompt.len());
+        }
+        for n in lens {
+            self.tick += 1;
+            let tick = self.tick;
+            let key = Self::key(model, &prompt[..n]);
+            let bucket = self.nodes.entry(key).or_default();
+            match bucket.iter_mut().find(|e| e.tokens == prompt[..n]) {
+                Some(node) => node.tick = tick, // refresh, keep first pages
+                None => {
+                    bucket.push(PrefixNode {
+                        tokens: prompt[..n].to_vec(),
+                        pages: pages[..n.div_ceil(p)].to_vec(),
+                        tick,
+                    });
+                    self.entries += 1;
+                }
+            }
+        }
+        while self.entries > self.max_nodes {
+            self.evict_lru();
+        }
+    }
+
+    /// Longest cached prefix of `prompt` under `model`, capped at
+    /// `prompt.len() - 1` so at least one prompt token is recomputed (the
+    /// first-token logits must exist). Returns the covered position count
+    /// and the pages to attach. Records a pool prefix-hit on success.
+    pub fn lookup(
+        &mut self,
+        pool: &KvPool,
+        model: &str,
+        prompt: &[i32],
+    ) -> Option<(usize, Vec<Arc<PageBuf>>)> {
+        let p = self.page_positions;
+        let cap = prompt.len().checked_sub(1)?;
+        // candidate match lengths, longest first: the full prompt (tail
+        // node of an identical prompt), then descending full-block counts
+        let mut cands: Vec<usize> = vec![prompt.len()];
+        let mut b = cap / p;
+        while b > 0 {
+            cands.push(b * p);
+            b -= 1;
+        }
+        for n in cands {
+            let key = Self::key(model, &prompt[..n]);
+            let Some(bucket) = self.nodes.get_mut(&key) else { continue };
+            let Some(node) = bucket.iter_mut().find(|e| e.tokens == prompt[..n]) else {
+                continue;
+            };
+            self.tick += 1;
+            node.tick = self.tick;
+            let m = n.min(cap);
+            let pages = node.pages[..m.div_ceil(p)].to_vec();
+            pool.note_prefix_hit();
+            return Some((m, pages));
+        }
+        None
+    }
+
+    /// Drop the least-recently-used node, releasing its page pins.
+    /// Returns false when the cache is already empty.
+    pub fn evict_lru(&mut self) -> bool {
+        let mut oldest: Option<(u64, usize, u64)> = None; // (key, idx, tick)
+        for (&key, bucket) in &self.nodes {
+            for (i, node) in bucket.iter().enumerate() {
+                match oldest {
+                    Some((_, _, t)) if node.tick >= t => {}
+                    _ => oldest = Some((key, i, node.tick)),
+                }
+            }
+        }
+        let Some((key, i, _)) = oldest else { return false };
+        let bucket = self.nodes.get_mut(&key).unwrap();
+        bucket.remove(i);
+        if bucket.is_empty() {
+            self.nodes.remove(&key);
+        }
+        self.entries -= 1;
+        true
+    }
+
+    /// Drop every node (releases all page pins).
+    pub fn clear(&mut self) {
+        self.nodes.clear();
+        self.entries = 0;
+    }
+}
+
+/// Distinct pages referenced by more than one holder across `streams`
+/// (other streams or the prefix cache): the shared-pages gauge. O(total
+/// pages) with a pointer scan — decode slot counts are small.
+pub fn shared_pages(streams: &[&PagedKv]) -> usize {
+    let mut seen: Vec<*const PageBuf> = Vec::new();
+    let mut shared: Vec<*const PageBuf> = Vec::new();
+    for s in streams {
+        for pg in s.pages() {
+            let p = Arc::as_ptr(pg);
+            // strong_count > streams' own single ref ⇒ cache or another
+            // stream also holds it; intra-scan dedup catches two streams
+            if (seen.contains(&p) || Arc::strong_count(pg) > 1) && !shared.contains(&p) {
+                shared.push(p);
+            }
+            if !seen.contains(&p) {
+                seen.push(p);
+            }
+        }
+    }
+    shared.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::init::init_params;
+    use crate::model::{DeltaOverlay, PlannedModel, RefModel};
+    use crate::util::nan_safe_argmax;
+    use crate::util::rng::Rng;
+
+    fn greedy_pick(logits: &[f32]) -> i32 {
+        nan_safe_argmax(logits.iter().copied()).unwrap_or(0) as i32
+    }
+
+    #[test]
+    fn page_math_budget_and_free_list() {
+        let cfg = presets::model("nano").unwrap();
+        let pool = KvPool::new(&cfg, 4, 2);
+        assert_eq!(pool.page_positions(), 4);
+        assert_eq!(pool.page_bytes(), (2 * cfg.n_layers * 4 * cfg.d_model) as u64 * 4);
+        assert_eq!(pool.pages_for(0), 0);
+        assert_eq!(pool.pages_for(1), 1);
+        assert_eq!(pool.pages_for(4), 1);
+        assert_eq!(pool.pages_for(5), 2);
+        assert_eq!(pool.available(), Some(2));
+        let a = pool.try_alloc().unwrap();
+        let b = pool.try_alloc().unwrap();
+        assert!(pool.try_alloc().is_none(), "budget of 2 pages is exhausted");
+        assert_eq!(pool.available(), Some(0));
+        assert_eq!(pool.stats().in_use, 2);
+        assert_eq!(pool.stats().resident_bytes(), 2 * pool.page_bytes());
+        drop(a);
+        assert_eq!(pool.available(), Some(1));
+        let c = pool.try_alloc().unwrap(); // free-list reuse
+        drop(b);
+        drop(c);
+        let s = pool.stats();
+        assert_eq!(s.in_use, 0);
+        assert_eq!(s.peak_in_use, 2);
+        assert_eq!(s.allocated, 3);
+        // page budget 0 = unbounded
+        assert_eq!(KvPool::new(&cfg, 4, 0).available(), None);
+    }
+
+    /// Shared-prefix property: streams that attach a cached prompt prefix
+    /// and recompute only the tail must produce logits BITWISE identical
+    /// to independent contiguous-state decodes — prompt positions and
+    /// divergent continuations alike. `page_positions = 4` forces
+    /// multi-page tables and a mid-page prefix end (COW on first append).
+    fn assert_shared_prefix_parity(plan: &PlannedModel, label: &str) {
+        let cfg = plan.cfg;
+        let pool = KvPool::new(cfg, 4, 0);
+        let mut cache = PrefixCache::new(4, 16);
+        let prompt: Vec<i32> = (0..10).map(|i| 4 + (i * 7) % 40).collect();
+        // donor stream prefills the prompt and publishes its pages
+        let mut donor = PagedKv::new(&pool, cfg.seq);
+        for &t in &prompt {
+            plan.forward_step_kv(t, &mut donor).unwrap();
+        }
+        cache.insert(label, &prompt, donor.pages());
+        assert!(!cache.is_empty());
+        let n_streams = 3usize;
+        for s in 0..n_streams {
+            // contiguous reference: independent full prefill
+            let mut cref = DecodeState::new(cfg);
+            let mut ref_logits = Vec::new();
+            for &t in &prompt {
+                ref_logits = plan.forward_step_kv(t, &mut cref).unwrap();
+            }
+            // paged stream: attach the cached prefix, recompute the tail
+            let (m, pages) = cache.lookup(&pool, label, &prompt).unwrap();
+            assert!(0 < m && m < prompt.len(), "match covers a strict prefix");
+            let mut paged = PagedKv::new(&pool, cfg.seq);
+            paged.attach_prefix(&pages, m).unwrap();
+            let mut pg_logits = Vec::new();
+            for &t in &prompt[m..] {
+                pg_logits = plan.forward_step_kv(t, &mut paged).unwrap();
+            }
+            assert_eq!(pg_logits, ref_logits, "{label} stream {s}: first-token logits");
+            // divergent continuation: stream-specific first token, then greedy
+            let mut tok = 4 + (s as i32 * 11) % 40;
+            for step in 0..6 {
+                let a = plan.forward_step_kv(tok, &mut paged).unwrap();
+                let b = plan.forward_step_kv(tok, &mut cref).unwrap();
+                assert_eq!(a, b, "{label} stream {s} step {step}: bitwise logit parity");
+                tok = greedy_pick(&a);
+            }
+        }
+        let st = pool.stats();
+        assert_eq!(st.prefix_hits, n_streams as u64, "{label}: every stream attached");
+        assert!(st.cow_forks >= n_streams as u64, "{label}: shared tails forked on append");
+        // drain everything: only then may the pool be empty (leak check)
+        drop(donor);
+        cache.clear();
+        assert_eq!(pool.stats().in_use, 0, "{label}: pages leaked after drain");
+    }
+
+    #[test]
+    fn shared_prefix_streams_match_contiguous_bitwise_merged_and_bypass() {
+        let cfg = presets::model("nano").unwrap();
+        let mut rng = Rng::new(21);
+        let params = init_params(&cfg, &mut rng);
+        let m = RefModel::new(&cfg, &params);
+        assert_shared_prefix_parity(&m.plan().unwrap(), "merged");
+        let deltas = crate::bench::serve_bench::synth_adapter(&cfg, &params, 2, 77).unwrap();
+        let overlay = DeltaOverlay::new(&deltas);
+        let mb = RefModel::with_overlay(&cfg, &params, &overlay);
+        assert_shared_prefix_parity(&mb.plan().unwrap(), "bypass");
+    }
+
+    #[test]
+    fn preempt_restore_resumes_bitwise_identical() {
+        let cfg = presets::model("nano").unwrap();
+        let mut rng = Rng::new(22);
+        let params = init_params(&cfg, &mut rng);
+        let m = RefModel::new(&cfg, &params);
+        let plan = m.plan().unwrap();
+        let pool = KvPool::new(&cfg, 4, 0);
+        let prompt: Vec<i32> = (0..7).map(|i| 4 + (i * 5) % 40).collect();
+        let mut a = PagedKv::new(&pool, cfg.seq);
+        let mut b = DecodeState::new(&cfg);
+        for &t in &prompt {
+            plan.forward_step_kv(t, &mut a).unwrap();
+            plan.forward_step_kv(t, &mut b).unwrap();
+        }
+        // preempt: every page is released while the stream sits in swap
+        let before = pool.stats().in_use;
+        assert_eq!(before, pool.pages_for(prompt.len()));
+        let sp = a.spill();
+        assert_eq!(pool.stats().in_use, 0, "spill frees all pages");
+        assert!(a.is_empty());
+        assert_eq!(sp.len(), prompt.len());
+        assert_eq!(sp.bytes(), 2 * (cfg.n_layers * prompt.len() * cfg.d_model) as u64 * 4);
+        a.restore(&sp).unwrap();
+        assert_eq!(pool.stats().in_use, before);
+        assert_eq!((pool.stats().preemptions, pool.stats().restores), (1, 1));
+        // the restored stream continues bitwise-identical to the
+        // never-preempted contiguous twin
+        let mut tok = 9;
+        for step in 0..5 {
+            let la = plan.forward_step_kv(tok, &mut a).unwrap();
+            let lb = plan.forward_step_kv(tok, &mut b).unwrap();
+            assert_eq!(la, lb, "step {step} after restore: bitwise logit parity");
+            tok = greedy_pick(&la);
+        }
+    }
+
+    #[test]
+    fn pages_free_after_slot_drain() {
+        let cfg = presets::model("nano").unwrap();
+        let mut rng = Rng::new(23);
+        let params = init_params(&cfg, &mut rng);
+        let m = RefModel::new(&cfg, &params);
+        let plan = m.plan().unwrap();
+        let pool = KvPool::new(&cfg, 4, 0);
+        let mut cache = PrefixCache::new(4, 8);
+        let prompt: Vec<i32> = (0..9).map(|i| 4 + (i * 3) % 40).collect();
+        let mut streams: Vec<PagedKv> = Vec::new();
+        let mut donor = PagedKv::new(&pool, cfg.seq);
+        for &t in &prompt {
+            plan.forward_step_kv(t, &mut donor).unwrap();
+        }
+        cache.insert("m", &prompt, donor.pages());
+        streams.push(donor);
+        for _ in 0..2 {
+            let (mlen, pages) = cache.lookup(&pool, "m", &prompt).unwrap();
+            let mut s = PagedKv::new(&pool, cfg.seq);
+            s.attach_prefix(&pages, mlen).unwrap();
+            for &t in &prompt[mlen..] {
+                plan.forward_step_kv(t, &mut s).unwrap();
+            }
+            streams.push(s);
+        }
+        let views: Vec<&PagedKv> = streams.iter().collect();
+        assert!(shared_pages(&views) >= 1, "prefix pages are shared across streams");
+        let pinned = cache.pinned_pages();
+        assert!(pinned >= 1);
+        // slots drain: only the cache's pins stay resident
+        streams.clear();
+        assert_eq!(pool.stats().in_use, pinned, "after drain only cache-pinned pages stay");
+        cache.clear();
+        assert_eq!(pool.stats().in_use, 0, "no refcount leaks after cache clear");
+        assert!(pool.try_alloc().is_some());
+    }
+
+    #[test]
+    fn clone_shares_pages_and_forks_tail_on_write() {
+        let cfg = presets::model("nano").unwrap();
+        let mut rng = Rng::new(24);
+        let params = init_params(&cfg, &mut rng);
+        let m = RefModel::new(&cfg, &params);
+        let plan = m.plan().unwrap();
+        let pool = KvPool::new(&cfg, 4, 0);
+        let mut a = PagedKv::new(&pool, cfg.seq);
+        for &t in &[4, 9, 14, 19, 24, 29] {
+            plan.forward_step_kv(t, &mut a).unwrap();
+        }
+        let in_use = pool.stats().in_use; // 6 positions / 4 per page = 2 pages
+        assert_eq!(in_use, 2);
+        let mut b = a.clone();
+        assert_eq!(pool.stats().in_use, in_use, "clone allocates no pages");
+        assert_eq!(shared_pages(&[&a, &b]), in_use, "clone shares every page");
+        let forks0 = pool.stats().cow_forks;
+        plan.forward_step_kv(34, &mut b).unwrap(); // divergent append
+        assert_eq!(pool.stats().cow_forks, forks0 + 1, "shared tail page forked");
+        assert_eq!(pool.stats().in_use, in_use + 1);
+        assert_eq!(shared_pages(&[&a, &b]), in_use - 1, "full page shared, tails private");
+        // a's tail is unique again: its own append must not fork
+        plan.forward_step_kv(39, &mut a).unwrap();
+        assert_eq!(pool.stats().cow_forks, forks0 + 1);
+    }
+
+    #[test]
+    fn exhaustion_is_typed_and_leaves_state_consistent() {
+        let cfg = presets::model("nano").unwrap();
+        let mut rng = Rng::new(25);
+        let params = init_params(&cfg, &mut rng);
+        let m = RefModel::new(&cfg, &params);
+        let plan = m.plan().unwrap();
+        let pool = KvPool::new(&cfg, 4, 1); // one page = 4 positions
+        let mut s = PagedKv::new(&pool, cfg.seq);
+        for t in [4, 5, 6, 7] {
+            plan.forward_step_kv(t, &mut s).unwrap();
+        }
+        let err = plan.forward_step_kv(8, &mut s).unwrap_err();
+        assert!(err.downcast_ref::<PoolExhausted>().is_some(), "typed exhaustion: {err:#}");
+        assert_eq!(s.len(), 4, "failed append must not mutate the state");
+        // spill frees the page, restore brings the stream back verbatim
+        let sp = s.spill();
+        assert_eq!(pool.stats().in_use, 0);
+        s.restore(&sp).unwrap();
+        assert_eq!(s.len(), 4);
+        // restoring into a pool too small for the spill is typed too
+        let tiny = KvPool::new(&cfg, 4, 0);
+        let mut t = PagedKv::new(&tiny, cfg.seq);
+        for tok in [4, 5, 6, 7, 8] {
+            plan.forward_step_kv(tok, &mut t).unwrap();
+        }
+        let sp2 = t.spill();
+        let small = KvPool::new(&cfg, 4, 1);
+        let mut back = PagedKv::new(&small, cfg.seq);
+        assert_eq!(back.restore(&sp2), Err(PoolExhausted));
+        assert!(back.is_empty(), "failed restore releases partial pages");
+        assert_eq!(small.stats().in_use, 0);
+    }
+
+    #[test]
+    fn prefix_cache_matches_exact_tokens_only() {
+        let cfg = presets::model("nano").unwrap();
+        let pool = KvPool::new(&cfg, 4, 0);
+        let mut cache = PrefixCache::new(4, 3);
+        let pages: Vec<Arc<PageBuf>> = (0..3).map(|_| pool.try_alloc().unwrap()).collect();
+        let prompt: Vec<i32> = (0..10).collect();
+        cache.insert("view-a", &prompt, &pages);
+        assert_eq!(cache.len(), 3, "block nodes at 4, 8 + tail node at 10");
+        // the full-prompt node matches, capped one short so first-token
+        // logits are always recomputed
+        let (m, got) = cache.lookup(&pool, "view-a", &prompt).unwrap();
+        assert_eq!((m, got.len()), (9, 3));
+        // a longer prompt sharing two full blocks matches at 8
+        let mut longer = prompt.clone();
+        longer.extend([40, 41]);
+        let (m, got) = cache.lookup(&pool, "view-a", &longer).unwrap();
+        assert_eq!((m, got.len()), (8, 2));
+        // different weight view, diverging tokens, or 1-token prompts: miss
+        assert!(cache.lookup(&pool, "view-b", &prompt).is_none());
+        let divergent: Vec<i32> = (0..10).map(|t| t + 1).collect();
+        assert!(cache.lookup(&pool, "view-a", &divergent).is_none());
+        assert!(cache.lookup(&pool, "view-a", &prompt[..1]).is_none());
+        // pages that do not cover the prompt are refused outright
+        cache.insert("view-a", &prompt, &pages[..1]);
+        assert_eq!(cache.len(), 3);
+        // the bound holds by LRU eviction, and clearing releases all pins
+        cache.insert("view-a", &[7, 7, 7, 7], &pages[..1]);
+        assert_eq!(cache.len(), 3, "max_nodes bound enforced");
+        assert!(cache.evict_lru());
+        cache.clear();
+        assert!(!cache.evict_lru(), "empty cache has nothing to evict");
+        assert_eq!(cache.pinned_pages(), 0);
+        drop(pages);
+        assert_eq!(pool.stats().in_use, 0);
+    }
+}

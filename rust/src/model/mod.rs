@@ -25,11 +25,13 @@
 
 pub mod decode;
 pub mod init;
+pub mod kvpool;
 pub mod plan;
 
 pub use decode::{
     greedy_decode, greedy_full_reforward, sample_decode, sample_token, DecodeState, SampleCfg,
 };
+pub use kvpool::{KvCache, KvPool, KvPoolStats, PagedKv, PoolExhausted, PrefixCache, SpilledKv};
 pub use plan::{LayerPlan, ParamSource, PlannedModel, ProjPlan};
 
 use crate::config::ModelCfg;

@@ -38,6 +38,7 @@
 //! per plan or per call. See `docs/performance.md`.
 
 use super::decode::{positional_row, DecodeState};
+use super::kvpool::KvCache;
 use super::DeltaOverlay;
 use crate::config::ModelCfg;
 use crate::peft::delta::ScatterView;
@@ -470,12 +471,24 @@ impl<'a> PlannedModel<'a> {
     /// wrapped; the persistent pool's ~µs dispatch removes that constraint.
     /// Bit-identical to the serial step at any pool width.
     pub fn forward_step(&self, token: i32, state: &mut DecodeState) -> Result<Vec<f32>> {
+        self.forward_step_kv(token, state)
+    }
+
+    /// [`PlannedModel::forward_step`], generic over the KV storage layout:
+    /// contiguous [`DecodeState`] or block-paged
+    /// [`PagedKv`](super::kvpool::PagedKv) — static dispatch, so the
+    /// monomorphized contiguous step is the pre-paging code. The attention
+    /// reads rows through [`KvCache::k_row`]/[`KvCache::v_row`] in the same
+    /// sequential per-position order regardless of layout (the partition
+    /// divides output elements, never an accumulation), so paged logits
+    /// are bit-identical to contiguous logits at any pool width.
+    pub fn forward_step_kv<C: KvCache + Sync>(&self, token: i32, state: &mut C) -> Result<Vec<f32>> {
         let cfg = self.cfg;
         let d = cfg.d_model;
         anyhow::ensure!(
-            state.len < state.capacity,
+            state.len() < state.capacity(),
             "decode state full ({} positions)",
-            state.capacity
+            state.capacity()
         );
         anyhow::ensure!(
             token >= 0 && (token as usize) < cfg.vocab,
@@ -483,16 +496,14 @@ impl<'a> PlannedModel<'a> {
             cfg.vocab
         );
         anyhow::ensure!(
-            state.k.len() == cfg.n_layers,
+            state.n_layers() == cfg.n_layers && (cfg.n_layers == 0 || state.width() == d),
             "decode state was built for a different model config"
         );
-        if let Some(k0) = state.k.first() {
-            anyhow::ensure!(
-                k0.shape == [state.capacity, d],
-                "decode state was built for a different model config"
-            );
-        }
-        let p = state.len;
+        // paged caches allocate / copy-on-write-fork their tail page here;
+        // contiguous caches are a no-op. Failing (pool exhaustion) leaves
+        // the state untouched, so the scheduler can spill and retry.
+        state.prepare_append()?;
+        let p = state.len();
         let mut erow = vec![0.0f32; d];
         self.embed.read_row(token as usize, &mut erow);
 
@@ -516,19 +527,19 @@ impl<'a> PlannedModel<'a> {
             lp.wq.forward_row(&h, &mut q, &self.pool);
             lp.wk.forward_row(&h, &mut kk, &self.pool);
             lp.wv.forward_row(&h, &mut vv, &self.pool);
-            state.k[l].row_mut(p).copy_from_slice(&kk);
-            state.v[l].row_mut(p).copy_from_slice(&vv);
+            state.write_kv(l, p, &kk, &vv);
 
             // attend over cached positions 0..=p (causal by construction:
             // the cache only ever holds the past). One head's score/mix —
             // `orow` is its disjoint slice of `att`, scratch scores are per
-            // task — runs identically on any executor.
-            let (kl, vl) = (&state.k[l], &state.v[l]);
+            // task — runs identically on any executor. Rows come through
+            // the KvCache accessors, so contiguous and paged storage feed
+            // the same sequential per-ki arithmetic.
             let attend_head = |head: usize, orow: &mut [f32]| {
                 let mut scores = vec![0.0f32; p + 1];
                 let qh = &q[head * hd..(head + 1) * hd];
                 for (ki, s) in scores.iter_mut().enumerate() {
-                    let krow = &kl.row(ki)[head * hd..(head + 1) * hd];
+                    let krow = &state.k_row(l, ki)[head * hd..(head + 1) * hd];
                     *s = qh.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
                 }
                 let mx = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -544,7 +555,7 @@ impl<'a> PlannedModel<'a> {
                     if w == 0.0 {
                         continue;
                     }
-                    let vrow = &vl.row(ki)[head * hd..(head + 1) * hd];
+                    let vrow = &state.v_row(l, ki)[head * hd..(head + 1) * hd];
                     for j in 0..hd {
                         orow[j] += w * vrow[j];
                     }
@@ -577,7 +588,7 @@ impl<'a> PlannedModel<'a> {
                 x[j] += mm[j];
             }
         }
-        state.len = p + 1;
+        state.set_len(p + 1);
 
         let mut out = vec![0.0f32; d];
         ops::rmsnorm(&x, self.ln_f, &mut out);

@@ -57,6 +57,11 @@ pub enum Stage {
     DecodeStream,
     /// One incremental `forward_step` for one slot (nested in DecodeStream).
     DecodeStep,
+    /// Decode: a slot's paged KV spilled to host under pool pressure
+    /// (nested in DecodeStream, like DecodeStep).
+    SwapOut,
+    /// Decode: a preempted slot's KV restored into the pool.
+    SwapIn,
     /// Registry: building a merged backbone copy (promotion).
     Merge,
     /// Registry: a merged copy evicted (LRU pressure or explicit).
@@ -74,6 +79,8 @@ impl Stage {
             Stage::Prefill => "prefill",
             Stage::DecodeStream => "decode_stream",
             Stage::DecodeStep => "decode_step",
+            Stage::SwapOut => "swap_out",
+            Stage::SwapIn => "swap_in",
             Stage::Merge => "merge",
             Stage::Evict => "evict",
         }
@@ -97,7 +104,11 @@ impl Stage {
     fn cat(self) -> &'static str {
         match self {
             Stage::Merge | Stage::Evict => "registry",
-            Stage::Prefill | Stage::DecodeStream | Stage::DecodeStep => "decode",
+            Stage::Prefill
+            | Stage::DecodeStream
+            | Stage::DecodeStep
+            | Stage::SwapOut
+            | Stage::SwapIn => "decode",
             _ => "serve",
         }
     }

@@ -401,6 +401,17 @@ impl ServeMetrics {
             pool_imbalance: None,
             backbone_dtype: String::new(),
             backbone_bytes: 0,
+            kv_page_positions: 0,
+            kv_pages_total: 0,
+            kv_pages_in_use: 0,
+            kv_pages_peak: 0,
+            kv_pages_shared: 0,
+            kv_pages_allocated: 0,
+            kv_bytes_resident: 0,
+            kv_cow_forks: 0,
+            kv_prefix_hits: 0,
+            kv_preemptions: 0,
+            kv_restores: 0,
         }
     }
 }
@@ -482,6 +493,30 @@ pub struct MetricsReport {
     /// Resident bytes of the frozen backbone at that dtype (bf16 ≈ half,
     /// int8 ≈ a quarter of the f32 footprint — see `peft::memory`).
     pub backbone_bytes: u64,
+    // --- paged KV pool (filled by `Server` from `KvPool::stats`; zero from
+    // a bare `ServeMetrics::snapshot`) -------------------------------------
+    /// Positions per KV page (`P`; page bytes = `2·n_layers·P·d_model·4`).
+    pub kv_page_positions: usize,
+    /// Page budget the pool was started with (0 = unbounded).
+    pub kv_pages_total: usize,
+    /// Pages currently resident (gauge).
+    pub kv_pages_in_use: usize,
+    /// High-water mark of resident pages.
+    pub kv_pages_peak: usize,
+    /// Pages referenced by more than one live stream (prefix sharing gauge).
+    pub kv_pages_shared: usize,
+    /// Lifetime page allocations (counter; free-list reuse still counts).
+    pub kv_pages_allocated: u64,
+    /// Resident KV bytes (`kv_pages_in_use × page bytes`).
+    pub kv_bytes_resident: u64,
+    /// Copy-on-write forks: a shared page duplicated on first divergent write.
+    pub kv_cow_forks: u64,
+    /// Prefill-time prefix-cache hits (streams that attached shared pages).
+    pub kv_prefix_hits: u64,
+    /// Decode slots preempted (KV spilled to host) under pool pressure.
+    pub kv_preemptions: u64,
+    /// Preempted slots restored into the pool.
+    pub kv_restores: u64,
 }
 
 /// Render `p * 1e3` as `"<x>.xx ms"`, or `-` before any sample exists —
@@ -553,6 +588,32 @@ impl MetricsReport {
             t.row(vec![
                 "backbone bytes".into(),
                 format!("{:.2} MiB", self.backbone_bytes as f64 / (1024.0 * 1024.0)),
+            ]);
+        }
+        if self.kv_pages_allocated > 0 {
+            t.row(vec![
+                "kv pages".into(),
+                format!(
+                    "{} in use / {} peak / {}",
+                    self.kv_pages_in_use,
+                    self.kv_pages_peak,
+                    if self.kv_pages_total == 0 {
+                        "unbounded".to_string()
+                    } else {
+                        format!("{} budget", self.kv_pages_total)
+                    }
+                ),
+            ]);
+            t.row(vec![
+                "kv resident".into(),
+                format!("{:.2} MiB", self.kv_bytes_resident as f64 / (1024.0 * 1024.0)),
+            ]);
+            t.row(vec!["kv shared pages".into(), self.kv_pages_shared.to_string()]);
+            t.row(vec!["kv prefix hits".into(), self.kv_prefix_hits.to_string()]);
+            t.row(vec!["kv cow forks".into(), self.kv_cow_forks.to_string()]);
+            t.row(vec![
+                "kv preempt/restore".into(),
+                format!("{} / {}", self.kv_preemptions, self.kv_restores),
             ]);
         }
         if self.cls_served > 0 || self.cls_batches > 0 {
@@ -696,6 +757,25 @@ impl MetricsReport {
                 self.backbone_dtype, self.backbone_bytes
             );
         }
+        if self.kv_pages_allocated > 0 {
+            let _ = writeln!(o, "# TYPE neuroada_kv_pages gauge");
+            let _ = writeln!(o, "neuroada_kv_pages{{state=\"total\"}} {}", self.kv_pages_total);
+            let _ = writeln!(o, "neuroada_kv_pages{{state=\"in_use\"}} {}", self.kv_pages_in_use);
+            let _ = writeln!(o, "neuroada_kv_pages{{state=\"peak\"}} {}", self.kv_pages_peak);
+            let _ = writeln!(o, "neuroada_kv_pages{{state=\"shared\"}} {}", self.kv_pages_shared);
+            let _ = writeln!(o, "# TYPE neuroada_kv_bytes_resident gauge");
+            let _ = writeln!(o, "neuroada_kv_bytes_resident {}", self.kv_bytes_resident);
+            let _ = writeln!(o, "# TYPE neuroada_kv_pages_allocated_total counter");
+            let _ = writeln!(o, "neuroada_kv_pages_allocated_total {}", self.kv_pages_allocated);
+            let _ = writeln!(o, "# TYPE neuroada_kv_cow_forks_total counter");
+            let _ = writeln!(o, "neuroada_kv_cow_forks_total {}", self.kv_cow_forks);
+            let _ = writeln!(o, "# TYPE neuroada_kv_prefix_hits_total counter");
+            let _ = writeln!(o, "neuroada_kv_prefix_hits_total {}", self.kv_prefix_hits);
+            let _ = writeln!(o, "# TYPE neuroada_kv_preemptions_total counter");
+            let _ = writeln!(o, "neuroada_kv_preemptions_total {}", self.kv_preemptions);
+            let _ = writeln!(o, "# TYPE neuroada_kv_restores_total counter");
+            let _ = writeln!(o, "neuroada_kv_restores_total {}", self.kv_restores);
+        }
         let _ = writeln!(o, "# TYPE neuroada_adapter_served_total counter");
         for (name, c) in &self.adapters {
             let _ = writeln!(o, "neuroada_adapter_served_total{{adapter=\"{name}\"}} {}", c.served);
@@ -773,6 +853,19 @@ impl MetricsReport {
         backbone.set("dtype", self.backbone_dtype.as_str());
         backbone.set("bytes", self.backbone_bytes);
         o.set("backbone", backbone);
+        let mut kv = Json::obj();
+        kv.set("page_positions", self.kv_page_positions);
+        kv.set("pages_total", self.kv_pages_total);
+        kv.set("pages_in_use", self.kv_pages_in_use);
+        kv.set("pages_peak", self.kv_pages_peak);
+        kv.set("pages_shared", self.kv_pages_shared);
+        kv.set("pages_allocated", self.kv_pages_allocated);
+        kv.set("bytes_resident", self.kv_bytes_resident);
+        kv.set("cow_forks", self.kv_cow_forks);
+        kv.set("prefix_hits", self.kv_prefix_hits);
+        kv.set("preemptions", self.kv_preemptions);
+        kv.set("restores", self.kv_restores);
+        o.set("kv", kv);
         let mut adapters = Json::obj();
         for (name, c) in &self.adapters {
             let mut a = Json::obj();
@@ -1026,6 +1119,52 @@ mod tests {
         let parsed = Json::parse(&r.to_json().dump()).unwrap();
         assert_eq!(parsed.at(&["backbone", "dtype"]).and_then(|v| v.as_str()), Some("int8"));
         assert_eq!(parsed.at(&["backbone", "bytes"]).and_then(|v| v.as_usize()), Some(123_456));
+    }
+
+    #[test]
+    fn kv_pool_fields_render_and_export() {
+        let m = ServeMetrics::new();
+        m.record_served("a", ServePath::Merged, 0.010);
+        let mut r = m.snapshot();
+        // a bare snapshot leaves the server-filled KV pool fields unset,
+        // and the zero state renders no kv rows (and no NaN anywhere)
+        assert_eq!(r.kv_pages_allocated, 0);
+        assert!(!r.render().contains("kv pages"));
+        assert!(!r.prometheus().contains("neuroada_kv_"));
+        r.kv_page_positions = 16;
+        r.kv_pages_total = 32;
+        r.kv_pages_in_use = 5;
+        r.kv_pages_peak = 9;
+        r.kv_pages_shared = 3;
+        r.kv_pages_allocated = 11;
+        r.kv_bytes_resident = 40_960;
+        r.kv_cow_forks = 2;
+        r.kv_prefix_hits = 4;
+        r.kv_preemptions = 1;
+        r.kv_restores = 1;
+        let rendered = r.render();
+        assert!(rendered.contains("kv pages"));
+        assert!(rendered.contains("5 in use / 9 peak / 32 budget"));
+        assert!(rendered.contains("kv shared pages"));
+        assert!(rendered.contains("1 / 1"), "preempt/restore row: {rendered}");
+        assert!(!rendered.contains("NaN"), "{rendered}");
+        // an unbounded pool renders as such rather than 'budget 0'
+        let mut unbounded = r.clone();
+        unbounded.kv_pages_total = 0;
+        assert!(unbounded.render().contains("unbounded"));
+        let prom = r.prometheus();
+        assert!(prom.contains("neuroada_kv_pages{state=\"in_use\"} 5"));
+        assert!(prom.contains("neuroada_kv_pages{state=\"shared\"} 3"));
+        assert!(prom.contains("neuroada_kv_cow_forks_total 2"));
+        assert!(prom.contains("neuroada_kv_prefix_hits_total 4"));
+        assert!(prom.contains("neuroada_kv_bytes_resident 40960"));
+        assert!(!prom.contains("NaN"), "{prom}");
+        let parsed = Json::parse(&r.to_json().dump()).unwrap();
+        assert_eq!(parsed.at(&["kv", "pages_in_use"]).and_then(|v| v.as_usize()), Some(5));
+        assert_eq!(parsed.at(&["kv", "pages_shared"]).and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(parsed.at(&["kv", "prefix_hits"]).and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(parsed.at(&["kv", "bytes_resident"]).and_then(|v| v.as_usize()), Some(40_960));
+        assert_eq!(parsed.at(&["kv", "restores"]).and_then(|v| v.as_usize()), Some(1));
     }
 
     #[test]

@@ -7,10 +7,17 @@
 //! [`MicroBatcher`] and runs one forward per batch on the worker pool,
 //! while streaming **generation** ([`GenerateRequest`]) is admitted to a
 //! FIFO and served by a dedicated decode thread owning `max_slots` slots:
-//! each slot holds one sequence's KV cache ([`DecodeState`]), every
-//! iteration advances all active slots one token (the decode micro-batch),
-//! tokens stream back the moment they are produced, and a finished
-//! sequence frees its slot mid-flight for the next queued request. On
+//! each slot holds one sequence's KV cache as block-paged views
+//! ([`PagedKv`]) into the server's one [`KvPool`] — prompt-prefix pages are
+//! shared copy-on-write between streams of the same weight view (matched
+//! through a [`PrefixCache`] at prefill), every iteration advances all
+//! active slots one token (the decode micro-batch), tokens stream back the
+//! moment they are produced, and a finished sequence frees its slot (and
+//! its KV pages) mid-flight for the next queued request. Under a finite
+//! page budget ([`ServeCfg::kv_pages`]) exhaustion is absorbed by
+//! swap-based backpressure — prefix-cache eviction, then preempting the
+//! most recently admitted stream to a host spill buffer and restoring it
+//! FIFO when pages free — instead of rejecting at admission. On
 //! encoder backbones, **classification** ([`ClsRequest`]) rides the same
 //! batcher and dispatches through `PlannedModel::cls_logits` (merged and
 //! zero-copy bypass views alike), with requests padded to `cfg.seq` at
@@ -45,7 +52,11 @@ use crate::config::ModelCfg;
 use crate::obs::http::{HttpServer, Routes};
 use crate::obs::trace::{Stage, Tracer};
 use crate::data::{cls_batch, eval_batch, Example};
-use crate::model::{sample_token, DecodeState, PlannedModel, SampleCfg};
+use crate::model::kvpool::{
+    shared_pages, KvCache, KvPool, PagedKv, PoolExhausted, PrefixCache, SpilledKv,
+    DEFAULT_PAGE_POSITIONS,
+};
+use crate::model::{sample_token, PlannedModel, SampleCfg};
 use crate::runtime::manifest::ArtifactMeta;
 use crate::runtime::{state::run_once, Engine, Value};
 use crate::tensor::pool::KernelPool;
@@ -224,10 +235,21 @@ pub struct ServeCfg {
     /// Worker threads executing batches.
     pub workers: usize,
     /// Concurrent decode slots (streaming generations in flight). Each slot
-    /// owns one KV cache (`DecodeState::kv_bytes_for(cfg)` bytes); the
+    /// holds a block-paged KV view ([`PagedKv`]) into the server's shared
+    /// page pool — resident bytes scale with tokens actually written (pages
+    /// of [`DEFAULT_PAGE_POSITIONS`] positions), not worst-case `seq`; the
     /// decode thread advances every active slot one token per micro-batch
     /// iteration, and a finished sequence frees its slot mid-flight.
     pub max_slots: usize,
+    /// KV page budget of the decode thread's paged pool, in pages of
+    /// [`DEFAULT_PAGE_POSITIONS`] positions × `2 · n_layers · d_model`
+    /// floats each (0 = unbounded, the default). With a finite budget the
+    /// scheduler absorbs exhaustion instead of rejecting: it evicts
+    /// prefix-cache pins LRU-first, then preempts the most recently
+    /// admitted stream (pages spilled to a host buffer and restored FIFO
+    /// when pages free up). A stream whose KV could never fit the budget
+    /// even alone still gets a typed [`Reject::Internal`].
+    pub kv_pages: usize,
     /// Per-adapter admission quota across the batcher (score + cls), the
     /// generation queue, AND generations in flight on decode slots
     /// (0 = unlimited). With a quota, one hot tenant can hold at most this
@@ -265,6 +287,7 @@ impl Default for ServeCfg {
             max_delay: Duration::from_millis(10),
             workers: crate::coordinator::pool::Pool::default_size(),
             max_slots: 8,
+            kv_pages: 0,
             adapter_quota: 0,
             threads: 0,
             trace: false,
@@ -341,6 +364,10 @@ struct Shared {
     /// shared by the scheduler workers and the decode thread — its workers
     /// are spawned once here, never per batch or per token.
     pool: KernelPool,
+    /// The decode thread's block-paged KV page pool ([`ServeCfg::kv_pages`]
+    /// budget). Allocation happens only on the decode thread; the `Arc`'d
+    /// interior lets metrics scrapes read gauges concurrently.
+    kv_pool: KvPool,
     /// Span tracer for the request timeline. Created at `Server::start`
     /// (enabled iff [`ServeCfg::trace`]); request ids are minted at
     /// admission, stage spans recorded by workers and the decode thread.
@@ -433,6 +460,10 @@ impl Server {
         let tracer = Tracer::new(cfg.trace, crate::obs::trace::DEFAULT_CAPACITY);
         pool.set_timed(cfg.trace);
         registry.set_tracer(tracer.clone());
+        // one paged KV pool for all decode slots (page budget from the CLI;
+        // 0 = unbounded). Created here so metrics can read its gauges even
+        // while the decode thread owns all allocation.
+        let kv_pool = KvPool::new(registry.model_cfg(), DEFAULT_PAGE_POSITIONS, cfg.kv_pages);
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 batcher: MicroBatcher::new(cfg.max_batch.max(1), cfg.max_delay),
@@ -445,6 +476,7 @@ impl Server {
             registry,
             metrics: ServeMetrics::new(),
             pool,
+            kv_pool,
             tracer,
             cv: Condvar::new(),
             gen_cv: Condvar::new(),
@@ -498,7 +530,25 @@ impl Server {
         m.pool_imbalance = sh.pool.imbalance();
         m.backbone_dtype = sh.registry.backbone_dtype().name().to_string();
         m.backbone_bytes = sh.registry.backbone_bytes();
+        let kv = sh.kv_pool.stats();
+        m.kv_page_positions = kv.page_positions;
+        m.kv_pages_total = kv.budget_pages;
+        m.kv_pages_in_use = kv.in_use;
+        m.kv_pages_peak = kv.peak_in_use;
+        m.kv_pages_shared = kv.shared;
+        m.kv_pages_allocated = kv.allocated;
+        m.kv_bytes_resident = kv.resident_bytes();
+        m.kv_cow_forks = kv.cow_forks;
+        m.kv_prefix_hits = kv.prefix_hits;
+        m.kv_preemptions = kv.preemptions;
+        m.kv_restores = kv.restores;
         m
+    }
+
+    /// The decode thread's paged KV page pool — gauges and counters via
+    /// [`KvPool::stats`] (also surfaced on every [`MetricsReport`]).
+    pub fn kv_pool(&self) -> &KvPool {
+        &self.shared.kv_pool
     }
 
     /// The server's span tracer (enabled iff started with
@@ -936,14 +986,14 @@ fn worker_loop(sh: &Shared) {
     }
 }
 
-/// One in-flight generation: a decode slot with its own KV cache.
+/// One in-flight generation: a decode slot with its block-paged KV view.
 struct GenSlot {
     adapter: String,
     /// Trace request id minted at admission (0 when tracing is off).
     id: u64,
     model: ModelRef,
     path: ServePath,
-    state: DecodeState,
+    state: PagedKv,
     /// Prompt followed by generated tokens, in order.
     tokens: Vec<i32>,
     prompt_len: usize,
@@ -987,15 +1037,129 @@ fn choose_token(slot: &mut GenSlot, logits: &[f32]) -> i32 {
 /// share it), so the per-token step does no name lookups, no overlay
 /// rebuilds, and no weight copies — plan resolution is the only place
 /// names are touched, and it is amortized over every active slot.
+/// Bound on retained prefix-cache entries (LRU-evicted beyond this). Each
+/// entry pins its pages with strong refs, so the bound also caps how much
+/// KV the cache alone can keep resident; pool pressure evicts pins before
+/// any stream is preempted.
+const PREFIX_CACHE_NODES: usize = 32;
+
+/// What [`make_room`] managed to free under pool exhaustion.
+enum RoomFreed {
+    /// An LRU prefix-cache pin was dropped.
+    Cache,
+    /// The active stream at this (pre-removal) slot index was preempted.
+    Preempted(usize),
+    /// Nothing left to evict or preempt.
+    Nothing,
+}
+
+/// Free KV pages under pool exhaustion, cheapest first: drop the
+/// least-recently-used prefix-cache pin; failing that, preempt the most
+/// recently admitted active stream other than `protect` (pass `usize::MAX`
+/// to allow any victim), spilling its pages to a host buffer on the swap
+/// queue. Returns [`RoomFreed::Nothing`] when the pool's pages are all
+/// held by `protect` itself — the caller decides between parking itself
+/// and a typed reject.
+fn make_room(
+    sh: &Shared,
+    prefix: &mut PrefixCache,
+    slots: &mut Vec<GenSlot>,
+    swapped: &mut VecDeque<(GenSlot, SpilledKv)>,
+    protect: usize,
+) -> RoomFreed {
+    if prefix.evict_lru() {
+        return RoomFreed::Cache;
+    }
+    let victim = slots
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != protect)
+        .max_by_key(|(_, s)| s.admitted)
+        .map(|(i, _)| i);
+    match victim {
+        Some(v) => {
+            let slot = slots.remove(v);
+            swap_out(sh, slot, swapped);
+            RoomFreed::Preempted(v)
+        }
+        None => RoomFreed::Nothing,
+    }
+}
+
+/// Preempt one stream: spill its KV pages to a host buffer (freeing every
+/// page it uniquely holds) and park it on the swap queue for FIFO restore.
+/// The stream keeps its decode-slot admission and quota share.
+fn swap_out(sh: &Shared, mut slot: GenSlot, swapped: &mut VecDeque<(GenSlot, SpilledKv)>) {
+    let t0 = Instant::now();
+    let sp = slot.state.spill();
+    if sh.tracer.enabled() && slot.id != 0 {
+        sh.tracer.span(slot.id, Stage::SwapOut, t0, Instant::now(), &slot.adapter);
+    }
+    swapped.push_back((slot, sp));
+}
+
+/// Try to swap one preempted stream back in. Requires room for its pages
+/// plus the next append so a restored stream is not instantly preempted
+/// again; evicts prefix-cache pins to get there. `Err(Some(..))` gives the
+/// pair back — the pool is waiting on pages held by the `active` live
+/// streams. When nothing can ever free pages (`active == 0`, cache
+/// drained, budget still short) the stream gets a typed internal reject
+/// (`Err(None)`) instead of deadlocking the swap queue.
+#[allow(clippy::result_large_err)]
+fn restore_slot(
+    sh: &Shared,
+    mcfg: &ModelCfg,
+    prefix: &mut PrefixCache,
+    mut slot: GenSlot,
+    sp: SpilledKv,
+    active: usize,
+) -> Result<GenSlot, Option<(GenSlot, SpilledKv)>> {
+    let t0 = Instant::now();
+    let need = sh.kv_pool.pages_for((sp.len() + 1).min(mcfg.seq));
+    loop {
+        let fits = match sh.kv_pool.available() {
+            None => true,
+            Some(a) => a >= need,
+        };
+        if fits && slot.state.restore(&sp).is_ok() {
+            if sh.tracer.enabled() && slot.id != 0 {
+                sh.tracer.span(slot.id, Stage::SwapIn, t0, Instant::now(), &slot.adapter);
+            }
+            return Ok(slot);
+        }
+        if prefix.evict_lru() {
+            continue;
+        }
+        if active == 0 {
+            sh.metrics.record_reject("internal");
+            let _ = slot.tx.send(Err(Reject::Internal(format!(
+                "kv page budget {} cannot hold one stream ({need} pages)",
+                sh.kv_pool.stats().budget_pages
+            ))));
+            release_decoding(sh, &slot.adapter);
+            return Err(None);
+        }
+        return Err(Some((slot, sp)));
+    }
+}
+
 fn decode_loop(sh: &Shared) {
     let mcfg = sh.registry.model_cfg().clone();
     let mut slots: Vec<GenSlot> = Vec::new();
+    // prompt-prefix page cache: full pages of recently prefilled prompts,
+    // keyed by adapter + weight-view identity + token blocks. Entries pin
+    // their pages so later streams can attach them zero-copy; bounded LRU,
+    // and always evicted before any stream is preempted.
+    let mut prefix = PrefixCache::new(sh.kv_pool.page_positions(), PREFIX_CACHE_NODES);
+    // preempted streams: KV spilled to host buffers, restored FIFO when
+    // pages free up. They still hold their admission (and quota share).
+    let mut swapped: VecDeque<(GenSlot, SpilledKv)> = VecDeque::new();
     loop {
         let mut admitted: Vec<QueuedGen> = Vec::new();
         {
             let mut st = sh.state.lock().unwrap();
             loop {
-                while slots.len() + admitted.len() < sh.cfg.max_slots {
+                while slots.len() + swapped.len() + admitted.len() < sh.cfg.max_slots {
                     match st.gen_queue.pop_front() {
                         Some(g) => {
                             // count the generation as in-flight the instant
@@ -1008,21 +1172,32 @@ fn decode_loop(sh: &Shared) {
                         None => break,
                     }
                 }
-                if !slots.is_empty() || !admitted.is_empty() {
+                if !slots.is_empty() || !swapped.is_empty() || !admitted.is_empty() {
                     break;
                 }
                 if st.stopping {
-                    return; // no slots, no queue: drained
+                    return; // no slots, no queue, no swapped: drained
                 }
                 let (guard, _) = sh.gen_cv.wait_timeout(st, IDLE_WAIT).unwrap();
                 st = guard;
+            }
+        }
+        // swap-in: restore preempted streams (FIFO) while the pool has room
+        while let Some((slot, sp)) = swapped.pop_front() {
+            match restore_slot(sh, &mcfg, &mut prefix, slot, sp, slots.len()) {
+                Ok(slot) => slots.push(slot),
+                Err(Some(pair)) => {
+                    swapped.push_front(pair);
+                    break;
+                }
+                Err(None) => {} // unservable: rejected + released inside
             }
         }
         // prefill newly admitted requests into slots (outside the lock; the
         // first token is produced here, so TTFT covers queue wait + prefill)
         for g in admitted {
             let adapter = g.req.adapter.clone();
-            match prefill_slot(sh, &mcfg, g) {
+            match prefill_slot(sh, &mcfg, g, &mut prefix, &mut slots, &mut swapped) {
                 Some(slot) => slots.push(slot),
                 // finished (or rejected) at prefill: release its quota share
                 None => release_decoding(sh, &adapter),
@@ -1047,6 +1222,41 @@ fn decode_loop(sh: &Shared) {
             models.iter().map(|m| m.planned(&mcfg, &sh.pool)).collect();
         let mut i = 0;
         while i < slots.len() {
+            // reserve the next KV position before stepping: exhaustion here
+            // evicts cache pins, then preempts the newest OTHER stream —
+            // never this one mid-step
+            let mut fits = true;
+            while let Err(PoolExhausted) = slots[i].state.ensure_next() {
+                match make_room(sh, &mut prefix, &mut slots, &mut swapped, i) {
+                    RoomFreed::Cache => {}
+                    RoomFreed::Preempted(v) => {
+                        if v < i {
+                            i -= 1;
+                        }
+                    }
+                    RoomFreed::Nothing => {
+                        fits = false;
+                        break;
+                    }
+                }
+            }
+            if !fits {
+                // the only active stream and the pool is still full: park
+                // it if its pages can ever fit the budget, else fail typed
+                let slot = slots.remove(i);
+                let need = sh.kv_pool.pages_for((slot.state.len() + 1).min(mcfg.seq));
+                let budget = sh.kv_pool.stats().budget_pages;
+                if need <= budget {
+                    swap_out(sh, slot, &mut swapped);
+                } else {
+                    sh.metrics.record_reject("internal");
+                    let _ = slot.tx.send(Err(Reject::Internal(format!(
+                        "kv page budget {budget} cannot hold one stream ({need} pages)"
+                    ))));
+                    release_decoding(sh, &slot.adapter);
+                }
+                continue;
+            }
             let pi = models
                 .iter()
                 .position(|m| model_key(m) == model_key(&slots[i].model))
@@ -1067,6 +1277,9 @@ fn decode_loop(sh: &Shared) {
                 }
             }
         }
+        // refresh the shared-pages gauge after the micro-batch
+        let views: Vec<&PagedKv> = slots.iter().map(|s| &s.state).collect();
+        sh.kv_pool.set_shared(shared_pages(&views));
     }
 }
 
@@ -1082,10 +1295,28 @@ fn release_decoding(sh: &Shared, adapter: &str) {
     }
 }
 
+/// Prefix-cache key: adapter name + the resolved weight view's identity,
+/// so pages cached for an evicted or re-registered adapter can never match
+/// a lookup against its successor's view.
+fn prefix_key(adapter: &str, model: &ModelRef) -> String {
+    let (a, b) = model_key(model);
+    format!("{adapter}:{a:x}:{b:x}")
+}
+
 /// Resolve the adapter, prefill the prompt through the KV cache, and emit
-/// the first token. `None` when the request finished at prefill (rejected,
-/// errored, or single-token generations that complete immediately).
-fn prefill_slot(sh: &Shared, mcfg: &ModelCfg, g: QueuedGen) -> Option<GenSlot> {
+/// the first token. Prompt-prefix pages cached from earlier streams of the
+/// same weight view are attached zero-copy (copy-on-write protects both
+/// sides) and only the uncached tail is actually forwarded. `None` when
+/// the request finished at prefill (rejected, errored, or single-token
+/// generations that complete immediately).
+fn prefill_slot(
+    sh: &Shared,
+    mcfg: &ModelCfg,
+    g: QueuedGen,
+    prefix: &mut PrefixCache,
+    slots: &mut Vec<GenSlot>,
+    swapped: &mut VecDeque<(GenSlot, SpilledKv)>,
+) -> Option<GenSlot> {
     let QueuedGen { req, id, enqueued, tx } = g;
     let t_admit = Instant::now();
     sh.metrics
@@ -1102,15 +1333,44 @@ fn prefill_slot(sh: &Shared, mcfg: &ModelCfg, g: QueuedGen) -> Option<GenSlot> {
         return None;
     };
     let path = model.path();
-    let mut state = DecodeState::new(mcfg);
-    let logits = match host_prefill(mcfg, &model, &req.prompt, &mut state, &sh.pool) {
-        Ok(l) => l,
-        Err(e) => {
-            sh.metrics.record_reject("internal");
-            let _ = tx.send(Err(Reject::Internal(format!("{e:#}"))));
-            return None;
+    let ckey = prefix_key(&req.adapter, &model);
+    let mut state = PagedKv::new(&sh.kv_pool, mcfg.seq);
+    if let Some((m, pages)) = prefix.lookup(&sh.kv_pool, &ckey, &req.prompt) {
+        state
+            .attach_prefix(&pages, m)
+            .expect("attach_prefix on a fresh state cannot fail");
+    }
+    // prefill the uncached tail. On pool exhaustion make room (evict cache
+    // pins, then preempt the newest active stream) and resume from where
+    // the state stopped — `prepare_append` fails before mutating anything,
+    // so the state is always consistent at its current length.
+    let logits = loop {
+        match host_prefill(mcfg, &model, &req.prompt[state.len()..], &mut state, &sh.pool) {
+            Ok(l) => break l,
+            Err(e) if e.downcast_ref::<PoolExhausted>().is_some() => {
+                if matches!(
+                    make_room(sh, prefix, slots, swapped, usize::MAX),
+                    RoomFreed::Nothing
+                ) {
+                    sh.metrics.record_reject("internal");
+                    let _ = tx.send(Err(Reject::Internal(format!(
+                        "kv page budget {} exhausted with nothing left to evict or preempt",
+                        sh.kv_pool.stats().budget_pages
+                    ))));
+                    return None;
+                }
+            }
+            Err(e) => {
+                sh.metrics.record_reject("internal");
+                let _ = tx.send(Err(Reject::Internal(format!("{e:#}"))));
+                return None;
+            }
         }
     };
+    // publish this prompt's pages for later streams of the same view
+    // (strong refs pin them; copy-on-write keeps donors and attachers
+    // independent; LRU-bounded, evicted first under pool pressure)
+    prefix.insert(&ckey, &req.prompt, state.pages());
     let prompt_len = req.prompt.len();
     let mut slot = GenSlot {
         adapter: req.adapter,
@@ -1143,7 +1403,7 @@ fn prefill_slot(sh: &Shared, mcfg: &ModelCfg, g: QueuedGen) -> Option<GenSlot> {
 fn step_slot(sh: &Shared, plan: &PlannedModel, slot: &mut GenSlot) -> SlotStatus {
     let t0 = Instant::now();
     let last = *slot.tokens.last().expect("slot holds at least the prompt");
-    match plan.forward_step(last, &mut slot.state) {
+    match plan.forward_step_kv(last, &mut slot.state) {
         Ok(logits) => {
             let t1 = Instant::now();
             sh.metrics.record_stage(StageLat::Step, t1.saturating_duration_since(t0).as_secs_f64());
@@ -1223,20 +1483,23 @@ fn emit_token(sh: &Shared, slot: &mut GenSlot, token: i32) -> SlotStatus {
 /// merged and bypass views share the code path, with bypass deltas
 /// pre-bound into the plan's projection slots. Steps run through `pool`
 /// (the decode thread passes the server's shared pool, so prefill threads
-/// over `d_out` like every other step). (Single steps after prefill go
-/// through the decode loop's per-iteration plans, not through here.)
-pub fn host_prefill(
+/// over `d_out` like every other step). Generic over the KV layout: the
+/// decode thread prefills block-paged [`PagedKv`] slots, tests and tools
+/// can pass a contiguous `DecodeState` — both are bit-identical (see
+/// `model::kvpool`). (Single steps after prefill go through the decode
+/// loop's per-iteration plans, not through here.)
+pub fn host_prefill<C: KvCache + Sync>(
     mcfg: &ModelCfg,
     model: &ModelRef,
     tokens: &[i32],
-    state: &mut DecodeState,
+    state: &mut C,
     pool: &KernelPool,
 ) -> Result<Vec<f32>> {
     anyhow::ensure!(!tokens.is_empty(), "host_prefill: empty token run");
     let plan = model.planned(mcfg, pool)?;
     let mut logits = Vec::new();
     for &t in tokens {
-        logits = plan.forward_step(t, state)?;
+        logits = plan.forward_step_kv(t, state)?;
     }
     Ok(logits)
 }
@@ -2079,6 +2342,64 @@ mod tests {
         // and the quota admits the adapter again
         assert!(srv.submit_generate(gen_req("task-a")).is_ok());
         srv.shutdown();
+    }
+
+    /// Tentpole: a KV page budget too tight for two concurrent streams
+    /// forces the decode thread to preempt (spill) one and restore it once
+    /// pages free up — instead of rejecting at admission — and the
+    /// preempted stream's tokens are bit-identical to the same request on
+    /// an unconstrained server.
+    #[test]
+    fn tight_page_budget_preempts_and_restores_streams() {
+        let long_a = GenerateRequest {
+            adapter: "task-a".into(),
+            prompt: vec![4, 5, 6, 7],
+            max_new_tokens: 20,
+            stop: vec![],
+            sample: None,
+        };
+        // 17 prompt positions cross the 16-position page boundary, so this
+        // stream needs both pages of the budget at prefill time
+        let wide_b = GenerateRequest {
+            adapter: "task-b".into(),
+            prompt: (0..17).map(|i| 4 + i % 40).collect(),
+            max_new_tokens: 3,
+            stop: vec![],
+            sample: None,
+        };
+        // reference streams from an unconstrained server
+        let free = nano_server(RegistryCfg::default(), ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        });
+        let ra = free.submit_generate(long_a.clone()).unwrap().wait().unwrap();
+        let rb = free.submit_generate(wide_b.clone()).unwrap().wait().unwrap();
+        free.shutdown();
+
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            workers: 1,
+            max_slots: 4,
+            kv_pages: 2,
+            ..ServeCfg::default()
+        });
+        let ta = srv.submit_generate(long_a).unwrap();
+        let tb = srv.submit_generate(wide_b).unwrap();
+        let da = ta.wait().unwrap();
+        let db = tb.wait().unwrap();
+        assert_eq!(da.tokens, ra.tokens, "preempted+restored stream must replay exactly");
+        assert_eq!(db.tokens, rb.tokens);
+        assert_eq!(da.tokens.len(), 20);
+        assert_eq!(db.tokens.len(), 3);
+        let stats = srv.kv_pool().stats();
+        assert!(stats.peak_in_use <= 2, "page budget held: peak {}", stats.peak_in_use);
+        assert!(stats.preemptions >= 1, "stream A must have been spilled");
+        assert!(stats.restores >= 1, "and restored once pages freed");
+        let m = srv.shutdown();
+        assert!(m.kv_preemptions >= 1);
+        assert!(m.kv_restores >= 1);
+        assert!(m.kv_pages_allocated > 0);
+        assert_eq!(m.kv_pages_total, 2);
+        assert_eq!(m.kv_pages_in_use, 0, "all pages free after drain");
     }
 
     /// Tentpole: a traced server's contiguous stage spans must account for
