@@ -383,7 +383,7 @@ pub fn run_cls(
     let reg = AdapterRegistry::new(
         cfg.clone(),
         backbone.clone(),
-        RegistryCfg { merged_capacity: 1, promote_after: 1 },
+        RegistryCfg { merged_capacity: 1, promote_after: 1, ..RegistryCfg::default() },
     );
     for (name, deltas) in &adapters {
         reg.register(name, deltas.clone())?;
@@ -432,7 +432,7 @@ pub fn run_cls(
         &cfg,
         &backbone,
         &adapters,
-        RegistryCfg { merged_capacity: adapters.len(), promote_after: 1 },
+        RegistryCfg { merged_capacity: adapters.len(), promote_after: 1, ..RegistryCfg::default() },
         requests.clone(),
         clients,
     )?;
@@ -440,7 +440,7 @@ pub fn run_cls(
         &cfg,
         &backbone,
         &adapters,
-        RegistryCfg { merged_capacity: 0, promote_after: 1 },
+        RegistryCfg { merged_capacity: 0, promote_after: 1, ..RegistryCfg::default() },
         requests,
         clients,
     )?;
@@ -490,7 +490,7 @@ fn e2e_for_size(size: &str, n_requests: usize, clients: usize) -> Result<Metrics
         &cfg,
         &backbone,
         &adapters,
-        RegistryCfg { merged_capacity: adapters.len(), promote_after: 1 },
+        RegistryCfg { merged_capacity: adapters.len(), promote_after: 1, ..RegistryCfg::default() },
         requests,
         clients,
         false,
@@ -511,7 +511,7 @@ pub fn run(size: &str, n_adapters: usize, n_requests: usize, quick: bool) -> Res
     let reg = AdapterRegistry::new(
         cfg.clone(),
         backbone.clone(),
-        RegistryCfg { merged_capacity: 1, promote_after: 1 },
+        RegistryCfg { merged_capacity: 1, promote_after: 1, ..RegistryCfg::default() },
     );
     for (name, deltas) in &adapters {
         reg.register(name, deltas.clone())?;
@@ -579,7 +579,7 @@ pub fn run(size: &str, n_adapters: usize, n_requests: usize, quick: bool) -> Res
         &cfg,
         &backbone,
         &adapters,
-        RegistryCfg { merged_capacity: adapters.len(), promote_after: 1 },
+        RegistryCfg { merged_capacity: adapters.len(), promote_after: 1, ..RegistryCfg::default() },
         requests.clone(),
         clients,
         false,
@@ -588,7 +588,7 @@ pub fn run(size: &str, n_adapters: usize, n_requests: usize, quick: bool) -> Res
         &cfg,
         &backbone,
         &adapters,
-        RegistryCfg { merged_capacity: 0, promote_after: 1 },
+        RegistryCfg { merged_capacity: 0, promote_after: 1, ..RegistryCfg::default() },
         requests,
         clients,
         false,
@@ -610,7 +610,7 @@ pub fn run(size: &str, n_adapters: usize, n_requests: usize, quick: bool) -> Res
                 &cfg,
                 &backbone,
                 &adapters,
-                RegistryCfg { merged_capacity: adapters.len(), promote_after: 1 },
+                RegistryCfg { merged_capacity: adapters.len(), promote_after: 1, ..RegistryCfg::default() },
                 overhead_reqs.clone(),
                 clients,
                 trace,

@@ -150,6 +150,27 @@ SUBCOMMANDS
                     as classification requests on both weight views and
                     assert the served metric reproduces the offline
                     encoder eval exactly)
+  lifecycle         fine-tune-as-a-service against a live server:
+                    --size nano [--task cs-boolq] [--adapter-name svc]
+                    [--jobs 2] [--steps 12] [--k 1] [--budget 0]
+                    [--eval-n 32] [--sigma 0.05] [--slice 16]
+                    [--corrupt-last] [--pjrt] [--requests 64] [--clients 2]
+                    [--capacity 2] [--half-life 30] [--rate-promote 3]
+                    [--rate-demote 0.25] [--count-policy] [--threads N]
+                    [--metrics-addr HOST:PORT] [--metrics-out FILE]
+                    [--trace-out FILE]
+                    (each job trains a NeuroAda candidate — artifact-free
+                    host hill-climb by default, --pjrt for the AOT train
+                    artifact — checkpoints it under --out, A/Bs it against
+                    the incumbent on a held-out slice, and promotes with a
+                    versioned atomic cutover (name@vN) or rolls back; the
+                    registry runs the decayed-rate promotion policy unless
+                    --count-policy; --budget N apportions N trainable
+                    params across projections by weight mass;
+                    --corrupt-last injects a losing candidate into the
+                    final job to demonstrate rollback. Lifecycle events
+                    surface in the metrics table/Prometheus/JSON and the
+                    trace. See docs/lifecycle.md)
   audit             memory audit table: [--size nano] [--k 1]
   tasks             list the 23 synthetic tasks
 

@@ -6,11 +6,11 @@ use crate::config::presets;
 use crate::data::tasks::{Suite, Task};
 use crate::eval::{eval_decoder, eval_encoder, merged_params};
 use crate::model::init::init_params;
-use crate::peft::{MethodKind, Strategy};
+use crate::peft::{DeltaStore, MethodKind, Strategy};
 use crate::runtime::{Engine, Manifest, ValueStore};
 use crate::train::{
-    build_session, checkpoint, finetune_steps, loop_::finetune_steps_cls, pretrain,
-    setup::extract_deltas, Schedule,
+    build_session, build_session_budgeted, checkpoint, finetune_steps,
+    loop_::finetune_steps_cls, pretrain, setup::extract_deltas, ProjBudgets, Schedule,
 };
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
@@ -77,6 +77,16 @@ pub struct Coordinator {
     pub opts: RunOpts,
 }
 
+/// Output of one lifecycle fine-tune job: the trained sparse deltas plus
+/// the training telemetry recorded with the A/B verdict.
+#[derive(Debug, Clone)]
+pub struct FinetuneJob {
+    pub deltas: Vec<(String, DeltaStore)>,
+    pub final_loss: f32,
+    pub train_secs: f64,
+    pub samples_per_sec: f64,
+}
+
 /// One fine-tune→merge→eval result.
 #[derive(Debug, Clone)]
 pub struct RunResult {
@@ -110,7 +120,10 @@ impl Coordinator {
         }
         let cfg = presets::model(size).ok_or_else(|| anyhow!("unknown size {size}"))?;
         let is_enc = cfg.n_classes > 0;
-        eprintln!("[coordinator] pretraining {size} backbone ({steps} steps)...");
+        crate::obs::log::info(
+            "coordinator",
+            format_args!("pretraining {size} backbone ({steps} steps)..."),
+        );
         let mut rng = Rng::new(self.opts.seed);
         let init = init_params(&cfg, &mut rng);
         let meta = self.manifest.get(&format!("{size}_pretrain"))?;
@@ -124,11 +137,14 @@ impl Coordinator {
             None,
             is_enc, // encoder pretrains MLM-style
         )?;
-        eprintln!(
-            "[coordinator] {size}: pretrain loss {:.3} -> {:.3} ({:.0} steps/s)",
-            out.losses.first().copied().unwrap_or(f32::NAN),
-            out.losses.last().copied().unwrap_or(f32::NAN),
-            steps as f64 / out.secs
+        crate::obs::log::info(
+            "coordinator",
+            format_args!(
+                "{size}: pretrain loss {:.3} -> {:.3} ({:.0} steps/s)",
+                out.losses.first().copied().unwrap_or(f32::NAN),
+                out.losses.last().copied().unwrap_or(f32::NAN),
+                steps as f64 / out.secs
+            ),
         );
         checkpoint::save_params(&dir, &out.params, &format!("{size} backbone"))?;
         Ok(out.params)
@@ -142,6 +158,58 @@ impl Coordinator {
             b.insert_f32(format!("biases.{name}"), &[d_out], vec![0.0; d_out]);
         }
         b
+    }
+
+    /// One NeuroAda fine-tune **job** against an already-loaded backbone:
+    /// Phase-1 select (optionally shaped by a per-projection budget), train
+    /// `steps` steps, extract the sparse deltas. The train half of
+    /// [`Coordinator::run_one`] — no merge, no eval — so the adapter
+    /// lifecycle manager (`crate::lifecycle`) can run it as a job and make
+    /// its own promote/rollback decision on the candidate.
+    #[allow(clippy::too_many_arguments)]
+    pub fn finetune_job(
+        &self,
+        size: &str,
+        backbone: &ValueStore,
+        k: usize,
+        strategy: Strategy,
+        budgets: Option<&ProjBudgets>,
+        task: &Task,
+        steps: usize,
+        seed: u64,
+    ) -> Result<FinetuneJob> {
+        let is_enc = task.suite == Suite::Glue;
+        let artifact =
+            format!("{size}_{}", MethodKind::NeuroAda { k }.artifact_fragment());
+        let meta = self.manifest.get(&artifact)?;
+        let mut rng = Rng::new(seed);
+        let mut setup = match budgets {
+            Some(b) => {
+                build_session_budgeted(&self.engine, meta, backbone, k, strategy, b, &mut rng)?
+            }
+            None => build_session(
+                &self.engine,
+                meta,
+                backbone,
+                MethodKind::NeuroAda { k },
+                strategy,
+                1.0,
+                None,
+                &mut rng,
+            )?,
+        };
+        let sched = Schedule::linear(self.opts.lr, self.opts.warmup_ratio, steps);
+        let ft = if is_enc {
+            finetune_steps_cls(&self.engine, &mut setup.session, task, steps, sched, seed)?
+        } else {
+            finetune_steps(&self.engine, &mut setup.session, task, steps, sched, seed, None)?
+        };
+        Ok(FinetuneJob {
+            deltas: extract_deltas(&setup.session, &setup.selections)?,
+            final_loss: *ft.losses.last().unwrap_or(&f32::NAN),
+            train_secs: ft.secs,
+            samples_per_sec: ft.samples_per_sec,
+        })
     }
 
     /// The full pipeline for one (size, method, task): select → fine-tune →

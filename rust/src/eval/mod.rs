@@ -227,6 +227,40 @@ pub fn eval_encoder_host(
     Ok(score(task, &examples, &preds))
 }
 
+/// Host-forward twin of [`eval_decoder`]: the same example stream and
+/// multiple-choice scoring, through the zero-copy `PlannedModel` instead
+/// of the HLO artifact — so decoder candidates can be A/B'd without
+/// artifacts (the adapter-lifecycle manager's oracle, mirroring
+/// [`eval_encoder_host`] for encoders). No fixed-batch padding: host rows
+/// are independent.
+pub fn eval_decoder_host(
+    cfg: &ModelCfg,
+    params: &ValueStore,
+    deltas: Option<&[(String, DeltaStore)]>,
+    task: &Task,
+    n: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<f64> {
+    let overlay = deltas.map(DeltaOverlay::new);
+    let pool = crate::tensor::pool::KernelPool::new(threads);
+    let plan = PlannedModel::resolve(cfg, params, overlay.as_ref(), &pool)?;
+    let examples = data::example_stream(task, Split::Test, seed, cfg.vocab, cfg.seq - 2, n);
+    let mut correct = 0usize;
+    for chunk in examples.chunks(cfg.batch) {
+        let eb = data::eval_batch(chunk, cfg.seq);
+        let logits = plan.lm_logits_at(&eb.tokens, &eb.pad_mask, &eb.last_pos, chunk.len())?;
+        for (i, ex) in chunk.iter().enumerate() {
+            let row = logits.row(i);
+            let pick = nan_safe_argmax(ex.options.iter().map(|&o| row[o as usize]));
+            if pick == Some(ex.label) {
+                correct += 1;
+            }
+        }
+    }
+    Ok(correct as f64 / examples.len() as f64)
+}
+
 /// Apply the task's metric to predictions.
 pub fn score(task: &Task, examples: &[data::Example], preds: &[usize]) -> f64 {
     match task.metric {

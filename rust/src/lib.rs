@@ -38,6 +38,10 @@
 //!                     classification serving with exact eval parity,
 //!                     per-adapter admission quotas, serving metrics
 //!                     (see `docs/serving.md`).
+//! * [`lifecycle`]   — online adapter lifecycle: fine-tune-as-a-service jobs
+//!                     (train → select → register → serve) with held-out A/B
+//!                     promotion and versioned atomic cutover into a live
+//!                     server (see `docs/lifecycle.md`).
 //! * [`obs`]         — observability: lock-light request/span tracing with
 //!                     Chrome-trace (Perfetto) export, leveled `NEUROADA_LOG`
 //!                     logging, and the Prometheus/JSON metrics endpoint
@@ -56,6 +60,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod lifecycle;
 pub mod model;
 pub mod obs;
 pub mod peft;

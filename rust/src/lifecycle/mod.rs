@@ -1,0 +1,246 @@
+//! Online adapter lifecycle: **train → select → register → serve**, with
+//! measured promotion (ISSUE 9).
+//!
+//! Fine-tune-as-a-service over a live [`crate::serve::Server`]: a
+//! [`JobSpec`] names an adapter, a task, a neuron budget, and a seed; the
+//! [`LifecycleManager`] trains a candidate against the server's backbone
+//! (PJRT artifact trainer or the artifact-free host hill-climb — see
+//! [`trainer`]), checkpoints the delta artifact
+//! (`train::checkpoint::save_deltas`), A/Bs candidate vs incumbent on a
+//! held-out slice through the host eval oracles
+//! ([`crate::eval::eval_encoder_host`] / [`crate::eval::eval_decoder_host`]
+//! — exact twins of the serving forward), and either **promotes** the
+//! winner into the registry with a versioned atomic cutover
+//! (`Server::swap_adapter` → `AdapterRegistry::swap_in`, `name@vN`) or
+//! **rolls back** to the incumbent. In-flight requests finish on the
+//! version they resolved; there is never a half-merged view.
+//!
+//! Once promoted, the adapter competes for a merged slot like any other:
+//! under [`crate::serve::registry::PromotionPolicy::DecayedRate`] its
+//! decayed request-rate counter earns (and loses) the merged copy as
+//! traffic shifts.
+//!
+//! Every stage emits a lifecycle tracer span (`Stage::Train` / `AbEval` /
+//! `Promote` / `Rollback`, category `"lifecycle"`) and a
+//! `ServeMetrics::record_event` counter surfaced by the table, Prometheus,
+//! and JSON exporters. See `docs/lifecycle.md`.
+
+pub mod trainer;
+
+pub use trainer::{budget_plan, HostTrainer, TrainedCandidate, Trainer};
+
+use crate::config::ModelCfg;
+use crate::data::tasks;
+use crate::data::tasks::Task;
+use crate::eval::{eval_decoder_host, eval_encoder_host};
+use crate::obs::trace::Stage;
+use crate::peft::DeltaStore;
+use crate::runtime::ValueStore;
+use crate::serve::{ModelRef, Server};
+use crate::train::checkpoint;
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// One fine-tune job: everything needed to produce and judge a candidate.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Adapter name to (re)train and cut over.
+    pub name: String,
+    /// Task trained and A/B'd on (`data::tasks::by_name`).
+    pub task: String,
+    /// Per-row slot count k (must match the train artifact's k on PJRT).
+    pub k: usize,
+    /// Total trainable-parameter budget apportioned across projections by
+    /// weight mass ([`budget_plan`]); 0 = uniform k everywhere.
+    pub budget: usize,
+    /// Training steps (proposal steps for the host trainer).
+    pub steps: usize,
+    pub seed: u64,
+    /// Held-out A/B slice size (drawn with a seed training never sees).
+    pub eval_examples: usize,
+}
+
+/// What happened to one job.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub name: String,
+    /// Candidate's metric on the held-out slice.
+    pub candidate_metric: f64,
+    /// Incumbent's metric on the same slice (the registered adapter, or
+    /// the bare backbone when the name was not yet registered).
+    pub incumbent_metric: f64,
+    pub final_loss: f32,
+    pub train_secs: f64,
+    pub promoted: bool,
+    /// Registry version serving after the cutover (`name@vN`); `None` on
+    /// rollback.
+    pub version: Option<u64>,
+    /// Where the candidate's delta checkpoint was written (kept on
+    /// rollback too — artifacts are evidence, the registry is the truth).
+    pub artifact_dir: Option<PathBuf>,
+}
+
+/// Drives jobs against one live server.
+pub struct LifecycleManager {
+    size: String,
+    cfg: ModelCfg,
+    /// f32 reference params the trainer and the A/B oracle run against —
+    /// the same checkpoint the server's (possibly quantized) backbone was
+    /// built from.
+    backbone: ValueStore,
+    trainer: Trainer,
+    /// Kernel-pool width for host training/eval forwards.
+    pub threads: usize,
+    /// Checkpoint emit root (`<dir>/adapters/<name>-seed<seed>/`); `None`
+    /// keeps candidates in memory only.
+    pub out_dir: Option<PathBuf>,
+}
+
+impl LifecycleManager {
+    /// The f32 reference params this manager trains/evaluates against.
+    pub fn backbone(&self) -> &ValueStore {
+        &self.backbone
+    }
+
+    pub fn new(size: &str, cfg: ModelCfg, backbone: ValueStore, trainer: Trainer) -> Self {
+        LifecycleManager {
+            size: size.to_string(),
+            cfg,
+            backbone,
+            trainer,
+            threads: 1,
+            out_dir: None,
+        }
+    }
+
+    /// Run one job end-to-end against `server`: train → checkpoint → A/B →
+    /// promote (versioned cutover) or rollback. The server keeps serving
+    /// throughout; only the final install takes the registry lock.
+    pub fn run_job(&self, server: &Server, spec: &JobSpec) -> Result<JobOutcome> {
+        let task = tasks::by_name(&spec.task)
+            .ok_or_else(|| anyhow!("unknown task {:?}", spec.task))?;
+        let t = server.tracer();
+
+        // --- train ----------------------------------------------------
+        let t0 = Instant::now();
+        let cand = self
+            .trainer
+            .train(&self.size, &self.cfg, &self.backbone, &task, spec, self.threads)?;
+        t.span(
+            0,
+            Stage::Train,
+            t0,
+            Instant::now(),
+            &format!("{} steps={} loss={:.3}", spec.name, spec.steps, cand.final_loss),
+        );
+        server.record_event("train");
+
+        // --- checkpoint emit -------------------------------------------
+        let artifact_dir = match &self.out_dir {
+            Some(root) => {
+                let dir = root.join("adapters").join(format!("{}-seed{}", spec.name, spec.seed));
+                checkpoint::save_deltas(&dir, &cand.deltas)?;
+                Some(dir)
+            }
+            None => None,
+        };
+
+        // --- A/B on the held-out slice ---------------------------------
+        let t1 = Instant::now();
+        let reg = server.registry();
+        let incumbent = if reg.contains(&spec.name) {
+            match reg.bypass(&spec.name)? {
+                ModelRef::Bypass { deltas, .. } => Some(deltas),
+                ModelRef::Merged(_) => None, // bypass() never returns this
+            }
+        } else {
+            None
+        };
+        let n = spec.eval_examples;
+        let eval_seed = spec.seed ^ 0xABE7;
+        let cand_metric = objective(
+            &self.cfg,
+            &self.backbone,
+            Some(&cand.deltas),
+            &task,
+            n,
+            eval_seed,
+            self.threads,
+        )?;
+        let inc_metric = objective(
+            &self.cfg,
+            &self.backbone,
+            incumbent.as_ref().map(|d| d.as_slice()),
+            &task,
+            n,
+            eval_seed,
+            self.threads,
+        )?;
+        t.span(
+            0,
+            Stage::AbEval,
+            t1,
+            Instant::now(),
+            &format!("{}: cand {:.3} vs inc {:.3} (n={n})", spec.name, cand_metric, inc_metric),
+        );
+        server.record_event("ab_eval");
+
+        // --- verdict ---------------------------------------------------
+        // promote on a strict win; a tie promotes only a first registration
+        // (fresh name — nothing to displace), never churns an incumbent
+        let promote =
+            cand_metric > inc_metric || (cand_metric == inc_metric && incumbent.is_none());
+        let version = if promote {
+            let t2 = Instant::now();
+            let v = if reg.contains(&spec.name) {
+                server.swap_adapter(&spec.name, cand.deltas.clone())?
+            } else {
+                reg.register(&spec.name, cand.deltas.clone())?;
+                reg.version(&spec.name).unwrap_or(1)
+            };
+            t.span(0, Stage::Promote, t2, Instant::now(), &format!("{}@v{v}", spec.name));
+            server.record_event("promote");
+            Some(v)
+        } else {
+            t.instant(
+                0,
+                Stage::Rollback,
+                &format!("{}: cand {:.3} <= inc {:.3}", spec.name, cand_metric, inc_metric),
+            );
+            server.record_event("rollback");
+            None
+        };
+
+        Ok(JobOutcome {
+            name: spec.name.clone(),
+            candidate_metric: cand_metric,
+            incumbent_metric: inc_metric,
+            final_loss: cand.final_loss,
+            train_secs: cand.train_secs,
+            promoted: promote,
+            version,
+            artifact_dir,
+        })
+    }
+}
+
+/// The host eval oracle, dispatched by backbone kind: encoder sizes score
+/// the task metric through [`eval_encoder_host`], decoders multiple-choice
+/// accuracy through [`eval_decoder_host`]. Exact twins of the serving
+/// forward — what wins the A/B is what serves better.
+pub fn objective(
+    cfg: &ModelCfg,
+    params: &ValueStore,
+    deltas: Option<&[(String, DeltaStore)]>,
+    task: &Task,
+    n: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<f64> {
+    if cfg.n_classes > 0 {
+        eval_encoder_host(cfg, params, deltas, task, n, seed, threads)
+    } else {
+        eval_decoder_host(cfg, params, deltas, task, n, seed, threads)
+    }
+}

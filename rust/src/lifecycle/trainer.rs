@@ -1,0 +1,278 @@
+//! Lifecycle trainer backends: how a job's candidate deltas get produced.
+//!
+//! Two backends behind one [`Trainer`] enum:
+//!
+//! * [`Trainer::Pjrt`] — the real thing: `Coordinator::finetune_job` runs
+//!   the AOT NeuroAda train artifact (sparse-slot AdamW) against the
+//!   already-loaded backbone and extracts the deltas. Needs `artifacts/`.
+//! * [`Trainer::Host`] — artifact-free: seeded accept-if-strictly-better
+//!   hill-climb over the sparse θ, scored by the same host eval oracle the
+//!   A/B step uses (on a *different* seed's slice, so training cannot see
+//!   the held-out examples). Slow per unit of progress but pure rust, so
+//!   the full train → select → register → serve loop runs in CI with no
+//!   PJRT plugin. Tiny models only.
+//!
+//! Both backends share the budget shaping: with `JobSpec::budget > 0`,
+//! [`budget_plan`] apportions the parameter budget across projections by
+//! weight mass (`peft::selection::allocate_budget`), capped at the slot
+//! count k; the PJRT path emulates sub-k projections via slot-mask columns
+//! (`train::build_session_budgeted`), the host path selects the true `k_p`
+//! directly.
+
+use super::{objective, JobSpec};
+use crate::config::ModelCfg;
+use crate::coordinator::common::Coordinator;
+use crate::data::tasks::Task;
+use crate::peft::selection::RowSelection;
+use crate::peft::{allocate_budget, select_topk, DeltaStore, Strategy};
+use crate::runtime::ValueStore;
+use crate::tensor::Tensor;
+use crate::train::ProjBudgets;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::time::Instant;
+
+/// A trained candidate, backend-agnostic.
+#[derive(Debug, Clone)]
+pub struct TrainedCandidate {
+    pub deltas: Vec<(String, DeltaStore)>,
+    /// PJRT: last training loss. Host: `1 - best objective` (a pseudo-loss
+    /// so both backends report a lower-is-better scalar).
+    pub final_loss: f32,
+    pub train_secs: f64,
+}
+
+/// The artifact-free hill-climb trainer's knobs.
+#[derive(Debug, Clone)]
+pub struct HostTrainer {
+    /// Proposal stddev for the single-coordinate θ perturbations.
+    pub sigma: f32,
+    /// Objective slice size (examples scored per proposal).
+    pub slice: usize,
+    /// Fault injection for tests/CI: when > 0, skip training and fill θ
+    /// with `N(0, corrupt)` noise — a candidate that should LOSE its A/B
+    /// and exercise the rollback path.
+    pub corrupt: f32,
+}
+
+impl Default for HostTrainer {
+    fn default() -> HostTrainer {
+        HostTrainer { sigma: 0.05, slice: 16, corrupt: 0.0 }
+    }
+}
+
+/// Job trainer backend.
+pub enum Trainer {
+    Host(HostTrainer),
+    Pjrt(Box<Coordinator>),
+}
+
+impl Trainer {
+    pub fn train(
+        &self,
+        size: &str,
+        cfg: &ModelCfg,
+        backbone: &ValueStore,
+        task: &Task,
+        spec: &JobSpec,
+        threads: usize,
+    ) -> Result<TrainedCandidate> {
+        match self {
+            Trainer::Host(ht) => host_train(ht, cfg, backbone, task, spec, threads),
+            Trainer::Pjrt(coord) => {
+                let budgets = budget_plan(cfg, backbone, spec.k, spec.budget)?;
+                let t0 = Instant::now();
+                let job = coord.finetune_job(
+                    size,
+                    backbone,
+                    spec.k,
+                    Strategy::Magnitude,
+                    budgets.as_ref(),
+                    task,
+                    spec.steps,
+                    spec.seed,
+                )?;
+                Ok(TrainedCandidate {
+                    deltas: job.deltas,
+                    final_loss: job.final_loss,
+                    train_secs: t0.elapsed().as_secs_f64(),
+                })
+            }
+        }
+    }
+}
+
+/// Apportion `budget` trainable params across projections by |w| mass via
+/// [`allocate_budget`], with each projection's `k_p` capped at the slot
+/// count `k` (the PJRT artifacts have exactly k slots per row; the host
+/// trainer keeps the same cap so both backends shape budgets identically).
+/// `budget == 0` means "no shaping" (uniform k) and returns `None`.
+pub fn budget_plan(
+    cfg: &ModelCfg,
+    backbone: &ValueStore,
+    k: usize,
+    budget: usize,
+) -> Result<Option<ProjBudgets>> {
+    if budget == 0 {
+        return Ok(None);
+    }
+    let mut projs = Vec::new();
+    let mut mass = Vec::new();
+    for (name, d_out, d_in) in cfg.proj_shapes() {
+        let w = backbone.get(&format!("params.{name}"))?.as_f32()?;
+        mass.push(w.iter().map(|v| v.abs() as f64).sum());
+        projs.push((name, d_out, d_in.min(k)));
+    }
+    Ok(Some(allocate_budget(&projs, &mass, budget).into_iter().collect()))
+}
+
+/// Seeded accept-if-strictly-better hill-climb over the sparse θ. Each
+/// step perturbs ONE (projection, row·slot) coordinate and keeps the
+/// change only if the objective on the training slice strictly improves —
+/// monotone by construction, deterministic for a given seed.
+fn host_train(
+    ht: &HostTrainer,
+    cfg: &ModelCfg,
+    backbone: &ValueStore,
+    task: &Task,
+    spec: &JobSpec,
+    threads: usize,
+) -> Result<TrainedCandidate> {
+    let t0 = Instant::now();
+    let budgets = budget_plan(cfg, backbone, spec.k, spec.budget)?;
+    let mut rng = Rng::new(spec.seed);
+    // Phase 1: per-projection top-k_p selection over the frozen weights
+    let mut slots: Vec<(String, RowSelection, Vec<f32>)> = Vec::new();
+    for (name, d_out, d_in) in cfg.proj_shapes() {
+        let kp = budgets
+            .as_ref()
+            .and_then(|b| b.get(&name).copied())
+            .unwrap_or(spec.k)
+            .min(d_in);
+        if kp == 0 {
+            continue; // budget starved this projection entirely
+        }
+        let w = Tensor::from_vec(
+            &[d_out, d_in],
+            backbone.get(&format!("params.{name}"))?.as_f32()?.to_vec(),
+        );
+        let sel = select_topk(&w, kp);
+        let mut theta = vec![0.0f32; d_out * kp];
+        if ht.corrupt > 0.0 {
+            rng.fill_normal(&mut theta, ht.corrupt);
+        }
+        slots.push((name, sel, theta));
+    }
+    let pack = |slots: &[(String, RowSelection, Vec<f32>)]| -> Vec<(String, DeltaStore)> {
+        slots
+            .iter()
+            .map(|(n, s, th)| (n.clone(), DeltaStore::from_f32(s.clone(), th)))
+            .collect()
+    };
+    // the training slice uses its own seed so the A/B's held-out slice
+    // (JobSpec eval seed) was never seen during training
+    let obj_seed = spec.seed ^ 0x51C3;
+    let mut best_deltas = pack(&slots);
+    let mut best =
+        objective(cfg, backbone, Some(&best_deltas), task, ht.slice, obj_seed, threads)?;
+    let steps = if ht.corrupt > 0.0 { 0 } else { spec.steps };
+    for _ in 0..steps {
+        let p = (rng.next_u64() as usize) % slots.len();
+        let i = (rng.next_u64() as usize) % slots[p].2.len();
+        let old = slots[p].2[i];
+        slots[p].2[i] = old + rng.normal() * ht.sigma;
+        let cand = pack(&slots);
+        let m = objective(cfg, backbone, Some(&cand), task, ht.slice, obj_seed, threads)?;
+        if m > best {
+            best = m;
+            best_deltas = cand;
+        } else {
+            slots[p].2[i] = old;
+        }
+    }
+    Ok(TrainedCandidate {
+        deltas: best_deltas,
+        final_loss: (1.0 - best) as f32,
+        train_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::init::init_params;
+
+    fn nano() -> (ModelCfg, ValueStore) {
+        let cfg = presets::model("nano").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(1));
+        (cfg, params)
+    }
+
+    #[test]
+    fn budget_plan_respects_cap_and_budget() {
+        let (cfg, params) = nano();
+        let b = budget_plan(&cfg, &params, 2, 512).unwrap().unwrap();
+        let mut spent = 0usize;
+        for (name, d_out, _) in cfg.proj_shapes() {
+            let kp = b[&name];
+            assert!(kp <= 2, "{name}: k_p={kp} exceeds slot cap");
+            spent += kp * d_out;
+        }
+        assert!(spent <= 512, "spent {spent} over budget");
+        assert!(budget_plan(&cfg, &params, 2, 0).unwrap().is_none());
+    }
+
+    #[test]
+    fn host_trainer_is_deterministic_and_never_regresses() {
+        let (cfg, params) = nano();
+        let task = crate::data::tasks::by_name("cs-boolq").unwrap();
+        let spec = JobSpec {
+            name: "job".into(),
+            task: task.name.to_string(),
+            k: 1,
+            budget: 0,
+            steps: 4,
+            seed: 7,
+            eval_examples: 8,
+        };
+        let ht = HostTrainer { slice: 8, ..HostTrainer::default() };
+        let tr = Trainer::Host(ht.clone());
+        let a = tr.train("nano", &cfg, &params, &task, &spec, 1).unwrap();
+        let b = tr.train("nano", &cfg, &params, &task, &spec, 1).unwrap();
+        assert_eq!(a.final_loss, b.final_loss, "seeded hill-climb must be deterministic");
+        for ((na, da), (nb, db)) in a.deltas.iter().zip(&b.deltas) {
+            assert_eq!(na, nb);
+            assert_eq!(da.to_bytes(), db.to_bytes());
+        }
+        // monotone: the accepted state can never score below the zero-θ start
+        let zero = pack_zero(&cfg, &params, 1);
+        let base = objective(&cfg, &params, Some(&zero), &task, 8, spec.seed ^ 0x51C3, 1).unwrap();
+        assert!(1.0 - a.final_loss as f64 >= base - 1e-9);
+        // corrupt knob skips training and produces nonzero deltas
+        let bad = Trainer::Host(HostTrainer { corrupt: 2.0, ..ht })
+            .train("nano", &cfg, &params, &task, &spec, 1)
+            .unwrap();
+        assert!(bad.deltas.iter().any(|(_, d)| d.to_bytes() != zero_bytes(d)));
+    }
+
+    fn pack_zero(cfg: &ModelCfg, params: &ValueStore, k: usize) -> Vec<(String, DeltaStore)> {
+        cfg.proj_shapes()
+            .into_iter()
+            .map(|(name, d_out, d_in)| {
+                let w = Tensor::from_vec(
+                    &[d_out, d_in],
+                    params.get(&format!("params.{name}")).unwrap().as_f32().unwrap().to_vec(),
+                );
+                let sel = select_topk(&w, k);
+                let th = vec![0.0f32; d_out * k];
+                (name, DeltaStore::from_f32(sel, &th))
+            })
+            .collect()
+    }
+
+    fn zero_bytes(d: &DeltaStore) -> Vec<u8> {
+        let th = vec![0.0f32; d.sel.d_out * d.sel.k];
+        DeltaStore::from_f32(d.sel.clone(), &th).to_bytes()
+    }
+}

@@ -41,6 +41,7 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "lifecycle" => cmd_lifecycle(&args),
         "audit" => cmd_audit(&args),
         "tasks" => cmd_tasks(),
         other => bail!("unknown subcommand {other:?}\n{USAGE}"),
@@ -337,6 +338,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rcfg = RegistryCfg {
         merged_capacity: args.opt_usize("capacity").map_err(|e| anyhow!(e))?.unwrap_or(2),
         promote_after: args.opt_usize("promote").map_err(|e| anyhow!(e))?.unwrap_or(3) as u64,
+        ..RegistryCfg::default()
     };
     let registry = AdapterRegistry::new(cfg.clone(), backbone.clone(), rcfg);
 
@@ -591,6 +593,208 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `neuroada lifecycle` — fine-tune-as-a-service against a LIVE server:
+/// each job trains a NeuroAda candidate for `--adapter-name` on `--task`,
+/// checkpoints its deltas under `--out`, A/Bs candidate vs incumbent on a
+/// held-out slice (a seed training never saw), and either promotes it with
+/// a versioned atomic cutover (`name@vN`) or rolls it back. The registry
+/// runs the decayed-rate promotion policy (`--half-life/--rate-promote/
+/// --rate-demote`; `--count-policy` restores the legacy counter), so a
+/// promoted adapter then earns (and loses) its merged slot from traffic.
+///
+/// The trainer is the artifact-free host hill-climb by default (tiny sizes
+/// only); `--pjrt` switches to the AOT train artifact via the coordinator.
+/// `--corrupt-last` injects a deliberately-bad candidate into the final
+/// job to demonstrate the rollback path. After the jobs, `--requests`
+/// scoring requests are driven through the surviving adapters (decoder
+/// sizes) and the metrics report — including the lifecycle event counters
+/// — is printed and optionally exported (`--metrics-out/--trace-out`).
+fn cmd_lifecycle(args: &Args) -> Result<()> {
+    use neuroada::bench::serve_bench::randomize_zero_head;
+    use neuroada::coordinator::pool::Pool;
+    use neuroada::lifecycle::{HostTrainer, JobSpec, LifecycleManager, Trainer};
+    use neuroada::serve::{
+        load_or_init_backbone, AdapterRegistry, Backend, PromotionPolicy, RegistryCfg, Request,
+        ServeCfg,
+    };
+    use neuroada::util::rng::Rng;
+
+    let size = args.opt_or("size", "nano");
+    let cfg = presets::model(&size).ok_or_else(|| anyhow!("unknown size {size:?}"))?;
+    let opts = opts_from(args)?;
+    let seed = opts.seed;
+    let mut backbone = load_or_init_backbone(&opts, &cfg)?;
+    // fresh encoder heads are all-zero => every logit ties and no candidate
+    // can win an A/B; give the head seeded weights (same idiom as
+    // `serve --cls` parity runs)
+    if randomize_zero_head(&cfg, &mut backbone, seed ^ 0xEAD)? {
+        olog::info("lifecycle", format_args!("randomized all-zero classifier head"));
+    }
+
+    let rcfg = RegistryCfg {
+        merged_capacity: args.opt_usize("capacity").map_err(|e| anyhow!(e))?.unwrap_or(2),
+        promote_after: args.opt_usize("promote").map_err(|e| anyhow!(e))?.unwrap_or(3) as u64,
+        policy: if args.flag("count-policy") {
+            PromotionPolicy::CountThreshold
+        } else {
+            PromotionPolicy::DecayedRate {
+                half_life_s: args.opt_f64("half-life").map_err(|e| anyhow!(e))?.unwrap_or(30.0),
+                promote: args.opt_f64("rate-promote").map_err(|e| anyhow!(e))?.unwrap_or(3.0),
+                demote: args.opt_f64("rate-demote").map_err(|e| anyhow!(e))?.unwrap_or(0.25),
+            }
+        },
+    };
+    let registry = AdapterRegistry::new(cfg.clone(), backbone.clone(), rcfg);
+
+    let threads = args.opt_usize("threads").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    let scfg = ServeCfg {
+        max_batch: args.opt_usize("max-batch").map_err(|e| anyhow!(e))?.unwrap_or(cfg.batch),
+        workers: args
+            .opt_usize("workers")
+            .map_err(|e| anyhow!(e))?
+            .unwrap_or_else(Pool::default_size),
+        threads,
+        trace: args.opt("trace-out").is_some(),
+        ..ServeCfg::default()
+    };
+    let trace_out = args.opt("trace-out").map(str::to_string);
+    let metrics_out = args.opt("metrics-out").map(str::to_string);
+    // the lifecycle A/B runs through the host eval oracles, so the server
+    // runs the same pure-rust forward: what wins the A/B is what serves
+    let srv = Server::start(registry, scfg, Backend::Host)?;
+    let http = match args.opt("metrics-addr") {
+        Some(addr) => {
+            let h = srv.metrics_http(addr).map_err(|e| anyhow!("--metrics-addr {addr}: {e}"))?;
+            olog::info(
+                "lifecycle",
+                format_args!("metrics endpoint on http://{}/metrics (+ /metrics.json)", h.addr()),
+            );
+            Some(h)
+        }
+        None => None,
+    };
+
+    let host_trainer = HostTrainer {
+        sigma: args.opt_f64("sigma").map_err(|e| anyhow!(e))?.unwrap_or(0.05) as f32,
+        slice: args.opt_usize("slice").map_err(|e| anyhow!(e))?.unwrap_or(16),
+        corrupt: 0.0,
+    };
+    let trainer = if args.flag("pjrt") {
+        Trainer::Pjrt(Box::new(coordinator(args)?))
+    } else {
+        Trainer::Host(host_trainer.clone())
+    };
+    let mut mgr = LifecycleManager::new(&size, cfg.clone(), backbone, trainer);
+    mgr.threads = neuroada::util::resolve_threads(threads);
+    mgr.out_dir = Some(opts.out_dir.clone());
+
+    let name = args.opt_or("adapter-name", "svc");
+    let task_name = args.opt_or("task", if cfg.n_classes > 0 { "glue-sst2" } else { "cs-boolq" });
+    let jobs = args.opt_usize("jobs").map_err(|e| anyhow!(e))?.unwrap_or(2).max(1);
+    let steps = args.opt_usize("steps").map_err(|e| anyhow!(e))?.unwrap_or(12);
+    let eval_n = args.opt_usize("eval-n").map_err(|e| anyhow!(e))?.unwrap_or(32);
+    let k = args.opt_nonzero_usize("k").map_err(|e| anyhow!(e))?.unwrap_or(1);
+    let budget = args.opt_usize("budget").map_err(|e| anyhow!(e))?.unwrap_or(0);
+
+    let mut job_table = Table::new("Lifecycle jobs").header(&[
+        "Job", "Seed", "Candidate", "Incumbent", "Loss", "Train s", "Verdict",
+    ]);
+    for j in 0..jobs {
+        let spec = JobSpec {
+            name: name.clone(),
+            task: task_name.clone(),
+            k,
+            budget,
+            steps,
+            seed: seed.wrapping_add(j as u64),
+            eval_examples: eval_n,
+        };
+        // a deliberately-corrupted candidate on the last job demonstrates
+        // the rollback path end-to-end (host trainer only)
+        let out = if args.flag("corrupt-last") && j + 1 == jobs && !args.flag("pjrt") {
+            let bad = Trainer::Host(HostTrainer { corrupt: 2.0, ..host_trainer.clone() });
+            let mut sab = LifecycleManager::new(&size, cfg.clone(), mgr.backbone().clone(), bad);
+            sab.threads = mgr.threads;
+            sab.out_dir = mgr.out_dir.clone();
+            sab.run_job(&srv, &spec)?
+        } else {
+            mgr.run_job(&srv, &spec)?
+        };
+        olog::info(
+            "lifecycle",
+            format_args!(
+                "job {j}: {} cand={:.3} inc={:.3} -> {}",
+                out.name,
+                out.candidate_metric,
+                out.incumbent_metric,
+                match out.version {
+                    Some(v) => format!("promoted @v{v}"),
+                    None => "rolled back".to_string(),
+                }
+            ),
+        );
+        job_table.row(vec![
+            out.name.clone(),
+            spec.seed.to_string(),
+            format!("{:.3}", out.candidate_metric),
+            format!("{:.3}", out.incumbent_metric),
+            format!("{:.3}", out.final_loss),
+            format!("{:.2}", out.train_secs),
+            match out.version {
+                Some(v) => format!("promoted @v{v}"),
+                None => "rolled back".to_string(),
+            },
+        ]);
+    }
+    job_table.print();
+
+    // drive traffic through whatever survived, so the promoted adapter's
+    // decayed-rate counter (and the merged/bypass machinery) sees real load
+    let names = srv.registry().names();
+    let n_req = args.opt_usize("requests").map_err(|e| anyhow!(e))?.unwrap_or(64);
+    let clients = args.opt_usize("clients").map_err(|e| anyhow!(e))?.unwrap_or(2).max(1);
+    let (mut ok, mut rejected) = (0usize, 0usize);
+    if cfg.n_classes == 0 && !names.is_empty() && n_req > 0 {
+        let task = tasks::by_name(&task_name).ok_or_else(|| anyhow!("unknown task {task_name:?}"))?;
+        let mut rng = Rng::new(seed ^ 0x5E21);
+        let requests: Vec<Request> = (0..n_req)
+            .map(|_| {
+                let ex = (task.gen)(&mut rng, cfg.vocab, cfg.seq - 2);
+                Request {
+                    adapter: names[rng.zipf(names.len(), 1.1)].clone(),
+                    prompt: ex.prompt,
+                    options: ex.options,
+                }
+            })
+            .collect();
+        let (o, r) = srv.drive_clients(requests, clients);
+        ok = o;
+        rejected = r;
+    }
+
+    let mut adapter_table = Table::new("Adapter registry")
+        .header(&["Adapter", "Version", "Deltas", "Requests", "Merges", "Resident"]);
+    for nm in srv.registry().names() {
+        if let Some(i) = srv.registry().info(&nm) {
+            adapter_table.row(vec![
+                nm,
+                format!("v{}", i.version),
+                fmt_bytes(i.delta_bytes),
+                i.requests.to_string(),
+                i.merges.to_string(),
+                if i.merged_resident { "merged".into() } else { "bypass".into() },
+            ]);
+        }
+    }
+    adapter_table.print();
+    let report = finish_serve(srv, http, trace_out.as_deref(), metrics_out.as_deref())?;
+    println!("{}", report.render());
+    if n_req > 0 && cfg.n_classes == 0 {
+        println!("served {ok}/{n_req} requests ({rejected} rejected) after the lifecycle jobs");
+    }
+    Ok(())
+}
+
 /// `neuroada serve --cls` (and any encoder `--size`): classification
 /// serving with a built-in correctness oracle. A GLUE task's dev-example
 /// stream is driven through the full scheduler TWICE — once on the pure
@@ -667,6 +871,7 @@ fn cmd_serve_cls(args: &Args, cfg: neuroada::config::ModelCfg) -> Result<()> {
     let rcfg = RegistryCfg {
         merged_capacity: args.opt_usize("capacity").map_err(|e| anyhow!(e))?.unwrap_or(2).max(1),
         promote_after: u64::MAX,
+        ..RegistryCfg::default()
     };
     let registry = AdapterRegistry::new(cfg.clone(), backbone.clone(), rcfg);
     for (name, deltas) in &adapters {

@@ -66,6 +66,14 @@ pub enum Stage {
     Merge,
     /// Registry: a merged copy evicted (LRU pressure or explicit).
     Evict,
+    /// Lifecycle: a fine-tune job's training run (job name in the label).
+    Train,
+    /// Lifecycle: A/B evaluation of candidate vs incumbent.
+    AbEval,
+    /// Lifecycle: candidate won and was swapped in (versioned cutover).
+    Promote,
+    /// Lifecycle: candidate lost and its artifacts were discarded.
+    Rollback,
 }
 
 impl Stage {
@@ -83,6 +91,10 @@ impl Stage {
             Stage::SwapIn => "swap_in",
             Stage::Merge => "merge",
             Stage::Evict => "evict",
+            Stage::Train => "train",
+            Stage::AbEval => "ab_eval",
+            Stage::Promote => "promote",
+            Stage::Rollback => "rollback",
         }
     }
 
@@ -104,6 +116,7 @@ impl Stage {
     fn cat(self) -> &'static str {
         match self {
             Stage::Merge | Stage::Evict => "registry",
+            Stage::Train | Stage::AbEval | Stage::Promote | Stage::Rollback => "lifecycle",
             Stage::Prefill
             | Stage::DecodeStream
             | Stage::DecodeStep

@@ -21,4 +21,4 @@ pub mod selection;
 
 pub use delta::DeltaStore;
 pub use method::{Method, MethodKind};
-pub use selection::{select_topk, RowSelection, Strategy};
+pub use selection::{allocate_budget, select_topk, RowSelection, Strategy};

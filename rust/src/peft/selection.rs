@@ -184,6 +184,80 @@ pub fn trainable_params(selections: &[&RowSelection]) -> usize {
     selections.iter().map(|s| s.d_out * s.k).sum()
 }
 
+/// Budget-adaptive per-projection `k` (the lifecycle / GD-FPS-style entry
+/// point): split one global trainable-parameter budget across projections
+/// in proportion to their measured warm-up gradient mass, instead of the
+/// uniform per-row `k` of [`select_topk`].
+///
+/// Inputs: `projs` as `(name, d_out, d_in)` (the `ModelCfg::proj_shapes`
+/// layout) and `mass[p] ≥ 0` per projection (non-finite or negative mass
+/// counts as zero; an all-zero mass vector degrades to uniform shares).
+/// Returns `(name, k_p)` in input order with the hard invariant
+/// `Σ d_out_p · k_p ≤ total_budget` — `k_p` may be 0, meaning the
+/// projection gets no bypass at all (callers skip it; [`select_topk`]
+/// requires `k ≥ 1`).
+///
+/// The apportionment is the largest-remainder method over parameter units:
+/// each projection's ideal share is `budget · mass_p / Σ mass`, floored to
+/// whole `k` (one `k` unit costs `d_out_p` parameters, capped at `d_in_p`),
+/// then leftover budget goes to the largest fractional remainders first
+/// (ties to the lower input index). Fully deterministic — same inputs,
+/// same allocation — with no RNG involved.
+pub fn allocate_budget(
+    projs: &[(String, usize, usize)],
+    mass: &[f64],
+    total_budget: usize,
+) -> Vec<(String, usize)> {
+    assert_eq!(projs.len(), mass.len(), "one mass per projection");
+    let clean: Vec<f64> =
+        mass.iter().map(|&m| if m.is_finite() && m > 0.0 { m } else { 0.0 }).collect();
+    let total_mass: f64 = clean.iter().sum();
+    // degenerate mass (all zero / non-finite): uniform shares, so a job
+    // with no warm-up signal still spends its budget
+    let share = |p: usize| -> f64 {
+        if total_mass > 0.0 {
+            clean[p] / total_mass
+        } else {
+            1.0 / projs.len().max(1) as f64
+        }
+    };
+    let mut ks: Vec<usize> = Vec::with_capacity(projs.len());
+    let mut rem: Vec<(f64, usize)> = Vec::with_capacity(projs.len());
+    let mut spent: usize = 0;
+    for (p, (_, d_out, d_in)) in projs.iter().enumerate() {
+        if *d_out == 0 || *d_in == 0 {
+            ks.push(0);
+            rem.push((0.0, p));
+            continue;
+        }
+        let ideal_k = (total_budget as f64 * share(p)) / *d_out as f64;
+        let k = (ideal_k.floor() as usize).min(*d_in);
+        ks.push(k);
+        // remainder in k-units; a d_in-capped projection wants nothing more
+        rem.push((if k < *d_in { ideal_k - k as f64 } else { 0.0 }, p));
+        spent += k * d_out;
+    }
+    // floors can only under-spend; distribute the leftover by largest
+    // remainder, skipping projections that are capped or unaffordable
+    rem.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    loop {
+        let mut progressed = false;
+        for &(_, p) in &rem {
+            let (_, d_out, d_in) = projs[p];
+            if ks[p] < d_in && d_out > 0 && spent + d_out <= total_budget {
+                ks[p] += 1;
+                spent += d_out;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    debug_assert!(spent <= total_budget);
+    projs.iter().zip(ks).map(|((name, _, _), k)| (name.clone(), k)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -300,5 +374,78 @@ mod tests {
         let s1 = select_topk(&w1, 2);
         let s2 = select_topk(&w2, 2);
         assert_eq!(trainable_params(&[&s1, &s2]), 28);
+    }
+
+    fn projs(shapes: &[(usize, usize)]) -> Vec<(String, usize, usize)> {
+        shapes
+            .iter()
+            .enumerate()
+            .map(|(i, &(d_out, d_in))| (format!("p{i}"), d_out, d_in))
+            .collect()
+    }
+
+    #[test]
+    fn budget_follows_gradient_mass() {
+        // twice the mass → (about) twice the parameters, and the heavy
+        // projection never ends up below the light one
+        let ps = projs(&[(8, 16), (8, 16)]);
+        let alloc = allocate_budget(&ps, &[2.0, 1.0], 96);
+        assert_eq!(alloc[0].0, "p0");
+        assert!(alloc[0].1 > alloc[1].1, "hot projection must earn more k: {alloc:?}");
+        let spent: usize = alloc.iter().map(|(_, k)| k * 8).sum();
+        assert!(spent <= 96);
+        // a zero-mass projection only gets leftovers the hot one can't absorb
+        let alloc = allocate_budget(&ps, &[1.0, 0.0], 64);
+        assert_eq!(alloc[0].1, 8, "hot projection takes its full share");
+        assert_eq!(alloc[1].1, 0);
+    }
+
+    #[test]
+    fn budget_degenerate_mass_is_uniform() {
+        let ps = projs(&[(4, 8), (4, 8)]);
+        let zero = allocate_budget(&ps, &[0.0, 0.0], 32);
+        let nan = allocate_budget(&ps, &[f64::NAN, f64::NEG_INFINITY], 32);
+        assert_eq!(zero, nan, "non-finite mass counts as zero");
+        assert_eq!(zero[0].1, zero[1].1, "no signal → uniform split");
+        assert_eq!(zero[0].1, 4);
+    }
+
+    /// Property (ISSUE 9): for random shapes/mass/budget the allocation
+    /// never exceeds the global budget, respects per-projection `d_in`
+    /// caps, replays identically, and `trainable_params` over the implied
+    /// selections reports exactly `Σ d_out·k`.
+    #[test]
+    fn budget_property_never_exceeds_and_is_deterministic() {
+        let mut rng = Rng::new(0xB0D6E7);
+        for case in 0..200 {
+            let n = 1 + (rng.next_u64() % 6) as usize;
+            let shapes: Vec<(usize, usize)> = (0..n)
+                .map(|_| (1 + (rng.next_u64() % 12) as usize, 1 + (rng.next_u64() % 12) as usize))
+                .collect();
+            let ps = projs(&shapes);
+            let mass: Vec<f64> = (0..n).map(|_| (rng.next_u64() % 100) as f64 / 10.0).collect();
+            let budget = (rng.next_u64() % 200) as usize;
+            let a = allocate_budget(&ps, &mass, budget);
+            let b = allocate_budget(&ps, &mass, budget);
+            assert_eq!(a, b, "case {case}: must be deterministic");
+            let mut spent = 0usize;
+            for ((name, k), (d_out, d_in)) in a.iter().zip(&shapes) {
+                assert!(*k <= *d_in, "case {case} {name}: k {k} over d_in {d_in}");
+                spent += k * d_out;
+            }
+            assert!(spent <= budget, "case {case}: spent {spent} over budget {budget}");
+            // exact accounting through real selections (k=0 rows skipped,
+            // exactly as the lifecycle trainer consumes the allocation)
+            let sels: Vec<RowSelection> = a
+                .iter()
+                .zip(&shapes)
+                .filter(|((_, k), _)| *k > 0)
+                .map(|((_, k), &(d_out, d_in))| {
+                    select_topk(&Tensor::zeros(&[d_out, d_in]), *k)
+                })
+                .collect();
+            let refs: Vec<&RowSelection> = sels.iter().collect();
+            assert_eq!(trainable_params(&refs), spent, "case {case}: exact accounting");
+        }
     }
 }

@@ -196,6 +196,9 @@ struct Inner {
     next_pf: usize,
     step: Vec<f64>,
     next_step: usize,
+    // --- adapter-lifecycle event counters (ISSUE 9) --------------------
+    /// Event kind (`"train"`, `"promote"`, `"rollback"`, …) → count.
+    lifecycle: BTreeMap<String, u64>,
 }
 
 /// Push into a `LATENCY_WINDOW`-bounded circular sample buffer.
@@ -340,6 +343,14 @@ impl ServeMetrics {
         *self.inner.lock().unwrap().rejected.entry(kind).or_insert(0) += 1;
     }
 
+    /// One adapter-lifecycle event (`"train"`, `"ab_eval"`, `"promote"`,
+    /// `"rollback"`, …), recorded by the lifecycle manager. Kinds are
+    /// free-form so the metric survives new lifecycle stages without a
+    /// schema change.
+    pub fn record_event(&self, kind: &str) {
+        *self.inner.lock().unwrap().lifecycle.entry(kind.to_string()).or_insert(0) += 1;
+    }
+
     /// Queue-depth gauge sample (taken at submit time).
     pub fn observe_queue_depth(&self, depth: usize) {
         let mut g = self.inner.lock().unwrap();
@@ -368,6 +379,7 @@ impl ServeMetrics {
             max_queue_depth: g.max_queue_depth,
             rejected: g.rejected.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
             adapters: g.adapters.clone(),
+            lifecycle: g.lifecycle.clone(),
             cls_served: g.cls_served,
             cls_latency: (!g.cls_latencies.is_empty()).then(|| Summary::of(&g.cls_latencies)),
             cls_batches: g.cls_batches as usize,
@@ -436,6 +448,11 @@ pub struct MetricsReport {
     pub max_queue_depth: usize,
     pub rejected: BTreeMap<String, u64>,
     pub adapters: BTreeMap<String, AdapterCounters>,
+    /// Adapter-lifecycle event counts by kind (`"train"`, `"promote"`,
+    /// `"rollback"`, …); empty unless a lifecycle manager is attached.
+    /// `Server::report` folds the registry's rate-demotion count in as
+    /// `"rate_demote"`.
+    pub lifecycle: BTreeMap<String, u64>,
     /// Completed classification requests (a subset of `served`).
     pub cls_served: u64,
     /// Latency summary in seconds over the most recent cls requests
@@ -650,6 +667,9 @@ impl MetricsReport {
         for (kind, n) in &self.rejected {
             t.row(vec![format!("rejected/{kind}"), n.to_string()]);
         }
+        for (kind, n) in &self.lifecycle {
+            t.row(vec![format!("lifecycle/{kind}"), n.to_string()]);
+        }
         let mut out = t.render();
         if !self.adapters.is_empty() {
             let mut a = Table::new("Per-adapter")
@@ -776,6 +796,12 @@ impl MetricsReport {
             let _ = writeln!(o, "# TYPE neuroada_kv_restores_total counter");
             let _ = writeln!(o, "neuroada_kv_restores_total {}", self.kv_restores);
         }
+        if !self.lifecycle.is_empty() {
+            let _ = writeln!(o, "# TYPE neuroada_lifecycle_total counter");
+            for (kind, n) in &self.lifecycle {
+                let _ = writeln!(o, "neuroada_lifecycle_total{{event=\"{kind}\"}} {n}");
+            }
+        }
         let _ = writeln!(o, "# TYPE neuroada_adapter_served_total counter");
         for (name, c) in &self.adapters {
             let _ = writeln!(o, "neuroada_adapter_served_total{{adapter=\"{name}\"}} {}", c.served);
@@ -825,6 +851,11 @@ impl MetricsReport {
             rej.set(k, *v);
         }
         o.set("rejected", rej);
+        let mut lc = Json::obj();
+        for (k, v) in &self.lifecycle {
+            lc.set(k, *v);
+        }
+        o.set("lifecycle", lc);
         let mut stages = Json::obj();
         for st in StageLat::ALL {
             stages.set(st.name(), opt_summary(&self.stage(st).cloned()));
@@ -1165,6 +1196,32 @@ mod tests {
         assert_eq!(parsed.at(&["kv", "prefix_hits"]).and_then(|v| v.as_usize()), Some(4));
         assert_eq!(parsed.at(&["kv", "bytes_resident"]).and_then(|v| v.as_usize()), Some(40_960));
         assert_eq!(parsed.at(&["kv", "restores"]).and_then(|v| v.as_usize()), Some(1));
+    }
+
+    #[test]
+    fn lifecycle_events_render_and_export() {
+        let m = ServeMetrics::new();
+        // no lifecycle traffic: no rows, no metric family, empty JSON obj
+        let bare = m.snapshot();
+        assert!(bare.lifecycle.is_empty());
+        assert!(!bare.render().contains("lifecycle/"));
+        assert!(!bare.prometheus().contains("neuroada_lifecycle_total"));
+        m.record_event("train");
+        m.record_event("ab_eval");
+        m.record_event("promote");
+        m.record_event("train");
+        let r = m.snapshot();
+        assert_eq!(r.lifecycle["train"], 2);
+        assert_eq!(r.lifecycle["promote"], 1);
+        let rendered = r.render();
+        assert!(rendered.contains("lifecycle/train"));
+        assert!(rendered.contains("lifecycle/promote"));
+        let prom = r.prometheus();
+        assert!(prom.contains("neuroada_lifecycle_total{event=\"train\"} 2"));
+        assert!(prom.contains("neuroada_lifecycle_total{event=\"ab_eval\"} 1"));
+        let parsed = Json::parse(&r.to_json().dump()).expect("metrics JSON parses back");
+        assert_eq!(parsed.at(&["lifecycle", "train"]).and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(parsed.at(&["lifecycle", "promote"]).and_then(|v| v.as_usize()), Some(1));
     }
 
     #[test]

@@ -64,7 +64,8 @@ pub use crate::model::SampleCfg;
 pub use generate::{FinishReason, GenEvent, GenResponse, GenTicket, GenerateRequest};
 pub use metrics::{AdapterCounters, MetricsReport, ServeMetrics};
 pub use registry::{
-    AdapterInfo, AdapterRegistry, Backbone, ModelKind, ModelRef, RegistryCfg, ServePath,
+    AdapterInfo, AdapterRegistry, Backbone, ModelKind, ModelRef, PromotionPolicy, RegistryCfg,
+    ServePath,
 };
 pub use scheduler::{
     Backend, ClsRequest, ClsResponse, ClsTicket, Reject, Request, Response, ServeCfg, Server,

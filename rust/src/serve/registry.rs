@@ -11,10 +11,23 @@
 //!   deltas, applied per projection as `x Wᵀ + x Δᵀ` during the forward.
 //!   Cold adapters serve through this without ever materializing weights.
 //!
-//! An adapter is promoted (merged + cached) once it has been requested
-//! `promote_after` times; promotion evicts the least-recently-used merged
-//! copy when the cache is full. The deltas themselves stay registered either
-//! way, so demotion only costs the next request the bypass overhead.
+//! Promotion is driven by a [`PromotionPolicy`]: the legacy
+//! `CountThreshold` merges an adapter once it has been requested
+//! `promote_after` times in its lifetime, while `DecayedRate` tracks an
+//! exponentially-decayed per-adapter request rate that drives promotion
+//! *and* demotion — a cooling adapter's merged copy is dropped once its
+//! rate falls below the demote threshold, yielding the slot to whoever is
+//! hot now. Promotion evicts the least-recently-used merged copy when the
+//! cache is full either way. The deltas themselves stay registered, so
+//! demotion only costs the next request the bypass overhead.
+//!
+//! Adapters are versioned: every (re-)registration or [`swap_in`]
+//! increments the entry's version (`name@vN`). `swap_in` is the online
+//! cutover path — the replacement merged view is built *before* the
+//! critical section, so concurrent resolves serve either the old version
+//! or the new one, never a stale or half-merged view.
+//!
+//! [`swap_in`]: AdapterRegistry::swap_in
 //!
 //! The backbone (and every merged copy) can be held quantized — see
 //! [`Backbone`] and [`AdapterRegistry::set_backbone_dtype`]: bf16 halves
@@ -188,19 +201,48 @@ impl ModelRef {
     }
 }
 
+/// What earns (and loses) a merged backbone copy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PromotionPolicy {
+    /// Legacy fixed-count policy: promote once an adapter's *lifetime*
+    /// request count reaches [`RegistryCfg::promote_after`]. Never demotes
+    /// on its own — merged copies only leave through LRU capacity pressure
+    /// or an explicit [`AdapterRegistry::demote`].
+    CountThreshold,
+    /// Exponentially-decayed per-adapter request counters: every resolve
+    /// decays the adapter's counter by `0.5^(Δt / half_life_s)` then adds
+    /// the batch size. An adapter is promoted when its counter reaches
+    /// `promote`, and a *resident merged* adapter is demoted back to the
+    /// bypass once its counter decays below `demote` — a cooling adapter
+    /// yields its merged slot instead of squatting on it forever.
+    DecayedRate { half_life_s: f64, promote: f64, demote: f64 },
+}
+
 /// Registry policy knobs.
 #[derive(Debug, Clone)]
 pub struct RegistryCfg {
     /// Merged backbone copies kept resident (0 disables the merged path).
     pub merged_capacity: usize,
-    /// Requests before an adapter earns a merged copy. 1 = merge on first
-    /// use; higher values keep one-off tenants on the cheap bypass path.
+    /// Requests before an adapter earns a merged copy under the legacy
+    /// [`PromotionPolicy::CountThreshold`] policy. 1 = merge on first use;
+    /// higher values keep one-off tenants on the cheap bypass path.
+    /// Ignored under [`PromotionPolicy::DecayedRate`].
     pub promote_after: u64,
+    /// Promotion/demotion policy. Defaults to the legacy
+    /// [`PromotionPolicy::CountThreshold`] so existing callers keep their
+    /// exact behavior; the lifecycle service runs [`DecayedRate`].
+    ///
+    /// [`DecayedRate`]: PromotionPolicy::DecayedRate
+    pub policy: PromotionPolicy,
 }
 
 impl Default for RegistryCfg {
     fn default() -> RegistryCfg {
-        RegistryCfg { merged_capacity: 2, promote_after: 3 }
+        RegistryCfg {
+            merged_capacity: 2,
+            promote_after: 3,
+            policy: PromotionPolicy::CountThreshold,
+        }
     }
 }
 
@@ -211,6 +253,9 @@ pub struct AdapterInfo {
     pub merges: u64,
     pub merged_resident: bool,
     pub delta_bytes: u64,
+    /// Monotonic per-name version: 1 at first registration, +1 on every
+    /// re-register / [`AdapterRegistry::swap_in`] (`name@vN`).
+    pub version: u64,
 }
 
 struct Entry {
@@ -222,14 +267,24 @@ struct Entry {
     /// Bumped on (re-)registration: a merge built from an older generation's
     /// deltas must never be installed into a hot-swapped entry.
     generation: u64,
+    /// Per-name version (`name@vN`), monotonic across re-registrations and
+    /// swaps — unlike `generation`, which is a global tick.
+    version: u64,
     last_used: u64,
     requests: u64,
     merges: u64,
+    /// Decayed request counter ([`PromotionPolicy::DecayedRate`]), together
+    /// with the registry-epoch-relative time it was last decayed to.
+    rate: f64,
+    rate_at_s: f64,
 }
 
 struct Inner {
     entries: BTreeMap<String, Entry>,
     tick: u64,
+    /// Demotions performed by the decayed-rate policy (exported on the
+    /// serving metrics next to the lifecycle counters).
+    rate_demotions: u64,
 }
 
 /// Thread-safe multi-adapter store over one frozen backbone.
@@ -238,6 +293,9 @@ pub struct AdapterRegistry {
     rcfg: RegistryCfg,
     backbone: Arc<Backbone>,
     inner: Mutex<Inner>,
+    /// Epoch for the decayed-rate clock: rate timestamps are seconds since
+    /// here. Tests drive the `_at` resolve variants with synthetic clocks.
+    epoch: Instant,
     /// Optional span tracer (installed by the server): merge builds and LRU
     /// evictions show up on the trace timeline next to the requests that
     /// triggered them. Separate lock from `inner` — never held together.
@@ -250,9 +308,19 @@ impl AdapterRegistry {
             cfg,
             rcfg,
             backbone: Arc::new(Backbone::F32(backbone)),
-            inner: Mutex::new(Inner { entries: BTreeMap::new(), tick: 0 }),
+            inner: Mutex::new(Inner {
+                entries: BTreeMap::new(),
+                tick: 0,
+                rate_demotions: 0,
+            }),
+            epoch: Instant::now(),
             tracer: Mutex::new(None),
         }
+    }
+
+    /// Seconds since the registry was created — the decayed-rate clock.
+    fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
     }
 
     /// Like [`AdapterRegistry::new`], but holding the frozen backbone at
@@ -332,9 +400,8 @@ impl AdapterRegistry {
         self.backbone.clone()
     }
 
-    /// Register (or replace) an adapter. Deltas are validated against the
-    /// backbone's projection shapes; a replacement drops any merged copy.
-    pub fn register(&self, name: &str, deltas: Vec<(String, DeltaStore)>) -> Result<()> {
+    /// Validate a delta set against the backbone's projection shapes.
+    fn validate_deltas(&self, name: &str, deltas: &[(String, DeltaStore)]) -> Result<()> {
         if name.is_empty() {
             bail!("adapter name must be non-empty");
         }
@@ -347,7 +414,7 @@ impl AdapterRegistry {
             .into_iter()
             .map(|(n, o, i)| (n, (o, i)))
             .collect();
-        for (proj, d) in &deltas {
+        for (proj, d) in deltas {
             let (d_out, d_in) = *shapes
                 .get(proj)
                 .ok_or_else(|| anyhow!("adapter {name:?}: unknown projection {proj:?}"))?;
@@ -360,9 +427,18 @@ impl AdapterRegistry {
             }
             d.sel.check().map_err(|e| anyhow!("adapter {name:?}: {proj}: {e}"))?;
         }
+        Ok(())
+    }
+
+    /// Register (or replace) an adapter. Deltas are validated against the
+    /// backbone's projection shapes; a replacement drops any merged copy,
+    /// resets the request counters, and bumps the per-name version.
+    pub fn register(&self, name: &str, deltas: Vec<(String, DeltaStore)>) -> Result<()> {
+        self.validate_deltas(name, deltas.as_slice())?;
         let mut g = self.inner.lock().unwrap();
         g.tick += 1;
         let tick = g.tick;
+        let version = g.entries.get(name).map_or(1, |e| e.version + 1);
         g.entries.insert(
             name.to_string(),
             Entry {
@@ -370,12 +446,112 @@ impl AdapterRegistry {
                 merged: None,
                 merge_in_flight: false,
                 generation: tick,
+                version,
                 last_used: tick,
                 requests: 0,
                 merges: 0,
+                rate: 0.0,
+                rate_at_s: 0.0,
             },
         );
         Ok(())
+    }
+
+    /// Atomically cut an adapter over to a new delta set — the lifecycle
+    /// promotion path (`name@vN`). Unlike [`register`], the request/rate
+    /// counters carry over (the tenant's traffic history belongs to the
+    /// name, not the weights), and with `premerge` the replacement merged
+    /// copy is built *before* the critical section: at no point does a
+    /// previously-merged adapter degrade to bypass or serve a half-merged
+    /// view mid-swap. Concurrent in-flight batches keep the `Arc` of
+    /// whichever view they resolved — old weights stay alive until their
+    /// last batch finishes, but no batch resolved after `swap_in` returns
+    /// ever sees them. Returns the new version number.
+    ///
+    /// [`register`]: AdapterRegistry::register
+    pub fn swap_in(
+        &self,
+        name: &str,
+        deltas: Vec<(String, DeltaStore)>,
+        premerge: bool,
+    ) -> Result<u64> {
+        self.validate_deltas(name, deltas.as_slice())?;
+        let deltas = Arc::new(deltas);
+        // build the new merged view OUTSIDE the lock, from the new deltas —
+        // resolves keep serving the old version until the install below
+        let merged = if premerge && self.rcfg.merged_capacity > 0 {
+            let tracer = self.tracer();
+            let t_merge = Instant::now();
+            let m = self.build_merged(&deltas);
+            if let Some(t) = &tracer {
+                t.span(0, Stage::Merge, t_merge, Instant::now(), name);
+            }
+            Some(m)
+        } else {
+            None
+        };
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        let version = match g.entries.get_mut(name) {
+            Some(e) => {
+                e.deltas = deltas;
+                e.merged = merged;
+                // any merge still in flight was built from the old deltas;
+                // the generation bump below makes its install a no-op
+                e.merge_in_flight = false;
+                e.generation = tick;
+                e.version += 1;
+                e.last_used = tick;
+                e.version
+            }
+            None => {
+                g.entries.insert(
+                    name.to_string(),
+                    Entry {
+                        deltas,
+                        merged,
+                        merge_in_flight: false,
+                        generation: tick,
+                        version: 1,
+                        last_used: tick,
+                        requests: 0,
+                        merges: 0,
+                        rate: 0.0,
+                        rate_at_s: 0.0,
+                    },
+                );
+                1
+            }
+        };
+        if premerge {
+            self.evict_lru_over_capacity(&mut g, name);
+        }
+        Ok(version)
+    }
+
+    /// The adapter's current version (`name@vN`), if registered.
+    pub fn version(&self, name: &str) -> Option<u64> {
+        self.inner.lock().unwrap().entries.get(name).map(|e| e.version)
+    }
+
+    /// Demotions performed so far by [`PromotionPolicy::DecayedRate`].
+    pub fn rate_demotions(&self) -> u64 {
+        self.inner.lock().unwrap().rate_demotions
+    }
+
+    /// The adapter's decayed request rate, decayed to now ([`PromotionPolicy::DecayedRate`];
+    /// 0 under the count policy until the adapter is resolved).
+    pub fn current_rate(&self, name: &str) -> Option<f64> {
+        let now_s = self.now_s();
+        let half_life = match self.rcfg.policy {
+            PromotionPolicy::DecayedRate { half_life_s, .. } => half_life_s,
+            PromotionPolicy::CountThreshold => return self.contains(name).then_some(0.0),
+        };
+        let g = self.inner.lock().unwrap();
+        g.entries
+            .get(name)
+            .map(|e| e.rate * decay_factor(now_s - e.rate_at_s, half_life))
     }
 
     /// Register an adapter from a delta checkpoint directory (the layout
@@ -436,7 +612,39 @@ impl AdapterRegistry {
             merges: e.merges,
             merged_resident: e.merged.is_some(),
             delta_bytes: e.deltas.iter().map(|(_, d)| d.storage_bytes()).sum(),
+            version: e.version,
         })
+    }
+
+    /// Under [`PromotionPolicy::DecayedRate`]: decay every adapter's counter
+    /// to `now_s`, add `n` to `name`'s, and demote any *resident merged*
+    /// adapter whose counter fell below the demote threshold (the cooling
+    /// adapter yields its slot). Returns `name`'s updated rate. No-op under
+    /// the count policy. Called with the registry lock held; the tracer
+    /// lock nests inside it, same as the LRU eviction path.
+    fn rate_update(&self, g: &mut Inner, name: &str, n: u64, now_s: f64) -> f64 {
+        let PromotionPolicy::DecayedRate { half_life_s, demote, .. } = self.rcfg.policy else {
+            return 0.0;
+        };
+        let mut rate = 0.0;
+        let mut demoted = 0u64;
+        for (nm, e) in g.entries.iter_mut() {
+            e.rate *= decay_factor(now_s - e.rate_at_s, half_life_s);
+            e.rate_at_s = e.rate_at_s.max(now_s);
+            if nm == name {
+                e.rate += n as f64;
+                rate = e.rate;
+            }
+            if e.merged.is_some() && e.rate < demote {
+                e.merged = None;
+                demoted += 1;
+                if let Some(t) = self.tracer() {
+                    t.instant(0, Stage::Evict, &format!("{nm} (rate-demoted)"));
+                }
+            }
+        }
+        g.rate_demotions += demoted;
+        rate
     }
 
     /// Resolve one request for an adapter. See [`AdapterRegistry::resolve_batch`].
@@ -448,12 +656,17 @@ impl AdapterRegistry {
     /// uses the resident merged copy when one exists, but NEVER builds a
     /// merge inline — the single decode thread must not stall every active
     /// stream behind an O(params) promotion. The counted requests still
-    /// advance `promote_after`, so the next scoring-path resolve performs
-    /// the merge (on a pool worker) once the threshold is crossed.
+    /// advance the promotion policy, so the next scoring-path resolve
+    /// performs the merge (on a pool worker) once the threshold is crossed.
     pub fn resolve_no_promote(&self, name: &str) -> Option<ModelRef> {
+        let now_s = self.now_s();
         let mut g = self.inner.lock().unwrap();
         g.tick += 1;
         let tick = g.tick;
+        if !g.entries.contains_key(name) {
+            return None;
+        }
+        self.rate_update(&mut g, name, 1, now_s);
         let e = g.entries.get_mut(name)?;
         e.last_used = tick;
         e.requests += 1;
@@ -467,18 +680,31 @@ impl AdapterRegistry {
     }
 
     /// Resolve a coalesced batch of `n_requests` for an adapter, applying
-    /// the promotion policy (`promote_after` counts *requests*, not
-    /// batches). `None` for unknown adapters.
+    /// the [`PromotionPolicy`] (requests are counted *per request*, not per
+    /// batch). `None` for unknown adapters.
     ///
     /// The O(params) merge itself runs OUTSIDE the registry lock, so
     /// admission (`contains`) and other workers never stall behind a
     /// promotion; a `merge_in_flight` flag keeps concurrent batches of the
     /// same adapter on the bypass instead of racing to build duplicates.
     pub fn resolve_batch(&self, name: &str, n_requests: u64) -> Option<ModelRef> {
+        self.resolve_batch_at(name, n_requests, self.now_s())
+    }
+
+    /// [`resolve_batch`] against an explicit clock (seconds since the
+    /// registry epoch) — the decayed-rate policy is deterministic under a
+    /// synthetic clock, which the policy unit tests drive directly.
+    ///
+    /// [`resolve_batch`]: AdapterRegistry::resolve_batch
+    fn resolve_batch_at(&self, name: &str, n_requests: u64, now_s: f64) -> Option<ModelRef> {
         let (deltas, generation) = {
             let mut g = self.inner.lock().unwrap();
             g.tick += 1;
             let tick = g.tick;
+            if !g.entries.contains_key(name) {
+                return None;
+            }
+            let rate = self.rate_update(&mut g, name, n_requests, now_s);
             let e = g.entries.get_mut(name)?;
             e.last_used = tick;
             e.requests += n_requests;
@@ -486,8 +712,11 @@ impl AdapterRegistry {
                 return Some(ModelRef::Merged(m.clone()));
             }
             let promote = self.rcfg.merged_capacity > 0
-                && e.requests >= self.rcfg.promote_after
-                && !e.merge_in_flight;
+                && !e.merge_in_flight
+                && match self.rcfg.policy {
+                    PromotionPolicy::CountThreshold => e.requests >= self.rcfg.promote_after,
+                    PromotionPolicy::DecayedRate { promote, .. } => rate >= promote,
+                };
             if !promote {
                 return Some(ModelRef::Bypass {
                     backbone: self.backbone.clone(),
@@ -576,6 +805,13 @@ impl AdapterRegistry {
         Arc::new(merged)
     }
 
+    /// Decayed-rate eviction pass against an explicit clock (tests).
+    #[cfg(test)]
+    fn sweep_at(&self, now_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        self.rate_update(&mut g, "", 0, now_s);
+    }
+
     /// Evict least-recently-used merged copies until within capacity,
     /// never evicting `keep` (the adapter just promoted).
     fn evict_lru_over_capacity(&self, g: &mut Inner, keep: &str) {
@@ -601,6 +837,15 @@ impl AdapterRegistry {
             }
         }
     }
+}
+
+/// `0.5^(dt/half_life)` with non-positive intervals (clock skew between
+/// callers racing for the lock) and degenerate half-lives clamped to 1.
+fn decay_factor(dt_s: f64, half_life_s: f64) -> f64 {
+    if dt_s <= 0.0 || half_life_s <= 0.0 {
+        return 1.0;
+    }
+    (0.5f64).powf(dt_s / half_life_s)
 }
 
 #[cfg(test)]
@@ -659,7 +904,7 @@ mod tests {
 
     #[test]
     fn promotion_policy_and_hit_tracking() {
-        let reg = nano_registry(RegistryCfg { merged_capacity: 2, promote_after: 3 });
+        let reg = nano_registry(RegistryCfg { merged_capacity: 2, promote_after: 3, ..RegistryCfg::default() });
         reg.register("a", adapter(&reg, 1)).unwrap();
         // first two requests ride the bypass
         assert_eq!(reg.resolve("a").unwrap().path(), ServePath::Bypass);
@@ -679,7 +924,7 @@ mod tests {
 
     #[test]
     fn lru_eviction_of_merged_backbones() {
-        let reg = nano_registry(RegistryCfg { merged_capacity: 1, promote_after: 1 });
+        let reg = nano_registry(RegistryCfg { merged_capacity: 1, promote_after: 1, ..RegistryCfg::default() });
         for (name, seed) in [("a", 1u64), ("b", 2), ("c", 3)] {
             reg.register(name, adapter(&reg, seed)).unwrap();
         }
@@ -701,7 +946,7 @@ mod tests {
 
     #[test]
     fn resolve_no_promote_counts_but_never_merges() {
-        let reg = nano_registry(RegistryCfg { merged_capacity: 2, promote_after: 1 });
+        let reg = nano_registry(RegistryCfg { merged_capacity: 2, promote_after: 1, ..RegistryCfg::default() });
         reg.register("a", adapter(&reg, 1)).unwrap();
         // stays on the bypass even past promote_after (no inline merge)
         for _ in 0..3 {
@@ -717,7 +962,7 @@ mod tests {
 
     #[test]
     fn capacity_zero_never_merges() {
-        let reg = nano_registry(RegistryCfg { merged_capacity: 0, promote_after: 1 });
+        let reg = nano_registry(RegistryCfg { merged_capacity: 0, promote_after: 1, ..RegistryCfg::default() });
         reg.register("a", adapter(&reg, 1)).unwrap();
         for _ in 0..5 {
             assert_eq!(reg.resolve("a").unwrap().path(), ServePath::Bypass);
@@ -727,7 +972,7 @@ mod tests {
 
     #[test]
     fn reregistration_drops_merged_copy() {
-        let reg = nano_registry(RegistryCfg { merged_capacity: 2, promote_after: 1 });
+        let reg = nano_registry(RegistryCfg { merged_capacity: 2, promote_after: 1, ..RegistryCfg::default() });
         reg.register("a", adapter(&reg, 1)).unwrap();
         reg.resolve("a").unwrap();
         assert!(reg.is_merged("a"));
@@ -741,7 +986,7 @@ mod tests {
 
     #[test]
     fn resolved_views_plan_without_copying() {
-        let reg = nano_registry(RegistryCfg { merged_capacity: 1, promote_after: 1 });
+        let reg = nano_registry(RegistryCfg { merged_capacity: 1, promote_after: 1, ..RegistryCfg::default() });
         reg.register("a", adapter(&reg, 4)).unwrap();
         let cfg = reg.model_cfg().clone();
         // bypass view: the adapter's single delta is pre-bound
@@ -756,7 +1001,7 @@ mod tests {
 
     #[test]
     fn tracer_records_merge_and_evict_events() {
-        let reg = nano_registry(RegistryCfg { merged_capacity: 1, promote_after: 1 });
+        let reg = nano_registry(RegistryCfg { merged_capacity: 1, promote_after: 1, ..RegistryCfg::default() });
         reg.register("a", adapter(&reg, 1)).unwrap();
         reg.register("b", adapter(&reg, 2)).unwrap();
         let tracer = Tracer::new(true, 256);
@@ -786,7 +1031,7 @@ mod tests {
         let mut reg = AdapterRegistry::with_dtype(
             cfg,
             backbone,
-            RegistryCfg { merged_capacity: 2, promote_after: 1 },
+            RegistryCfg { merged_capacity: 2, promote_after: 1, ..RegistryCfg::default() },
             BackboneDtype::I8,
         )
         .unwrap();
@@ -819,7 +1064,7 @@ mod tests {
 
     #[test]
     fn demote_and_evict() {
-        let reg = nano_registry(RegistryCfg { merged_capacity: 2, promote_after: 1 });
+        let reg = nano_registry(RegistryCfg { merged_capacity: 2, promote_after: 1, ..RegistryCfg::default() });
         reg.register("a", adapter(&reg, 1)).unwrap();
         reg.resolve("a").unwrap();
         assert!(reg.is_merged("a"));
@@ -829,5 +1074,106 @@ mod tests {
         assert!(reg.evict("a"));
         assert!(!reg.contains("a"));
         assert!(!reg.evict("a"));
+    }
+
+    /// ISSUE 9: under the decayed-rate policy a hot adapter promotes, then
+    /// — once its rate decays below a (now hotter) cold adapter's — yields
+    /// its merged slot via the demotion sweep. Driven through the explicit
+    /// `_at` clock, so the decay math is exact and deterministic.
+    #[test]
+    fn decayed_rate_promotes_then_demotes_cooling_adapter() {
+        let reg = nano_registry(RegistryCfg {
+            merged_capacity: 2,
+            promote_after: u64::MAX, // must be ignored by the rate policy
+            policy: PromotionPolicy::DecayedRate {
+                half_life_s: 10.0,
+                promote: 5.0,
+                demote: 2.0,
+            },
+        });
+        reg.register("hot", adapter(&reg, 1)).unwrap();
+        reg.register("cold", adapter(&reg, 2)).unwrap();
+        // burst at t=0: rate 6 ≥ promote 5 merges immediately
+        assert_eq!(reg.resolve_batch_at("hot", 6, 0.0).unwrap().path(), ServePath::Merged);
+        assert!(reg.is_merged("hot"));
+        // a trickle on the other adapter stays on the bypass
+        assert_eq!(reg.resolve_batch_at("cold", 1, 0.0).unwrap().path(), ServePath::Bypass);
+        // three half-lives later hot has decayed to 6·0.125 = 0.75 < 2:
+        // cold's burst promotes it and the sweep demotes hot in the same
+        // resolve — the cooling adapter yields its slot
+        assert_eq!(reg.resolve_batch_at("cold", 6, 30.0).unwrap().path(), ServePath::Merged);
+        assert!(reg.is_merged("cold"));
+        assert!(!reg.is_merged("hot"), "cooled adapter must yield its merged slot");
+        assert_eq!(reg.rate_demotions(), 1);
+        // returning traffic re-promotes hot (capacity 2: both resident)
+        assert_eq!(reg.resolve_batch_at("hot", 8, 31.0).unwrap().path(), ServePath::Merged);
+        assert!(reg.is_merged("cold"));
+    }
+
+    /// The demotion sweep also fires with zero traffic on the cooled
+    /// adapter itself — any resolve (or the test-only sweep) decays
+    /// every entry.
+    #[test]
+    fn decayed_rate_sweep_demotes_without_traffic() {
+        let reg = nano_registry(RegistryCfg {
+            merged_capacity: 2,
+            promote_after: 1,
+            policy: PromotionPolicy::DecayedRate {
+                half_life_s: 10.0,
+                promote: 5.0,
+                demote: 2.0,
+            },
+        });
+        reg.register("a", adapter(&reg, 1)).unwrap();
+        assert_eq!(reg.resolve_batch_at("a", 6, 0.0).unwrap().path(), ServePath::Merged);
+        reg.sweep_at(50.0); // 5 half-lives: 6·0.03125 ≈ 0.19 < 2
+        assert!(!reg.is_merged("a"));
+        assert_eq!(reg.rate_demotions(), 1);
+        assert!(reg.current_rate("a").unwrap() < 0.2);
+        assert!(reg.contains("a"), "demotion never drops the deltas");
+    }
+
+    /// ISSUE 9: `swap_in` is a versioned atomic cutover — the premerged
+    /// replacement is installed in one critical section, so the first
+    /// post-swap resolve already serves the NEW merged copy (never bypass,
+    /// never the old weights), and counters carry over.
+    #[test]
+    fn swap_in_versioned_atomic_cutover() {
+        let reg = nano_registry(RegistryCfg { merged_capacity: 2, promote_after: 1, ..RegistryCfg::default() });
+        reg.register("a", adapter(&reg, 1)).unwrap();
+        assert_eq!(reg.version("a"), Some(1));
+        assert_eq!(reg.resolve("a").unwrap().path(), ServePath::Merged);
+        let old = match reg.resolve("a").unwrap() {
+            ModelRef::Merged(m) => m,
+            _ => panic!("expected merged"),
+        };
+        let v = reg.swap_in("a", adapter(&reg, 9), true).unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(reg.info("a").unwrap().version, 2);
+        assert!(reg.info("a").unwrap().requests > 0, "counters carry across the swap");
+        assert!(reg.is_merged("a"), "premerged swap keeps the adapter merged");
+        match reg.resolve("a").unwrap() {
+            ModelRef::Merged(m) => {
+                assert!(!Arc::ptr_eq(&m, &old), "stale merged copy served after swap")
+            }
+            _ => panic!("premerged swap must resolve merged"),
+        }
+        // the new version really is the new deltas
+        match reg.bypass("a").unwrap() {
+            ModelRef::Bypass { deltas, .. } => {
+                let want = adapter(&reg, 9);
+                assert_eq!(deltas[0].1.to_bytes(), want[0].1.to_bytes());
+            }
+            _ => panic!("expected bypass"),
+        }
+        // without premerge the swap lands on the bypass path; carried
+        // counters re-promote on the next resolve
+        let v = reg.swap_in("a", adapter(&reg, 11), false).unwrap();
+        assert_eq!(v, 3);
+        assert!(!reg.is_merged("a"));
+        assert_eq!(reg.resolve("a").unwrap().path(), ServePath::Merged);
+        // swap_in on an unknown name registers version 1
+        assert_eq!(reg.swap_in("b", adapter(&reg, 12), false).unwrap(), 1);
+        assert!(reg.contains("b"));
     }
 }

@@ -57,6 +57,7 @@ use crate::model::kvpool::{
     DEFAULT_PAGE_POSITIONS,
 };
 use crate::model::{sample_token, PlannedModel, SampleCfg};
+use crate::peft::DeltaStore;
 use crate::runtime::manifest::ArtifactMeta;
 use crate::runtime::{state::run_once, Engine, Value};
 use crate::tensor::pool::KernelPool;
@@ -520,6 +521,13 @@ impl Server {
         Self::report(&self.shared)
     }
 
+    /// Count one adapter-lifecycle event (`"train"`, `"promote"`, …) in
+    /// this server's metrics — the lifecycle manager's sink; surfaced by
+    /// every [`MetricsReport`] exporter.
+    pub fn record_event(&self, kind: &str) {
+        self.shared.metrics.record_event(kind);
+    }
+
     /// Snapshot + the pool-utilization fields only the server can fill
     /// (the metrics module never holds a [`KernelPool`]).
     fn report(sh: &Shared) -> MetricsReport {
@@ -542,7 +550,25 @@ impl Server {
         m.kv_prefix_hits = kv.prefix_hits;
         m.kv_preemptions = kv.preemptions;
         m.kv_restores = kv.restores;
+        let demotions = sh.registry.rate_demotions();
+        if demotions > 0 {
+            *m.lifecycle.entry("rate_demote".to_string()).or_insert(0) += demotions;
+        }
         m
+    }
+
+    /// Hot-swap `name` to a new delta set with a **versioned atomic
+    /// cutover** (`AdapterRegistry::swap_in`): in-flight requests finish on
+    /// the version they resolved; later resolves see the new one. The new
+    /// version is premerged iff the old one was serving merged, so a hot
+    /// adapter never regresses to the bypass path across a cutover.
+    /// Returns the new version number.
+    pub fn swap_adapter(&self, name: &str, deltas: Vec<(String, DeltaStore)>) -> Result<u64> {
+        let premerge = matches!(
+            self.shared.registry.info(name),
+            Some(info) if info.merged_resident
+        );
+        self.shared.registry.swap_in(name, deltas, premerge)
     }
 
     /// The decode thread's paged KV page pool — gauges and counters via

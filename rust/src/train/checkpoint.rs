@@ -50,16 +50,30 @@ pub fn load_params(dir: impl AsRef<Path>) -> Result<ValueStore> {
     let blob = fs::read(dir.join("params.bin"))?;
     let mut st = ValueStore::new();
     for e in meta.get("tensors").and_then(Json::as_arr).unwrap_or(&[]) {
-        let name = e.get("name").and_then(Json::as_str).ok_or_else(|| anyhow!("bad tensor"))?;
-        let off = e.get("offset").and_then(Json::as_usize).unwrap() * 1;
-        let len = e.get("len").and_then(Json::as_usize).unwrap();
+        // every field is untrusted: a truncated or hand-edited manifest must
+        // surface as a typed error naming the tensor, never a panic
+        let name = e
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor entry missing string \"name\""))?;
+        let off = e
+            .get("offset")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("{name}: missing or non-integer \"offset\""))?;
+        let len = e
+            .get("len")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("{name}: missing or non-integer \"len\""))?;
         let shape: Vec<usize> = e
             .get("shape")
             .and_then(Json::as_arr)
-            .unwrap()
+            .ok_or_else(|| anyhow!("{name}: missing \"shape\" array"))?
             .iter()
-            .map(|d| d.as_usize().unwrap())
-            .collect();
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("{name}: non-integer shape dim")))
+            .collect::<Result<_>>()?;
+        if shape.iter().product::<usize>() != len {
+            bail!("{name}: shape {shape:?} does not cover len {len}");
+        }
         if off + len * 4 > blob.len() {
             bail!("{name}: blob overrun");
         }
@@ -137,6 +151,126 @@ mod tests {
         assert_eq!(back.len(), 1);
         assert_eq!(back[0].0, "l0.wq");
         assert_eq!(back[0].1.theta_f32(), d.theta_f32());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("neuroada-{tag}-{}", std::process::id()))
+    }
+
+    /// Regression (ISSUE 9 satellite): a truncated params.bin used to pass
+    /// the manifest parse and fail late; the typed path must name the tensor.
+    #[test]
+    fn load_params_rejects_truncated_blob() {
+        let cfg = presets::model("nano").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(0));
+        let dir = tmp("ckpt-trunc");
+        save_params(&dir, &params, "test").unwrap();
+        let blob = std::fs::read(dir.join("params.bin")).unwrap();
+        std::fs::write(dir.join("params.bin"), &blob[..blob.len() / 2]).unwrap();
+        let err = load_params(&dir).unwrap_err().to_string();
+        assert!(err.contains("blob overrun"), "got: {err}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Regression: missing manifest fields used to hit a bare `.unwrap()`
+    /// panic inside `load_params`; now a typed error names the field.
+    #[test]
+    fn load_params_rejects_missing_field() {
+        let dir = tmp("ckpt-field");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("params.bin"), vec![0u8; 16]).unwrap();
+        let meta = r#"{"format": "neuroada-params-v1", "tensors": [
+            {"name": "params.x", "len": 4, "shape": [2, 2]}]}"#;
+        std::fs::write(dir.join("meta.json"), meta).unwrap();
+        let err = load_params(&dir).unwrap_err().to_string();
+        assert!(err.contains("offset"), "got: {err}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Regression: non-integer shape dims used to panic; typed error now.
+    #[test]
+    fn load_params_rejects_non_integer_dims() {
+        let dir = tmp("ckpt-dims");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("params.bin"), vec![0u8; 16]).unwrap();
+        let meta = r#"{"format": "neuroada-params-v1", "tensors": [
+            {"name": "params.x", "offset": 0, "len": 4, "shape": [2, "two"]}]}"#;
+        std::fs::write(dir.join("meta.json"), meta).unwrap();
+        let err = load_params(&dir).unwrap_err().to_string();
+        assert!(err.contains("non-integer shape dim"), "got: {err}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn load_params_rejects_shape_len_mismatch() {
+        let dir = tmp("ckpt-shape");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("params.bin"), vec![0u8; 16]).unwrap();
+        let meta = r#"{"format": "neuroada-params-v1", "tensors": [
+            {"name": "params.x", "offset": 0, "len": 4, "shape": [2, 3]}]}"#;
+        std::fs::write(dir.join("meta.json"), meta).unwrap();
+        let err = load_params(&dir).unwrap_err().to_string();
+        assert!(err.contains("does not cover len"), "got: {err}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Multi-projection delta sets survive save → load bit-exactly (the
+    /// on-disk NEUA bytes are the identity), and the loaded set feeds
+    /// `AdapterRegistry::register_dir` unchanged — the registry serves the
+    /// exact bytes that were saved.
+    #[test]
+    fn deltas_roundtrip_multi_projection_feeds_register_dir() {
+        use crate::serve::registry::{AdapterRegistry, RegistryCfg};
+        let mcfg = presets::model("nano").unwrap();
+        let backbone = init_params(&mcfg, &mut Rng::new(3));
+        let mut rng = Rng::new(7);
+        let mut deltas = Vec::new();
+        for (name, d_out, d_in) in mcfg.proj_shapes() {
+            let w = backbone.get(&format!("params.{name}")).unwrap().as_f32().unwrap().to_vec();
+            let wt = Tensor::from_vec(&[d_out, d_in], w);
+            let sel = select_topk(&wt, 2);
+            let vals: Vec<f32> = (0..d_out * 2).map(|_| rng.normal() * 0.1).collect();
+            deltas.push((name, DeltaStore::from_f32(sel, &vals)));
+        }
+        assert!(deltas.len() >= 2, "multi-projection set expected");
+        let dir = tmp("dckpt-multi");
+        save_deltas(&dir, &deltas).unwrap();
+        let back = load_deltas(&dir).unwrap();
+        assert_eq!(back.len(), deltas.len());
+        for ((n0, d0), (n1, d1)) in deltas.iter().zip(&back) {
+            assert_eq!(n0, n1);
+            assert_eq!(d0.to_bytes(), d1.to_bytes(), "{n0}: bytes must round-trip exactly");
+        }
+        let reg = AdapterRegistry::new(mcfg, backbone, RegistryCfg::default());
+        reg.register_dir("job", &dir).unwrap();
+        match reg.bypass("job").unwrap() {
+            crate::serve::registry::ModelRef::Bypass { deltas: served, .. } => {
+                assert_eq!(served.len(), deltas.len());
+                for ((n0, d0), (n1, d1)) in deltas.iter().zip(served.iter()) {
+                    assert_eq!(n0, n1);
+                    assert_eq!(d0.to_bytes(), d1.to_bytes(), "{n0}: registry must serve saved bytes");
+                }
+            }
+            _ => panic!("expected bypass view"),
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// A deltas dir whose NEUA blob is truncated below its header must be a
+    /// typed load error (and therefore a typed `register_dir` error too).
+    #[test]
+    fn load_deltas_rejects_truncated_blob() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[8, 6], 1.0, &mut rng);
+        let d = DeltaStore::from_f32(select_topk(&w, 2), &vec![0.5f32; 16]);
+        let dir = tmp("dckpt-trunc");
+        save_deltas(&dir, &[("l0.wq".into(), d)]).unwrap();
+        let path = dir.join("deltas").join("l0.wq.bin");
+        let blob = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &blob[..8]).unwrap();
+        let err = load_deltas(&dir).unwrap_err().to_string();
+        assert!(err.contains("l0.wq.bin"), "got: {err}");
         let _ = std::fs::remove_dir_all(dir);
     }
 }

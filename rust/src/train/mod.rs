@@ -15,4 +15,4 @@ pub mod setup;
 
 pub use loop_::{finetune_steps, pretrain, FinetuneOutcome, PretrainOutcome};
 pub use lr::Schedule;
-pub use setup::build_session;
+pub use setup::{build_session, build_session_budgeted, ProjBudgets};

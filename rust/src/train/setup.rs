@@ -43,6 +43,27 @@ pub fn build_session(
     warmup_grads: Option<&WarmupGrads>,
     rng: &mut Rng,
 ) -> Result<SessionSetup> {
+    let (store, selections) =
+        prepare_store(meta, params, method, strategy, neuron_fraction, warmup_grads, rng)?;
+    let session = TrainSession::new(engine, meta, store)?;
+    Ok(SessionSetup { session, selections })
+}
+
+/// Phase 1 without the session: the populated [`ValueStore`] (selection
+/// aux inputs + zeroed trainable/optimizer state) and the selections.
+/// Split out so callers can patch aux inputs (e.g. per-projection budget
+/// slot masks) **before** `TrainSession::new` uploads the frozen args as
+/// resident device buffers — mutating the store afterwards would not
+/// reach the graph.
+fn prepare_store(
+    meta: &ArtifactMeta,
+    params: &ValueStore,
+    method: MethodKind,
+    strategy: Strategy,
+    neuron_fraction: f64,
+    warmup_grads: Option<&WarmupGrads>,
+    rng: &mut Rng,
+) -> Result<(ValueStore, Vec<(String, RowSelection)>)> {
     let want_frag = method.artifact_fragment();
     let have = meta.method.as_deref().unwrap_or("");
     let frag_method = want_frag.split("_k").next().unwrap();
@@ -123,6 +144,61 @@ pub fn build_session(
         MethodKind::BitFit | MethodKind::Full => {} // zeros are correct
     }
 
+    Ok((store, selections))
+}
+
+/// Per-projection neuron budgets (projection name → `k_p`), as produced by
+/// [`crate::peft::selection::allocate_budget`].
+pub type ProjBudgets = std::collections::BTreeMap<String, usize>;
+
+/// [`build_session`] for NeuroAda with a **per-projection budget**: each
+/// projection trains only its `k_p` top connections instead of a uniform k.
+///
+/// The PJRT train artifacts are compiled for a fixed per-row k, so a
+/// smaller `k_p` is emulated on them by zeroing slot-mask columns
+/// `k_p..k`: the surplus slots still exist in the graph but their gradient
+/// is masked to zero every step, so their θ stays 0 and the extracted
+/// deltas carry no update there (the host lifecycle trainer selects the
+/// true `k_p` directly — same semantics, no padding). Projections missing
+/// from `budgets` get the full k; a `k_p > k` fails loudly rather than
+/// silently truncating the budget.
+pub fn build_session_budgeted(
+    engine: &Engine,
+    meta: &ArtifactMeta,
+    params: &ValueStore,
+    k: usize,
+    strategy: Strategy,
+    budgets: &ProjBudgets,
+    rng: &mut Rng,
+) -> Result<SessionSetup> {
+    let cfg = &meta.model;
+    for (name, _, _) in cfg.proj_shapes() {
+        if let Some(&kp) = budgets.get(&name) {
+            if kp > k {
+                bail!("budget k_p={kp} for {name} exceeds artifact k={k}");
+            }
+        }
+    }
+    let (mut store, selections) = prepare_store(
+        meta,
+        params,
+        MethodKind::NeuroAda { k },
+        strategy,
+        1.0,
+        None,
+        rng,
+    )?;
+    for (name, d_out, _) in cfg.proj_shapes() {
+        let kp = budgets.get(&name).copied().unwrap_or(k);
+        if kp >= k {
+            continue;
+        }
+        let mut mask = vec![0.0f32; d_out * k];
+        for row in mask.chunks_mut(k) {
+            row[..kp].fill(1.0);
+        }
+        store.insert_f32(format!("aux.slot_mask.{name}"), &[d_out, k], mask);
+    }
     let session = TrainSession::new(engine, meta, store)?;
     Ok(SessionSetup { session, selections })
 }

@@ -131,7 +131,7 @@ fn int8_registry_halves_bytes_and_requantizes_merges() {
     let reg = AdapterRegistry::with_dtype(
         cfg.clone(),
         backbone.clone(),
-        RegistryCfg { merged_capacity: 2, promote_after: 1 },
+        RegistryCfg { merged_capacity: 2, promote_after: 1, ..RegistryCfg::default() },
         BackboneDtype::I8,
     )
     .unwrap();

@@ -64,7 +64,7 @@ fn task_requests(cfg: &neuroada::config::ModelCfg, adapters: &[&str], n: usize) 
 /// the same logits to ≤ 1e-5, end-to-end through the registry.
 #[test]
 fn bypass_matches_merged_to_tolerance() {
-    let reg = registry(2, RegistryCfg { merged_capacity: 2, promote_after: 1 });
+    let reg = registry(2, RegistryCfg { merged_capacity: 2, promote_after: 1, ..RegistryCfg::default() });
     let cfg = reg.model_cfg().clone();
     let reqs = task_requests(&cfg, &["adapter-0"], 4);
     let examples: Vec<neuroada::data::Example> = reqs
@@ -172,7 +172,7 @@ fn deadline_flush_bounds_lone_request_latency() {
 /// registered and servable.
 #[test]
 fn lru_keeps_merged_copies_within_capacity() {
-    let reg = registry(3, RegistryCfg { merged_capacity: 1, promote_after: 1 });
+    let reg = registry(3, RegistryCfg { merged_capacity: 1, promote_after: 1, ..RegistryCfg::default() });
     let cfg = reg.model_cfg().clone();
     let srv = Server::start(reg, ServeCfg {
         max_batch: 4,
@@ -246,8 +246,8 @@ fn streaming_decode_parity_merged_and_bypass() {
         greedy_full_reforward(&RefModel::new(&cfg, &merged), &prompt, max_new).unwrap()
     };
     for (rcfg, want_path) in [
-        (RegistryCfg { merged_capacity: 2, promote_after: 1 }, ServePath::Merged),
-        (RegistryCfg { merged_capacity: 0, promote_after: 1 }, ServePath::Bypass),
+        (RegistryCfg { merged_capacity: 2, promote_after: 1, ..RegistryCfg::default() }, ServePath::Merged),
+        (RegistryCfg { merged_capacity: 0, promote_after: 1, ..RegistryCfg::default() }, ServePath::Bypass),
     ] {
         let reg = AdapterRegistry::new(cfg.clone(), backbone.clone(), rcfg);
         reg.register("gen-a", deltas.clone()).unwrap();
@@ -369,8 +369,8 @@ fn cls_serving_parity_merged_and_bypass_vs_eval_encoder() {
     let oracle_bypass =
         eval_encoder_host(&cfg, &backbone, Some(&deltas), &task, n, seed, 1).unwrap();
     for (rcfg, want_path, oracle) in [
-        (RegistryCfg { merged_capacity: 2, promote_after: 1 }, ServePath::Merged, oracle_merged),
-        (RegistryCfg { merged_capacity: 0, promote_after: 1 }, ServePath::Bypass, oracle_bypass),
+        (RegistryCfg { merged_capacity: 2, promote_after: 1, ..RegistryCfg::default() }, ServePath::Merged, oracle_merged),
+        (RegistryCfg { merged_capacity: 0, promote_after: 1, ..RegistryCfg::default() }, ServePath::Bypass, oracle_bypass),
     ] {
         let reg = AdapterRegistry::new(cfg.clone(), backbone.clone(), rcfg);
         reg.register("enc-a", deltas.clone()).unwrap();
@@ -421,7 +421,7 @@ fn cls_mixed_adapter_coalescing_preserves_per_adapter_parity() {
     let reg = AdapterRegistry::new(
         cfg.clone(),
         backbone.clone(),
-        RegistryCfg { merged_capacity: 0, promote_after: 1 },
+        RegistryCfg { merged_capacity: 0, promote_after: 1, ..RegistryCfg::default() },
     );
     reg.register("enc-a", deltas_a.clone()).unwrap();
     reg.register("enc-b", deltas_b.clone()).unwrap();
@@ -499,7 +499,7 @@ fn traced_serving_covers_latency_and_exports_parse() {
     use neuroada::obs::trace::{request_coverage, Stage};
     use neuroada::util::json::Json;
 
-    let reg = registry(2, RegistryCfg { merged_capacity: 2, promote_after: 1 });
+    let reg = registry(2, RegistryCfg { merged_capacity: 2, promote_after: 1, ..RegistryCfg::default() });
     let cfg = reg.model_cfg().clone();
     let srv = Server::start(
         reg,
