@@ -44,7 +44,7 @@ use super::{Bench, BenchResult};
 use crate::config::presets;
 use crate::config::ModelCfg;
 use crate::model::init::init_params;
-use crate::model::kvpool::{shared_pages, DEFAULT_PAGE_POSITIONS};
+use crate::model::kvpool::{shared_pages, PrefixKey, DEFAULT_PAGE_POSITIONS};
 use crate::model::{
     greedy_decode, greedy_full_reforward, DecodeState, DeltaOverlay, KvCache, KvPool, PagedKv,
     PlannedModel, PrefixCache, RefModel,
@@ -571,15 +571,16 @@ fn shared_admission_sim(cfg: &ModelCfg) -> Result<(usize, usize, usize, usize)> 
     };
     // donor stream: full prefill, publish its prompt pages, then generate
     let mut cache = PrefixCache::new(DEFAULT_PAGE_POSITIONS, 16);
+    let view = PrefixKey::label("sim");
     let mut donor = PagedKv::new(&pool, sim.seq);
     anyhow::ensure!(fill(&mut donor, prompt_len)?, "budget must hold one stream");
-    cache.insert("sim", &prompt, donor.pages());
+    cache.insert(&view, &prompt, donor.pages());
     anyhow::ensure!(fill(&mut donor, prompt_len + gen)?, "donor generation must fit");
     let mut streams = vec![donor];
     // admit shared-prefix streams until a page allocation fails
     loop {
         let mut st = PagedKv::new(&pool, sim.seq);
-        let Some((m, pages)) = cache.lookup(&pool, "sim", &prompt) else { break };
+        let Some((m, pages)) = cache.lookup(&pool, &view, &prompt) else { break };
         st.attach_prefix(&pages, m)?;
         if !fill(&mut st, prompt_len + gen)? {
             break; // partial stream dropped; its unique pages free here

@@ -1,6 +1,7 @@
 //! Serving-path benchmark (criterion-free): merged-vs-bypass forward
 //! latency (including the crossover vs k ∈ {1, 2, 4, 8}), promotion
-//! (merge) cost, and end-to-end scheduler throughput with continuous
+//! (merge) cost, the composed-vs-single mixture crossover at p ∈
+//! {2, 4, 8} parts, and end-to-end scheduler throughput with continuous
 //! micro-batching — for the decoder scoring path AND the encoder
 //! classification path (the cls merged-vs-bypass crossover rides in the
 //! same `BENCH_serve.json`). Drives the same code the `neuroada serve`
@@ -17,7 +18,8 @@ use crate::peft::{selection::select_topk, DeltaStore};
 use crate::runtime::ValueStore;
 use crate::serve::scheduler::{host_cls_logits, host_logits};
 use crate::serve::{
-    AdapterRegistry, Backend, ClsRequest, MetricsReport, RegistryCfg, Request, ServeCfg, Server,
+    AdapterRegistry, AdapterSpec, Backend, ClsRequest, MetricsReport, RegistryCfg, Request,
+    ServeCfg, Server,
 };
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -33,6 +35,22 @@ pub struct KPoint {
     pub bypass_ms: f64,
 }
 
+/// Forward latency of a composed p-part mixture's bypass vs a single
+/// adapter's bypass and the flat merged line: the composed union pays
+/// O(Σ kᵢ) scatter slots per projection, so these cells record where
+/// compose-on-resolve should hand a hot mixture to the merge machinery.
+#[derive(Debug, Clone)]
+pub struct ComposePoint {
+    /// Component adapters in the mixture (each k=1).
+    pub parts: usize,
+    /// Single-adapter (k=1) bypass forward, ms.
+    pub single_ms: f64,
+    /// Composed-union bypass forward, ms.
+    pub composed_ms: f64,
+    /// Dense merged forward (k-invariant flat line), ms.
+    pub merged_ms: f64,
+}
+
 /// One full serving-bench run.
 pub struct ServeBenchReport {
     pub results: Vec<BenchResult>,
@@ -43,6 +61,9 @@ pub struct ServeBenchReport {
     /// Merged-vs-bypass forward latency at k ∈ {1, 2, 4, 8} (ROADMAP:
     /// record the crossover point vs k).
     pub crossover: Vec<KPoint>,
+    /// Composed-vs-single bypass forward at p ∈ {2, 4, 8} mixture parts
+    /// (ISSUE-10: the composition crossover).
+    pub compose: Vec<ComposePoint>,
     /// Encoder-classification serving bench (enc-micro), mirroring the
     /// decoder sections; `None` when the cls section failed (logged and
     /// skipped so an encoder problem cannot lose the decoder baseline).
@@ -159,6 +180,17 @@ impl ServeBenchReport {
                 p.bypass_ms / p.merged_ms,
             ));
         }
+        for p in &self.compose {
+            out.push_str(&format!(
+                "compose/parts={:<28} single {:>8.3} ms  composed {:>8.3} ms  \
+                 merged {:>8.3} ms  (composed/single {:.2}×)\n",
+                p.parts,
+                p.single_ms,
+                p.composed_ms,
+                p.merged_ms,
+                p.composed_ms / p.single_ms,
+            ));
+        }
         for (name, m) in [("merged", &self.e2e_merged), ("bypass", &self.e2e_bypass)] {
             let (p50, p95) = m
                 .latency
@@ -216,6 +248,16 @@ impl ServeBenchReport {
             cross.push(o);
         }
         j.set("crossover", Json::Arr(cross));
+        let mut comp = Vec::new();
+        for p in &self.compose {
+            let mut o = Json::obj();
+            o.set("parts", p.parts);
+            o.set("single_ms", p.single_ms);
+            o.set("composed_ms", p.composed_ms);
+            o.set("merged_ms", p.merged_ms);
+            comp.push(o);
+        }
+        j.set("compose", Json::Arr(comp));
         for (name, m) in [("e2e_merged", &self.e2e_merged), ("e2e_bypass", &self.e2e_bypass)] {
             let mut o = Json::obj();
             o.set("req_per_sec", m.req_per_sec);
@@ -565,6 +607,43 @@ pub fn run(size: &str, n_adapters: usize, n_requests: usize, quick: bool) -> Res
         results.push(r);
     }
 
+    // --- composed-vs-single crossover vs mixture parts (ISSUE-10) --------
+    // A p-part mixture of k=1 adapters composes into one union store whose
+    // bypass pays up to p scatter slots per neuron — these cells record
+    // where the composed bypass crosses the single-adapter bypass (~p×)
+    // and the flat merged line, i.e. when a hot mixture should promote.
+    // single_ms is the k=1 crossover cell's bypass — the same measurement.
+    let single_ms = crossover[0].bypass_ms;
+    let mut compose = Vec::new();
+    for i in 0..8usize {
+        let name = format!("compose-part-{i}");
+        reg.register(&name, synth_adapter(&cfg, &backbone, 1, 0xA00 + i as u64)?)?;
+    }
+    for parts in [2usize, 4, 8] {
+        let spec_str: String =
+            (0..parts).map(|i| format!("compose-part-{i}")).collect::<Vec<_>>().join("+");
+        let spec = AdapterSpec::parse(&spec_str).map_err(|e| anyhow!(e))?;
+        // no-promote resolve: compose-on-resolve runs, but the view stays
+        // on the bypass so the cell measures the union scatter cost
+        let view = reg
+            .resolve_spec_no_promote(&spec)
+            .ok_or_else(|| anyhow!("compose failed for {spec_str}"))?;
+        let r = b.run(&format!("forward/composed {size} b={n} parts={parts}"), || {
+            std::hint::black_box(
+                host_logits(&cfg, &view, &eb.tokens, &eb.pad_mask, &eb.last_pos, n)
+                    .unwrap()
+                    .numel(),
+            );
+        });
+        compose.push(ComposePoint {
+            parts,
+            single_ms,
+            composed_ms: r.summary.mean * 1e3,
+            merged_ms,
+        });
+        results.push(r);
+    }
+
     // --- promotion (merge) cost ------------------------------------------
     results.push(b.run(&format!("registry/merge {size}"), || {
         reg.demote(&names[0]);
@@ -644,7 +723,16 @@ pub fn run(size: &str, n_adapters: usize, n_requests: usize, quick: bool) -> Res
             None
         }
     };
-    Ok(ServeBenchReport { results, e2e_merged, e2e_bypass, crossover, cls, trace_overhead, sizes })
+    Ok(ServeBenchReport {
+        results,
+        e2e_merged,
+        e2e_bypass,
+        crossover,
+        compose,
+        cls,
+        trace_overhead,
+        sizes,
+    })
 }
 
 #[cfg(test)]
@@ -654,14 +742,27 @@ mod tests {
     #[test]
     fn quick_bench_runs() {
         let r = run("nano", 2, 16, true).unwrap();
-        // merged + bypass + 4 crossover points + merge cost
-        assert_eq!(r.results.len(), 7);
+        // merged + bypass + 4 crossover + 3 composed + merge cost
+        assert_eq!(r.results.len(), 10);
         assert_eq!(r.crossover.len(), 4);
         for p in &r.crossover {
             assert!(p.merged_ms > 0.0 && p.bypass_ms > 0.0);
         }
+        // the composition crossover cells: p ∈ {2, 4, 8} parts, every
+        // latency positive and the single baseline shared with k=1
+        assert_eq!(r.compose.iter().map(|p| p.parts).collect::<Vec<_>>(), vec![2, 4, 8]);
+        for p in &r.compose {
+            assert!(p.single_ms > 0.0 && p.composed_ms > 0.0 && p.merged_ms > 0.0);
+            assert_eq!(p.single_ms, r.crossover[0].bypass_ms);
+        }
+        assert!(r.render().contains("compose/parts="));
         let j = r.to_json();
         assert_eq!(j.at(&["crossover"]).and_then(|c| c.as_arr()).map(|a| a.len()), Some(4));
+        assert_eq!(j.at(&["compose"]).and_then(|c| c.as_arr()).map(|a| a.len()), Some(3));
+        assert!(j.at(&["compose"]).and_then(|c| c.as_arr()).unwrap()[0]
+            .at(&["composed_ms"])
+            .and_then(|v| v.as_f64())
+            .is_some());
         assert!(j.at(&["e2e_merged", "req_per_sec"]).and_then(|v| v.as_f64()).is_some());
         // the embedded cls section mirrors the decoder one
         let cls = r.cls.as_ref().expect("cls bench embedded");

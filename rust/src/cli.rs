@@ -8,7 +8,10 @@
 //!   eval           zero-shot eval of a cached backbone on a task
 //!   serve          multi-adapter serving engine (registry + micro-batching
 //!                  + streaming greedy decode via --generate; encoder sizes
-//!                  serve GLUE classification with exact eval parity)
+//!                  serve GLUE classification with exact eval parity;
+//!                  requests may name weighted adapter mixtures "a:0.7+b:0.3")
+//!   compose        average a weighted adapter mixture into one checkpointed
+//!                  adapter (AdaMix-style; bitwise-equal to online mixture)
 //!   audit          memory audit: analytic (Eq. 5/6) vs measured bytes
 //!   tasks          list the 23 synthetic tasks
 //!
@@ -149,7 +152,23 @@ SUBCOMMANDS
                     --size enc-micro [--cls], serve a GLUE task's dev set
                     as classification requests on both weight views and
                     assert the served metric reproduces the offline
-                    encoder eval exactly)
+                    encoder eval exactly.
+                    Requests may address a weighted adapter mixture with a
+                    composite spec -- \"a+b\" (uniform) or \"a:0.7+b:0.3\" --
+                    composed on resolve as one sparse k-way union and cached
+                    (LRU); the admission quota charges every component part.
+                    See docs/serving.md \"Adapter composition\")
+  compose           average a mixture into ONE checkpointed adapter
+                    (the AdaMix inference trick): --size nano
+                    --spec \"a:0.7+b:0.3\" --out-name blend
+                    [--ckpt-dir DIR] [--synth-missing] [--out DIR]
+                    (parts load from <ckpt-dir>/<name>/deltas;
+                    --synth-missing synthesizes absent parts, seeded --
+                    the no-training smoke path; output lands under
+                    <ckpt-dir>/<out-name>/deltas, or <out>/composed/...
+                    without --ckpt-dir. Serving the composed adapter is
+                    bitwise-equal to serving the spec online: both paths
+                    compose in canonical spec order and BF16-round once)
   lifecycle         fine-tune-as-a-service against a live server:
                     --size nano [--task cs-boolq] [--adapter-name svc]
                     [--jobs 2] [--steps 12] [--k 1] [--budget 0]

@@ -41,6 +41,7 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "compose" => cmd_compose(&args),
         "lifecycle" => cmd_lifecycle(&args),
         "audit" => cmd_audit(&args),
         "tasks" => cmd_tasks(),
@@ -609,6 +610,71 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// scoring requests are driven through the surviving adapters (decoder
 /// sizes) and the metrics report — including the lifecycle event counters
 /// — is printed and optionally exported (`--metrics-out/--trace-out`).
+/// Average a weighted adapter mixture into one registered adapter — the
+/// AdaMix inference trick, offline. Parts compose in canonical spec order
+/// through the same `peft::compose_deltas` the registry's
+/// compose-on-resolve uses, so serving the written adapter is *bitwise*
+/// equal to serving the mixture spec online (the e2e parity oracle).
+fn cmd_compose(args: &Args) -> Result<()> {
+    use neuroada::bench::serve_bench::synth_adapter;
+    use neuroada::peft::compose_deltas;
+    use neuroada::serve::{validate_name, AdapterSpec};
+    use neuroada::train::checkpoint;
+
+    let size = args.opt_or("size", "nano");
+    let cfg = presets::model(&size).ok_or_else(|| anyhow!("unknown size {size:?}"))?;
+    let spec_str = args
+        .opt("spec")
+        .ok_or_else(|| anyhow!("compose needs --spec, e.g. --spec a:0.7+b:0.3"))?;
+    let spec = AdapterSpec::parse(spec_str).map_err(|e| anyhow!("--spec: {e}"))?;
+    let out_name = args
+        .opt("out-name")
+        .ok_or_else(|| anyhow!("compose needs --out-name for the composed adapter"))?;
+    validate_name(out_name).map_err(|e| anyhow!("--out-name: {e}"))?;
+
+    let opts = opts_from(args)?;
+    let ckpt_dir = args.opt("ckpt-dir").map(std::path::PathBuf::from);
+    let out_root = ckpt_dir.clone().unwrap_or_else(|| opts.out_dir.join("composed"));
+
+    // load every part (canonical spec order), synthesizing absentees on
+    // request — the CI smoke path that needs no prior training runs
+    let mut loaded: Vec<(f32, Vec<(String, neuroada::peft::DeltaStore)>)> = Vec::new();
+    for (name, w) in spec.parts() {
+        let part_dir = ckpt_dir.as_ref().map(|d| d.join(name));
+        let deltas = match &part_dir {
+            Some(d) if d.join("deltas").is_dir() => checkpoint::load_deltas(d)?,
+            _ if args.flag("synth-missing") => {
+                let backbone = neuroada::serve::load_or_init_backbone(&opts, &cfg)?;
+                let seed = name.bytes().fold(opts.seed ^ 0xADAF, |h, b| {
+                    (h ^ b as u64).wrapping_mul(0x100000001b3)
+                });
+                olog::info("compose", format_args!("synthesizing part {name:?} (seed {seed})"));
+                synth_adapter(&cfg, &backbone, 1, seed)?
+            }
+            Some(d) => bail!("part {name:?}: no deltas under {d:?} (want <dir>/{name}/deltas)"),
+            None => bail!("part {name:?}: pass --ckpt-dir DIR or --synth-missing"),
+        };
+        loaded.push((*w, deltas));
+    }
+    let parts: Vec<(f32, &[(String, neuroada::peft::DeltaStore)])> =
+        loaded.iter().map(|(w, d)| (*w, d.as_slice())).collect();
+    let composed = compose_deltas(&parts).map_err(|e| anyhow!(e))?;
+
+    let out_dir = out_root.join(out_name);
+    checkpoint::save_deltas(&out_dir, &composed)?;
+    let bytes: u64 = composed.iter().map(|(_, d)| d.storage_bytes()).sum();
+    let kmax = composed.iter().map(|(_, d)| d.k()).max().unwrap_or(0);
+    println!(
+        "composed {} -> {out_name:?}: {} projections, union k <= {kmax}, {} \
+         under {:?}",
+        spec.key(),
+        composed.len(),
+        fmt_bytes(bytes),
+        out_dir.join("deltas"),
+    );
+    Ok(())
+}
+
 fn cmd_lifecycle(args: &Args) -> Result<()> {
     use neuroada::bench::serve_bench::randomize_zero_head;
     use neuroada::coordinator::pool::Pool;

@@ -543,7 +543,42 @@ fn fnv(h: u64, bytes: &[u8]) -> u64 {
     bytes.iter().fold(h, |h, &b| (h ^ b as u64).wrapping_mul(FNV_PRIME))
 }
 
+/// Typed prefix-cache view key: a tag (the scheduler passes the canonical
+/// adapter-spec key — an interned `Arc<str>`, so cloning is a refcount
+/// bump) plus the resolved weight view's pointer-identity words. Replaces
+/// the `format!("{adapter}:{a:x}:{b:x}")` string the decode path used to
+/// allocate per request; nodes store the key, so hash collisions across
+/// views are verified away exactly like token collisions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PrefixKey {
+    tag: Arc<str>,
+    a: usize,
+    b: usize,
+}
+
+impl PrefixKey {
+    pub fn new(tag: Arc<str>, a: usize, b: usize) -> PrefixKey {
+        PrefixKey { tag, a, b }
+    }
+
+    /// A bare-label key (tests and benches; real serving keys carry the
+    /// resolved view's identity in `a`/`b`).
+    pub fn label(tag: &str) -> PrefixKey {
+        PrefixKey { tag: Arc::from(tag), a: 0, b: 0 }
+    }
+
+    /// FNV-1a chain over the tag bytes and the view-identity words.
+    fn fnv_seed(&self) -> u64 {
+        let h = fnv(FNV_OFFSET, self.tag.as_bytes());
+        let h = fnv(h, &self.a.to_le_bytes());
+        fnv(h, &self.b.to_le_bytes())
+    }
+}
+
 struct PrefixNode {
+    /// The weight view this node belongs to (hash collisions between
+    /// views are verified away, like token collisions).
+    view: PrefixKey,
     /// Exact tokens this node covers (hash collisions are verified away).
     tokens: Vec<i32>,
     /// Pages holding those tokens' K/V: `pages_for(tokens.len())` strong
@@ -606,8 +641,8 @@ impl PrefixCache {
         seen.len()
     }
 
-    fn key(model: &str, tokens: &[i32]) -> u64 {
-        let mut h = fnv(FNV_OFFSET, model.as_bytes());
+    fn key(view: &PrefixKey, tokens: &[i32]) -> u64 {
+        let mut h = view.fnv_seed();
         for t in tokens {
             h = fnv(h, &t.to_le_bytes());
         }
@@ -617,7 +652,7 @@ impl PrefixCache {
     /// Register a freshly prefilled prompt: one node per full-block
     /// prefix plus one for the whole prompt when it ends mid-block.
     /// `pages` must cover `prompt` (the prefiller's page table).
-    pub fn insert(&mut self, model: &str, prompt: &[i32], pages: &[Arc<PageBuf>]) {
+    pub fn insert(&mut self, view: &PrefixKey, prompt: &[i32], pages: &[Arc<PageBuf>]) {
         let p = self.page_positions;
         if prompt.is_empty() || pages.len() * p < prompt.len() {
             return;
@@ -629,12 +664,13 @@ impl PrefixCache {
         for n in lens {
             self.tick += 1;
             let tick = self.tick;
-            let key = Self::key(model, &prompt[..n]);
+            let key = Self::key(view, &prompt[..n]);
             let bucket = self.nodes.entry(key).or_default();
-            match bucket.iter_mut().find(|e| e.tokens == prompt[..n]) {
+            match bucket.iter_mut().find(|e| e.view == *view && e.tokens == prompt[..n]) {
                 Some(node) => node.tick = tick, // refresh, keep first pages
                 None => {
                     bucket.push(PrefixNode {
+                        view: view.clone(),
                         tokens: prompt[..n].to_vec(),
                         pages: pages[..n.div_ceil(p)].to_vec(),
                         tick,
@@ -648,14 +684,14 @@ impl PrefixCache {
         }
     }
 
-    /// Longest cached prefix of `prompt` under `model`, capped at
+    /// Longest cached prefix of `prompt` under `view`, capped at
     /// `prompt.len() - 1` so at least one prompt token is recomputed (the
     /// first-token logits must exist). Returns the covered position count
     /// and the pages to attach. Records a pool prefix-hit on success.
     pub fn lookup(
         &mut self,
         pool: &KvPool,
-        model: &str,
+        view: &PrefixKey,
         prompt: &[i32],
     ) -> Option<(usize, Vec<Arc<PageBuf>>)> {
         let p = self.page_positions;
@@ -669,9 +705,10 @@ impl PrefixCache {
             b -= 1;
         }
         for n in cands {
-            let key = Self::key(model, &prompt[..n]);
+            let key = Self::key(view, &prompt[..n]);
             let Some(bucket) = self.nodes.get_mut(&key) else { continue };
-            let Some(node) = bucket.iter_mut().find(|e| e.tokens == prompt[..n]) else {
+            let Some(node) = bucket.iter_mut().find(|e| e.view == *view && e.tokens == prompt[..n])
+            else {
                 continue;
             };
             self.tick += 1;
@@ -787,13 +824,14 @@ mod tests {
         let cfg = plan.cfg;
         let pool = KvPool::new(cfg, 4, 0);
         let mut cache = PrefixCache::new(4, 16);
+        let view = PrefixKey::label(label);
         let prompt: Vec<i32> = (0..10).map(|i| 4 + (i * 7) % 40).collect();
         // donor stream prefills the prompt and publishes its pages
         let mut donor = PagedKv::new(&pool, cfg.seq);
         for &t in &prompt {
             plan.forward_step_kv(t, &mut donor).unwrap();
         }
-        cache.insert(label, &prompt, donor.pages());
+        cache.insert(&view, &prompt, donor.pages());
         assert!(!cache.is_empty());
         let n_streams = 3usize;
         for s in 0..n_streams {
@@ -804,7 +842,7 @@ mod tests {
                 ref_logits = plan.forward_step_kv(t, &mut cref).unwrap();
             }
             // paged stream: attach the cached prefix, recompute the tail
-            let (m, pages) = cache.lookup(&pool, label, &prompt).unwrap();
+            let (m, pages) = cache.lookup(&pool, &view, &prompt).unwrap();
             assert!(0 < m && m < prompt.len(), "match covers a strict prefix");
             let mut paged = PagedKv::new(&pool, cfg.seq);
             paged.attach_prefix(&pages, m).unwrap();
@@ -896,10 +934,11 @@ mod tests {
         for &t in &prompt {
             plan.forward_step_kv(t, &mut donor).unwrap();
         }
-        cache.insert("m", &prompt, donor.pages());
+        let view = PrefixKey::label("m");
+        cache.insert(&view, &prompt, donor.pages());
         streams.push(donor);
         for _ in 0..2 {
-            let (mlen, pages) = cache.lookup(&pool, "m", &prompt).unwrap();
+            let (mlen, pages) = cache.lookup(&pool, &view, &prompt).unwrap();
             let mut s = PagedKv::new(&pool, cfg.seq);
             s.attach_prefix(&pages, mlen).unwrap();
             for &t in &prompt[mlen..] {
@@ -987,27 +1026,31 @@ mod tests {
         let mut cache = PrefixCache::new(4, 3);
         let pages: Vec<Arc<PageBuf>> = (0..3).map(|_| pool.try_alloc().unwrap()).collect();
         let prompt: Vec<i32> = (0..10).collect();
-        cache.insert("view-a", &prompt, &pages);
+        let view_a = PrefixKey::label("view-a");
+        cache.insert(&view_a, &prompt, &pages);
         assert_eq!(cache.len(), 3, "block nodes at 4, 8 + tail node at 10");
         // the full-prompt node matches, capped one short so first-token
         // logits are always recomputed
-        let (m, got) = cache.lookup(&pool, "view-a", &prompt).unwrap();
+        let (m, got) = cache.lookup(&pool, &view_a, &prompt).unwrap();
         assert_eq!((m, got.len()), (9, 3));
         // a longer prompt sharing two full blocks matches at 8
         let mut longer = prompt.clone();
         longer.extend([40, 41]);
-        let (m, got) = cache.lookup(&pool, "view-a", &longer).unwrap();
+        let (m, got) = cache.lookup(&pool, &view_a, &longer).unwrap();
         assert_eq!((m, got.len()), (8, 2));
         // different weight view, diverging tokens, or 1-token prompts: miss
-        assert!(cache.lookup(&pool, "view-b", &prompt).is_none());
+        assert!(cache.lookup(&pool, &PrefixKey::label("view-b"), &prompt).is_none());
+        // same tag but a different resolved-weight identity is a distinct view
+        let promoted = PrefixKey::new(Arc::from("view-a"), 1, 2);
+        assert!(cache.lookup(&pool, &promoted, &prompt).is_none());
         let divergent: Vec<i32> = (0..10).map(|t| t + 1).collect();
-        assert!(cache.lookup(&pool, "view-a", &divergent).is_none());
-        assert!(cache.lookup(&pool, "view-a", &prompt[..1]).is_none());
+        assert!(cache.lookup(&pool, &view_a, &divergent).is_none());
+        assert!(cache.lookup(&pool, &view_a, &prompt[..1]).is_none());
         // pages that do not cover the prompt are refused outright
-        cache.insert("view-a", &prompt, &pages[..1]);
+        cache.insert(&view_a, &prompt, &pages[..1]);
         assert_eq!(cache.len(), 3);
         // the bound holds by LRU eviction, and clearing releases all pins
-        cache.insert("view-a", &[7, 7, 7, 7], &pages[..1]);
+        cache.insert(&view_a, &[7, 7, 7, 7], &pages[..1]);
         assert_eq!(cache.len(), 3, "max_nodes bound enforced");
         assert!(cache.evict_lru());
         cache.clear();

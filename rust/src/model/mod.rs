@@ -31,11 +31,13 @@ pub mod plan;
 pub use decode::{
     greedy_decode, greedy_full_reforward, sample_decode, sample_token, DecodeState, SampleCfg,
 };
-pub use kvpool::{KvCache, KvPool, KvPoolStats, PagedKv, PoolExhausted, PrefixCache, SpilledKv};
+pub use kvpool::{
+    KvCache, KvPool, KvPoolStats, PagedKv, PoolExhausted, PrefixCache, PrefixKey, SpilledKv,
+};
 pub use plan::{LayerPlan, ParamSource, PlannedModel, ProjPlan};
 
 use crate::config::ModelCfg;
-use crate::peft::delta::ScatterView;
+use crate::peft::delta::{BoundDelta, CompositeView, ScatterView};
 use crate::peft::DeltaStore;
 use crate::runtime::{Value, ValueStore};
 use crate::tensor::Tensor;
@@ -46,10 +48,13 @@ use std::collections::BTreeMap;
 /// path: `y = x Wᵀ + x Δᵀ` per adapted projection, with Δ read zero-copy
 /// from the compact store. One frozen backbone in memory can serve any
 /// number of adapters this way, at O(d_out·k) extra work per token instead
-/// of a dense merged weight copy per adapter.
+/// of a dense merged weight copy per adapter. A slot binds either one
+/// adapter's [`ScatterView`] or a weighted k-way [`CompositeView`] mixture
+/// (built over a caller-owned [`CompositeParts`] buffer) — both are served
+/// without materializing a dense Δ or a union store.
 #[derive(Debug, Default, Clone)]
 pub struct DeltaOverlay<'a> {
-    views: BTreeMap<&'a str, ScatterView<'a>>,
+    views: BTreeMap<&'a str, BoundDelta<'a>>,
 }
 
 impl<'a> DeltaOverlay<'a> {
@@ -57,12 +62,30 @@ impl<'a> DeltaOverlay<'a> {
     pub fn new(deltas: &'a [(String, DeltaStore)]) -> DeltaOverlay<'a> {
         let views = deltas
             .iter()
-            .map(|(name, d)| (name.as_str(), d.scatter_view()))
+            .map(|(name, d)| (name.as_str(), BoundDelta::Single(d.scatter_view())))
             .collect();
         DeltaOverlay { views }
     }
 
-    pub fn get(&self, name: &str) -> Option<&ScatterView<'a>> {
+    /// Zero-copy k-way mixture overlay: each adapted projection serves
+    /// Σ wᵢ·Δᵢ at matmul time via a [`CompositeView`], with no union
+    /// `DeltaStore` materialized. `parts` backs the borrowed views, so the
+    /// caller keeps it alive for the lifetime of any plan resolved from
+    /// this overlay (the overlay itself may still be dropped after
+    /// resolution). Errors when parts adapt the same projection with
+    /// mismatched weight-matrix shapes.
+    pub fn composite(
+        parts: &'a CompositeParts<'a>,
+    ) -> std::result::Result<DeltaOverlay<'a>, String> {
+        let mut views = BTreeMap::new();
+        for (name, list) in &parts.per_proj {
+            let view = CompositeView::new(list).map_err(|e| format!("{name}: {e}"))?;
+            views.insert(*name, BoundDelta::Composite(view));
+        }
+        Ok(DeltaOverlay { views })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&BoundDelta<'a>> {
         self.views.get(name)
     }
 
@@ -72,6 +95,31 @@ impl<'a> DeltaOverlay<'a> {
 
     pub fn is_empty(&self) -> bool {
         self.views.is_empty()
+    }
+}
+
+/// Owned backing storage for a composite overlay: per-projection weighted
+/// scatter-view lists, grouped from whole-adapter delta sets. Split from
+/// [`DeltaOverlay`] so the bound [`CompositeView`]s stay reference-only
+/// (`Copy`) — plans copy them out of the overlay exactly like single views.
+#[derive(Debug, Default)]
+pub struct CompositeParts<'a> {
+    per_proj: BTreeMap<&'a str, Vec<(f32, ScatterView<'a>)>>,
+}
+
+impl<'a> CompositeParts<'a> {
+    /// Group weighted scatter views by projection name across `parts`
+    /// (each part one adapter's full delta list, in canonical spec order —
+    /// the same part order [`crate::peft::compose_deltas`] unions in). A
+    /// projection some part does not adapt simply gets fewer views.
+    pub fn new(parts: &[(f32, &'a [(String, DeltaStore)])]) -> CompositeParts<'a> {
+        let mut per_proj: BTreeMap<&'a str, Vec<(f32, ScatterView<'a>)>> = BTreeMap::new();
+        for (w, deltas) in parts {
+            for (name, d) in deltas.iter() {
+                per_proj.entry(name.as_str()).or_default().push((*w, d.scatter_view()));
+            }
+        }
+        CompositeParts { per_proj }
     }
 }
 
@@ -281,5 +329,66 @@ mod tests {
         // and the bypass actually changed the output vs the raw backbone
         let raw = RefModel::new(&cfg, &backbone).lm_logits_at(&tokens, &pad, &last, 1).unwrap();
         assert!(raw.max_abs_diff(&bypass_logits) > 1e-5);
+    }
+
+    #[test]
+    fn composite_overlay_serves_mixture_zero_copy() {
+        use crate::peft::{compose_deltas, selection::select_topk, DeltaStore};
+        let cfg = presets::model("nano").unwrap();
+        let mut rng = Rng::new(6);
+        let backbone = init_params(&cfg, &mut rng);
+        let mut adapter = |seed_scale: f32| -> Vec<(String, DeltaStore)> {
+            cfg.proj_shapes()
+                .into_iter()
+                .map(|(name, d_out, _)| {
+                    let w = backbone.get(&format!("params.{name}")).unwrap().as_f32().unwrap();
+                    let wt = Tensor::from_vec(&[d_out, w.len() / d_out], w.to_vec());
+                    let sel = select_topk(&wt, 2);
+                    let vals: Vec<f32> =
+                        (0..d_out * 2).map(|_| rng.normal() * 0.05 * seed_scale).collect();
+                    (name, DeltaStore::from_f32(sel, &vals))
+                })
+                .collect()
+        };
+        let (da, db) = (adapter(1.0), adapter(1.5));
+        let weighted: [(f32, &[(String, DeltaStore)]); 2] = [(0.7, &da), (0.3, &db)];
+        let tokens: Vec<i32> = (0..cfg.seq as i32).map(|i| 4 + (i % 30)).collect();
+        let pad = vec![1.0f32; cfg.seq];
+        let last = vec![(cfg.seq - 1) as i32];
+
+        // zero-copy composite overlay: no union DeltaStore, no dense Δ
+        let parts = CompositeParts::new(&weighted);
+        let pool = crate::tensor::pool::KernelPool::serial();
+        let composite_logits = {
+            let overlay = DeltaOverlay::composite(&parts).unwrap();
+            let plan = PlannedModel::resolve(&cfg, &backbone, Some(&overlay), &pool).unwrap();
+            drop(overlay); // views are pre-bound; only `parts` must outlive the plan
+            assert_eq!(plan.bound_deltas(), da.len());
+            plan.lm_logits_at(&tokens, &pad, &last, 1).unwrap()
+        };
+        // materialized union served as an ordinary single overlay
+        let composed = compose_deltas(&weighted).unwrap();
+        let union_overlay = DeltaOverlay::new(&composed);
+        let union_logits = RefModel::with_overlay(&cfg, &backbone, &union_overlay)
+            .lm_logits_at(&tokens, &pad, &last, 1)
+            .unwrap();
+        let diff = composite_logits.max_abs_diff(&union_logits);
+        assert!(diff <= 1e-4, "zero-copy composite vs materialized union diff {diff}");
+        // the mixture is a genuine blend: neither part alone reproduces it
+        for deltas in [&da, &db] {
+            let one = DeltaOverlay::new(deltas);
+            let lone = RefModel::with_overlay(&cfg, &backbone, &one)
+                .lm_logits_at(&tokens, &pad, &last, 1)
+                .unwrap();
+            assert!(lone.max_abs_diff(&composite_logits) > 1e-5);
+        }
+        // mismatched projection shapes across parts are a typed error
+        let bad: Vec<(String, DeltaStore)> = vec![(
+            da[0].0.clone(),
+            DeltaStore::from_f32(select_topk(&Tensor::zeros(&[2, 3]), 1), &[0.5, 0.5]),
+        )];
+        let bad_parts_buf: [(f32, &[(String, DeltaStore)]); 2] = [(0.5, &da), (0.5, &bad)];
+        let bad_parts = CompositeParts::new(&bad_parts_buf);
+        assert!(DeltaOverlay::composite(&bad_parts).is_err());
     }
 }

@@ -6,7 +6,8 @@
 //! projection per forward). [`PlannedModel`] moves all of that to a single
 //! resolution step: one pass over the [`ValueStore`] builds a per-layer
 //! struct of borrowed `&[f32]` slices plus pre-bound per-projection
-//! [`ScatterView`] bypass slots, and the steady-state forward then does **no
+//! [`BoundDelta`] bypass slots (single scatter views or zero-copy weighted
+//! composites), and the steady-state forward then does **no
 //! string formatting, no store lookups, and no weight copies** — plan
 //! construction is the only place names are resolved.
 //!
@@ -41,7 +42,7 @@ use super::decode::{positional_row, DecodeState};
 use super::kvpool::KvCache;
 use super::DeltaOverlay;
 use crate::config::ModelCfg;
-use crate::peft::delta::ScatterView;
+use crate::peft::delta::BoundDelta;
 use crate::runtime::ValueStore;
 use crate::tensor::pool::KernelPool;
 use crate::tensor::quant::{MatRef, QuantStore};
@@ -88,13 +89,14 @@ const STEP_ATTN_POOL_FLOOR: usize = 4096;
 
 /// One adapted projection, fully resolved: the borrowed weight view
 /// `[d_out, d_in]` (any backbone dtype) plus the pre-bound sparse bypass
-/// view when the adapter touches this projection.
+/// slot when the adapter spec touches this projection — a single adapter's
+/// scatter view or a zero-copy weighted composite ([`BoundDelta`]).
 #[derive(Clone, Copy)]
 pub struct ProjPlan<'a> {
     pub w: MatRef<'a>,
     pub d_out: usize,
     pub d_in: usize,
-    pub delta: Option<ScatterView<'a>>,
+    pub delta: Option<BoundDelta<'a>>,
 }
 
 impl ProjPlan<'_> {
@@ -105,8 +107,8 @@ impl ProjPlan<'_> {
         let rows = h.shape[0];
         let mut y = Tensor::zeros(&[rows, self.d_out]);
         ops::gemm_nt(&h.data, rows, self.d_in, self.w, self.d_out, &mut y.data, pool);
-        if let Some(view) = &self.delta {
-            view.accum_matmul_nt(h, &mut y);
+        if let Some(bound) = &self.delta {
+            bound.accum_matmul_nt(h, &mut y);
         }
         y
     }
@@ -114,13 +116,23 @@ impl ProjPlan<'_> {
     /// One output neuron of the single-row step: the same sequential
     /// zip-sum ([`MatRef::dot_row`], then in-order delta adds) as the
     /// pre-plan decode step, so the value is bit-identical whether
-    /// computed serially or by any pool executor.
+    /// computed serially or by any pool executor. The match keeps each
+    /// bound-slot variant's accumulation loop statically dispatched (no
+    /// boxed iterator on the per-neuron path).
     #[inline]
     fn step_neuron(&self, i: usize, h: &[f32]) -> f32 {
         let mut y = self.w.dot_row(i, h);
-        if let Some(view) = &self.delta {
-            for (col, theta) in view.row(i) {
-                y += theta * h[col];
+        match &self.delta {
+            None => {}
+            Some(BoundDelta::Single(view)) => {
+                for (col, theta) in view.row(i) {
+                    y += theta * h[col];
+                }
+            }
+            Some(BoundDelta::Composite(view)) => {
+                for (col, wtheta) in view.row(i) {
+                    y += wtheta * h[col];
+                }
             }
         }
         y
@@ -203,9 +215,11 @@ impl<'a> PlannedModel<'a> {
     }
 
     /// Resolve every parameter name once from any [`ParamSource`].
-    /// `overlay` pre-binds the sparse bypass view into each adapted
-    /// projection's slot; the plan keeps only the (Copy) scatter views, so
-    /// the overlay itself may be dropped after resolution. Shapes are
+    /// `overlay` pre-binds the sparse bypass slot (single or composite)
+    /// into each adapted projection; the plan keeps only the (Copy) bound
+    /// views, so the overlay itself may be dropped after resolution (a
+    /// composite's [`CompositeParts`](super::CompositeParts) buffer must
+    /// outlive the plan, as the delta stores themselves must). Shapes are
     /// validated here — the forward never re-checks. The plan keeps a
     /// clone of `pool` (no workers are spawned here).
     pub fn resolve_from<S: ParamSource>(

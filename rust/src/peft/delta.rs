@@ -163,6 +163,85 @@ impl DeltaStore {
         sel.check()?;
         Ok(DeltaStore { sel, values })
     }
+
+    /// Sparse k-way merge: Δ = Σ wᵢ · Δᵢ as one compact store (the AdaMix
+    /// "average the mixture into a single module" trick, generalized to
+    /// arbitrary weights).
+    ///
+    /// Per output neuron the result carries the **union** of the parts'
+    /// scatter indices in a deterministic order — union indices ascending,
+    /// then (because [`RowSelection`] is fixed-k per matrix) rows with fewer
+    /// distinct indices are padded up to the widest row with the smallest
+    /// unused in-range indices carrying θ = 0, a no-op under merge/bypass.
+    /// Overlapping indices sum their weighted θ in f32; the result is
+    /// rounded to BF16 (the storage dtype) exactly **once**, so composing
+    /// offline and composing at resolve time produce bitwise-identical
+    /// stores — the serving parity oracle relies on this. Contributions to
+    /// one index are summed in a canonical order (sorted by f32 total
+    /// order), not part order, so the union is bitwise order-independent —
+    /// f32 addition commutes but does not associate, and three parts
+    /// touching the same index would otherwise round differently per
+    /// permutation.
+    ///
+    /// A single part with weight exactly 1.0 short-circuits to a clone:
+    /// identity must be *bitwise* (including index order), not merely
+    /// value-equal.
+    pub fn weighted_union(parts: &[(f32, &DeltaStore)]) -> Result<DeltaStore, String> {
+        let (d_out, d_in) = match parts {
+            [] => return Err("weighted_union: empty part list".into()),
+            [(w, d)] if *w == 1.0 => return Ok((*d).clone()),
+            [(_, first), ..] => (first.sel.d_out, first.sel.d_in),
+        };
+        for (i, (_, d)) in parts.iter().enumerate() {
+            if d.sel.d_out != d_out || d.sel.d_in != d_in {
+                return Err(format!(
+                    "weighted_union: part {i} shape [{}, {}] != [{d_out}, {d_in}]",
+                    d.sel.d_out, d.sel.d_in
+                ));
+            }
+        }
+        // Per-row weighted contributions over the index union (BTreeMap ⇒
+        // ascending indices); each index's contributions are sorted into
+        // f32 total order before summing — the canonical order that makes
+        // the union a function of the part *multiset*, not the part order.
+        let mut rows: Vec<std::collections::BTreeMap<usize, Vec<f32>>> = Vec::with_capacity(d_out);
+        for i in 0..d_out {
+            let mut acc: std::collections::BTreeMap<usize, Vec<f32>> =
+                std::collections::BTreeMap::new();
+            for &(w, d) in parts {
+                for j in 0..d.sel.k {
+                    let col = d.sel.idx.at2(i, j) as usize;
+                    acc.entry(col).or_default().push(w * d.get(i, j));
+                }
+            }
+            rows.push(acc);
+        }
+        let k = rows.iter().map(|r| r.len()).max().unwrap().max(1);
+        let mut idx = crate::tensor::ITensor::zeros(&[d_out, k]);
+        let mut vals = vec![0.0f32; d_out * k];
+        for (i, acc) in rows.iter_mut().enumerate() {
+            let mut j = 0;
+            for (&col, contribs) in acc.iter_mut() {
+                contribs.sort_by(|a, b| a.total_cmp(b));
+                idx.data[i * k + j] = col as i32;
+                vals[i * k + j] = contribs.iter().sum();
+                j += 1;
+            }
+            // Pad with the smallest unused in-range indices (θ = 0) so the
+            // row stays distinct-index valid at the uniform width k.
+            let mut col = 0usize;
+            while j < k {
+                if !acc.contains_key(&col) {
+                    idx.data[i * k + j] = col as i32;
+                    j += 1;
+                }
+                col += 1;
+            }
+        }
+        let sel = RowSelection { d_out, d_in, k, idx };
+        sel.check()?;
+        Ok(DeltaStore::from_f32(sel, &vals))
+    }
 }
 
 /// Borrowed scatter view of a [`DeltaStore`]: no copies, no dense Δ.
@@ -218,6 +297,149 @@ impl ScatterView<'_> {
             }
         }
     }
+}
+
+/// Borrowed weighted composition of [`ScatterView`]s: Σ wᵢ · Δᵢ applied
+/// zero-copy, without materializing a union [`DeltaStore`] or a dense Δ.
+///
+/// This is the algebraic twin of [`DeltaStore::weighted_union`]: it applies
+/// each part's bf16 θ scaled by its f32 weight at use time, so its results
+/// agree with the materialized union to f32 accumulation order / one extra
+/// BF16 rounding — close (property-tested), but **not** bitwise. The serving
+/// path that needs bitwise parity with an offline-composed adapter serves
+/// the materialized union instead.
+#[derive(Debug, Clone, Copy)]
+pub struct CompositeView<'a> {
+    parts: &'a [(f32, ScatterView<'a>)],
+}
+
+impl<'a> CompositeView<'a> {
+    /// Wrap weighted parts; all parts must share the same weight-matrix
+    /// shape.
+    pub fn new(parts: &'a [(f32, ScatterView<'a>)]) -> Result<CompositeView<'a>, String> {
+        let [(_, first), rest @ ..] = parts else {
+            return Err("CompositeView: empty part list".into());
+        };
+        for (i, (_, v)) in rest.iter().enumerate() {
+            if v.d_out() != first.d_out() || v.d_in() != first.d_in() {
+                return Err(format!(
+                    "CompositeView: part {} shape [{}, {}] != [{}, {}]",
+                    i + 1,
+                    v.d_out(),
+                    v.d_in(),
+                    first.d_out(),
+                    first.d_in()
+                ));
+            }
+        }
+        Ok(CompositeView { parts })
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.parts[0].1.d_out()
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.parts[0].1.d_in()
+    }
+
+    /// Total scatter slots applied per output neuron (Σ kᵢ — overlapping
+    /// indices are applied once per part, which is what accumulation wants).
+    pub fn k(&self) -> usize {
+        self.parts.iter().map(|(_, v)| v.k()).sum()
+    }
+
+    /// The weighted (column, w·θ) pairs of output neuron `i` across all
+    /// parts, decoded lazily. Columns may repeat across parts.
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        self.parts
+            .iter()
+            .flat_map(move |&(w, v)| v.row(i).map(move |(col, th)| (col, w * th)))
+    }
+
+    /// out[r, i] += Σ_parts wᵢ · (Δᵢ x)[r, i] — the composite sparse half of
+    /// `x (W + Σ wᵢΔᵢ)ᵀ`, accumulated into a dense `x Wᵀ` result.
+    pub fn accum_matmul_nt(&self, x: &Tensor, out: &mut Tensor) {
+        assert_eq!(x.rank(), 2);
+        assert_eq!(x.shape[1], self.d_in(), "x inner dim vs composite d_in");
+        assert_eq!(out.shape, vec![x.shape[0], self.d_out()], "out shape vs composite d_out");
+        for r in 0..x.shape[0] {
+            let xr = x.row(r);
+            let or = out.row_mut(r);
+            for i in 0..self.d_out() {
+                let mut acc = 0.0f32;
+                for &(w, v) in self.parts {
+                    let k = v.sel.k;
+                    let mut part = 0.0f32;
+                    for j in 0..k {
+                        let col = v.sel.idx.at2(i, j) as usize;
+                        part += bf16::to_f32(v.values[i * k + j]) * xr[col];
+                    }
+                    acc += w * part;
+                }
+                or[i] += acc;
+            }
+        }
+    }
+}
+
+/// One pre-bound bypass slot of a forward plan: a single adapter's scatter
+/// view or a zero-copy weighted composite. Reference-only (`Copy`), so
+/// `model/plan.rs` projection slots stay cheap and the overlay that bound
+/// them can be dropped after resolution.
+#[derive(Debug, Clone, Copy)]
+pub enum BoundDelta<'a> {
+    Single(ScatterView<'a>),
+    Composite(CompositeView<'a>),
+}
+
+impl BoundDelta<'_> {
+    /// The sparse half of `x (W + Δ)ᵀ` accumulated into a dense `x Wᵀ`
+    /// result — dispatches to the wrapped view's `accum_matmul_nt`.
+    pub fn accum_matmul_nt(&self, x: &Tensor, out: &mut Tensor) {
+        match self {
+            BoundDelta::Single(v) => v.accum_matmul_nt(x, out),
+            BoundDelta::Composite(v) => v.accum_matmul_nt(x, out),
+        }
+    }
+
+    /// Scatter slots applied per output neuron (k, or Σ kᵢ for a composite).
+    pub fn k(&self) -> usize {
+        match self {
+            BoundDelta::Single(v) => v.k(),
+            BoundDelta::Composite(v) => v.k(),
+        }
+    }
+}
+
+/// Compose whole adapters (named per-projection delta sets) into one:
+/// group the parts' stores by projection name and
+/// [`DeltaStore::weighted_union`] each group, keeping the parts' given
+/// order within a group and emitting projections in sorted-name order.
+/// Both composition call sites — the registry's compose-on-resolve and
+/// the offline `neuroada compose` — go through here with the parts in
+/// canonical spec order, which is what makes online mixture serving
+/// bitwise-equal to serving the composed-and-registered adapter.
+pub fn compose_deltas(
+    parts: &[(f32, &[(String, DeltaStore)])],
+) -> Result<Vec<(String, DeltaStore)>, String> {
+    if parts.is_empty() {
+        return Err("compose_deltas: empty part list".into());
+    }
+    let mut by_proj: std::collections::BTreeMap<&str, Vec<(f32, &DeltaStore)>> =
+        std::collections::BTreeMap::new();
+    for (w, deltas) in parts {
+        for (proj, d) in deltas.iter() {
+            by_proj.entry(proj.as_str()).or_default().push((*w, d));
+        }
+    }
+    by_proj
+        .into_iter()
+        .map(|(proj, ps)| {
+            let d = DeltaStore::weighted_union(&ps).map_err(|e| format!("{proj}: {e}"))?;
+            Ok((proj.to_string(), d))
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -345,6 +567,108 @@ mod tests {
         let mut got = Tensor::zeros(&[5, 9]);
         d.scatter_view().accum_matmul_nt(&x, &mut got);
         assert!(got.max_abs_diff(&expect) < 1e-5, "{}", got.max_abs_diff(&expect));
+    }
+
+    #[test]
+    fn weighted_union_single_part_weight_one_is_bitwise_identity() {
+        let (_, d) = setup(9, 7, 3, 20);
+        let u = DeltaStore::weighted_union(&[(1.0, &d)]).unwrap();
+        // bitwise: same index order (select_topk's magnitude order, not
+        // ascending) and same bf16 payload
+        assert_eq!(u.sel, d.sel);
+        assert_eq!(u.values, d.values);
+    }
+
+    #[test]
+    fn weighted_union_is_order_independent() {
+        let (_, a) = setup(10, 8, 2, 21);
+        let (_, b) = setup(10, 8, 3, 22);
+        let (_, c) = setup(10, 8, 1, 23);
+        let ab = DeltaStore::weighted_union(&[(0.5, &a), (0.3, &b), (0.2, &c)]).unwrap();
+        let ba = DeltaStore::weighted_union(&[(0.2, &c), (0.3, &b), (0.5, &a)]).unwrap();
+        assert_eq!(ab.sel, ba.sel);
+        assert_eq!(ab.values, ba.values);
+    }
+
+    #[test]
+    fn weighted_union_matches_weighted_dense_sum() {
+        let (_, a) = setup(8, 6, 2, 24);
+        let (_, b) = setup(8, 6, 2, 25);
+        let u = DeltaStore::weighted_union(&[(0.7, &a), (0.3, &b)]).unwrap();
+        // expected: per (row, col) the f32 weighted sum, bf16-rounded once
+        let mut expect = Tensor::zeros(&[8, 6]);
+        for (w, d) in [(0.7f32, &a), (0.3, &b)] {
+            let dense = d.to_dense();
+            for t in 0..expect.data.len() {
+                expect.data[t] += w * dense.data[t];
+            }
+        }
+        for t in 0..expect.data.len() {
+            expect.data[t] = bf16::to_f32(bf16::to_bf16(expect.data[t]));
+        }
+        assert_eq!(u.to_dense().data, expect.data);
+        // deterministic layout: distinct indices per row (padding included)
+        for i in 0..u.d_out() {
+            let cols: Vec<i32> = (0..u.k()).map(|j| u.sel.idx.at2(i, j)).collect();
+            let mut sorted = cols.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), cols.len(), "row {i} has duplicate indices");
+        }
+        u.sel.check().unwrap();
+    }
+
+    #[test]
+    fn weighted_union_rejects_shape_mismatch_and_empty() {
+        let (_, a) = setup(8, 6, 2, 26);
+        let (_, b) = setup(8, 7, 2, 27);
+        assert!(DeltaStore::weighted_union(&[(0.5, &a), (0.5, &b)]).is_err());
+        assert!(DeltaStore::weighted_union(&[]).is_err());
+    }
+
+    #[test]
+    fn composite_view_matches_union_and_dense() {
+        let mut rng = Rng::new(28);
+        let (_, a) = setup(9, 7, 3, 28);
+        let (_, b) = setup(9, 7, 2, 29);
+        let x = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        let parts = [(0.6f32, a.scatter_view()), (0.4, b.scatter_view())];
+        let view = CompositeView::new(&parts).unwrap();
+        assert_eq!(view.d_out(), 9);
+        assert_eq!(view.d_in(), 7);
+        assert_eq!(view.k(), 5);
+        let mut got = Tensor::zeros(&[5, 9]);
+        view.accum_matmul_nt(&x, &mut got);
+        // dense oracle: x · (0.6 Δa + 0.4 Δb)ᵀ in f32
+        let (da, db) = (a.to_dense(), b.to_dense());
+        let mut expect = Tensor::zeros(&[5, 9]);
+        for r in 0..5 {
+            for i in 0..9 {
+                let mut acc = 0.0f32;
+                for c in 0..7 {
+                    acc += x.at2(r, c) * (0.6 * da.at2(i, c) + 0.4 * db.at2(i, c));
+                }
+                expect.set2(r, i, acc);
+            }
+        }
+        assert!(got.max_abs_diff(&expect) < 1e-4, "{}", got.max_abs_diff(&expect));
+        // the materialized union agrees to one extra bf16 rounding
+        let u = DeltaStore::weighted_union(&[(0.6, &a), (0.4, &b)]).unwrap();
+        let mut via_union = Tensor::zeros(&[5, 9]);
+        u.scatter_view().accum_matmul_nt(&x, &mut via_union);
+        assert!(got.max_abs_diff(&via_union) < 1e-2, "{}", got.max_abs_diff(&via_union));
+        // row iterator decodes weighted pairs from every part
+        let pairs: Vec<(usize, f32)> = view.row(0).collect();
+        assert_eq!(pairs.len(), 5);
+    }
+
+    #[test]
+    fn composite_view_rejects_shape_mismatch_and_empty() {
+        let (_, a) = setup(8, 6, 2, 30);
+        let (_, b) = setup(8, 7, 2, 31);
+        let bad = [(0.5f32, a.scatter_view()), (0.5, b.scatter_view())];
+        assert!(CompositeView::new(&bad).is_err());
+        assert!(CompositeView::new(&[]).is_err());
     }
 
     #[test]

@@ -147,6 +147,28 @@ pub fn backbone_resident_bytes(
     dtype.mat_elem_bytes() * mat_params + scales + 4 * vec_params
 }
 
+/// Resident bytes of one compact sparse delta at uniform row width `k` —
+/// the analytic twin of [`crate::peft::DeltaStore::storage_bytes`] (BF16
+/// value + u16/u32 index per slot), usable without a materialized store.
+/// The serving registry's composed-adapter accounting
+/// (`AdapterRegistry::composed_bytes`) sums exactly this per projection,
+/// with `k` the union row width `weighted_union` settled on.
+pub fn delta_resident_bytes(d_out: u64, d_in: u64, k: u64) -> u64 {
+    let idx_bytes: u64 = if d_in <= (1 << 16) { 2 } else { 4 };
+    d_out * k * (2 + idx_bytes)
+}
+
+/// Upper bound on the row width of a k-way composition
+/// (`DeltaStore::weighted_union`): per output neuron the union of the
+/// parts' scatter indices holds at most Σ kᵢ distinct columns, and never
+/// more than `d_in`; a degenerate all-empty union still stores one padded
+/// slot. Composed resident bytes are therefore bounded by
+/// `delta_resident_bytes(d_out, d_in, composed_k_bound(..))` — the
+/// mixture-serving memory model, property-tested against real unions.
+pub fn composed_k_bound(part_ks: &[u64], d_in: u64) -> u64 {
+    part_ks.iter().sum::<u64>().min(d_in).max(1)
+}
+
 /// Table 1 row: per-projection storage of the sparsity pattern itself —
 /// dense 1-bit mask vs NeuroAda's (BF16 value + u16 index) per neuron.
 #[derive(Debug, Clone)]
@@ -282,6 +304,42 @@ mod tests {
         }
         let i8_bytes = backbone_resident_bytes(mat_params, mat_rows, vec_params, BackboneDtype::I8);
         assert!(i8_bytes * 2 <= f32_bytes, "int8 {i8_bytes} B vs f32 {f32_bytes} B");
+    }
+
+    /// The analytic delta formula must agree byte-for-byte with a real
+    /// store, and the composed-width bound must hold for real unions.
+    #[test]
+    fn delta_resident_bytes_matches_store_and_bounds_unions() {
+        use crate::peft::selection::select_topk;
+        use crate::peft::DeltaStore;
+        use crate::tensor::Tensor;
+        use crate::util::rng::Rng;
+
+        let mut rng = Rng::new(11);
+        let (d_out, d_in) = (12usize, 9usize);
+        let mk = |k: usize, rng: &mut Rng| {
+            let w = Tensor::randn(&[d_out, d_in], 1.0, rng);
+            let sel = select_topk(&w, k);
+            let vals: Vec<f32> = (0..d_out * k).map(|_| rng.normal()).collect();
+            DeltaStore::from_f32(sel, &vals)
+        };
+        let (a, b) = (mk(2, &mut rng), mk(3, &mut rng));
+        for d in [&a, &b] {
+            assert_eq!(
+                delta_resident_bytes(d_out as u64, d_in as u64, d.k() as u64),
+                d.storage_bytes()
+            );
+        }
+        let union = DeltaStore::weighted_union(&[(0.5, &a), (0.5, &b)]).unwrap();
+        let bound = composed_k_bound(&[a.k() as u64, b.k() as u64], d_in as u64);
+        assert!(union.k() as u64 <= bound, "union k {} > bound {bound}", union.k());
+        assert!(union.storage_bytes() <= delta_resident_bytes(d_out as u64, d_in as u64, bound));
+        // wide-index regime: d_in > 2^16 switches to 4-byte indices
+        assert_eq!(delta_resident_bytes(1, (1 << 16) + 1, 1), 6);
+        assert_eq!(delta_resident_bytes(1, 1 << 16, 1), 4);
+        // the bound saturates at d_in and never collapses to zero
+        assert_eq!(composed_k_bound(&[40, 40], 9), 9);
+        assert_eq!(composed_k_bound(&[], 9), 1);
     }
 
     #[test]

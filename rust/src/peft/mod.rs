@@ -4,7 +4,10 @@
 //!   selection (Magnitude default + the Fig. 7 alternatives), plus the Fig. 6
 //!   neuron-fraction machinery.
 //! * [`delta`]     — the compact bypass store: k (index, bf16 value) pairs per
-//!   neuron; pack/unpack to HLO inputs; the one-shot merge (Phase 3).
+//!   neuron; pack/unpack to HLO inputs; the one-shot merge (Phase 3); and
+//!   the composition algebra (`weighted_union` / [`CompositeView`] /
+//!   [`compose_deltas`]) that blends whole adapters by a sparse k-way
+//!   index-union — the AdaMix mixture-of-adaptations trick.
 //! * [`optimizer`] — reference sparse AdamW (bit-matches the in-graph AdamW;
 //!   used by equivalence tests) + state-size accounting (Eq. 5/6).
 //! * [`memory`]    — the analytic training-memory model behind Table 1 and
@@ -19,6 +22,6 @@ pub mod method;
 pub mod optimizer;
 pub mod selection;
 
-pub use delta::DeltaStore;
+pub use delta::{compose_deltas, BoundDelta, CompositeView, DeltaStore};
 pub use method::{Method, MethodKind};
 pub use selection::{allocate_budget, select_topk, RowSelection, Strategy};

@@ -1,6 +1,8 @@
 //! Continuous micro-batching: coalesce same-adapter requests.
 //!
-//! Requests accumulate in per-adapter FIFO queues. A batch becomes ready
+//! Requests accumulate in per-adapter FIFO queues, keyed by the
+//! *canonical* adapter-spec key — so `"a+b"` and `"b:0.5+a:0.5"`
+//! coalesce into one batch. A batch becomes ready
 //! when either (a) an adapter has `max_batch` requests waiting — a *full*
 //! batch — or (b) the oldest request of some adapter has waited `max_delay`
 //! — a *deadline flush*, which bounds tail latency for sparse traffic.
@@ -44,6 +46,13 @@ impl<T> MicroBatcher<T> {
     /// Requests pending for one adapter (the admission-quota input).
     pub fn adapter_depth(&self, adapter: &str) -> usize {
         self.queues.get(adapter).map_or(0, VecDeque::len)
+    }
+
+    /// Iterate `(queue key, depth)` over every pending queue. Keys are
+    /// canonical adapter-spec keys — the per-part admission quota sums
+    /// depth across every queued spec naming a part.
+    pub fn adapters(&self) -> impl Iterator<Item = (&str, usize)> {
+        self.queues.iter().map(|(k, q)| (k.as_str(), q.len()))
     }
 
     /// Enqueue one request for `adapter`, stamped with its arrival time.

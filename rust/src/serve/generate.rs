@@ -19,6 +19,8 @@ use std::time::Duration;
 /// One streaming generation request.
 #[derive(Debug, Clone)]
 pub struct GenerateRequest {
+    /// Adapter spec: a single name or a weighted mixture
+    /// (`"a:0.7+b:0.3"` — see `serve::AdapterSpec`).
     pub adapter: String,
     /// Prompt tokens; `prompt.len() + max_new_tokens` must fit `cfg.seq`
     /// (the per-slot KV capacity) or admission rejects with

@@ -14,6 +14,12 @@
 //!   store or a bf16/int8 `tensor::quant::QuantStore`, selected by
 //!   [`ServeCfg::backbone_dtype`] (`--backbone-dtype`); forwards
 //!   dequantize in-register while the sparse deltas stay f32.
+//! * [`spec`] — [`AdapterSpec`]: the typed adapter identity every layer
+//!   threads. A request may name one adapter (`"a"`) or a weighted
+//!   mixture (`"a+b"`, `"a:0.7+b:0.3"` — AdaMix-style composition over
+//!   the sparse deltas via `DeltaStore::weighted_union`); specs are
+//!   canonicalized and interned so batching/quota/metrics/prefix-cache
+//!   keys stay cheap and stable.
 //! * [`batcher`]  — [`MicroBatcher`]: per-adapter request coalescing with
 //!   full-batch dispatch and deadline flush (continuous micro-batching).
 //! * [`scheduler`] — [`Server`]: bounded admission queue with typed
@@ -58,6 +64,7 @@ pub mod generate;
 pub mod metrics;
 pub mod registry;
 pub mod scheduler;
+pub mod spec;
 
 pub use batcher::MicroBatcher;
 pub use crate::model::SampleCfg;
@@ -71,6 +78,7 @@ pub use scheduler::{
     Backend, ClsRequest, ClsResponse, ClsTicket, Reject, Request, Response, ServeCfg, Server,
     Ticket,
 };
+pub use spec::{validate_name, AdapterSpec, ReservedNameChar, RESERVED_NAME_CHARS};
 
 use crate::config::ModelCfg;
 use crate::coordinator::common::RunOpts;

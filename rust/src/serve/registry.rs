@@ -33,11 +33,31 @@
 //! [`Backbone`] and [`AdapterRegistry::set_backbone_dtype`]: bf16 halves
 //! and int8 quarters the resident weight bytes, while the sparse deltas
 //! stay f32 and apply at full precision on the bypass path.
+//!
+//! **Composition.** A request may name a weighted *mixture* of adapters
+//! (`"a:0.7+b:0.3"`, see [`AdapterSpec`]): [`resolve_spec_batch`]
+//! composes the parts on first use via `peft::compose_deltas` (a sparse
+//! weighted union of scatter indices — the AdaMix trick) and installs the
+//! result as an internal entry under the spec's canonical key. From there
+//! a composite is an adapter like any other: it promotes to a merged copy
+//! (compose, then merge, then re-quantize at the backbone dtype), decays
+//! under the rate policy, and is LRU-bounded separately by
+//! [`RegistryCfg::composed_capacity`] with its resident delta bytes
+//! reported by [`composed_bytes`]. Component re-registration is detected
+//! by version snapshot — a stale composite recomposes on its next
+//! resolve, never serving old weights. Adapter names may not contain the
+//! reserved spec characters `+`/`:`/`@` (typed
+//! [`ReservedNameChar`](super::ReservedNameChar) error at registration),
+//! so canonical composite keys can never collide with user names.
+//!
+//! [`resolve_spec_batch`]: AdapterRegistry::resolve_spec_batch
+//! [`composed_bytes`]: AdapterRegistry::composed_bytes
 
+use super::spec::{self, AdapterSpec};
 use crate::config::ModelCfg;
 use crate::model::{DeltaOverlay, ParamSource, PlannedModel};
 use crate::obs::trace::{Stage, Tracer};
-use crate::peft::DeltaStore;
+use crate::peft::{compose_deltas, DeltaStore};
 use crate::tensor::pool::KernelPool;
 use crate::tensor::quant::{BackboneDtype, MatRef, QuantStore};
 use crate::runtime::ValueStore;
@@ -234,6 +254,11 @@ pub struct RegistryCfg {
     ///
     /// [`DecayedRate`]: PromotionPolicy::DecayedRate
     pub policy: PromotionPolicy,
+    /// Composed delta stores kept resident (the compose-on-resolve LRU for
+    /// composite [`AdapterSpec`]s). Each composed store is adapter-sized
+    /// (~0.02% of the model), so the default keeps composition cheap
+    /// without letting adversarial one-shot mixtures accumulate.
+    pub composed_capacity: usize,
 }
 
 impl Default for RegistryCfg {
@@ -242,6 +267,7 @@ impl Default for RegistryCfg {
             merged_capacity: 2,
             promote_after: 3,
             policy: PromotionPolicy::CountThreshold,
+            composed_capacity: 8,
         }
     }
 }
@@ -277,6 +303,12 @@ struct Entry {
     /// with the registry-epoch-relative time it was last decayed to.
     rate: f64,
     rate_at_s: f64,
+    /// `None` for a user-registered adapter. `Some` marks an internal
+    /// composed entry (keyed by its canonical composite spec), recording
+    /// the `(name, version)` snapshot of every component it was composed
+    /// from — a mismatch on resolve means a component was re-registered
+    /// and the composition is recomputed before serving.
+    components: Option<Vec<(String, u64)>>,
 }
 
 struct Inner {
@@ -400,10 +432,18 @@ impl AdapterRegistry {
         self.backbone.clone()
     }
 
-    /// Validate a delta set against the backbone's projection shapes.
+    /// Validate a delta set against the backbone's projection shapes, and
+    /// the name against the spec grammar (reserved `+`/`:`/`@` — a user
+    /// name must never parse as a composite spec or a version label).
     fn validate_deltas(&self, name: &str, deltas: &[(String, DeltaStore)]) -> Result<()> {
         if name.is_empty() {
             bail!("adapter name must be non-empty");
+        }
+        if let Some(ch) = spec::reserved_char(name) {
+            return Err(anyhow::Error::new(spec::ReservedNameChar {
+                name: name.to_string(),
+                ch,
+            }));
         }
         if deltas.is_empty() {
             bail!("adapter {name:?}: no deltas");
@@ -452,6 +492,7 @@ impl AdapterRegistry {
                 merges: 0,
                 rate: 0.0,
                 rate_at_s: 0.0,
+                components: None,
             },
         );
         Ok(())
@@ -519,6 +560,7 @@ impl AdapterRegistry {
                         merges: 0,
                         rate: 0.0,
                         rate_at_s: 0.0,
+                        components: None,
                     },
                 );
                 1
@@ -579,16 +621,57 @@ impl AdapterRegistry {
         self.inner.lock().unwrap().entries.contains_key(name)
     }
 
-    pub fn names(&self) -> Vec<String> {
-        self.inner.lock().unwrap().entries.keys().cloned().collect()
+    /// Whether every adapter the spec references is registered — the
+    /// admission-time check for composite requests ([`contains`] for the
+    /// canonical key only answers for singles and already-composed
+    /// mixtures).
+    ///
+    /// [`contains`]: AdapterRegistry::contains
+    pub fn contains_spec(&self, spec: &AdapterSpec) -> bool {
+        let g = self.inner.lock().unwrap();
+        spec.part_names().all(|n| g.entries.contains_key(n))
     }
 
+    /// User-registered adapter names (internal composed entries excluded).
+    pub fn names(&self) -> Vec<String> {
+        self.inner
+            .lock()
+            .unwrap()
+            .entries
+            .iter()
+            .filter(|(_, e)| e.components.is_none())
+            .map(|(n, _)| n.clone())
+            .collect()
+    }
+
+    /// User-registered adapters (internal composed entries excluded).
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().entries.len()
+        self.inner.lock().unwrap().entries.values().filter(|e| e.components.is_none()).count()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Composed delta stores currently resident (the compose-on-resolve
+    /// LRU, bounded by [`RegistryCfg::composed_capacity`]).
+    pub fn composed_count(&self) -> usize {
+        self.inner.lock().unwrap().entries.values().filter(|e| e.components.is_some()).count()
+    }
+
+    /// Resident bytes of the composed delta stores — `backbone_bytes`-style
+    /// accounting for what composition itself keeps alive. (Merged copies
+    /// of composites are full backbone copies and are counted — and
+    /// LRU-bounded — by the merged path, like any adapter's.)
+    pub fn composed_bytes(&self) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .entries
+            .values()
+            .filter(|e| e.components.is_some())
+            .map(|e| e.deltas.iter().map(|(_, d)| d.storage_bytes()).sum::<u64>())
+            .sum()
     }
 
     /// Merged copies currently resident.
@@ -650,6 +733,160 @@ impl AdapterRegistry {
     /// Resolve one request for an adapter. See [`AdapterRegistry::resolve_batch`].
     pub fn resolve(&self, name: &str) -> Option<ModelRef> {
         self.resolve_batch(name, 1)
+    }
+
+    /// [`resolve_spec_batch`] for one request.
+    ///
+    /// [`resolve_spec_batch`]: AdapterRegistry::resolve_spec_batch
+    pub fn resolve_spec(&self, spec: &AdapterSpec) -> Option<ModelRef> {
+        self.resolve_spec_batch(spec, 1)
+    }
+
+    /// Resolve a coalesced batch for an adapter *spec*: a single adapter
+    /// resolves exactly like [`resolve_batch`]; a composite first ensures
+    /// its composed delta store is resident and fresh (compose-on-resolve,
+    /// LRU-cached under the canonical key), then resolves that internal
+    /// entry through the ordinary promotion machinery — so a hot mixture
+    /// earns a merged (and re-quantized) copy like any adapter. `None`
+    /// when any component is unregistered.
+    ///
+    /// [`resolve_batch`]: AdapterRegistry::resolve_batch
+    pub fn resolve_spec_batch(&self, spec: &AdapterSpec, n_requests: u64) -> Option<ModelRef> {
+        self.ensure_composed(spec)?;
+        self.resolve_batch(spec.key(), n_requests)
+    }
+
+    /// [`resolve_spec_batch`]'s decode-path twin: never merges inline (see
+    /// [`resolve_no_promote`]), but composition itself still runs on a
+    /// cache miss — a composed store is adapter-sized (~0.02% of the
+    /// model), not an O(params) merge.
+    ///
+    /// [`resolve_spec_batch`]: AdapterRegistry::resolve_spec_batch
+    /// [`resolve_no_promote`]: AdapterRegistry::resolve_no_promote
+    pub fn resolve_spec_no_promote(&self, spec: &AdapterSpec) -> Option<ModelRef> {
+        self.ensure_composed(spec)?;
+        self.resolve_no_promote(spec.key())
+    }
+
+    /// Make the composite spec's composed delta store resident and fresh.
+    /// No-op for singles and for a cached composition whose component
+    /// version snapshot still matches. Otherwise: snapshot the parts under
+    /// the lock, compose OUTSIDE it (`peft::compose_deltas` — sparse
+    /// weighted union per projection, parts in canonical spec order), and
+    /// install under the canonical key with a version re-check; a
+    /// concurrent component re-registration retries the compose on the new
+    /// weights. `None` when a component is unregistered.
+    fn ensure_composed(&self, spec: &AdapterSpec) -> Option<()> {
+        if spec.is_single() {
+            return self.contains(spec.key()).then_some(());
+        }
+        // bounded retry: each round either installs or observes a
+        // component version move forward (re-registration is rare)
+        for _ in 0..4 {
+            let (snap, vers) = {
+                let mut g = self.inner.lock().unwrap();
+                let fresh = match g.entries.get(spec.key()) {
+                    Some(e) => e.components.as_ref().is_some_and(|comps| {
+                        comps
+                            .iter()
+                            .all(|(n, v)| g.entries.get(n).is_some_and(|pe| pe.version == *v))
+                    }),
+                    None => false,
+                };
+                if fresh {
+                    return Some(());
+                }
+                let mut snap: Vec<(f32, Arc<Vec<(String, DeltaStore)>>)> =
+                    Vec::with_capacity(spec.parts().len());
+                let mut vers: Vec<(String, u64)> = Vec::with_capacity(spec.parts().len());
+                for (name, w) in spec.parts() {
+                    match g.entries.get(name) {
+                        Some(e) => {
+                            snap.push((*w, e.deltas.clone()));
+                            vers.push((name.clone(), e.version));
+                        }
+                        None => {
+                            // a component left: drop the stale composition
+                            // (it must never serve again) and report unknown
+                            g.entries.remove(spec.key());
+                            return None;
+                        }
+                    }
+                }
+                (snap, vers)
+            };
+            // compose without holding the lock
+            let parts: Vec<(f32, &[(String, DeltaStore)])> =
+                snap.iter().map(|(w, d)| (*w, d.as_slice())).collect();
+            let composed = compose_deltas(&parts)
+                .expect("registered component deltas share the backbone's projection shapes");
+            let mut g = self.inner.lock().unwrap();
+            let still = vers
+                .iter()
+                .all(|(n, v)| g.entries.get(n).is_some_and(|e| e.version == *v));
+            if !still {
+                continue; // a component moved mid-compose: recompose
+            }
+            g.tick += 1;
+            let tick = g.tick;
+            // traffic history belongs to the spec: counters carry across
+            // recompositions, like swap_in carries them across versions
+            let (version, requests, merges, rate, rate_at_s) = match g.entries.get(spec.key()) {
+                Some(e) => (e.version + 1, e.requests, e.merges, e.rate, e.rate_at_s),
+                None => (1, 0, 0, 0.0, 0.0),
+            };
+            g.entries.insert(
+                spec.key().to_string(),
+                Entry {
+                    deltas: Arc::new(composed),
+                    merged: None,
+                    merge_in_flight: false,
+                    generation: tick,
+                    version,
+                    last_used: tick,
+                    requests,
+                    merges,
+                    rate,
+                    rate_at_s,
+                    components: Some(vers),
+                },
+            );
+            self.evict_composites_over_capacity(&mut g, spec.key());
+            return Some(());
+        }
+        // components kept re-registering faster than we could compose
+        crate::obs::log::warn(
+            "serve",
+            format_args!("compose {spec}: components re-registered on every attempt; giving up"),
+        );
+        None
+    }
+
+    /// Evict least-recently-used composed entries until within
+    /// [`RegistryCfg::composed_capacity`], never evicting `keep` (the
+    /// composition just installed). Mirrors the merged-copy LRU.
+    fn evict_composites_over_capacity(&self, g: &mut Inner, keep: &str) {
+        loop {
+            let resident = g.entries.values().filter(|e| e.components.is_some()).count();
+            if resident <= self.rcfg.composed_capacity {
+                return;
+            }
+            let victim = g
+                .entries
+                .iter()
+                .filter(|(n, e)| e.components.is_some() && n.as_str() != keep)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(n, _)| n.clone());
+            match victim {
+                Some(v) => {
+                    g.entries.remove(&v);
+                    if let Some(t) = self.tracer() {
+                        t.instant(0, Stage::Evict, &format!("{v} (composed)"));
+                    }
+                }
+                None => return, // only `keep` is resident and capacity is 0
+            }
+        }
     }
 
     /// Resolve for the latency-critical decode path: counts the request and
@@ -1175,5 +1412,126 @@ mod tests {
         // swap_in on an unknown name registers version 1
         assert_eq!(reg.swap_in("b", adapter(&reg, 12), false).unwrap(), 1);
         assert!(reg.contains("b"));
+    }
+
+    /// ISSUE 10: names carrying reserved spec characters are rejected with
+    /// a typed error — one regression case per character.
+    #[test]
+    fn register_rejects_reserved_spec_characters() {
+        let reg = nano_registry(RegistryCfg::default());
+        for (name, ch) in [("a+b", '+'), ("a:0.5", ':'), ("a@v2", '@')] {
+            let err = reg.register(name, adapter(&reg, 1)).unwrap_err();
+            let typed = err.downcast_ref::<spec::ReservedNameChar>();
+            assert_eq!(typed.map(|t| t.ch), Some(ch), "{name}: {err:#}");
+            assert!(!reg.contains(name));
+        }
+        // swap_in and register_dir funnel through the same validation
+        let err = reg.swap_in("x@v1", adapter(&reg, 1), false).unwrap_err();
+        assert!(err.downcast_ref::<spec::ReservedNameChar>().is_some());
+    }
+
+    /// ISSUE 10: a composite spec composes on first resolve, caches the
+    /// composed store under its canonical key, and the composed deltas are
+    /// BITWISE the offline `compose_deltas` union — the parity the
+    /// `neuroada compose` oracle builds on.
+    #[test]
+    fn compose_on_resolve_caches_and_is_bitwise_stable() {
+        let reg = nano_registry(RegistryCfg { merged_capacity: 0, ..RegistryCfg::default() });
+        reg.register("a", adapter(&reg, 1)).unwrap();
+        reg.register("b", adapter(&reg, 2)).unwrap();
+        let sp = AdapterSpec::parse("a:0.5+b:0.5").unwrap();
+        assert!(reg.contains_spec(&sp));
+        assert_eq!(reg.resolve_spec(&sp).unwrap().path(), ServePath::Bypass);
+        assert_eq!(reg.composed_count(), 1);
+        let (a, b) = (adapter(&reg, 1), adapter(&reg, 2));
+        let expect = compose_deltas(&[(0.5, a.as_slice()), (0.5, b.as_slice())]).unwrap();
+        match reg.bypass(sp.key()).unwrap() {
+            ModelRef::Bypass { deltas, .. } => {
+                assert_eq!(deltas.len(), expect.len());
+                assert_eq!(deltas[0].1.to_bytes(), expect[0].1.to_bytes());
+            }
+            _ => panic!("expected bypass"),
+        }
+        // second resolve reuses the cached composition (no version bump)
+        reg.resolve_spec(&sp).unwrap();
+        assert_eq!(reg.info(sp.key()).unwrap().version, 1);
+        assert_eq!(reg.composed_count(), 1);
+        // resident accounting matches the stores' own storage_bytes
+        let bytes: u64 = expect.iter().map(|(_, d)| d.storage_bytes()).sum();
+        assert_eq!(reg.composed_bytes(), bytes);
+        // user-facing listings exclude the internal entry
+        assert_eq!(reg.len(), 2);
+        assert!(reg.names().iter().all(|n| !n.contains('+')));
+    }
+
+    /// ISSUE 10: a component re-registration makes the cached composition
+    /// stale — the next resolve recomposes from the new weights; evicting
+    /// a component drops the composition outright.
+    #[test]
+    fn composite_recomposes_when_component_changes() {
+        let reg = nano_registry(RegistryCfg::default());
+        reg.register("a", adapter(&reg, 1)).unwrap();
+        reg.register("b", adapter(&reg, 2)).unwrap();
+        let sp = AdapterSpec::parse("a+b").unwrap();
+        reg.resolve_spec(&sp).unwrap();
+        assert_eq!(reg.info(sp.key()).unwrap().version, 1);
+        let old = match reg.bypass(sp.key()).unwrap() {
+            ModelRef::Bypass { deltas, .. } => deltas[0].1.to_bytes(),
+            _ => panic!("expected bypass"),
+        };
+        reg.register("a", adapter(&reg, 9)).unwrap();
+        reg.resolve_spec(&sp).unwrap();
+        assert_eq!(reg.info(sp.key()).unwrap().version, 2, "stale composition recomposed");
+        let new = match reg.bypass(sp.key()).unwrap() {
+            ModelRef::Bypass { deltas, .. } => deltas[0].1.to_bytes(),
+            _ => panic!("expected bypass"),
+        };
+        assert_ne!(old, new, "recomposition must pick up the new component weights");
+        // a swapped-in component is a staleness event too
+        reg.swap_in("b", adapter(&reg, 11), false).unwrap();
+        reg.resolve_spec(&sp).unwrap();
+        assert_eq!(reg.info(sp.key()).unwrap().version, 3);
+        // evicting a component invalidates the composition entirely
+        reg.evict("b");
+        assert!(!reg.contains_spec(&sp));
+        assert!(reg.resolve_spec(&sp).is_none());
+        assert_eq!(reg.composed_count(), 0, "stale composition dropped with its component");
+    }
+
+    /// ISSUE 10: the compose-on-resolve cache is LRU-bounded by
+    /// `composed_capacity`; evicted compositions recompose on demand.
+    #[test]
+    fn composed_lru_bounded_by_capacity() {
+        let reg = nano_registry(RegistryCfg { composed_capacity: 2, ..RegistryCfg::default() });
+        for (n, s) in [("a", 1u64), ("b", 2), ("c", 3)] {
+            reg.register(n, adapter(&reg, s)).unwrap();
+        }
+        for s in ["a+b", "a+c", "b+c"] {
+            reg.resolve_spec(&AdapterSpec::parse(s).unwrap()).unwrap();
+        }
+        assert_eq!(reg.composed_count(), 2);
+        // the least-recently-used composition ("a+b") was evicted…
+        assert!(!reg.contains("a:0.5+b:0.5"));
+        // …and resolving it again recomposes within the same bound
+        reg.resolve_spec(&AdapterSpec::parse("a+b").unwrap()).unwrap();
+        assert_eq!(reg.composed_count(), 2);
+    }
+
+    /// ISSUE 10: a hot composite promotes to a merged copy through the
+    /// ordinary policy — compose, then merge, like any adapter.
+    #[test]
+    fn composite_promotes_to_merged() {
+        let reg = nano_registry(RegistryCfg {
+            merged_capacity: 1,
+            promote_after: 1,
+            ..RegistryCfg::default()
+        });
+        reg.register("a", adapter(&reg, 1)).unwrap();
+        reg.register("b", adapter(&reg, 2)).unwrap();
+        let sp = AdapterSpec::parse("a:0.25+b:0.75").unwrap();
+        assert_eq!(reg.resolve_spec(&sp).unwrap().path(), ServePath::Merged);
+        assert!(reg.is_merged(sp.key()));
+        // decode-path resolve reuses the resident merged copy
+        assert_eq!(reg.resolve_spec_no_promote(&sp).unwrap().path(), ServePath::Merged);
     }
 }

@@ -28,6 +28,15 @@
 //! work AND generations holding (or awaiting) a decode slot, so a tenant
 //! cannot occupy every slot and still fill its queue share.
 //!
+//! Every request names its weights with an adapter *spec* — a single
+//! adapter or a weighted mixture (`"a:0.7+b:0.3"`), parsed into a typed
+//! [`AdapterSpec`] at admission and canonicalized so batching, quota,
+//! metrics, and KV prefix-cache keys are all stable however the caller
+//! spells the mixture. Mixtures are composed on resolve by the registry
+//! (`AdapterRegistry::resolve_spec_batch`, LRU-cached) and the admission
+//! quota is charged per component part, so composing with a cold adapter
+//! cannot smuggle extra load past a hot tenant's cap.
+//!
 //! `Server::start` spawns `workers` OS threads (sized like
 //! `coordinator::pool::Pool::default_size`). Each worker loops: pop a ready
 //! batch from the shared [`MicroBatcher`] (full batch or deadline flush),
@@ -47,13 +56,14 @@ use super::batcher::MicroBatcher;
 use super::generate::{FinishReason, GenEvent, GenResponse, GenTicket, GenerateRequest};
 use super::metrics::{MetricsReport, ServeMetrics, StageLat};
 use super::registry::{AdapterRegistry, ModelKind, ModelRef, ServePath};
+use super::spec::AdapterSpec;
 use crate::tensor::quant::BackboneDtype;
 use crate::config::ModelCfg;
 use crate::obs::http::{HttpServer, Routes};
 use crate::obs::trace::{Stage, Tracer};
 use crate::data::{cls_batch, eval_batch, Example};
 use crate::model::kvpool::{
-    shared_pages, KvCache, KvPool, PagedKv, PoolExhausted, PrefixCache, SpilledKv,
+    shared_pages, KvCache, KvPool, PagedKv, PoolExhausted, PrefixCache, PrefixKey, SpilledKv,
     DEFAULT_PAGE_POSITIONS,
 };
 use crate::model::{sample_token, PlannedModel, SampleCfg};
@@ -72,7 +82,8 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 /// One multiple-choice inference request: score `options` (answer-token
-/// candidates) after `prompt` under the named adapter.
+/// candidates) after `prompt` under `adapter` — a single adapter name or
+/// a weighted mixture spec like `"a:0.7+b:0.3"` (see [`AdapterSpec`]).
 #[derive(Debug, Clone)]
 pub struct Request {
     pub adapter: String,
@@ -135,6 +146,9 @@ pub struct ClsResponse {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Reject {
     UnknownAdapter(String),
+    /// The request's adapter field does not parse as an adapter spec
+    /// (bad mixture grammar or a malformed part weight).
+    MalformedSpec(String),
     QueueFull { depth: usize, capacity: usize },
     EmptyOptions,
     EmptyPrompt,
@@ -166,6 +180,7 @@ impl Reject {
     pub fn kind(&self) -> &'static str {
         match self {
             Reject::UnknownAdapter(_) => "unknown_adapter",
+            Reject::MalformedSpec(_) => "malformed_spec",
             Reject::QueueFull { .. } => "queue_full",
             Reject::EmptyOptions => "empty_options",
             Reject::EmptyPrompt => "empty_prompt",
@@ -188,6 +203,9 @@ impl fmt::Display for Reject {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             Reject::UnknownAdapter(a) => write!(f, "unknown adapter {a:?}"),
+            Reject::MalformedSpec(reason) => {
+                write!(f, "malformed adapter spec: {reason}")
+            }
             Reject::QueueFull { depth, capacity } => {
                 write!(f, "queue full ({depth}/{capacity})")
             }
@@ -256,6 +274,8 @@ pub struct ServeCfg {
     /// (0 = unlimited). With a quota, one hot tenant can hold at most this
     /// much pending-or-executing work — the rest of the bounded queue
     /// stays available to other adapters ([`Reject::QuotaExceeded`]).
+    /// Composite specs are charged per component part: a request for
+    /// `"a+b"` counts against BOTH `a`'s and `b`'s budgets.
     pub adapter_quota: usize,
     /// Partition width of the server's one persistent [`KernelPool`]
     /// (results are bit-identical to serial at any width). The pool is
@@ -313,6 +333,8 @@ pub enum Backend {
 
 struct Queued {
     req: Request,
+    /// The parsed canonical adapter spec (also the batcher queue key).
+    spec: AdapterSpec,
     /// Trace request id minted at admission (0 when tracing is off).
     id: u64,
     enqueued: Instant,
@@ -321,6 +343,8 @@ struct Queued {
 
 struct QueuedCls {
     req: ClsRequest,
+    /// The parsed canonical adapter spec (also the batcher queue key).
+    spec: AdapterSpec,
     /// Trace request id minted at admission (0 when tracing is off).
     id: u64,
     enqueued: Instant,
@@ -337,6 +361,8 @@ enum Work {
 
 struct QueuedGen {
     req: GenerateRequest,
+    /// The parsed canonical adapter spec.
+    spec: AdapterSpec,
     /// Trace request id minted at admission (0 when tracing is off).
     id: u64,
     enqueued: Instant,
@@ -348,10 +374,12 @@ struct State {
     /// FIFO of admitted generations waiting for a decode slot. Counted
     /// against `max_queue` together with the batcher's depth.
     gen_queue: VecDeque<QueuedGen>,
-    /// Generations per adapter that left `gen_queue` but have not finished:
-    /// holding a decode slot or being prefilled into one. Counted by the
-    /// per-adapter admission quota — a tenant occupying every slot must
-    /// not be able to queue `quota` more on top and starve others.
+    /// Generations per adapter *part* that left `gen_queue` but have not
+    /// finished: holding a decode slot or being prefilled into one. Keyed
+    /// by component part — a composite stream increments every part — and
+    /// counted by the per-part admission quota: a tenant occupying every
+    /// slot must not be able to queue `quota` more on top and starve
+    /// others.
     decoding: BTreeMap<String, usize>,
     stopping: bool,
 }
@@ -610,14 +638,15 @@ impl Server {
     pub fn submit(&self, req: Request) -> Result<Ticket, Reject> {
         let sh = &self.shared;
         let mcfg = sh.registry.model_cfg();
-        let res = Self::validate(sh, &req, mcfg).and_then(|()| {
+        let res = Self::validate(sh, &req, mcfg).and_then(|spec| {
             let mut st = sh.state.lock().unwrap();
-            Self::gate(sh, &st, &req.adapter)?;
+            Self::gate(sh, &st, &spec)?;
             let (tx, rx) = mpsc::channel();
-            let adapter = req.adapter.clone();
+            let key = spec.key_arc();
             let now = Instant::now();
             let id = Self::mint_id(sh);
-            st.batcher.push(&adapter, now, Work::Score(Queued { req, id, enqueued: now, tx }));
+            st.batcher
+                .push(&key, now, Work::Score(Queued { req, spec, id, enqueued: now, tx }));
             sh.metrics.observe_queue_depth(st.batcher.depth() + st.gen_queue.len());
             sh.cv.notify_one();
             Ok(Ticket { rx })
@@ -635,14 +664,15 @@ impl Server {
     pub fn submit_cls(&self, req: ClsRequest) -> Result<ClsTicket, Reject> {
         let sh = &self.shared;
         let mcfg = sh.registry.model_cfg();
-        let res = Self::validate_cls(sh, &req, mcfg).and_then(|()| {
+        let res = Self::validate_cls(sh, &req, mcfg).and_then(|spec| {
             let mut st = sh.state.lock().unwrap();
-            Self::gate(sh, &st, &req.adapter)?;
+            Self::gate(sh, &st, &spec)?;
             let (tx, rx) = mpsc::channel();
-            let adapter = req.adapter.clone();
+            let key = spec.key_arc();
             let now = Instant::now();
             let id = Self::mint_id(sh);
-            st.batcher.push(&adapter, now, Work::Cls(QueuedCls { req, id, enqueued: now, tx }));
+            st.batcher
+                .push(&key, now, Work::Cls(QueuedCls { req, spec, id, enqueued: now, tx }));
             sh.metrics.observe_queue_depth(st.batcher.depth() + st.gen_queue.len());
             sh.cv.notify_one();
             Ok(ClsTicket { rx })
@@ -661,12 +691,12 @@ impl Server {
     pub fn submit_generate(&self, req: GenerateRequest) -> Result<GenTicket, Reject> {
         let sh = &self.shared;
         let mcfg = sh.registry.model_cfg();
-        let res = Self::validate_generate(sh, &req, mcfg).and_then(|()| {
+        let res = Self::validate_generate(sh, &req, mcfg).and_then(|spec| {
             let mut st = sh.state.lock().unwrap();
-            Self::gate(sh, &st, &req.adapter)?;
+            Self::gate(sh, &st, &spec)?;
             let (tx, rx) = mpsc::channel();
             let id = Self::mint_id(sh);
-            st.gen_queue.push_back(QueuedGen { req, id, enqueued: Instant::now(), tx });
+            st.gen_queue.push_back(QueuedGen { req, spec, id, enqueued: Instant::now(), tx });
             sh.metrics.observe_queue_depth(st.batcher.depth() + st.gen_queue.len());
             sh.gen_cv.notify_one();
             Ok(GenTicket { rx })
@@ -690,7 +720,7 @@ impl Server {
     /// Shared admission gate, identical for every request class: reject
     /// while stopping, enforce the bounded queue, then the per-adapter
     /// quota. Called under the state lock by each `submit_*`.
-    fn gate(sh: &Shared, st: &State, adapter: &str) -> Result<(), Reject> {
+    fn gate(sh: &Shared, st: &State, spec: &AdapterSpec) -> Result<(), Reject> {
         if st.stopping {
             return Err(Reject::ShuttingDown);
         }
@@ -698,30 +728,52 @@ impl Server {
         if depth >= sh.cfg.max_queue {
             return Err(Reject::QueueFull { depth, capacity: sh.cfg.max_queue });
         }
-        Self::check_quota(sh, st, adapter)
+        Self::check_quota(sh, st, spec)
     }
 
-    /// Per-adapter admission quota over everything pending: batcher depth
+    /// Per-part admission quota over everything pending: batcher depth
     /// (score + cls), queued generations, AND generations in flight on a
     /// decode slot (`State::decoding`). Counting only the queues would let
     /// a hot tenant holding all `max_slots` slots still queue `quota` more
-    /// and starve everyone else. Disabled at `adapter_quota == 0`.
-    fn check_quota(sh: &Shared, st: &State, adapter: &str) -> Result<(), Reject> {
+    /// and starve everyone else. Charged per component part — a mixture
+    /// counts against EVERY component's budget, so composing with a cold
+    /// adapter cannot smuggle extra load past a hot tenant's cap. The
+    /// rejection names the saturated part. Disabled at
+    /// `adapter_quota == 0`.
+    fn check_quota(sh: &Shared, st: &State, spec: &AdapterSpec) -> Result<(), Reject> {
         let quota = sh.cfg.adapter_quota;
         if quota == 0 {
             return Ok(());
         }
-        let pending = st.batcher.adapter_depth(adapter)
-            + st.gen_queue.iter().filter(|g| g.req.adapter == adapter).count()
-            + st.decoding.get(adapter).copied().unwrap_or(0);
-        if pending >= quota {
-            return Err(Reject::QuotaExceeded {
-                adapter: adapter.to_string(),
-                pending,
-                quota,
-            });
+        for part in spec.part_names() {
+            let queued: usize = st
+                .batcher
+                .adapters()
+                .filter(|(key, _)| Self::key_has_part(key, part))
+                .map(|(_, depth)| depth)
+                .sum();
+            let pending = queued
+                + st.gen_queue.iter().filter(|g| g.spec.contains_part(part)).count()
+                + st.decoding.get(part).copied().unwrap_or(0);
+            if pending >= quota {
+                return Err(Reject::QuotaExceeded {
+                    adapter: part.to_string(),
+                    pending,
+                    quota,
+                });
+            }
         }
         Ok(())
+    }
+
+    /// Does a canonical batcher key name `part` as a component? Bare names
+    /// (the common case) are a straight compare; composite keys reparse
+    /// through the spec intern table.
+    fn key_has_part(key: &str, part: &str) -> bool {
+        if key == part {
+            return true;
+        }
+        key.contains('+') && AdapterSpec::parse(key).is_ok_and(|s| s.contains_part(part))
     }
 
     /// Typed wrong-kind rejection: `request` names the submitted class.
@@ -733,11 +785,29 @@ impl Server {
         Ok(())
     }
 
-    fn validate_cls(sh: &Shared, req: &ClsRequest, mcfg: &ModelCfg) -> Result<(), Reject> {
-        Self::check_kind(sh, "cls", ModelKind::Encoder)?;
-        if !sh.registry.contains(&req.adapter) {
-            return Err(Reject::UnknownAdapter(req.adapter.clone()));
+    /// Parse + canonicalize the request's adapter field, then check every
+    /// component part is registered. Unknown parts reject with the part
+    /// name (not the whole spec) so callers see which component is
+    /// missing; composition itself happens at batch execution
+    /// (`AdapterRegistry::resolve_spec_batch`), never on the admission
+    /// path.
+    fn parse_spec(sh: &Shared, adapter: &str) -> Result<AdapterSpec, Reject> {
+        let spec = AdapterSpec::parse(adapter).map_err(Reject::MalformedSpec)?;
+        for part in spec.part_names() {
+            if !sh.registry.contains(part) {
+                return Err(Reject::UnknownAdapter(part.to_string()));
+            }
         }
+        Ok(spec)
+    }
+
+    fn validate_cls(
+        sh: &Shared,
+        req: &ClsRequest,
+        mcfg: &ModelCfg,
+    ) -> Result<AdapterSpec, Reject> {
+        Self::check_kind(sh, "cls", ModelKind::Encoder)?;
+        let spec = Self::parse_spec(sh, &req.adapter)?;
         if req.tokens.is_empty() {
             return Err(Reject::EmptyPrompt);
         }
@@ -751,18 +821,16 @@ impl Server {
                 return Err(Reject::InvalidPromptToken { token: t, vocab: mcfg.vocab });
             }
         }
-        Ok(())
+        Ok(spec)
     }
 
     fn validate_generate(
         sh: &Shared,
         req: &GenerateRequest,
         mcfg: &ModelCfg,
-    ) -> Result<(), Reject> {
+    ) -> Result<AdapterSpec, Reject> {
         Self::check_kind(sh, "generate", ModelKind::Decoder)?;
-        if !sh.registry.contains(&req.adapter) {
-            return Err(Reject::UnknownAdapter(req.adapter.clone()));
-        }
+        let spec = Self::parse_spec(sh, &req.adapter)?;
         if req.prompt.is_empty() {
             return Err(Reject::EmptyPrompt);
         }
@@ -789,14 +857,12 @@ impl Server {
         if let Some(s) = &req.sample {
             s.validate().map_err(Reject::InvalidSampling)?;
         }
-        Ok(())
+        Ok(spec)
     }
 
-    fn validate(sh: &Shared, req: &Request, mcfg: &ModelCfg) -> Result<(), Reject> {
+    fn validate(sh: &Shared, req: &Request, mcfg: &ModelCfg) -> Result<AdapterSpec, Reject> {
         Self::check_kind(sh, "score", ModelKind::Decoder)?;
-        if !sh.registry.contains(&req.adapter) {
-            return Err(Reject::UnknownAdapter(req.adapter.clone()));
-        }
+        let spec = Self::parse_spec(sh, &req.adapter)?;
         if req.options.is_empty() {
             return Err(Reject::EmptyOptions);
         }
@@ -818,7 +884,7 @@ impl Server {
                 return Err(Reject::InvalidPromptToken { token: t, vocab: mcfg.vocab });
             }
         }
-        Ok(())
+        Ok(spec)
     }
 
     /// Submit a whole request stream and wait for every response, in order.
@@ -1014,7 +1080,9 @@ fn worker_loop(sh: &Shared) {
 
 /// One in-flight generation: a decode slot with its block-paged KV view.
 struct GenSlot {
-    adapter: String,
+    /// Canonical adapter spec: labels metrics/trace rows (by key) and
+    /// releases the per-part quota accounting when the slot frees.
+    spec: AdapterSpec,
     /// Trace request id minted at admission (0 when tracing is off).
     id: u64,
     model: ModelRef,
@@ -1119,7 +1187,7 @@ fn swap_out(sh: &Shared, mut slot: GenSlot, swapped: &mut VecDeque<(GenSlot, Spi
     let t0 = Instant::now();
     let sp = slot.state.spill();
     if sh.tracer.enabled() && slot.id != 0 {
-        sh.tracer.span(slot.id, Stage::SwapOut, t0, Instant::now(), &slot.adapter);
+        sh.tracer.span(slot.id, Stage::SwapOut, t0, Instant::now(), slot.spec.key());
     }
     swapped.push_back((slot, sp));
 }
@@ -1149,7 +1217,7 @@ fn restore_slot(
         };
         if fits && slot.state.restore(&sp).is_ok() {
             if sh.tracer.enabled() && slot.id != 0 {
-                sh.tracer.span(slot.id, Stage::SwapIn, t0, Instant::now(), &slot.adapter);
+                sh.tracer.span(slot.id, Stage::SwapIn, t0, Instant::now(), slot.spec.key());
             }
             return Ok(slot);
         }
@@ -1162,7 +1230,7 @@ fn restore_slot(
                 "kv page budget {} cannot hold one stream ({need} pages)",
                 sh.kv_pool.stats().budget_pages
             ))));
-            release_decoding(sh, &slot.adapter);
+            release_decoding(sh, &slot.spec);
             return Err(None);
         }
         return Err(Some((slot, sp)));
@@ -1192,7 +1260,10 @@ fn decode_loop(sh: &Shared) {
                             // it leaves the queue (still under the lock):
                             // the quota must never see a gap between queue
                             // and slot that a hot tenant could slip through
-                            *st.decoding.entry(g.req.adapter.clone()).or_insert(0) += 1;
+                            // (every part of a composite spec is charged)
+                            for part in g.spec.part_names() {
+                                *st.decoding.entry(part.to_string()).or_insert(0) += 1;
+                            }
                             admitted.push(g);
                         }
                         None => break,
@@ -1222,11 +1293,11 @@ fn decode_loop(sh: &Shared) {
         // prefill newly admitted requests into slots (outside the lock; the
         // first token is produced here, so TTFT covers queue wait + prefill)
         for g in admitted {
-            let adapter = g.req.adapter.clone();
+            let spec = g.spec.clone();
             match prefill_slot(sh, &mcfg, g, &mut prefix, &mut slots, &mut swapped) {
                 Some(slot) => slots.push(slot),
                 // finished (or rejected) at prefill: release its quota share
-                None => release_decoding(sh, &adapter),
+                None => release_decoding(sh, &spec),
             }
         }
         if slots.is_empty() {
@@ -1299,7 +1370,7 @@ fn decode_loop(sh: &Shared) {
                 SlotStatus::Active => i += 1,
                 SlotStatus::Finished => {
                     let s = slots.swap_remove(i); // freed mid-flight
-                    release_decoding(sh, &s.adapter);
+                    release_decoding(sh, &s.spec);
                 }
             }
         }
@@ -1311,22 +1382,28 @@ fn decode_loop(sh: &Shared) {
 
 /// Decrement the admission-quota accounting for one generation that left
 /// `State::decoding` (finished, errored, rejected at prefill, abandoned).
-fn release_decoding(sh: &Shared, adapter: &str) {
+/// Every component part of the stream's spec gives back one count.
+fn release_decoding(sh: &Shared, spec: &AdapterSpec) {
     let mut st = sh.state.lock().unwrap();
-    if let Some(n) = st.decoding.get_mut(adapter) {
-        *n -= 1;
-        if *n == 0 {
-            st.decoding.remove(adapter);
+    for part in spec.part_names() {
+        if let Some(n) = st.decoding.get_mut(part) {
+            *n -= 1;
+            if *n == 0 {
+                st.decoding.remove(part);
+            }
         }
     }
 }
 
-/// Prefix-cache key: adapter name + the resolved weight view's identity,
-/// so pages cached for an evicted or re-registered adapter can never match
-/// a lookup against its successor's view.
-fn prefix_key(adapter: &str, model: &ModelRef) -> String {
+/// Prefix-cache key: the canonical spec + the resolved weight view's
+/// identity, so pages cached for an evicted or re-registered adapter can
+/// never match a lookup against its successor's view. Typed
+/// ([`PrefixKey`]) instead of a formatted string — the spec's interned
+/// `Arc<str>` makes building one two pointer copies, not a per-request
+/// allocation on the decode path.
+fn prefix_key(spec: &AdapterSpec, model: &ModelRef) -> PrefixKey {
     let (a, b) = model_key(model);
-    format!("{adapter}:{a:x}:{b:x}")
+    PrefixKey::new(spec.key_arc(), a, b)
 }
 
 /// Resolve the adapter, prefill the prompt through the KV cache, and emit
@@ -1343,23 +1420,25 @@ fn prefill_slot(
     slots: &mut Vec<GenSlot>,
     swapped: &mut VecDeque<(GenSlot, SpilledKv)>,
 ) -> Option<GenSlot> {
-    let QueuedGen { req, id, enqueued, tx } = g;
+    let QueuedGen { req, spec, id, enqueued, tx } = g;
     let t_admit = Instant::now();
     sh.metrics
         .record_stage(StageLat::QueueWait, t_admit.saturating_duration_since(enqueued).as_secs_f64());
     if sh.tracer.enabled() && id != 0 {
-        sh.tracer.span(id, Stage::QueueWait, enqueued, t_admit, &req.adapter);
+        sh.tracer.span(id, Stage::QueueWait, enqueued, t_admit, spec.key());
     }
     // no-promote resolve: an inline O(params) promotion merge on the single
     // decode thread would stall every active stream's inter-token latency
-    let Some(model) = sh.registry.resolve_no_promote(&req.adapter) else {
+    // (a composite spec still composes on first resolve; the registry's
+    // compose LRU makes repeats a lookup)
+    let Some(model) = sh.registry.resolve_spec_no_promote(&spec) else {
         // evicted between admission and slot assignment
         sh.metrics.record_reject("unknown_adapter");
-        let _ = tx.send(Err(Reject::UnknownAdapter(req.adapter.clone())));
+        let _ = tx.send(Err(Reject::UnknownAdapter(spec.key().to_string())));
         return None;
     };
     let path = model.path();
-    let ckey = prefix_key(&req.adapter, &model);
+    let ckey = prefix_key(&spec, &model);
     let mut state = PagedKv::new(&sh.kv_pool, mcfg.seq);
     if let Some((m, pages)) = prefix.lookup(&sh.kv_pool, &ckey, &req.prompt) {
         state
@@ -1399,7 +1478,7 @@ fn prefill_slot(
     prefix.insert(&ckey, &req.prompt, state.pages());
     let prompt_len = req.prompt.len();
     let mut slot = GenSlot {
-        adapter: req.adapter,
+        spec,
         id,
         model,
         path,
@@ -1461,7 +1540,7 @@ fn emit_token(sh: &Shared, slot: &mut GenSlot, token: i32) -> SlotStatus {
             now.saturating_duration_since(slot.admitted).as_secs_f64(),
         );
         if sh.tracer.enabled() && slot.id != 0 {
-            sh.tracer.span(slot.id, Stage::Prefill, slot.admitted, now, &slot.adapter);
+            sh.tracer.span(slot.id, Stage::Prefill, slot.admitted, now, slot.spec.key());
         }
         slot.stream_start = now;
     } else {
@@ -1488,7 +1567,7 @@ fn emit_token(sh: &Shared, slot: &mut GenSlot, token: i32) -> SlotStatus {
     }
     let latency = slot.enqueued.elapsed();
     sh.metrics
-        .record_gen_served(&slot.adapter, slot.path, latency.as_secs_f64(), slot.emitted as u64);
+        .record_gen_served(slot.spec.key(), slot.path, latency.as_secs_f64(), slot.emitted as u64);
     let _ = slot.tx.send(Ok(GenEvent::Done(GenResponse {
         tokens: slot.tokens[slot.prompt_len..].to_vec(),
         path: slot.path,
@@ -1498,8 +1577,8 @@ fn emit_token(sh: &Shared, slot: &mut GenSlot, token: i32) -> SlotStatus {
     })));
     if sh.tracer.enabled() && slot.id != 0 {
         let t_end = Instant::now();
-        sh.tracer.span(slot.id, Stage::DecodeStream, slot.stream_start, t_end, &slot.adapter);
-        sh.tracer.span(slot.id, Stage::Request, slot.enqueued, t_end, &slot.adapter);
+        sh.tracer.span(slot.id, Stage::DecodeStream, slot.stream_start, t_end, slot.spec.key());
+        sh.tracer.span(slot.id, Stage::Request, slot.enqueued, t_end, slot.spec.key());
     }
     SlotStatus::Finished
 }
@@ -1567,7 +1646,9 @@ fn run_batch_cls(sh: &Shared, adapter: &str, items: Vec<QueuedCls>) {
             sh.tracer.span(it.id, Stage::QueueWait, it.enqueued, t_pop, adapter);
         }
     }
-    let Some(model) = sh.registry.resolve_batch(adapter, n as u64) else {
+    // every item in the batch shares the queue key, hence the spec
+    let spec = items[0].spec.clone();
+    let Some(model) = sh.registry.resolve_spec_batch(&spec, n as u64) else {
         // evicted between admission and execution
         for it in items {
             sh.metrics.record_reject("unknown_adapter");
@@ -1641,7 +1722,9 @@ fn run_batch_score(sh: &Shared, adapter: &str, items: Vec<Queued>) {
             sh.tracer.span(it.id, Stage::QueueWait, it.enqueued, t_pop, adapter);
         }
     }
-    let Some(model) = sh.registry.resolve_batch(adapter, n as u64) else {
+    // every item in the batch shares the queue key, hence the spec
+    let spec = items[0].spec.clone();
+    let Some(model) = sh.registry.resolve_spec_batch(&spec, n as u64) else {
         // evicted between admission and execution
         for it in items {
             sh.metrics.record_reject("unknown_adapter");
@@ -1668,7 +1751,7 @@ fn run_batch_score(sh: &Shared, adapter: &str, items: Vec<Queued>) {
     let t_fwd = Instant::now();
     sh.metrics
         .record_stage(StageLat::BatchAssembly, t_fwd.saturating_duration_since(t_pop).as_secs_f64());
-    let logits = batch_logits(sh, mcfg, &model, &eb.tokens, &eb.pad_mask, &eb.last_pos, n);
+    let logits = batch_logits(sh, mcfg, &spec, &model, &eb.tokens, &eb.pad_mask, &eb.last_pos, n);
     let t_done = Instant::now();
     sh.metrics
         .record_stage(StageLat::Forward, t_done.saturating_duration_since(t_fwd).as_secs_f64());
@@ -1708,9 +1791,17 @@ fn run_batch_score(sh: &Shared, adapter: &str, items: Vec<Queued>) {
 }
 
 /// Logits [n, vocab] for a batch through the configured backend.
+/// Composite *bypass* views always take the host forward on the HLO
+/// backend: the scatter-input `eval_bypass` artifact is compiled for one
+/// per-adapter `k`, while a k-way union's row sparsity varies per
+/// mixture — logged once, like the quantized-backbone downgrade.
+/// (Composite *merged* views are ordinary merged stores and serve on HLO
+/// like any adapter.)
+#[allow(clippy::too_many_arguments)]
 fn batch_logits(
     sh: &Shared,
     mcfg: &ModelCfg,
+    spec: &AdapterSpec,
     model: &ModelRef,
     tokens: &[i32],
     pad_mask: &[f32],
@@ -1720,8 +1811,29 @@ fn batch_logits(
     match &sh.backend {
         Backend::Host => host_logits_pooled(mcfg, model, tokens, pad_mask, last_pos, n, &sh.pool),
         Backend::Hlo { eval, bypass } => {
+            if !spec.is_single() && matches!(model, ModelRef::Bypass { .. }) {
+                warn_composite_bypass(spec);
+                return host_logits_pooled(mcfg, model, tokens, pad_mask, last_pos, n, &sh.pool);
+            }
             hlo_logits(mcfg, model, eval, bypass.as_ref(), tokens, pad_mask, last_pos, n)
         }
+    }
+}
+
+/// One-shot warning for the composite-bypass HLO fallback (see
+/// [`batch_logits`]); a k-tolerant `eval_bypass` artifact is a tracked
+/// follow-up in the roadmap.
+fn warn_composite_bypass(spec: &AdapterSpec) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    if !WARNED.swap(true, Ordering::Relaxed) {
+        crate::obs::log::warn(
+            "serve",
+            format_args!(
+                "composite {spec} serves its bypass view through the host forward \
+                 (eval_bypass is compiled per-k); merged promotion restores HLO"
+            ),
+        );
     }
 }
 
@@ -2304,6 +2416,89 @@ mod tests {
         assert_eq!(r2.tokens, vec![first], "stop token included, then finished");
         assert_eq!(r2.finish, FinishReason::Stop);
         srv.shutdown();
+    }
+
+    /// Tentpole: composite specs flow the whole serving path — admission,
+    /// batcher coalescing on the canonical key, compose-on-resolve, the
+    /// decode thread's per-part accounting, and metrics rows keyed by the
+    /// canonical spec — with finite logits and no panics.
+    #[test]
+    fn composite_requests_flow_end_to_end() {
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        });
+        // spelled non-canonically: parts reorder to the canonical key
+        let r = srv.submit(req("task-b:0.3+task-a:0.7", 0)).unwrap().wait().unwrap();
+        assert_eq!(r.option_logits.len(), 2);
+        assert!(r.option_logits.iter().all(|l| l.is_finite()));
+        let g = srv.submit_generate(gen_req("task-a+task-b")).unwrap().wait().unwrap();
+        assert_eq!(g.tokens.len(), 5);
+        assert_eq!(srv.registry().composed_count(), 2);
+        // the decode thread's per-part in-flight accounting drains back
+        let t0 = Instant::now();
+        while !srv.shared.state.lock().unwrap().decoding.is_empty() {
+            assert!(t0.elapsed() < Duration::from_secs(5), "per-part accounting leaked");
+            thread::sleep(Duration::from_millis(1));
+        }
+        let m = srv.shutdown();
+        assert!(m.adapters.contains_key("task-a:0.7+task-b:0.3"), "metrics keyed canonically");
+        assert!(m.adapters.contains_key("task-a:0.5+task-b:0.5"));
+        assert_eq!(m.total_rejected(), 0);
+    }
+
+    #[test]
+    fn composite_admission_rejections_are_typed() {
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        });
+        let r = srv.submit(req("task-a:", 0)).map(|_| ());
+        assert!(matches!(r, Err(Reject::MalformedSpec(_))), "got {r:?}");
+        // an unknown part rejects with the PART name, not the whole spec
+        let r = srv.submit(req("task-a+nope", 0)).map(|_| ());
+        assert_eq!(r, Err(Reject::UnknownAdapter("nope".into())));
+        let m = srv.shutdown();
+        assert_eq!(m.rejected.get("malformed_spec"), Some(&1));
+        assert_eq!(m.rejected.get("unknown_adapter"), Some(&1));
+    }
+
+    /// Satellite: a composite request is charged against EVERY component
+    /// part's quota — mixing a hot adapter with a cold one cannot smuggle
+    /// extra load past the hot tenant's cap.
+    #[test]
+    fn composite_quota_charges_every_part() {
+        let srv = nano_server(RegistryCfg::default(), ServeCfg {
+            max_batch: 64,
+            max_queue: 16,
+            max_delay: Duration::from_secs(30),
+            workers: 1,
+            adapter_quota: 2,
+            ..ServeCfg::default()
+        });
+        let t1 = srv.submit(req("task-a+task-b", 1)).unwrap();
+        let t2 = srv.submit(req("task-a", 2)).unwrap();
+        // task-a is at its cap (1 composite + 1 single): any spec naming
+        // it rejects, and the rejection names the saturated PART
+        match srv.submit(req("task-b:0.9+task-a:0.1", 3)) {
+            Err(Reject::QuotaExceeded { adapter, pending: 2, quota: 2 }) => {
+                assert_eq!(adapter, "task-a");
+            }
+            other => panic!("expected QuotaExceeded, got {:?}", other.map(|_| ())),
+        }
+        // task-b (1 composite share) still has room for one more
+        let t3 = srv.submit(req("task-b", 4)).unwrap();
+        assert!(matches!(srv.submit(req("task-b", 5)), Err(Reject::QuotaExceeded { .. })));
+        // in-flight decode slots count per part too
+        srv.shared.state.lock().unwrap().decoding.insert("task-b".into(), 1);
+        assert!(matches!(
+            srv.submit_generate(gen_req("task-b")),
+            Err(Reject::QuotaExceeded { pending: 3, .. })
+        ));
+        srv.shared.state.lock().unwrap().decoding.clear();
+        let m = srv.shutdown();
+        assert!(t1.wait().is_ok() && t2.wait().is_ok() && t3.wait().is_ok());
+        assert_eq!(m.rejected.get("quota_exceeded"), Some(&3));
     }
 
     #[test]

@@ -1,0 +1,374 @@
+//! Typed adapter identity for the serving stack.
+//!
+//! Every layer of `serve/` used to thread a bare `&str` adapter name.
+//! Composition (AdaMix-style mixtures of sparse NeuroAda deltas) needs a
+//! richer identity: a request may name a *mixture* like `"a:0.7+b:0.3"`.
+//! [`AdapterSpec`] is that identity — parsed once at admission,
+//! canonicalized (parts sorted by name, duplicates merged, weights
+//! normalized to an explicit form) and interned so the canonical key is a
+//! cheap-to-clone `Arc<str>` that batcher/quota/metrics/prefix-cache can
+//! use without re-allocating per request.
+//!
+//! Grammar (`parse`):
+//!
+//! ```text
+//! spec  := part ("+" part)*
+//! part  := name | name ":" weight
+//! ```
+//!
+//! Either *every* part carries an explicit weight or *none* does; the
+//! unweighted form means an equal `1/k` blend (`"a+b"` ≡ `"a:0.5+b:0.5"`).
+//! Weights must be finite and positive and are used as written — they are
+//! *not* renormalized, so `"a:1+b:1"` sums both deltas at full strength
+//! while `"a+b"` averages them. Duplicate names merge by summing weights
+//! (`"a:0.3+a:0.2"` ≡ `"a:0.5"`), and a single part with weight exactly
+//! `1.0` canonicalizes to the bare name, so plain single-adapter requests
+//! keep their historical keys (metrics rows, prefix-cache tags) unchanged.
+//!
+//! Adapter *names* may not contain the reserved spec characters `+`, `:`
+//! or `@` (`@` is reserved for lifecycle `name@vN` version labels) —
+//! [`validate_name`] enforces this here and in
+//! [`AdapterRegistry::register`](super::AdapterRegistry::register).
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Characters that cannot appear in adapter names: `+` and `:` build
+/// composite specs, `@` labels lifecycle versions (`name@vN`).
+pub const RESERVED_NAME_CHARS: [char; 3] = ['+', ':', '@'];
+
+/// Typed registration error: an adapter name carries a reserved spec
+/// character. Returned (via `anyhow`) by
+/// [`AdapterRegistry::register`](super::AdapterRegistry::register) /
+/// `register_dir` so callers can downcast and tell a grammar collision
+/// from a shape error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReservedNameChar {
+    pub name: String,
+    pub ch: char,
+}
+
+impl fmt::Display for ReservedNameChar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "adapter name {:?} contains reserved character {:?} \
+             (reserved for composite specs and version labels: '+', ':', '@')",
+            self.name, self.ch
+        )
+    }
+}
+
+impl std::error::Error for ReservedNameChar {}
+
+/// The first reserved spec character in `name`, if any.
+pub fn reserved_char(name: &str) -> Option<char> {
+    name.chars().find(|c| RESERVED_NAME_CHARS.contains(c))
+}
+
+/// Validate a bare adapter name against the spec grammar: non-empty and
+/// free of [`RESERVED_NAME_CHARS`]. Shared by [`AdapterSpec::parse`] and
+/// adapter registration so a registered name can never collide with a
+/// composite spec or a version label.
+pub fn validate_name(name: &str) -> Result<(), String> {
+    if name.is_empty() {
+        return Err("adapter name is empty".into());
+    }
+    if let Some(ch) = reserved_char(name) {
+        return Err(ReservedNameChar { name: name.to_string(), ch }.to_string());
+    }
+    Ok(())
+}
+
+#[derive(Debug)]
+struct SpecInner {
+    /// Canonical key: parts sorted by name, `name:w` joined with `+`, or
+    /// the bare name for a single part with weight exactly 1.0.
+    key: Arc<str>,
+    /// Canonical parts: sorted by name, duplicates merged, weights
+    /// explicit (never empty).
+    parts: Vec<(String, f32)>,
+}
+
+/// A parsed, canonicalized adapter identity: one adapter or a weighted
+/// mixture. Cheap to clone (one `Arc`); equality, ordering and hashing go
+/// through the canonical key, so two spellings of the same mixture
+/// (`"b+a"`, `"a:0.5+b:0.5"`) compare equal and coalesce into one batch.
+#[derive(Debug, Clone)]
+pub struct AdapterSpec {
+    inner: Arc<SpecInner>,
+}
+
+impl PartialEq for AdapterSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.inner.key == other.inner.key
+    }
+}
+impl Eq for AdapterSpec {}
+
+impl PartialOrd for AdapterSpec {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for AdapterSpec {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.inner.key.cmp(&other.inner.key)
+    }
+}
+
+impl std::hash::Hash for AdapterSpec {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.inner.key.hash(state);
+    }
+}
+
+impl fmt::Display for AdapterSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.inner.key)
+    }
+}
+
+/// Bounded global intern table: canonical key → shared spec. Parsing the
+/// same spec string twice (every request of a steady workload) returns
+/// the same `Arc` without rebuilding parts. Bounded so adversarial
+/// one-shot specs cannot grow it without limit — over the cap, specs are
+/// still returned, just not cached.
+const INTERN_CAP: usize = 4096;
+
+fn intern_table() -> &'static Mutex<HashMap<Arc<str>, AdapterSpec>> {
+    static TABLE: OnceLock<Mutex<HashMap<Arc<str>, AdapterSpec>>> = OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+impl AdapterSpec {
+    /// Parse a spec string (`"a"`, `"a+b"`, `"a:0.7+b:0.3"`), canonicalize
+    /// and intern it. Errors (malformed weight, mixed weighted/unweighted
+    /// parts, reserved characters in a name, non-positive or non-finite
+    /// weight) are returned as a human-readable message; the scheduler
+    /// wraps them in a typed rejection at admission.
+    pub fn parse(s: &str) -> Result<AdapterSpec, String> {
+        let raw: Vec<&str> = s.split('+').collect();
+        if raw.iter().any(|p| p.is_empty()) {
+            return Err(format!("adapter spec {s:?}: empty part"));
+        }
+        let mut weighted = 0usize;
+        let mut parts: Vec<(String, Option<f32>)> = Vec::with_capacity(raw.len());
+        for p in &raw {
+            match p.split_once(':') {
+                None => {
+                    validate_name(p)?;
+                    parts.push((p.to_string(), None));
+                }
+                Some((name, w)) => {
+                    validate_name(name)?;
+                    let w: f32 = w
+                        .parse()
+                        .map_err(|_| format!("adapter spec {s:?}: bad weight {w:?}"))?;
+                    if !w.is_finite() || w <= 0.0 {
+                        return Err(format!(
+                            "adapter spec {s:?}: weight {w} must be finite and > 0"
+                        ));
+                    }
+                    weighted += 1;
+                    parts.push((name.to_string(), Some(w)));
+                }
+            }
+        }
+        if weighted != 0 && weighted != parts.len() {
+            return Err(format!(
+                "adapter spec {s:?}: either every part carries a weight or none does"
+            ));
+        }
+        // unweighted form = equal 1/k blend
+        let k = parts.len() as f32;
+        let mut merged: BTreeMap<String, f32> = BTreeMap::new();
+        for (name, w) in parts {
+            *merged.entry(name).or_insert(0.0) += w.unwrap_or(1.0 / k);
+        }
+        let parts: Vec<(String, f32)> = merged.into_iter().collect();
+        Ok(Self::intern(parts))
+    }
+
+    /// A single-adapter spec from an already-validated registered name.
+    /// (Names are checked against the reserved characters at registration,
+    /// so this cannot produce an ambiguous key.)
+    pub fn single(name: &str) -> AdapterSpec {
+        Self::intern(vec![(name.to_string(), 1.0)])
+    }
+
+    fn intern(parts: Vec<(String, f32)>) -> AdapterSpec {
+        let key: Arc<str> = Self::canonical_key(&parts).into();
+        let mut table = intern_table().lock().unwrap();
+        if let Some(spec) = table.get(&key) {
+            return spec.clone();
+        }
+        let spec = AdapterSpec { inner: Arc::new(SpecInner { key: key.clone(), parts }) };
+        if table.len() < INTERN_CAP {
+            table.insert(key, spec.clone());
+        }
+        spec
+    }
+
+    /// The canonical key string: `name:w+name:w` sorted by name, or the
+    /// bare name for a single weight-1.0 part (so single-adapter keys stay
+    /// byte-identical to the pre-composition era).
+    fn canonical_key(parts: &[(String, f32)]) -> String {
+        match parts {
+            [(name, w)] if *w == 1.0 => name.clone(),
+            _ => {
+                let mut out = String::new();
+                for (i, (name, w)) in parts.iter().enumerate() {
+                    if i > 0 {
+                        out.push('+');
+                    }
+                    out.push_str(name);
+                    out.push(':');
+                    // f32 Display prints the shortest round-trip form, so
+                    // the key is stable across re-parses of itself
+                    out.push_str(&format!("{w}"));
+                }
+                out
+            }
+        }
+    }
+
+    /// The canonical key. Equal specs share one `Arc`'d key string.
+    pub fn key(&self) -> &str {
+        &self.inner.key
+    }
+
+    /// The canonical key as a cheap-to-clone `Arc<str>`.
+    pub fn key_arc(&self) -> Arc<str> {
+        self.inner.key.clone()
+    }
+
+    /// Canonical `(name, weight)` parts: sorted by name, duplicates
+    /// merged, weights explicit. Never empty.
+    pub fn parts(&self) -> &[(String, f32)] {
+        &self.inner.parts
+    }
+
+    /// True for a plain single-adapter identity with weight 1.0.
+    pub fn is_single(&self) -> bool {
+        matches!(self.inner.parts.as_slice(), [(_, w)] if *w == 1.0)
+    }
+
+    /// The bare adapter name when [`is_single`](Self::is_single).
+    pub fn single_name(&self) -> Option<&str> {
+        match self.inner.parts.as_slice() {
+            [(name, w)] if *w == 1.0 => Some(name),
+            _ => None,
+        }
+    }
+
+    /// Component names, in canonical (sorted) order.
+    pub fn part_names(&self) -> impl Iterator<Item = &str> {
+        self.inner.parts.iter().map(|(n, _)| n.as_str())
+    }
+
+    /// True when `name` is one of the components.
+    pub fn contains_part(&self, name: &str) -> bool {
+        self.inner.parts.iter().any(|(n, _)| n == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_spec_keys_as_bare_name() {
+        let s = AdapterSpec::parse("task-a").unwrap();
+        assert_eq!(s.key(), "task-a");
+        assert!(s.is_single());
+        assert_eq!(s.single_name(), Some("task-a"));
+        assert_eq!(s.parts(), &[("task-a".to_string(), 1.0)]);
+        // explicit weight-1 spelling canonicalizes to the same key
+        let e = AdapterSpec::parse("task-a:1.0").unwrap();
+        assert_eq!(e, s);
+        assert_eq!(e.key(), "task-a");
+    }
+
+    #[test]
+    fn unweighted_composite_splits_equally() {
+        let s = AdapterSpec::parse("b+a").unwrap();
+        assert!(!s.is_single());
+        assert_eq!(s.single_name(), None);
+        assert_eq!(s.parts(), &[("a".to_string(), 0.5), ("b".to_string(), 0.5)]);
+        assert_eq!(s.key(), "a:0.5+b:0.5");
+        // order-independent: the weighted spelling is the same spec
+        let w = AdapterSpec::parse("a:0.5+b:0.5").unwrap();
+        assert_eq!(w, s);
+        assert_eq!(w.key(), s.key());
+    }
+
+    #[test]
+    fn canonical_key_sorts_parts_and_round_trips() {
+        let s = AdapterSpec::parse("z:0.25+a:0.75").unwrap();
+        assert_eq!(s.key(), "a:0.75+z:0.25");
+        let again = AdapterSpec::parse(s.key()).unwrap();
+        assert_eq!(again, s);
+        assert_eq!(again.key(), s.key());
+    }
+
+    #[test]
+    fn duplicate_parts_merge_by_weight_sum() {
+        let s = AdapterSpec::parse("a:0.3+a:0.2+b:0.5").unwrap();
+        assert_eq!(s.parts(), &[("a".to_string(), 0.5), ("b".to_string(), 0.5)]);
+        // unweighted duplicates collapse to a plain single adapter
+        let d = AdapterSpec::parse("a+a").unwrap();
+        assert!(d.is_single());
+        assert_eq!(d.key(), "a");
+    }
+
+    #[test]
+    fn interned_specs_share_one_arc() {
+        let a = AdapterSpec::parse("p:0.5+q:0.5").unwrap();
+        let b = AdapterSpec::parse("q+p").unwrap();
+        assert!(Arc::ptr_eq(&a.inner, &b.inner));
+        assert!(Arc::ptr_eq(&a.key_arc(), &b.key_arc()));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "+",
+            "a+",
+            "+a",
+            "a:0.5+b",    // mixed weighted/unweighted
+            "a:zero",     // not a number
+            "a:0",        // weight must be > 0
+            "a:-1",       // negative
+            "a:inf",      // non-finite
+            "a:NaN",      // non-finite
+            "a:1:2",      // weight with a second colon
+            "a@v3",       // reserved char in name
+            "a@v3:0.5+b:0.5",
+        ] {
+            assert!(AdapterSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn validate_name_rejects_each_reserved_char() {
+        for c in RESERVED_NAME_CHARS {
+            let name = format!("bad{c}name");
+            assert!(validate_name(&name).is_err(), "accepted {name:?}");
+        }
+        assert!(validate_name("").is_err());
+        assert!(validate_name("fine-name_2").is_ok());
+    }
+
+    #[test]
+    fn contains_part_and_part_names() {
+        let s = AdapterSpec::parse("a:0.25+b:0.75").unwrap();
+        assert!(s.contains_part("a") && s.contains_part("b"));
+        assert!(!s.contains_part("c"));
+        let names: Vec<&str> = s.part_names().collect();
+        assert_eq!(names, ["a", "b"]);
+    }
+}

@@ -1,0 +1,213 @@
+//! E2E parity oracle for adapter composition (the ISSUE-10 tentpole).
+//!
+//! Serving a weighted mixture spec online (`"task-a:0.5+task-b:0.5"`) must
+//! be **bitwise** equal to serving the same mixture composed offline
+//! (`neuroada compose`) and registered as an ordinary adapter — on the Host
+//! backend, on BOTH the merged and the bypass weight view, across scoring,
+//! KV-cached greedy decode, and encoder classification. Both paths run
+//! `peft::compose_deltas` with the parts in canonical spec order and round
+//! to BF16 exactly once, which is what makes the equality exact rather than
+//! to-tolerance.
+
+use neuroada::bench::serve_bench::{randomize_zero_head, synth_adapter};
+use neuroada::config::presets;
+use neuroada::data::{example_stream, tasks, Split};
+use neuroada::model::init::init_params;
+use neuroada::model::{greedy_full_reforward, merge_deltas, RefModel};
+use neuroada::peft::{compose_deltas, DeltaStore};
+use neuroada::serve::{
+    AdapterRegistry, AdapterSpec, Backend, ClsRequest, GenerateRequest, RegistryCfg, Request,
+    ServeCfg, ServePath, Server,
+};
+use neuroada::util::rng::Rng;
+
+type Deltas = Vec<(String, DeltaStore)>;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The two registered parts and their offline composition — exactly what
+/// `neuroada compose --spec "task-a:0.5+task-b:0.5" --out-name blend`
+/// writes: `compose_deltas` over the parts in canonical (name-sorted)
+/// spec order.
+fn mixture_parts(
+    cfg: &neuroada::config::ModelCfg,
+    backbone: &neuroada::runtime::ValueStore,
+) -> (AdapterSpec, Deltas, Deltas, Deltas) {
+    let spec = AdapterSpec::parse("task-a:0.5+task-b:0.5").unwrap();
+    // canonical form is name-sorted with normalized weights; the uniform
+    // spelling and a swapped spelling intern to the SAME identity
+    assert_eq!(spec.key(), "task-a:0.5+task-b:0.5");
+    assert_eq!(AdapterSpec::parse("task-a+task-b").unwrap().key(), spec.key());
+    assert_eq!(AdapterSpec::parse("task-b:0.5+task-a:0.5").unwrap().key(), spec.key());
+    let da = synth_adapter(cfg, backbone, 1, 151).unwrap();
+    let db = synth_adapter(cfg, backbone, 2, 252).unwrap();
+    let composed = compose_deltas(&[(0.5, da.as_slice()), (0.5, db.as_slice())]).unwrap();
+    (spec, da, db, composed)
+}
+
+fn path_cfgs() -> [(RegistryCfg, ServePath); 2] {
+    [
+        (
+            RegistryCfg { merged_capacity: 2, promote_after: 1, ..RegistryCfg::default() },
+            ServePath::Merged,
+        ),
+        (
+            RegistryCfg { merged_capacity: 0, promote_after: 1, ..RegistryCfg::default() },
+            ServePath::Bypass,
+        ),
+    ]
+}
+
+/// Compose (if composite) and force-promote both identities so the test
+/// pins the merged path — scoring traffic racing an in-flight merge would
+/// (correctly) ride the bypass.
+fn pin_merged(srv: &Server, spec: &AdapterSpec) {
+    srv.registry().resolve_spec(spec).expect("mixture composes");
+    srv.registry().merge_now(spec.key()).unwrap();
+    srv.registry().merge_now("blend").unwrap();
+}
+
+/// Acceptance: scoring and KV-cached greedy decode under the online
+/// mixture spec are bitwise equal to the offline-composed adapter, on the
+/// merged and the bypass path.
+#[test]
+fn online_mixture_bitwise_equals_composed_adapter_score_and_generate() {
+    let cfg = presets::model("nano").unwrap();
+    let backbone = init_params(&cfg, &mut Rng::new(42));
+    let (spec, da, db, composed) = mixture_parts(&cfg, &backbone);
+
+    // ground truth for the decode tokens: full re-forward greedy
+    // continuation on the composed mixture merged into the backbone
+    let prompt: Vec<i32> = (0..6).map(|i| 4 + (i * 5) % 30).collect();
+    let max_new = 8;
+    let reference = {
+        let mut merged = backbone.clone();
+        merge_deltas(&mut merged, &composed).unwrap();
+        greedy_full_reforward(&RefModel::new(&cfg, &merged), &prompt, max_new).unwrap()
+    };
+
+    let task = tasks::by_name("cs-boolq").unwrap();
+    let examples = example_stream(&task, Split::Test, 7, cfg.vocab, cfg.seq - 2, 3);
+
+    for (rcfg, want_path) in path_cfgs() {
+        let reg = AdapterRegistry::new(cfg.clone(), backbone.clone(), rcfg);
+        reg.register("task-a", da.clone()).unwrap();
+        reg.register("task-b", db.clone()).unwrap();
+        reg.register("blend", composed.clone()).unwrap();
+        let srv =
+            Server::start(reg, ServeCfg { workers: 1, ..ServeCfg::default() }, Backend::Host)
+                .unwrap();
+        if want_path == ServePath::Merged {
+            pin_merged(&srv, &spec);
+        }
+        // scoring: the same prompt+options under the mixture spec (both
+        // spellings) and under the composed adapter, one request per batch
+        // so batch assembly is identical
+        for (i, ex) in examples.iter().enumerate() {
+            let score = |adapter: &str| {
+                let r = srv
+                    .submit(Request {
+                        adapter: adapter.to_string(),
+                        prompt: ex.prompt.clone(),
+                        options: ex.options.clone(),
+                    })
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+                assert_eq!(r.path, want_path, "{adapter:?}");
+                assert!(r.option_logits.iter().all(|x| x.is_finite()), "{adapter:?}: NaN/inf");
+                r
+            };
+            let online = score(spec.key());
+            let offline = score("blend");
+            assert_eq!(
+                bits(&online.option_logits),
+                bits(&offline.option_logits),
+                "{want_path:?} example {i}: online mixture vs composed adapter must be bitwise"
+            );
+            assert_eq!(online.pick, offline.pick);
+            if i == 0 {
+                // a swapped spelling canonicalizes to the same identity
+                let swapped = score("task-b:0.5+task-a:0.5");
+                assert_eq!(bits(&swapped.option_logits), bits(&offline.option_logits));
+            }
+        }
+        // KV-cached greedy decode, token for token
+        let gen = |adapter: &str| {
+            let r = srv
+                .submit_generate(GenerateRequest {
+                    adapter: adapter.to_string(),
+                    prompt: prompt.clone(),
+                    max_new_tokens: max_new,
+                    stop: vec![],
+                    sample: None,
+                })
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert_eq!(r.path, want_path, "{adapter:?}");
+            r.tokens
+        };
+        let online = gen(spec.key());
+        let offline = gen("blend");
+        assert_eq!(online, offline, "{want_path:?}: decode tokens");
+        if want_path == ServePath::Merged {
+            // the server's merged copy is built by the same merge the
+            // reference used, so this leg is exact too
+            assert_eq!(online, reference, "merged decode vs full re-forward reference");
+        }
+        let m = srv.shutdown();
+        assert_eq!(m.rejected.values().sum::<u64>(), 0, "no composite request rejected");
+    }
+}
+
+/// Acceptance: encoder classification under the online mixture spec is
+/// bitwise equal (class logits) to the offline-composed adapter, merged
+/// and bypass.
+#[test]
+fn online_mixture_bitwise_equals_composed_adapter_cls() {
+    let cfg = presets::model("enc-micro").unwrap();
+    let mut backbone = init_params(&cfg, &mut Rng::new(42));
+    // init_params zeroes the classifier head; randomize it (seeded) so
+    // parity is not vacuously 0 == 0
+    randomize_zero_head(&cfg, &mut backbone, 42 ^ 0xC15).unwrap();
+    let (spec, da, db, composed) = mixture_parts(&cfg, &backbone);
+    let task = tasks::by_name("glue-sst2").unwrap();
+    let examples = example_stream(&task, Split::Test, 9, cfg.vocab, cfg.seq, 8);
+
+    for (rcfg, want_path) in path_cfgs() {
+        let reg = AdapterRegistry::new(cfg.clone(), backbone.clone(), rcfg);
+        reg.register("task-a", da.clone()).unwrap();
+        reg.register("task-b", db.clone()).unwrap();
+        reg.register("blend", composed.clone()).unwrap();
+        let srv =
+            Server::start(reg, ServeCfg { workers: 1, ..ServeCfg::default() }, Backend::Host)
+                .unwrap();
+        if want_path == ServePath::Merged {
+            pin_merged(&srv, &spec);
+        }
+        for (i, ex) in examples.iter().enumerate() {
+            let cls = |adapter: &str| {
+                let r = srv
+                    .submit_cls(ClsRequest::from_example(adapter, ex))
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+                assert_eq!(r.path, want_path, "{adapter:?}");
+                assert!(r.class_logits.iter().all(|x| x.is_finite()), "{adapter:?}: NaN/inf");
+                r
+            };
+            let online = cls(spec.key());
+            let offline = cls("blend");
+            assert_eq!(
+                bits(&online.class_logits),
+                bits(&offline.class_logits),
+                "{want_path:?} example {i}: online mixture vs composed adapter must be bitwise"
+            );
+            assert_eq!(online.class, offline.class);
+        }
+        srv.shutdown();
+    }
+}

@@ -210,3 +210,126 @@ fn prop_bf16_bounded_error() {
     })
     .unwrap();
 }
+
+/// Seeded random delta with a top-k selection over a fresh weight matrix.
+fn rand_delta(rng: &mut Rng, d_out: usize, d_in: usize, k: usize) -> DeltaStore {
+    let w = Tensor::randn(&[d_out, d_in], 1.0, rng);
+    let sel = select_topk(&w, k);
+    let vals: Vec<f32> = (0..d_out * k).map(|_| rng.normal() * 0.1).collect();
+    DeltaStore::from_f32(sel, &vals)
+}
+
+/// Composition invariant (ISSUE-10): `weighted_union` is a function of the
+/// part *multiset* — any permutation of the parts yields a bitwise-identical
+/// store (checked via the exact checkpoint serialization). This is what lets
+/// the serving stack canonicalize `"b+a"` and `"a+b"` to one identity.
+#[test]
+fn prop_weighted_union_is_order_independent_bitwise() {
+    prop_check(cfgd(), |rng, size| {
+        let d_out = 1 + rng.below(size.max(1));
+        let d_in = 2 + rng.below(size.max(1) + 2);
+        let n = 2 + rng.below(3);
+        let parts: Vec<(f32, DeltaStore)> = (0..n)
+            .map(|_| {
+                let k = 1 + rng.below(d_in.min(4));
+                let w = 0.05 + rng.below(20) as f32 * 0.1;
+                (w, rand_delta(rng, d_out, d_in, k))
+            })
+            .collect();
+        let fwd: Vec<(f32, &DeltaStore)> = parts.iter().map(|(w, d)| (*w, d)).collect();
+        let base = DeltaStore::weighted_union(&fwd)?.to_bytes();
+        let mut rev = fwd.clone();
+        rev.reverse();
+        let mut rot = fwd.clone();
+        rot.rotate_left(1);
+        for (tag, perm) in [("reversed", rev), ("rotated", rot)] {
+            if DeltaStore::weighted_union(&perm)?.to_bytes() != base {
+                return Err(format!("{tag} permutation changed the union bitwise"));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Composition invariant: a single part with weight exactly 1.0 is the
+/// *bitwise* identity — same index order (not re-sorted), same bf16
+/// payload, same serialization. Singles must survive composition untouched.
+#[test]
+fn prop_weighted_union_weight_one_single_part_is_identity() {
+    prop_check(cfgd(), |rng, size| {
+        let d_out = 1 + rng.below(size.max(1));
+        let d_in = 2 + rng.below(size.max(1) + 2);
+        let k = 1 + rng.below(d_in.min(4));
+        let d = rand_delta(rng, d_out, d_in, k);
+        let u = DeltaStore::weighted_union(&[(1.0, &d)])?;
+        if u.to_bytes() != d.to_bytes() {
+            return Err("weight-1.0 single part is not a bitwise identity".into());
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Composition invariant: overlapping indices sum *exactly* — two parts
+/// sharing one selection (every index overlaps) produce, per slot, the f32
+/// sum `wa·θa + wb·θb` rounded to BF16 exactly once.
+#[test]
+fn prop_weighted_union_overlapping_indices_sum_exactly() {
+    use neuroada::tensor::bf16;
+    prop_check(cfgd(), |rng, size| {
+        let d_out = 1 + rng.below(size.max(1));
+        let d_in = 2 + rng.below(size.max(1) + 2);
+        let k = 1 + rng.below(d_in.min(4));
+        let w = Tensor::randn(&[d_out, d_in], 1.0, rng);
+        let sel = select_topk(&w, k);
+        let vals = |rng: &mut Rng| -> Vec<f32> {
+            (0..d_out * k).map(|_| rng.normal() * 0.1).collect()
+        };
+        let a = DeltaStore::from_f32(sel.clone(), &vals(rng));
+        let b = DeltaStore::from_f32(sel, &vals(rng));
+        let (wa, wb) = (0.6f32, 0.4f32);
+        let u = DeltaStore::weighted_union(&[(wa, &a), (wb, &b)])?;
+        let (da, db, du) = (a.to_dense(), b.to_dense(), u.to_dense());
+        for t in 0..da.data.len() {
+            let want = bf16::to_f32(bf16::to_bf16(wa * da.data[t] + wb * db.data[t]));
+            if du.data[t].to_bits() != want.to_bits() {
+                return Err(format!("slot {t}: {} != {want} (exact)", du.data[t]));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Composition invariant: a composed store's resident bytes match the
+/// analytic `peft::memory` accounting the registry reports, and its union
+/// width respects the `Σ kᵢ (capped at d_in)` bound.
+#[test]
+fn prop_composed_resident_bytes_match_memory_accounting() {
+    use neuroada::peft::memory::{composed_k_bound, delta_resident_bytes};
+    prop_check(cfgd(), |rng, size| {
+        let d_out = 1 + rng.below(size.max(1));
+        let d_in = 2 + rng.below(size.max(1) + 2);
+        let n = 1 + rng.below(4);
+        let parts: Vec<(f32, DeltaStore)> = (0..n)
+            .map(|_| {
+                let k = 1 + rng.below(d_in.min(4));
+                (0.05 + rng.below(20) as f32 * 0.1, rand_delta(rng, d_out, d_in, k))
+            })
+            .collect();
+        let refs: Vec<(f32, &DeltaStore)> = parts.iter().map(|(w, d)| (*w, d)).collect();
+        let u = DeltaStore::weighted_union(&refs)?;
+        let analytic = delta_resident_bytes(u.d_out() as u64, u.sel.d_in as u64, u.k() as u64);
+        if analytic != u.storage_bytes() {
+            return Err(format!("analytic {analytic} != measured {}", u.storage_bytes()));
+        }
+        let ks: Vec<u64> = parts.iter().map(|(_, d)| d.k() as u64).collect();
+        let bound = composed_k_bound(&ks, d_in as u64);
+        if (u.k() as u64) > bound {
+            return Err(format!("union k {} exceeds bound {bound}", u.k()));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
